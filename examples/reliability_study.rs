@@ -1,0 +1,73 @@
+//! Reliability study: how long-running jobs survive under a realistic
+//! per-process failure model (exponential lifetimes, Reed et al. [18]),
+//! comparing all four algorithms plus the checkpointing comparator.
+//!
+//! Two engines, cross-checked:
+//!  * the *analytic* simulator (millions of patterns/s) sweeps failure
+//!    rates and prints survival curves;
+//!  * the *full* simulator replays a sample of the same patterns to
+//!    confirm the analytic numbers on the real implementation.
+//!
+//! ```bash
+//! cargo run --release --example reliability_study
+//! ```
+
+use ft_tsqr::analysis::SurvivalSweep;
+use ft_tsqr::fault::KillSchedule;
+use ft_tsqr::report::{Table, fmt_prob};
+use ft_tsqr::tsqr::{Algo, RunSpec, run};
+
+fn main() {
+    let procs = 32;
+    let trials = 4000u64;
+    let rates = [0.001f64, 0.005, 0.01, 0.05, 0.1, 0.2];
+
+    println!("Survival vs per-process failure rate (P={procs}, exp lifetimes, {trials} trials)\n");
+
+    let mut table = Table::new(
+        format!("P(job completes) — {procs} processes, exponential MTBF"),
+        &["rate (deaths/step)", "baseline", "checkpointed", "redundant", "replace", "self-healing"],
+    );
+    for &rate in &rates {
+        let mut row = vec![format!("{rate}")];
+        for algo in [
+            Algo::Baseline,
+            Algo::Checkpointed,
+            Algo::Redundant,
+            Algo::Replace,
+            Algo::SelfHealing,
+        ] {
+            let est = SurvivalSweep::new(algo, procs).with_trials(trials).exponential(rate);
+            row.push(fmt_prob(est.probability(), est.ci95()));
+        }
+        table.row(row);
+    }
+    print!("{}", table.render());
+
+    // Cross-check one cell on the full simulator (rate = 0.05).
+    println!("\nCross-check on the full simulator (rate=0.05, 40 runs):");
+    for algo in [Algo::Baseline, Algo::Replace, Algo::SelfHealing] {
+        let mut ok = 0;
+        let runs = 40;
+        for seed in 0..runs {
+            let spec = RunSpec::new(algo, procs, 16, 8)
+                .with_schedule(KillSchedule::exponential(procs, 5, 0.05, seed))
+                .with_verify(false);
+            if run(&spec).expect("run").success() {
+                ok += 1;
+            }
+        }
+        let analytic =
+            SurvivalSweep::new(algo, procs).with_trials(trials).exponential(0.05).probability();
+        println!(
+            "  {:13} full-sim {:>2}/{runs} = {:.2}   analytic {:.2}",
+            algo.name(),
+            ok,
+            ok as f64 / runs as f64,
+            analytic
+        );
+    }
+    println!("\nReading: the redundant family turns a job that dies with near-certainty at");
+    println!("realistic rates into one that survives — with zero additional messages (the");
+    println!("exchange replaces the one-way send) while checkpointing pays extra traffic.");
+}

@@ -1,0 +1,185 @@
+"""AOT compile path: lower every (function, shape) variant to HLO text.
+
+Interchange format is **HLO text**, NOT ``lowered.compile().serialize()``
+— jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Output: ``artifacts/<name>.hlo.txt`` per variant plus
+``artifacts/manifest.json`` describing every entry point (kind, shapes,
+input/output arity) — the rust runtime consumes the manifest and never
+hard-codes shapes.
+
+Usage:  cd python && python -m compile.aot [--out ../artifacts] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DTYPE = jnp.float32
+
+# Shape grid for the standard artifact set.  The rust runtime falls back
+# to its host-QR oracle for shapes outside this grid (tested equivalent),
+# so the grid only needs to cover the shapes the examples/benches use.
+NS = (4, 8, 16, 32)
+LEAF_MS = (64, 128, 256, 512, 1024)
+RHS_KS = (1, 4)
+
+# --quick: the minimal set the test-suite and quickstart need.
+QUICK_NS = (4, 8)
+QUICK_LEAF_MS = (64, 256)
+QUICK_RHS_KS = (1,)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe round trip)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def build_variants(quick: bool):
+    """Yield (name, kind, params, fn, arg_specs, out_arity)."""
+    ns = QUICK_NS if quick else NS
+    leaf_ms = QUICK_LEAF_MS if quick else LEAF_MS
+    rhs_ks = QUICK_RHS_KS if quick else RHS_KS
+
+    for n in ns:
+        for m in leaf_ms:
+            if m < n:
+                continue
+            yield (
+                f"leaf_qr_{m}x{n}",
+                "leaf_qr",
+                {"m": m, "n": n},
+                model.leaf_qr,
+                (spec(m, n),),
+                3,
+            )
+            # R-only hot-path variant (no packed/tau transfer).
+            yield (
+                f"leaf_r_{m}x{n}",
+                "leaf_r",
+                {"m": m, "n": n},
+                model.leaf_qr_r,
+                (spec(m, n),),
+                1,
+            )
+        yield (
+            f"combine_{n}",
+            "combine",
+            {"n": n},
+            model.combine,
+            (spec(n, n), spec(n, n)),
+            3,
+        )
+        yield (
+            f"combine_r_{n}",
+            "combine_r",
+            {"n": n},
+            model.combine_r,
+            (spec(n, n), spec(n, n)),
+            1,
+        )
+        for k in rhs_ks:
+            yield (
+                f"backsolve_{n}x{k}",
+                "backsolve",
+                {"n": n, "k": k},
+                model.backsolve,
+                (spec(n, n), spec(n, k)),
+                1,
+            )
+        # apply_qt / build_q on leaf shapes (least-squares + verification).
+        for m in leaf_ms:
+            if m < n:
+                continue
+            for k in rhs_ks:
+                yield (
+                    f"apply_qt_{m}x{n}x{k}",
+                    "apply_qt",
+                    {"m": m, "n": n, "k": k},
+                    model.apply_qt,
+                    (spec(m, n), spec(n, 1), spec(m, k)),
+                    1,
+                )
+            yield (
+                f"build_q_{m}x{n}",
+                "build_q",
+                {"m": m, "n": n},
+                model.build_q,
+                (spec(m, n), spec(n, 1)),
+                1,
+            )
+        # combine-level apply (packed is (2n, n)) for Q-tree reconstruction.
+        yield (
+            f"apply_qt_{2*n}x{n}x{n}",
+            "apply_qt",
+            {"m": 2 * n, "n": n, "k": n},
+            model.apply_qt,
+            (spec(2 * n, n), spec(n, 1), spec(2 * n, n)),
+            1,
+        )
+        yield (
+            f"build_q_{2*n}x{n}",
+            "build_q",
+            {"m": 2 * n, "n": n},
+            model.build_q,
+            (spec(2 * n, n), spec(n, 1)),
+            1,
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="emit the minimal artifact set")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"dtype": "f32", "entries": []}
+    seen = set()
+    for name, kind, params, fn, arg_specs, out_arity in build_variants(args.quick):
+        if name in seen:  # shape grids can overlap (e.g. build_q_64x32)
+            continue
+        seen.add(name)
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "kind": kind,
+                "params": params,
+                "file": fname,
+                "inputs": [list(s.shape) for s in arg_specs],
+                "out_arity": out_arity,
+            }
+        )
+        print(f"  aot: {name:28s} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"aot: wrote {len(manifest['entries'])} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Pallas kernels: apply Q / Qᵀ from packed Householder reflectors.
+
+Needed by (a) the verification path (reconstruct A ≈ Q·R and check
+‖I − QᵀQ‖), and (b) the least-squares example (x = R⁻¹ Qᵀ b).
+
+Same mask-vectorized style as hh_qr: each reflector application is two
+full-width masked vector ops over the (m, k) operand held in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _apply_kernel(packed_ref, tau_ref, b_ref, out_ref, *, m, n, k, transpose):
+    packed = packed_ref[...]
+    tau = tau_ref[...][:, 0]  # (n,)
+    out = b_ref[...]  # (m, k)
+    row_idx = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
+    order = range(n) if transpose else reversed(range(n))
+    for j in order:  # static unroll
+        # v_j: 1 at row j, packed tail strictly below, 0 above.
+        v = jnp.where(
+            row_idx == j,
+            jnp.ones((), packed.dtype),
+            jnp.where(row_idx > j, packed[:, j], jnp.zeros((), packed.dtype)),
+        )
+        w = tau[j] * (v @ out)  # (k,)
+        out = out - v[:, None] * w[None, :]
+    out_ref[...] = out
+
+
+def _apply(packed, tau, b, transpose, interpret):
+    m, n = packed.shape
+    k = b.shape[1]
+    kernel = functools.partial(_apply_kernel, m=m, n=n, k=k, transpose=transpose)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, k), packed.dtype),
+        interpret=interpret,
+    )(packed, tau, b)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_q(packed, tau, b, interpret=True):
+    """Q @ b, with Q = H_0 · H_1 ⋯ H_{n−1} from geqrf-packed reflectors."""
+    return _apply(packed, tau, b, transpose=False, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_qt(packed, tau, b, interpret=True):
+    """Qᵀ @ b (reflectors applied in forward order)."""
+    return _apply(packed, tau, b, transpose=True, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def build_q(packed, tau, interpret=True):
+    """Materialize the thin Q (m, n) by applying Q to the identity."""
+    m, n = packed.shape
+    eye = jnp.eye(m, n, dtype=packed.dtype)
+    return _apply(packed, tau, eye, transpose=False, interpret=interpret)

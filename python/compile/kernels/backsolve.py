@@ -1,0 +1,45 @@
+"""Pallas kernel: upper-triangular back-substitution R x = b.
+
+Used by the least-squares example (examples/least_squares.rs): after the
+fault-tolerant TSQR produces R and Qᵀb, the coordinator solves the n×n
+triangular system.  n is tiny, so the whole system is one VMEM block and
+the row loop is unrolled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _backsolve_kernel(r_ref, b_ref, x_ref, *, n, k):
+    r = r_ref[...]  # (n, n) upper triangular
+    b = b_ref[...]  # (n, k)
+    x = jnp.zeros((n, k), r.dtype)
+    for i in reversed(range(n)):  # static unroll
+        # x[i] = (b[i] - R[i, i+1:] @ x[i+1:]) / R[i, i]
+        acc = b[i, :]
+        if i + 1 < n:
+            acc = acc - r[i, i + 1 :] @ x[i + 1 :, :]
+        x = x.at[i, :].set(acc / r[i, i])
+    x_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def backsolve(r, b, interpret=True):
+    """Solve R x = b with R (n,n) upper triangular, b (n,k)."""
+    n = r.shape[0]
+    if r.shape != (n, n):
+        raise ValueError(f"R must be square, got {r.shape}")
+    if b.ndim != 2 or b.shape[0] != n:
+        raise ValueError(f"b must be (n,k), got {b.shape}")
+    k = b.shape[1]
+    kernel = functools.partial(_backsolve_kernel, n=n, k=k)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, k), r.dtype),
+        interpret=interpret,
+    )(r, b)

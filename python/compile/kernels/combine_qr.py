@@ -1,0 +1,63 @@
+"""Pallas kernel: the TSQR *combine* — QR of a stacked pair [R_top; R_bot].
+
+This is the inner-node operation of the TSQR reduction tree (Algorithm 1,
+lines 11-12: ``A = concatenate(R, R'); Q, R = QR(A)``), and the operation
+both buddies execute redundantly in Redundant/Replace/Self-Healing TSQR
+(Algorithms 2/3/6, the paper's contribution).
+
+Structure exploitation: both inputs are n×n upper triangular, so column j
+of the 2n×n stack has support {j} ∪ {n..n+j}, and the Householder sweep
+restricted to that support is *exact* (see kernels/common.py).  Useful
+flops drop from (8/3)n³ (dense 2n×n Householder) to ~(2/3)n³.
+
+The whole 2n×n stack lives in VMEM (8 KiB at n=32, f32) — a single block,
+no grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _combine_kernel(rt_ref, rb_ref, packed_ref, tau_ref, *, n):
+    stacked = jnp.concatenate([rt_ref[...], rb_ref[...]], axis=0)  # (2n, n)
+    row_idx = jax.lax.broadcasted_iota(jnp.int32, (2 * n,), 0)
+    tau = jnp.zeros((n,), stacked.dtype)
+    for j in range(n):  # static unroll
+        support = common.stacked_triangular_support(row_idx, j, n)
+        stacked, tau = common.masked_householder_step(stacked, tau, j, support, row_idx)
+    packed_ref[...] = stacked
+    tau_ref[...] = tau[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def combine_qr(r_top, r_bot, interpret=True):
+    """QR of [r_top; r_bot] (both (n, n) upper triangular).
+
+    Returns (packed (2n, n), tau (n, 1)); R = triu(packed[:n]).
+    """
+    n = r_top.shape[0]
+    if r_top.shape != (n, n) or r_bot.shape != (n, n):
+        raise ValueError(f"combine expects two (n,n) blocks, got {r_top.shape}, {r_bot.shape}")
+    kernel = functools.partial(_combine_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((2 * n, n), r_top.dtype),
+            jax.ShapeDtypeStruct((n, 1), r_top.dtype),
+        ),
+        interpret=interpret,
+    )(r_top, r_bot)
+
+
+def combine_qr_r(r_top, r_bot, interpret=True):
+    """Convenience: just the combined (n, n) R."""
+    packed, _ = combine_qr(r_top, r_bot, interpret=interpret)
+    n = r_top.shape[0]
+    return jnp.triu(packed[:n, :])

@@ -1,0 +1,82 @@
+"""Shared building blocks for the Pallas QR kernels.
+
+All kernels here are written in a *mask-vectorized* style: instead of
+shrinking shapes as the factorization proceeds (ragged slices are hostile
+to TPU vector units), every operation runs over the full panel with a row
+mask selecting the active region.  On TPU this maps onto full-width VPU
+lanes; under ``interpret=True`` it is plain numpy, which is how the
+pytest suite validates it on CPU.
+
+The column loop is a *Python* loop: n (panel width) is a compile-time
+constant for tall-skinny panels (n <= 64 in every artifact we emit), so
+unrolling it gives XLA a fully static graph — no ``fori_loop`` carry, no
+dynamic slicing, and each reflector application fuses into two masked
+vector ops.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_householder_step(a, tau_acc, j, support_mask, row_idx):
+    """One Householder step on the full panel ``a`` (m, n), column ``j``.
+
+    support_mask : bool (m,) — rows allowed to carry the reflector
+        (for a dense panel: ``row_idx >= j``; the structure-aware combine
+        kernel passes ``(row_idx == j) | ((row_idx >= n) & (row_idx <= n+j))``).
+    Returns the updated (a, tau_acc).  After the step, column ``j`` holds
+    beta on the diagonal and the reflector tail below (geqrf layout).
+    """
+    dtype = a.dtype
+    col = jnp.where(support_mask, a[:, j], jnp.zeros((), dtype))
+    x0 = a[j, j]
+    # ||x||^2 over the support (includes the diagonal entry).
+    normx = jnp.sqrt(jnp.sum(col * col))
+    sign = jnp.where(x0 >= 0, jnp.ones((), dtype), -jnp.ones((), dtype))
+    beta = -sign * normx
+    denom = x0 - beta
+    safe = jnp.abs(denom) > jnp.zeros((), dtype)
+    inv_denom = jnp.where(safe, jnp.ones((), dtype) / jnp.where(safe, denom, jnp.ones((), dtype)), jnp.zeros((), dtype))
+    # v: 1 on the diagonal, col/denom strictly below (within support).
+    below = support_mask & (row_idx != j)
+    v = jnp.where(row_idx == j, jnp.ones((), dtype), jnp.where(below, col * inv_denom, jnp.zeros((), dtype)))
+    tau = jnp.where(safe, (beta - x0) / jnp.where(normx > 0, beta, jnp.ones((), dtype)), jnp.zeros((), dtype))
+    # Apply H = I - tau v v^T to the trailing columns j..n-1 only:
+    # columns < j hold *packed reflector tails* below the diagonal, not
+    # zeros, so they must not be touched.  Masking w keeps the op
+    # full-width (no ragged slices) while leaving cols < j intact.
+    n = a.shape[1]
+    col_idx = jnp.arange(n)
+    w = tau * (v @ a)  # (n,)
+    w = jnp.where(col_idx >= j, w, jnp.zeros((), dtype))
+    a = a - v[:, None] * w[None, :]
+    # Overwrite column j explicitly with the packed layout: beta on the
+    # diagonal, reflector tail below (LAPACK geqrf does the same — the
+    # reflected column equals [beta, 0...] only up to roundoff).
+    packed_col = jnp.where(
+        row_idx == j,
+        jnp.where(normx > 0, beta, x0),
+        jnp.where(below, col * inv_denom, a[:, j]),
+    )
+    a = a.at[:, j].set(jnp.where(row_idx >= j, packed_col, a[:, j]))
+    tau_acc = tau_acc.at[j].set(tau)
+    return a, tau_acc
+
+
+def dense_support(row_idx, j, m):
+    """Support mask for a dense tall-skinny panel: rows j..m-1."""
+    del m
+    return row_idx >= j
+
+
+def stacked_triangular_support(row_idx, j, n):
+    """Support mask for the TSQR combine on [R_top; R_bot] (2n, n).
+
+    Column j of the stack is nonzero only at row j (R_top diagonal) and
+    rows n..n+j (upper triangle of R_bot), and reflectors k < j only
+    touch rows {k} ∪ {n..n+k}, so this support is exact — the kernel
+    performs the structure-aware combine with (2/3)n^3 useful flops
+    instead of dense 2n-row Householder's (8/3)n^3.
+    """
+    return (row_idx == j) | ((row_idx >= n) & (row_idx <= n + j))

@@ -1,0 +1,66 @@
+"""Pallas kernel: Householder QR of a tall-skinny panel (the TSQR leaf).
+
+This is the per-process local factorization of TSQR (Algorithm 1, line 1
+of the paper): each simulated MPI rank owns an (m, n) submatrix with
+m >> n and factors it locally with *no inter-process communication*.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the whole panel is one
+VMEM-resident block — one HBM→VMEM load, n in-register reflector sweeps,
+one VMEM→HBM store of the packed [R; V] + tau.  The paper avoids network
+messages; the kernel avoids HBM round-trips, which is the same insight
+one level down the memory hierarchy.
+
+Output layout is LAPACK geqrf: R in the upper triangle, Householder
+tails below the diagonal, tau as a separate (n,) vector (padded to (n, 1)
+— Pallas TPU wants >= 2-D refs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _hh_qr_kernel(a_ref, packed_ref, tau_ref, *, m, n):
+    a = a_ref[...]
+    dtype = a.dtype
+    row_idx = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
+    tau = jnp.zeros((n,), dtype)
+    for j in range(n):  # n is static: unrolled, fully static graph
+        support = common.dense_support(row_idx, j, m)
+        a, tau = common.masked_householder_step(a, tau, j, support, row_idx)
+    packed_ref[...] = a
+    tau_ref[...] = tau[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hh_qr(a, interpret=True):
+    """Factor a tall-skinny panel. Returns (packed (m,n), tau (n,1)).
+
+    ``interpret=True`` is mandatory off-TPU: real lowering emits a Mosaic
+    custom-call the CPU PJRT plugin cannot execute.
+    """
+    m, n = a.shape
+    if m < n:
+        raise ValueError(f"panel must be tall-skinny, got {m}x{n}")
+    kernel = functools.partial(_hh_qr_kernel, m=m, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+            jax.ShapeDtypeStruct((n, 1), a.dtype),
+        ),
+        interpret=interpret,
+    )(a)
+
+
+def hh_qr_r(a, interpret=True):
+    """Convenience: just the (n, n) upper-triangular R."""
+    packed, _ = hh_qr(a, interpret=interpret)
+    n = a.shape[1]
+    return jnp.triu(packed[:n, :])

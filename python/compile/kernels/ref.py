@@ -1,0 +1,168 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *ground truth* the pytest/hypothesis suites compare the
+Pallas kernels against.  Everything here is straightforward, unoptimized
+jax.numpy so that correctness is obvious by inspection.
+
+Conventions
+-----------
+* All QR routines are *economy* (thin) factorizations of tall-skinny
+  panels: A is (m, n) with m >= n, Q is (m, n), R is (n, n) upper
+  triangular.
+* Householder reflectors use the LAPACK convention:
+      H_j = I - tau_j * v_j v_j^T,   v_j[j] = 1, v_j[:j] = 0
+  and A = H_0 H_1 ... H_{n-1} R.
+* ``packed`` format stores R in the upper triangle (including diagonal)
+  and the sub-diagonal part of each v_j below it — exactly LAPACK's
+  ``geqrf`` output layout.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def householder_vector(x):
+    """Reference Householder reflector for a vector x.
+
+    Returns (v, tau, beta) with v[0] = 1 such that
+    (I - tau v v^T) x = beta e_0, using the LAPACK sign choice
+    beta = -sign(x[0]) * ||x||  (numerically stable: no cancellation).
+    """
+    normx = jnp.linalg.norm(x)
+    x0 = x[0]
+    # sign(0) := +1 so the zero vector yields tau = 0 (identity reflector).
+    sign = jnp.where(x0 >= 0, 1.0, -1.0).astype(x.dtype)
+    beta = -sign * normx
+    denom = x0 - beta
+    # Guard: if x is (numerically) zero, H = I.
+    safe = jnp.abs(denom) > 0
+    v_tail = jnp.where(safe, x[1:] / jnp.where(safe, denom, 1.0), 0.0)
+    v = jnp.concatenate([jnp.ones((1,), x.dtype), v_tail])
+    tau = jnp.where(safe, (beta - x0) / beta, 0.0).astype(x.dtype)
+    # tau = (beta - x0)/beta is the LAPACK formula given v[0]=1.
+    return v, tau, beta
+
+
+def qr_packed(a):
+    """Unblocked Householder QR; returns (packed, tau) in geqrf layout.
+
+    packed : (m, n) — R on/above the diagonal, v_j (tail) below it.
+    tau    : (n,)
+    """
+    m, n = a.shape
+    packed = a
+    taus = []
+    for j in range(n):
+        x = packed[j:, j]
+        v, tau, beta = householder_vector(x)
+        # Apply H_j = I - tau v v^T to the trailing submatrix (cols j..n).
+        sub = packed[j:, j:]
+        w = tau * (v @ sub)  # (n-j,)
+        sub = sub - jnp.outer(v, w)
+        # Column j becomes [beta, v_tail] — beta on the diagonal, v below.
+        col = jnp.concatenate([beta[None], v[1:]])
+        sub = sub.at[:, 0].set(col)
+        packed = packed.at[j:, j:].set(sub)
+        taus.append(tau)
+    return packed, jnp.stack(taus)
+
+
+def unpack_r(packed):
+    """Extract the (n, n) upper-triangular R from geqrf-packed output."""
+    n = packed.shape[1]
+    return jnp.triu(packed[:n, :])
+
+
+def unpack_v(packed):
+    """Extract the (m, n) matrix of Householder vectors (unit diagonal)."""
+    m, n = packed.shape
+    v = jnp.tril(packed, -1)[:, :n]
+    v = v + jnp.eye(m, n, dtype=packed.dtype)
+    return v
+
+
+def apply_q(packed, tau, b):
+    """Compute Q @ B from packed reflectors: Q = H_0 H_1 ... H_{n-1}.
+
+    b : (m, k).  Applies reflectors in reverse order.
+    """
+    m, n = packed.shape
+    v = unpack_v(packed)
+    out = b
+    for j in reversed(range(n)):
+        vj = jnp.where(jnp.arange(m) >= j, v[:, j], 0.0)
+        w = tau[j] * (vj @ out)
+        out = out - jnp.outer(vj, w)
+    return out
+
+
+def apply_qt(packed, tau, b):
+    """Compute Q^T @ B from packed reflectors (forward order)."""
+    m, n = packed.shape
+    v = unpack_v(packed)
+    out = b
+    for j in range(n):
+        vj = jnp.where(jnp.arange(m) >= j, v[:, j], 0.0)
+        w = tau[j] * (vj @ out)
+        out = out - jnp.outer(vj, w)
+    return out
+
+
+def build_q(packed, tau):
+    """Materialize the thin Q (m, n)."""
+    m, n = packed.shape
+    eye = jnp.eye(m, n, dtype=packed.dtype)
+    return apply_q(packed, tau, eye)
+
+
+def canonicalize_r(r):
+    """Flip row signs so diag(R) >= 0 (makes R unique for full-rank A)."""
+    d = jnp.diag(r)
+    s = jnp.where(d < 0, -1.0, 1.0).astype(r.dtype)
+    return r * s[:, None]
+
+
+def qr_r(a):
+    """Just the R factor, sign-canonicalized to non-negative diagonal.
+
+    TSQR composes QRs along a tree; R is unique only up to the signs of
+    its rows, so comparisons use this canonical form.
+    """
+    r = jnp.linalg.qr(a, mode="r")
+    return canonicalize_r(r)
+
+
+def combine_r(r_top, r_bot):
+    """Reference TSQR combine: QR of the stacked [R_top; R_bot].
+
+    Returns (r, packed, tau) where r = unpack_r(packed).
+    """
+    stacked = jnp.concatenate([r_top, r_bot], axis=0)
+    packed, tau = qr_packed(stacked)
+    return unpack_r(packed), packed, tau
+
+
+def tsqr_tree_r(a, num_leaves):
+    """Reference full TSQR over a binary tree, returns canonical R.
+
+    a is (m, n); m must be divisible by num_leaves (power of two).
+    """
+    m, n = a.shape
+    assert m % num_leaves == 0
+    rows = m // num_leaves
+    rs = [qr_r(a[i * rows : (i + 1) * rows, :]) for i in range(num_leaves)]
+    while len(rs) > 1:
+        nxt = []
+        for i in range(0, len(rs), 2):
+            r, _, _ = combine_r(rs[i], rs[i + 1])
+            nxt.append(canonicalize_r(r))
+        rs = nxt
+    return canonicalize_r(rs[0])
+
+
+def backsolve(r, b):
+    """Reference upper-triangular solve R x = b (b: (n,) or (n, k))."""
+    if b.ndim == 2:
+        return jnp.linalg.solve(r, b)
+    return jnp.linalg.solve(r, b[:, None])[:, 0]

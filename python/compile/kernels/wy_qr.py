@@ -1,0 +1,129 @@
+"""Pallas kernel ablation: WY-blocked Householder QR.
+
+The unblocked kernel (hh_qr.py) applies reflectors one at a time —
+rank-1 updates, VPU-bound on TPU.  The WY representation aggregates all
+n reflectors into
+
+    Q = I − W Yᵀ        (W = [v_0 τ_0 | H_0 v_1 τ_1 | ...], Y = [v_j])
+
+so applying Q/Qᵀ becomes two matmuls — MXU-shaped work.  This is the
+DESIGN.md §Perf ablation: same math, higher flops (2·m·n·k per apply vs
+Σ 4·m·k rank-1 updates), but matmul-shaped, which is what the systolic
+array wants.  On CPU-interpret both paths give identical numerics; the
+pytest suite pins WY against the unblocked oracle.
+
+Factorization itself reuses hh_qr (the column recurrence is inherently
+sequential); this module adds the W matrix construction and the blocked
+apply kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import hh_qr
+
+
+def _build_w_kernel(packed_ref, tau_ref, w_ref, *, m, n):
+    """W such that Q = I − W Yᵀ, built by the standard recurrence:
+    W_0 = τ_0 v_0;  W_j = [W_{j-1} | τ_j (v_j − W_{j-1} (Y_{j-1}ᵀ v_j))].
+    """
+    packed = packed_ref[...]
+    tau = tau_ref[...][:, 0]
+    row_idx = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
+
+    # Y columns: v_j = [0...0, 1, packed tail] (unit diagonal).
+    def v_col(j):
+        return jnp.where(
+            row_idx == j,
+            jnp.ones((), packed.dtype),
+            jnp.where(row_idx > j, packed[:, j], jnp.zeros((), packed.dtype)),
+        )
+
+    w = jnp.zeros((m, n), packed.dtype)
+    y = jnp.zeros((m, n), packed.dtype)
+    for j in range(n):  # static unroll (n is small)
+        vj = v_col(j)
+        if j == 0:
+            wj = tau[0] * vj
+        else:
+            # Y_{j-1}ᵀ v_j : (j,) — masked to the first j columns.
+            ytv = y.T @ vj  # (n,)
+            col_mask = jnp.arange(n) < j
+            ytv = jnp.where(col_mask, ytv, 0.0)
+            wj = tau[j] * (vj - w @ ytv)
+        w = w.at[:, j].set(wj)
+        y = y.at[:, j].set(vj)
+    w_ref[...] = w
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def build_w(packed, tau, interpret=True):
+    """The W factor of the WY representation (Y is unpacked from `packed`)."""
+    m, n = packed.shape
+    kernel = functools.partial(_build_w_kernel, m=m, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), packed.dtype),
+        interpret=interpret,
+    )(packed, tau)
+
+
+def _apply_wy_kernel(w_ref, y_ref, b_ref, out_ref, *, transpose):
+    """Qᵀ B = B − Y (Wᵀ B)   /   Q B = B − W (Yᵀ B): two MXU matmuls."""
+    w, y, b = w_ref[...], y_ref[...], b_ref[...]
+    if transpose:
+        out_ref[...] = b - y @ (w.T @ b)
+    else:
+        out_ref[...] = b - w @ (y.T @ b)
+
+
+def _apply(w, y, b, transpose, interpret):
+    kernel = functools.partial(_apply_wy_kernel, transpose=transpose)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=interpret,
+    )(w, y, b)
+
+
+def unpack_y(packed):
+    """Y: unit-lower-trapezoidal matrix of Householder vectors."""
+    m, n = packed.shape
+    return jnp.tril(packed, -1)[:, :n] + jnp.eye(m, n, dtype=packed.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wy_qr(a, interpret=True):
+    """Factor a tall-skinny panel, returning (packed, tau, W).
+
+    R = triu(packed[:n]); Q applications go through apply_q/apply_qt
+    below as two matmuls instead of n rank-1 sweeps.
+    """
+    packed, tau = hh_qr.hh_qr(a, interpret=interpret)
+    w = build_w(packed, tau, interpret=interpret)
+    return packed, tau, w
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_qt(w, packed, b, interpret=True):
+    """Qᵀ @ b via the WY form (matmul-shaped)."""
+    return _apply(w, unpack_y(packed), b, transpose=True, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_q(w, packed, b, interpret=True):
+    """Q @ b via the WY form (matmul-shaped)."""
+    return _apply(w, unpack_y(packed), b, transpose=False, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def build_q(w, packed, interpret=True):
+    """Thin Q (m, n) via the WY form."""
+    m, n = packed.shape
+    eye = jnp.eye(m, n, dtype=packed.dtype)
+    return _apply(w, unpack_y(packed), eye, transpose=False, interpret=interpret)

@@ -1,0 +1,93 @@
+"""Layer 2 — the JAX compute graphs the rust coordinator executes.
+
+Each public function here is a pure jax function over statically-shaped
+arrays, calling the Layer-1 Pallas kernels.  ``aot.py`` lowers each
+(function, shape) pair once to HLO text; the rust runtime
+(rust/src/runtime/) loads and executes them via PJRT — Python is never
+on the request path.
+
+The TSQR *tree* itself is NOT lowered here: the tree is the paper's
+coordination contribution and lives in rust (rust/src/tsqr/).  L2 only
+exports the two node computations (leaf factorization + combine) plus
+the helpers the examples and the verification path need.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import apply_q as _apply_q
+from .kernels import backsolve as _backsolve
+from .kernels import combine_qr as _combine_qr
+from .kernels import hh_qr as _hh_qr
+
+# Everything lowers with interpret=True — the CPU PJRT client cannot run
+# Mosaic custom-calls (see DESIGN.md / aot_recipe).
+_INTERPRET = True
+
+
+def leaf_qr(a):
+    """TSQR leaf: factor the local (m, n) panel.
+
+    Returns (r (n,n), packed (m,n), tau (n,1)).  R is returned separately
+    (not just packed) so the coordinator's hot path — which only ships R
+    between buddies — never slices on the rust side.
+    """
+    packed, tau = _hh_qr.hh_qr(a, interpret=_INTERPRET)
+    n = a.shape[1]
+    r = jnp.triu(packed[:n, :])
+    return r, packed, tau
+
+
+def leaf_qr_r(a):
+    """R-only leaf (hot path): the coordinator ships just R̃ between
+    buddies, so lowering a variant without the packed/tau outputs
+    saves two device→host transfers per call (EXPERIMENTS.md §Perf)."""
+    packed, _ = _hh_qr.hh_qr(a, interpret=_INTERPRET)
+    n = a.shape[1]
+    return jnp.triu(packed[:n, :])
+
+
+def combine_r(r_top, r_bot):
+    """R-only combine (hot path)."""
+    packed, _ = _combine_qr.combine_qr(r_top, r_bot, interpret=_INTERPRET)
+    n = r_top.shape[0]
+    return jnp.triu(packed[:n, :])
+
+
+def combine(r_top, r_bot):
+    """TSQR inner node: QR of [r_top; r_bot].  Returns (r, packed, tau)."""
+    packed, tau = _combine_qr.combine_qr(r_top, r_bot, interpret=_INTERPRET)
+    n = r_top.shape[0]
+    r = jnp.triu(packed[:n, :])
+    return r, packed, tau
+
+
+def apply_qt(packed, tau, b):
+    """Qᵀ @ b from packed reflectors (least-squares path)."""
+    return _apply_q.apply_qt(packed, tau, b, interpret=_INTERPRET)
+
+
+def build_q(packed, tau):
+    """Materialize the thin Q (verification path)."""
+    return _apply_q.build_q(packed, tau, interpret=_INTERPRET)
+
+
+def backsolve(r, b):
+    """Solve the n×n triangular system R x = b, b is (n, k)."""
+    return _backsolve.backsolve(r, b, interpret=_INTERPRET)
+
+
+def matmul(a, b):
+    """Plain matmul — verification helper so rust needs no BLAS."""
+    return a @ b
+
+
+def residual_norms(a, q, r):
+    """(‖A − QR‖_F / ‖A‖_F, ‖I − QᵀQ‖_F) — the verify.rs metrics."""
+    recon = q @ r
+    num = jnp.linalg.norm(a - recon)
+    den = jnp.linalg.norm(a)
+    n = q.shape[1]
+    ortho = jnp.linalg.norm(jnp.eye(n, dtype=q.dtype) - q.T @ q)
+    return num / den, ortho

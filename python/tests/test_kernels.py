@@ -1,0 +1,310 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Every Pallas kernel is checked against the pure-jnp oracle in
+``compile.kernels.ref`` and against ``jnp.linalg.qr`` where applicable.
+Hypothesis sweeps shapes and scales; fixed tests pin the documented edge
+cases (square panel, single column, rank-deficient, huge/tiny scales).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import apply_q, backsolve, combine_qr, hh_qr, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(rng, m, n, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal((m, n)) * scale, dtype)
+
+
+def tol(dtype):
+    return 2e-4 if dtype == np.float32 else 1e-10
+
+
+# ---------------------------------------------------------------- hh_qr
+
+
+@pytest.mark.parametrize("m,n", [(4, 4), (8, 4), (33, 7), (128, 16), (5, 1), (64, 32), (1, 1)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_hh_qr_matches_ref_packed(m, n, dtype):
+    rng = np.random.default_rng(m * 100 + n)
+    a = rand(rng, m, n, dtype)
+    packed, tau = hh_qr.hh_qr(a)
+    pref, tref = ref.qr_packed(a)
+    assert_allclose(np.asarray(packed), np.asarray(pref), atol=tol(dtype), rtol=tol(dtype))
+    assert_allclose(np.asarray(tau[:, 0]), np.asarray(tref), atol=tol(dtype))
+
+
+@pytest.mark.parametrize("m,n", [(16, 4), (100, 8), (256, 16)])
+def test_hh_qr_r_matches_lapack(m, n):
+    rng = np.random.default_rng(7)
+    a = rand(rng, m, n)
+    r = ref.canonicalize_r(hh_qr.hh_qr_r(a))
+    assert_allclose(np.asarray(r), np.asarray(ref.qr_r(a)), atol=2e-4, rtol=2e-4)
+
+
+def test_hh_qr_r_is_upper_triangular():
+    rng = np.random.default_rng(3)
+    a = rand(rng, 40, 8)
+    r = hh_qr.hh_qr_r(a)
+    assert np.allclose(np.tril(np.asarray(r), -1), 0.0)
+
+
+def test_hh_qr_reconstructs_a():
+    rng = np.random.default_rng(11)
+    a = rand(rng, 48, 8)
+    packed, tau = hh_qr.hh_qr(a)
+    q = apply_q.build_q(packed, tau)
+    r = jnp.triu(packed[:8, :])
+    assert_allclose(np.asarray(q @ r), np.asarray(a), atol=2e-4)
+
+
+def test_hh_qr_q_orthonormal():
+    rng = np.random.default_rng(12)
+    a = rand(rng, 64, 16)
+    packed, tau = hh_qr.hh_qr(a)
+    q = np.asarray(apply_q.build_q(packed, tau))
+    assert_allclose(q.T @ q, np.eye(16), atol=2e-4)
+
+
+def test_hh_qr_rejects_wide():
+    with pytest.raises(ValueError):
+        hh_qr.hh_qr(jnp.zeros((3, 5)))
+
+
+def test_hh_qr_zero_matrix():
+    # Zero panel: R = 0, tau = 0 (identity reflectors) — must not NaN.
+    packed, tau = hh_qr.hh_qr(jnp.zeros((10, 3)))
+    assert np.all(np.isfinite(np.asarray(packed)))
+    assert_allclose(np.asarray(tau), 0.0)
+    assert_allclose(np.asarray(jnp.triu(packed[:3])), 0.0)
+
+
+def test_hh_qr_rank_deficient():
+    # Duplicate columns: finite output, R singular but |R| reproduces A.
+    rng = np.random.default_rng(5)
+    col = rng.standard_normal((32, 1)).astype(np.float32)
+    a = jnp.asarray(np.hstack([col, col, col * 2.0]))
+    packed, tau = hh_qr.hh_qr(a)
+    q = apply_q.build_q(packed, tau)
+    r = jnp.triu(packed[:3])
+    assert np.all(np.isfinite(np.asarray(packed)))
+    assert_allclose(np.asarray(q @ r), np.asarray(a), atol=2e-4)
+
+
+@pytest.mark.parametrize("scale", [1e-18, 1e-6, 1e6, 1e18])
+def test_hh_qr_extreme_scales_f64(scale):
+    rng = np.random.default_rng(9)
+    a = rand(rng, 24, 4, np.float64, scale)
+    packed, tau = hh_qr.hh_qr(a)
+    q = apply_q.build_q(packed, tau)
+    r = jnp.triu(packed[:4])
+    assert_allclose(np.asarray(q @ r), np.asarray(a), rtol=1e-9, atol=1e-9 * scale)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 12),
+    extra=st.integers(0, 60),
+    seed=st.integers(0, 2**31 - 1),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+def test_hh_qr_hypothesis_sweep(n, extra, seed, dtype):
+    m = n + extra
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, n, dtype)
+    packed, tau = hh_qr.hh_qr(a)
+    pref, tref = ref.qr_packed(a)
+    assert_allclose(np.asarray(packed), np.asarray(pref), atol=tol(dtype) * 10, rtol=tol(dtype) * 10)
+    # Round trip: Q R == A.
+    q = apply_q.build_q(packed, tau)
+    r = jnp.triu(packed[:n])
+    assert_allclose(np.asarray(q @ r), np.asarray(a), atol=tol(dtype) * 10, rtol=tol(dtype) * 10)
+
+
+# ------------------------------------------------------------- combine_qr
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8, 16, 32])
+def test_combine_matches_ref(n):
+    rng = np.random.default_rng(n)
+    rt = ref.qr_r(rand(rng, 2 * n, n))
+    rb = ref.qr_r(rand(rng, 2 * n, n))
+    packed, tau = combine_qr.combine_qr(rt, rb)
+    rc_ref, pref, tref = ref.combine_r(rt, rb)
+    assert_allclose(np.asarray(packed), np.asarray(pref), atol=2e-4, rtol=2e-4)
+    assert_allclose(np.asarray(tau[:, 0]), np.asarray(tref), atol=2e-4)
+
+
+def test_combine_equals_dense_qr_of_stack():
+    rng = np.random.default_rng(21)
+    n = 8
+    rt = ref.qr_r(rand(rng, 32, n))
+    rb = ref.qr_r(rand(rng, 32, n))
+    r = ref.canonicalize_r(combine_qr.combine_qr_r(rt, rb))
+    dense = ref.qr_r(jnp.concatenate([rt, rb], axis=0))
+    assert_allclose(np.asarray(r), np.asarray(dense), atol=2e-4, rtol=2e-4)
+
+
+def test_combine_structure_support_is_exact():
+    # The masked support must yield the SAME packed output as a dense
+    # Householder on the stack (this is the structure-exploitation claim).
+    rng = np.random.default_rng(23)
+    n = 6
+    rt = ref.qr_r(rand(rng, 12, n))
+    rb = ref.qr_r(rand(rng, 12, n))
+    packed, _ = combine_qr.combine_qr(rt, rb)
+    pref, _ = ref.qr_packed(jnp.concatenate([rt, rb], axis=0))
+    assert_allclose(np.asarray(packed), np.asarray(pref), atol=2e-4, rtol=2e-4)
+
+
+def test_combine_rejects_mismatched():
+    with pytest.raises(ValueError):
+        combine_qr.combine_qr(jnp.zeros((4, 4)), jnp.zeros((5, 5)))
+
+
+def test_combine_identity_blocks():
+    n = 4
+    eye = jnp.eye(n)
+    r = ref.canonicalize_r(combine_qr.combine_qr_r(eye, eye))
+    # [I; I] has R = sqrt(2) * I.
+    assert_allclose(np.asarray(r), np.sqrt(2.0) * np.eye(n), atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_combine_hypothesis_sweep(n, seed):
+    rng = np.random.default_rng(seed)
+    rt = ref.qr_r(rand(rng, max(2 * n, n + 1), n))
+    rb = ref.qr_r(rand(rng, max(2 * n, n + 1), n))
+    r = ref.canonicalize_r(combine_qr.combine_qr_r(rt, rb))
+    dense = ref.qr_r(jnp.concatenate([rt, rb], axis=0))
+    assert_allclose(np.asarray(r), np.asarray(dense), atol=2e-3, rtol=2e-3)
+
+
+# --------------------------------------------------------- TSQR tree ≡ QR
+
+
+@pytest.mark.parametrize("leaves", [2, 4, 8])
+def test_tsqr_tree_equals_direct_qr(leaves):
+    """Composing leaf + combine kernels along the tree == LAPACK QR of A."""
+    rng = np.random.default_rng(leaves)
+    n, rows = 8, 16
+    a = rand(rng, leaves * rows, n)
+    rs = [hh_qr.hh_qr_r(a[i * rows : (i + 1) * rows]) for i in range(leaves)]
+    while len(rs) > 1:
+        rs = [combine_qr.combine_qr_r(rs[i], rs[i + 1]) for i in range(0, len(rs), 2)]
+    assert_allclose(
+        np.asarray(ref.canonicalize_r(rs[0])), np.asarray(ref.qr_r(a)), atol=5e-4, rtol=5e-4
+    )
+
+
+def test_tsqr_tree_matches_ref_tree():
+    rng = np.random.default_rng(42)
+    a = rand(rng, 64, 4)
+    mine = None
+    rs = [hh_qr.hh_qr_r(a[i * 16 : (i + 1) * 16]) for i in range(4)]
+    r01 = combine_qr.combine_qr_r(rs[0], rs[1])
+    r23 = combine_qr.combine_qr_r(rs[2], rs[3])
+    mine = ref.canonicalize_r(combine_qr.combine_qr_r(r01, r23))
+    theirs = ref.tsqr_tree_r(a, 4)
+    assert_allclose(np.asarray(mine), np.asarray(theirs), atol=5e-4, rtol=5e-4)
+
+
+# ------------------------------------------------------------- backsolve
+
+
+@pytest.mark.parametrize("n,k", [(1, 1), (4, 1), (8, 4), (16, 2), (32, 1)])
+def test_backsolve_matches_ref(n, k):
+    rng = np.random.default_rng(n * 10 + k)
+    r = ref.qr_r(rand(rng, 2 * n, n)) + jnp.eye(n) * 0.5  # well conditioned
+    b = rand(rng, n, k)
+    x = backsolve.backsolve(r, b)
+    assert_allclose(np.asarray(r @ x), np.asarray(b), atol=2e-4, rtol=2e-4)
+    assert_allclose(np.asarray(x), np.asarray(ref.backsolve(r, b)), atol=2e-3, rtol=2e-3)
+
+
+def test_backsolve_identity():
+    b = jnp.arange(8.0, dtype=jnp.float32).reshape(4, 2)
+    x = backsolve.backsolve(jnp.eye(4), b)
+    assert_allclose(np.asarray(x), np.asarray(b))
+
+
+def test_backsolve_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        backsolve.backsolve(jnp.zeros((3, 4)), jnp.zeros((3, 1)))
+    with pytest.raises(ValueError):
+        backsolve.backsolve(jnp.eye(3), jnp.zeros((4, 1)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 16), k=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_backsolve_hypothesis(n, k, seed):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(np.triu(rng.standard_normal((n, n))) + np.eye(n) * (n + 1), jnp.float32)
+    b = rand(rng, n, k)
+    x = backsolve.backsolve(r, b)
+    assert_allclose(np.asarray(r @ x), np.asarray(b), atol=1e-3, rtol=1e-3)
+
+
+# ------------------------------------------------------------- apply_q(t)
+
+
+def test_apply_qt_then_q_roundtrips():
+    rng = np.random.default_rng(31)
+    a = rand(rng, 40, 8)
+    packed, tau = hh_qr.hh_qr(a)
+    b = rand(rng, 40, 3)
+    back = apply_q.apply_q(packed, tau, apply_q.apply_qt(packed, tau, b))
+    assert_allclose(np.asarray(back), np.asarray(b), atol=2e-4)
+
+
+def test_apply_qt_matches_ref():
+    rng = np.random.default_rng(33)
+    a = rand(rng, 24, 6)
+    packed, tau = hh_qr.hh_qr(a)
+    b = rand(rng, 24, 2)
+    mine = apply_q.apply_qt(packed, tau, b)
+    theirs = ref.apply_qt(packed, tau[:, 0], b)
+    assert_allclose(np.asarray(mine), np.asarray(theirs), atol=2e-4)
+
+
+def test_least_squares_via_kernels():
+    """x = R⁻¹ (Qᵀb)[:n] solves min ‖Ax − b‖ — the LS example's math."""
+    rng = np.random.default_rng(35)
+    m, n = 100, 8
+    a = rand(rng, m, n)
+    x_true = rng.standard_normal((n, 1)).astype(np.float32)
+    b = a @ jnp.asarray(x_true)
+    packed, tau = hh_qr.hh_qr(a)
+    qtb = apply_q.apply_qt(packed, tau, b)
+    r = jnp.triu(packed[:n])
+    x = backsolve.backsolve(r, qtb[:n])
+    assert_allclose(np.asarray(x), x_true, atol=1e-2, rtol=1e-2)
+
+
+# ------------------------------------------------------------- ref self-checks
+
+
+def test_ref_householder_vector_annihilates():
+    rng = np.random.default_rng(41)
+    x = jnp.asarray(rng.standard_normal(7), jnp.float64)
+    v, tau_, beta = ref.householder_vector(x)
+    hx = x - tau_ * v * (v @ x)
+    assert_allclose(np.asarray(hx[1:]), 0.0, atol=1e-12)
+    assert_allclose(float(hx[0]), float(beta), atol=1e-12)
+
+
+def test_ref_canonicalize_idempotent():
+    rng = np.random.default_rng(43)
+    r = jnp.triu(jnp.asarray(rng.standard_normal((5, 5))))
+    c = ref.canonicalize_r(r)
+    assert_allclose(np.asarray(ref.canonicalize_r(c)), np.asarray(c))
+    assert np.all(np.diag(np.asarray(c)) >= 0)

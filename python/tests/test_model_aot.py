@@ -1,0 +1,110 @@
+"""L2 tests: model graphs produce correct shapes/values and the AOT
+HLO-text path round-trips through the XlaComputation parser."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def rand(seed, m, n):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal((m, n)), jnp.float32)
+
+
+def test_leaf_qr_shapes_and_values():
+    a = rand(0, 32, 8)
+    r, packed, tau = model.leaf_qr(a)
+    assert r.shape == (8, 8) and packed.shape == (32, 8) and tau.shape == (8, 1)
+    assert_allclose(
+        np.asarray(ref.canonicalize_r(r)), np.asarray(ref.qr_r(a)), atol=2e-4, rtol=2e-4
+    )
+    # R must agree with triu(packed).
+    assert_allclose(np.asarray(r), np.triu(np.asarray(packed[:8])))
+
+
+def test_combine_shapes_and_values():
+    rt, rb = ref.qr_r(rand(1, 16, 8)), ref.qr_r(rand(2, 16, 8))
+    r, packed, tau = model.combine(rt, rb)
+    assert r.shape == (8, 8) and packed.shape == (16, 8) and tau.shape == (8, 1)
+    dense = ref.qr_r(jnp.concatenate([rt, rb], axis=0))
+    assert_allclose(np.asarray(ref.canonicalize_r(r)), np.asarray(dense), atol=2e-4, rtol=2e-4)
+
+
+def test_residual_norms_on_exact_qr():
+    a = rand(3, 40, 8)
+    r, packed, tau = model.leaf_qr(a)
+    q = model.build_q(packed, tau)
+    rel, ortho = model.residual_norms(a, q, r)
+    assert float(rel) < 1e-5 and float(ortho) < 1e-5
+
+
+def test_backsolve_model():
+    r = ref.qr_r(rand(4, 16, 8)) + jnp.eye(8)
+    b = rand(5, 8, 1)
+    x = model.backsolve(r, b)
+    assert_allclose(np.asarray(r @ x), np.asarray(b), atol=1e-4)
+
+
+# ----------------------------------------------------------------- AOT
+
+
+def test_to_hlo_text_roundtrip():
+    lowered = jax.jit(model.combine).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32), jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # Must be plain HLO ops (interpret-mode pallas), no Mosaic custom-call.
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_build_variants_quick_covers_all_kinds():
+    kinds = {v[1] for v in aot.build_variants(quick=True)}
+    assert kinds == {
+        "leaf_qr", "leaf_r", "combine", "combine_r", "backsolve", "apply_qt", "build_q",
+    }
+
+
+def test_r_only_variants_match_full():
+    a = jnp.asarray(np.random.default_rng(0).standard_normal((16, 4)), jnp.float32)
+    r_full, _, _ = model.leaf_qr(a)
+    r_only = model.leaf_qr_r(a)
+    assert_allclose(np.asarray(r_only), np.asarray(r_full))
+    rt, rb = ref.qr_r(rand(1, 8, 4)), ref.qr_r(rand(2, 8, 4))
+    rc_full, _, _ = model.combine(rt, rb)
+    assert_allclose(np.asarray(model.combine_r(rt, rb)), np.asarray(rc_full))
+
+
+def test_build_variants_names_unique_after_dedup():
+    names = [v[0] for v in aot.build_variants(quick=False)]
+    # Duplicates allowed pre-dedup only for identical (kind, shapes).
+    seen = {}
+    for v in aot.build_variants(quick=False):
+        if v[0] in seen:
+            assert seen[v[0]] == (v[1], v[4][0].shape)
+        seen[v[0]] = (v[1], v[4][0].shape)
+
+
+def test_manifest_matches_artifacts_if_present():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["dtype"] == "f32"
+    for e in manifest["entries"]:
+        path = os.path.join(art, e["file"])
+        assert os.path.exists(path), e["file"]
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head

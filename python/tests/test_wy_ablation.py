@@ -1,0 +1,84 @@
+"""WY-blocked ablation (DESIGN.md §Perf): the matmul-shaped Q
+application must agree exactly with the rank-1 reference path."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import apply_q as rank1
+from compile.kernels import hh_qr, ref, wy_qr
+
+
+def rand(seed, m, n):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal((m, n)), jnp.float32)
+
+
+@pytest.mark.parametrize("m,n", [(8, 4), (32, 8), (64, 16), (16, 16), (9, 1)])
+def test_wy_q_matches_rank1_q(m, n):
+    a = rand(m * 7 + n, m, n)
+    packed, tau, w = wy_qr.wy_qr(a)
+    q_wy = wy_qr.build_q(w, packed)
+    q_r1 = rank1.build_q(packed, tau)
+    assert_allclose(np.asarray(q_wy), np.asarray(q_r1), atol=2e-4, rtol=2e-4)
+
+
+def test_wy_reconstructs_a():
+    a = rand(3, 48, 8)
+    packed, tau, w = wy_qr.wy_qr(a)
+    q = wy_qr.build_q(w, packed)
+    r = jnp.triu(packed[:8])
+    assert_allclose(np.asarray(q @ r), np.asarray(a), atol=3e-4)
+
+
+def test_wy_apply_qt_matches_reference():
+    a = rand(5, 24, 6)
+    packed, tau, w = wy_qr.wy_qr(a)
+    b = rand(6, 24, 2)
+    mine = wy_qr.apply_qt(w, packed, b)
+    theirs = ref.apply_qt(packed, tau[:, 0], b)
+    assert_allclose(np.asarray(mine), np.asarray(theirs), atol=3e-4)
+
+
+def test_wy_roundtrip_q_qt():
+    a = rand(7, 40, 8)
+    packed, tau, w = wy_qr.wy_qr(a)
+    b = rand(8, 40, 3)
+    back = wy_qr.apply_q(w, packed, wy_qr.apply_qt(w, packed, b))
+    assert_allclose(np.asarray(back), np.asarray(b), atol=3e-4)
+
+
+def test_w_definition_holds():
+    # Q = I − W Yᵀ must equal the product of reflectors.
+    a = rand(11, 16, 4)
+    packed, tau, w = wy_qr.wy_qr(a)
+    y = wy_qr.unpack_y(packed)
+    q_wy = jnp.eye(16, dtype=jnp.float32) - w @ y.T
+    q_full = rank1.apply_q(packed, tau, jnp.eye(16, dtype=jnp.float32))
+    assert_allclose(np.asarray(q_wy), np.asarray(q_full), atol=3e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 10), extra=st.integers(0, 30), seed=st.integers(0, 2**31 - 1))
+def test_wy_hypothesis_sweep(n, extra, seed):
+    m = n + extra
+    a = rand(seed, m, n)
+    packed, tau, w = wy_qr.wy_qr(a)
+    q_wy = wy_qr.build_q(w, packed)
+    q_r1 = rank1.build_q(packed, tau)
+    assert_allclose(np.asarray(q_wy), np.asarray(q_r1), atol=1e-3, rtol=1e-3)
+    # And Q R == A through the WY path.
+    r = jnp.triu(packed[:n])
+    assert_allclose(np.asarray(q_wy @ r), np.asarray(a), atol=1e-3, rtol=1e-3)
+
+
+def test_hh_qr_is_the_factorization_under_wy():
+    # wy_qr must not change the factorization itself.
+    a = rand(13, 20, 5)
+    packed_wy, tau_wy, _ = wy_qr.wy_qr(a)
+    packed_r1, tau_r1 = hh_qr.hh_qr(a)
+    assert_allclose(np.asarray(packed_wy), np.asarray(packed_r1))
+    assert_allclose(np.asarray(tau_wy), np.asarray(tau_r1))

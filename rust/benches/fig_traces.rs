@@ -1,0 +1,117 @@
+//! BENCH FIG1–FIG5: regenerate the paper's five figures as execution
+//! traces, assert every claim each figure makes, and time the runs.
+//!
+//!   cargo bench --bench fig_traces
+//!
+//! Output: the rendered trace per figure + a timing table; CSVs land in
+//! target/reports/.
+
+use ft_tsqr::fault::Scenario;
+use ft_tsqr::report::bench::{bench, iters};
+use ft_tsqr::report::{REPORT_DIR, Table};
+use ft_tsqr::runtime::Executor;
+use ft_tsqr::tsqr::{Algo, Event, RunSpec, TreePlan, run};
+
+fn main() {
+    let exec = Executor::auto("artifacts");
+    let mut timing = Table::new(
+        "FIG1-5 — scenario replay timing (median of runs)",
+        &["figure", "algo", "procs", "success", "holders", "median"],
+    );
+
+    // ---------------------------------------------------------- Figure 1
+    {
+        let spec =
+            RunSpec::new(Algo::Baseline, 4, 64, 8).with_trace(true).with_executor(exec.clone());
+        let res = run(&spec).unwrap();
+        println!("=== Figure 1 — TSQR on 4 processes (baseline tree) ===");
+        println!("{}", res.trace.render(4, 2));
+        assert_eq!(res.trace.combiners_at(0), vec![0, 2], "half the procs idle after step 1");
+        assert_eq!(res.trace.combiners_at(1), vec![0], "only the root works at the end");
+        assert_eq!(res.r_holders, vec![0]);
+        let s = bench(1, iters(20, 3), || {
+            let _ = run(&RunSpec::new(Algo::Baseline, 4, 64, 8).with_executor(exec.clone()));
+        });
+        timing.row(vec![
+            "fig1".into(),
+            "baseline".into(),
+            "4".into(),
+            "true".into(),
+            "{0}".into(),
+            s.fmt_median(),
+        ]);
+    }
+
+    // ---------------------------------------------------------- Figure 2
+    {
+        let spec =
+            RunSpec::new(Algo::Redundant, 4, 64, 8).with_trace(true).with_executor(exec.clone());
+        let res = run(&spec).unwrap();
+        println!("=== Figure 2 — Redundant TSQR on 4 processes ===");
+        println!("{}", res.trace.render(4, 2));
+        assert_eq!(res.trace.exchange_pairs_at(0), vec![(0, 1), (2, 3)]);
+        assert_eq!(res.trace.exchange_pairs_at(1), vec![(0, 2), (1, 3)]);
+        assert_eq!(res.trace.combiners_at(0).len(), 4, "nobody idles");
+        assert_eq!(res.r_holders, vec![0, 1, 2, 3], "all procs end with R");
+        let s = bench(1, iters(20, 3), || {
+            let _ = run(&RunSpec::new(Algo::Redundant, 4, 64, 8).with_executor(exec.clone()));
+        });
+        timing.row(vec![
+            "fig2".into(),
+            "redundant".into(),
+            "4".into(),
+            "true".into(),
+            "{0,1,2,3}".into(),
+            s.fmt_median(),
+        ]);
+    }
+
+    // ------------------------------------------------------- Figures 3-5
+    for sc in [Scenario::fig3(), Scenario::fig4(), Scenario::fig5()] {
+        let res = run(&sc.spec(64, 8).with_executor(exec.clone())).unwrap();
+        println!("=== {} — {} ===", sc.name, sc.description);
+        println!("{}", res.trace.render(sc.procs, TreePlan::new(sc.procs).rounds()));
+        assert!(res.success(), "{}", sc.name);
+        match sc.name {
+            "fig3" => {
+                assert_eq!(res.r_holders, vec![1, 3]);
+                assert!(res
+                    .trace
+                    .exits()
+                    .contains(&(0, ft_tsqr::ulfm::ExitKind::GaveUpPeerFailed)));
+            }
+            "fig4" => {
+                assert_eq!(res.r_holders, vec![0, 1, 3]);
+                assert_eq!(
+                    res.trace.count(|e| matches!(
+                        e,
+                        Event::ReplicaFound { rank: 0, dead: 2, replica: 3, round: 1 }
+                    )),
+                    1
+                );
+            }
+            "fig5" => {
+                assert_eq!(res.r_holders, vec![0, 1, 2, 3]);
+                assert_eq!(res.metrics.respawns, 1);
+            }
+            _ => unreachable!(),
+        }
+        let holders = format!("{:?}", res.r_holders);
+        let s = bench(1, iters(20, 3), || {
+            let _ = run(&sc.spec(64, 8).with_executor(exec.clone()).with_trace(false));
+        });
+        timing.row(vec![
+            sc.name.into(),
+            sc.algo.name().into(),
+            sc.procs.to_string(),
+            "true".into(),
+            holders,
+            s.fmt_median(),
+        ]);
+    }
+
+    print!("{}", timing.render());
+    let path = timing.save_csv(REPORT_DIR).expect("csv");
+    println!("\ncsv: {}", path.display());
+    println!("fig_traces: all figure claims hold ✓");
+}

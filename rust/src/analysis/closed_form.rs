@@ -1,0 +1,195 @@
+//! Closed-form survival probability for the canonical experiment
+//! "exactly `f` uniformly random failures at round boundary `s`".
+//!
+//! For Replace / Self-Healing TSQR the run survives iff **no level-`s`
+//! replica group is wiped out entirely** (each group of size `m = 2^s`
+//! holds all copies of one block's R̃; §III-B3).  With `f` failures
+//! drawn uniformly without replacement from `P` ranks split into
+//! `G = P/m` groups, inclusion–exclusion over "group j fully dead"
+//! gives
+//!
+//! ```text
+//! P(survive) = Σ_{j=0..min(G, f/m)} (−1)^j C(G,j) C(P−jm, f−jm) / C(P,f)
+//! ```
+//!
+//! This is an *independent derivation* of the same quantity the
+//! Monte-Carlo sweep estimates — the tests pin them against each other,
+//! which validates both the sampler and the analytic simulator.
+
+use crate::tsqr::TreePlan;
+
+/// ln C(n, k) via ln-gamma (Stirling–Lanczos), stable for large n.
+fn ln_choose(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_gamma((n + 1) as f64) - ln_gamma((k + 1) as f64) - ln_gamma((n - k + 1) as f64)
+}
+
+/// Lanczos approximation of ln Γ(x), x > 0.
+fn ln_gamma(x: f64) -> f64 {
+    // g = 7, n = 9 Lanczos coefficients.
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection (not needed for factorials, kept for completeness).
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// P(no level-`s` group fully killed | exactly `f` uniform failures at
+/// boundary `s`) on a power-of-two world of `procs` ranks — the
+/// survival probability of Replace/Self-Healing TSQR in that setting.
+pub fn survival_exact_f_at_round(procs: usize, s: u32, f: usize) -> f64 {
+    assert!(procs.is_power_of_two(), "closed form defined for power-of-two worlds");
+    let p = procs as u64;
+    let m = 1u64 << s; // group size
+    let g = p / m; // number of groups
+    let f = f as u64;
+    if f > p {
+        return 0.0;
+    }
+    let denom = ln_choose(p, f);
+    let jmax = std::cmp::min(g, f / m);
+    let mut acc = 0.0f64;
+    for j in 0..=jmax {
+        let term = (ln_choose(g, j) + ln_choose(p - j * m, f - j * m) - denom).exp();
+        if j % 2 == 0 {
+            acc += term;
+        } else {
+            acc -= term;
+        }
+    }
+    acc.clamp(0.0, 1.0)
+}
+
+/// The smallest `f` at which survival is no longer certain: exactly
+/// `2^s` (one full group) — the tightness statement of §III-B3.
+pub fn certain_survival_threshold(s: u32) -> u64 {
+    (1u64 << s) - 1
+}
+
+/// Convenience: the survival curve over f = 0..=procs at round `s`.
+pub fn survival_curve(procs: usize, s: u32) -> Vec<(usize, f64)> {
+    (0..=procs).map(|f| (f, survival_exact_f_at_round(procs, s, f))).collect()
+}
+
+/// Expected number of tolerated failures at round `s` (where the curve
+/// crosses 1/2 — a scalar summary used by the reliability report).
+pub fn median_tolerated(procs: usize, s: u32) -> usize {
+    survival_curve(procs, s)
+        .iter()
+        .take_while(|(_, p)| *p >= 0.5)
+        .last()
+        .map(|(f, _)| *f)
+        .unwrap_or(0)
+}
+
+/// Check that a world/step combination is in range for the formula.
+pub fn applicable(procs: usize, s: u32) -> bool {
+    procs.is_power_of_two() && s < TreePlan::new(procs).rounds()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::SurvivalSweep;
+    use crate::tsqr::Algo;
+
+    #[test]
+    fn ln_gamma_factorials() {
+        // Γ(n+1) = n!
+        for (n, fact) in [(1u64, 1.0f64), (2, 2.0), (5, 120.0), (10, 3628800.0)] {
+            let got = ln_gamma((n + 1) as f64).exp();
+            assert!((got - fact).abs() / fact < 1e-10, "{n}! -> {got}");
+        }
+    }
+
+    #[test]
+    fn choose_small_values() {
+        assert!((ln_choose(5, 2).exp() - 10.0).abs() < 1e-9);
+        assert!((ln_choose(16, 8).exp() - 12870.0).abs() < 1e-6);
+        assert_eq!(ln_choose(3, 5), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn survival_certain_within_bound() {
+        // f <= 2^s - 1 cannot wipe a group of size 2^s.
+        for procs in [8usize, 16, 64] {
+            for s in 1..3u32 {
+                let f = certain_survival_threshold(s) as usize;
+                let p = survival_exact_f_at_round(procs, s, f);
+                assert!((p - 1.0).abs() < 1e-12, "P={procs} s={s} f={f}: {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn survival_below_one_past_bound() {
+        let p = survival_exact_f_at_round(16, 1, 2); // f = 2^1 can wipe a pair
+        assert!(p < 1.0 && p > 0.9, "{p}");
+        // Exact value: 1 - C(8,1)*C(14,0)/C(16,2) = 1 - 8/120.
+        assert!((p - (1.0 - 8.0 / 120.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kill_everyone_is_fatal() {
+        assert!(survival_exact_f_at_round(8, 1, 8) < 1e-9);
+        assert_eq!(survival_exact_f_at_round(8, 1, 9), 0.0);
+    }
+
+    #[test]
+    fn monotone_decreasing_in_f() {
+        let curve = survival_curve(32, 2);
+        for w in curve.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-12, "survival must not increase with f");
+        }
+    }
+
+    #[test]
+    fn matches_monte_carlo() {
+        // The independent Monte-Carlo estimate must agree within CI.
+        for (procs, s, f) in [(16usize, 1u32, 3usize), (16, 2, 6), (32, 2, 8)] {
+            let exact = survival_exact_f_at_round(procs, s, f);
+            let est = SurvivalSweep::new(Algo::Replace, procs).with_trials(20_000).at_round(s, f);
+            let diff = (est.probability() - exact).abs();
+            assert!(
+                diff < est.ci95() + 0.01,
+                "P={procs} s={s} f={f}: exact {exact} vs MC {} (±{})",
+                est.probability(),
+                est.ci95()
+            );
+        }
+    }
+
+    #[test]
+    fn median_tolerated_grows_with_s() {
+        let m1 = median_tolerated(64, 1);
+        let m3 = median_tolerated(64, 3);
+        assert!(m3 > m1, "robustness grows with the step: {m1} vs {m3}");
+    }
+
+    #[test]
+    fn applicability() {
+        assert!(applicable(16, 3));
+        assert!(!applicable(12, 1));
+        assert!(!applicable(16, 4));
+    }
+}

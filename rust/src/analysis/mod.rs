@@ -1,0 +1,14 @@
+//! Robustness analysis: the paper's closed-form tolerance bounds
+//! (§III-B3, §III-C3, §III-D3) plus the combinatorial machinery the
+//! validation benches use to check them empirically.
+
+pub mod closed_form;
+pub mod robustness;
+pub mod survival;
+
+pub use closed_form::{survival_curve, survival_exact_f_at_round};
+pub use robustness::{
+    max_tolerated_by_step, redundancy_copies, self_healing_total_tolerated,
+    survives_failure_set,
+};
+pub use survival::{SurvivalEstimate, SurvivalSweep};

@@ -1,0 +1,364 @@
+//! Closed-form robustness bounds (§III-B3/C3/D3) and an *analytic
+//! simulator* — a matrix-free, synchronous executor of the four
+//! algorithms' failure semantics.
+//!
+//! The analytic simulator serves two purposes:
+//! 1. A fast engine for exhaustive / Monte-Carlo robustness sweeps
+//!    (millions of failure patterns per second, no tokio, no QR).
+//! 2. An independent oracle for the full-stack simulator: property
+//!    tests assert that the real run and the analytic prediction agree
+//!    on who ends up with the final R (rust/tests/prop_invariants.rs).
+
+use std::collections::HashMap;
+
+use crate::tsqr::{Algo, TreePlan};
+use crate::ulfm::Rank;
+
+/// §III-B3: number of copies of each intermediate R̃ after paper-step
+/// `s` (= `s` completed exchange rounds): `2^s`.
+pub fn redundancy_copies(s: u32) -> u64 {
+    1u64 << s
+}
+
+/// §III-B3/C3: the bound — `2^s − 1` failures tolerable by the end of
+/// paper-step `s` (at least one copy of every block survives).
+pub fn max_tolerated_by_step(s: u32) -> u64 {
+    (1u64 << s) - 1
+}
+
+/// §III-D3: Self-Healing respawns the dead, so it tolerates `2^s − 1`
+/// *at each* step; the cumulative capacity over `rounds` steps.
+pub fn self_healing_total_tolerated(rounds: u32) -> u64 {
+    (1..=rounds).map(max_tolerated_by_step).sum()
+}
+
+/// Per-rank liveness in the analytic simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AState {
+    Active,
+    Dead,
+    GaveUp,
+    DoneNoR,
+}
+
+/// Prediction for one failure pattern.
+#[derive(Debug, Clone)]
+pub struct AnalyticOutcome {
+    pub states: Vec<AState>,
+    /// Ranks predicted to end holding the final R.
+    pub holders: Vec<Rank>,
+    /// Ranks that were respawned (Self-Healing only).
+    pub respawned: Vec<Rank>,
+}
+
+impl AnalyticOutcome {
+    /// Success under the paper's per-algorithm semantics (baseline:
+    /// root holds R; redundant family: someone holds R).
+    pub fn success(&self, algo: Algo) -> bool {
+        match algo {
+            Algo::Baseline => self.holders.contains(&0),
+            _ => !self.holders.is_empty(),
+        }
+    }
+}
+
+/// Predict the outcome of `algo` on `procs` ranks under the failure
+/// pattern `kill_round` (rank → boundary at which it crashes; a rank
+/// killed at boundary `s` completed paper-step `s` but does not take
+/// part in exchange round `s`).  One kill per rank — exactly what the
+/// stochastic schedule generators produce.
+pub fn survives_failure_set(
+    algo: Algo,
+    procs: usize,
+    kill_round: &HashMap<Rank, u32>,
+) -> AnalyticOutcome {
+    let plan = TreePlan::new(procs);
+    let rounds = plan.rounds();
+    let mut st = vec![AState::Active; procs];
+    let mut respawned: Vec<Rank> = Vec::new();
+
+    for s in 0..rounds {
+        // Who entered this round alive (before this boundary's kills)?
+        // The checkpointed comparator posts its checkpoint before the
+        // kill check, so checkpoint availability keys off this.
+        let entry_active: Vec<bool> = st.iter().map(|x| *x == AState::Active).collect();
+        // Phase 1 — fault injection at this round boundary.
+        for r in 0..procs {
+            if st[r] == AState::Active && kill_round.get(&r) == Some(&s) {
+                st[r] = AState::Dead;
+            }
+        }
+        // Phase 2 — who posts for exchange round s?  Everyone still
+        // active (they post before fetching; baseline senders post,
+        // receivers don't need to for the analysis).
+        let posted: Vec<bool> = st.iter().map(|x| *x == AState::Active).collect();
+
+        // Phase 3 — resolve the fetches.
+        match algo {
+            Algo::Baseline => {
+                for r in 0..procs {
+                    if st[r] != AState::Active || !plan.participates(r, s) {
+                        continue;
+                    }
+                    let Some(b) = plan.buddy(r, s) else { continue };
+                    if plan.is_sender(r, s) {
+                        st[r] = AState::DoneNoR;
+                    } else if !posted[b] {
+                        st[r] = AState::GaveUp;
+                    }
+                }
+            }
+            Algo::Redundant => {
+                // Exact-buddy exchange only (Alg. 2 line 7).
+                let snapshot = st.clone();
+                for r in 0..procs {
+                    if snapshot[r] != AState::Active {
+                        continue;
+                    }
+                    let Some(b) = plan.buddy(r, s) else { continue };
+                    if !posted[b] {
+                        st[r] = AState::GaveUp;
+                    }
+                }
+            }
+            Algo::Replace => {
+                // Any poster in the buddy's replica group will do
+                // (posted-then-died still delivers; findReplica covers
+                // live-but-later cases — timing-independent).
+                let snapshot = st.clone();
+                for r in 0..procs {
+                    if snapshot[r] != AState::Active {
+                        continue;
+                    }
+                    let Some(b) = plan.buddy(r, s) else { continue };
+                    let ok = plan.replicas_of(b, s).iter().any(|&q| posted[q]);
+                    if !ok {
+                        st[r] = AState::GaveUp;
+                    }
+                }
+            }
+            Algo::Checkpointed => {
+                // Baseline tree + diskless checkpoints: a receiver whose
+                // sender died *this round* recovers the sender's R̃ from
+                // the checkpoint (taken before the kill), provided the
+                // checkpoint's holder (the sender's neighbour) is alive.
+                // A sender dead since an earlier round never produced
+                // the needed R̃, checkpoint or not.
+                for r in 0..procs {
+                    if st[r] != AState::Active || !plan.participates(r, s) {
+                        continue;
+                    }
+                    let Some(b) = plan.buddy(r, s) else { continue };
+                    if plan.is_sender(r, s) {
+                        st[r] = AState::DoneNoR;
+                        continue;
+                    }
+                    if posted[b] {
+                        continue;
+                    }
+                    // The sender's R̃_s checkpoint exists iff it entered
+                    // round s alive (it posts before dying at this
+                    // boundary); it is *readable* iff its holder
+                    // SURVIVED the round-s boundary (heartbeat witness —
+                    // `posted` is the post-kill active snapshot).
+                    let recoverable = st[b] == AState::Dead
+                        && kill_round.get(&b) == Some(&s)
+                        && entry_active[b]
+                        && {
+                            let holder = crate::checkpoint::partner(b, s, procs);
+                            holder == r || posted[holder]
+                        };
+                    if !recoverable {
+                        st[r] = AState::GaveUp;
+                    }
+                }
+            }
+            Algo::SelfHealing => {
+                // Like Replace, but a dead buddy with a surviving
+                // replica is respawned and rejoins from this round.
+                let snapshot = st.clone();
+                for r in 0..procs {
+                    if snapshot[r] != AState::Active {
+                        continue;
+                    }
+                    let Some(b) = plan.buddy(r, s) else { continue };
+                    let group_has_poster = plan.replicas_of(b, s).iter().any(|&q| posted[q]);
+                    if !group_has_poster {
+                        st[r] = AState::GaveUp;
+                        continue;
+                    }
+                    if st[b] == AState::Dead {
+                        st[b] = AState::Active; // spawnNew(b) + Alg. 5 recovery
+                        respawned.push(b);
+                    } else if matches!(st[b], AState::GaveUp | AState::DoneNoR) {
+                        // Exited processes cannot be respawned.
+                        st[r] = AState::GaveUp;
+                    }
+                }
+            }
+        }
+    }
+
+    let holders: Vec<Rank> =
+        (0..procs).filter(|&r| st[r] == AState::Active).collect();
+    respawned.sort_unstable();
+    respawned.dedup();
+    AnalyticOutcome { states: st, holders, respawned }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kills(entries: &[(Rank, u32)]) -> HashMap<Rank, u32> {
+        entries.iter().copied().collect()
+    }
+
+    #[test]
+    fn formulas() {
+        assert_eq!(redundancy_copies(0), 1);
+        assert_eq!(redundancy_copies(3), 8);
+        assert_eq!(max_tolerated_by_step(1), 1);
+        assert_eq!(max_tolerated_by_step(2), 3);
+        assert_eq!(self_healing_total_tolerated(3), 1 + 3 + 7);
+    }
+
+    #[test]
+    fn fault_free_all_hold_r() {
+        for algo in [Algo::Redundant, Algo::Replace, Algo::SelfHealing] {
+            let out = survives_failure_set(algo, 8, &kills(&[]));
+            assert_eq!(out.holders.len(), 8, "{algo:?}");
+        }
+        let out = survives_failure_set(Algo::Baseline, 8, &kills(&[]));
+        assert_eq!(out.holders, vec![0], "baseline: only the root");
+    }
+
+    #[test]
+    fn fig3_redundant_p2_dies() {
+        // Paper Figure 3: P0 gives up, P1 & P3 hold the final R.
+        let out = survives_failure_set(Algo::Redundant, 4, &kills(&[(2, 1)]));
+        assert_eq!(out.holders, vec![1, 3]);
+        assert_eq!(out.states[0], AState::GaveUp);
+        assert_eq!(out.states[2], AState::Dead);
+        assert!(out.success(Algo::Redundant));
+    }
+
+    #[test]
+    fn fig4_replace_p2_dies() {
+        // Paper Figure 4: P0 exchanges with the replica P3; P0/P1/P3 end with R.
+        let out = survives_failure_set(Algo::Replace, 4, &kills(&[(2, 1)]));
+        assert_eq!(out.holders, vec![0, 1, 3]);
+        assert!(out.success(Algo::Replace));
+    }
+
+    #[test]
+    fn fig5_self_healing_p2_dies() {
+        // Paper Figure 5: P2 respawned; all four ranks end with R.
+        let out = survives_failure_set(Algo::SelfHealing, 4, &kills(&[(2, 1)]));
+        assert_eq!(out.holders, vec![0, 1, 2, 3]);
+        assert_eq!(out.respawned, vec![2]);
+    }
+
+    #[test]
+    fn baseline_aborts_on_any_failure_on_root_path() {
+        let out = survives_failure_set(Algo::Baseline, 4, &kills(&[(2, 1)]));
+        assert!(!out.success(Algo::Baseline));
+    }
+
+    #[test]
+    fn baseline_survives_failure_of_already_done_sender() {
+        // Rank 3 sent its R̃ at round 0 and exited; killing it later
+        // (entry at round 1) is harmless — it's not Active anymore.
+        let out = survives_failure_set(Algo::Baseline, 4, &kills(&[(3, 1)]));
+        assert!(out.success(Algo::Baseline));
+    }
+
+    #[test]
+    fn step0_failure_is_fatal_for_everyone_needing_it() {
+        // 2^0 - 1 = 0 failures tolerable before the first exchange.
+        for algo in [Algo::Replace, Algo::SelfHealing] {
+            let out = survives_failure_set(algo, 2, &kills(&[(1, 0)]));
+            assert!(!out.success(algo), "{algo:?}: leaf data had one copy");
+        }
+    }
+
+    #[test]
+    fn replace_survives_adversarial_pattern_that_kills_redundant() {
+        // P=8, kills P1@1, P2@2, P4@2: within the paper bound
+        // (f(1)=1 <= 1, f(2)=3 <= 3) yet Redundant's give-up cascade
+        // eliminates every process; Replace survives via replicas.
+        // (This nuance is measured by the robustness bench.)
+        let pattern = kills(&[(1, 1), (2, 2), (4, 2)]);
+        let red = survives_failure_set(Algo::Redundant, 8, &pattern);
+        assert!(!red.success(Algo::Redundant), "give-up cascade");
+        let rep = survives_failure_set(Algo::Replace, 8, &pattern);
+        assert!(rep.success(Algo::Replace));
+        let sh = survives_failure_set(Algo::SelfHealing, 8, &pattern);
+        assert!(sh.success(Algo::SelfHealing));
+    }
+
+    #[test]
+    fn replace_guarantee_exhaustive_p8() {
+        // §III-C3 as a worst-case guarantee: Replace succeeds for EVERY
+        // pattern with cumulative failures f(s) <= 2^s - 1.  Exhaustive
+        // over all single-kill-per-rank patterns on P=8 (4^8 = 65536).
+        let procs = 8;
+        let rounds = 3u32;
+        let mut checked = 0u64;
+        for code in 0..(4u64.pow(procs as u32)) {
+            let mut pattern = HashMap::new();
+            let mut c = code;
+            for r in 0..procs {
+                let v = (c % 4) as u32;
+                c /= 4;
+                if v < rounds {
+                    pattern.insert(r, v);
+                }
+            }
+            // Cumulative failure counts at each boundary.
+            let within_bound = (0..rounds).all(|s| {
+                let f: u64 = pattern.values().filter(|&&k| k <= s).count() as u64;
+                f <= max_tolerated_by_step(s)
+            });
+            if !within_bound {
+                continue;
+            }
+            checked += 1;
+            let out = survives_failure_set(Algo::Replace, procs, &pattern);
+            assert!(out.success(Algo::Replace), "pattern {pattern:?} within bound failed");
+            let sh = survives_failure_set(Algo::SelfHealing, procs, &pattern);
+            assert!(sh.success(Algo::SelfHealing), "SH failed on {pattern:?}");
+        }
+        assert!(checked > 100, "sweep must actually cover patterns ({checked})");
+    }
+
+    #[test]
+    fn bound_is_tight_killing_a_full_group_is_fatal() {
+        // 2^s failures CAN be fatal: kill the entire group {0,1} at
+        // boundary 1 — both copies of that block's R̃₁ are lost.
+        let pattern = kills(&[(0, 1), (1, 1)]);
+        for algo in [Algo::Redundant, Algo::Replace, Algo::SelfHealing] {
+            let out = survives_failure_set(algo, 4, &pattern);
+            assert!(!out.success(algo), "{algo:?} must fail when a whole group dies");
+        }
+    }
+
+    #[test]
+    fn self_healing_respawn_chain_per_step_capacity() {
+        // P=8: 1 failure at step 1, 3 more at step 2 — the §III-D3
+        // example ("1 process can fail at step 1; it will be respawned
+        // and 3 additional processes can fail at step 2").
+        let pattern = kills(&[(0, 1), (1, 2), (2, 2), (4, 2)]);
+        let out = survives_failure_set(Algo::SelfHealing, 8, &pattern);
+        assert!(out.success(Algo::SelfHealing), "within per-step capacity");
+        assert!(!out.respawned.is_empty());
+    }
+
+    #[test]
+    fn dead_ranks_never_hold_r_unless_respawned() {
+        let out = survives_failure_set(Algo::Replace, 8, &kills(&[(5, 1)]));
+        assert!(!out.holders.contains(&5));
+        let out = survives_failure_set(Algo::SelfHealing, 8, &kills(&[(5, 1)]));
+        assert!(out.holders.contains(&5), "SH respawns 5 when its buddy needs it");
+    }
+}

@@ -1,0 +1,200 @@
+//! Monte-Carlo survival estimation over the analytic simulator — the
+//! engine behind the robustness tables (TAB-R1/R2/R3) and the
+//! reliability sweep (TAB-S1).
+
+use std::collections::HashMap;
+
+use crate::tsqr::{Algo, TreePlan};
+use crate::ulfm::Rank;
+use crate::util::Rng;
+
+use super::robustness::survives_failure_set;
+
+/// One survival estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct SurvivalEstimate {
+    pub trials: u64,
+    pub successes: u64,
+}
+
+impl SurvivalEstimate {
+    pub fn probability(&self) -> f64 {
+        if self.trials == 0 {
+            return 0.0;
+        }
+        self.successes as f64 / self.trials as f64
+    }
+
+    /// 95% normal-approximation half-width.
+    pub fn ci95(&self) -> f64 {
+        let p = self.probability();
+        1.96 * (p * (1.0 - p) / self.trials.max(1) as f64).sqrt()
+    }
+}
+
+/// Parameterized Monte-Carlo sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SurvivalSweep {
+    pub algo: Algo,
+    pub procs: usize,
+    pub trials: u64,
+    pub seed: u64,
+}
+
+impl SurvivalSweep {
+    pub fn new(algo: Algo, procs: usize) -> Self {
+        Self { algo, procs, trials: 2000, seed: 0xC0711 }
+    }
+
+    pub fn with_trials(mut self, t: u64) -> Self {
+        self.trials = t;
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// P(success | exactly `f` distinct ranks die at round boundary
+    /// `round`) — the direct check of the `2^s − 1` claim: for
+    /// `f <= 2^round − 1` Replace/Self-Healing must be at 1.0.
+    pub fn at_round(&self, round: u32, f: usize) -> SurvivalEstimate {
+        let mut rng = Rng::new(self.seed ^ ((round as u64) << 32) ^ f as u64);
+        let mut successes = 0;
+        for _ in 0..self.trials {
+            let pattern = sample_distinct(&mut rng, self.procs, round, f);
+            if survives_failure_set(self.algo, self.procs, &pattern).success(self.algo) {
+                successes += 1;
+            }
+        }
+        SurvivalEstimate { trials: self.trials, successes }
+    }
+
+    /// P(success) when every rank dies independently at each boundary
+    /// with probability `p` (Bernoulli-per-step model).
+    pub fn bernoulli(&self, p: f64) -> SurvivalEstimate {
+        let plan = TreePlan::new(self.procs);
+        let rounds = plan.rounds();
+        let mut rng = Rng::new(self.seed ^ p.to_bits());
+        let mut successes = 0;
+        for _ in 0..self.trials {
+            let mut pattern: HashMap<Rank, u32> = HashMap::new();
+            for r in 0..self.procs {
+                for s in 0..rounds {
+                    if rng.bool(p) {
+                        pattern.insert(r, s);
+                        break;
+                    }
+                }
+            }
+            if survives_failure_set(self.algo, self.procs, &pattern).success(self.algo) {
+                successes += 1;
+            }
+        }
+        SurvivalEstimate { trials: self.trials, successes }
+    }
+
+    /// P(success) under per-rank exponential lifetimes with the given
+    /// rate (deaths per step) — the Reed-et-al-style model (TAB-S1).
+    pub fn exponential(&self, rate: f64) -> SurvivalEstimate {
+        let plan = TreePlan::new(self.procs);
+        let rounds = plan.rounds();
+        let mut rng = Rng::new(self.seed ^ rate.to_bits());
+        let mut successes = 0;
+        for _ in 0..self.trials {
+            let mut pattern: HashMap<Rank, u32> = HashMap::new();
+            for r in 0..self.procs {
+                let t = rng.exponential(rate);
+                let round = t.ceil() as u64;
+                if round <= rounds as u64 {
+                    pattern.insert(r, (round as u32).min(rounds.saturating_sub(1)).max(0));
+                }
+            }
+            if survives_failure_set(self.algo, self.procs, &pattern).success(self.algo) {
+                successes += 1;
+            }
+        }
+        SurvivalEstimate { trials: self.trials, successes }
+    }
+}
+
+/// Sample `f` distinct ranks killed at `round` (uniform without
+/// replacement).
+fn sample_distinct(rng: &mut Rng, procs: usize, round: u32, f: usize) -> HashMap<Rank, u32> {
+    let mut pool: Vec<Rank> = (0..procs).collect();
+    let mut pattern = HashMap::new();
+    for _ in 0..f.min(procs) {
+        let i = rng.below(pool.len());
+        pattern.insert(pool.swap_remove(i), round);
+    }
+    pattern
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimate_arithmetic() {
+        let e = SurvivalEstimate { trials: 100, successes: 50 };
+        assert!((e.probability() - 0.5).abs() < 1e-12);
+        assert!(e.ci95() > 0.0 && e.ci95() < 0.2);
+        assert_eq!(SurvivalEstimate { trials: 0, successes: 0 }.probability(), 0.0);
+    }
+
+    #[test]
+    fn replace_is_certain_within_bound() {
+        // f <= 2^s - 1 failures at boundary s: Replace always survives.
+        let sweep = SurvivalSweep::new(Algo::Replace, 16).with_trials(300);
+        for s in 1..4u32 {
+            let f = ((1u64 << s) - 1) as usize;
+            let est = sweep.at_round(s, f);
+            assert_eq!(est.probability(), 1.0, "round {s}, f {f}");
+        }
+    }
+
+    #[test]
+    fn replace_can_fail_past_bound() {
+        // Killing 2^s ranks at boundary s sometimes wipes a whole group.
+        let sweep = SurvivalSweep::new(Algo::Replace, 8).with_trials(2000);
+        let est = sweep.at_round(1, 4); // far beyond 2^1 - 1 = 1
+        assert!(est.probability() < 1.0, "p = {}", est.probability());
+        assert!(est.probability() > 0.0, "most patterns still survive");
+    }
+
+    #[test]
+    fn redundant_weaker_than_replace_at_same_f() {
+        let f = 4;
+        let red = SurvivalSweep::new(Algo::Redundant, 16).with_trials(1500).at_round(2, f);
+        let rep = SurvivalSweep::new(Algo::Replace, 16).with_trials(1500).at_round(2, f);
+        assert!(
+            rep.probability() >= red.probability(),
+            "replace {} < redundant {}",
+            rep.probability(),
+            red.probability()
+        );
+    }
+
+    #[test]
+    fn bernoulli_monotone_in_p() {
+        let sweep = SurvivalSweep::new(Algo::Replace, 16).with_trials(800);
+        let lo = sweep.bernoulli(0.01).probability();
+        let hi = sweep.bernoulli(0.2).probability();
+        assert!(lo >= hi, "more failures, lower survival ({lo} vs {hi})");
+    }
+
+    #[test]
+    fn exponential_baseline_dies_fast() {
+        let base = SurvivalSweep::new(Algo::Baseline, 16).with_trials(800).exponential(0.05);
+        let rep = SurvivalSweep::new(Algo::Replace, 16).with_trials(800).exponential(0.05);
+        assert!(rep.probability() > base.probability());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = SurvivalSweep::new(Algo::Replace, 8).with_trials(200).at_round(1, 2);
+        let b = SurvivalSweep::new(Algo::Replace, 8).with_trials(200).at_round(1, 2);
+        assert_eq!(a.successes, b.successes);
+    }
+}

@@ -1,0 +1,156 @@
+//! Comparator baseline: TSQR + diskless neighbour checkpointing.
+//!
+//! The paper motivates redundancy-for-free by contrast with classic
+//! ABFT approaches that *add* redundancy: diskless checkpointing
+//! (Plank et al. [17]) stores each process's state in the memory of a
+//! partner process after every step.  This module implements that
+//! comparator on the same simulated world so the benches can put real
+//! numbers behind the comparison (TAB-P2):
+//!
+//! * fault-free cost: baseline TSQR + one extra checkpoint message per
+//!   participant per step (the redundant family pays zero extra
+//!   messages — the exchange *is* the algorithm's communication);
+//! * robustness: a failed participant's R̃ is recovered from its
+//!   checkpoint *if the neighbour holding the checkpoint is alive*;
+//!   losing a process and its checkpoint partner together is fatal.
+
+use crate::linalg::Matrix;
+use crate::tsqr::algorithms::ProcOutcome;
+use crate::tsqr::context::Ctx;
+use crate::tsqr::trace::Event;
+use crate::ulfm::Rank;
+
+/// Board-level namespace for checkpoint posts (kept disjoint from
+/// exchange rounds, which use plain `0..rounds`).
+pub const CKPT_BIT: u32 = 1 << 30;
+
+/// Namespace for the per-round liveness heartbeat: posted right AFTER
+/// the fault-injection point, so its existence is the deterministic
+/// witness that a process survived boundary `s` (and its memory — with
+/// the checkpoints in it — is still addressable during round `s`).
+pub const HB_BIT: u32 = 1 << 29;
+
+/// The checkpoint partner of `rank` at `round`: the nearest rank that
+/// is still a *participant* of the reduction tree at this round (ranks
+/// whose low `round` bits are zero stay; neighbours that already sent
+/// and exited would take the checkpoint to the grave).  At the top of
+/// the tree the only other participant is the buddy itself, in which
+/// case the *receiver* ends up holding the sender's checkpoint — which
+/// is exactly what recovery needs.
+pub fn partner(rank: Rank, round: u32, procs: usize) -> Rank {
+    let far = rank ^ (1usize << (round + 1));
+    if far < procs {
+        far
+    } else {
+        rank ^ (1usize << round)
+    }
+}
+
+/// Checkpointed TSQR process body (drop-in alternative to
+/// `tsqr::algorithms::baseline`).
+///
+/// Identical tree to Algorithm 1, plus: every process checkpoints its
+/// current R̃ before each exchange round; a receiver whose sender died
+/// recovers the sender's R̃ from the checkpoint — provided the
+/// checkpoint's *holder* is still alive.
+pub fn checkpointed(ctx: Ctx, a: Matrix) -> ProcOutcome {
+    let rank = ctx.rank;
+    let mut r = match ctx.leaf_qr(&a) {
+        Ok(f) => f.r,
+        Err(_) => return ProcOutcome::GaveUpPeerFailed,
+    };
+    for round in 0..ctx.plan.rounds() {
+        if !ctx.plan.participates(rank, round) {
+            return ProcOutcome::DoneNoR;
+        }
+        // Checkpoint my current state to my partner's memory — one real
+        // message of R̃ bytes on every step, failure or not.  This is
+        // the overhead the paper's approach avoids.
+        ctx.world.post(rank, round | CKPT_BIT, r.clone());
+        ctx.world.charge_message(r.size_bytes() as u64);
+
+        if ctx.maybe_die(round).is_err() {
+            return ProcOutcome::Killed;
+        }
+        // Survived the boundary: heartbeat. A checkpoint stored in my
+        // memory is readable during round `round` iff this post exists
+        // (dying at the boundary takes the checkpoints down with me).
+        ctx.world.post(rank, round | HB_BIT, Matrix::zeros(1, 1));
+        let Some(buddy) = ctx.plan.buddy(rank, round) else {
+            continue;
+        };
+        if ctx.plan.is_sender(rank, round) {
+            ctx.world.post(rank, round, r);
+            ctx.trace.emit(Event::Send { rank, to: buddy, round });
+            return ProcOutcome::DoneNoR;
+        }
+        let theirs = match ctx.world.fetch(buddy, round) {
+            Ok(m) => {
+                ctx.trace.emit(Event::Recv { rank, from: buddy, round });
+                m
+            }
+            Err(e) if e.is_rank_failure() => {
+                ctx.trace.emit(Event::PeerFailed { rank, peer: buddy, round });
+                // Recover the sender's state from its checkpoint — valid
+                // only if the checkpoint's *holder* survived boundary
+                // `round` (a holder that died at the same boundary takes
+                // the checkpoint to the grave).  The deterministic
+                // witness is the holder's round-`round` heartbeat,
+                // posted right after its fault-injection point: wait for
+                // it; if the holder died or gave up, the fetch reports
+                // the failure and the checkpoint is lost.  This keeps
+                // recovery independent of thread timing — the analytic
+                // model in analysis/robustness.rs mirrors it exactly.
+                let holder = partner(buddy, round, ctx.plan.procs());
+                if holder != rank && ctx.world.fetch(holder, round | HB_BIT).is_err() {
+                    return ProcOutcome::GaveUpNoReplica;
+                }
+                match ctx.world.peek(buddy, round | CKPT_BIT) {
+                    Some(m) => {
+                        ctx.world.charge_message(m.size_bytes() as u64);
+                        ctx.trace.emit(Event::Recovered { rank, from: holder, round });
+                        m
+                    }
+                    None => return ProcOutcome::GaveUpNoReplica,
+                }
+            }
+            Err(_) => return ProcOutcome::GaveUpPeerFailed,
+        };
+        match ctx.combine(round, &r, &theirs, rank, buddy) {
+            Ok(next) => r = next,
+            Err(_) => return ProcOutcome::GaveUpPeerFailed,
+        }
+    }
+    ProcOutcome::FinalR(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partner_is_a_surviving_participant() {
+        // At round s, participants have their low s bits zero; the
+        // partner of a participant must also be a participant.
+        let procs = 16;
+        for s in 0..3u32 {
+            for r in (0..procs).filter(|r| r & ((1 << s) - 1) == 0) {
+                let p = partner(r, s, procs);
+                assert!(p < procs);
+                assert_eq!(p & ((1usize << s) - 1), 0, "partner {p} not in tree at round {s}");
+                assert_ne!(p, r);
+            }
+        }
+        // Top of the tree: partner degenerates to the buddy.
+        assert_eq!(partner(8, 3, 16), 0);
+        assert_eq!(partner(0, 3, 16), 8);
+    }
+
+    #[test]
+    fn ckpt_namespace_disjoint_from_rounds() {
+        for round in 0..30u32 {
+            assert_ne!(round | CKPT_BIT, round);
+            assert!(round | CKPT_BIT >= CKPT_BIT);
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! Typed run configuration: config files + CLI overrides → `RunSpec`.
+//!
+//! Every example and the `repro` CLI build their runs through this, so
+//! a downstream user configures the system exactly one way.  The file
+//! format is the flat `key = value` dialect of `util::kv` (the vendored
+//! crate set has no TOML parser; the subset below is TOML-compatible):
+//!
+//! ```text
+//! # ft-tsqr.conf
+//! algo = "replace"
+//! procs = 16
+//! rows-per-proc = 256
+//! cols = 16
+//! seed = 7
+//! backend = "auto"          # pjrt | host | auto
+//! artifact-dir = "artifacts"
+//! pjrt-shards = 2
+//! verify = true
+//! trace = false
+//!
+//! [failures]
+//! mode = "at"               # none | at | bernoulli | exponential | random-at-round
+//! kills = [[2, 1]]          # rank 2 dies at the end of step 1
+//! ```
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::fault::KillSchedule;
+use crate::runtime::{Backend, Executor};
+use crate::tsqr::{Algo, RunSpec, TreePlan};
+use crate::util::kv::Doc;
+
+/// Failure-injection configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub enum FailureConfig {
+    /// Fault-free execution.
+    #[default]
+    None,
+    /// Explicit (rank, round) kills — `round` is the boundary at which
+    /// the rank crashes ("end of step round" in the paper's words).
+    At { kills: Vec<(usize, u32)> },
+    /// Each rank fails at each boundary independently w.p. `p`.
+    Bernoulli { p: f64, seed: u64 },
+    /// Per-rank exponential lifetime with `rate` deaths/step.
+    Exponential { rate: f64, seed: u64 },
+    /// Exactly `f` random ranks die at boundary `round`.
+    RandomAtRound { round: u32, f: usize, seed: u64, protect_root: bool },
+}
+
+impl FailureConfig {
+    /// Materialize into a schedule for a world of `procs`/`rounds`.
+    pub fn schedule(&self, procs: usize, rounds: u32) -> KillSchedule {
+        match self {
+            FailureConfig::None => KillSchedule::none(),
+            FailureConfig::At { kills } => KillSchedule::at(kills),
+            FailureConfig::Bernoulli { p, seed } => {
+                KillSchedule::bernoulli(procs, rounds, *p, *seed)
+            }
+            FailureConfig::Exponential { rate, seed } => {
+                KillSchedule::exponential(procs, rounds, *rate, *seed)
+            }
+            FailureConfig::RandomAtRound { round, f, seed, protect_root } => {
+                KillSchedule::random_at_round(procs, *round, *f, protect_root.then_some(0), *seed)
+            }
+        }
+    }
+
+    fn from_doc(doc: &Doc) -> Result<FailureConfig> {
+        let Some(mode) = doc.str_of("failures.mode") else {
+            return Ok(FailureConfig::None);
+        };
+        let seed = doc.u64_of("failures.seed").unwrap_or(0);
+        match mode {
+            "none" => Ok(FailureConfig::None),
+            "at" => {
+                let kills = doc
+                    .pairs_of("failures.kills")
+                    .ok_or_else(|| Error::Config("failures.kills must be [[rank, round], ...]".into()))?;
+                Ok(FailureConfig::At { kills })
+            }
+            "bernoulli" => {
+                let p = doc
+                    .f64_of("failures.p")
+                    .ok_or_else(|| Error::Config("failures.p required for bernoulli".into()))?;
+                Ok(FailureConfig::Bernoulli { p, seed })
+            }
+            "exponential" => {
+                let rate = doc
+                    .f64_of("failures.rate")
+                    .ok_or_else(|| Error::Config("failures.rate required for exponential".into()))?;
+                Ok(FailureConfig::Exponential { rate, seed })
+            }
+            "random-at-round" => Ok(FailureConfig::RandomAtRound {
+                round: doc
+                    .usize_of("failures.round")
+                    .ok_or_else(|| Error::Config("failures.round required".into()))?
+                    as u32,
+                f: doc
+                    .usize_of("failures.f")
+                    .ok_or_else(|| Error::Config("failures.f required".into()))?,
+                seed,
+                protect_root: doc.bool_of("failures.protect-root").unwrap_or(false),
+            }),
+            other => Err(Error::Config(format!("unknown failures.mode '{other}'"))),
+        }
+    }
+}
+
+/// The full run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub algo: Algo,
+    pub procs: usize,
+    pub rows_per_proc: usize,
+    pub cols: usize,
+    pub seed: u64,
+    pub backend: Backend,
+    pub artifact_dir: String,
+    pub pjrt_shards: usize,
+    pub verify: bool,
+    pub trace: bool,
+    pub failures: FailureConfig,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            algo: Algo::Redundant,
+            procs: 8,
+            rows_per_proc: 256,
+            cols: 8,
+            seed: 42,
+            backend: Backend::Auto,
+            artifact_dir: "artifacts".into(),
+            pjrt_shards: 2,
+            verify: true,
+            trace: false,
+            failures: FailureConfig::None,
+        }
+    }
+}
+
+/// Keys accepted at the top level (anything else is a config error —
+/// catches typos the way serde's `deny_unknown_fields` would).
+const KNOWN_KEYS: &[&str] = &[
+    "algo",
+    "procs",
+    "rows-per-proc",
+    "cols",
+    "seed",
+    "backend",
+    "artifact-dir",
+    "pjrt-shards",
+    "verify",
+    "trace",
+    "failures.mode",
+    "failures.kills",
+    "failures.p",
+    "failures.rate",
+    "failures.round",
+    "failures.f",
+    "failures.seed",
+    "failures.protect-root",
+];
+
+impl Config {
+    /// Parse from config-file text.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let doc = Doc::parse(text)?;
+        for k in doc.keys() {
+            if !KNOWN_KEYS.contains(&k) {
+                return Err(Error::Config(format!("unknown config key '{k}'")));
+            }
+        }
+        let mut cfg = Config::default();
+        if let Some(a) = doc.str_of("algo") {
+            cfg.algo = a.parse()?;
+        }
+        if let Some(v) = doc.usize_of("procs") {
+            cfg.procs = v;
+        }
+        if let Some(v) = doc.usize_of("rows-per-proc") {
+            cfg.rows_per_proc = v;
+        }
+        if let Some(v) = doc.usize_of("cols") {
+            cfg.cols = v;
+        }
+        if let Some(v) = doc.u64_of("seed") {
+            cfg.seed = v;
+        }
+        if let Some(v) = doc.str_of("backend") {
+            cfg.backend = v.parse()?;
+        }
+        if let Some(v) = doc.str_of("artifact-dir") {
+            cfg.artifact_dir = v.to_string();
+        }
+        if let Some(v) = doc.usize_of("pjrt-shards") {
+            cfg.pjrt_shards = v;
+        }
+        if let Some(v) = doc.bool_of("verify") {
+            cfg.verify = v;
+        }
+        if let Some(v) = doc.bool_of("trace") {
+            cfg.trace = v;
+        }
+        cfg.failures = FailureConfig::from_doc(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Load from a config file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.as_ref().display())))?;
+        Self::from_text(&text)
+    }
+
+    /// Build the executor this config asks for.
+    pub fn executor(&self) -> Result<Executor> {
+        match self.backend {
+            Backend::Host => Ok(Executor::host()),
+            Backend::Pjrt => {
+                Executor::with_artifacts(&self.artifact_dir, Backend::Pjrt, self.pjrt_shards)
+            }
+            Backend::Auto => Ok(Executor::auto(&self.artifact_dir)),
+        }
+    }
+
+    /// Materialize the full `RunSpec` (validates on the way out).
+    pub fn to_spec(&self) -> Result<RunSpec> {
+        let rounds = TreePlan::new(self.procs.max(1)).rounds();
+        let spec = RunSpec::new(self.algo, self.procs, self.rows_per_proc, self.cols)
+            .with_seed(self.seed)
+            .with_schedule(self.failures.schedule(self.procs, rounds))
+            .with_executor(self.executor()?)
+            .with_trace(self.trace)
+            .with_verify(self.verify);
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        let cfg = Config::default();
+        let spec = cfg.to_spec().unwrap();
+        assert_eq!(spec.procs, 8);
+        assert!(spec.verify);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = Config::from_text(
+            r#"
+            algo = "replace"
+            procs = 16
+            rows-per-proc = 128
+            cols = 16
+            seed = 7
+            backend = "host"
+            trace = true
+
+            [failures]
+            mode = "at"
+            kills = [[2, 1], [5, 2]]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.algo, Algo::Replace);
+        assert_eq!(cfg.procs, 16);
+        assert!(cfg.trace);
+        let spec = cfg.to_spec().unwrap();
+        assert_eq!(spec.schedule.entries(), vec![(2, 1), (5, 2)]);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(Config::from_text("bogus = 1").is_err());
+        assert!(Config::from_text("[failures]\nmystery = 2").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_spec() {
+        let cfg = Config { procs: 6, ..Config::default() }; // redundant needs pow2
+        assert!(cfg.to_spec().is_err());
+    }
+
+    #[test]
+    fn failure_modes_materialize() {
+        assert_eq!(FailureConfig::None.schedule(8, 3).remaining(), 0);
+        assert_eq!(
+            FailureConfig::At { kills: vec![(1, 0)] }.schedule(8, 3).entries(),
+            vec![(1, 0)]
+        );
+        assert_eq!(FailureConfig::Bernoulli { p: 1.0, seed: 0 }.schedule(8, 3).remaining(), 8);
+        let rar = FailureConfig::RandomAtRound { round: 1, f: 3, seed: 0, protect_root: true };
+        let entries = rar.schedule(8, 3).entries();
+        assert_eq!(entries.len(), 3);
+        assert!(entries.iter().all(|&(r, s)| r != 0 && s == 1));
+    }
+
+    #[test]
+    fn failure_modes_parse() {
+        let c = Config::from_text("[failures]\nmode = \"bernoulli\"\np = 0.1\nseed = 3").unwrap();
+        assert_eq!(c.failures, FailureConfig::Bernoulli { p: 0.1, seed: 3 });
+        let c = Config::from_text("[failures]\nmode = \"exponential\"\nrate = 0.5").unwrap();
+        assert_eq!(c.failures, FailureConfig::Exponential { rate: 0.5, seed: 0 });
+        let c = Config::from_text(
+            "[failures]\nmode = \"random-at-round\"\nround = 2\nf = 3\nprotect-root = true",
+        )
+        .unwrap();
+        assert_eq!(
+            c.failures,
+            FailureConfig::RandomAtRound { round: 2, f: 3, seed: 0, protect_root: true }
+        );
+        assert!(Config::from_text("[failures]\nmode = \"bernoulli\"").is_err(), "p required");
+        assert!(Config::from_text("[failures]\nmode = \"what\"").is_err());
+    }
+
+    #[test]
+    fn load_from_file() {
+        let tmp = crate::util::TestDir::new();
+        let p = tmp.write("run.conf", "algo = \"sh\"\nprocs = 4\nrows-per-proc = 8\ncols = 4");
+        let cfg = Config::load(p).unwrap();
+        assert_eq!(cfg.algo, Algo::SelfHealing);
+        assert_eq!(cfg.procs, 4);
+    }
+}

@@ -1,0 +1,79 @@
+//! Crate-wide error type.
+//!
+//! `Error::RankFailed` is load-bearing: it is the rust incarnation of the
+//! ULFM error class (`MPI_ERR_PROC_FAILED`) that the paper's Algorithms
+//! 2/3/6 branch on (`if FAIL == f`).
+
+use crate::ulfm::Rank;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// ULFM-style process-failure error: the peer rank is dead.  Returned
+    /// by any communication operation that involves a failed process —
+    /// operations not touching a failed process proceed unknowingly (§II).
+    #[error("peer rank {0} has failed")]
+    RankFailed(Rank),
+
+    /// The communicator was revoked / the world aborted (ABORT semantics).
+    #[error("communicator aborted: {0}")]
+    Aborted(String),
+
+    /// No live replica holds the needed data — more than 2^s − 1 failures.
+    #[error("no live replica for rank {0}'s data")]
+    NoReplica(Rank),
+
+    /// The local process was killed by the fault injector.
+    #[error("process {0} killed by fault injector")]
+    Killed(Rank),
+
+    /// Artifact / manifest problems.
+    #[error("artifacts: {0}")]
+    Artifacts(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Configuration / CLI validation.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Anything else.
+    #[error("{0}")]
+    Other(String),
+}
+
+impl Error {
+    /// True if this is the ULFM "process failed" error class — the
+    /// condition Algorithms 2/3/6 test for after a sendrecv.
+    pub fn is_rank_failure(&self) -> bool {
+        matches!(self, Error::RankFailed(_) | Error::Killed(_))
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_failure_classification() {
+        assert!(Error::RankFailed(3).is_rank_failure());
+        assert!(Error::Killed(0).is_rank_failure());
+        assert!(!Error::NoReplica(1).is_rank_failure());
+        assert!(!Error::Aborted("x".into()).is_rank_failure());
+    }
+
+    #[test]
+    fn display_messages() {
+        assert_eq!(Error::RankFailed(2).to_string(), "peer rank 2 has failed");
+        assert!(Error::NoReplica(5).to_string().contains("replica"));
+    }
+}

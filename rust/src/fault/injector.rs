@@ -1,0 +1,171 @@
+//! Deterministic fault injection.
+//!
+//! The paper's robustness analysis is *step-granular* ("no more than 1
+//! process has failed by the end of step 1, no more than 3 by the end
+//! of step 2, ..."), so kills are injected at exchange-round
+//! boundaries: a schedule entry `(rank, round)` crashes `rank` right
+//! before it would post for exchange round `round` — i.e. the process
+//! completed paper-step `round` (it holds R̃_round) but never takes
+//! part in the round-`round` exchange.  That is exactly Figure 3's
+//! "P2 crashes at the end of the first step".
+//!
+//! Entries are one-shot: a respawned incarnation (Self-Healing) is not
+//! re-killed by the same entry, but *can* be killed by a later entry
+//! for the same rank.
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use crate::ulfm::Rank;
+use crate::util::Rng;
+
+/// One-shot kill schedule shared by all simulated processes.
+#[derive(Debug, Default)]
+pub struct KillSchedule {
+    pending: Mutex<HashSet<(Rank, u32)>>,
+}
+
+impl KillSchedule {
+    /// No failures (fault-free execution).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Explicit list of (rank, round) kills.
+    pub fn at(entries: &[(Rank, u32)]) -> Self {
+        Self { pending: Mutex::new(entries.iter().copied().collect()) }
+    }
+
+    /// Bernoulli model: every (rank, round) pair fails independently
+    /// with probability `p` — the simplest per-step failure model.
+    pub fn bernoulli(procs: usize, rounds: u32, p: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut set = HashSet::new();
+        for rank in 0..procs {
+            for round in 0..rounds {
+                if rng.bool(p) {
+                    set.insert((rank, round));
+                    break; // a process dies at most once per schedule
+                }
+            }
+        }
+        Self { pending: Mutex::new(set) }
+    }
+
+    /// Exponential-lifetime model (Reed et al. [18]): each rank draws a
+    /// lifetime T ~ Exp(rate) in units of steps and dies at the first
+    /// round boundary past T (if within the run).
+    pub fn exponential(procs: usize, rounds: u32, rate: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut set = HashSet::new();
+        for rank in 0..procs {
+            let t = rng.exponential(rate);
+            let round = t.ceil() as u64;
+            if round >= 1 && round <= rounds as u64 {
+                // Dies at boundary `round` — completed `round` steps.
+                set.insert((rank, round as u32));
+            } else if round == 0 {
+                set.insert((rank, 0));
+            }
+        }
+        Self { pending: Mutex::new(set) }
+    }
+
+    /// Exactly `f` distinct ranks die at round boundary `round`
+    /// (never rank `protect`, e.g. keep the tree root alive).
+    pub fn random_at_round(
+        procs: usize,
+        round: u32,
+        f: usize,
+        protect: Option<Rank>,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut pool: Vec<Rank> = (0..procs).filter(|r| Some(*r) != protect).collect();
+        let mut set = HashSet::new();
+        for _ in 0..f.min(pool.len()) {
+            let i = rng.below(pool.len());
+            set.insert((pool.swap_remove(i), round));
+        }
+        Self { pending: Mutex::new(set) }
+    }
+
+    /// Should `rank` die at this round boundary?  Consumes the entry.
+    pub fn fire(&self, rank: Rank, round: u32) -> bool {
+        self.pending.lock().unwrap().remove(&(rank, round))
+    }
+
+    /// Remaining entries (diagnostics).
+    pub fn remaining(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// All scheduled kills, sorted (diagnostics / reports).
+    pub fn entries(&self) -> Vec<(Rank, u32)> {
+        let mut v: Vec<_> = self.pending.lock().unwrap().iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_schedule_fires_once() {
+        let s = KillSchedule::at(&[(2, 1)]);
+        assert!(!s.fire(2, 0));
+        assert!(s.fire(2, 1));
+        assert!(!s.fire(2, 1), "one-shot");
+        assert_eq!(s.remaining(), 0);
+    }
+
+    #[test]
+    fn none_never_fires() {
+        let s = KillSchedule::none();
+        assert!(!s.fire(0, 0));
+        assert_eq!(s.remaining(), 0);
+    }
+
+    #[test]
+    fn bernoulli_deterministic_and_at_most_one_per_rank() {
+        let a = KillSchedule::bernoulli(32, 5, 0.3, 7).entries();
+        let b = KillSchedule::bernoulli(32, 5, 0.3, 7).entries();
+        assert_eq!(a, b, "same seed, same schedule");
+        let mut ranks: Vec<_> = a.iter().map(|(r, _)| *r).collect();
+        ranks.sort_unstable();
+        let before = ranks.len();
+        ranks.dedup();
+        assert_eq!(ranks.len(), before, "at most one death per rank");
+        assert_ne!(a, KillSchedule::bernoulli(32, 5, 0.3, 8).entries());
+    }
+
+    #[test]
+    fn bernoulli_extremes() {
+        assert_eq!(KillSchedule::bernoulli(16, 4, 0.0, 1).remaining(), 0);
+        assert_eq!(KillSchedule::bernoulli(16, 4, 1.0, 1).remaining(), 16);
+    }
+
+    #[test]
+    fn random_at_round_count_and_protection() {
+        let s = KillSchedule::random_at_round(16, 2, 5, Some(0), 3);
+        let e = s.entries();
+        assert_eq!(e.len(), 5);
+        assert!(e.iter().all(|&(r, round)| r != 0 && round == 2));
+    }
+
+    #[test]
+    fn random_at_round_caps_at_pool() {
+        let s = KillSchedule::random_at_round(4, 0, 10, Some(0), 1);
+        assert_eq!(s.remaining(), 3, "cannot kill more than the pool");
+    }
+
+    #[test]
+    fn exponential_rates_scale() {
+        // Higher rate => more deaths within the horizon.
+        let low = KillSchedule::exponential(256, 6, 0.01, 11).remaining();
+        let high = KillSchedule::exponential(256, 6, 0.5, 11).remaining();
+        assert!(high > low, "high {high} <= low {low}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Fault injection: deterministic and stochastic kill schedules plus
+//! the paper's named failure scenarios (Figures 3–5).
+
+pub mod injector;
+pub mod scenario;
+
+pub use injector::KillSchedule;
+pub use scenario::Scenario;

@@ -1,0 +1,127 @@
+//! Named failure scenarios — including the exact executions depicted in
+//! the paper's Figures 3, 4 and 5 (4 processes, P2 crashes at the end
+//! of the first step), plus parametric scenarios the benches sweep.
+
+use crate::tsqr::{Algo, RunSpec};
+use crate::ulfm::Rank;
+
+use super::injector::KillSchedule;
+
+/// A named, reproducible failure scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub algo: Algo,
+    pub procs: usize,
+    pub kills: Vec<(Rank, u32)>,
+}
+
+impl Scenario {
+    /// Figure 3: Redundant TSQR, 4 processes, P2 crashes at the end of
+    /// step 1 (it computed R̃₁ but never exchanges at round 1).
+    /// Expected: P0 exits (needed P2), P1 & P3 finish with the final R.
+    pub fn fig3() -> Self {
+        Scenario {
+            name: "fig3",
+            description: "Redundant TSQR, 4 procs, P2 dies end of step 1 → \
+                          P0 gives up, P1 & P3 hold final R",
+            algo: Algo::Redundant,
+            procs: 4,
+            kills: vec![(2, 1)],
+        }
+    }
+
+    /// Figure 4: Replace TSQR, same failure. Expected: P0 finds replica
+    /// P3 and finishes; P1 & P3 finish too — root P0 holds R.
+    pub fn fig4() -> Self {
+        Scenario {
+            name: "fig4",
+            description: "Replace TSQR, 4 procs, P2 dies end of step 1 → \
+                          P0 exchanges with replica P3; P0, P1, P3 hold final R",
+            algo: Algo::Replace,
+            procs: 4,
+            kills: vec![(2, 1)],
+        }
+    }
+
+    /// Figure 5: Self-Healing TSQR, same failure. Expected: P2 is
+    /// respawned, recovers R̃₁ from P3, and ALL FOUR processes finish
+    /// with the final R (world restored to full size).
+    pub fn fig5() -> Self {
+        Scenario {
+            name: "fig5",
+            description: "Self-Healing TSQR, 4 procs, P2 dies end of step 1 → \
+                          respawned from P3's replica; all 4 ranks hold final R",
+            algo: Algo::SelfHealing,
+            procs: 4,
+            kills: vec![(2, 1)],
+        }
+    }
+
+    /// Baseline TSQR with the same failure — shows the ABORT behaviour
+    /// the fault-tolerant variants avoid.
+    pub fn baseline_abort() -> Self {
+        Scenario {
+            name: "baseline-abort",
+            description: "Plain TSQR, 4 procs, P2 dies end of step 1 → \
+                          computation aborts (root never gets R)",
+            algo: Algo::Baseline,
+            procs: 4,
+            kills: vec![(2, 1)],
+        }
+    }
+
+    /// All named scenarios.
+    pub fn all() -> Vec<Scenario> {
+        vec![Self::fig3(), Self::fig4(), Self::fig5(), Self::baseline_abort()]
+    }
+
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Self::all().into_iter().find(|s| s.name == name)
+    }
+
+    /// Materialize a run spec (tracing on — scenarios exist to be read).
+    pub fn spec(&self, rows_per_proc: usize, cols: usize) -> RunSpec {
+        RunSpec::new(self.algo, self.procs, rows_per_proc, cols)
+            .with_schedule(KillSchedule::at(&self.kills))
+            .with_trace(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_complete_and_named_uniquely() {
+        let all = Scenario::all();
+        assert_eq!(all.len(), 4);
+        let mut names: Vec<_> = all.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 4);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Scenario::by_name("fig4").unwrap().algo, Algo::Replace);
+        assert!(Scenario::by_name("fig9").is_none());
+    }
+
+    #[test]
+    fn figure_scenarios_match_paper_setup() {
+        for s in [Scenario::fig3(), Scenario::fig4(), Scenario::fig5()] {
+            assert_eq!(s.procs, 4);
+            assert_eq!(s.kills, vec![(2, 1)], "P2 dies at end of step 1");
+        }
+    }
+
+    #[test]
+    fn spec_materialization() {
+        let spec = Scenario::fig3().spec(16, 4);
+        assert_eq!(spec.procs, 4);
+        assert!(spec.collect_trace);
+        assert_eq!(spec.schedule.entries(), vec![(2, 1)]);
+    }
+}

@@ -1,0 +1,53 @@
+//! # ft-tsqr — Fault-Tolerant Communication-Avoiding TSQR
+//!
+//! Production-grade reproduction of *"Exploiting Redundant Computation
+//! in Communication-Avoiding Algorithms for Algorithm-Based Fault
+//! Tolerance"* (Camille Coti, 2015).
+//!
+//! The paper's observation: communication-avoiding algorithms (TSQR)
+//! already perform redundant computation; letting the "idle half" of
+//! the reduction tree keep computing turns that redundancy into
+//! fault tolerance for free.  Three algorithms result — Redundant,
+//! Replace and Self-Healing TSQR — all tolerating `2^s − 1` failures
+//! by step `s`.
+//!
+//! ## Architecture (three layers, python never at runtime)
+//!
+//! * **L1 (Pallas)** `python/compile/kernels/` — Householder QR leaf +
+//!   structure-aware TSQR combine kernels.
+//! * **L2 (JAX)** `python/compile/model.py` — jitted graphs, AOT-lowered
+//!   to HLO text (`make artifacts`).
+//! * **L3 (this crate)** — the simulated ULFM world, the four TSQR
+//!   algorithms, fault injection, robustness analysis, benches and CLI;
+//!   kernels execute through PJRT ([`runtime`]) with a pure-rust
+//!   fallback ([`linalg`]).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ft_tsqr::fault::KillSchedule;
+//! use ft_tsqr::runtime::Executor;
+//! use ft_tsqr::tsqr::{Algo, RunSpec};
+//!
+//! // Redundant TSQR on 8 simulated processes, one failure at step 1.
+//! let spec = RunSpec::new(Algo::Redundant, 8, 128, 8)
+//!     .with_executor(Executor::auto("artifacts"))
+//!     .with_schedule(KillSchedule::at(&[(5, 1)]));
+//! let result = ft_tsqr::tsqr::run(&spec).unwrap();
+//! assert!(result.success());
+//! ```
+
+pub mod analysis;
+pub mod checkpoint;
+pub mod config;
+pub mod error;
+pub mod fault;
+pub mod linalg;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod tsqr;
+pub mod ulfm;
+pub mod util;
+
+pub use error::{Error, Result};

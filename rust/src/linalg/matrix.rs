@@ -1,0 +1,340 @@
+//! Dense row-major matrix — the payload type of the whole simulation.
+//!
+//! Element type is `f32` to match the AOT artifacts (the manifest is
+//! emitted with `dtype: f32`); the verification oracles accumulate in
+//! `f64` where it matters.
+
+use std::fmt;
+
+/// Dense row-major `f32` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity-like rectangular matrix (ones on the main diagonal).
+    pub fn eye(rows: usize, cols: usize) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows.min(cols) {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major buffer. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length != rows*cols");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Bytes of payload — what a sendrecv of this matrix "costs".
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Row slice view.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column j.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Sub-block of consecutive rows [r0, r1).
+    pub fn row_block(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix::from_vec(r1 - r0, self.cols, self.data[r0 * self.cols..r1 * self.cols].to_vec())
+    }
+
+    /// Vertical concatenation [self; other].
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "vstack: column mismatch");
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Matrix::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Matrix product (f64 accumulation — this is a verification path,
+    /// not the hot path; the hot path runs matmuls through PJRT).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul: inner dim mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)] as f64;
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    let v = out[(i, j)] as f64 + aik * other[(k, j)] as f64;
+                    out[(i, j)] = v as f32;
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm (f64 accumulation).
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.shape(), other.shape(), "max_abs_diff: shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ((a as f64) - (b as f64)).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// ‖A − B‖_F / ‖B‖_F (relative error against reference B).
+    pub fn rel_fro_err(&self, reference: &Matrix) -> f64 {
+        let den = reference.fro_norm();
+        let mut num = 0.0f64;
+        for (a, b) in self.data.iter().zip(&reference.data) {
+            let d = (*a as f64) - (*b as f64);
+            num += d * d;
+        }
+        if den == 0.0 {
+            num.sqrt()
+        } else {
+            num.sqrt() / den
+        }
+    }
+
+    /// True if strictly-lower-triangular part is (near) zero.
+    pub fn is_upper_triangular(&self, atol: f64) -> bool {
+        for i in 0..self.rows {
+            for j in 0..self.cols.min(i) {
+                if (self[(i, j)] as f64).abs() > atol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Keep the upper triangle, zero below the diagonal.
+    pub fn triu(&self) -> Matrix {
+        Matrix::from_fn(self.rows, self.cols, |i, j| if j >= i { self[(i, j)] } else { 0.0 })
+    }
+
+    /// Canonical R: flip row signs so every diagonal entry is >= 0.
+    /// (R of a QR factorization is unique only up to row signs; every
+    /// cross-algorithm comparison in the test/bench suites uses this.)
+    pub fn canonicalize_r(&self) -> Matrix {
+        let mut out = self.clone();
+        for i in 0..self.rows.min(self.cols) {
+            if out[(i, i)] < 0.0 {
+                for j in 0..self.cols {
+                    out[(i, j)] = -out[(i, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Deterministic pseudo-random matrix (xorshift-based; seeds the
+    /// workload generators without pulling `rand` into the core type).
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        Matrix::from_fn(rows, cols, |_, _| {
+            // xorshift64*
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            let bits = state.wrapping_mul(0x2545F4914F6CDD1D);
+            // Map to (-1, 1): take the top 24 bits as a fraction.
+            let frac = ((bits >> 40) as f64) / ((1u64 << 24) as f64);
+            (2.0 * frac - 1.0) as f32
+        })
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(8);
+        for i in 0..show {
+            write!(f, "  [")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4}", self[(i, j)])?;
+            }
+            writeln!(f, "{}]", if self.cols > 8 { " ..." } else { "" })?;
+        }
+        if self.rows > show {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_eye_shapes() {
+        let z = Matrix::zeros(3, 2);
+        assert_eq!(z.shape(), (3, 2));
+        assert!(z.data().iter().all(|&x| x == 0.0));
+        let e = Matrix::eye(3, 3);
+        assert_eq!(e[(0, 0)], 1.0);
+        assert_eq!(e[(0, 1)], 0.0);
+        assert_eq!(e[(2, 2)], 1.0);
+    }
+
+    #[test]
+    fn from_fn_indexing_row_major() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.data(), &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        assert_eq!(m[(1, 2)], 12.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_length_checked() {
+        Matrix::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn vstack_and_row_block_roundtrip() {
+        let a = Matrix::random(4, 3, 1);
+        let b = Matrix::random(2, 3, 2);
+        let s = a.vstack(&b);
+        assert_eq!(s.shape(), (6, 3));
+        assert_eq!(s.row_block(0, 4), a);
+        assert_eq!(s.row_block(4, 6), b);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::random(5, 4, 3);
+        let i4 = Matrix::eye(4, 4);
+        assert!(a.matmul(&i4).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::random(3, 5, 9);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn fro_norm_matches_manual() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triu_and_is_upper_triangular() {
+        let a = Matrix::random(4, 4, 5);
+        assert!(!a.is_upper_triangular(1e-9));
+        assert!(a.triu().is_upper_triangular(0.0));
+    }
+
+    #[test]
+    fn canonicalize_makes_diag_nonneg() {
+        let mut r = Matrix::eye(3, 3);
+        r[(1, 1)] = -2.0;
+        r[(1, 2)] = 4.0;
+        let c = r.canonicalize_r();
+        assert_eq!(c[(1, 1)], 2.0);
+        assert_eq!(c[(1, 2)], -4.0);
+        assert_eq!(c[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let a = Matrix::random(10, 10, 42);
+        let b = Matrix::random(10, 10, 42);
+        assert_eq!(a, b);
+        assert!(a.data().iter().all(|&x| x > -1.0 && x < 1.0));
+        assert!(a.data().iter().any(|&x| x != 0.0));
+        assert_ne!(a, Matrix::random(10, 10, 43));
+    }
+
+    #[test]
+    fn rel_fro_err_zero_for_equal() {
+        let a = Matrix::random(6, 3, 7);
+        assert_eq!(a.rel_fro_err(&a), 0.0);
+    }
+}

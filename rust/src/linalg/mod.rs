@@ -1,0 +1,9 @@
+//! Host-side dense linear algebra: the `Matrix` payload type plus a
+//! pure-rust Householder QR used as verification oracle and as the
+//! fallback backend for shapes outside the AOT manifest.
+
+pub mod matrix;
+pub mod qr;
+
+pub use matrix::Matrix;
+pub use qr::{PackedQr, backsolve, combine_r, householder_qr, qr_r, qr_residuals};

@@ -1,0 +1,269 @@
+//! Host-side Householder QR — the rust-native oracle and fallback.
+//!
+//! Mirrors the L1 Pallas kernels exactly (same LAPACK `geqrf` packed
+//! layout, same sign convention) so that:
+//!   * `cargo test` has a full correctness oracle with no artifacts,
+//!   * the runtime can fall back for shapes outside the AOT manifest,
+//!   * the PJRT path is cross-checked against an independent
+//!     implementation (integration_runtime.rs).
+//!
+//! Internally accumulates in `f64` and stores `f32`, which keeps the
+//! oracle at least as accurate as the kernels it validates.
+
+use super::matrix::Matrix;
+
+/// Packed Householder factorization: R above/on the diagonal, reflector
+/// tails below, plus the `tau` coefficients — LAPACK `geqrf` layout and
+/// exactly the `[packed, tau]` pair the AOT `leaf_qr` artifact returns.
+#[derive(Clone, Debug)]
+pub struct PackedQr {
+    pub packed: Matrix,
+    pub tau: Vec<f32>,
+}
+
+impl PackedQr {
+    /// Extract the (n, n) upper-triangular R factor.
+    pub fn r(&self) -> Matrix {
+        let n = self.packed.cols();
+        self.packed.row_block(0, n).triu()
+    }
+
+    /// Materialize the thin Q (m, n).
+    pub fn q(&self) -> Matrix {
+        let (m, n) = self.packed.shape();
+        self.apply_q(&Matrix::eye(m, n))
+    }
+
+    /// Q @ B — reflectors applied in reverse order.
+    pub fn apply_q(&self, b: &Matrix) -> Matrix {
+        let n = self.packed.cols();
+        let mut out = b.clone();
+        for j in (0..n).rev() {
+            self.apply_reflector(j, &mut out);
+        }
+        out
+    }
+
+    /// Qᵀ @ B — reflectors applied in forward order.
+    pub fn apply_qt(&self, b: &Matrix) -> Matrix {
+        let n = self.packed.cols();
+        let mut out = b.clone();
+        for j in 0..n {
+            self.apply_reflector(j, &mut out);
+        }
+        out
+    }
+
+    /// Apply H_j = I − τ_j v_j v_jᵀ to `out` in place (H is symmetric,
+    /// so the same routine serves Q and Qᵀ; only the order differs).
+    fn apply_reflector(&self, j: usize, out: &mut Matrix) {
+        let (m, k) = out.shape();
+        let tau = self.tau[j] as f64;
+        if tau == 0.0 {
+            return;
+        }
+        // v_j: 1 at row j, packed tail below.
+        for c in 0..k {
+            let mut dot = out[(j, c)] as f64; // v[j] = 1
+            for i in j + 1..m {
+                dot += self.packed[(i, j)] as f64 * out[(i, c)] as f64;
+            }
+            let w = tau * dot;
+            out[(j, c)] = (out[(j, c)] as f64 - w) as f32;
+            for i in j + 1..m {
+                out[(i, c)] = (out[(i, c)] as f64 - self.packed[(i, j)] as f64 * w) as f32;
+            }
+        }
+    }
+}
+
+/// Unblocked Householder QR of a tall-skinny panel (m >= n).
+///
+/// Panics if the panel is wide (m < n) — the TSQR plan guarantees
+/// tall-skinny leaves, and the Pallas kernel enforces the same.
+pub fn householder_qr(a: &Matrix) -> PackedQr {
+    let (m, n) = a.shape();
+    assert!(m >= n, "householder_qr: panel must be tall-skinny, got {m}x{n}");
+    // Work in f64 end-to-end, cast once at the end.
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let idx = |i: usize, j: usize| i * n + j;
+    let mut tau = vec![0.0f32; n];
+
+    for j in 0..n {
+        // norm of column j, rows j..m
+        let mut norm2 = 0.0f64;
+        for i in j..m {
+            norm2 += w[idx(i, j)] * w[idx(i, j)];
+        }
+        let normx = norm2.sqrt();
+        let x0 = w[idx(j, j)];
+        if normx == 0.0 {
+            tau[j] = 0.0; // zero column: identity reflector
+            continue;
+        }
+        let beta = if x0 >= 0.0 { -normx } else { normx };
+        let denom = x0 - beta;
+        let tj = (beta - x0) / beta;
+        tau[j] = tj as f32;
+        // v tail = x[j+1..] / denom (v[j] = 1 implicit).
+        for i in j + 1..m {
+            w[idx(i, j)] /= denom;
+        }
+        // Apply H to trailing columns j+1..n.
+        for c in j + 1..n {
+            let mut dot = w[idx(j, c)];
+            for i in j + 1..m {
+                dot += w[idx(i, j)] * w[idx(i, c)];
+            }
+            let s = tj * dot;
+            w[idx(j, c)] -= s;
+            for i in j + 1..m {
+                w[idx(i, c)] -= w[idx(i, j)] * s;
+            }
+        }
+        // Diagonal becomes beta (packed layout keeps the tail below).
+        w[idx(j, j)] = beta;
+    }
+
+    let packed = Matrix::from_vec(m, n, w.into_iter().map(|x| x as f32).collect());
+    PackedQr { packed, tau }
+}
+
+/// Just the canonical R factor (diag >= 0) of a tall-skinny panel.
+pub fn qr_r(a: &Matrix) -> Matrix {
+    householder_qr(a).r().canonicalize_r()
+}
+
+/// TSQR combine on the host: R of the stacked [r_top; r_bot].
+pub fn combine_r(r_top: &Matrix, r_bot: &Matrix) -> Matrix {
+    householder_qr(&r_top.vstack(r_bot)).r()
+}
+
+/// Upper-triangular back-substitution R x = b, b (n, k).
+pub fn backsolve(r: &Matrix, b: &Matrix) -> Matrix {
+    let n = r.rows();
+    assert_eq!(r.cols(), n, "backsolve: R must be square");
+    assert_eq!(b.rows(), n, "backsolve: rhs rows must match R");
+    let k = b.cols();
+    let mut x = Matrix::zeros(n, k);
+    for c in 0..k {
+        for i in (0..n).rev() {
+            let mut acc = b[(i, c)] as f64;
+            for j in i + 1..n {
+                acc -= r[(i, j)] as f64 * x[(j, c)] as f64;
+            }
+            x[(i, c)] = (acc / r[(i, i)] as f64) as f32;
+        }
+    }
+    x
+}
+
+/// Reference full-matrix QR residuals: (‖A − QR‖_F/‖A‖_F, ‖I − QᵀQ‖_F).
+pub fn qr_residuals(a: &Matrix, q: &Matrix, r: &Matrix) -> (f64, f64) {
+    let recon = q.matmul(r);
+    let rel = recon.rel_fro_err(a);
+    // Note rel_fro_err(self=recon, reference=a) = ||recon - a||/||a||.
+    let n = q.cols();
+    let qtq = q.transpose().matmul(q);
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let e = if i == j { 1.0 } else { 0.0 };
+            let d = qtq[(i, j)] as f64 - e;
+            acc += d * d;
+        }
+    }
+    (rel, acc.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+
+    #[test]
+    fn qr_reconstructs_a() {
+        for (m, n) in [(4, 4), (16, 4), (33, 7), (128, 16), (5, 1)] {
+            let a = Matrix::random(m, n, (m * 31 + n) as u64);
+            let f = householder_qr(&a);
+            let (rel, ortho) = qr_residuals(&a, &f.q(), &f.r());
+            assert!(rel < 1e-5, "recon {m}x{n}: {rel}");
+            assert!(ortho < 1e-4, "ortho {m}x{n}: {ortho}");
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let a = Matrix::random(20, 6, 7);
+        assert!(householder_qr(&a).r().is_upper_triangular(0.0));
+    }
+
+    #[test]
+    fn qr_of_identity_is_identity() {
+        let f = householder_qr(&Matrix::eye(5, 5));
+        assert!(f.r().canonicalize_r().max_abs_diff(&Matrix::eye(5, 5)) < 1e-6);
+    }
+
+    #[test]
+    fn zero_matrix_does_not_nan() {
+        let f = householder_qr(&Matrix::zeros(8, 3));
+        assert!(f.packed.data().iter().all(|x| x.is_finite()));
+        assert!(f.tau.iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn combine_matches_direct_qr_of_stack() {
+        let r1 = qr_r(&Matrix::random(12, 4, 1));
+        let r2 = qr_r(&Matrix::random(12, 4, 2));
+        let combined = combine_r(&r1, &r2).canonicalize_r();
+        let direct = qr_r(&r1.vstack(&r2));
+        assert!(combined.max_abs_diff(&direct) < 1e-5);
+    }
+
+    #[test]
+    fn tsqr_tree_equals_direct_qr() {
+        // 4-leaf host TSQR == QR of the whole matrix (the invariant the
+        // entire paper rests on).
+        let a = Matrix::random(64, 8, 99);
+        let rs: Vec<Matrix> = (0..4).map(|i| qr_r(&a.row_block(i * 16, (i + 1) * 16))).collect();
+        let r01 = combine_r(&rs[0], &rs[1]);
+        let r23 = combine_r(&rs[2], &rs[3]);
+        let root = combine_r(&r01.canonicalize_r(), &r23.canonicalize_r()).canonicalize_r();
+        assert!(root.max_abs_diff(&qr_r(&a)) < 1e-4);
+    }
+
+    #[test]
+    fn backsolve_solves() {
+        let r = qr_r(&Matrix::random(16, 8, 3));
+        let xt = Matrix::random(8, 2, 4);
+        let b = r.matmul(&xt);
+        let x = backsolve(&r, &b);
+        assert!(x.max_abs_diff(&xt) < 1e-3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wide_panel_rejected() {
+        householder_qr(&Matrix::zeros(3, 5));
+    }
+
+    #[test]
+    fn apply_qt_then_q_roundtrip() {
+        let a = Matrix::random(24, 6, 11);
+        let f = householder_qr(&a);
+        let b = Matrix::random(24, 3, 12);
+        let roundtrip = f.apply_q(&f.apply_qt(&b));
+        assert!(roundtrip.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn least_squares_via_qr() {
+        let a = Matrix::random(60, 5, 21);
+        let xt = Matrix::random(5, 1, 22);
+        let b = a.matmul(&xt);
+        let f = householder_qr(&a);
+        let qtb = f.apply_qt(&b);
+        let x = backsolve(&f.r(), &qtb.row_block(0, 5));
+        assert!(x.max_abs_diff(&xt) < 1e-2);
+    }
+}

@@ -1,0 +1,311 @@
+//! `repro` — the ft-tsqr command-line launcher.
+//!
+//! Subcommands:
+//! * `run`       one factorization (config file and/or flags)
+//! * `trace`     replay a named scenario (paper Figures 1–5) and print
+//!               the execution trace
+//! * `sweep`     robustness Monte-Carlo over failure counts
+//! * `validate`  check the paper's 2^s − 1 bounds against sampled
+//!               failure patterns
+//! * `info`      artifact manifest / backend diagnostics
+//!
+//! Argument parsing is hand-rolled (`--flag value`), since the vendored
+//! crate set has no clap; see `Args` below.
+
+use ft_tsqr::analysis::{SurvivalSweep, max_tolerated_by_step};
+use ft_tsqr::config::{Config, FailureConfig};
+use ft_tsqr::fault::Scenario;
+use ft_tsqr::report::{Table, fmt_f, fmt_prob};
+use ft_tsqr::runtime::{Executor, Manifest};
+use ft_tsqr::tsqr::{Algo, TreePlan, run};
+use ft_tsqr::{Error, Result};
+
+const USAGE: &str = "\
+repro — fault-tolerant communication-avoiding TSQR (Coti 2015)
+
+USAGE:
+  repro run      [--config FILE] [--algo A] [--procs P] [--rows-per-proc R]
+                 [--cols N] [--seed S] [--backend B] [--kill r@s,r@s] [--trace]
+  repro trace    <fig3|fig4|fig5|baseline-abort> [--rows-per-proc R] [--cols N]
+  repro sweep    [--algo A] [--procs P] [--trials T]
+  repro validate [--procs P] [--trials T]
+  repro info     [--artifact-dir DIR]
+
+  A: baseline|redundant|replace|self-healing|checkpointed
+  B: pjrt|host|auto
+";
+
+/// Tiny `--key value` / `--flag` parser.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // boolean flags take no value; everything else takes one
+                if matches!(name, "trace" | "help") {
+                    flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?;
+                    flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn parse_flag<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| Error::Config(format!("bad --{name} '{v}': {e}"))),
+        }
+    }
+}
+
+fn parse_kills(s: &str) -> Result<Vec<(usize, u32)>> {
+    s.split(',')
+        .filter(|t| !t.is_empty())
+        .map(|tok| {
+            let (r, step) = tok
+                .split_once('@')
+                .ok_or_else(|| Error::Config(format!("bad kill '{tok}', want rank@round")))?;
+            Ok((
+                r.trim().parse().map_err(|e| Error::Config(format!("bad rank '{r}': {e}")))?,
+                step.trim()
+                    .parse()
+                    .map_err(|e| Error::Config(format!("bad round '{step}': {e}")))?,
+            ))
+        })
+        .collect()
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    if let Some(a) = args.parse_flag::<Algo>("algo")? {
+        cfg.algo = a;
+    }
+    if let Some(p) = args.parse_flag::<usize>("procs")? {
+        cfg.procs = p;
+    }
+    if let Some(r) = args.parse_flag::<usize>("rows-per-proc")? {
+        cfg.rows_per_proc = r;
+    }
+    if let Some(c) = args.parse_flag::<usize>("cols")? {
+        cfg.cols = c;
+    }
+    if let Some(s) = args.parse_flag::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.parse()?;
+    }
+    if let Some(k) = args.get("kill") {
+        cfg.failures = FailureConfig::At { kills: parse_kills(k)? };
+    }
+    cfg.trace |= args.get("trace").is_some();
+
+    let spec = cfg.to_spec()?;
+    let result = run(&spec)?;
+
+    println!(
+        "algo={} procs={} matrix={}x{} backend={:?}",
+        cfg.algo.name(),
+        cfg.procs,
+        cfg.procs * cfg.rows_per_proc,
+        cfg.cols,
+        spec.executor.backend(),
+    );
+    if cfg.trace {
+        println!("{}", result.trace.render(cfg.procs, TreePlan::new(cfg.procs).rounds()));
+    }
+    println!(
+        "success={} holders={:?} dead={} messages={} bytes={} respawns={} wall={:?}",
+        result.success(),
+        result.r_holders,
+        result.dead_count(),
+        result.metrics.messages,
+        result.metrics.bytes,
+        result.metrics.respawns,
+        result.wall,
+    );
+    if let Some(v) = &result.verification {
+        println!(
+            "verify: rel_fro_err={} max_abs_err={} upper_triangular={} ok={}",
+            fmt_f(v.rel_fro_err),
+            fmt_f(v.max_abs_err),
+            v.upper_triangular,
+            v.ok
+        );
+    }
+    if result.holder_disagreement > 0.0 {
+        println!("holder_disagreement={}", fmt_f(result.holder_disagreement));
+    }
+    if !result.success() {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::Config("trace needs a scenario name".into()))?;
+    let sc = Scenario::by_name(name).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown scenario '{name}'; available: {}",
+            Scenario::all().iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+        ))
+    })?;
+    let rows = args.parse_flag::<usize>("rows-per-proc")?.unwrap_or(64);
+    let cols = args.parse_flag::<usize>("cols")?.unwrap_or(4);
+    println!("# {} — {}", sc.name, sc.description);
+    let spec = sc.spec(rows, cols).with_executor(Executor::auto("artifacts"));
+    let result = run(&spec)?;
+    println!("{}", result.trace.render(sc.procs, TreePlan::new(sc.procs).rounds()));
+    println!("success={} holders={:?}", result.success(), result.r_holders);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let algo = args.parse_flag::<Algo>("algo")?.unwrap_or(Algo::Replace);
+    let procs = args.parse_flag::<usize>("procs")?.unwrap_or(16);
+    let trials = args.parse_flag::<u64>("trials")?.unwrap_or(2000);
+    if !procs.is_power_of_two() {
+        return Err(Error::Config("sweep needs a power-of-two world".into()));
+    }
+    let rounds = TreePlan::new(procs).rounds();
+    let sweep = SurvivalSweep::new(algo, procs).with_trials(trials);
+    let mut table = Table::new(
+        format!("P(success) — {} on {procs} procs ({trials} trials/cell)", algo.name()),
+        &["round", "bound 2^s-1", "f=1", "f=2", "f=4", "f=8"],
+    );
+    for s in 1..rounds {
+        let mut row = vec![s.to_string(), max_tolerated_by_step(s).to_string()];
+        for f in [1usize, 2, 4, 8] {
+            let est = sweep.at_round(s, f);
+            row.push(fmt_prob(est.probability(), est.ci95()));
+        }
+        table.row(row);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let procs = args.parse_flag::<usize>("procs")?.unwrap_or(16);
+    let trials = args.parse_flag::<u64>("trials")?.unwrap_or(2000);
+    if !procs.is_power_of_two() {
+        return Err(Error::Config("validate needs a power-of-two world".into()));
+    }
+    let rounds = TreePlan::new(procs).rounds();
+    println!("Validating §III robustness bounds on P={procs} ({trials} samples/cell)\n");
+    let mut table = Table::new(
+        "Within-bound survival (must be 1.000 for replace & self-healing)",
+        &["algo", "round s", "f = 2^s - 1", "P(success)"],
+    );
+    let mut all_ok = true;
+    for algo in [Algo::Redundant, Algo::Replace, Algo::SelfHealing] {
+        let sweep = SurvivalSweep::new(algo, procs).with_trials(trials);
+        for s in 1..rounds {
+            let f = max_tolerated_by_step(s) as usize;
+            let est = sweep.at_round(s, f);
+            let p = est.probability();
+            if algo != Algo::Redundant && p < 1.0 {
+                all_ok = false;
+            }
+            table.row(vec![
+                algo.name().into(),
+                s.to_string(),
+                f.to_string(),
+                fmt_prob(p, est.ci95()),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    println!(
+        "\nNote: Redundant TSQR guarantees the bound for the *data* (2^s copies\n\
+         exist) but its give-up cascade can eliminate every process under\n\
+         adversarial within-bound patterns — see EXPERIMENTS.md §TAB-R1."
+    );
+    if !all_ok {
+        return Err(Error::Other("bound violated for replace/self-healing".into()));
+    }
+    println!("replace & self-healing: bound holds on every sampled pattern ✓");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifact-dir").unwrap_or("artifacts");
+    match Manifest::load(dir) {
+        Ok(m) => {
+            println!("artifacts: {} entries in {dir} (dtype {})", m.len(), m.dtype);
+            let mut names: Vec<&str> = m.names().collect();
+            names.sort_unstable();
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => {
+            println!("no artifacts ({e}); the host backend remains available");
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(1);
+        }
+    };
+    if args.get("help").is_some() || args.positional.is_empty() {
+        print!("{USAGE}");
+        std::process::exit(if args.positional.is_empty() && args.get("help").is_none() {
+            1
+        } else {
+            0
+        });
+    }
+    let result = match args.positional[0].as_str() {
+        "run" => cmd_run(&args),
+        "trace" => cmd_trace(&args),
+        "sweep" => cmd_sweep(&args),
+        "validate" => cmd_validate(&args),
+        "info" => cmd_info(&args),
+        other => Err(Error::Config(format!("unknown command '{other}'\n\n{USAGE}"))),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

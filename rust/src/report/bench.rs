@@ -1,0 +1,94 @@
+//! Minimal benchmarking harness (the vendored crate set has no
+//! criterion): warmup + N timed iterations, reporting min/median/mean.
+//! Every `rust/benches/*.rs` target builds its tables with this.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub iters: u32,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl Sample {
+    pub fn median_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+    /// Pretty duration with adaptive unit.
+    pub fn fmt_median(&self) -> String {
+        fmt_duration(self.median)
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs then `iters` measured runs.
+pub fn bench(warmup: u32, iters: u32, mut f: impl FnMut()) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / iters.max(1);
+    Sample { iters, min, median, mean }
+}
+
+/// Quick-mode switch: `BENCH_QUICK=1` shrinks iteration counts so the
+/// full `cargo bench` suite stays tractable in CI.
+pub fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Pick an iteration count depending on quick mode.
+pub fn iters(full: u32, quick_n: u32) -> u32 {
+    if quick() { quick_n } else { full }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut count = 0u64;
+        let s = bench(1, 5, || {
+            count += 1;
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(count, 6, "warmup + iters");
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median.as_nanos() > 0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(Duration::from_nanos(50)).ends_with("ns"));
+        assert!(fmt_duration(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+}

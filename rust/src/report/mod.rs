@@ -1,0 +1,170 @@
+//! Table/figure writers used by the benches and the CLI: aligned text
+//! to stdout (what the paper's tables look like) plus CSV for plotting.
+
+pub mod bench;
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the arity mismatches the header (tables
+    /// are built by our own benches — a mismatch is a bug).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity != header arity");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as aligned text.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("| ");
+            for i in 0..cols {
+                let _ = write!(s, "{:>w$} | ", cells[i], w = widths[i]);
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<w$}|", "", w = w + 2);
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (RFC-4180-ish; our cells never contain commas or
+    /// quotes, but escape defensively anyway).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV next to the bench outputs (`dir/<slug>.csv`).
+    pub fn save_csv(&self, dir: impl AsRef<Path>) -> Result<std::path::PathBuf> {
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .map_err(|e| Error::Other(format!("mkdir {}: {e}", dir.display())))?;
+        let path = dir.join(format!("{slug}.csv"));
+        std::fs::write(&path, self.to_csv())
+            .map_err(|e| Error::Other(format!("write {}: {e}", path.display())))?;
+        Ok(path)
+    }
+}
+
+/// Conventional output directory for bench-generated tables.
+pub const REPORT_DIR: &str = "target/reports";
+
+/// Format a float tersely for tables.
+pub fn fmt_f(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 0.01 && x.abs() < 1000.0 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+/// Format a probability with its 95% CI.
+pub fn fmt_prob(p: f64, ci: f64) -> String {
+    format!("{p:.3}±{ci:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("Demo", &["algo", "p"]);
+        t.row(vec!["baseline".into(), "1.0".into()]);
+        t.row(vec!["sh".into(), "0.5".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("baseline"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[1].len(), lines[3].len(), "aligned rows");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        Table::new("x", &["a", "b"]).row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("c", &["a"]);
+        t.row(vec!["has,comma".into()]);
+        assert!(t.to_csv().contains("\"has,comma\""));
+    }
+
+    #[test]
+    fn save_csv_slugifies() {
+        let tmp = crate::util::TestDir::new();
+        let mut t = Table::new("TAB-R1: Survival", &["x"]);
+        t.row(vec!["1".into()]);
+        let p = t.save_csv(tmp.path()).unwrap();
+        assert!(p.file_name().unwrap().to_str().unwrap().starts_with("tab_r1"));
+        assert!(p.exists());
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(fmt_f(0.0), "0");
+        assert_eq!(fmt_f(0.5), "0.500");
+        assert!(fmt_f(1e-9).contains('e'));
+    }
+}

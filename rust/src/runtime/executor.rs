@@ -1,0 +1,303 @@
+//! Typed kernel entry points over the PJRT service, with a host-linalg
+//! fallback for shapes outside the AOT manifest.
+//!
+//! Every simulated process holds a cheap `Executor` clone and calls
+//! `leaf_qr` / `combine` / ... — it never sees HLO files or literals.
+//! Dispatch policy (`Backend`):
+//!   * `Pjrt` — artifacts only; error if a shape is missing (strict mode
+//!     for the integration tests and benches).
+//!   * `Host` — pure-rust Householder path (no artifacts needed).
+//!   * `Auto` — PJRT when the manifest has the shape, host otherwise
+//!     (the default for examples: works out of the box, accelerates
+//!     when `make artifacts` has run).
+
+use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::linalg::{Matrix, PackedQr, householder_qr};
+
+use super::manifest::Manifest;
+use super::service::PjrtService;
+
+/// Which compute path executes kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Pjrt,
+    Host,
+    Auto,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "pjrt" => Ok(Backend::Pjrt),
+            "host" => Ok(Backend::Host),
+            "auto" => Ok(Backend::Auto),
+            _ => Err(Error::Config(format!("unknown backend '{s}' (pjrt|host|auto)"))),
+        }
+    }
+}
+
+/// Result of a leaf factorization: R plus the implicit-Q representation.
+#[derive(Debug, Clone)]
+pub struct Factorization {
+    pub r: Matrix,
+    pub packed: Matrix,
+    pub tau: Matrix, // (n, 1)
+}
+
+#[derive(Default, Debug)]
+pub struct ExecutorStats {
+    pub pjrt_calls: AtomicU64,
+    pub host_calls: AtomicU64,
+}
+
+/// Shared kernel executor. `Clone` is cheap (Arc inside).
+#[derive(Clone)]
+pub struct Executor {
+    service: Option<PjrtService>,
+    backend: Backend,
+    stats: Arc<ExecutorStats>,
+}
+
+impl Executor {
+    /// Host-only executor (no artifacts required).
+    pub fn host() -> Self {
+        Self { service: None, backend: Backend::Host, stats: Arc::default() }
+    }
+
+    /// Executor over an artifact directory.  `shards` = PJRT service
+    /// threads (see service.rs).
+    pub fn with_artifacts(dir: impl AsRef<std::path::Path>, backend: Backend, shards: usize) -> Result<Self> {
+        if backend == Backend::Host {
+            return Ok(Self::host());
+        }
+        let manifest = Manifest::load(dir)?;
+        let service = PjrtService::start(manifest, shards)?;
+        Ok(Self { service: Some(service), backend, stats: Arc::default() })
+    }
+
+    /// `Auto` from the conventional `artifacts/` location: PJRT if the
+    /// manifest loads, silently host-only otherwise.
+    pub fn auto(dir: impl AsRef<std::path::Path>) -> Self {
+        // 2 shards measured optimal: each CPU PjRtClient spawns its own
+        // internal thread pool, so more shards oversubscribe the cores
+        // (see EXPERIMENTS.md §Perf for the sweep).
+        Self::with_artifacts(dir, Backend::Auto, 2).unwrap_or_else(|_| Self::host())
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    pub fn stats(&self) -> &ExecutorStats {
+        &self.stats
+    }
+
+    /// True if this executor has a live PJRT service.
+    pub fn has_pjrt(&self) -> bool {
+        self.service.is_some()
+    }
+
+    fn dispatch_pjrt(&self, entry: &str) -> Option<&PjrtService> {
+        let svc = self.service.as_ref()?;
+        match self.backend {
+            Backend::Host => None,
+            Backend::Pjrt => Some(svc),
+            Backend::Auto => {
+                if svc.manifest().get(entry).is_some() {
+                    Some(svc)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    fn host_guard(&self, entry: &str) -> Result<()> {
+        if self.backend == Backend::Pjrt {
+            return Err(Error::Artifacts(format!(
+                "backend=pjrt but no artifact for entry '{entry}' — run `make artifacts` or use auto/host"
+            )));
+        }
+        self.stats.host_calls.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// TSQR leaf: factor the local (m, n) panel.
+    pub fn leaf_qr(&self, a: &Matrix) -> Result<Factorization> {
+        let (m, n) = a.shape();
+        let entry = Manifest::leaf_qr_name(m, n);
+        if let Some(svc) = self.dispatch_pjrt(&entry) {
+            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = svc.execute(&entry, vec![a.clone()])?;
+            let tau = out.pop().expect("arity 3");
+            let packed = out.pop().expect("arity 3");
+            let r = out.pop().expect("arity 3");
+            return Ok(Factorization { r, packed, tau });
+        }
+        self.host_guard(&entry)?;
+        let f = host_factorization(a);
+        Ok(f)
+    }
+
+    /// Hot path: just the R̃ of the local panel — the only thing the
+    /// coordinator ships between buddies.  Uses the R-only AOT variant
+    /// when available (saves the packed/tau device→host transfers; see
+    /// EXPERIMENTS.md §Perf), falling back to the full entry, then to
+    /// the host path.
+    pub fn leaf_r(&self, a: &Matrix) -> Result<Matrix> {
+        let (m, n) = a.shape();
+        let entry = Manifest::leaf_r_name(m, n);
+        if let Some(svc) = self.dispatch_pjrt(&entry) {
+            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = svc.execute(&entry, vec![a.clone()])?;
+            return Ok(out.pop().expect("arity 1"));
+        }
+        if self.backend == Backend::Pjrt || self.dispatch_pjrt(&Manifest::leaf_qr_name(m, n)).is_some()
+        {
+            return Ok(self.leaf_qr(a)?.r);
+        }
+        self.host_guard(&entry)?;
+        Ok(crate::linalg::householder_qr(a).r())
+    }
+
+    /// Hot path: just the R̃ of the stacked [r_top; r_bot] combine.
+    pub fn combine_r(&self, r_top: &Matrix, r_bot: &Matrix) -> Result<Matrix> {
+        let n = r_top.cols();
+        let entry = Manifest::combine_r_name(n);
+        if let Some(svc) = self.dispatch_pjrt(&entry) {
+            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = svc.execute(&entry, vec![r_top.clone(), r_bot.clone()])?;
+            return Ok(out.pop().expect("arity 1"));
+        }
+        if self.backend == Backend::Pjrt || self.dispatch_pjrt(&Manifest::combine_name(n)).is_some()
+        {
+            return Ok(self.combine(r_top, r_bot)?.r);
+        }
+        self.host_guard(&entry)?;
+        Ok(crate::linalg::householder_qr(&r_top.vstack(r_bot)).r())
+    }
+
+    /// TSQR combine: QR of [r_top; r_bot] (both n×n upper triangular).
+    pub fn combine(&self, r_top: &Matrix, r_bot: &Matrix) -> Result<Factorization> {
+        let n = r_top.cols();
+        let entry = Manifest::combine_name(n);
+        if let Some(svc) = self.dispatch_pjrt(&entry) {
+            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = svc.execute(&entry, vec![r_top.clone(), r_bot.clone()])?;
+            let tau = out.pop().expect("arity 3");
+            let packed = out.pop().expect("arity 3");
+            let r = out.pop().expect("arity 3");
+            return Ok(Factorization { r, packed, tau });
+        }
+        self.host_guard(&entry)?;
+        Ok(host_factorization(&r_top.vstack(r_bot)))
+    }
+
+    /// Solve R x = b (R upper triangular n×n, b n×k).
+    pub fn backsolve(&self, r: &Matrix, b: &Matrix) -> Result<Matrix> {
+        let entry = Manifest::backsolve_name(r.rows(), b.cols());
+        if let Some(svc) = self.dispatch_pjrt(&entry) {
+            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = svc.execute(&entry, vec![r.clone(), b.clone()])?;
+            return Ok(out.pop().expect("arity 1"));
+        }
+        self.host_guard(&entry)?;
+        Ok(crate::linalg::backsolve(r, b))
+    }
+
+    /// Qᵀ @ b from a packed factorization.
+    pub fn apply_qt(&self, f: &Factorization, b: &Matrix) -> Result<Matrix> {
+        let (m, n) = f.packed.shape();
+        let entry = Manifest::apply_qt_name(m, n, b.cols());
+        if let Some(svc) = self.dispatch_pjrt(&entry) {
+            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+            let mut out =
+                svc.execute(&entry, vec![f.packed.clone(), f.tau.clone(), b.clone()])?;
+            return Ok(out.pop().expect("arity 1"));
+        }
+        self.host_guard(&entry)?;
+        Ok(packed_of(f).apply_qt(b))
+    }
+
+    /// Materialize the thin Q of a packed factorization.
+    pub fn build_q(&self, f: &Factorization) -> Result<Matrix> {
+        let (m, n) = f.packed.shape();
+        let entry = Manifest::build_q_name(m, n);
+        if let Some(svc) = self.dispatch_pjrt(&entry) {
+            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = svc.execute(&entry, vec![f.packed.clone(), f.tau.clone()])?;
+            return Ok(out.pop().expect("arity 1"));
+        }
+        self.host_guard(&entry)?;
+        Ok(packed_of(f).q())
+    }
+}
+
+fn packed_of(f: &Factorization) -> PackedQr {
+    PackedQr { packed: f.packed.clone(), tau: f.tau.data().to_vec() }
+}
+
+fn host_factorization(a: &Matrix) -> Factorization {
+    let f = householder_qr(a);
+    let n = a.cols();
+    Factorization {
+        r: f.packed.row_block(0, n).triu(),
+        tau: Matrix::from_vec(n, 1, f.tau.clone()),
+        packed: f.packed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_executor_leaf_and_combine() {
+        let ex = Executor::host();
+        let a = Matrix::random(32, 4, 1);
+        let f = ex.leaf_qr(&a).unwrap();
+        assert_eq!(f.r.shape(), (4, 4));
+        assert!(f.r.is_upper_triangular(1e-6));
+        let q = ex.build_q(&f).unwrap();
+        let recon = q.matmul(&f.r);
+        assert!(recon.rel_fro_err(&a) < 1e-5);
+
+        let g = ex.combine(&f.r, &f.r).unwrap();
+        assert_eq!(g.r.shape(), (4, 4));
+        assert!(g.r.is_upper_triangular(1e-6));
+        assert_eq!(ex.stats().host_calls.load(Ordering::Relaxed), 3);
+        assert_eq!(ex.stats().pjrt_calls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn host_backsolve_and_apply_qt() {
+        let ex = Executor::host();
+        let a = Matrix::random(24, 4, 5);
+        let xt = Matrix::random(4, 1, 6);
+        let b = a.matmul(&xt);
+        let f = ex.leaf_qr(&a).unwrap();
+        let qtb = ex.apply_qt(&f, &b).unwrap();
+        let x = ex.backsolve(&f.r, &qtb.row_block(0, 4)).unwrap();
+        assert!(x.max_abs_diff(&xt) < 1e-2);
+    }
+
+    #[test]
+    fn pjrt_strict_errors_without_artifacts() {
+        // Backend::Pjrt with a host-only executor is a config error path.
+        let ex = Executor { service: None, backend: Backend::Pjrt, stats: Arc::default() };
+        let err = ex.leaf_qr(&Matrix::zeros(8, 4)).unwrap_err();
+        assert!(matches!(err, Error::Artifacts(_)));
+    }
+
+    #[test]
+    fn backend_parses() {
+        assert_eq!("pjrt".parse::<Backend>().unwrap(), Backend::Pjrt);
+        assert_eq!("host".parse::<Backend>().unwrap(), Backend::Host);
+        assert_eq!("auto".parse::<Backend>().unwrap(), Backend::Auto);
+        assert!("gpu".parse::<Backend>().is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! The AOT artifact manifest — the contract between `python/compile/aot.py`
+//! and the rust runtime.  The runtime never hard-codes shapes; everything
+//! it knows about the artifact set comes from `artifacts/manifest.json`
+//! (parsed with the in-tree JSON parser, `util::json`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+/// One AOT entry point (`leaf_qr_256x8`, `combine_16`, ...).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    /// Kind tag: `leaf_qr` | `combine` | `backsolve` | `apply_qt` | `build_q`.
+    pub kind: String,
+    /// Shape parameters (m, n, k as applicable).
+    pub params: HashMap<String, usize>,
+    /// HLO-text file name, relative to the artifact dir.
+    pub file: String,
+    /// Input shapes, outer-to-inner.
+    pub inputs: Vec<Vec<usize>>,
+    /// Number of results in the output tuple.
+    pub out_arity: usize,
+}
+
+impl Entry {
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.get(key).copied()
+    }
+
+    fn from_json(j: &Json) -> Result<Entry> {
+        let bad = |what: &str| Error::Artifacts(format!("manifest entry missing/invalid {what}"));
+        let name = j.get("name").and_then(Json::as_str).ok_or_else(|| bad("name"))?.to_string();
+        let kind = j.get("kind").and_then(Json::as_str).ok_or_else(|| bad("kind"))?.to_string();
+        let file = j.get("file").and_then(Json::as_str).ok_or_else(|| bad("file"))?.to_string();
+        let out_arity =
+            j.get("out_arity").and_then(Json::as_usize).ok_or_else(|| bad("out_arity"))?;
+        let mut params = HashMap::new();
+        for (k, v) in j.get("params").and_then(Json::as_obj).ok_or_else(|| bad("params"))? {
+            params.insert(k.clone(), v.as_usize().ok_or_else(|| bad("params"))?);
+        }
+        let mut inputs = Vec::new();
+        for shape in j.get("inputs").and_then(Json::as_arr).ok_or_else(|| bad("inputs"))? {
+            let dims: Option<Vec<usize>> =
+                shape.as_arr().map(|a| a.iter().filter_map(Json::as_usize).collect());
+            let dims = dims.ok_or_else(|| bad("inputs"))?;
+            inputs.push(dims);
+        }
+        Ok(Entry { name, kind, params, file, inputs, out_arity })
+    }
+}
+
+/// Parsed manifest plus the directory it was loaded from.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dtype: String,
+    entries: HashMap<String, Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Artifacts(format!("cannot read {}: {e}", path.display())))?;
+        let j = Json::parse(&text)?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Artifacts("manifest missing dtype".into()))?
+            .to_string();
+        let mut entries = HashMap::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifacts("manifest missing entries".into()))?
+        {
+            let entry = Entry::from_json(e)?;
+            entries.insert(entry.name.clone(), entry);
+        }
+        Ok(Self { dir, dtype, entries })
+    }
+
+    /// Look up an entry point by exact name.
+    pub fn get(&self, name: &str) -> Option<&Entry> {
+        self.entries.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Canonical entry-point names (must match `aot.py` naming).
+    pub fn leaf_qr_name(m: usize, n: usize) -> String {
+        format!("leaf_qr_{m}x{n}")
+    }
+    pub fn leaf_r_name(m: usize, n: usize) -> String {
+        format!("leaf_r_{m}x{n}")
+    }
+    pub fn combine_r_name(n: usize) -> String {
+        format!("combine_r_{n}")
+    }
+    pub fn combine_name(n: usize) -> String {
+        format!("combine_{n}")
+    }
+    pub fn backsolve_name(n: usize, k: usize) -> String {
+        format!("backsolve_{n}x{k}")
+    }
+    pub fn apply_qt_name(m: usize, n: usize, k: usize) -> String {
+        format!("apply_qt_{m}x{n}x{k}")
+    }
+    pub fn build_q_name(m: usize, n: usize) -> String {
+        format!("build_q_{m}x{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TestDir;
+
+    #[test]
+    fn loads_and_indexes_entries() {
+        let tmp = TestDir::new();
+        tmp.write(
+            "manifest.json",
+            r#"{"dtype":"f32","entries":[
+                {"name":"leaf_qr_64x4","kind":"leaf_qr","params":{"m":64,"n":4},
+                 "file":"leaf_qr_64x4.hlo.txt","inputs":[[64,4]],"out_arity":3}
+            ]}"#,
+        );
+        let m = Manifest::load(tmp.path()).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.dtype, "f32");
+        let e = m.get("leaf_qr_64x4").unwrap();
+        assert_eq!(e.kind, "leaf_qr");
+        assert_eq!(e.param("m"), Some(64));
+        assert_eq!(e.out_arity, 3);
+        assert_eq!(e.inputs, vec![vec![64, 4]]);
+        assert!(m.hlo_path(e).ends_with("leaf_qr_64x4.hlo.txt"));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_artifacts_error() {
+        let tmp = TestDir::new();
+        match Manifest::load(tmp.path()) {
+            Err(Error::Artifacts(_)) => {}
+            other => panic!("expected Artifacts error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_entry_rejected() {
+        let tmp = TestDir::new();
+        tmp.write("manifest.json", r#"{"dtype":"f32","entries":[{"name":"x"}]}"#);
+        assert!(Manifest::load(tmp.path()).is_err());
+    }
+
+    #[test]
+    fn name_builders_match_aot_convention() {
+        assert_eq!(Manifest::leaf_qr_name(256, 8), "leaf_qr_256x8");
+        assert_eq!(Manifest::combine_name(16), "combine_16");
+        assert_eq!(Manifest::backsolve_name(8, 1), "backsolve_8x1");
+        assert_eq!(Manifest::apply_qt_name(64, 8, 1), "apply_qt_64x8x1");
+        assert_eq!(Manifest::build_q_name(64, 8), "build_q_64x8");
+    }
+}

@@ -1,0 +1,17 @@
+//! Runtime layer: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py` and executes
+//! them on the PJRT CPU client from the coordinator's hot path.
+//!
+//! Python is build-time only; after `make artifacts` the rust binary is
+//! self-contained.
+
+pub mod executor;
+pub mod manifest;
+pub mod service;
+
+pub use executor::{Backend, Executor, Factorization};
+pub use manifest::Manifest;
+pub use service::PjrtService;
+
+/// Conventional artifact directory (relative to the repo root).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,231 @@
+//! The PJRT execution service.
+//!
+//! The `xla` crate's PJRT handles hold raw pointers and are not `Send`,
+//! so all XLA state lives on dedicated *service threads*; simulated MPI
+//! processes (OS threads) talk to them through an mpsc request channel.
+//! This mirrors how a real deployment would pin one PJRT context per
+//! device and route work to it.
+//!
+//! Compilation is lazy and cached: the first request for an entry point
+//! pays `HloModuleProto::from_text_file` + `client.compile`; subsequent
+//! requests reuse the loaded executable (hit counters are exported for
+//! the perf pass).
+//!
+//! Work distribution: requests round-robin across `shards` service
+//! threads (an atomic counter), so concurrent calls to the SAME entry
+//! point execute in parallel too — a TSQR round issues P identical
+//! leaf/combine calls at once, and hashing by name would serialize
+//! them on one shard (measured 6x slower at P=64; EXPERIMENTS.md
+//! §Perf).  Each shard compiles lazily and caches per-thread.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, mpsc};
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+use super::manifest::Manifest;
+
+/// One kernel invocation: entry-point name + input matrices.
+struct Request {
+    entry: String,
+    inputs: Vec<Matrix>,
+    reply: mpsc::Sender<Result<Vec<Matrix>>>,
+}
+
+/// Cheap shared counters exported to the perf harness.
+#[derive(Default, Debug)]
+pub struct ServiceStats {
+    pub executions: AtomicU64,
+    pub compiles: AtomicU64,
+    pub cache_hits: AtomicU64,
+}
+
+/// Handle to the PJRT service — `Clone + Send + Sync`.
+#[derive(Clone)]
+pub struct PjrtService {
+    senders: Vec<mpsc::Sender<Request>>,
+    manifest: Arc<Manifest>,
+    stats: Arc<ServiceStats>,
+    next_shard: Arc<AtomicUsize>,
+}
+
+impl PjrtService {
+    /// Start `shards` service threads over the artifact directory.
+    pub fn start(manifest: Manifest, shards: usize) -> Result<Self> {
+        let shards = shards.max(1);
+        let manifest = Arc::new(manifest);
+        let stats = Arc::new(ServiceStats::default());
+        let mut senders = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let mf = Arc::clone(&manifest);
+            let st = Arc::clone(&stats);
+            std::thread::Builder::new()
+                .name(format!("pjrt-svc-{shard}"))
+                .spawn(move || service_loop(rx, mf, st))
+                .map_err(|e| Error::Other(format!("spawn pjrt service: {e}")))?;
+            senders.push(tx);
+        }
+        Ok(Self { senders, manifest, stats, next_shard: Arc::new(AtomicUsize::new(0)) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    /// Execute an entry point synchronously (blocks the calling thread).
+    pub fn execute(&self, entry: &str, inputs: Vec<Matrix>) -> Result<Vec<Matrix>> {
+        let ent = self
+            .manifest
+            .get(entry)
+            .ok_or_else(|| Error::Artifacts(format!("no artifact entry '{entry}'")))?;
+        // Shape-check inputs against the manifest before shipping.
+        if ent.inputs.len() != inputs.len() {
+            return Err(Error::Artifacts(format!(
+                "entry '{entry}' expects {} inputs, got {}",
+                ent.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (spec, m)) in ent.inputs.iter().zip(&inputs).enumerate() {
+            let got = vec![m.rows(), m.cols()];
+            if *spec != got {
+                return Err(Error::Artifacts(format!(
+                    "entry '{entry}' input {i}: expected {spec:?}, got {got:?}"
+                )));
+            }
+        }
+        // Round-robin: concurrent identical calls spread across shards.
+        let shard = self.next_shard.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.senders[shard]
+            .send(Request { entry: entry.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| Error::Other("pjrt service thread died".into()))?;
+        reply_rx.recv().map_err(|_| Error::Other("pjrt service dropped reply".into()))?
+    }
+}
+
+/// Body of one service thread: owns a PJRT client + executable cache.
+fn service_loop(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>, stats: Arc<ServiceStats>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the construction error.
+            for req in rx {
+                let _ = req.reply.send(Err(Error::Xla(format!("PjRtClient::cpu failed: {e}"))));
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    for req in rx {
+        let result = run_one(&client, &mut cache, &manifest, &stats, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    stats: &ServiceStats,
+    req: &Request,
+) -> Result<Vec<Matrix>> {
+    let entry = manifest
+        .get(&req.entry)
+        .ok_or_else(|| Error::Artifacts(format!("no artifact entry '{}'", req.entry)))?;
+
+    if !cache.contains_key(&req.entry) {
+        let path = manifest.hlo_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Artifacts("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        cache.insert(req.entry.clone(), exe);
+        stats.compiles.fetch_add(1, Ordering::Relaxed);
+    } else {
+        stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+    let exe = cache.get(&req.entry).expect("just inserted");
+
+    // Host matrices -> device literals.
+    let literals: Vec<xla::Literal> = req
+        .inputs
+        .iter()
+        .map(|m| {
+            xla::Literal::vec1(m.data())
+                .reshape(&[m.rows() as i64, m.cols() as i64])
+                .map_err(Error::from)
+        })
+        .collect::<Result<_>>()?;
+
+    let out = exe.execute::<xla::Literal>(&literals)?;
+    let lit = out[0][0].to_literal_sync()?;
+    stats.executions.fetch_add(1, Ordering::Relaxed);
+
+    // aot.py lowers with return_tuple=True: output is always a tuple.
+    let parts = lit.to_tuple()?;
+    if parts.len() != entry.out_arity {
+        return Err(Error::Xla(format!(
+            "entry '{}': expected {}-tuple, got {}",
+            req.entry,
+            entry.out_arity,
+            parts.len()
+        )));
+    }
+    parts
+        .into_iter()
+        .map(|p| {
+            let shape = p.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let (r, c) = match dims.len() {
+                2 => (dims[0], dims[1]),
+                1 => (dims[0], 1),
+                0 => (1, 1),
+                _ => {
+                    return Err(Error::Xla(format!("unexpected output rank {}", dims.len())));
+                }
+            };
+            let v = p.to_vec::<f32>()?;
+            Ok(Matrix::from_vec(r, c, v))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/integration_runtime.rs (they
+    // need built artifacts). Here: only manifest-validation failures.
+    use super::*;
+
+    #[test]
+    fn unknown_entry_rejected_without_touching_pjrt() {
+        let tmp = crate::util::TestDir::new();
+        tmp.write("manifest.json", r#"{"dtype":"f32","entries":[]}"#);
+        let svc = PjrtService::start(Manifest::load(tmp.path()).unwrap(), 1).unwrap();
+        let err = svc.execute("nope", vec![]).unwrap_err();
+        assert!(matches!(err, Error::Artifacts(_)));
+    }
+
+    #[test]
+    fn input_shape_mismatch_rejected() {
+        let tmp = crate::util::TestDir::new();
+        tmp.write(
+            "manifest.json",
+            r#"{"dtype":"f32","entries":[
+              {"name":"leaf_qr_8x4","kind":"leaf_qr","params":{"m":8,"n":4},
+               "file":"leaf_qr_8x4.hlo.txt","inputs":[[8,4]],"out_arity":3}]}"#,
+        );
+        let svc = PjrtService::start(Manifest::load(tmp.path()).unwrap(), 1).unwrap();
+        let err = svc.execute("leaf_qr_8x4", vec![Matrix::zeros(4, 4)]).unwrap_err();
+        assert!(err.to_string().contains("expected [8, 4]"), "{err}");
+    }
+}

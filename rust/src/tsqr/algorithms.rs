@@ -1,0 +1,283 @@
+//! The paper's four algorithms, one function per process (one OS thread each).
+//!
+//! Each function is the body of one simulated MPI rank.  They map
+//! line-for-line onto the paper's listings:
+//!
+//! * [`baseline`]      — Algorithm 1 (TSQR; not fault tolerant)
+//! * [`redundant`]     — Algorithm 2 (Redundant TSQR)
+//! * [`replace`]       — Algorithm 3 (Replace TSQR)
+//! * [`self_healing`]  — Algorithms 4–6 (Self-Healing TSQR)
+//!
+//! Exchange = `post` (send half) + `fetch` (recv half) on the world's
+//! post board; `Error::RankFailed` is the ULFM `FAIL` the listings
+//! branch on.  Fault injection happens at each round boundary via
+//! `ctx.maybe_die(round)` — "crashed at the end of step s" in the
+//! paper's step-granular model.
+
+use crate::linalg::Matrix;
+use crate::ulfm::{ExitKind, Rank};
+
+use super::context::Ctx;
+use super::trace::Event;
+
+/// How one process left the computation (the wrapper in runner.rs
+/// translates this into world status + trace events).
+#[derive(Debug, Clone)]
+pub enum ProcOutcome {
+    /// Finished the algorithm holding the final R.
+    FinalR(Matrix),
+    /// Finished its role without the final R (baseline sender).
+    DoneNoR,
+    /// Returned early: a needed peer failed (Alg. 2 line 7).
+    GaveUpPeerFailed,
+    /// Returned early: no live replica of the needed data (Alg. 3 line 8).
+    GaveUpNoReplica,
+    /// Crashed by the fault injector.
+    Killed,
+}
+
+impl ProcOutcome {
+    pub fn exit_kind(&self) -> Option<ExitKind> {
+        match self {
+            ProcOutcome::FinalR(_) => Some(ExitKind::CompletedWithR),
+            ProcOutcome::DoneNoR => Some(ExitKind::CompletedWithoutR),
+            ProcOutcome::GaveUpPeerFailed => Some(ExitKind::GaveUpPeerFailed),
+            ProcOutcome::GaveUpNoReplica => Some(ExitKind::GaveUpNoReplica),
+            ProcOutcome::Killed => None, // world already marked Dead
+        }
+    }
+}
+
+/// Algorithm 1 — plain TSQR.  Binary reduction tree: the higher rank of
+/// each pair sends its R̃ and is done; the lower rank receives, stacks,
+/// re-factorizes.  Any failure aborts the computation (ABORT
+/// semantics): a process that observes a failed peer simply ends, which
+/// cascades to everything upstream of it.
+pub fn baseline(ctx: Ctx, a: Matrix) -> ProcOutcome {
+    let rank = ctx.rank;
+    let mut r = match ctx.leaf_qr(&a) {
+        Ok(f) => f.r,
+        Err(_) => return ProcOutcome::GaveUpPeerFailed,
+    };
+    for round in 0..ctx.plan.rounds() {
+        if ctx.maybe_die(round).is_err() {
+            return ProcOutcome::Killed;
+        }
+        if !ctx.plan.participates(rank, round) {
+            // Defensive: a non-participant already returned as a sender
+            // in an earlier round; it can never own the final R.
+            return ProcOutcome::DoneNoR;
+        }
+        let Some(buddy) = ctx.plan.buddy(rank, round) else {
+            continue; // non-pow2 pass-through round
+        };
+        if ctx.plan.is_sender(rank, round) {
+            // I am a sender: ship R̃ to the buddy, my job is done.
+            ctx.world.post(rank, round, r);
+            ctx.trace.emit(Event::Send { rank, to: buddy, round });
+            return ProcOutcome::DoneNoR;
+        }
+        // I am a receiver.
+        match ctx.world.fetch(buddy, round) {
+            Ok(theirs) => {
+                ctx.trace.emit(Event::Recv { rank, from: buddy, round });
+                match ctx.combine(round, &r, &theirs, rank, buddy) {
+                    Ok(next) => r = next,
+                    Err(_) => return ProcOutcome::GaveUpPeerFailed,
+                }
+            }
+            Err(e) if e.is_rank_failure() => {
+                ctx.trace.emit(Event::PeerFailed { rank, peer: buddy, round });
+                return ProcOutcome::GaveUpPeerFailed;
+            }
+            Err(_) => return ProcOutcome::GaveUpPeerFailed,
+        }
+    }
+    // Only the tree root reaches this point with the final R.
+    ProcOutcome::FinalR(r)
+}
+
+/// Algorithm 2 — Redundant TSQR.  Buddies *exchange* R̃ (sendrecv), both
+/// stack and re-factorize; every surviving process ends with the final
+/// R.  On a failed exchange the process returns (line 7) — survivors
+/// carry on unknowingly.
+pub fn redundant(ctx: Ctx, a: Matrix) -> ProcOutcome {
+    let rank = ctx.rank;
+    let mut r = match ctx.leaf_qr(&a) {
+        Ok(f) => f.r,
+        Err(_) => return ProcOutcome::GaveUpPeerFailed,
+    };
+    for round in 0..ctx.plan.rounds() {
+        if ctx.maybe_die(round).is_err() {
+            return ProcOutcome::Killed;
+        }
+        let Some(buddy) = ctx.plan.buddy(rank, round) else {
+            continue;
+        };
+        // sendrecv: post my half first, then await the buddy's.
+        ctx.world.post(rank, round, r.clone());
+        match ctx.world.fetch(buddy, round) {
+            Ok(theirs) => {
+                ctx.trace.emit(Event::Exchange { rank, with: buddy, round });
+                let (g_me, g_them) = (ctx.plan.group(rank, round), ctx.plan.group(buddy, round));
+                match ctx.combine(round, &r, &theirs, g_me, g_them) {
+                    Ok(next) => r = next,
+                    Err(_) => return ProcOutcome::GaveUpPeerFailed,
+                }
+            }
+            Err(e) if e.is_rank_failure() => {
+                // Line 7: FAIL == sendrecv -> return.
+                ctx.trace.emit(Event::PeerFailed { rank, peer: buddy, round });
+                return ProcOutcome::GaveUpPeerFailed;
+            }
+            Err(_) => return ProcOutcome::GaveUpPeerFailed,
+        }
+    }
+    // "All the surviving processes reach this point and own the final R."
+    ProcOutcome::FinalR(r)
+}
+
+/// Algorithm 3 — Replace TSQR.  Fault-free execution is identical to
+/// Redundant; on a failed exchange the process *finds a replica* of the
+/// dead buddy's data (any live rank in the buddy's group at this level)
+/// and exchanges with it instead.  Only if no replica survives does it
+/// give up.
+pub fn replace(ctx: Ctx, a: Matrix) -> ProcOutcome {
+    let rank = ctx.rank;
+    let mut r = match ctx.leaf_qr(&a) {
+        Ok(f) => f.r,
+        Err(_) => return ProcOutcome::GaveUpPeerFailed,
+    };
+    for round in 0..ctx.plan.rounds() {
+        if ctx.maybe_die(round).is_err() {
+            return ProcOutcome::Killed;
+        }
+        let Some(buddy) = ctx.plan.buddy(rank, round) else {
+            continue;
+        };
+        ctx.world.post(rank, round, r.clone());
+        let (partner, theirs) = match ctx.world.fetch(buddy, round) {
+            Ok(m) => (buddy, m),
+            Err(e) if e.is_rank_failure() => {
+                ctx.trace.emit(Event::PeerFailed { rank, peer: buddy, round });
+                // Line 6: b = findReplica(b) — any holder of the same
+                // data (the buddy's group at this level).  A replica
+                // that posted its round-s R̃ and died afterwards still
+                // delivers (buffered-send semantics); otherwise wait on
+                // a live replica to post.  NoReplica ⇒ line 8: no copy
+                // of this submatrix survives.
+                let replicas = ctx.plan.replicas_of(buddy, round);
+                match ctx.world.fetch_from_group(&replicas, rank, round) {
+                    Ok((q, m)) => {
+                        ctx.trace
+                            .emit(Event::ReplicaFound { rank, dead: buddy, replica: q, round });
+                        (q, m)
+                    }
+                    Err(_) => return ProcOutcome::GaveUpNoReplica,
+                }
+            }
+            Err(_) => return ProcOutcome::GaveUpNoReplica,
+        };
+        ctx.trace.emit(Event::Exchange { rank, with: partner, round });
+        let (g_me, g_them) = (ctx.plan.group(rank, round), ctx.plan.group(buddy, round));
+        match ctx.combine(round, &r, &theirs, g_me, g_them) {
+            Ok(next) => r = next,
+            Err(_) => return ProcOutcome::GaveUpNoReplica,
+        }
+    }
+    ProcOutcome::FinalR(r)
+}
+
+/// Algorithms 4+6 — Self-Healing TSQR, primary process: leaf QR
+/// (Algorithm 4) then the shared round loop.
+pub fn self_healing(ctx: Ctx, a: Matrix) -> ProcOutcome {
+    let r = match ctx.leaf_qr(&a) {
+        Ok(f) => f.r,
+        Err(_) => return ProcOutcome::GaveUpPeerFailed,
+    };
+    sh_rounds(ctx, r, 0)
+}
+
+/// Algorithm 6 — the `shtsqr` round loop, entered at `start_round`
+/// (0 for primaries, the failure round for respawned replacements).
+///
+/// On a failed exchange the process *respawns* the dead buddy
+/// (`spawnNew`, REBUILD semantics) and retries: the replacement
+/// recovers the buddy's state from a replica (Algorithm 5) and posts
+/// for this round, unblocking us.
+pub fn sh_rounds(ctx: Ctx, mut r: Matrix, start_round: u32) -> ProcOutcome {
+    let rank = ctx.rank;
+    for round in start_round..ctx.plan.rounds() {
+        if ctx.maybe_die(round).is_err() {
+            return ProcOutcome::Killed;
+        }
+        let Some(buddy) = ctx.plan.buddy(rank, round) else {
+            continue;
+        };
+        ctx.world.post(rank, round, r.clone());
+        let theirs = match ctx.world.fetch_peer(buddy, round) {
+            crate::ulfm::PeerFetch::Post(m) => m,
+            outcome => {
+                // Buddy unreachable (ULFM failure → spawnNew) or a
+                // still-recovering replacement respawned by a peer at a
+                // LATER round (it enters the computation there and will
+                // never post for this round — waiting would starve us).
+                if matches!(outcome, crate::ulfm::PeerFetch::Unreachable) {
+                    ctx.trace.emit(Event::PeerFailed { rank, peer: buddy, round });
+                    if ctx.world.respawn_at(buddy, round) {
+                        // spawnNew(b): launch the replacement — it
+                        // recovers its state from a replica (Alg. 5)
+                        // and rejoins from this round.
+                        ctx.trace.emit(Event::Respawn { rank, dead: buddy, round });
+                        let rctx = ctx.for_rank(buddy);
+                        std::thread::spawn(move || {
+                            super::runner::run_process_wrapper(rctx.clone(), || {
+                                sh_recover(rctx.clone(), round)
+                            })
+                        });
+                    }
+                }
+                // Either way, take the buddy's round-s data from ANY
+                // replica of its group — bit-identical to what the
+                // buddy/replacement would post.  NoReplica ⇒ the
+                // group's data is gone (the 2^s − 1 bound exceeded).
+                let replicas = ctx.plan.replicas_of(buddy, round);
+                match ctx.world.fetch_from_group(&replicas, rank, round) {
+                    Ok((_, m)) => m,
+                    Err(_) => return ProcOutcome::GaveUpNoReplica,
+                }
+            }
+        };
+        ctx.trace.emit(Event::Exchange { rank, with: buddy, round });
+        let (g_me, g_them) = (ctx.plan.group(rank, round), ctx.plan.group(buddy, round));
+        match ctx.combine(round, &r, &theirs, g_me, g_them) {
+            Ok(next) => r = next,
+            Err(_) => return ProcOutcome::GaveUpNoReplica,
+        }
+    }
+    ProcOutcome::FinalR(r)
+}
+
+/// Algorithm 5 — process restart: a freshly spawned replacement fetches
+/// the dead incarnation's state (R̃ at `round`) from any replica, then
+/// joins the round loop at `round`.
+pub fn sh_recover(ctx: Ctx, round: u32) -> ProcOutcome {
+    let rank = ctx.rank;
+    let candidates: Vec<Rank> = ctx.plan.replicas_of(rank, round);
+    // Block until a replica's round-`round` post is available (posts
+    // survive their author — buffered-send semantics), or until no
+    // candidate can ever produce one: still-recovering replacements
+    // hold no data and do not count as sources, which is what keeps two
+    // recoveries in the same dead group from waiting on each other.
+    let state: Matrix = match ctx.world.fetch_from_group(&candidates, rank, round) {
+        Ok((q, m)) => {
+            ctx.trace.emit(Event::Recovered { rank, from: q, round });
+            (*m).clone()
+        }
+        Err(_) => {
+            // The paper's bound (2^s − 1) was exceeded for this group.
+            return ProcOutcome::GaveUpNoReplica;
+        }
+    };
+    sh_rounds(ctx, state, round)
+}

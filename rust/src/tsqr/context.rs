@@ -1,0 +1,86 @@
+//! Per-process context: everything a simulated MPI rank can touch.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::fault::KillSchedule;
+use crate::linalg::Matrix;
+use crate::runtime::Executor;
+use crate::ulfm::{Rank, World};
+
+use super::plan::TreePlan;
+use super::trace::{Event, TraceSink};
+
+/// Final R factors, keyed by the rank that finished holding one.
+pub type ResultMap = Arc<Mutex<HashMap<Rank, Matrix>>>;
+
+/// Hot-path leaf result: just the R̃ the exchanges ship.
+pub struct HotLeaf {
+    pub r: Matrix,
+}
+
+/// Handle bundle given to every simulated process (cheap to clone; the
+/// Self-Healing respawn path clones it for the replacement process).
+#[derive(Clone)]
+pub struct Ctx {
+    pub rank: Rank,
+    pub plan: TreePlan,
+    pub world: Arc<World>,
+    pub exec: Executor,
+    pub trace: TraceSink,
+    pub schedule: Arc<KillSchedule>,
+    pub results: ResultMap,
+}
+
+impl Ctx {
+    /// The same context re-addressed to another rank (used when a
+    /// process spawns a replacement for a dead peer).
+    pub fn for_rank(&self, rank: Rank) -> Ctx {
+        Ctx { rank, ..self.clone() }
+    }
+
+    /// Fault-injection checkpoint at an exchange-round boundary.
+    /// Returns `Err(Killed)` if this process crashes here; the world is
+    /// already updated so peers observe the failure.
+    pub fn maybe_die(&self, round: u32) -> Result<()> {
+        if self.schedule.fire(self.rank, round) {
+            self.world.kill(self.rank, round);
+            self.trace.emit(Event::Killed { rank: self.rank, round });
+            return Err(Error::Killed(self.rank));
+        }
+        Ok(())
+    }
+
+    /// Leaf factorization of the local panel (traced).  Hot path: only
+    /// R̃ is needed — the implicit-Q outputs are never shipped.
+    pub fn leaf_qr(&self, a: &Matrix) -> Result<HotLeaf> {
+        let r = self.exec.leaf_r(a)?;
+        self.trace.emit(Event::LeafQr { rank: self.rank });
+        Ok(HotLeaf { r })
+    }
+
+    /// Tree-node combine. `my_group`/`their_group` fix the stack order
+    /// so every replica computes a bit-identical result (plan.rs).
+    pub fn combine(
+        &self,
+        round: u32,
+        mine: &Matrix,
+        theirs: &Matrix,
+        my_group: usize,
+        their_group: usize,
+    ) -> Result<Matrix> {
+        let r = if self.plan.my_block_on_top(my_group, their_group) {
+            self.exec.combine_r(mine, theirs)
+        } else {
+            self.exec.combine_r(theirs, mine)
+        }?;
+        self.trace.emit(Event::Combine { rank: self.rank, round });
+        Ok(r)
+    }
+
+    /// Record a final R (the process finished the computation).
+    pub fn deposit_result(&self, r: Matrix) {
+        self.results.lock().unwrap().insert(self.rank, r);
+    }
+}

@@ -1,0 +1,25 @@
+//! The paper's contribution: fault-tolerant, communication-avoiding
+//! TSQR (§III).
+//!
+//! * [`plan`]       — reduction-tree structure, buddies, replica groups
+//! * [`algorithms`] — Algorithms 1–6 as simulated-process bodies
+//! * [`runner`]     — run lifecycle, result gathering
+//! * [`trace`]      — machine-checkable execution traces (Figures 1–5)
+//! * [`verify`]     — final-R verification against the host oracle
+//! * [`context`]    — the per-process handle bundle
+
+pub mod algorithms;
+pub mod context;
+pub mod plan;
+pub mod qfactor;
+pub mod runner;
+pub mod trace;
+pub mod verify;
+
+pub use algorithms::ProcOutcome;
+pub use context::Ctx;
+pub use plan::TreePlan;
+pub use qfactor::QrTree;
+pub use runner::{Algo, RunResult, RunSpec, run};
+pub use trace::{Event, Trace, TraceSink};
+pub use verify::{Verification, verify_r};

@@ -1,0 +1,192 @@
+//! The TSQR reduction-tree plan: buddy pairing, sender/receiver roles,
+//! data groups and replica sets.
+//!
+//! Terminology (aligned with the paper, §III):
+//! * *round* `s` (0-indexed here) is the s-th exchange/communication
+//!   stage; the paper's "step s" is 1-indexed, so paper-step `s` ≡
+//!   round `s − 1`, and "by the end of step s" ≡ "at the boundary of
+//!   round s" in this code.
+//! * After completing round `s−1`, a process holds R̃ of *group*
+//!   `rank >> s` at *level* `s` — in Redundant TSQR every member of
+//!   that group holds an identical copy, which is exactly the paper's
+//!   `2^s` redundancy (§III-B3).
+//! * The *buddy* at round `s` is `rank XOR 2^s`.
+
+use super::super::ulfm::Rank;
+
+/// Static description of the reduction tree for `procs` processes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TreePlan {
+    procs: usize,
+}
+
+impl TreePlan {
+    /// Build a plan. `procs` must be >= 1.  Non-power-of-two worlds are
+    /// supported via pass-through rounds (a rank whose buddy would fall
+    /// outside the world skips that round); the paper's robustness
+    /// formulas assume a power of two.
+    pub fn new(procs: usize) -> Self {
+        assert!(procs >= 1, "need at least one process");
+        Self { procs }
+    }
+
+    pub fn procs(&self) -> usize {
+        self.procs
+    }
+
+    /// Number of exchange rounds: ceil(log2(procs)).
+    pub fn rounds(&self) -> u32 {
+        (usize::BITS - (self.procs - 1).leading_zeros()) as u32
+    }
+
+    /// Whether the world size is a power of two (robustness formulas
+    /// only hold exactly there).
+    pub fn is_pow2(&self) -> bool {
+        self.procs.is_power_of_two()
+    }
+
+    /// Buddy of `rank` at round `s`: `rank XOR 2^s`, or `None` if that
+    /// rank does not exist (non-power-of-two pass-through).
+    pub fn buddy(&self, rank: Rank, s: u32) -> Option<Rank> {
+        let b = rank ^ (1usize << s);
+        (b < self.procs).then_some(b)
+    }
+
+    /// Baseline TSQR role at round `s`: the higher rank of the pair
+    /// sends its R̃ and is done (paper: odd ranks send at the first
+    /// step, then rank ± 2^step).
+    pub fn is_sender(&self, rank: Rank, s: u32) -> bool {
+        (rank >> s) & 1 == 1
+    }
+
+    /// Baseline TSQR: does `rank` still participate at round `s`?
+    /// (Its low `s` bits are zero — it survived rounds 0..s-1.)
+    pub fn participates(&self, rank: Rank, s: u32) -> bool {
+        rank & ((1usize << s) - 1) == 0
+    }
+
+    /// Data-group index of `rank` at level `s` (after `s` completed
+    /// rounds the redundant algorithms' R̃ is a function of the group
+    /// only): `rank >> s`.
+    pub fn group(&self, rank: Rank, s: u32) -> usize {
+        rank >> s
+    }
+
+    /// All ranks holding the same data as `rank` at level `s` in the
+    /// redundant algorithms — the *replica set* (`findReplica`'s search
+    /// space). Includes `rank` itself. Size is `2^s` for pow-2 worlds —
+    /// the paper's redundancy count.
+    pub fn replicas_of(&self, rank: Rank, s: u32) -> Vec<Rank> {
+        let g = self.group(rank, s);
+        let lo = g << s;
+        let hi = (lo + (1usize << s)).min(self.procs);
+        (lo..hi).collect()
+    }
+
+    /// The root of the baseline reduction tree.
+    pub fn root(&self) -> Rank {
+        0
+    }
+
+    /// Stack order for a combine between data of `my_group` and
+    /// `their_group` at some level: lower group index on top. Both
+    /// buddies (and any replica standing in) compute the identical
+    /// stack, so redundant copies stay bit-identical.
+    pub fn my_block_on_top(&self, my_group: usize, their_group: usize) -> bool {
+        my_group < their_group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_log2() {
+        assert_eq!(TreePlan::new(1).rounds(), 0);
+        assert_eq!(TreePlan::new(2).rounds(), 1);
+        assert_eq!(TreePlan::new(4).rounds(), 2);
+        assert_eq!(TreePlan::new(8).rounds(), 3);
+        assert_eq!(TreePlan::new(5).rounds(), 3); // non-pow2 rounds up
+        assert_eq!(TreePlan::new(64).rounds(), 6);
+    }
+
+    #[test]
+    fn buddy_is_xor_and_symmetric() {
+        let p = TreePlan::new(8);
+        for s in 0..3 {
+            for r in 0..8 {
+                let b = p.buddy(r, s).unwrap();
+                assert_eq!(p.buddy(b, s), Some(r), "buddy must be symmetric");
+                assert_eq!(r ^ b, 1 << s);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_figure1_pairing() {
+        // Fig. 1: step 0 pairs (0,1), (2,3); step 1 pairs (0,2).
+        let p = TreePlan::new(4);
+        assert_eq!(p.buddy(0, 0), Some(1));
+        assert_eq!(p.buddy(2, 0), Some(3));
+        assert_eq!(p.buddy(0, 1), Some(2));
+        assert!(p.is_sender(1, 0) && p.is_sender(3, 0), "odd ranks send first");
+        assert!(!p.is_sender(0, 0) && !p.is_sender(2, 0));
+        assert!(p.is_sender(2, 1), "rank 2 sends to rank 0 at step 1");
+    }
+
+    #[test]
+    fn non_pow2_pass_through() {
+        let p = TreePlan::new(6);
+        assert_eq!(p.buddy(4, 0), Some(5));
+        assert_eq!(p.buddy(4, 1), None, "rank 6 does not exist");
+        assert_eq!(p.buddy(4, 2), Some(0));
+        assert!(!p.is_pow2());
+    }
+
+    #[test]
+    fn participation_halves_each_round() {
+        let p = TreePlan::new(16);
+        for s in 0..=4u32 {
+            let live: usize = (0..16).filter(|&r| p.participates(r, s)).count();
+            assert_eq!(live, 16 >> s, "round {s}");
+        }
+    }
+
+    #[test]
+    fn replica_sets_double_each_level() {
+        // §III-B3: the number of copies is 2^s after step s.
+        let p = TreePlan::new(16);
+        for s in 0..=4u32 {
+            for r in 0..16 {
+                let reps = p.replicas_of(r, s);
+                assert_eq!(reps.len(), 1 << s, "level {s}");
+                assert!(reps.contains(&r));
+                // All replicas share the group.
+                assert!(reps.iter().all(|&q| p.group(q, s) == p.group(r, s)));
+            }
+        }
+    }
+
+    #[test]
+    fn groups_partition_ranks() {
+        let p = TreePlan::new(8);
+        for s in 0..=3u32 {
+            let mut seen = vec![false; 8];
+            for g in 0..(8 >> s) {
+                for &r in &p.replicas_of(g << s, s) {
+                    assert!(!seen[r], "rank {r} in two groups at level {s}");
+                    seen[r] = true;
+                }
+            }
+            assert!(seen.iter().all(|&x| x));
+        }
+    }
+
+    #[test]
+    fn stack_order_deterministic_and_antisymmetric() {
+        let p = TreePlan::new(4);
+        assert!(p.my_block_on_top(0, 1));
+        assert!(!p.my_block_on_top(1, 0));
+    }
+}

@@ -1,0 +1,364 @@
+//! Run lifecycle: spawn one thread per rank, wait for quiescence,
+//! gather results, verify, and report.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::fault::KillSchedule;
+use crate::linalg::Matrix;
+use crate::runtime::Executor;
+use crate::ulfm::world::MetricsSnapshot;
+use crate::ulfm::{ProcStatus, Rank, World};
+
+use super::algorithms::{self, ProcOutcome};
+use super::context::Ctx;
+use super::plan::TreePlan;
+use super::trace::{Event, Trace, TraceSink};
+use super::verify::{self, Verification};
+
+/// Which of the paper's algorithms to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Algorithm 1 — plain TSQR (ABORT on failure).
+    Baseline,
+    /// Algorithm 2 — Redundant TSQR.
+    Redundant,
+    /// Algorithm 3 — Replace TSQR.
+    Replace,
+    /// Algorithms 4–6 — Self-Healing TSQR.
+    SelfHealing,
+    /// Comparator: TSQR + diskless neighbour checkpointing [17]
+    /// (see `crate::checkpoint`) — robustness bought with extra
+    /// messages instead of redundant computation.
+    Checkpointed,
+}
+
+impl Algo {
+    /// The paper's four algorithms (Algorithms 1–6).
+    pub const ALL: [Algo; 4] = [Algo::Baseline, Algo::Redundant, Algo::Replace, Algo::SelfHealing];
+    /// Everything, including the checkpointing comparator.
+    pub const ALL_WITH_COMPARATORS: [Algo; 5] = [
+        Algo::Baseline,
+        Algo::Redundant,
+        Algo::Replace,
+        Algo::SelfHealing,
+        Algo::Checkpointed,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Baseline => "baseline",
+            Algo::Redundant => "redundant",
+            Algo::Replace => "replace",
+            Algo::SelfHealing => "self-healing",
+            Algo::Checkpointed => "checkpointed",
+        }
+    }
+
+    /// Does the algorithm perform the redundant buddy *exchange*
+    /// (everyone keeps computing) rather than the one-way send?
+    pub fn is_redundant_family(&self) -> bool {
+        matches!(self, Algo::Redundant | Algo::Replace | Algo::SelfHealing)
+    }
+}
+
+impl std::str::FromStr for Algo {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "baseline" | "tsqr" => Ok(Algo::Baseline),
+            "redundant" => Ok(Algo::Redundant),
+            "replace" => Ok(Algo::Replace),
+            "self-healing" | "selfhealing" | "sh" => Ok(Algo::SelfHealing),
+            "checkpointed" | "checkpoint" | "ckpt" => Ok(Algo::Checkpointed),
+            _ => Err(Error::Config(format!(
+                "unknown algorithm '{s}' (baseline|redundant|replace|self-healing|checkpointed)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for Algo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Everything needed to run one factorization.
+#[derive(Clone)]
+pub struct RunSpec {
+    pub algo: Algo,
+    pub procs: usize,
+    pub rows_per_proc: usize,
+    pub cols: usize,
+    pub seed: u64,
+    pub schedule: Arc<KillSchedule>,
+    pub executor: Executor,
+    pub collect_trace: bool,
+    /// Verify the final R against the host oracle (skippable for large
+    /// Monte-Carlo sweeps where only survival matters).
+    pub verify: bool,
+}
+
+impl RunSpec {
+    /// Sensible defaults for a small fault-free run.
+    pub fn new(algo: Algo, procs: usize, rows_per_proc: usize, cols: usize) -> Self {
+        Self {
+            algo,
+            procs,
+            rows_per_proc,
+            cols,
+            seed: 42,
+            schedule: Arc::new(KillSchedule::none()),
+            executor: Executor::host(),
+            collect_trace: false,
+            verify: true,
+        }
+    }
+
+    pub fn with_schedule(mut self, s: KillSchedule) -> Self {
+        self.schedule = Arc::new(s);
+        self
+    }
+
+    pub fn with_executor(mut self, e: Executor) -> Self {
+        self.executor = e;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.collect_trace = on;
+        self
+    }
+
+    pub fn with_verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.procs == 0 {
+            return Err(Error::Config("procs must be >= 1".into()));
+        }
+        if self.rows_per_proc < self.cols {
+            return Err(Error::Config(format!(
+                "leaf panels must be tall-skinny: rows_per_proc {} < cols {}",
+                self.rows_per_proc, self.cols
+            )));
+        }
+        if self.algo.is_redundant_family() && !self.procs.is_power_of_two() {
+            return Err(Error::Config(format!(
+                "{} requires a power-of-two world (got {}): the replica-group \
+                 structure of §III-B3 is only defined there",
+                self.algo.name(),
+                self.procs
+            )));
+        }
+        if self.algo == Algo::Checkpointed && !self.procs.is_power_of_two() {
+            return Err(Error::Config(
+                "checkpointed TSQR partners within the reduction tree; procs must be a power of two"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// The full input matrix this spec factors (deterministic in seed).
+    pub fn input_matrix(&self) -> Matrix {
+        Matrix::random(self.procs * self.rows_per_proc, self.cols, self.seed)
+    }
+}
+
+/// Outcome of one run.
+#[derive(Debug)]
+pub struct RunResult {
+    pub spec_algo: Algo,
+    pub procs: usize,
+    pub statuses: Vec<ProcStatus>,
+    /// Ranks that finished holding the final R.
+    pub r_holders: Vec<Rank>,
+    /// The final R (canonicalized) if any process finished with one.
+    pub final_r: Option<Matrix>,
+    /// Max |Δ| between the canonical R's of different holders (the
+    /// redundancy-consistency check; 0 when holders agree bitwise).
+    pub holder_disagreement: f64,
+    pub metrics: MetricsSnapshot,
+    pub trace: Trace,
+    pub wall: Duration,
+    pub verification: Option<Verification>,
+}
+
+impl RunResult {
+    /// Success under each algorithm's own semantics (§III-B1/C1/D1):
+    /// baseline/checkpointed need the tree root to hold R; the
+    /// redundant family needs at least one survivor holding R.
+    pub fn success(&self) -> bool {
+        match self.spec_algo {
+            Algo::Baseline | Algo::Checkpointed => {
+                self.statuses.first().map(|s| s.has_final_r()).unwrap_or(false)
+            }
+            _ => !self.r_holders.is_empty(),
+        }
+    }
+
+    /// Self-Healing extra guarantee (§III-D1): world restored to full
+    /// size, i.e. every rank finished holding the final R.
+    pub fn fully_healed(&self) -> bool {
+        self.statuses.iter().all(|s| s.has_final_r())
+    }
+
+    pub fn dead_count(&self) -> usize {
+        self.statuses.iter().filter(|s| matches!(s, ProcStatus::Dead { .. })).count()
+    }
+}
+
+/// Wrapper around one process body: translates its outcome into world
+/// status, trace events and the result map.  Public because the
+/// Self-Healing respawn path spawns replacement processes through it.
+pub fn run_process_wrapper(ctx: Ctx, body: impl FnOnce() -> ProcOutcome) -> ProcOutcome {
+    let outcome = body();
+    if let ProcOutcome::FinalR(r) = &outcome {
+        ctx.deposit_result(r.clone());
+    }
+    if let Some(kind) = outcome.exit_kind() {
+        ctx.world.exit(ctx.rank, kind);
+        ctx.trace.emit(Event::Exited { rank: ctx.rank, kind });
+    }
+    outcome
+}
+
+/// Run one factorization end to end: spawns one OS thread per rank
+/// (plus dynamically respawned Self-Healing replacements), blocks
+/// until the world quiesces.
+pub fn run(spec: &RunSpec) -> Result<RunResult> {
+    spec.validate()?;
+    let plan = TreePlan::new(spec.procs);
+    let world = World::new(spec.procs);
+    let (sink, collector) = if spec.collect_trace {
+        let (s, c) = TraceSink::channel();
+        (s, Some(c))
+    } else {
+        (TraceSink::disabled(), None)
+    };
+    let results: super::context::ResultMap = Arc::new(Mutex::new(HashMap::new()));
+
+    let a = spec.input_matrix();
+    let started = Instant::now();
+
+    let mut handles = Vec::with_capacity(spec.procs);
+    for rank in 0..spec.procs {
+        let ctx = Ctx {
+            rank,
+            plan,
+            world: Arc::clone(&world),
+            exec: spec.executor.clone(),
+            trace: sink.clone(),
+            schedule: Arc::clone(&spec.schedule),
+            results: Arc::clone(&results),
+        };
+        let panel = a.row_block(rank * spec.rows_per_proc, (rank + 1) * spec.rows_per_proc);
+        let algo = spec.algo;
+        handles.push(std::thread::spawn(move || {
+            run_process_wrapper(ctx.clone(), move || match algo {
+                Algo::Baseline => algorithms::baseline(ctx, panel),
+                Algo::Redundant => algorithms::redundant(ctx, panel),
+                Algo::Replace => algorithms::replace(ctx, panel),
+                Algo::SelfHealing => algorithms::self_healing(ctx, panel),
+                Algo::Checkpointed => crate::checkpoint::checkpointed(ctx, panel),
+            })
+        }));
+    }
+
+    world.await_quiescent();
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = started.elapsed();
+    drop(sink); // release the trace channel so drain sees everything
+
+    let statuses = world.statuses();
+    let result_map = std::mem::take(&mut *results.lock().unwrap());
+    let mut r_holders: Vec<Rank> = result_map.keys().copied().collect();
+    r_holders.sort_unstable();
+
+    // Consistency across holders: all copies of the final R must agree.
+    let mut holder_disagreement = 0.0f64;
+    let canonical: Option<Matrix> = r_holders.first().map(|r0| result_map[r0].canonicalize_r());
+    if let Some(c0) = &canonical {
+        for r in &r_holders[1..] {
+            holder_disagreement =
+                holder_disagreement.max(result_map[r].canonicalize_r().max_abs_diff(c0));
+        }
+    }
+
+    let verification = if spec.verify && canonical.is_some() {
+        Some(verify::verify_r(&a, canonical.as_ref().unwrap()))
+    } else {
+        None
+    };
+
+    Ok(RunResult {
+        spec_algo: spec.algo,
+        procs: spec.procs,
+        statuses,
+        r_holders,
+        final_r: canonical,
+        holder_disagreement,
+        metrics: world.metrics().snapshot(),
+        trace: collector.map(|c| c.drain()).unwrap_or_default(),
+        wall,
+        verification,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validation() {
+        assert!(RunSpec::new(Algo::Redundant, 4, 16, 4).validate().is_ok());
+        assert!(RunSpec::new(Algo::Redundant, 6, 16, 4).validate().is_err(), "pow2 only");
+        assert!(RunSpec::new(Algo::Baseline, 6, 16, 4).validate().is_ok(), "baseline any P");
+        assert!(RunSpec::new(Algo::Baseline, 4, 2, 4).validate().is_err(), "wide leaf");
+        assert!(RunSpec::new(Algo::Baseline, 0, 8, 4).validate().is_err());
+        assert!(RunSpec::new(Algo::Checkpointed, 6, 16, 4).validate().is_err());
+    }
+
+    #[test]
+    fn algo_parsing_and_names() {
+        assert_eq!("baseline".parse::<Algo>().unwrap(), Algo::Baseline);
+        assert_eq!("sh".parse::<Algo>().unwrap(), Algo::SelfHealing);
+        assert_eq!("ckpt".parse::<Algo>().unwrap(), Algo::Checkpointed);
+        assert_eq!(Algo::Replace.name(), "replace");
+        assert!("nope".parse::<Algo>().is_err());
+        assert!(Algo::Redundant.is_redundant_family());
+        assert!(!Algo::Baseline.is_redundant_family());
+        assert!(!Algo::Checkpointed.is_redundant_family());
+        assert_eq!(format!("{}", Algo::SelfHealing), "self-healing");
+    }
+
+    #[test]
+    fn input_matrix_deterministic() {
+        let s = RunSpec::new(Algo::Baseline, 2, 8, 4);
+        assert_eq!(s.input_matrix(), s.input_matrix());
+        assert_eq!(s.input_matrix().shape(), (16, 4));
+    }
+
+    #[test]
+    fn fault_free_redundant_small() {
+        let spec = RunSpec::new(Algo::Redundant, 4, 16, 4);
+        let res = run(&spec).unwrap();
+        assert!(res.success());
+        assert_eq!(res.r_holders, vec![0, 1, 2, 3]);
+        assert_eq!(res.holder_disagreement, 0.0, "replicas must be bit-identical");
+        assert!(res.verification.as_ref().unwrap().ok);
+    }
+}

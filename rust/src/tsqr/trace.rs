@@ -1,0 +1,283 @@
+//! Structured execution traces — the machinery that regenerates the
+//! paper's Figures 1–5 as machine-checkable event streams.
+//!
+//! Every simulated process emits `Event`s through a cheap `TraceSink`;
+//! the runner collects them into a `Trace`, which offers both assertion
+//! helpers (used by tests/benches to check the figures' claims) and an
+//! ASCII rendering (what `repro trace` prints).
+
+use std::sync::Mutex;
+use std::sync::mpsc;
+
+use crate::ulfm::{ExitKind, Rank};
+
+/// One thing that happened on one simulated process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// Local leaf factorization (Algorithm 1 line 1).
+    LeafQr { rank: Rank },
+    /// Baseline: sent R̃ to the buddy and left the tree.
+    Send { rank: Rank, to: Rank, round: u32 },
+    /// Baseline: received buddy's R̃.
+    Recv { rank: Rank, from: Rank, round: u32 },
+    /// Redundant family: full sendrecv exchange with a peer.
+    Exchange { rank: Rank, with: Rank, round: u32 },
+    /// Local QR of the concatenated pair (tree node compute).
+    Combine { rank: Rank, round: u32 },
+    /// A communication attempt observed the ULFM failure error.
+    PeerFailed { rank: Rank, peer: Rank, round: u32 },
+    /// Replace TSQR: found a live replica of the dead buddy (Alg. 3 l.6).
+    ReplicaFound { rank: Rank, dead: Rank, replica: Rank, round: u32 },
+    /// Self-Healing: this rank triggered a respawn of a dead peer.
+    Respawn { rank: Rank, dead: Rank, round: u32 },
+    /// A respawned process recovered its state from a replica (Alg. 5).
+    Recovered { rank: Rank, from: Rank, round: u32 },
+    /// Fault injector crashed this rank at this round boundary.
+    Killed { rank: Rank, round: u32 },
+    /// Process left the algorithm.
+    Exited { rank: Rank, kind: ExitKind },
+}
+
+impl Event {
+    pub fn rank(&self) -> Rank {
+        match self {
+            Event::LeafQr { rank }
+            | Event::Send { rank, .. }
+            | Event::Recv { rank, .. }
+            | Event::Exchange { rank, .. }
+            | Event::Combine { rank, .. }
+            | Event::PeerFailed { rank, .. }
+            | Event::ReplicaFound { rank, .. }
+            | Event::Respawn { rank, .. }
+            | Event::Recovered { rank, .. }
+            | Event::Killed { rank, .. }
+            | Event::Exited { rank, .. } => *rank,
+        }
+    }
+}
+
+/// Shared sink handed to every process.  `None` disables tracing (the
+/// benches' hot path records nothing).
+#[derive(Clone, Default)]
+pub struct TraceSink(Option<mpsc::Sender<Event>>);
+
+impl TraceSink {
+    pub fn disabled() -> Self {
+        Self(None)
+    }
+
+    pub fn channel() -> (Self, TraceCollector) {
+        let (tx, rx) = mpsc::channel();
+        (Self(Some(tx)), TraceCollector(Mutex::new(rx)))
+    }
+
+    #[inline]
+    pub fn emit(&self, ev: Event) {
+        if let Some(tx) = &self.0 {
+            let _ = tx.send(ev);
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+}
+
+/// Receiver side; drained once after the run.
+pub struct TraceCollector(Mutex<mpsc::Receiver<Event>>);
+
+impl TraceCollector {
+    /// Drain everything emitted so far (call after all sinks dropped).
+    pub fn drain(&self) -> Trace {
+        let rx = self.0.lock().unwrap();
+        Trace { events: rx.try_iter().collect() }
+    }
+}
+
+/// The collected event stream of one run.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn of_rank(&self, rank: Rank) -> Vec<&Event> {
+        self.events.iter().filter(|e| e.rank() == rank).collect()
+    }
+
+    /// Ranks that performed a combine at `round`.
+    pub fn combiners_at(&self, round: u32) -> Vec<Rank> {
+        let mut v: Vec<Rank> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Combine { rank, round: r } if *r == round => Some(*rank),
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Exchange partners at `round` as sorted (low, high) pairs.
+    pub fn exchange_pairs_at(&self, round: u32) -> Vec<(Rank, Rank)> {
+        let mut v: Vec<(Rank, Rank)> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Exchange { rank, with, round: r } if *r == round => {
+                    Some((*rank.min(with), *rank.max(with)))
+                }
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn count(&self, pred: impl Fn(&Event) -> bool) -> usize {
+        self.events.iter().filter(|e| pred(e)).count()
+    }
+
+    pub fn exits(&self) -> Vec<(Rank, ExitKind)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Exited { rank, kind } => Some((*rank, *kind)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// ASCII rendering: one lane per rank, grouped by round — the
+    /// textual analogue of the paper's Figures 1–5.
+    pub fn render(&self, procs: usize, rounds: u32) -> String {
+        let mut out = String::new();
+        let lane = |s: &mut String, rank: Rank, text: &str| {
+            s.push_str(&format!("  P{rank}: {text}\n"));
+        };
+        out.push_str("round L (leaf factorizations)\n");
+        for r in 0..procs {
+            if self.events.iter().any(|e| matches!(e, Event::LeafQr { rank } if *rank == r)) {
+                lane(&mut out, r, "QR(A_local)");
+            }
+        }
+        for s in 0..rounds {
+            out.push_str(&format!("round {s}\n"));
+            for r in 0..procs {
+                let mut acts: Vec<String> = Vec::new();
+                for e in &self.events {
+                    if e.rank() != r {
+                        continue;
+                    }
+                    match e {
+                        Event::Send { to, round, .. } if *round == s => {
+                            acts.push(format!("send R̃ -> P{to}, done"))
+                        }
+                        Event::Recv { from, round, .. } if *round == s => {
+                            acts.push(format!("recv R̃ <- P{from}"))
+                        }
+                        Event::Exchange { with, round, .. } if *round == s => {
+                            acts.push(format!("exchange R̃ <-> P{with}"))
+                        }
+                        Event::Combine { round, .. } if *round == s => {
+                            acts.push("QR([R̃;R̃'])".to_string())
+                        }
+                        Event::PeerFailed { peer, round, .. } if *round == s => {
+                            acts.push(format!("FAIL: P{peer} dead"))
+                        }
+                        Event::ReplicaFound { dead, replica, round, .. } if *round == s => {
+                            acts.push(format!("replica of P{dead}: P{replica}"))
+                        }
+                        Event::Respawn { dead, round, .. } if *round == s => {
+                            acts.push(format!("spawnNew(P{dead})"))
+                        }
+                        Event::Recovered { from, round, .. } if *round == s => {
+                            acts.push(format!("recovered state <- P{from}"))
+                        }
+                        Event::Killed { round, .. } if *round == s => {
+                            acts.push("✗ CRASH".to_string())
+                        }
+                        _ => {}
+                    }
+                }
+                if !acts.is_empty() {
+                    lane(&mut out, r, &acts.join("; "));
+                }
+            }
+        }
+        out.push_str("final\n");
+        for (rank, kind) in self.exits() {
+            lane(
+                &mut out,
+                rank,
+                match kind {
+                    ExitKind::CompletedWithR => "holds final R ✓",
+                    ExitKind::CompletedWithoutR => "done (no R, sent upstream)",
+                    ExitKind::GaveUpPeerFailed => "exited: needed data from failed process",
+                    ExitKind::GaveUpNoReplica => "exited: no live replica",
+                },
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_collects_events() {
+        let (sink, coll) = TraceSink::channel();
+        sink.emit(Event::LeafQr { rank: 0 });
+        sink.emit(Event::Combine { rank: 0, round: 1 });
+        let sink2 = sink.clone();
+        sink2.emit(Event::Exchange { rank: 1, with: 0, round: 0 });
+        drop((sink, sink2));
+        let tr = coll.drain();
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr.of_rank(0).len(), 2);
+        assert_eq!(tr.combiners_at(1), vec![0]);
+    }
+
+    #[test]
+    fn disabled_sink_is_silent() {
+        let sink = TraceSink::disabled();
+        assert!(!sink.is_enabled());
+        sink.emit(Event::LeafQr { rank: 3 }); // must not panic
+    }
+
+    #[test]
+    fn exchange_pairs_deduplicate_both_sides() {
+        let (sink, coll) = TraceSink::channel();
+        sink.emit(Event::Exchange { rank: 0, with: 1, round: 0 });
+        sink.emit(Event::Exchange { rank: 1, with: 0, round: 0 });
+        sink.emit(Event::Exchange { rank: 2, with: 3, round: 0 });
+        drop(sink);
+        assert_eq!(coll.drain().exchange_pairs_at(0), vec![(0, 1), (2, 3)]);
+    }
+
+    #[test]
+    fn render_mentions_crash_and_result() {
+        let (sink, coll) = TraceSink::channel();
+        sink.emit(Event::LeafQr { rank: 0 });
+        sink.emit(Event::Killed { rank: 1, round: 0 });
+        sink.emit(Event::Exited { rank: 0, kind: ExitKind::CompletedWithR });
+        drop(sink);
+        let txt = coll.drain().render(2, 1);
+        assert!(txt.contains("CRASH"));
+        assert!(txt.contains("holds final R"));
+        assert!(txt.contains("QR(A_local)"));
+    }
+}

@@ -1,0 +1,92 @@
+//! Result verification: is the R the algorithms produced actually the
+//! R factor of the input matrix?
+//!
+//! R of a (full-rank) QR factorization is unique up to row signs, so
+//! everything is compared in canonical form (non-negative diagonal)
+//! against the host-side Householder oracle in `linalg::qr`.
+
+use crate::linalg::{Matrix, qr_r};
+
+/// Verification verdict for a final R.
+#[derive(Debug, Clone)]
+pub struct Verification {
+    /// max |R − R_ref| over entries (both canonicalized).
+    pub max_abs_err: f64,
+    /// ‖R − R_ref‖_F / ‖R_ref‖_F.
+    pub rel_fro_err: f64,
+    /// Strictly-lower-triangular part is numerically zero.
+    pub upper_triangular: bool,
+    /// Overall pass at the default tolerance.
+    pub ok: bool,
+}
+
+/// Default acceptance tolerance: f32 kernels accumulate across
+/// log2(P)+1 factorization levels, so allow a generous single-precision
+/// envelope (scaled comparisons stay well below this for sane inputs).
+pub const DEFAULT_TOL: f64 = 5e-3;
+
+/// Compare a computed final R against the host oracle's R of `a`.
+pub fn verify_r(a: &Matrix, r: &Matrix) -> Verification {
+    let r_ref = qr_r(a); // canonical by construction
+    let r_can = r.canonicalize_r();
+    let max_abs_err = r_can.max_abs_diff(&r_ref);
+    let rel_fro_err = r_can.rel_fro_err(&r_ref);
+    let upper_triangular = r_can.is_upper_triangular(1e-5);
+    let ok = rel_fro_err < DEFAULT_TOL && upper_triangular;
+    Verification { max_abs_err, rel_fro_err, upper_triangular, ok }
+}
+
+/// Full QR check (used by examples): rebuild Q explicitly and measure
+/// ‖A − QR‖/‖A‖ and ‖I − QᵀQ‖.
+pub fn verify_qr(a: &Matrix, q: &Matrix, r: &Matrix) -> (f64, f64) {
+    crate::linalg::qr_residuals(a, q, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::householder_qr;
+
+    #[test]
+    fn oracle_r_verifies_itself() {
+        let a = Matrix::random(64, 8, 5);
+        let v = verify_r(&a, &qr_r(&a));
+        assert!(v.ok);
+        assert_eq!(v.max_abs_err, 0.0);
+    }
+
+    #[test]
+    fn sign_flipped_r_still_verifies() {
+        let a = Matrix::random(32, 4, 6);
+        let mut r = qr_r(&a);
+        for j in 0..4 {
+            r[(1, j)] = -r[(1, j)]; // flip one row's signs
+        }
+        assert!(verify_r(&a, &r).ok, "verification must be sign-invariant");
+    }
+
+    #[test]
+    fn wrong_r_fails() {
+        let a = Matrix::random(32, 4, 7);
+        let wrong = qr_r(&Matrix::random(32, 4, 8));
+        assert!(!verify_r(&a, &wrong).ok);
+    }
+
+    #[test]
+    fn non_triangular_fails() {
+        let a = Matrix::random(16, 4, 9);
+        let mut r = qr_r(&a);
+        r[(3, 0)] = 1.0;
+        let v = verify_r(&a, &r);
+        assert!(!v.upper_triangular && !v.ok);
+    }
+
+    #[test]
+    fn full_qr_residuals_small_for_exact_factorization() {
+        let a = Matrix::random(48, 6, 10);
+        let f = householder_qr(&a);
+        let (rel, ortho) = verify_qr(&a, &f.q(), &f.r());
+        assert!(rel < 1e-5, "rel {rel}");
+        assert!(ortho < 1e-4, "ortho {ortho}");
+    }
+}

@@ -1,0 +1,191 @@
+//! Fault-aware collectives over a [`Communicator`] — the substrate a
+//! ULFM application uses around the factorization itself (result
+//! gathering, failure agreement, coordinated shutdown).
+//!
+//! All collectives operate on the *live* members of the communicator
+//! and follow ULFM semantics: they never hang on dead ranks, and they
+//! report which members were missing so the caller can repair the
+//! communicator and retry (the `MPIX_Comm_agree` + shrink pattern).
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+use super::comm::Communicator;
+use super::world::World;
+use super::Rank;
+
+/// Outcome of a fault-aware collective: the per-live-rank results plus
+/// the comm ranks that could not participate.
+#[derive(Debug, Clone)]
+pub struct Gathered<T> {
+    /// (comm_rank, value) for every live contributor, ascending rank.
+    pub values: Vec<(Rank, T)>,
+    /// Comm ranks that were dead / holes at collective time.
+    pub missing: Vec<Rank>,
+}
+
+impl<T> Gathered<T> {
+    pub fn complete(&self) -> bool {
+        self.missing.is_empty()
+    }
+}
+
+/// Gather each live member's round-`level` post (or `None` if it never
+/// posted one) — the result-collection collective the coordinator runs
+/// after a factorization.
+pub fn gather_posts(
+    world: &Arc<World>,
+    comm: &Communicator,
+    level: u32,
+) -> Gathered<Option<Arc<Matrix>>> {
+    let mut values = Vec::new();
+    let mut missing = Vec::new();
+    for comm_rank in 0..comm.size() {
+        match comm.translate(comm_rank) {
+            Ok(w) => values.push((comm_rank, world.peek(w, level))),
+            Err(_) => missing.push(comm_rank),
+        }
+    }
+    Gathered { values, missing }
+}
+
+/// Agreement on the failure set (trivially consistent here: the world
+/// has one failure view — real ULFM needs a consensus round for this).
+/// Returns the agreed list of failed comm ranks.
+pub fn agree_on_failures(comm: &Communicator) -> Vec<Rank> {
+    comm.failed_ranks()
+}
+
+/// Fault-aware barrier: returns once every member is *settled* — no
+/// longer Alive (exited or dead).  The coordinator's "join" primitive;
+/// unlike MPI_Barrier it cannot deadlock on failures.
+pub fn await_settled(world: &Arc<World>, comm: &Communicator) -> Result<()> {
+    // Reuse the world's quiescence wait when the comm spans everything;
+    // otherwise poll member status through the condvar-backed world.
+    let members: Vec<Rank> = (0..comm.size()).filter_map(|r| comm.translate(r).ok()).collect();
+    if members.len() == world.size() {
+        world.await_quiescent();
+        return Ok(());
+    }
+    // Sub-communicator: settle each member (translate errors mean the
+    // member is already dead — settled by definition).
+    loop {
+        let all_settled =
+            members.iter().all(|&w| !world.status(w).is_alive());
+        if all_settled {
+            return Ok(());
+        }
+        std::thread::yield_now();
+        std::hint::spin_loop();
+        // Cheap back-off; member exits bump the world condvar, but we
+        // poll here to keep the collective independent of board traffic.
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+}
+
+/// Reduce a metric across live members (max) — e.g. agreeing on the
+/// highest completed round before a coordinated restart.
+pub fn allreduce_max<F>(comm: &Communicator, f: F) -> Result<(usize, Vec<Rank>)>
+where
+    F: Fn(Rank) -> usize,
+{
+    let mut missing = Vec::new();
+    let mut best: Option<usize> = None;
+    for comm_rank in 0..comm.size() {
+        match comm.translate(comm_rank) {
+            Ok(w) => best = Some(best.map_or(f(w), |b| b.max(f(w)))),
+            Err(_) => missing.push(comm_rank),
+        }
+    }
+    match best {
+        Some(v) => Ok((v, missing)),
+        None => Err(Error::Aborted("allreduce over an empty communicator".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ulfm::comm::ErrorSemantics;
+    use crate::ulfm::world::ExitKind;
+
+    #[test]
+    fn gather_posts_reports_missing() {
+        let w = World::new(4);
+        w.post(0, 7, Matrix::eye(2, 2));
+        w.post(3, 7, Matrix::eye(2, 2));
+        w.kill(1, 0);
+        let c = Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Blank);
+        let g = gather_posts(&w, &c, 7);
+        assert_eq!(g.missing, vec![1]);
+        assert!(!g.complete());
+        let posted: Vec<Rank> =
+            g.values.iter().filter(|(_, v)| v.is_some()).map(|(r, _)| *r).collect();
+        assert_eq!(posted, vec![0, 3]);
+    }
+
+    #[test]
+    fn agreement_matches_world_view() {
+        let w = World::new(4);
+        w.kill(2, 1);
+        let c = Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Blank);
+        assert_eq!(agree_on_failures(&c), vec![2]);
+        // After SHRINK repair, agreement is clean again.
+        let c2 = Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Shrink)
+            .repair()
+            .unwrap();
+        assert!(agree_on_failures(&c2).is_empty());
+    }
+
+    #[test]
+    fn barrier_never_hangs_on_failures() {
+        let w = World::new(3);
+        let c = Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Blank);
+        let w2 = Arc::clone(&w);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(15));
+            w2.exit(0, ExitKind::CompletedWithR);
+            w2.kill(1, 0);
+            w2.exit(2, ExitKind::GaveUpPeerFailed);
+        });
+        await_settled(&w, &c).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn barrier_on_subcommunicator() {
+        let w = World::new(4);
+        let c = Communicator::from_ranks(Arc::clone(&w), &[1, 2], ErrorSemantics::Blank);
+        let w2 = Arc::clone(&w);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            w2.exit(1, ExitKind::CompletedWithR);
+            w2.exit(2, ExitKind::CompletedWithR);
+            // ranks 0 and 3 stay alive — the subcomm barrier must not care
+        });
+        await_settled(&w, &c).unwrap();
+        assert_eq!(w.alive_ranks(), vec![0, 3]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn allreduce_max_skips_dead() {
+        let w = World::new(4);
+        w.kill(3, 0);
+        let c = Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Blank);
+        let (v, missing) = allreduce_max(&c, |r| r * 10).unwrap();
+        assert_eq!(v, 20, "max over live ranks 0..2");
+        assert_eq!(missing, vec![3]);
+    }
+
+    #[test]
+    fn allreduce_over_dead_comm_errors() {
+        let w = World::new(2);
+        w.kill(0, 0);
+        w.kill(1, 0);
+        let c = Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Blank);
+        assert!(allreduce_max(&c, |r| r).is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! FT-MPI error-handling semantics on top of the simulated world (§II).
+//!
+//! FT-MPI defined four per-communicator semantics for surviving a
+//! process failure; the paper's three algorithms are expressible in
+//! terms of them (Redundant/Replace ≈ BLANK, Self-Healing ≈ REBUILD).
+//! This module implements all four faithfully so the coordinator can
+//! manage groups the way an FT-MPI/ULFM application would, and so the
+//! semantics themselves are testable in isolation:
+//!
+//! * `SHRINK`  — repair produces a communicator of size N−f with
+//!   survivors renumbered contiguously in [0, N−f−1].
+//! * `BLANK`   — repair keeps size N; dead slots become *invalid*:
+//!   addressing them returns `RankFailed`, survivors keep their ranks.
+//! * `REBUILD` — repair respawns every dead member into its old slot,
+//!   restoring size N with the same rank layout.
+//! * `ABORT`   — repair fails: the application terminates (default
+//!   non-fault-tolerant behaviour).
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+use super::world::World;
+use super::Rank;
+
+/// FT-MPI per-communicator error-handling semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorSemantics {
+    Shrink,
+    Blank,
+    Rebuild,
+    Abort,
+}
+
+impl std::str::FromStr for ErrorSemantics {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "shrink" => Ok(Self::Shrink),
+            "blank" => Ok(Self::Blank),
+            "rebuild" => Ok(Self::Rebuild),
+            "abort" => Ok(Self::Abort),
+            _ => Err(Error::Config(format!("unknown semantics '{s}'"))),
+        }
+    }
+}
+
+/// A communicator: an ordered set of world ranks with failure semantics.
+/// Slot i holds `Some(world_rank)` or `None` (a BLANK hole).
+#[derive(Debug, Clone)]
+pub struct Communicator {
+    world: Arc<World>,
+    slots: Vec<Option<Rank>>,
+    semantics: ErrorSemantics,
+}
+
+impl Communicator {
+    /// COMM_WORLD over all ranks.
+    pub fn world_comm(world: Arc<World>, semantics: ErrorSemantics) -> Self {
+        let slots = (0..world.size()).map(Some).collect();
+        Self { world, slots, semantics }
+    }
+
+    /// Sub-communicator over explicit world ranks.
+    pub fn from_ranks(world: Arc<World>, ranks: &[Rank], semantics: ErrorSemantics) -> Self {
+        Self { world, slots: ranks.iter().copied().map(Some).collect(), semantics }
+    }
+
+    pub fn semantics(&self) -> ErrorSemantics {
+        self.semantics
+    }
+
+    /// Communicator size, counting BLANK holes (per §II, BLANK keeps
+    /// the original numbering [0, N−1]).
+    pub fn size(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of live, addressable members.
+    pub fn live_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| matches!(s, Some(r) if self.world.status(*r).is_alive()))
+            .count()
+    }
+
+    /// Translate a communicator rank to a world rank; ULFM-style error
+    /// if the slot is a hole or the member has failed.
+    pub fn translate(&self, comm_rank: Rank) -> Result<Rank> {
+        match self.slots.get(comm_rank) {
+            None => Err(Error::Config(format!(
+                "rank {comm_rank} out of range for communicator of size {}",
+                self.size()
+            ))),
+            Some(None) => Err(Error::RankFailed(comm_rank)),
+            Some(Some(w)) => {
+                if self.world.status(*w).is_alive() {
+                    Ok(*w)
+                } else {
+                    Err(Error::RankFailed(comm_rank))
+                }
+            }
+        }
+    }
+
+    /// Comm ranks whose member has failed (the agreement step real ULFM
+    /// does with `MPIX_Comm_agree`; trivially consistent here because
+    /// the world has a single failure view).
+    pub fn failed_ranks(&self) -> Vec<Rank> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                Some(w) if !self.world.status(*w).is_alive() => Some(i),
+                None => Some(i),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Apply this communicator's failure semantics, producing the
+    /// repaired communicator (or terminating under ABORT).
+    pub fn repair(&self) -> Result<Communicator> {
+        let failed = self.failed_ranks();
+        match self.semantics {
+            ErrorSemantics::Abort => {
+                if failed.is_empty() {
+                    Ok(self.clone())
+                } else {
+                    Err(Error::Aborted(format!(
+                        "{} process(es) failed under ABORT semantics",
+                        failed.len()
+                    )))
+                }
+            }
+            ErrorSemantics::Shrink => {
+                // Survivors renumbered contiguously: size N-f, no holes.
+                let slots: Vec<Option<Rank>> = self
+                    .slots
+                    .iter()
+                    .filter(|s| matches!(s, Some(w) if self.world.status(*w).is_alive()))
+                    .cloned()
+                    .collect();
+                Ok(Communicator { world: Arc::clone(&self.world), slots, semantics: self.semantics })
+            }
+            ErrorSemantics::Blank => {
+                // Same size; dead members become holes, survivors keep ranks.
+                let slots: Vec<Option<Rank>> = self
+                    .slots
+                    .iter()
+                    .map(|s| match s {
+                        Some(w) if self.world.status(*w).is_alive() => Some(*w),
+                        _ => None,
+                    })
+                    .collect();
+                Ok(Communicator { world: Arc::clone(&self.world), slots, semantics: self.semantics })
+            }
+            ErrorSemantics::Rebuild => {
+                // Respawn every dead member into its old slot.  Exited
+                // members are gone for good (they returned; nothing to
+                // replace) and become holes.
+                let mut slots = Vec::with_capacity(self.slots.len());
+                for s in &self.slots {
+                    match s {
+                        Some(w) => {
+                            let st = self.world.status(*w);
+                            if st.is_alive() {
+                                slots.push(Some(*w));
+                            } else if matches!(st, super::world::ProcStatus::Dead { .. }) {
+                                self.world.respawn(*w);
+                                slots.push(Some(*w));
+                            } else {
+                                slots.push(None);
+                            }
+                        }
+                        None => slots.push(None),
+                    }
+                }
+                Ok(Communicator { world: Arc::clone(&self.world), slots, semantics: self.semantics })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ulfm::world::ExitKind;
+
+    fn world4() -> Arc<World> {
+        World::new(4)
+    }
+
+    #[test]
+    fn translate_live_ranks() {
+        let w = world4();
+        let c = Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Blank);
+        assert_eq!(c.size(), 4);
+        assert_eq!(c.translate(2).unwrap(), 2);
+        assert!(c.translate(9).is_err());
+    }
+
+    #[test]
+    fn shrink_renumbers_contiguously() {
+        // §II: after rank p of N dies, SHRINK leaves N-1 procs in [0, N-2].
+        let w = world4();
+        w.kill(1, 0);
+        let c = Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Shrink);
+        let repaired = c.repair().unwrap();
+        assert_eq!(repaired.size(), 3);
+        assert_eq!(repaired.translate(0).unwrap(), 0);
+        assert_eq!(repaired.translate(1).unwrap(), 2); // renumbered
+        assert_eq!(repaired.translate(2).unwrap(), 3);
+        assert!(repaired.failed_ranks().is_empty());
+    }
+
+    #[test]
+    fn blank_leaves_hole_and_keeps_ranks() {
+        // §II: BLANK keeps original ranks in [0, N-1]; dead rank invalid.
+        let w = world4();
+        w.kill(1, 0);
+        let repaired =
+            Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Blank).repair().unwrap();
+        assert_eq!(repaired.size(), 4);
+        assert!(matches!(repaired.translate(1), Err(Error::RankFailed(1))));
+        assert_eq!(repaired.translate(3).unwrap(), 3); // original rank kept
+        assert_eq!(repaired.live_count(), 3);
+        assert_eq!(repaired.failed_ranks(), vec![1]);
+    }
+
+    #[test]
+    fn rebuild_respawns_into_same_slot() {
+        // §II: REBUILD spawns a replacement with the dead process's rank.
+        let w = world4();
+        w.kill(2, 1);
+        let repaired =
+            Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Rebuild).repair().unwrap();
+        assert_eq!(repaired.size(), 4);
+        assert_eq!(repaired.translate(2).unwrap(), 2);
+        assert!(w.status(2).is_alive());
+        assert_eq!(w.metrics().snapshot().respawns, 1);
+    }
+
+    #[test]
+    fn rebuild_does_not_resurrect_exited() {
+        let w = world4();
+        w.exit(3, ExitKind::CompletedWithR);
+        let repaired =
+            Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Rebuild).repair().unwrap();
+        assert!(matches!(repaired.translate(3), Err(Error::RankFailed(3))));
+    }
+
+    #[test]
+    fn abort_terminates_on_failure() {
+        let w = world4();
+        let c = Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Abort);
+        assert!(c.repair().is_ok(), "no failure, no abort");
+        w.kill(0, 0);
+        assert!(matches!(c.repair(), Err(Error::Aborted(_))));
+    }
+
+    #[test]
+    fn translate_dead_is_ulfm_error_before_repair() {
+        let w = world4();
+        w.kill(3, 0);
+        let c = Communicator::world_comm(Arc::clone(&w), ErrorSemantics::Blank);
+        assert!(matches!(c.translate(3), Err(Error::RankFailed(3))));
+    }
+
+    #[test]
+    fn sub_communicator() {
+        let w = world4();
+        let c = Communicator::from_ranks(Arc::clone(&w), &[1, 3], ErrorSemantics::Shrink);
+        assert_eq!(c.size(), 2);
+        assert_eq!(c.translate(0).unwrap(), 1);
+        w.kill(1, 0);
+        let r = c.repair().unwrap();
+        assert_eq!(r.size(), 1);
+        assert_eq!(r.translate(0).unwrap(), 3);
+    }
+
+    #[test]
+    fn semantics_parse() {
+        assert_eq!("shrink".parse::<ErrorSemantics>().unwrap(), ErrorSemantics::Shrink);
+        assert_eq!("rebuild".parse::<ErrorSemantics>().unwrap(), ErrorSemantics::Rebuild);
+        assert!("bogus".parse::<ErrorSemantics>().is_err());
+    }
+}

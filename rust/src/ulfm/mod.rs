@@ -1,0 +1,25 @@
+//! Simulated MPI + ULFM substrate.
+//!
+//! The paper's algorithms are written against User-Level Failure
+//! Mitigation (ULFM) / FT-MPI semantics (§II): communication with a
+//! failed process returns an error (`MPI_ERR_PROC_FAILED`), operations
+//! not touching a failed process proceed unknowingly, and a dead rank
+//! can be respawned into its old slot (REBUILD).
+//!
+//! Substitution (DESIGN.md §3): instead of a cluster, each MPI rank is
+//! a tokio task; the network is an in-process *post board* with
+//! message-passing semantics (a message posted before the sender died
+//! is still deliverable — exactly MPI's buffered-send behaviour), and
+//! failures are injected deterministically at step boundaries, which is
+//! the granularity of the paper's robustness analysis.  This makes the
+//! `2^s − 1` claims *exhaustively checkable* rather than anecdotal.
+
+pub mod collectives;
+pub mod comm;
+pub mod world;
+
+pub use comm::{Communicator, ErrorSemantics};
+pub use world::{ExitKind, PeerFetch, ProcStatus, World};
+
+/// An MPI-style process rank.
+pub type Rank = usize;

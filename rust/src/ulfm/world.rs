@@ -1,0 +1,611 @@
+//! The simulated world: process registry, failure detector, and the
+//! post board that carries every inter-process message.
+//!
+//! Each simulated MPI rank is an OS thread; the world is shared state
+//! under one mutex with a condvar for blocking receives.  (The
+//! vendored crate set has no async runtime — and the algorithms are
+//! blocking sendrecv loops anyway, so threads model them exactly.)
+//!
+//! ## Message semantics
+//!
+//! `post(rank, level, R)` models the *send* half of the paper's
+//! `sendrecv` at exchange round `level`; `fetch(peer, level)` models
+//! the *recv* half.  A fetch succeeds iff the peer has posted for that
+//! round — even if the peer died afterwards (the message was already
+//! in flight, like a buffered MPI send).  If the peer is dead or has
+//! exited *without* posting for that round, the fetch returns the ULFM
+//! error `Error::RankFailed(peer)`; if the peer is alive but hasn't
+//! posted yet, the fetch blocks.
+//!
+//! This gives exactly the paper's step-granular failure model: a
+//! process that "crashes at the end of step s" (Fig. 3) computed R̃_s
+//! but never posts it for the round-s exchange, so its buddy observes
+//! `FAIL` at that round.
+//!
+//! ## Why a post board and not point-to-point channels
+//!
+//! In Replace TSQR a process exchanges with a *replica* of its dead
+//! buddy (Fig. 4) — a rank that never addressed it.  All copies of a
+//! group's R̃ are bit-identical, so the board (keyed by `(level, rank)`)
+//! lets any process read any rank's round-s message exactly the way
+//! ULFM lets it re-target a sendrecv, without a request/serve protocol
+//! bolted onto every process loop.  Messages and bytes are still
+//! counted per fetch, so communication metrics are unchanged.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+use super::Rank;
+
+/// Why a process left the computation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitKind {
+    /// Finished the algorithm holding the final R.
+    CompletedWithR,
+    /// Finished its role without the final R (e.g. baseline sender).
+    CompletedWithoutR,
+    /// Returned early because a peer it needed had failed (Alg. 2 line 7).
+    GaveUpPeerFailed,
+    /// Returned early because no live replica existed (Alg. 3 line 8).
+    GaveUpNoReplica,
+}
+
+/// Liveness state of one rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProcStatus {
+    Alive,
+    /// Crashed (fault injector) at the given exchange round.
+    Dead { at_round: u32 },
+    /// Returned from the algorithm (normally or giving up).
+    Exited(ExitKind),
+}
+
+impl ProcStatus {
+    pub fn is_alive(&self) -> bool {
+        matches!(self, ProcStatus::Alive)
+    }
+    /// Failed from a peer's point of view: dead, or exited so it will
+    /// never post again ("processes that require data from ended
+    /// processes end theirs as well").
+    pub fn is_unreachable(&self) -> bool {
+        !self.is_alive()
+    }
+    pub fn has_final_r(&self) -> bool {
+        matches!(self, ProcStatus::Exited(ExitKind::CompletedWithR))
+    }
+}
+
+/// Communication counters (relaxed atomics — read after the run).
+#[derive(Debug, Default)]
+pub struct WorldMetrics {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+    pub posts: AtomicU64,
+    pub failed_fetches: AtomicU64,
+    pub respawns: AtomicU64,
+}
+
+impl WorldMetrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            messages: self.messages.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            posts: self.posts.load(Ordering::Relaxed),
+            failed_fetches: self.failed_fetches.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of the counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub messages: u64,
+    pub bytes: u64,
+    pub posts: u64,
+    pub failed_fetches: u64,
+    pub respawns: u64,
+}
+
+/// Outcome of [`World::fetch_peer`].
+#[derive(Debug, Clone)]
+pub enum PeerFetch {
+    /// The peer's post for this round.
+    Post(Arc<Matrix>),
+    /// ULFM failure: peer dead or exited without posting.
+    Unreachable,
+    /// Peer is a respawned replacement that has not recovered yet — it
+    /// will never post for this round; use a replica instead.
+    Recovering,
+}
+
+struct Inner {
+    status: Vec<ProcStatus>,
+    board: HashMap<(u32, Rank), Arc<Matrix>>,
+    /// Respawned replacements that have not yet recovered their state:
+    /// they hold NO data, so they are not valid replica sources (and
+    /// treating them as sources would deadlock two recoveries in the
+    /// same dead group against each other).  Cleared on first post.
+    recovering: Vec<bool>,
+    /// The exchange round each incarnation entered the computation at:
+    /// 0 for original processes, the respawn round for replacements.
+    /// A replacement NEVER posts for rounds below its entry round, so
+    /// fetches at those levels must not wait on it (a fast peer may
+    /// respawn a rank at round r2 before a slow peer needs it at
+    /// r1 < r2 — waiting would deadlock).
+    entry_round: Vec<u32>,
+    /// Targeted wakeups (perf): one condvar per awaited (rank → level)
+    /// post key, so a post wakes only ITS waiters and a status change
+    /// of rank r wakes only fetches directed at r — not every blocked
+    /// process (the naive global condvar costs O(P²) wakeups per round
+    /// and dominated wall time at P ≥ 32; see EXPERIMENTS.md §Perf).
+    /// All condvars pair with the same `World::inner` mutex.
+    keyed_cvs: Vec<HashMap<u32, Arc<Condvar>>>,
+}
+
+impl Inner {
+    fn cv_for(&mut self, level: u32, rank: Rank) -> Arc<Condvar> {
+        Arc::clone(self.keyed_cvs[rank].entry(level).or_default())
+    }
+}
+
+/// The shared world. Cheap to clone via `Arc<World>`.
+pub struct World {
+    size: usize,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    metrics: WorldMetrics,
+}
+
+impl World {
+    pub fn new(size: usize) -> Arc<Self> {
+        Arc::new(Self {
+            size,
+            inner: Mutex::new(Inner {
+                status: vec![ProcStatus::Alive; size],
+                board: HashMap::new(),
+                recovering: vec![false; size],
+                entry_round: vec![0; size],
+                keyed_cvs: vec![HashMap::new(); size],
+            }),
+            cv: Condvar::new(),
+            metrics: WorldMetrics::default(),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn metrics(&self) -> &WorldMetrics {
+        &self.metrics
+    }
+
+    /// Wake the waiters affected by a status change of `rank`: fetches
+    /// directed at `rank` (any level) plus the global condvar (group
+    /// fetches, quiescence).  Everyone else keeps sleeping.
+    fn wake_status_change(&self, inner: &Inner, rank: Rank) {
+        for cv in inner.keyed_cvs[rank].values() {
+            cv.notify_all();
+        }
+        self.cv.notify_all();
+    }
+
+    pub fn status(&self, rank: Rank) -> ProcStatus {
+        self.inner.lock().unwrap().status[rank]
+    }
+
+    pub fn statuses(&self) -> Vec<ProcStatus> {
+        self.inner.lock().unwrap().status.clone()
+    }
+
+    /// Ranks currently alive.
+    pub fn alive_ranks(&self) -> Vec<Rank> {
+        self.inner
+            .lock()
+            .unwrap()
+            .status
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_alive())
+            .map(|(r, _)| r)
+            .collect()
+    }
+
+    /// Ranks that finished holding the final R.
+    pub fn ranks_with_final_r(&self) -> Vec<Rank> {
+        self.inner
+            .lock()
+            .unwrap()
+            .status
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.has_final_r())
+            .map(|(r, _)| r)
+            .collect()
+    }
+
+    /// Fault injector: crash `rank` at exchange round `round`.
+    /// Killing a non-alive rank is a no-op.
+    pub fn kill(&self, rank: Rank, round: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.status[rank].is_alive() {
+            inner.status[rank] = ProcStatus::Dead { at_round: round };
+        }
+        self.wake_status_change(&inner, rank);
+    }
+
+    /// A process records its own (voluntary) termination.
+    pub fn exit(&self, rank: Rank, kind: ExitKind) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.status[rank].is_alive() {
+            inner.status[rank] = ProcStatus::Exited(kind);
+        }
+        self.wake_status_change(&inner, rank);
+    }
+
+    /// REBUILD semantics: bring a dead rank back as a fresh process.
+    /// Returns false if the rank was not dead (someone else already
+    /// respawned it — the operation must be idempotent under races).
+    /// Old posts stay on the board: messages already sent by the dead
+    /// incarnation remain deliverable (they are bit-identical replicas
+    /// of data other ranks may still legitimately consume).
+    pub fn respawn(&self, rank: Rank) -> bool {
+        self.respawn_at(rank, 0)
+    }
+
+    /// REBUILD with an explicit entry round: the replacement joins the
+    /// computation at exchange round `entry_round` and will never post
+    /// for rounds below it — fetches at lower levels re-target replicas
+    /// instead of waiting (see `fetch_peer`).
+    pub fn respawn_at(&self, rank: Rank, entry_round: u32) -> bool {
+        let did = {
+            let mut inner = self.inner.lock().unwrap();
+            match inner.status[rank] {
+                ProcStatus::Dead { .. } => {
+                    inner.status[rank] = ProcStatus::Alive;
+                    inner.recovering[rank] = true;
+                    inner.entry_round[rank] = entry_round;
+                    true
+                }
+                _ => false,
+            }
+        };
+        if did {
+            self.metrics.respawns.fetch_add(1, Ordering::Relaxed);
+            let inner = self.inner.lock().unwrap();
+            self.wake_status_change(&inner, rank);
+        }
+        did
+    }
+
+    /// Send half of the round-`level` exchange: make `rank`'s R̃ for this
+    /// round visible to whoever fetches it.
+    pub fn post(&self, rank: Rank, level: u32, payload: Matrix) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.board.insert((level, rank), Arc::new(payload));
+            inner.recovering[rank] = false; // it holds data again
+            // Targeted wakeup: whoever awaits THIS post, plus the
+            // global condvar for group-fetch/quiescence waiters.
+            if let Some(cv) = inner.keyed_cvs[rank].get(&level) {
+                cv.notify_all();
+            }
+            self.cv.notify_all();
+        }
+        self.metrics.posts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account for a message that is *sent* regardless of any fetch —
+    /// e.g. the diskless-checkpoint comparator pays one message per
+    /// checkpoint whether or not the checkpoint is ever read.
+    pub fn charge_message(&self, bytes: u64) {
+        self.metrics.messages.fetch_add(1, Ordering::Relaxed);
+        self.metrics.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Non-blocking read of a posted message (used by recovery paths).
+    pub fn peek(&self, rank: Rank, level: u32) -> Option<Arc<Matrix>> {
+        self.inner.lock().unwrap().board.get(&(level, rank)).cloned()
+    }
+
+    /// Recv half of the exchange: block until `peer`'s round-`level`
+    /// post is available.
+    ///
+    /// Returns `Error::RankFailed(peer)` — the ULFM error class — iff
+    /// the peer is unreachable (dead or exited) and never posted for
+    /// this round.  Posted-then-died still delivers.
+    pub fn fetch(&self, peer: Rank, level: u32) -> Result<Arc<Matrix>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(m) = inner.board.get(&(level, peer)) {
+                self.metrics.messages.fetch_add(1, Ordering::Relaxed);
+                self.metrics.bytes.fetch_add(m.size_bytes() as u64, Ordering::Relaxed);
+                return Ok(Arc::clone(m));
+            }
+            if inner.status[peer].is_unreachable() {
+                self.metrics.failed_fetches.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::RankFailed(peer));
+            }
+            let cv = inner.cv_for(level, peer);
+            inner = cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Block until no rank is alive (every process crashed or exited) —
+    /// how the coordinator knows a run has fully quiesced, including
+    /// dynamically respawned Self-Healing processes.
+    pub fn await_quiescent(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.status.iter().any(|s| s.is_alive()) {
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Diagnostics: all (level, rank) post keys currently on the board.
+    ///
+    /// (See `debug_recovering` / `debug_entry_rounds` for the rest of
+    /// the introspection surface used by the deadlock regression
+    /// tests.)
+    pub fn debug_board_keys(&self) -> Vec<(u32, Rank)> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<(u32, Rank)> = inner.board.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Diagnostics: ranks currently flagged as recovering.
+    pub fn debug_recovering(&self) -> Vec<Rank> {
+        let inner = self.inner.lock().unwrap();
+        (0..self.size).filter(|&r| inner.recovering[r]).collect()
+    }
+
+    /// Diagnostics: per-rank incarnation entry rounds.
+    pub fn debug_entry_rounds(&self) -> Vec<u32> {
+        self.inner.lock().unwrap().entry_round.clone()
+    }
+
+    /// Find a live rank (other than `except`) in `candidates` — the
+    /// `findReplica` primitive of Algorithm 3.  Deterministic order so
+    /// traces are reproducible.
+    pub fn find_live(&self, candidates: &[Rank], except: Rank) -> Option<Rank> {
+        let inner = self.inner.lock().unwrap();
+        candidates
+            .iter()
+            .copied()
+            .find(|&r| r != except && inner.status[r].is_alive())
+    }
+
+    /// Tri-state receive used by Self-Healing: wait for `peer`'s
+    /// round-`level` post, but also resolve if the peer is unreachable
+    /// (dead/exited — the ULFM error that triggers `spawnNew`) or is a
+    /// *still-recovering replacement*.  A replacement respawned by a
+    /// peer at a LATER round enters the computation there and will
+    /// never post for this round — waiting on it would starve the
+    /// caller (and can deadlock chains of recoveries), so the caller
+    /// must fall back to a replica of the same group instead.
+    pub fn fetch_peer(&self, peer: Rank, level: u32) -> PeerFetch {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(m) = inner.board.get(&(level, peer)) {
+                self.metrics.messages.fetch_add(1, Ordering::Relaxed);
+                self.metrics.bytes.fetch_add(m.size_bytes() as u64, Ordering::Relaxed);
+                return PeerFetch::Post(Arc::clone(m));
+            }
+            if inner.status[peer].is_unreachable() {
+                self.metrics.failed_fetches.fetch_add(1, Ordering::Relaxed);
+                return PeerFetch::Unreachable;
+            }
+            if inner.recovering[peer] || inner.entry_round[peer] > level {
+                // Still recovering, or an incarnation that entered the
+                // computation above this level: it will never post
+                // here — re-target a replica instead of waiting.
+                return PeerFetch::Recovering;
+            }
+            let cv = inner.cv_for(level, peer);
+            inner = cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Fetch the round-`level` data of a *replica group*: block until
+    /// any candidate's post for this round is available, or until no
+    /// candidate can ever produce one.
+    ///
+    /// A candidate is a *potential source* iff it is alive and not a
+    /// still-recovering replacement (a replacement holds no data until
+    /// its first post — counting it as a source would let two
+    /// recoveries in the same dead group wait on each other forever).
+    /// Posted-then-died messages still deliver.
+    ///
+    /// Used by Replace's `findReplica` retarget (Alg. 3 line 6) and by
+    /// Self-Healing's state recovery (Alg. 5).  Returns
+    /// `Error::NoReplica(except)` when the group's data is gone — the
+    /// `2^s − 1` bound was exceeded for this group.
+    pub fn fetch_from_group(
+        &self,
+        candidates: &[Rank],
+        except: Rank,
+        level: u32,
+    ) -> Result<(Rank, Arc<Matrix>)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            for &q in candidates {
+                if q == except {
+                    continue;
+                }
+                if let Some(m) = inner.board.get(&(level, q)) {
+                    self.metrics.messages.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.bytes.fetch_add(m.size_bytes() as u64, Ordering::Relaxed);
+                    return Ok((q, Arc::clone(m)));
+                }
+            }
+            let possible = candidates.iter().any(|&q| {
+                q != except
+                    && inner.status[q].is_alive()
+                    && !inner.recovering[q]
+                    && inner.entry_round[q] <= level
+            });
+            if !possible {
+                self.metrics.failed_fetches.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::NoReplica(except));
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+}
+
+impl std::fmt::Debug for World {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("World")
+            .field("size", &self.size)
+            .field("status", &inner.status)
+            .field("board_entries", &inner.board.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn post_then_fetch_delivers() {
+        let w = World::new(2);
+        w.post(1, 0, Matrix::eye(2, 2));
+        let got = w.fetch(1, 0).unwrap();
+        assert_eq!(*got, Matrix::eye(2, 2));
+        assert_eq!(w.metrics().snapshot().messages, 1);
+        assert_eq!(w.metrics().snapshot().bytes, 16);
+    }
+
+    #[test]
+    fn fetch_waits_for_post() {
+        let w = World::new(2);
+        let w2 = Arc::clone(&w);
+        let waiter = std::thread::spawn(move || w2.fetch(0, 3));
+        std::thread::sleep(Duration::from_millis(20));
+        w.post(0, 3, Matrix::zeros(1, 1));
+        let got = waiter.join().unwrap().unwrap();
+        assert_eq!(got.shape(), (1, 1));
+    }
+
+    #[test]
+    fn fetch_from_dead_without_post_is_rank_failed() {
+        let w = World::new(2);
+        w.kill(1, 0);
+        let err = w.fetch(1, 0).unwrap_err();
+        assert!(matches!(err, Error::RankFailed(1)));
+        assert_eq!(w.metrics().snapshot().failed_fetches, 1);
+    }
+
+    #[test]
+    fn posted_then_died_still_delivers() {
+        // Buffered-send semantics: the message survives the sender.
+        let w = World::new(2);
+        w.post(1, 0, Matrix::eye(1, 1));
+        w.kill(1, 0);
+        assert!(w.fetch(1, 0).is_ok());
+    }
+
+    #[test]
+    fn exited_without_post_is_unreachable() {
+        // "Processes that require data from ended processes end theirs."
+        let w = World::new(2);
+        w.exit(0, ExitKind::GaveUpPeerFailed);
+        let err = w.fetch(0, 1).unwrap_err();
+        assert!(matches!(err, Error::RankFailed(0)));
+    }
+
+    #[test]
+    fn kill_unblocks_pending_fetch() {
+        let w = World::new(2);
+        let w2 = Arc::clone(&w);
+        let waiter = std::thread::spawn(move || w2.fetch(1, 0));
+        std::thread::sleep(Duration::from_millis(20));
+        w.kill(1, 0);
+        let res = waiter.join().unwrap();
+        assert!(matches!(res, Err(Error::RankFailed(1))));
+    }
+
+    #[test]
+    fn respawn_only_revives_dead() {
+        let w = World::new(3);
+        assert!(!w.respawn(0), "alive rank must not respawn");
+        w.kill(0, 2);
+        assert!(w.respawn(0));
+        assert!(w.status(0).is_alive());
+        assert!(!w.respawn(0), "second respawn is a no-op");
+        w.exit(1, ExitKind::CompletedWithR);
+        assert!(!w.respawn(1), "exited rank is not respawnable");
+        assert_eq!(w.metrics().snapshot().respawns, 1);
+    }
+
+    #[test]
+    fn respawn_keeps_old_posts_deliverable() {
+        // Messages already sent survive the sender's death AND its
+        // replacement: stragglers still consume them.
+        let w = World::new(2);
+        w.post(0, 0, Matrix::eye(1, 1));
+        w.kill(0, 1);
+        w.respawn(0);
+        assert!(w.peek(0, 0).is_some());
+    }
+
+    #[test]
+    fn find_live_skips_dead_and_self() {
+        let w = World::new(4);
+        w.kill(2, 0);
+        assert_eq!(w.find_live(&[2, 3], 99), Some(3));
+        assert_eq!(w.find_live(&[2], 99), None);
+        assert_eq!(w.find_live(&[3], 3), None, "except self");
+    }
+
+    #[test]
+    fn status_queries() {
+        let w = World::new(4);
+        w.kill(1, 0);
+        w.exit(2, ExitKind::CompletedWithR);
+        w.exit(3, ExitKind::GaveUpPeerFailed);
+        assert_eq!(w.alive_ranks(), vec![0]);
+        assert_eq!(w.ranks_with_final_r(), vec![2]);
+        assert!(w.status(1).is_unreachable());
+        assert!(!w.status(1).has_final_r());
+    }
+
+    #[test]
+    fn kill_then_exit_keeps_dead_status() {
+        let w = World::new(1);
+        w.kill(0, 5);
+        w.exit(0, ExitKind::CompletedWithR); // task raced; must not resurrect
+        assert_eq!(w.status(0), ProcStatus::Dead { at_round: 5 });
+    }
+
+    #[test]
+    fn await_quiescent_returns_when_everyone_gone() {
+        let w = World::new(2);
+        let w2 = Arc::clone(&w);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            w2.exit(0, ExitKind::CompletedWithR);
+            w2.kill(1, 0);
+        });
+        w.await_quiescent();
+        h.join().unwrap();
+        assert!(w.alive_ranks().is_empty());
+    }
+
+    #[test]
+    fn charge_message_counts() {
+        let w = World::new(1);
+        w.charge_message(64);
+        let m = w.metrics().snapshot();
+        assert_eq!(m.messages, 1);
+        assert_eq!(m.bytes, 64);
+    }
+}

@@ -1,0 +1,299 @@
+//! The flat config-file format (in lieu of `toml`):
+//!
+//! ```text
+//! # comment
+//! algo = "replace"
+//! procs = 16
+//! verify = true
+//! [failures]
+//! mode = "at"
+//! kills = [[2, 1], [5, 2]]
+//! ```
+//!
+//! Sections prefix keys with `section.`: the `kills` line above is
+//! stored under `failures.kills`.  Values: quoted strings, integers,
+//! floats, booleans, and (nested) arrays of integers.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    /// Arrays of integers or integer pairs (`[[2,1],[5,2]]` flattens to
+    /// nested `Arr`).
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().filter(|x| *x >= 0).map(|x| x as usize)
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed key-value document (keys are `section.key` or bare `key`).
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected 'key = value'", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim())
+                .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+            map.insert(key, value);
+        }
+        Ok(Doc { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn str_of(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+    pub fn usize_of(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(Value::as_usize)
+    }
+    pub fn u64_of(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(Value::as_i64).filter(|x| *x >= 0).map(|x| x as u64)
+    }
+    pub fn f64_of(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+    pub fn bool_of(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    /// `[[2,1],[5,2]]` → vec![(2,1), (5,2)].
+    pub fn pairs_of(&self, key: &str) -> Option<Vec<(usize, u32)>> {
+        let arr = self.get(key)?.as_arr()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for item in arr {
+            let pair = item.as_arr()?;
+            if pair.len() != 2 {
+                return None;
+            }
+            out.push((pair[0].as_usize()?, pair[1].as_usize()? as u32));
+        }
+        Some(out)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        return parse_array(s);
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+fn parse_array(s: &str) -> std::result::Result<Value, String> {
+    // Tiny recursive parser over a char cursor.
+    fn inner(b: &[u8], i: &mut usize) -> std::result::Result<Value, String> {
+        // *i points at '['.
+        *i += 1;
+        let mut items = Vec::new();
+        loop {
+            while *i < b.len() && (b[*i] as char).is_whitespace() {
+                *i += 1;
+            }
+            match b.get(*i) {
+                None => return Err("unterminated array".into()),
+                Some(b']') => {
+                    *i += 1;
+                    return Ok(Value::Arr(items));
+                }
+                Some(b'[') => items.push(inner(b, i)?),
+                Some(_) => {
+                    let start = *i;
+                    while *i < b.len() && !matches!(b[*i], b',' | b']' | b'[') {
+                        *i += 1;
+                    }
+                    let tok = std::str::from_utf8(&b[start..*i]).unwrap().trim();
+                    if tok.is_empty() {
+                        return Err("empty array element".into());
+                    }
+                    items.push(
+                        tok.parse::<i64>()
+                            .map(Value::Int)
+                            .or_else(|_| tok.parse::<f64>().map(Value::Float))
+                            .map_err(|_| format!("bad array element '{tok}'"))?,
+                    );
+                }
+            }
+            while *i < b.len() && (b[*i] as char).is_whitespace() {
+                *i += 1;
+            }
+            match b.get(*i) {
+                Some(b',') => *i += 1,
+                Some(b']') => {}
+                _ => return Err("expected ',' or ']'".into()),
+            }
+        }
+    }
+    let b = s.as_bytes();
+    let mut i = 0;
+    let v = inner(b, &mut i)?;
+    if s[i..].trim().is_empty() {
+        Ok(v)
+    } else {
+        Err("trailing characters after array".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let d = Doc::parse(
+            r#"
+            # a comment
+            algo = "replace"
+            procs = 16
+            rate = 0.25
+            verify = true
+            [failures]
+            mode = "at"
+            kills = [[2, 1], [5, 2]]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(d.str_of("algo"), Some("replace"));
+        assert_eq!(d.usize_of("procs"), Some(16));
+        assert_eq!(d.f64_of("rate"), Some(0.25));
+        assert_eq!(d.bool_of("verify"), Some(true));
+        assert_eq!(d.str_of("failures.mode"), Some("at"));
+        assert_eq!(d.pairs_of("failures.kills"), Some(vec![(2, 1), (5, 2)]));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let d = Doc::parse("a = 1 # inline\n\n# whole line\nb = \"x # not a comment\"\n").unwrap();
+        assert_eq!(d.usize_of("a"), Some(1));
+        assert_eq!(d.str_of("b"), Some("x # not a comment"));
+    }
+
+    #[test]
+    fn flat_arrays() {
+        let d = Doc::parse("xs = [1, 2, 3]").unwrap();
+        let xs = d.get("xs").unwrap().as_arr().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn errors_are_lined() {
+        let err = Doc::parse("a = 1\nbogus line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        assert!(Doc::parse("a = [1,").is_err());
+        assert!(Doc::parse("a = nope").is_err());
+    }
+
+    #[test]
+    fn empty_array_and_nested() {
+        let d = Doc::parse("a = []\nb = [[1,2],[3,4]]").unwrap();
+        assert_eq!(d.get("a").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(d.pairs_of("b"), Some(vec![(1, 2), (3, 4)]));
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let d = Doc::parse("x = -5\ny = -0.5").unwrap();
+        assert_eq!(d.get("x").unwrap().as_i64(), Some(-5));
+        assert_eq!(d.f64_of("y"), Some(-0.5));
+        assert_eq!(d.usize_of("x"), None, "negatives are not usize");
+    }
+}

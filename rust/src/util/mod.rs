@@ -1,0 +1,16 @@
+//! In-tree utility substrates (the vendored crate set is minimal, so
+//! these replace `serde_json`, `rand`, `tempfile` and `toml`):
+//!
+//! * [`json`]    — minimal JSON parser (manifest.json)
+//! * [`rng`]     — xoshiro256** PRNG (fault injection, Monte-Carlo)
+//! * [`testdir`] — scratch directories for tests
+//! * [`kv`]      — the flat `key = value` config format
+
+pub mod json;
+pub mod kv;
+pub mod rng;
+pub mod testdir;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use testdir::TestDir;

@@ -1,0 +1,169 @@
+//! Deterministic PRNG — SplitMix64 seeding a xoshiro256**.
+//!
+//! The vendored crate set has no `rand`, so the fault injector, the
+//! Monte-Carlo sweeps and the property-test harness use this.  Quality
+//! is far beyond what survival estimation needs (xoshiro256** passes
+//! BigCrush); determinism per seed is the property the tests rely on.
+
+/// xoshiro256** seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 to expand the seed into four non-zero words.
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        Self { s }
+    }
+
+    /// Next raw 64 bits.
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform usize in [0, n). Panics if n == 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        // Rejection-free multiply-shift (Lemire); bias < 2^-64 * n.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform u64 in [lo, hi).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        lo + ((self.next_u64() as u128 * (hi - lo) as u128) >> 64) as u64
+    }
+
+    /// Standard-normal-ish sample (sum of 12 uniforms − 6; adequate for
+    /// test matrices, never used in numerics under test).
+    pub fn normal(&mut self) -> f64 {
+        (0..12).map(|_| self.f64()).sum::<f64>() - 6.0
+    }
+
+    /// Exponential(rate) sample.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        let u = self.f64().max(1e-300);
+        -u.ln() / rate
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Sample `k` distinct items from `pool` (order unspecified).
+    pub fn sample_distinct<T: Copy>(&mut self, pool: &[T], k: usize) -> Vec<T> {
+        let mut pool = pool.to_vec();
+        let k = k.min(pool.len());
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i = self.below(pool.len());
+            out.push(pool.swap_remove(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u64> = (0..8).map({ let mut r = Rng::new(7); move |_| r.next_u64() }).collect();
+        let b: Vec<u64> = (0..8).map({ let mut r = Rng::new(7); move |_| r.next_u64() }).collect();
+        assert_eq!(a, b);
+        let c: Vec<u64> = (0..8).map({ let mut r = Rng::new(8); move |_| r.next_u64() }).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            seen[r.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "all buckets hit");
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn exponential_mean_near_inverse_rate() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Rng::new(5);
+        let pool: Vec<usize> = (0..20).collect();
+        let mut s = r.sample_distinct(&pool, 10);
+        s.sort_unstable();
+        let before = s.len();
+        s.dedup();
+        assert_eq!(s.len(), before);
+        assert_eq!(before, 10);
+        assert_eq!(r.sample_distinct(&pool, 50).len(), 20, "capped at pool");
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(6);
+        let mut xs: Vec<u32> = (0..16).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..16).collect::<Vec<u32>>(), "16! leaves ~0 chance of identity");
+    }
+}

@@ -1,0 +1,79 @@
+//! Scratch directories for tests (in lieu of the `tempfile` crate).
+//! Unique per process + counter; removed on drop (best effort).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A scratch directory deleted when dropped.
+pub struct TestDir {
+    path: PathBuf,
+}
+
+impl TestDir {
+    pub fn new() -> Self {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "ft-tsqr-test-{}-{}-{n}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.subsec_nanos())
+                .unwrap_or(0),
+        ));
+        std::fs::create_dir_all(&path).expect("create test dir");
+        Self { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Write a file under the directory, creating parents.
+    pub fn write(&self, rel: &str, contents: &str) -> PathBuf {
+        let p = self.path.join(rel);
+        if let Some(parent) = p.parent() {
+            std::fs::create_dir_all(parent).expect("create parents");
+        }
+        std::fs::write(&p, contents).expect("write test file");
+        p
+    }
+}
+
+impl Default for TestDir {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for TestDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let keep;
+        {
+            let d = TestDir::new();
+            keep = d.path().to_path_buf();
+            assert!(keep.exists());
+            let f = d.write("sub/a.txt", "hi");
+            assert_eq!(std::fs::read_to_string(f).unwrap(), "hi");
+        }
+        assert!(!keep.exists(), "removed on drop");
+    }
+
+    #[test]
+    fn unique_paths() {
+        let a = TestDir::new();
+        let b = TestDir::new();
+        assert_ne!(a.path(), b.path());
+    }
+}

@@ -1,0 +1,146 @@
+//! CLI smoke tests: drive the compiled `repro` binary end to end.
+
+use std::process::Command;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = repro().args(args).output().expect("spawn repro");
+    assert!(
+        out.status.success(),
+        "repro {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = repro().output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn run_redundant_host_backend() {
+    let out = run_ok(&[
+        "run",
+        "--algo",
+        "redundant",
+        "--procs",
+        "8",
+        "--rows-per-proc",
+        "32",
+        "--cols",
+        "8",
+        "--backend",
+        "host",
+    ]);
+    assert!(out.contains("success=true"), "{out}");
+    assert!(out.contains("ok=true"), "{out}");
+}
+
+#[test]
+fn run_with_kill_list_and_trace() {
+    let out = run_ok(&[
+        "run",
+        "--algo",
+        "replace",
+        "--procs",
+        "4",
+        "--rows-per-proc",
+        "16",
+        "--cols",
+        "4",
+        "--backend",
+        "host",
+        "--kill",
+        "2@1",
+        "--trace",
+    ]);
+    assert!(out.contains("success=true"), "{out}");
+    assert!(out.contains("CRASH"), "trace missing from: {out}");
+}
+
+#[test]
+fn failed_baseline_exits_nonzero() {
+    let out = repro()
+        .args([
+            "run",
+            "--algo",
+            "baseline",
+            "--procs",
+            "4",
+            "--rows-per-proc",
+            "16",
+            "--cols",
+            "4",
+            "--backend",
+            "host",
+            "--kill",
+            "2@1",
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "aborted run must exit 2");
+}
+
+#[test]
+fn trace_subcommand_renders_figures() {
+    for (scenario, needle) in [
+        ("fig3", "holds final R"),
+        ("fig4", "replica"),
+        ("fig5", "spawnNew"),
+    ] {
+        let out = run_ok(&["trace", scenario]);
+        assert!(out.contains(needle), "{scenario}: {out}");
+    }
+}
+
+#[test]
+fn validate_subcommand_confirms_bounds() {
+    let out = run_ok(&["validate", "--procs", "8", "--trials", "300"]);
+    assert!(out.contains("bound holds"), "{out}");
+}
+
+#[test]
+fn sweep_subcommand_prints_table() {
+    let out = run_ok(&["sweep", "--algo", "replace", "--procs", "8", "--trials", "200"]);
+    assert!(out.contains("P(success)"), "{out}");
+    assert!(out.contains("bound 2^s-1"), "{out}");
+}
+
+#[test]
+fn info_subcommand_always_succeeds() {
+    let out = run_ok(&["info"]);
+    assert!(out.contains("artifacts") || out.contains("host backend"), "{out}");
+}
+
+#[test]
+fn config_file_run() {
+    let dir = ft_tsqr::util::TestDir::new();
+    let cfg = dir.write(
+        "run.conf",
+        "algo = \"self-healing\"\nprocs = 4\nrows-per-proc = 16\ncols = 4\nbackend = \"host\"\n\
+         [failures]\nmode = \"at\"\nkills = [[2, 1]]\n",
+    );
+    let out = run_ok(&["run", "--config", cfg.to_str().unwrap()]);
+    assert!(out.contains("success=true"), "{out}");
+    assert!(out.contains("respawns=1"), "{out}");
+}
+
+#[test]
+fn bad_flags_error_cleanly() {
+    let out = repro().args(["run", "--algo", "bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown algorithm"));
+
+    let out = repro().args(["run", "--kill", "nonsense"]).output().unwrap();
+    assert!(!out.status.success());
+
+    let out = repro().args(["frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,188 @@
+//! PJRT-backed integration: the AOT artifacts (python/compile → HLO
+//! text → `xla` crate) must agree with the independent host oracle, and
+//! the full fault-tolerant stack must run on the PJRT backend.
+//!
+//! These tests need `make artifacts` to have run; they are skipped
+//! (with a notice) when `artifacts/manifest.json` is absent so that
+//! `cargo test` stays green on a fresh checkout.
+
+use ft_tsqr::fault::KillSchedule;
+use ft_tsqr::linalg::{Matrix, householder_qr, qr_r};
+use ft_tsqr::runtime::{Backend, Executor, Manifest};
+use ft_tsqr::tsqr::{Algo, RunSpec, run};
+
+const ART: &str = "artifacts";
+
+fn pjrt() -> Option<Executor> {
+    match Executor::with_artifacts(ART, Backend::Pjrt, 2) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping PJRT test (no artifacts: {err})");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_loads_and_covers_all_kinds() {
+    let Ok(m) = Manifest::load(ART) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert!(!m.is_empty());
+    for kind in ["leaf_qr", "combine", "backsolve", "apply_qt", "build_q"] {
+        assert!(
+            m.names().any(|n| n.starts_with(kind)),
+            "manifest has no '{kind}' entries"
+        );
+    }
+}
+
+#[test]
+fn pjrt_leaf_qr_matches_host_oracle() {
+    let Some(ex) = pjrt() else { return };
+    for (m, n) in [(64usize, 4usize), (256, 8), (1024, 32)] {
+        let a = Matrix::random(m, n, (m + n) as u64);
+        let f = ex.leaf_qr(&a).expect("pjrt leaf_qr");
+        let host = householder_qr(&a);
+        // R agrees with the independent host implementation.
+        assert!(
+            f.r.canonicalize_r().max_abs_diff(&host.r().canonicalize_r()) < 1e-3,
+            "leaf {m}x{n} R mismatch"
+        );
+        // tau and packed agree too (same LAPACK conventions end to end).
+        let tau_host = Matrix::from_vec(n, 1, host.tau.clone());
+        assert!(f.tau.max_abs_diff(&tau_host) < 1e-3, "leaf {m}x{n} tau mismatch");
+        assert!(f.packed.max_abs_diff(&host.packed) < 1e-2, "leaf {m}x{n} packed mismatch");
+    }
+}
+
+#[test]
+fn pjrt_combine_matches_host() {
+    let Some(ex) = pjrt() else { return };
+    for n in [4usize, 8, 16, 32] {
+        let rt = qr_r(&Matrix::random(2 * n, n, 1));
+        let rb = qr_r(&Matrix::random(2 * n, n, 2));
+        let f = ex.combine(&rt, &rb).expect("pjrt combine");
+        let host = householder_qr(&rt.vstack(&rb));
+        assert!(
+            f.r.canonicalize_r().max_abs_diff(&host.r().canonicalize_r()) < 1e-3,
+            "combine n={n}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_backsolve_solves() {
+    let Some(ex) = pjrt() else { return };
+    for (n, k) in [(4usize, 1usize), (8, 1), (16, 1), (32, 1), (8, 4)] {
+        let r = {
+            let mut r = qr_r(&Matrix::random(2 * n, n, 3));
+            for i in 0..n {
+                r[(i, i)] += 1.0; // well-conditioned
+            }
+            r
+        };
+        let xt = Matrix::random(n, k, 4);
+        let b = r.matmul(&xt);
+        let x = ex.backsolve(&r, &b).expect("pjrt backsolve");
+        assert!(x.max_abs_diff(&xt) < 1e-2, "backsolve {n}x{k}");
+    }
+}
+
+#[test]
+fn pjrt_apply_qt_and_build_q_roundtrip() {
+    let Some(ex) = pjrt() else { return };
+    let (m, n) = (64usize, 8usize);
+    let a = Matrix::random(m, n, 5);
+    let f = ex.leaf_qr(&a).unwrap();
+    let q = ex.build_q(&f).expect("pjrt build_q");
+    // Q R ≈ A.
+    let recon = q.matmul(&f.r);
+    assert!(recon.rel_fro_err(&a) < 1e-4, "recon err {}", recon.rel_fro_err(&a));
+    // Qᵀ then solve gives least squares.
+    let xt = Matrix::random(n, 1, 6);
+    let b = a.matmul(&xt);
+    let qtb = ex.apply_qt(&f, &b).expect("pjrt apply_qt");
+    let x = ex.backsolve(&f.r, &qtb.row_block(0, n)).unwrap();
+    assert!(x.max_abs_diff(&xt) < 5e-2, "LS through PJRT");
+}
+
+#[test]
+fn pjrt_full_stack_all_algorithms() {
+    let Some(ex) = pjrt() else { return };
+    // Shapes chosen to hit the artifact grid (leaf 64x8, combine_8).
+    for algo in Algo::ALL_WITH_COMPARATORS {
+        let spec = RunSpec::new(algo, 4, 64, 8).with_executor(ex.clone());
+        let res = run(&spec).expect("run");
+        assert!(res.success(), "{algo:?}");
+        assert!(res.verification.as_ref().unwrap().ok, "{algo:?}");
+    }
+    // Kernel calls actually went through PJRT, not the host fallback.
+    assert!(ex.stats().pjrt_calls.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    assert_eq!(ex.stats().host_calls.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+#[test]
+fn pjrt_self_healing_with_failure() {
+    let Some(ex) = pjrt() else { return };
+    let spec = RunSpec::new(Algo::SelfHealing, 4, 64, 8)
+        .with_executor(ex)
+        .with_schedule(KillSchedule::at(&[(2, 1)]));
+    let res = run(&spec).unwrap();
+    assert!(res.success());
+    assert!(res.fully_healed());
+    assert!(res.verification.unwrap().ok);
+}
+
+#[test]
+fn pjrt_strict_rejects_off_grid_shape() {
+    let Some(ex) = pjrt() else { return };
+    // 96 rows is not in the artifact grid: strict PJRT must refuse...
+    let odd = Matrix::random(96, 8, 7);
+    assert!(ex.leaf_qr(&odd).is_err(), "strict backend must not silently fall back");
+}
+
+#[test]
+fn auto_backend_falls_back_for_off_grid_shapes() {
+    if Manifest::load(ART).is_err() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ex = Executor::auto(ART);
+    // On-grid → PJRT; off-grid → host. Both must give correct results.
+    let on = Matrix::random(64, 8, 8);
+    let off = Matrix::random(96, 8, 9);
+    let f_on = ex.leaf_qr(&on).unwrap();
+    let f_off = ex.leaf_qr(&off).unwrap();
+    assert!(f_on.r.canonicalize_r().max_abs_diff(&qr_r(&on)) < 1e-3);
+    assert!(f_off.r.canonicalize_r().max_abs_diff(&qr_r(&off)) < 1e-3);
+    use std::sync::atomic::Ordering;
+    assert!(ex.stats().pjrt_calls.load(Ordering::Relaxed) >= 1);
+    assert!(ex.stats().host_calls.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn pjrt_compile_cache_hits_on_reuse() {
+    let Some(ex) = pjrt() else { return };
+    let a = Matrix::random(64, 8, 10);
+    // Touch one entry repeatedly; compile once, hit the cache after.
+    for _ in 0..4 {
+        ex.leaf_qr(&a).unwrap();
+    }
+    // Can't reach the service stats through Executor's public API
+    // beyond call counters; the pjrt_calls counter proves the route.
+    assert!(ex.stats().pjrt_calls.load(std::sync::atomic::Ordering::Relaxed) >= 4);
+}
+
+#[test]
+fn pjrt_and_host_agree_bitwise_tolerances_on_tree() {
+    let Some(ex) = pjrt() else { return };
+    // Full 4-leaf tree on both backends; final canonical R must agree
+    // to f32 tolerance.
+    let spec_p = RunSpec::new(Algo::Redundant, 4, 64, 8).with_executor(ex);
+    let spec_h = RunSpec::new(Algo::Redundant, 4, 64, 8); // host
+    let rp = run(&spec_p).unwrap().final_r.unwrap();
+    let rh = run(&spec_h).unwrap().final_r.unwrap();
+    assert!(rp.max_abs_diff(&rh) < 1e-3, "PJRT vs host divergence {}", rp.max_abs_diff(&rh));
+}

@@ -1,0 +1,174 @@
+//! The paper's figures as machine-checked executions.
+//!
+//! Figures 1–2 are fault-free pattern diagrams; Figures 3–5 are the
+//! named failure scenarios.  Each test replays the execution on the
+//! full simulator and asserts exactly what the figure shows.
+
+use ft_tsqr::fault::Scenario;
+use ft_tsqr::tsqr::{Algo, Event, RunSpec, TreePlan, run};
+use ft_tsqr::ulfm::ExitKind;
+
+// ------------------------------------------------------------- Figure 1
+
+#[test]
+fn fig1_baseline_tree_on_4_procs() {
+    // "Computing the R of a matrix using a TSQR factorization on 4
+    // processes": leaf QRs everywhere; step 0 pairs (0,1), (2,3) with
+    // odd ranks sending; step 1 pairs (0,2); P0 ends with R.
+    let spec = RunSpec::new(Algo::Baseline, 4, 16, 4).with_trace(true);
+    let res = run(&spec).unwrap();
+    assert!(res.success());
+    let t = &res.trace;
+
+    // Every process factors its leaf.
+    assert_eq!(t.count(|e| matches!(e, Event::LeafQr { .. })), 4);
+
+    // Step 0: rank 1 -> 0, rank 3 -> 2 (paper: "rank 1 sends to rank 0,
+    // rank 3 sends to rank 2").
+    assert_eq!(t.count(|e| matches!(e, Event::Send { rank: 1, to: 0, round: 0 })), 1);
+    assert_eq!(t.count(|e| matches!(e, Event::Send { rank: 3, to: 2, round: 0 })), 1);
+    // Step 1: rank 2 -> 0.
+    assert_eq!(t.count(|e| matches!(e, Event::Send { rank: 2, to: 0, round: 1 })), 1);
+
+    // Half the processes go idle each step: combiners are {0,2} then {0}.
+    assert_eq!(t.combiners_at(0), vec![0, 2]);
+    assert_eq!(t.combiners_at(1), vec![0]);
+
+    // Only the root holds the final R.
+    assert_eq!(res.r_holders, vec![0]);
+}
+
+#[test]
+fn fig1_idle_fraction_halves_each_step() {
+    // "Half of the processes are idle after the first step, one quarter
+    // after the second, ... until only one process is working."
+    let spec = RunSpec::new(Algo::Baseline, 16, 20, 4).with_trace(true);
+    let res = run(&spec).unwrap();
+    for s in 0..4u32 {
+        assert_eq!(res.trace.combiners_at(s).len(), 16 >> (s + 1), "round {s}");
+    }
+}
+
+// ------------------------------------------------------------- Figure 2
+
+#[test]
+fn fig2_redundant_exchange_pattern_on_4_procs() {
+    // Redundant TSQR: P1<->P0 and P3<->P2 exchange at step 0 (dashed
+    // lines in the figure), then P0<->P2 and P1<->P3 at step 1; every
+    // process computes every step and all four end with R.
+    let spec = RunSpec::new(Algo::Redundant, 4, 16, 4).with_trace(true);
+    let res = run(&spec).unwrap();
+    let t = &res.trace;
+
+    assert_eq!(t.exchange_pairs_at(0), vec![(0, 1), (2, 3)]);
+    assert_eq!(t.exchange_pairs_at(1), vec![(0, 2), (1, 3)]);
+    // NO process is idle: all four combine at every step.
+    assert_eq!(t.combiners_at(0), vec![0, 1, 2, 3]);
+    assert_eq!(t.combiners_at(1), vec![0, 1, 2, 3]);
+    assert_eq!(res.r_holders, vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn fig2_redundancy_levels_double() {
+    // §III-B3 on the real runner: after step s the replica groups have
+    // size 2^s and every member holds identical data — checked by the
+    // runner's holder-disagreement metric plus the plan's group sizes.
+    let plan = TreePlan::new(8);
+    for s in 0..3u32 {
+        for r in 0..8 {
+            assert_eq!(plan.replicas_of(r, s).len(), 1 << s);
+        }
+    }
+    let res = run(&RunSpec::new(Algo::Redundant, 8, 16, 4)).unwrap();
+    assert_eq!(res.holder_disagreement, 0.0);
+}
+
+// ------------------------------------------------------------- Figure 3
+
+#[test]
+fn fig3_redundant_p2_dies_p0_gives_up_p1_p3_finish() {
+    let sc = Scenario::fig3();
+    let res = run(&sc.spec(16, 4)).unwrap();
+    let t = &res.trace;
+
+    // P2 crashed at the end of step 1 (round boundary 1).
+    assert_eq!(t.count(|e| matches!(e, Event::Killed { rank: 2, round: 1 })), 1);
+    // P0 observed the failure at its round-1 exchange and gave up.
+    assert_eq!(t.count(|e| matches!(e, Event::PeerFailed { rank: 0, peer: 2, round: 1 })), 1);
+    assert!(t.exits().contains(&(0, ExitKind::GaveUpPeerFailed)));
+    // P1 and P3 exchanged and finished with the final R.
+    assert_eq!(t.exchange_pairs_at(1), vec![(1, 3)]);
+    assert_eq!(res.r_holders, vec![1, 3]);
+    assert!(res.success(), "the final result is available in spite of the failure");
+    assert!(res.verification.unwrap().ok);
+}
+
+// ------------------------------------------------------------- Figure 4
+
+#[test]
+fn fig4_replace_p0_finds_replica_p3() {
+    let sc = Scenario::fig4();
+    let res = run(&sc.spec(16, 4)).unwrap();
+    let t = &res.trace;
+
+    // P0's exchange with P2 fails; it finds out P3 holds the same data
+    // and exchanges with P3 instead.
+    assert_eq!(t.count(|e| matches!(e, Event::PeerFailed { rank: 0, peer: 2, round: 1 })), 1);
+    assert_eq!(
+        t.count(|e| matches!(e, Event::ReplicaFound { rank: 0, dead: 2, replica: 3, round: 1 })),
+        1
+    );
+    // P0, P1, P3 all hold the final R; the root P0 among them (§III-C3).
+    assert_eq!(res.r_holders, vec![0, 1, 3]);
+    assert!(res.success());
+    assert!(res.verification.unwrap().ok);
+}
+
+// ------------------------------------------------------------- Figure 5
+
+#[test]
+fn fig5_self_healing_respawns_p2_full_world_finishes() {
+    let sc = Scenario::fig5();
+    let res = run(&sc.spec(16, 4)).unwrap();
+    let t = &res.trace;
+
+    // P0 detected the failure and spawned a replacement for P2.
+    assert_eq!(t.count(|e| matches!(e, Event::Respawn { rank: 0, dead: 2, round: 1 })), 1);
+    // The replacement recovered P2's state from the replica P3 (Alg. 5).
+    assert_eq!(t.count(|e| matches!(e, Event::Recovered { rank: 2, from: 3, round: 1 })), 1);
+    // Final world is full size and ALL processes hold the final R (§III-D1).
+    assert_eq!(res.r_holders, vec![0, 1, 2, 3]);
+    assert!(res.fully_healed());
+    assert_eq!(res.metrics.respawns, 1);
+    assert!(res.verification.unwrap().ok);
+}
+
+// ----------------------------------------------------- baseline contrast
+
+#[test]
+fn baseline_abort_scenario_fails() {
+    let sc = Scenario::baseline_abort();
+    let res = run(&sc.spec(16, 4)).unwrap();
+    assert!(!res.success(), "plain TSQR aborts on the same failure the FT variants survive");
+    assert!(res.r_holders.is_empty());
+}
+
+// ------------------------------------------------------------ rendering
+
+#[test]
+fn trace_render_tells_the_figure_story() {
+    let res = run(&Scenario::fig5().spec(16, 4)).unwrap();
+    let txt = res.trace.render(4, 2);
+    for needle in ["CRASH", "spawnNew(P2)", "recovered state <- P3", "holds final R"] {
+        assert!(txt.contains(needle), "render missing '{needle}':\n{txt}");
+    }
+}
+
+#[test]
+fn all_scenarios_run_and_match_expectations() {
+    for sc in Scenario::all() {
+        let res = run(&sc.spec(16, 4)).unwrap();
+        let expect_success = sc.name != "baseline-abort";
+        assert_eq!(res.success(), expect_success, "{}", sc.name);
+    }
+}

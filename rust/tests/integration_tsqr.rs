@@ -1,0 +1,298 @@
+//! Full-stack integration: the four algorithms (plus the checkpointing
+//! comparator) over the simulated ULFM world with the host kernel
+//! backend.  PJRT-backed equivalents live in integration_runtime.rs.
+
+use ft_tsqr::fault::KillSchedule;
+use ft_tsqr::linalg::{Matrix, qr_r};
+use ft_tsqr::metrics;
+use ft_tsqr::tsqr::{Algo, RunSpec, run};
+use ft_tsqr::ulfm::{ExitKind, ProcStatus};
+
+fn spec(algo: Algo, procs: usize) -> RunSpec {
+    RunSpec::new(algo, procs, 32, 8)
+}
+
+// ------------------------------------------------------- fault-free runs
+
+#[test]
+fn all_algorithms_fault_free_produce_correct_r() {
+    for procs in [2usize, 4, 8, 16] {
+        for algo in Algo::ALL_WITH_COMPARATORS {
+            let res = run(&spec(algo, procs)).unwrap();
+            assert!(res.success(), "{algo:?} P={procs}");
+            let v = res.verification.as_ref().unwrap();
+            assert!(v.ok, "{algo:?} P={procs}: rel err {}", v.rel_fro_err);
+        }
+    }
+}
+
+#[test]
+fn redundant_family_all_ranks_hold_r_fault_free() {
+    // §III-B1: "at the end of the computation, all the processes get
+    // the final R matrix."
+    for algo in [Algo::Redundant, Algo::Replace, Algo::SelfHealing] {
+        let res = run(&spec(algo, 8)).unwrap();
+        assert_eq!(res.r_holders, (0..8).collect::<Vec<_>>(), "{algo:?}");
+        assert!(res.fully_healed());
+        assert_eq!(res.holder_disagreement, 0.0, "{algo:?}: copies must be bit-identical");
+    }
+}
+
+#[test]
+fn baseline_only_root_holds_r() {
+    let res = run(&spec(Algo::Baseline, 8)).unwrap();
+    assert_eq!(res.r_holders, vec![0]);
+    // Everyone else completed without R.
+    for r in 1..8 {
+        assert_eq!(res.statuses[r], ProcStatus::Exited(ExitKind::CompletedWithoutR));
+    }
+}
+
+#[test]
+fn final_r_matches_host_oracle() {
+    let s = spec(Algo::Redundant, 4);
+    let res = run(&s).unwrap();
+    let r = res.final_r.unwrap();
+    assert_eq!(r.shape(), (8, 8));
+    let oracle = qr_r(&s.input_matrix());
+    assert!(r.canonicalize_r().max_abs_diff(&oracle) < 1e-4);
+}
+
+#[test]
+fn baseline_works_on_non_power_of_two() {
+    for procs in [3usize, 5, 6, 7, 12] {
+        let res = run(&spec(Algo::Baseline, procs)).unwrap();
+        assert!(res.success(), "P={procs}");
+        assert!(res.verification.as_ref().unwrap().ok, "P={procs}");
+    }
+}
+
+#[test]
+fn single_process_degenerates_to_local_qr() {
+    for algo in [Algo::Baseline, Algo::Redundant] {
+        let res = run(&spec(algo, 1)).unwrap();
+        assert!(res.success());
+        assert_eq!(res.metrics.messages, 0, "no communication for P=1");
+    }
+}
+
+// --------------------------------------------------------- message counts
+
+#[test]
+fn baseline_message_count_matches_model() {
+    for procs in [2usize, 4, 8, 16, 32] {
+        let res = run(&spec(Algo::Baseline, procs)).unwrap();
+        assert_eq!(res.metrics.messages, metrics::baseline_messages(procs), "P={procs}");
+    }
+}
+
+#[test]
+fn redundant_message_count_matches_model() {
+    for procs in [2usize, 4, 8, 16, 32] {
+        for algo in [Algo::Redundant, Algo::Replace, Algo::SelfHealing] {
+            let res = run(&spec(algo, procs)).unwrap();
+            assert_eq!(
+                res.metrics.messages,
+                metrics::redundant_messages(procs),
+                "{algo:?} P={procs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn message_bytes_match_model() {
+    let res = run(&spec(Algo::Redundant, 8)).unwrap();
+    assert_eq!(res.metrics.bytes, metrics::redundant_messages(8) * metrics::message_bytes(8));
+}
+
+#[test]
+fn checkpointed_pays_extra_messages() {
+    let base = run(&spec(Algo::Baseline, 16)).unwrap();
+    let ckpt = run(&spec(Algo::Checkpointed, 16)).unwrap();
+    assert!(
+        ckpt.metrics.messages > base.metrics.messages,
+        "checkpointing must cost messages: {} vs {}",
+        ckpt.metrics.messages,
+        base.metrics.messages
+    );
+    // One checkpoint message per live participant per round.
+    let participants: u64 = (0..4u32).map(|s| 16u64 >> s).sum();
+    assert_eq!(ckpt.metrics.messages, base.metrics.messages + participants);
+}
+
+// ------------------------------------------------------------- failures
+
+#[test]
+fn baseline_aborts_on_failure() {
+    let s = spec(Algo::Baseline, 8).with_schedule(KillSchedule::at(&[(2, 1)]));
+    let res = run(&s).unwrap();
+    assert!(!res.success(), "plain TSQR is not fault tolerant");
+}
+
+#[test]
+fn redundant_survives_single_failure_with_survivor_set() {
+    let s = spec(Algo::Redundant, 8).with_schedule(KillSchedule::at(&[(5, 1)]));
+    let res = run(&s).unwrap();
+    assert!(res.success());
+    assert!(!res.r_holders.contains(&5));
+    assert!(res.verification.unwrap().ok);
+    assert_eq!(res.holder_disagreement, 0.0);
+}
+
+#[test]
+fn replace_root_keeps_r_when_root_survives() {
+    // §III-C3: "if the root of the tree does not die, it holds the
+    // final result R at the end of the computation."
+    for f in [(5usize, 1u32), (2, 1), (6, 2)] {
+        let s = spec(Algo::Replace, 8).with_schedule(KillSchedule::at(&[f]));
+        let res = run(&s).unwrap();
+        assert!(res.success(), "kill {f:?}");
+        assert!(res.r_holders.contains(&0), "root must hold R, kill {f:?}");
+    }
+}
+
+#[test]
+fn self_healing_restores_full_world() {
+    // §III-D1: final number of processes equals the initial number and
+    // ALL processes hold the final R.
+    let s = spec(Algo::SelfHealing, 8).with_schedule(KillSchedule::at(&[(3, 1)]));
+    let res = run(&s).unwrap();
+    assert!(res.success());
+    assert!(res.fully_healed(), "statuses: {:?}", res.statuses);
+    assert_eq!(res.metrics.respawns, 1);
+    assert_eq!(res.r_holders.len(), 8);
+    assert!(res.verification.unwrap().ok);
+}
+
+#[test]
+fn self_healing_survives_per_step_capacity() {
+    // §III-D3 example: 1 failure at step 1, then 3 more at step 2.
+    let s = spec(Algo::SelfHealing, 8)
+        .with_schedule(KillSchedule::at(&[(0, 1), (1, 2), (2, 2), (4, 2)]));
+    let res = run(&s).unwrap();
+    assert!(res.success(), "within per-step capacity: {:?}", res.statuses);
+    assert!(res.verification.unwrap().ok);
+}
+
+#[test]
+fn whole_group_loss_is_fatal_for_everyone() {
+    // Killing both copies of one block's data (a full level-1 group)
+    // exceeds 2^1 - 1 and must sink the whole computation.
+    for algo in [Algo::Redundant, Algo::Replace, Algo::SelfHealing] {
+        let s = spec(algo, 4).with_schedule(KillSchedule::at(&[(0, 1), (1, 1)]));
+        let res = run(&s).unwrap();
+        assert!(!res.success(), "{algo:?} must fail when a whole group dies");
+    }
+}
+
+#[test]
+fn checkpointed_survives_single_sender_failure() {
+    // Rank 2 dies at boundary 1: it checkpointed R̃_1 (posted before the
+    // kill check); receiver 0 recovers it from the checkpoint.
+    let s = spec(Algo::Checkpointed, 8).with_schedule(KillSchedule::at(&[(2, 1)]));
+    let res = run(&s).unwrap();
+    assert!(res.success(), "checkpoint recovery failed: {:?}", res.statuses);
+    assert!(res.verification.unwrap().ok);
+}
+
+#[test]
+fn checkpointed_dies_when_holder_also_dies() {
+    // Rank 2's round-1 checkpoint is held by partner(2,1,8) = 6; kill
+    // both 2 and 6 before round 1 and the checkpoint is unrecoverable.
+    let holder = ft_tsqr::checkpoint::partner(2, 1, 8);
+    let s = spec(Algo::Checkpointed, 8)
+        .with_schedule(KillSchedule::at(&[(2, 1), (holder, 1)]));
+    let res = run(&s).unwrap();
+    assert!(!res.success(), "checkpoint + holder lost together must abort");
+}
+
+#[test]
+fn degraded_r_is_still_bitwise_consistent_across_survivors() {
+    // After failures, all surviving holders still agree exactly.
+    let s = spec(Algo::Replace, 16).with_schedule(KillSchedule::at(&[(3, 1), (9, 2), (12, 2)]));
+    let res = run(&s).unwrap();
+    assert!(res.success());
+    assert!(res.r_holders.len() >= 2);
+    assert_eq!(res.holder_disagreement, 0.0);
+    assert!(res.verification.unwrap().ok);
+}
+
+#[test]
+fn dead_ranks_reported_in_statuses() {
+    let s = spec(Algo::Redundant, 8).with_schedule(KillSchedule::at(&[(6, 1)]));
+    let res = run(&s).unwrap();
+    assert_eq!(res.dead_count(), 1);
+    assert_eq!(res.statuses[6], ProcStatus::Dead { at_round: 1 });
+}
+
+// ------------------------------------------------------- determinism
+
+#[test]
+fn runs_are_deterministic_in_outcome() {
+    let mk = || {
+        spec(Algo::Replace, 16)
+            .with_schedule(KillSchedule::at(&[(3, 1), (5, 2), (11, 2)]))
+            .with_seed(7)
+    };
+    let a = run(&mk()).unwrap();
+    let b = run(&mk()).unwrap();
+    assert_eq!(a.r_holders, b.r_holders);
+    assert_eq!(a.success(), b.success());
+    assert_eq!(
+        a.final_r.map(|m| m.data().to_vec()),
+        b.final_r.map(|m| m.data().to_vec()),
+        "same inputs, same failure pattern → bit-identical R"
+    );
+}
+
+#[test]
+fn different_seeds_different_matrices_same_robustness() {
+    for seed in [1u64, 2, 3] {
+        let s = spec(Algo::SelfHealing, 8)
+            .with_schedule(KillSchedule::at(&[(4, 1)]))
+            .with_seed(seed);
+        let res = run(&s).unwrap();
+        assert!(res.success(), "seed {seed}");
+        assert!(res.verification.unwrap().ok, "seed {seed}");
+    }
+}
+
+// ------------------------------------------------- larger configurations
+
+#[test]
+fn works_at_p64() {
+    let res = run(&RunSpec::new(Algo::Replace, 64, 16, 8)
+        .with_schedule(KillSchedule::at(&[(17, 1), (33, 3), (48, 4)])))
+    .unwrap();
+    assert!(res.success());
+    assert!(res.verification.unwrap().ok);
+}
+
+#[test]
+fn tall_leaves_verify() {
+    let res = run(&RunSpec::new(Algo::Redundant, 4, 1024, 32)).unwrap();
+    assert!(res.success());
+    let v = res.verification.unwrap();
+    assert!(v.ok, "rel err {}", v.rel_fro_err);
+}
+
+#[test]
+fn square_leaves_boundary() {
+    // cols == rows_per_proc boundary (square leaves).
+    let res = run(&RunSpec::new(Algo::Redundant, 4, 8, 8)).unwrap();
+    assert!(res.success());
+    assert!(res.verification.unwrap().ok);
+}
+
+#[test]
+fn input_matrix_equals_leaf_concat() {
+    let s = spec(Algo::Baseline, 4);
+    let a = s.input_matrix();
+    let leaves: Vec<Matrix> = (0..4).map(|r| a.row_block(r * 32, (r + 1) * 32)).collect();
+    let mut rebuilt = leaves[0].clone();
+    for leaf in &leaves[1..] {
+        rebuilt = rebuilt.vstack(leaf);
+    }
+    assert_eq!(rebuilt, a);
+}

@@ -1,0 +1,275 @@
+//! Property-based invariants (hand-rolled harness over `util::Rng` —
+//! the vendored crate set has no proptest; each property runs hundreds
+//! of randomized cases and reports the failing case on assert).
+//!
+//! The crown jewel: for EVERY algorithm and EVERY random failure
+//! pattern, the full multi-threaded simulator and the analytic
+//! (matrix-free, synchronous) model in `analysis::robustness` must
+//! agree on exactly which ranks end up with the final R.  This pins
+//! down that the concurrent implementation has no timing-dependent
+//! semantics — the property the paper's step-granular analysis needs.
+
+use std::collections::HashMap;
+
+use ft_tsqr::analysis::robustness::survives_failure_set;
+use ft_tsqr::fault::KillSchedule;
+use ft_tsqr::linalg::{Matrix, householder_qr, qr_r};
+use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan, run};
+use ft_tsqr::ulfm::Rank;
+use ft_tsqr::util::Rng;
+
+/// Draw a random failure pattern: each rank killed at most once, at a
+/// uniformly random boundary, with probability `p_kill`.
+fn random_pattern(rng: &mut Rng, procs: usize, rounds: u32, p_kill: f64) -> HashMap<Rank, u32> {
+    let mut m = HashMap::new();
+    if rounds == 0 {
+        return m;
+    }
+    for r in 0..procs {
+        if rng.bool(p_kill) {
+            m.insert(r, rng.below(rounds as usize) as u32);
+        }
+    }
+    m
+}
+
+/// The big one: simulator ≡ analytic model, holder set for holder set.
+#[test]
+fn simulator_matches_analytic_model_exactly() {
+    let mut rng = Rng::new(0xFEED);
+    let mut cases = 0;
+    for _ in 0..120 {
+        let procs = [2usize, 4, 8, 16][rng.below(4)];
+        let rounds = TreePlan::new(procs).rounds();
+        let algo = Algo::ALL_WITH_COMPARATORS[rng.below(5)];
+        let p_kill = [0.0, 0.1, 0.25, 0.5][rng.below(4)];
+        let pattern = random_pattern(&mut rng, procs, rounds, p_kill);
+
+        let kills: Vec<(Rank, u32)> = pattern.iter().map(|(&r, &s)| (r, s)).collect();
+        let spec = RunSpec::new(algo, procs, 16, 4)
+            .with_schedule(KillSchedule::at(&kills))
+            .with_verify(false);
+        let sim = run(&spec).unwrap();
+        let ana = survives_failure_set(algo, procs, &pattern);
+
+        assert_eq!(
+            sim.r_holders, ana.holders,
+            "{algo:?} P={procs} pattern {pattern:?}: simulator holders {:?} != analytic {:?}",
+            sim.r_holders, ana.holders
+        );
+        assert_eq!(
+            sim.success(),
+            ana.success(algo),
+            "{algo:?} P={procs} pattern {pattern:?}"
+        );
+        cases += 1;
+    }
+    assert_eq!(cases, 120);
+}
+
+/// Whenever ANY process ends with an R, that R is the true R factor.
+#[test]
+fn every_surviving_r_is_correct() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..40 {
+        let procs = [4usize, 8][rng.below(2)];
+        let rounds = TreePlan::new(procs).rounds();
+        let algo = [Algo::Redundant, Algo::Replace, Algo::SelfHealing][rng.below(3)];
+        let pattern = random_pattern(&mut rng, procs, rounds, 0.2);
+        let kills: Vec<(Rank, u32)> = pattern.iter().map(|(&r, &s)| (r, s)).collect();
+        let spec = RunSpec::new(algo, procs, 24, 6)
+            .with_schedule(KillSchedule::at(&kills))
+            .with_seed(rng.next_u64());
+        let res = run(&spec).unwrap();
+        if let Some(v) = &res.verification {
+            assert!(
+                v.ok,
+                "{algo:?} pattern {pattern:?}: survivors hold a WRONG R (rel {})",
+                v.rel_fro_err
+            );
+        }
+        assert_eq!(res.holder_disagreement, 0.0, "{algo:?} pattern {pattern:?}");
+    }
+}
+
+/// The §III-C3 guarantee as a property: any pattern whose cumulative
+/// failure counts respect f(s) <= 2^s − 1 lets Replace and Self-Healing
+/// succeed — checked on the full simulator, not just the analytic one.
+#[test]
+fn within_bound_patterns_always_survive_replace_and_sh() {
+    let mut rng = Rng::new(0xB0C4D);
+    let mut found = 0;
+    while found < 30 {
+        let procs = 8;
+        let rounds = TreePlan::new(procs).rounds();
+        let pattern = random_pattern(&mut rng, procs, rounds, 0.25);
+        let within = (0..rounds).all(|s| {
+            let f = pattern.values().filter(|&&k| k <= s).count() as u64;
+            f <= (1u64 << s) - 1
+        });
+        if !within {
+            continue;
+        }
+        found += 1;
+        for algo in [Algo::Replace, Algo::SelfHealing] {
+            let kills: Vec<(Rank, u32)> = pattern.iter().map(|(&r, &s)| (r, s)).collect();
+            let spec = RunSpec::new(algo, procs, 16, 4)
+                .with_schedule(KillSchedule::at(&kills))
+                .with_verify(false);
+            let res = run(&spec).unwrap();
+            assert!(res.success(), "{algo:?} within-bound pattern {pattern:?} failed");
+        }
+    }
+}
+
+/// Plan invariants on random world sizes.
+#[test]
+fn plan_invariants_random_worlds() {
+    let mut rng = Rng::new(0x9A7);
+    for _ in 0..200 {
+        let procs = 1 + rng.below(96);
+        let plan = TreePlan::new(procs);
+        let rounds = plan.rounds();
+        assert!((1usize << rounds) >= procs);
+        if rounds > 0 {
+            assert!((1usize << (rounds - 1)) < procs || procs == 1);
+        }
+        for _ in 0..16 {
+            let r = rng.below(procs);
+            for s in 0..rounds {
+                if let Some(b) = plan.buddy(r, s) {
+                    assert_eq!(plan.buddy(b, s), Some(r), "buddy symmetry");
+                    assert_ne!(plan.is_sender(r, s), plan.is_sender(b, s), "one sender per pair");
+                }
+                let reps = plan.replicas_of(r, s);
+                assert!(reps.contains(&r));
+                if procs.is_power_of_two() {
+                    assert_eq!(reps.len(), 1 << s.min(rounds));
+                }
+                for &q in &reps {
+                    assert_eq!(plan.group(q, s), plan.group(r, s));
+                }
+            }
+        }
+    }
+}
+
+/// Host QR oracle invariants on random matrices (the rust analogue of
+/// the hypothesis sweep in python/tests).
+#[test]
+fn host_qr_random_sweep() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..60 {
+        let n = 1 + rng.below(12);
+        let m = n + rng.below(50);
+        let a = Matrix::random(m, n, rng.next_u64());
+        let f = householder_qr(&a);
+        let r = f.r();
+        assert!(r.is_upper_triangular(1e-6));
+        let q = f.q();
+        let recon = q.matmul(&r);
+        assert!(
+            recon.rel_fro_err(&a) < 1e-4,
+            "QR reconstruction failed at {m}x{n}: {}",
+            recon.rel_fro_err(&a)
+        );
+    }
+}
+
+/// TSQR tree composition == direct QR, for random shapes and leaf counts.
+#[test]
+fn host_tsqr_tree_random_sweep() {
+    let mut rng = Rng::new(0x7EA);
+    for _ in 0..30 {
+        let leaves = 1usize << (1 + rng.below(3)); // 2, 4, 8
+        let n = 1 + rng.below(8);
+        let rows = n + rng.below(20);
+        let a = Matrix::random(leaves * rows, n, rng.next_u64());
+        let mut rs: Vec<Matrix> =
+            (0..leaves).map(|i| qr_r(&a.row_block(i * rows, (i + 1) * rows))).collect();
+        while rs.len() > 1 {
+            rs = rs
+                .chunks(2)
+                .map(|pair| householder_qr(&pair[0].vstack(&pair[1])).r())
+                .collect();
+        }
+        let tree_r = rs[0].canonicalize_r();
+        assert!(
+            tree_r.max_abs_diff(&qr_r(&a)) < 1e-3,
+            "tree != direct at leaves={leaves} {rows}x{n}"
+        );
+    }
+}
+
+/// Random kill schedules: firing is one-shot and complete.
+#[test]
+fn kill_schedule_random_properties() {
+    let mut rng = Rng::new(0xF1E);
+    for _ in 0..50 {
+        let procs = 1 + rng.below(32);
+        let rounds = 1 + rng.below(5) as u32;
+        let p = rng.f64();
+        let seed = rng.next_u64();
+        let sched = KillSchedule::bernoulli(procs, rounds, p, seed);
+        let entries = sched.entries();
+        // At most one entry per rank; all rounds within range.
+        let mut ranks: Vec<_> = entries.iter().map(|(r, _)| *r).collect();
+        ranks.sort_unstable();
+        let len_before = ranks.len();
+        ranks.dedup();
+        assert_eq!(ranks.len(), len_before);
+        assert!(entries.iter().all(|&(r, s)| r < procs && s < rounds));
+        // Firing everything empties the schedule exactly once.
+        for &(r, s) in &entries {
+            assert!(sched.fire(r, s));
+            assert!(!sched.fire(r, s));
+        }
+        assert_eq!(sched.remaining(), 0);
+    }
+}
+
+/// Config parser: value round-trips on randomly generated documents.
+#[test]
+fn kv_parser_random_roundtrip() {
+    let mut rng = Rng::new(0xC0FFE);
+    for _ in 0..100 {
+        let ints: Vec<i64> = (0..rng.below(5)).map(|_| rng.next_u64() as i64 >> 20).collect();
+        let f = (rng.f64() * 100.0).round() / 100.0;
+        let b = rng.bool(0.5);
+        let text = format!(
+            "x-int = {}\nx-float = {}\nx-bool = {}\nxs = [{}]\n[sec]\ny = \"s{}\"\n",
+            ints.first().copied().unwrap_or(7),
+            f,
+            b,
+            ints.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(", "),
+            ints.len(),
+        );
+        let doc = ft_tsqr::util::kv::Doc::parse(&text).unwrap();
+        assert_eq!(doc.get("x-int").unwrap().as_i64(), Some(ints.first().copied().unwrap_or(7)));
+        assert!((doc.f64_of("x-float").unwrap() - f).abs() < 1e-9);
+        assert_eq!(doc.bool_of("x-bool"), Some(b));
+        assert_eq!(doc.get("xs").unwrap().as_arr().unwrap().len(), ints.len());
+        assert_eq!(doc.str_of("sec.y"), Some(format!("s{}", ints.len()).as_str()));
+    }
+}
+
+/// JSON parser: survives random manifest-shaped documents.
+#[test]
+fn json_parser_random_manifests() {
+    let mut rng = Rng::new(0x150D);
+    for _ in 0..60 {
+        let n_entries = rng.below(6);
+        let entries: Vec<String> = (0..n_entries)
+            .map(|i| {
+                let m = 8 + rng.below(100);
+                let n = 1 + rng.below(16);
+                format!(
+                    r#"{{"name":"leaf_qr_{m}x{n}_{i}","kind":"leaf_qr","params":{{"m":{m},"n":{n}}},"file":"f{i}.hlo.txt","inputs":[[{m},{n}]],"out_arity":3}}"#
+                )
+            })
+            .collect();
+        let text = format!(r#"{{"dtype":"f32","entries":[{}]}}"#, entries.join(","));
+        let j = ft_tsqr::util::Json::parse(&text).unwrap();
+        assert_eq!(j.get("entries").unwrap().as_arr().unwrap().len(), n_entries);
+    }
+}
