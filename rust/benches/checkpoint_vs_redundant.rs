@@ -5,16 +5,17 @@
 //!   cargo bench --bench checkpoint_vs_redundant
 //!
 //! Dimensions: fault-free overhead (messages/bytes/wall), robustness
-//! under identical failure schedules, and where each breaks.
+//! under identical failure schedules, and where each breaks.  The
+//! whole head-to-head runs through one engine session.
 
+use ft_tsqr::engine::Engine;
 use ft_tsqr::fault::KillSchedule;
 use ft_tsqr::report::bench::{bench, iters};
 use ft_tsqr::report::{REPORT_DIR, Table};
-use ft_tsqr::runtime::Executor;
-use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan, run};
+use ft_tsqr::tsqr::{Algo, RunSpec};
 
 fn main() {
-    let exec = Executor::auto("artifacts");
+    let engine = Engine::builder().build().expect("engine");
     let (rows, cols) = (128usize, 8usize);
 
     // ---------------------------------------------- fault-free overhead
@@ -25,16 +26,14 @@ fn main() {
     for procs in [4usize, 8, 16, 32] {
         let mut base_bytes = 0u64;
         for algo in [Algo::Baseline, Algo::Checkpointed, Algo::Redundant] {
-            let spec = RunSpec::new(algo, procs, rows, cols)
-                .with_executor(exec.clone())
-                .with_verify(false);
-            let res = run(&spec).expect("run");
+            let spec = RunSpec::new(algo, procs, rows, cols).with_verify(false);
+            let res = engine.run(spec.clone()).expect("run");
             assert!(res.success());
             if algo == Algo::Baseline {
                 base_bytes = res.metrics.bytes.max(1);
             }
             let s = bench(1, iters(10, 2), || {
-                let _ = run(&spec);
+                let _ = engine.run(spec.clone());
             });
             table.row(vec![
                 procs.to_string(),
@@ -49,9 +48,10 @@ fn main() {
     table.save_csv(REPORT_DIR).expect("csv");
 
     // ------------------------------------------- robustness head-to-head
-    // Same random schedules thrown at both approaches.
+    // Same random schedules thrown at both approaches, one campaign per
+    // (cell, algorithm) — the engine amortizes the pool across all of
+    // them.
     let procs = 16;
-    let rounds = TreePlan::new(procs).rounds();
     let samples = iters(60, 10) as u64;
     let mut rob = Table::new(
         "TAB-P2b: survival under identical failure schedules (full simulator)",
@@ -60,16 +60,13 @@ fn main() {
     for (s, f) in [(1u32, 1usize), (1, 2), (2, 2), (2, 3), (3, 4), (3, 6)] {
         let mut row = vec![format!("f={f} @ s={s}")];
         for algo in [Algo::Checkpointed, Algo::Redundant, Algo::Replace, Algo::SelfHealing] {
-            let mut ok = 0u64;
-            for seed in 0..samples {
-                let spec = RunSpec::new(algo, procs, 32, 8)
+            let specs = (0..samples).map(|seed| {
+                RunSpec::new(algo, procs, 32, 8)
                     .with_schedule(KillSchedule::random_at_round(procs, s, f, None, seed))
-                    .with_verify(false);
-                if run(&spec).expect("run").success() {
-                    ok += 1;
-                }
-            }
-            row.push(format!("{:.2}", ok as f64 / samples as f64));
+                    .with_verify(false)
+            });
+            let report = engine.campaign(specs).concurrency(4).run().expect("campaign");
+            row.push(format!("{:.2}", report.success_rate()));
         }
         rob.row(row);
     }
@@ -84,22 +81,18 @@ fn main() {
         &["algo", "wall (median)", "extra msgs vs fault-free"],
     );
     for algo in [Algo::Checkpointed, Algo::Replace, Algo::SelfHealing] {
-        let clean = RunSpec::new(algo, procs, rows, cols)
-            .with_executor(exec.clone())
-            .with_verify(false);
-        let clean_msgs = run(&clean).expect("run").metrics.messages;
+        let clean = RunSpec::new(algo, procs, rows, cols).with_verify(false);
+        let clean_msgs = engine.run(clean).expect("run").metrics.messages;
         let faulty = RunSpec::new(algo, procs, rows, cols)
-            .with_executor(exec.clone())
             .with_schedule(KillSchedule::at(&[(2, 1)]))
             .with_verify(false);
-        let res = run(&faulty).expect("run");
+        let res = engine.run(faulty).expect("run");
         assert!(res.success(), "{algo:?}");
         let s = bench(1, iters(10, 2), || {
             let spec = RunSpec::new(algo, procs, rows, cols)
-                .with_executor(exec.clone())
                 .with_schedule(KillSchedule::at(&[(2, 1)]))
                 .with_verify(false);
-            let _ = run(&spec);
+            let _ = engine.run(spec);
         });
         rec.row(vec![
             algo.name().into(),

@@ -1,0 +1,108 @@
+//! BENCH TAB-E1: session engine vs one-shot runs — what the engine
+//! redesign buys.
+//!
+//!   cargo bench --bench engine_throughput
+//!
+//! The acceptance workload: a 1000-run fault-free Redundant P=8
+//! campaign.  Three ways to run it:
+//!   * one-shot      — `tsqr::run` per spec (spawn + tear down a
+//!                     single-use engine and its pool every run);
+//!   * engine        — one `Engine`, sequential `run` calls (pooled
+//!                     workers reused run after run);
+//!   * engine (w=4)  — same engine, 4 runs pipelined concurrently.
+//!
+//! Also checks the invariant the reuse claim rests on: the worker pool
+//! does not grow across the campaign (no leakage).
+
+use std::time::Instant;
+
+use ft_tsqr::engine::Engine;
+use ft_tsqr::report::bench::fmt_duration;
+use ft_tsqr::report::{REPORT_DIR, Table};
+use ft_tsqr::tsqr::{Algo, RunSpec, run};
+
+fn spec(seed: u64) -> RunSpec {
+    RunSpec::new(Algo::Redundant, 8, 32, 8).with_seed(seed).with_verify(false)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let runs: u64 = if quick { 100 } else { 1000 };
+
+    let mut table = Table::new(
+        format!("TAB-E1: {runs}-run fault-free Redundant P=8 campaign — engine reuse vs one-shot"),
+        &["mode", "total wall", "runs/s", "speedup vs one-shot"],
+    );
+
+    // ------------------------------------------------------- one-shot
+    let t0 = Instant::now();
+    for seed in 0..runs {
+        let res = run(&spec(seed)).expect("one-shot run");
+        assert!(res.success());
+    }
+    let oneshot = t0.elapsed();
+    table.row(vec![
+        "one-shot tsqr::run".into(),
+        fmt_duration(oneshot),
+        format!("{:.1}", runs as f64 / oneshot.as_secs_f64()),
+        "1.00x".into(),
+    ]);
+
+    // ------------------------------------------------ engine, sequential
+    let engine = Engine::host();
+    let t0 = Instant::now();
+    let report = engine.campaign((0..runs).map(spec)).run().expect("campaign");
+    let seq = t0.elapsed();
+    assert_eq!(report.successes(), runs);
+    let workers_after_campaign = engine.workers();
+    table.row(vec![
+        "engine campaign".into(),
+        fmt_duration(seq),
+        format!("{:.1}", runs as f64 / seq.as_secs_f64()),
+        format!("{:.2}x", oneshot.as_secs_f64() / seq.as_secs_f64()),
+    ]);
+
+    // ------------------------------------------------ engine, pipelined
+    let t0 = Instant::now();
+    let report = engine.campaign((0..runs).map(|s| spec(runs + s))).concurrency(4).run().expect("campaign");
+    let conc = t0.elapsed();
+    assert_eq!(report.successes(), runs);
+    table.row(vec![
+        "engine campaign (w=4)".into(),
+        fmt_duration(conc),
+        format!("{:.1}", runs as f64 / conc.as_secs_f64()),
+        format!("{:.2}x", oneshot.as_secs_f64() / conc.as_secs_f64()),
+    ]);
+
+    print!("{}", table.render());
+    table.save_csv(REPORT_DIR).expect("csv");
+
+    // ------------------------------------------------- leakage check
+    let stats = engine.stats();
+    println!(
+        "\nengine after {} jobs: workers={} (after sequential campaign: {}), peak={}, \
+         tasks_executed={}",
+        stats.jobs_completed, stats.workers, workers_after_campaign, stats.peak_workers,
+        stats.tasks_executed
+    );
+    assert!(
+        stats.peak_workers <= 8 + 4 * 9,
+        "pool grew past the concurrency-4 envelope: {}",
+        stats.peak_workers
+    );
+
+    if seq < oneshot {
+        println!(
+            "engine_throughput: engine reuse beats one-shot by {:.2}x (sequential), {:.2}x (w=4) ✓",
+            oneshot.as_secs_f64() / seq.as_secs_f64(),
+            oneshot.as_secs_f64() / conc.as_secs_f64()
+        );
+    } else {
+        // Report, don't abort: timing comparisons are at the mercy of
+        // scheduling noise on loaded machines.
+        println!(
+            "engine_throughput: WARNING — engine {seq:?} did not beat one-shot {oneshot:?} \
+             on this machine (noisy run?); rerun on an idle host"
+        );
+    }
+}

@@ -4,16 +4,16 @@
 //!   cargo bench --bench fig_traces
 //!
 //! Output: the rendered trace per figure + a timing table; CSVs land in
-//! target/reports/.
+//! target/reports/.  One engine session drives every replay.
 
+use ft_tsqr::engine::Engine;
 use ft_tsqr::fault::Scenario;
 use ft_tsqr::report::bench::{bench, iters};
 use ft_tsqr::report::{REPORT_DIR, Table};
-use ft_tsqr::runtime::Executor;
-use ft_tsqr::tsqr::{Algo, Event, RunSpec, TreePlan, run};
+use ft_tsqr::tsqr::{Algo, Event, RunSpec, TreePlan};
 
 fn main() {
-    let exec = Executor::auto("artifacts");
+    let engine = Engine::builder().build().expect("engine");
     let mut timing = Table::new(
         "FIG1-5 — scenario replay timing (median of runs)",
         &["figure", "algo", "procs", "success", "holders", "median"],
@@ -21,16 +21,15 @@ fn main() {
 
     // ---------------------------------------------------------- Figure 1
     {
-        let spec =
-            RunSpec::new(Algo::Baseline, 4, 64, 8).with_trace(true).with_executor(exec.clone());
-        let res = run(&spec).unwrap();
+        let spec = RunSpec::new(Algo::Baseline, 4, 64, 8).with_trace(true);
+        let res = engine.run(spec).unwrap();
         println!("=== Figure 1 — TSQR on 4 processes (baseline tree) ===");
         println!("{}", res.trace.render(4, 2));
         assert_eq!(res.trace.combiners_at(0), vec![0, 2], "half the procs idle after step 1");
         assert_eq!(res.trace.combiners_at(1), vec![0], "only the root works at the end");
         assert_eq!(res.r_holders, vec![0]);
         let s = bench(1, iters(20, 3), || {
-            let _ = run(&RunSpec::new(Algo::Baseline, 4, 64, 8).with_executor(exec.clone()));
+            let _ = engine.run(RunSpec::new(Algo::Baseline, 4, 64, 8));
         });
         timing.row(vec![
             "fig1".into(),
@@ -44,9 +43,8 @@ fn main() {
 
     // ---------------------------------------------------------- Figure 2
     {
-        let spec =
-            RunSpec::new(Algo::Redundant, 4, 64, 8).with_trace(true).with_executor(exec.clone());
-        let res = run(&spec).unwrap();
+        let spec = RunSpec::new(Algo::Redundant, 4, 64, 8).with_trace(true);
+        let res = engine.run(spec).unwrap();
         println!("=== Figure 2 — Redundant TSQR on 4 processes ===");
         println!("{}", res.trace.render(4, 2));
         assert_eq!(res.trace.exchange_pairs_at(0), vec![(0, 1), (2, 3)]);
@@ -54,7 +52,7 @@ fn main() {
         assert_eq!(res.trace.combiners_at(0).len(), 4, "nobody idles");
         assert_eq!(res.r_holders, vec![0, 1, 2, 3], "all procs end with R");
         let s = bench(1, iters(20, 3), || {
-            let _ = run(&RunSpec::new(Algo::Redundant, 4, 64, 8).with_executor(exec.clone()));
+            let _ = engine.run(RunSpec::new(Algo::Redundant, 4, 64, 8));
         });
         timing.row(vec![
             "fig2".into(),
@@ -68,7 +66,7 @@ fn main() {
 
     // ------------------------------------------------------- Figures 3-5
     for sc in [Scenario::fig3(), Scenario::fig4(), Scenario::fig5()] {
-        let res = run(&sc.spec(64, 8).with_executor(exec.clone())).unwrap();
+        let res = engine.run(sc.spec(64, 8)).unwrap();
         println!("=== {} — {} ===", sc.name, sc.description);
         println!("{}", res.trace.render(sc.procs, TreePlan::new(sc.procs).rounds()));
         assert!(res.success(), "{}", sc.name);
@@ -98,7 +96,7 @@ fn main() {
         }
         let holders = format!("{:?}", res.r_holders);
         let s = bench(1, iters(20, 3), || {
-            let _ = run(&sc.spec(64, 8).with_executor(exec.clone()).with_trace(false));
+            let _ = engine.run(sc.spec(64, 8).with_trace(false));
         });
         timing.row(vec![
             sc.name.into(),

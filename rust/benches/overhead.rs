@@ -7,16 +7,17 @@
 //! baseline vs the redundant family.  The paper's communication-
 //! avoidance argument in numbers: the redundant exchange doubles
 //! *messages* but not *rounds* (the critical path), and the extra
-//! flops vanish as leaves get taller.
+//! flops vanish as leaves get taller.  All runs share one engine
+//! session, so the worker pool is reused across the whole sweep.
 
+use ft_tsqr::engine::Engine;
 use ft_tsqr::metrics;
 use ft_tsqr::report::bench::{bench, iters};
 use ft_tsqr::report::{REPORT_DIR, Table, fmt_f};
-use ft_tsqr::runtime::Executor;
-use ft_tsqr::tsqr::{Algo, RunSpec, run};
+use ft_tsqr::tsqr::{Algo, RunSpec};
 
 fn main() {
-    let exec = Executor::auto("artifacts");
+    let engine = Engine::builder().build().expect("engine");
     let (rows, cols) = (256usize, 8usize);
 
     // ------------------------------------------------ scaling with P
@@ -26,13 +27,11 @@ fn main() {
     );
     for procs in [2usize, 4, 8, 16, 32, 64] {
         for algo in [Algo::Baseline, Algo::Redundant, Algo::Replace, Algo::SelfHealing] {
-            let spec = RunSpec::new(algo, procs, rows, cols)
-                .with_executor(exec.clone())
-                .with_verify(false);
-            let res = run(&spec).expect("run");
+            let spec = RunSpec::new(algo, procs, rows, cols).with_verify(false);
+            let res = engine.run(spec.clone()).expect("run");
             assert!(res.success());
             let s = bench(1, iters(10, 2), || {
-                let _ = run(&spec);
+                let _ = engine.run(spec.clone());
             });
             let redundant = algo.is_redundant_family();
             let flops = metrics::total_flops(redundant, procs, rows, cols);
@@ -61,16 +60,13 @@ fn main() {
         &["rows/proc", "baseline flops", "redundant flops", "overhead", "measured wall ratio"],
     );
     for rows in [16usize, 64, 256, 1024] {
-        let base_spec =
-            RunSpec::new(Algo::Baseline, 16, rows, 8).with_executor(exec.clone()).with_verify(false);
-        let red_spec = RunSpec::new(Algo::Redundant, 16, rows, 8)
-            .with_executor(exec.clone())
-            .with_verify(false);
+        let base_spec = RunSpec::new(Algo::Baseline, 16, rows, 8).with_verify(false);
+        let red_spec = RunSpec::new(Algo::Redundant, 16, rows, 8).with_verify(false);
         let bs = bench(1, iters(8, 2), || {
-            let _ = run(&base_spec);
+            let _ = engine.run(base_spec.clone());
         });
         let rs = bench(1, iters(8, 2), || {
-            let _ = run(&red_spec);
+            let _ = engine.run(red_spec.clone());
         });
         amort.row(vec![
             rows.to_string(),

@@ -6,9 +6,12 @@
 //!
 //! Survival probability vs per-process failure rate and vs world size,
 //! for all algorithms; plus the "robustness grows with need" curve:
-//! tolerated failures per step against the paper's 2^s − 1.
+//! tolerated failures per step against the paper's 2^s − 1.  A final
+//! full-simulator cross-check replays sample cells through one engine
+//! campaign.
 
-use ft_tsqr::analysis::{SurvivalSweep, max_tolerated_by_step};
+use ft_tsqr::analysis::{FullSimSweep, SurvivalSweep, max_tolerated_by_step};
+use ft_tsqr::engine::Engine;
 use ft_tsqr::report::{REPORT_DIR, Table, fmt_prob};
 use ft_tsqr::tsqr::{Algo, TreePlan};
 
@@ -24,30 +27,17 @@ fn main() {
     );
     for rate in [0.001f64, 0.002, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2] {
         let mut row = vec![format!("{rate}")];
-        for algo in Algo::ALL_WITH_COMPARATORS {
-            let order = match algo {
-                Algo::Baseline => 0,
-                Algo::Checkpointed => 1,
-                Algo::Redundant => 2,
-                Algo::Replace => 3,
-                Algo::SelfHealing => 4,
-            };
-            let _ = order;
+        for algo in [
+            Algo::Baseline,
+            Algo::Checkpointed,
+            Algo::Redundant,
+            Algo::Replace,
+            Algo::SelfHealing,
+        ] {
             let est = SurvivalSweep::new(algo, procs).with_trials(trials).exponential(rate);
             row.push(fmt_prob(est.probability(), est.ci95()));
         }
-        // Reorder columns to match the header (ALL_WITH_COMPARATORS is
-        // already baseline, redundant, replace, self-healing, ckpt —
-        // adjust to header order).
-        let r = vec![
-            row[0].clone(),
-            row[1].clone(),
-            row[5].clone(),
-            row[2].clone(),
-            row[3].clone(),
-            row[4].clone(),
-        ];
-        table.row(r);
+        table.row(row);
     }
     print!("{}", table.render());
     table.save_csv(REPORT_DIR).expect("csv");
@@ -91,6 +81,33 @@ fn main() {
     }
     print!("{}", grow.render());
     grow.save_csv(REPORT_DIR).expect("csv");
+
+    // ----------------------------------- full-simulator cross-check
+    // A sample of TAB-S1 cells replayed on the real stack through one
+    // engine campaign: the analytic model and the implementation must
+    // tell the same story.
+    let engine = Engine::host();
+    let samples = if quick { 10 } else { 40 };
+    let mut xcheck = Table::new(
+        format!("TAB-S1d: analytic vs full simulator (P=32, rate=0.05, {samples} runs)"),
+        &["algo", "analytic", "full simulator"],
+    );
+    for algo in [Algo::Baseline, Algo::Replace, Algo::SelfHealing] {
+        let analytic = SurvivalSweep::new(algo, 32).with_trials(trials).exponential(0.05);
+        let full = FullSimSweep::new(&engine, algo, 32)
+            .with_shape(16, 8)
+            .with_samples(samples)
+            .with_concurrency(4)
+            .exponential(0.05)
+            .expect("full-sim sweep");
+        xcheck.row(vec![
+            algo.name().into(),
+            fmt_prob(analytic.probability(), analytic.ci95()),
+            fmt_prob(full.probability(), full.ci95()),
+        ]);
+    }
+    print!("{}", xcheck.render());
+    xcheck.save_csv(REPORT_DIR).expect("csv");
 
     println!("\nreliability: baseline survival collapses with rate and P; the redundant");
     println!("family tracks the 2^s-1 envelope — robustness increases exactly as exposure");

@@ -5,17 +5,19 @@
 //!
 //! For each algorithm: P(success) vs (round, #failures), measured on
 //! the analytic engine (large samples) AND cross-checked on the full
-//! simulator (smaller samples); exhaustive verification of the 2^s − 1
+//! simulator (smaller samples, batched through one engine session via
+//! `analysis::FullSimSweep`); exhaustive verification of the 2^s − 1
 //! guarantee for Replace/Self-Healing on P=8; tightness (2^s failures
 //! can be fatal).  CSVs land in target/reports/.
 
 use std::collections::HashMap;
 
 use ft_tsqr::analysis::robustness::survives_failure_set;
-use ft_tsqr::analysis::{SurvivalSweep, max_tolerated_by_step, redundancy_copies};
+use ft_tsqr::analysis::{FullSimSweep, SurvivalSweep, max_tolerated_by_step, redundancy_copies};
+use ft_tsqr::engine::Engine;
 use ft_tsqr::fault::KillSchedule;
 use ft_tsqr::report::{REPORT_DIR, Table, fmt_prob};
-use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan, run};
+use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan};
 use ft_tsqr::ulfm::Rank;
 
 fn main() {
@@ -24,6 +26,7 @@ fn main() {
     let rounds = TreePlan::new(procs).rounds();
     let trials: u64 = if quick { 500 } else { 20_000 };
     let sim_samples: u64 = if quick { 10 } else { 60 };
+    let engine = Engine::host();
 
     // ---------------------------------------------------- TAB-R1/R2/R3
     for (tab, algo) in [
@@ -32,6 +35,9 @@ fn main() {
         ("TAB-R3", Algo::SelfHealing),
     ] {
         let sweep = SurvivalSweep::new(algo, procs).with_trials(trials);
+        let full = FullSimSweep::new(&engine, algo, procs)
+            .with_samples(sim_samples)
+            .with_concurrency(4);
         let mut table = Table::new(
             format!(
                 "{tab}: P(success) — {} on P={procs} ({trials} analytic + {sim_samples} full-sim samples/cell)",
@@ -42,23 +48,15 @@ fn main() {
         for s in 1..rounds {
             for f in [1usize, 2, 3, 4, 6, 8, 12] {
                 let est = sweep.at_round(s, f);
-                // Cross-check on the full stack.
-                let mut ok = 0u64;
-                for seed in 0..sim_samples {
-                    let spec = RunSpec::new(algo, procs, 16, 4)
-                        .with_schedule(KillSchedule::random_at_round(procs, s, f, None, seed))
-                        .with_verify(false);
-                    if run(&spec).expect("run").success() {
-                        ok += 1;
-                    }
-                }
+                // Cross-check on the full stack, one campaign per cell.
+                let sim = full.at_round(s, f).expect("full-sim cell");
                 table.row(vec![
                     s.to_string(),
                     redundancy_copies(s).to_string(),
                     max_tolerated_by_step(s).to_string(),
                     f.to_string(),
                     fmt_prob(est.probability(), est.ci95()),
-                    format!("{:.3}", ok as f64 / sim_samples as f64),
+                    format!("{:.3}", sim.probability()),
                 ]);
             }
         }
@@ -144,6 +142,7 @@ fn main() {
 
     // --------------------------------------- self-healing per-step claim
     // §III-D3: SH tolerates 2^s − 1 per step; drive a max-rate schedule.
+    // The explicit schedules go through one engine campaign.
     {
         let procs = 16;
         let rounds = TreePlan::new(procs).rounds();
@@ -151,10 +150,8 @@ fn main() {
             "TAB-R3b: Self-Healing at per-step capacity (f_s = 2^s - 1 at EVERY step)",
             &["procs", "schedule", "success rate (full sim)", "respawns (mean)"],
         );
-        let mut ok = 0u64;
-        let mut respawns = 0u64;
         let samples = if quick { 5 } else { 25 };
-        for seed in 0..samples {
+        let specs = (0..samples).map(|seed| {
             // At each round s >= 1 kill 2^s - 1 random ranks (protect 0
             // only to keep at least one deterministic survivor).
             let mut kills: Vec<(Rank, u32)> = Vec::new();
@@ -168,20 +165,16 @@ fn main() {
                     }
                 }
             }
-            let spec = RunSpec::new(Algo::SelfHealing, procs, 16, 4)
+            RunSpec::new(Algo::SelfHealing, procs, 16, 4)
                 .with_schedule(KillSchedule::at(&kills))
-                .with_verify(false);
-            let res = run(&spec).expect("run");
-            if res.success() {
-                ok += 1;
-            }
-            respawns += res.metrics.respawns;
-        }
+                .with_verify(false)
+        });
+        let report = engine.campaign(specs).concurrency(4).run().expect("campaign");
         table.row(vec![
             procs.to_string(),
             "f_s = 2^s-1 ∀s".into(),
-            format!("{:.2}", ok as f64 / samples as f64),
-            format!("{:.1}", respawns as f64 / samples as f64),
+            format!("{:.2}", report.success_rate()),
+            format!("{:.1}", report.metrics().respawns as f64 / samples as f64),
         ]);
         print!("{}", table.render());
         table.save_csv(REPORT_DIR).expect("csv");

@@ -3,26 +3,33 @@
 //! watch where the paper's 2^s − 1 bound bites.
 //!
 //! Prints, per (algorithm, step, f): survival measured on the full
-//! simulator, against the bound.
+//! simulator, against the bound.  All cells run through ONE engine
+//! session (`analysis::FullSimSweep` → `engine.campaign`), so the
+//! worker pool is reused across every run of the storm.
 //!
 //! ```bash
 //! cargo run --release --example failure_storm
 //! ```
 
-use ft_tsqr::analysis::max_tolerated_by_step;
-use ft_tsqr::fault::KillSchedule;
+use ft_tsqr::analysis::{FullSimSweep, max_tolerated_by_step};
+use ft_tsqr::engine::Engine;
 use ft_tsqr::report::Table;
-use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan, run};
+use ft_tsqr::tsqr::{Algo, TreePlan};
 
 fn main() {
     let procs = 16;
     let rounds = TreePlan::new(procs).rounds();
     // Full-simulator runs per cell (set STORM_SAMPLES to override).
-    let samples: u64 = std::env::var("STORM_SAMPLES").ok().and_then(|v| v.parse().ok()).unwrap_or(12);
+    let samples: u64 =
+        std::env::var("STORM_SAMPLES").ok().and_then(|v| v.parse().ok()).unwrap_or(12);
 
+    let engine = Engine::builder().build().expect("engine");
     println!("Failure storm on P={procs}: f simultaneous failures at round s\n");
 
     for algo in [Algo::Redundant, Algo::Replace, Algo::SelfHealing] {
+        let sweep = FullSimSweep::new(&engine, algo, procs)
+            .with_samples(samples)
+            .with_concurrency(4);
         let mut table = Table::new(
             format!("{} — fraction of {samples} runs surviving", algo.name()),
             &["round s", "bound 2^s-1", "f=1", "f=2", "f=4", "f=8"],
@@ -30,16 +37,8 @@ fn main() {
         for s in 1..rounds {
             let mut row = vec![s.to_string(), max_tolerated_by_step(s).to_string()];
             for f in [1usize, 2, 4, 8] {
-                let mut ok = 0;
-                for seed in 0..samples {
-                    let spec = RunSpec::new(algo, procs, 16, 4)
-                        .with_schedule(KillSchedule::random_at_round(procs, s, f, None, seed))
-                        .with_verify(false);
-                    if run(&spec).expect("run").success() {
-                        ok += 1;
-                    }
-                }
-                let frac = ok as f64 / samples as f64;
+                let est = sweep.at_round(s, f).expect("sweep cell");
+                let frac = est.probability();
                 let mark = if f as u64 <= max_tolerated_by_step(s) { "*" } else { " " };
                 row.push(format!("{frac:.2}{mark}"));
             }
@@ -48,6 +47,12 @@ fn main() {
         print!("{}", table.render());
         println!("  (* = within the paper's bound)\n");
     }
+
+    let stats = engine.stats();
+    println!(
+        "engine: {} runs through {} pooled workers (peak {})\n",
+        stats.jobs_completed, stats.workers, stats.peak_workers
+    );
 
     println!("Reading: replace/self-healing hold 1.00 everywhere the bound promises (cells");
     println!("marked *), and degrade gracefully past it; redundant's give-up cascade loses");

@@ -2,8 +2,8 @@
 //! from in practice: solve min‖Ax − b‖ for a tall A via the R factor
 //! computed by *Replace TSQR* while a process dies mid-run.
 //!
-//! Pipeline (all through the public API; the solve path runs the AOT
-//! `apply_qt` + `backsolve` kernels when artifacts are present):
+//! Pipeline (all through the session engine; the solve path runs the
+//! AOT `apply_qt` + `backsolve` kernels when artifacts are present):
 //!   1. distributed fault-tolerant TSQR → R (survives the failure)
 //!   2. Qᵀb reduction along the same tree shape
 //!   3. back-substitution R x = (Qᵀ b)[:n]
@@ -12,19 +12,19 @@
 //! cargo run --release --example least_squares
 //! ```
 
+use ft_tsqr::engine::Engine;
 use ft_tsqr::fault::KillSchedule;
 use ft_tsqr::linalg::Matrix;
-use ft_tsqr::runtime::Executor;
-use ft_tsqr::tsqr::{Algo, RunSpec, run};
+use ft_tsqr::tsqr::{Algo, RunSpec};
 
 fn main() {
     let (procs, rows_per_proc, n) = (4usize, 64usize, 8usize);
     let m = procs * rows_per_proc;
-    let exec = Executor::auto("artifacts");
+    let engine = Engine::builder().artifact_dir("artifacts").build().expect("engine");
+    let exec = engine.executor();
 
     // Ground truth: b = A x*.
     let spec = RunSpec::new(Algo::Replace, procs, rows_per_proc, n)
-        .with_executor(exec.clone())
         .with_schedule(KillSchedule::at(&[(2, 1)])); // P2 dies at step 1
     let a = spec.input_matrix();
     let x_true = Matrix::random(n, 1, 999);
@@ -33,7 +33,7 @@ fn main() {
     println!("Least squares via Replace TSQR: A is {m}x{n}, P2 dies at step 1\n");
 
     // 1. Fault-tolerant factorization: proves R survives the failure.
-    let result = run(&spec).expect("TSQR failed");
+    let result = engine.run(spec).expect("TSQR failed");
     assert!(result.success(), "Replace TSQR must survive one step-1 failure");
     let r_ft = result.final_r.clone().expect("R available");
     println!(

@@ -4,16 +4,19 @@
 //! TSQR, applying Qᵀ to the trailing columns after each panel.
 //!
 //! A process failure is injected during panel 1 to show the blocked
-//! driver rides through it.
+//! driver rides through it.  Every panel run goes through ONE engine
+//! session — the natural fit for a driver that issues many
+//! factorizations back to back.
 //!
 //! ```bash
 //! cargo run --release --example panel_factorization
 //! ```
 
+use ft_tsqr::engine::Engine;
 use ft_tsqr::fault::KillSchedule;
 use ft_tsqr::linalg::{Matrix, qr_r};
 use ft_tsqr::runtime::Executor;
-use ft_tsqr::tsqr::{Algo, RunSpec, run};
+use ft_tsqr::tsqr::{Algo, RunSpec};
 
 fn main() {
     // Whole matrix: 256 x 24, factored as 3 panels of 8 columns over
@@ -21,7 +24,8 @@ fn main() {
     let (procs, rows_per_proc, panel_n, panels) = (4usize, 64usize, 8usize, 3usize);
     let m = procs * rows_per_proc;
     let total_n = panel_n * panels;
-    let exec = Executor::auto("artifacts");
+    let engine = Engine::builder().artifact_dir("artifacts").build().expect("engine");
+    let exec = engine.executor();
 
     let a = Matrix::random(m, total_n, 4242);
     println!("Blocked QR of {m}x{total_n} via {panels} FT-TSQR panels of {panel_n} columns");
@@ -35,30 +39,24 @@ fn main() {
         // --- extract the current panel (all rows, cols col0..col0+n).
         let panel = Matrix::from_fn(m, panel_n, |i, j| working[(i, col0 + j)]);
 
-        // --- fault-tolerant TSQR on the panel. We reuse the library's
-        // distributed runner: write the panel into the spec's layout by
-        // seeding, then overriding the input via leaf QR composition —
-        // here we call the executor tree directly for the panel, and
-        // use the runner on panel 1 to exercise the FT path.
+        // --- fault-tolerant TSQR on the panel.  The engine session runs
+        // the distributed FT path; on panel 1 we inject a failure
+        // through it to prove survival, then factor our actual panel
+        // through the executor tree below.
         let r_panel = if p == 1 {
-            // Demonstrate failure survival on this panel via the full
-            // distributed runner with a matching input.
             let spec = RunSpec::new(Algo::Replace, procs, rows_per_proc, panel_n)
-                .with_executor(exec.clone())
                 .with_schedule(KillSchedule::at(&[(1, 1)]));
-            // The runner factors its own deterministic matrix; we run it
-            // to *prove* survival, then factor our actual panel below.
-            let res = run(&spec).expect("panel TSQR");
+            let res = engine.run(spec).expect("panel TSQR");
             assert!(res.success(), "panel 1: Replace TSQR must survive the failure");
             println!("panel {p}: injected failure absorbed (holders {:?})", res.r_holders);
-            tsqr_tree(&exec, &panel, procs)
+            tsqr_tree(exec, &panel, procs)
         } else {
-            tsqr_tree(&exec, &panel, procs)
+            tsqr_tree(exec, &panel, procs)
         };
 
         // --- apply Qᵀ_panel to the trailing columns: form the thin Q
         // explicitly (small n, fine for the example) and update.
-        let q = panel_q(&exec, &panel, &r_panel);
+        let q = panel_q(exec, &panel, &r_panel);
         let trailing0 = col0 + panel_n;
         if trailing0 < total_n {
             // trailing := trailing - Q (Qᵀ trailing) + R-part update:
@@ -97,7 +95,7 @@ fn main() {
 }
 
 /// TSQR reduction tree over the executor (no failure injection — the
-/// distributed FT path is exercised by the runner call above).
+/// distributed FT path is exercised by the engine run above).
 fn tsqr_tree(exec: &Executor, panel: &Matrix, leaves: usize) -> Matrix {
     let rows = panel.rows() / leaves;
     let mut rs: Vec<Matrix> = (0..leaves)

@@ -1,26 +1,29 @@
-//! Quickstart: factor a tall-and-skinny matrix with Redundant TSQR on
-//! 8 simulated processes, survive a mid-computation failure, and verify
-//! the result.
+//! Quickstart: build one engine session, factor a tall-and-skinny
+//! matrix with Redundant TSQR on 8 simulated processes, survive a
+//! mid-computation failure, and verify the result.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Uses the AOT/PJRT backend automatically when `make artifacts` has
-//! run, and the pure-rust host backend otherwise.
+//! The engine picks the AOT/PJRT backend automatically when `make
+//! artifacts` has run (and the crate is built with `--features pjrt`),
+//! and the pure-rust host backend otherwise.
 
+use ft_tsqr::engine::Engine;
 use ft_tsqr::fault::KillSchedule;
-use ft_tsqr::runtime::Executor;
-use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan, run};
+use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan};
 
 fn main() {
     // A 2048x16 tall-skinny matrix, split across 8 simulated MPI ranks.
     let (procs, rows_per_proc, cols) = (8usize, 256usize, 16usize);
 
+    // One engine per session: owns the backend and the worker pool.
+    let engine = Engine::builder().artifact_dir("artifacts").build().expect("engine");
+
     // Kill rank 5 at the end of step 1 — one failure, well within the
     // 2^1 - 1 = 1 bound the paper proves for that step.
     let spec = RunSpec::new(Algo::Redundant, procs, rows_per_proc, cols)
-        .with_executor(Executor::auto("artifacts"))
         .with_schedule(KillSchedule::at(&[(5, 1)]))
         .with_trace(true);
 
@@ -29,7 +32,7 @@ fn main() {
         procs * rows_per_proc
     );
 
-    let result = run(&spec).expect("run failed");
+    let result = engine.submit(spec).wait().expect("run failed");
 
     print!("{}", result.trace.render(procs, TreePlan::new(procs).rounds()));
     println!();
@@ -41,5 +44,22 @@ fn main() {
     println!("replica agreement: max |Δ| = {:.1e}", result.holder_disagreement);
 
     assert!(result.success() && v.ok, "quickstart must demonstrate a verified survival");
+
+    // The session is reusable: run a quick 50-seed campaign on the same
+    // engine — the pooled workers are recycled run after run.
+    let specs = (0..50u64).map(|seed| {
+        RunSpec::new(Algo::Redundant, procs, 32, 8)
+            .with_seed(seed)
+            .with_schedule(KillSchedule::at(&[(5, 1)]))
+            .with_verify(false)
+    });
+    let report = engine.campaign(specs).run().expect("campaign");
+    println!("\n50-seed campaign on the same engine: {}", report.summary());
+    let stats = engine.stats();
+    println!(
+        "engine: {} jobs on {} pooled workers (peak {})",
+        stats.jobs_completed, stats.workers, stats.peak_workers
+    );
+
     println!("\nOK — the failure was absorbed by redundant computation, no checkpoint needed.");
 }

@@ -5,17 +5,18 @@
 //! Two engines, cross-checked:
 //!  * the *analytic* simulator (millions of patterns/s) sweeps failure
 //!    rates and prints survival curves;
-//!  * the *full* simulator replays a sample of the same patterns to
+//!  * the *full* simulator replays a sample of the same failure model
+//!    through one engine campaign (`analysis::FullSimSweep`) to
 //!    confirm the analytic numbers on the real implementation.
 //!
 //! ```bash
 //! cargo run --release --example reliability_study
 //! ```
 
-use ft_tsqr::analysis::SurvivalSweep;
-use ft_tsqr::fault::KillSchedule;
+use ft_tsqr::analysis::{FullSimSweep, SurvivalSweep};
+use ft_tsqr::engine::Engine;
 use ft_tsqr::report::{Table, fmt_prob};
-use ft_tsqr::tsqr::{Algo, RunSpec, run};
+use ft_tsqr::tsqr::Algo;
 
 fn main() {
     let procs = 32;
@@ -44,29 +45,33 @@ fn main() {
     }
     print!("{}", table.render());
 
-    // Cross-check one cell on the full simulator (rate = 0.05).
-    println!("\nCross-check on the full simulator (rate=0.05, 40 runs):");
+    // Cross-check one cell on the full simulator, batched through one
+    // engine session (rate = 0.05, 40 runs per algorithm).
+    let engine = Engine::host();
+    println!("\nCross-check on the full simulator (rate=0.05, 40 runs each):");
     for algo in [Algo::Baseline, Algo::Replace, Algo::SelfHealing] {
-        let mut ok = 0;
-        let runs = 40;
-        for seed in 0..runs {
-            let spec = RunSpec::new(algo, procs, 16, 8)
-                .with_schedule(KillSchedule::exponential(procs, 5, 0.05, seed))
-                .with_verify(false);
-            if run(&spec).expect("run").success() {
-                ok += 1;
-            }
-        }
+        let full = FullSimSweep::new(&engine, algo, procs)
+            .with_shape(16, 8)
+            .with_samples(40)
+            .with_concurrency(4)
+            .exponential(0.05)
+            .expect("full-sim sweep");
         let analytic =
             SurvivalSweep::new(algo, procs).with_trials(trials).exponential(0.05).probability();
         println!(
-            "  {:13} full-sim {:>2}/{runs} = {:.2}   analytic {:.2}",
+            "  {:13} full-sim {:>2}/{} = {:.2}   analytic {:.2}",
             algo.name(),
-            ok,
-            ok as f64 / runs as f64,
+            full.successes,
+            full.trials,
+            full.probability(),
             analytic
         );
     }
+    let stats = engine.stats();
+    println!(
+        "  (one engine session: {} runs, {} pooled workers)",
+        stats.jobs_completed, stats.workers
+    );
     println!("\nReading: the redundant family turns a job that dies with near-certainty at");
     println!("realistic rates into one that survives — with zero additional messages (the");
     println!("exchange replaces the one-way send) while checkpointing pays extra traffic.");

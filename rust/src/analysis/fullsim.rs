@@ -1,0 +1,157 @@
+//! Full-simulator Monte-Carlo sweeps, batched through an engine
+//! [`Campaign`](crate::engine::Campaign) so world/pool setup is
+//! amortized across the whole sample instead of paid per run.
+//!
+//! The analytic sweeps in [`super::survival`] stay the fast path
+//! (millions of patterns per second, matrix-free); this is the
+//! cross-check on the real concurrent implementation that the
+//! robustness benches and the `repro sweep --full` CLI use.  Both
+//! report the same [`SurvivalEstimate`] type so tables mix freely.
+
+use crate::engine::Engine;
+use crate::error::Result;
+use crate::fault::KillSchedule;
+use crate::tsqr::{Algo, RunSpec, TreePlan};
+
+use super::survival::SurvivalEstimate;
+
+/// Parameterized full-stack Monte-Carlo sweep over a shared engine.
+pub struct FullSimSweep<'e> {
+    engine: &'e Engine,
+    pub algo: Algo,
+    pub procs: usize,
+    pub rows_per_proc: usize,
+    pub cols: usize,
+    pub samples: u64,
+    pub seed: u64,
+    concurrency: usize,
+}
+
+impl<'e> FullSimSweep<'e> {
+    /// Defaults match the historical bench shapes: 16×4 leaves,
+    /// 60 samples per cell.
+    pub fn new(engine: &'e Engine, algo: Algo, procs: usize) -> Self {
+        Self {
+            engine,
+            algo,
+            procs,
+            rows_per_proc: 16,
+            cols: 4,
+            samples: 60,
+            seed: 0xC0712,
+            concurrency: 1,
+        }
+    }
+
+    pub fn with_samples(mut self, samples: u64) -> Self {
+        self.samples = samples;
+        self
+    }
+
+    pub fn with_shape(mut self, rows_per_proc: usize, cols: usize) -> Self {
+        self.rows_per_proc = rows_per_proc;
+        self.cols = cols;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Pipeline this many runs concurrently through the engine.
+    pub fn with_concurrency(mut self, window: usize) -> Self {
+        self.concurrency = window.max(1);
+        self
+    }
+
+    fn spec(&self, schedule: KillSchedule) -> RunSpec {
+        RunSpec::new(self.algo, self.procs, self.rows_per_proc, self.cols)
+            .with_seed(self.seed)
+            .with_schedule(schedule)
+            .with_verify(false)
+    }
+
+    fn estimate(&self, schedules: impl Iterator<Item = KillSchedule>) -> Result<SurvivalEstimate> {
+        let specs: Vec<RunSpec> = schedules.map(|s| self.spec(s)).collect();
+        let report =
+            self.engine.campaign(specs).concurrency(self.concurrency).run()?;
+        Ok(report.survival())
+    }
+
+    /// P(success | exactly `f` distinct ranks die at round boundary
+    /// `round`), measured on the full simulator.
+    pub fn at_round(&self, round: u32, f: usize) -> Result<SurvivalEstimate> {
+        let base = self.seed ^ ((round as u64) << 32) ^ ((f as u64) << 48);
+        self.estimate((0..self.samples).map(|i| {
+            KillSchedule::random_at_round(self.procs, round, f, None, base.wrapping_add(i))
+        }))
+    }
+
+    /// P(success) under per-rank exponential lifetimes (deaths/step).
+    pub fn exponential(&self, rate: f64) -> Result<SurvivalEstimate> {
+        let rounds = TreePlan::new(self.procs).rounds();
+        let base = self.seed ^ rate.to_bits();
+        self.estimate(
+            (0..self.samples).map(|i| {
+                KillSchedule::exponential(self.procs, rounds, rate, base.wrapping_add(i))
+            }),
+        )
+    }
+
+    /// P(success) when every (rank, round) fails independently w.p. `p`.
+    pub fn bernoulli(&self, p: f64) -> Result<SurvivalEstimate> {
+        let rounds = TreePlan::new(self.procs).rounds();
+        let base = self.seed ^ p.to_bits();
+        self.estimate(
+            (0..self.samples)
+                .map(|i| KillSchedule::bernoulli(self.procs, rounds, p, base.wrapping_add(i))),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn within_bound_replace_is_certain_on_the_full_stack() {
+        let engine = Engine::host();
+        let sweep = FullSimSweep::new(&engine, Algo::Replace, 8).with_samples(12);
+        let est = sweep.at_round(1, 1).unwrap();
+        assert_eq!(est.trials, 12);
+        assert_eq!(est.probability(), 1.0, "f=1 at s=1 is within 2^1-1");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let engine = Engine::host();
+        let a = FullSimSweep::new(&engine, Algo::SelfHealing, 8)
+            .with_samples(10)
+            .at_round(2, 3)
+            .unwrap();
+        let b = FullSimSweep::new(&engine, Algo::SelfHealing, 8)
+            .with_samples(10)
+            .with_concurrency(4)
+            .at_round(2, 3)
+            .unwrap();
+        assert_eq!(a.successes, b.successes, "same seeds, same outcome");
+    }
+
+    #[test]
+    fn matches_analytic_engine_on_a_cell() {
+        // Same failure model, two engines: the full simulator and the
+        // analytic model must agree (their per-sample patterns differ,
+        // so compare the certain cells).
+        let engine = Engine::host();
+        let full = FullSimSweep::new(&engine, Algo::SelfHealing, 8)
+            .with_samples(10)
+            .at_round(1, 1)
+            .unwrap();
+        let analytic = super::super::SurvivalSweep::new(Algo::SelfHealing, 8)
+            .with_trials(200)
+            .at_round(1, 1);
+        assert_eq!(full.probability(), 1.0);
+        assert_eq!(analytic.probability(), 1.0);
+    }
+}

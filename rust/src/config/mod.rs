@@ -25,6 +25,7 @@
 
 use std::path::Path;
 
+use crate::engine::{Engine, EngineBuilder};
 use crate::error::{Error, Result};
 use crate::fault::KillSchedule;
 use crate::runtime::{Backend, Executor};
@@ -63,6 +64,29 @@ impl FailureConfig {
             FailureConfig::RandomAtRound { round, f, seed, protect_root } => {
                 KillSchedule::random_at_round(procs, *round, *f, protect_root.then_some(0), *seed)
             }
+        }
+    }
+
+    /// Same stochastic model, shifted seed stream — how campaign seed
+    /// sweeps draw a fresh failure pattern per run.  Deterministic
+    /// models (`None`, `At`) are returned unchanged.
+    pub fn reseeded(&self, offset: u64) -> FailureConfig {
+        match self.clone() {
+            FailureConfig::Bernoulli { p, seed } => {
+                FailureConfig::Bernoulli { p, seed: seed.wrapping_add(offset) }
+            }
+            FailureConfig::Exponential { rate, seed } => {
+                FailureConfig::Exponential { rate, seed: seed.wrapping_add(offset) }
+            }
+            FailureConfig::RandomAtRound { round, f, seed, protect_root } => {
+                FailureConfig::RandomAtRound {
+                    round,
+                    f,
+                    seed: seed.wrapping_add(offset),
+                    protect_root,
+                }
+            }
+            deterministic => deterministic,
         }
     }
 
@@ -226,13 +250,30 @@ impl Config {
         }
     }
 
+    /// Build a long-lived [`Engine`] for this config's backend
+    /// settings — the session every CLI subcommand submits through.
+    pub fn engine(&self) -> Result<Engine> {
+        EngineBuilder::new()
+            .backend(self.backend)
+            .artifact_dir(self.artifact_dir.clone())
+            .pjrt_shards(self.pjrt_shards)
+            .build()
+    }
+
     /// Materialize the full `RunSpec` (validates on the way out).
     pub fn to_spec(&self) -> Result<RunSpec> {
+        let spec = self.to_engine_spec()?.with_executor(self.executor()?);
+        Ok(spec)
+    }
+
+    /// [`to_spec`](Self::to_spec) minus the executor: for submission to
+    /// an [`Engine`], which supplies the session executor itself (so
+    /// the backend is not loaded twice).
+    pub fn to_engine_spec(&self) -> Result<RunSpec> {
         let rounds = TreePlan::new(self.procs.max(1)).rounds();
         let spec = RunSpec::new(self.algo, self.procs, self.rows_per_proc, self.cols)
             .with_seed(self.seed)
             .with_schedule(self.failures.schedule(self.procs, rounds))
-            .with_executor(self.executor()?)
             .with_trace(self.trace)
             .with_verify(self.verify);
         spec.validate()?;
@@ -319,6 +360,27 @@ mod tests {
         );
         assert!(Config::from_text("[failures]\nmode = \"bernoulli\"").is_err(), "p required");
         assert!(Config::from_text("[failures]\nmode = \"what\"").is_err());
+    }
+
+    #[test]
+    fn engine_and_engine_spec() {
+        let cfg = Config { backend: Backend::Host, ..Config::default() };
+        let engine = cfg.engine().unwrap();
+        assert_eq!(engine.executor().backend(), Backend::Host);
+        let spec = cfg.to_engine_spec().unwrap();
+        let res = engine.run(spec).unwrap();
+        assert!(res.success());
+    }
+
+    #[test]
+    fn reseeding_shifts_stochastic_models_only() {
+        let b = FailureConfig::Bernoulli { p: 0.1, seed: 3 };
+        assert_eq!(b.reseeded(4), FailureConfig::Bernoulli { p: 0.1, seed: 7 });
+        let e = FailureConfig::Exponential { rate: 0.5, seed: 1 };
+        assert_eq!(e.reseeded(1), FailureConfig::Exponential { rate: 0.5, seed: 2 });
+        let at = FailureConfig::At { kills: vec![(1, 0)] };
+        assert_eq!(at.reseeded(9), at, "deterministic schedules unchanged");
+        assert_eq!(FailureConfig::None.reseeded(9), FailureConfig::None);
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Batched execution: run many [`RunSpec`]s through one engine and
+//! aggregate the outcome — the session API's answer to the sweep loops
+//! that used to be copy-pasted across every bench, example and CLI
+//! subcommand.
+//!
+//! A campaign amortizes world/pool setup across its runs (the engine's
+//! workers are reused run after run), optionally pipelines several runs
+//! concurrently, and reduces the per-run [`RunResult`]s into compact
+//! [`RunRecord`]s plus campaign-level aggregates: summed communication
+//! metrics, survival statistics with a confidence interval, wall-clock
+//! throughput.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::analysis::SurvivalEstimate;
+use crate::error::Result;
+use crate::tsqr::{Algo, RunResult, RunSpec};
+use crate::ulfm::MetricsSnapshot;
+
+use super::{Engine, JobHandle};
+
+/// Compact per-run outcome kept for every campaign member (full
+/// [`RunResult`]s are only retained with [`Campaign::keep_results`] —
+/// a thousand-run sweep should not hold a thousand R factors).
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// Position in the campaign's spec list.
+    pub index: usize,
+    pub algo: Algo,
+    pub procs: usize,
+    /// The spec's input-matrix seed.
+    pub seed: u64,
+    pub success: bool,
+    /// Every rank finished holding the final R (§III-D1).
+    pub fully_healed: bool,
+    pub dead: usize,
+    /// Ranks that finished holding the final R.
+    pub holders: usize,
+    /// `None` when verification was skipped (`with_verify(false)`).
+    pub verified_ok: Option<bool>,
+    pub holder_disagreement: f64,
+    pub metrics: MetricsSnapshot,
+    pub wall: Duration,
+}
+
+impl RunRecord {
+    fn from_result(index: usize, seed: u64, res: &RunResult) -> Self {
+        Self {
+            index,
+            algo: res.spec_algo,
+            procs: res.procs,
+            seed,
+            success: res.success(),
+            fully_healed: res.fully_healed(),
+            dead: res.dead_count(),
+            holders: res.r_holders.len(),
+            verified_ok: res.verification.as_ref().map(|v| v.ok),
+            holder_disagreement: res.holder_disagreement,
+            metrics: res.metrics,
+            wall: res.wall,
+        }
+    }
+}
+
+/// A batch of runs bound to an engine.  Built by [`Engine::campaign`];
+/// consumed by [`Campaign::run`].
+pub struct Campaign<'e> {
+    engine: &'e Engine,
+    specs: Vec<RunSpec>,
+    concurrency: usize,
+    keep_results: bool,
+}
+
+impl<'e> Campaign<'e> {
+    pub(super) fn new(engine: &'e Engine, specs: Vec<RunSpec>) -> Self {
+        Self { engine, specs, concurrency: 1, keep_results: false }
+    }
+
+    /// Number of runs pipelined concurrently (default 1: sequential).
+    /// Each in-flight run occupies up to `procs + 1` pool workers.
+    pub fn concurrency(mut self, window: usize) -> Self {
+        self.concurrency = window.max(1);
+        self
+    }
+
+    /// Retain the full [`RunResult`] of every run (R factors included).
+    pub fn keep_results(mut self, keep: bool) -> Self {
+        self.keep_results = keep;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Execute every spec and aggregate.  Validation is eager: any
+    /// invalid spec fails the campaign before the first run starts.
+    pub fn run(self) -> Result<CampaignReport> {
+        for spec in &self.specs {
+            spec.validate()?;
+        }
+        let started = Instant::now();
+        let mut records: Vec<RunRecord> = Vec::with_capacity(self.specs.len());
+        let mut results: Option<Vec<RunResult>> =
+            if self.keep_results { Some(Vec::with_capacity(self.specs.len())) } else { None };
+
+        let mut record = |index: usize, seed: u64, res: RunResult| {
+            records.push(RunRecord::from_result(index, seed, &res));
+            if let Some(all) = &mut results {
+                all.push(res);
+            }
+        };
+
+        if self.concurrency == 1 {
+            for (index, spec) in self.specs.into_iter().enumerate() {
+                let seed = spec.seed;
+                record(index, seed, self.engine.run(spec)?);
+            }
+        } else {
+            // Sliding window: keep up to `concurrency` runs in flight,
+            // harvest in submission order (records stay ordered).
+            let mut pending = self.specs.into_iter().enumerate();
+            let mut inflight: VecDeque<(usize, u64, JobHandle)> = VecDeque::new();
+            loop {
+                while inflight.len() < self.concurrency {
+                    let Some((index, spec)) = pending.next() else { break };
+                    let seed = spec.seed;
+                    inflight.push_back((index, seed, self.engine.submit(spec)));
+                }
+                let Some((index, seed, handle)) = inflight.pop_front() else { break };
+                record(index, seed, handle.wait()?);
+            }
+        }
+
+        Ok(CampaignReport { records, results, total_wall: started.elapsed() })
+    }
+}
+
+/// Aggregated outcome of one campaign.
+#[derive(Debug)]
+pub struct CampaignReport {
+    /// One record per run, in spec order.
+    pub records: Vec<RunRecord>,
+    /// Full results when requested via [`Campaign::keep_results`].
+    pub results: Option<Vec<RunResult>>,
+    /// Wall clock of the whole campaign (submission to last harvest).
+    pub total_wall: Duration,
+}
+
+impl CampaignReport {
+    pub fn runs(&self) -> u64 {
+        self.records.len() as u64
+    }
+
+    pub fn successes(&self) -> u64 {
+        self.records.iter().filter(|r| r.success).count() as u64
+    }
+
+    pub fn success_rate(&self) -> f64 {
+        self.survival().probability()
+    }
+
+    /// Survival statistics over the campaign (probability + 95% CI).
+    pub fn survival(&self) -> SurvivalEstimate {
+        SurvivalEstimate { trials: self.runs(), successes: self.successes() }
+    }
+
+    /// Runs in which every rank finished holding the final R.
+    pub fn fully_healed(&self) -> u64 {
+        self.records.iter().filter(|r| r.fully_healed).count() as u64
+    }
+
+    /// Runs whose verification oracle ran and failed.
+    pub fn verification_failures(&self) -> u64 {
+        self.records.iter().filter(|r| r.verified_ok == Some(false)).count() as u64
+    }
+
+    /// Communication counters summed over every run.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut total = MetricsSnapshot::default();
+        for r in &self.records {
+            total.merge(&r.metrics);
+        }
+        total
+    }
+
+    /// Sum of the per-run wall times (≥ `total_wall` under concurrency).
+    pub fn total_run_wall(&self) -> Duration {
+        self.records.iter().map(|r| r.wall).sum()
+    }
+
+    pub fn mean_wall(&self) -> Duration {
+        if self.records.is_empty() {
+            return Duration::ZERO;
+        }
+        self.total_run_wall() / self.records.len() as u32
+    }
+
+    /// Completed runs per second of campaign wall clock.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.total_wall.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.runs() as f64 / secs
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let est = self.survival();
+        let m = self.metrics();
+        format!(
+            "runs={} successes={} rate={:.3}±{:.3} fully_healed={} respawns={} \
+             mean_wall={:.2}ms throughput={:.1}/s",
+            self.runs(),
+            self.successes(),
+            est.probability(),
+            est.ci95(),
+            self.fully_healed(),
+            m.respawns,
+            self.mean_wall().as_secs_f64() * 1e3,
+            self.throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::KillSchedule;
+
+    fn small(algo: Algo) -> RunSpec {
+        RunSpec::new(algo, 4, 16, 4)
+    }
+
+    #[test]
+    fn sequential_campaign_aggregates() {
+        let engine = Engine::host();
+        let specs: Vec<RunSpec> = (0..5).map(|s| small(Algo::Redundant).with_seed(s)).collect();
+        let report = engine.campaign(specs).run().unwrap();
+        assert_eq!(report.runs(), 5);
+        assert_eq!(report.successes(), 5);
+        assert_eq!(report.fully_healed(), 5);
+        assert_eq!(report.verification_failures(), 0);
+        assert!((report.success_rate() - 1.0).abs() < 1e-12);
+        assert!(report.metrics().messages > 0);
+        assert!(report.results.is_none(), "results dropped by default");
+        assert!(report.summary().contains("runs=5"), "{}", report.summary());
+    }
+
+    #[test]
+    fn concurrent_campaign_matches_sequential() {
+        let engine = Engine::host();
+        let specs = |_| -> Vec<RunSpec> {
+            (0..8u64)
+                .map(|s| {
+                    small(Algo::Replace)
+                        .with_seed(s)
+                        .with_schedule(KillSchedule::random_at_round(4, 1, 1, None, s))
+                        .with_verify(false)
+                })
+                .collect()
+        };
+        let seq = engine.campaign(specs(())).run().unwrap();
+        let conc = engine.campaign(specs(())).concurrency(4).run().unwrap();
+        let key = |r: &RunRecord| (r.index, r.success, r.holders, r.dead, r.metrics.respawns);
+        let a: Vec<_> = seq.records.iter().map(key).collect();
+        let b: Vec<_> = conc.records.iter().map(key).collect();
+        assert_eq!(a, b, "concurrency must not change per-run outcomes");
+    }
+
+    #[test]
+    fn keep_results_retains_full_runs() {
+        let engine = Engine::host();
+        let report =
+            engine.campaign(vec![small(Algo::Redundant)]).keep_results(true).run().unwrap();
+        let results = report.results.as_ref().unwrap();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].final_r.is_some());
+    }
+
+    #[test]
+    fn invalid_spec_fails_eagerly() {
+        let engine = Engine::host();
+        let specs = vec![small(Algo::Redundant), RunSpec::new(Algo::Redundant, 6, 16, 4)];
+        assert!(engine.campaign(specs).run().is_err());
+        assert_eq!(engine.stats().jobs_submitted, 0, "validation precedes submission");
+    }
+}

@@ -1,0 +1,112 @@
+//! One-run orchestration over the shared engine substrate — the run
+//! lifecycle that used to live in `tsqr::runner::run`, with the
+//! spawn-per-run thread lifecycle replaced by pooled workers.
+//!
+//! The flow is unchanged from the paper's harness: build the world,
+//! launch one process body per rank, block until the world quiesces
+//! (including dynamically respawned Self-Healing replacements), then
+//! gather results, check holder consistency and verify against the
+//! host oracle.  Only the *substrate* differs: rank bodies run on
+//! [`WorkerPool`] workers tracked by a per-run [`TaskGroup`], so a
+//! long-lived [`super::Engine`] amortizes thread setup across runs.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::tsqr::algorithms;
+use crate::tsqr::context::{Ctx, ResultMap};
+use crate::tsqr::plan::TreePlan;
+use crate::tsqr::runner::{Algo, RunResult, RunSpec, run_process_wrapper};
+use crate::tsqr::trace::TraceSink;
+use crate::tsqr::verify;
+use crate::ulfm::{Rank, World};
+
+use super::pool::{TaskGroup, WorkerPool};
+
+/// Execute one validated spec end to end on pooled workers.
+pub(crate) fn execute(spec: &RunSpec, pool: &WorkerPool) -> Result<RunResult> {
+    spec.validate()?;
+    let plan = TreePlan::new(spec.procs);
+    let world = World::new(spec.procs);
+    let (sink, collector) = if spec.collect_trace {
+        let (s, c) = TraceSink::channel();
+        (s, Some(c))
+    } else {
+        (TraceSink::disabled(), None)
+    };
+    let results: ResultMap = Arc::new(Mutex::new(HashMap::new()));
+    let tasks = TaskGroup::new(pool.clone());
+
+    let a = spec.input_matrix();
+    let started = Instant::now();
+
+    for rank in 0..spec.procs {
+        let ctx = Ctx {
+            rank,
+            plan,
+            world: Arc::clone(&world),
+            exec: spec.executor.clone(),
+            trace: sink.clone(),
+            schedule: Arc::clone(&spec.schedule),
+            results: Arc::clone(&results),
+            tasks: tasks.clone(),
+        };
+        let panel = a.row_block(rank * spec.rows_per_proc, (rank + 1) * spec.rows_per_proc);
+        let algo = spec.algo;
+        tasks.spawn(move || {
+            run_process_wrapper(ctx.clone(), move || match algo {
+                Algo::Baseline => algorithms::baseline(ctx, panel),
+                Algo::Redundant => algorithms::redundant(ctx, panel),
+                Algo::Replace => algorithms::replace(ctx, panel),
+                Algo::SelfHealing => algorithms::self_healing(ctx, panel),
+                Algo::Checkpointed => crate::checkpoint::checkpointed(ctx, panel),
+            });
+        });
+    }
+
+    world.await_quiescent();
+    // Quiescence fixes every rank's status; the latch additionally
+    // guarantees every process body (and every Self-Healing replacement
+    // spawned mid-run) has fully returned — deposits and trace
+    // emissions done, per-task sink clones dropped.
+    tasks.wait_idle();
+    let wall = started.elapsed();
+    drop(sink); // release the trace channel so drain sees everything
+
+    let statuses = world.statuses();
+    let result_map = std::mem::take(&mut *results.lock().unwrap());
+    let mut r_holders: Vec<Rank> = result_map.keys().copied().collect();
+    r_holders.sort_unstable();
+
+    // Consistency across holders: all copies of the final R must agree.
+    let mut holder_disagreement = 0.0f64;
+    let canonical: Option<Matrix> = r_holders.first().map(|r0| result_map[r0].canonicalize_r());
+    if let Some(c0) = &canonical {
+        for r in &r_holders[1..] {
+            holder_disagreement =
+                holder_disagreement.max(result_map[r].canonicalize_r().max_abs_diff(c0));
+        }
+    }
+
+    let verification = if spec.verify && canonical.is_some() {
+        Some(verify::verify_r(&a, canonical.as_ref().unwrap()))
+    } else {
+        None
+    };
+
+    Ok(RunResult {
+        spec_algo: spec.algo,
+        procs: spec.procs,
+        statuses,
+        r_holders,
+        final_r: canonical,
+        holder_disagreement,
+        metrics: world.metrics().snapshot(),
+        trace: collector.map(|c| c.drain()).unwrap_or_default(),
+        wall,
+        verification,
+    })
+}

@@ -1,0 +1,310 @@
+//! Session-oriented execution: a long-lived [`Engine`] owning the
+//! kernel executor and a reusable worker pool, so the per-run setup
+//! cost (backend/artifact loading, thread spawning) is paid once per
+//! *session* instead of once per factorization.
+//!
+//! * [`EngineBuilder`] — backend selection (host linalg vs PJRT),
+//!   artifact directory, PJRT sharding, worker prewarming.
+//! * [`Engine::run`] — one factorization, synchronously.
+//! * [`Engine::submit`] — async-style submission returning a
+//!   [`JobHandle`]; safe to call concurrently from many threads.
+//! * [`Engine::campaign`] — batched sweeps over many [`RunSpec`]s with
+//!   aggregated metrics and survival statistics ([`Campaign`]).
+//!
+//! The one-shot [`crate::tsqr::run`] remains as a thin shim over a
+//! single-use engine, so its semantics (per-algorithm success criteria,
+//! holder-disagreement check, verification oracle) are unchanged.
+//!
+//! ```no_run
+//! use ft_tsqr::engine::Engine;
+//! use ft_tsqr::tsqr::{Algo, RunSpec};
+//!
+//! let engine = Engine::builder().build().unwrap();
+//! let handle = engine.submit(RunSpec::new(Algo::Redundant, 8, 128, 8));
+//! assert!(handle.wait().unwrap().success());
+//! ```
+
+mod campaign;
+mod exec;
+mod pool;
+
+pub use campaign::{Campaign, CampaignReport, RunRecord};
+pub use pool::{TaskGroup, WorkerPool};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, mpsc};
+
+use crate::error::{Error, Result};
+use crate::runtime::{Backend, Executor, DEFAULT_ARTIFACT_DIR};
+use crate::tsqr::{RunResult, RunSpec};
+
+/// Configures and builds an [`Engine`].
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    backend: Backend,
+    artifact_dir: String,
+    pjrt_shards: usize,
+    prewarm: usize,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Auto,
+            artifact_dir: DEFAULT_ARTIFACT_DIR.into(),
+            pjrt_shards: 2,
+            prewarm: 0,
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compute backend: `Host` (pure rust), `Pjrt` (strict, needs
+    /// artifacts) or `Auto` (PJRT when artifacts load, host otherwise).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Shortcut for [`Backend::Host`].
+    pub fn host_only(mut self) -> Self {
+        self.backend = Backend::Host;
+        self
+    }
+
+    /// Where to look for AOT artifacts (default `artifacts/`).
+    pub fn artifact_dir(mut self, dir: impl Into<String>) -> Self {
+        self.artifact_dir = dir.into();
+        self
+    }
+
+    /// PJRT service threads (see `runtime::service`; default 2).
+    pub fn pjrt_shards(mut self, shards: usize) -> Self {
+        self.pjrt_shards = shards.max(1);
+        self
+    }
+
+    /// Pre-spawn this many pool workers so the first run pays no
+    /// thread-creation latency (default 0: grow on demand).
+    pub fn prewarm(mut self, workers: usize) -> Self {
+        self.prewarm = workers;
+        self
+    }
+
+    /// Build the engine: load the backend once, start the pool.
+    pub fn build(self) -> Result<Engine> {
+        let executor = match self.backend {
+            Backend::Host => Executor::host(),
+            // Like `Executor::auto`, but honoring the configured shard
+            // count: PJRT when the artifacts load, host otherwise.
+            Backend::Auto => {
+                Executor::with_artifacts(&self.artifact_dir, Backend::Auto, self.pjrt_shards)
+                    .unwrap_or_else(|_| Executor::host())
+            }
+            Backend::Pjrt => {
+                Executor::with_artifacts(&self.artifact_dir, Backend::Pjrt, self.pjrt_shards)?
+            }
+        };
+        Ok(Engine::from_parts(executor, self.prewarm))
+    }
+}
+
+/// Job counters shared with in-flight submissions.
+#[derive(Debug, Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+}
+
+/// Point-in-time engine statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineStats {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub workers: usize,
+    pub peak_workers: usize,
+    pub tasks_executed: u64,
+}
+
+/// A long-lived execution session: one executor + one worker pool,
+/// reused across every run submitted to it.  `Send + Sync`: share it
+/// behind a reference or an `Arc` and submit from many threads.
+///
+/// Dropping the engine shuts the pool down (joining all workers).
+pub struct Engine {
+    executor: Executor,
+    pool: WorkerPool,
+    counters: Arc<Counters>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Host-backend engine (no artifacts touched) — the cheapest way to
+    /// get a session for tests and analytic cross-checks.
+    pub fn host() -> Self {
+        Self::with_executor(Executor::host())
+    }
+
+    /// Wrap an existing executor in a fresh single-session engine (the
+    /// substrate of the one-shot `tsqr::run` shim).
+    pub fn with_executor(executor: Executor) -> Self {
+        Self::from_parts(executor, 0)
+    }
+
+    fn from_parts(executor: Executor, prewarm: usize) -> Self {
+        let pool =
+            if prewarm > 0 { WorkerPool::with_prewarmed(prewarm) } else { WorkerPool::new() };
+        Self { executor, pool, counters: Arc::new(Counters::default()) }
+    }
+
+    /// The session executor every submitted spec runs on.
+    pub fn executor(&self) -> &Executor {
+        &self.executor
+    }
+
+    /// Worker threads currently alive in the pool.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            jobs_submitted: self.counters.submitted.load(Ordering::Relaxed),
+            jobs_completed: self.counters.completed.load(Ordering::Relaxed),
+            jobs_failed: self.counters.failed.load(Ordering::Relaxed),
+            workers: self.pool.workers(),
+            peak_workers: self.pool.peak_workers(),
+            tasks_executed: self.pool.tasks_executed(),
+        }
+    }
+
+    /// The engine owns the backend: whatever executor the spec carried
+    /// is replaced by the session executor.
+    fn adopt(&self, mut spec: RunSpec) -> RunSpec {
+        spec.executor = self.executor.clone();
+        spec
+    }
+
+    /// Run one factorization synchronously on the calling thread (rank
+    /// bodies still execute on pooled workers).
+    pub fn run(&self, spec: RunSpec) -> Result<RunResult> {
+        let spec = self.adopt(spec);
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let res = exec::execute(&spec, &self.pool);
+        match &res {
+            Ok(_) => self.counters.completed.fetch_add(1, Ordering::Relaxed),
+            Err(_) => self.counters.failed.fetch_add(1, Ordering::Relaxed),
+        };
+        res
+    }
+
+    /// Submit a run for asynchronous execution.  The whole run —
+    /// coordination included — happens on pooled workers; the returned
+    /// handle delivers the result (or the validation error).
+    pub fn submit(&self, spec: RunSpec) -> JobHandle {
+        let spec = self.adopt(spec);
+        let id = self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let pool = self.pool.clone();
+        let counters = Arc::clone(&self.counters);
+        self.pool.execute(move || {
+            let res = exec::execute(&spec, &pool);
+            match &res {
+                Ok(_) => counters.completed.fetch_add(1, Ordering::Relaxed),
+                Err(_) => counters.failed.fetch_add(1, Ordering::Relaxed),
+            };
+            let _ = tx.send(res);
+        });
+        JobHandle { id, rx }
+    }
+
+    /// Start a batched campaign over many specs (see [`Campaign`]).
+    pub fn campaign(&self, specs: impl IntoIterator<Item = RunSpec>) -> Campaign<'_> {
+        Campaign::new(self, specs.into_iter().collect())
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.pool.shutdown();
+    }
+}
+
+/// Handle to one submitted run.
+pub struct JobHandle {
+    id: u64,
+    rx: mpsc::Receiver<Result<RunResult>>,
+}
+
+impl JobHandle {
+    /// Monotonic per-engine submission id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the run finishes and take its result.
+    pub fn wait(self) -> Result<RunResult> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(Error::Other("engine job lost (worker panicked?)".into())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tsqr::Algo;
+
+    fn small(algo: Algo) -> RunSpec {
+        RunSpec::new(algo, 4, 16, 4)
+    }
+
+    #[test]
+    fn builder_defaults_and_host() {
+        let engine = Engine::builder().host_only().prewarm(2).build().unwrap();
+        assert_eq!(engine.workers(), 2);
+        let res = engine.run(small(Algo::Redundant)).unwrap();
+        assert!(res.success());
+        assert!(res.verification.unwrap().ok);
+        let stats = engine.stats();
+        assert_eq!(stats.jobs_submitted, 1);
+        assert_eq!(stats.jobs_completed, 1);
+        assert_eq!(stats.jobs_failed, 0);
+    }
+
+    #[test]
+    fn submit_delivers_result() {
+        let engine = Engine::host();
+        let res = engine.submit(small(Algo::Replace)).wait().unwrap();
+        assert!(res.success());
+        assert_eq!(res.r_holders, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn submit_surfaces_validation_errors() {
+        let engine = Engine::host();
+        let err = engine.submit(RunSpec::new(Algo::Redundant, 6, 16, 4)).wait();
+        assert!(err.is_err(), "non-pow2 redundant world must fail validation");
+        assert_eq!(engine.stats().jobs_failed, 1);
+    }
+
+    #[test]
+    fn engine_executor_overrides_spec_executor() {
+        // The session owns the backend: a spec carrying a different
+        // executor still runs on the engine's.
+        let engine = Engine::host();
+        let spec = small(Algo::Baseline);
+        let res = engine.run(spec).unwrap();
+        assert!(res.success());
+        assert_eq!(engine.executor().backend(), crate::runtime::Backend::Host);
+    }
+}

@@ -1,0 +1,374 @@
+//! The engine's reusable worker substrate: an elastic pool of OS
+//! threads that replaces the spawn-one-thread-per-rank-per-run
+//! lifecycle of the original runner.
+//!
+//! ## Why elastic
+//!
+//! Simulated ranks are *blocking* tasks: they park on the world's
+//! condvars waiting for a peer's post, so a fixed-size pool smaller
+//! than the world would deadlock a run (every worker blocked on a rank
+//! that is still queued).  The pool therefore maintains the invariant
+//! that **every queued task has a free worker that will pick it up**:
+//! `execute` spawns a new worker only when the queue outgrows the set
+//! of free (non-busy) workers, and workers are never retired until
+//! shutdown.  Steady state — the whole point of the engine — is zero
+//! spawns: a campaign of thousands of P=8 runs settles at 8 parked
+//! workers that are reused run after run.
+//!
+//! ## TaskGroup
+//!
+//! One run spawns its P rank bodies plus, for Self-Healing, any number
+//! of dynamically respawned replacements — all through the same pool.
+//! [`TaskGroup`] gives the run coordinator a completion latch over
+//! exactly *its* tasks (the pool is shared across concurrent runs), so
+//! results and traces are only collected once every process body of
+//! this run has fully returned.  The latch fires *after* the worker is
+//! accounted free again, which is what makes worker counts stable (and
+//! assertable) across back-to-back runs.
+
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A queued unit of work: the task body plus an optional completion
+/// hook that runs after the worker has been marked free again.
+struct TaskEntry {
+    run: Task,
+    done: Option<Task>,
+}
+
+#[derive(Default)]
+struct PoolState {
+    queue: VecDeque<TaskEntry>,
+    /// Workers currently executing a task body.
+    busy: usize,
+    workers: usize,
+    peak_workers: usize,
+    shutdown: bool,
+}
+
+impl PoolState {
+    /// Workers that are alive and not executing a task — they are in
+    /// the pool loop and guaranteed to drain the queue.
+    fn free(&self) -> usize {
+        self.workers - self.busy
+    }
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    next_worker_id: AtomicU64,
+    tasks_executed: AtomicU64,
+    task_panics: AtomicU64,
+}
+
+/// Elastic worker pool.  Cheap to clone (`Arc` inside); all clones
+/// address the same pool.
+#[derive(Clone)]
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkerPool {
+    pub fn new() -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                state: Mutex::new(PoolState::default()),
+                work_cv: Condvar::new(),
+                handles: Mutex::new(Vec::new()),
+                next_worker_id: AtomicU64::new(0),
+                tasks_executed: AtomicU64::new(0),
+                task_panics: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A pool with `n` workers already parked (skips the first-run
+    /// spawn cost for latency-sensitive sessions).
+    pub fn with_prewarmed(n: usize) -> Self {
+        let pool = Self::new();
+        {
+            let mut st = pool.shared.state.lock().unwrap();
+            for _ in 0..n {
+                pool.spawn_worker(&mut st);
+            }
+        }
+        pool
+    }
+
+    /// Hand a task to the pool.  Never blocks on task completion and
+    /// never deadlocks: if no free worker exists a new one is spawned.
+    pub fn execute(&self, task: impl FnOnce() + Send + 'static) {
+        self.enqueue(TaskEntry { run: Box::new(task), done: None });
+    }
+
+    /// Like [`execute`](Self::execute), with a completion hook that
+    /// runs after the worker is accounted free again ([`TaskGroup`]'s
+    /// latch ordering).
+    pub fn execute_with_completion(
+        &self,
+        task: impl FnOnce() + Send + 'static,
+        done: impl FnOnce() + Send + 'static,
+    ) {
+        self.enqueue(TaskEntry { run: Box::new(task), done: Some(Box::new(done)) });
+    }
+
+    fn enqueue(&self, entry: TaskEntry) {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            // The engine is being torn down but a straggler (e.g. a run
+            // the user abandoned mid-flight) still wants to spawn:
+            // degrade gracefully to a one-shot thread.
+            drop(st);
+            std::thread::spawn(move || run_entry(entry, None));
+            return;
+        }
+        st.queue.push_back(entry);
+        if st.queue.len() > st.free() {
+            self.spawn_worker(&mut st);
+        } else {
+            self.shared.work_cv.notify_one();
+        }
+    }
+
+    fn spawn_worker(&self, st: &mut PoolState) {
+        st.workers += 1;
+        st.peak_workers = st.peak_workers.max(st.workers);
+        let id = self.shared.next_worker_id.fetch_add(1, Ordering::Relaxed);
+        let shared = Arc::clone(&self.shared);
+        let handle = std::thread::Builder::new()
+            .name(format!("engine-worker-{id}"))
+            .spawn(move || worker_loop(shared))
+            .expect("spawn engine worker");
+        self.shared.handles.lock().unwrap().push(handle);
+    }
+
+    /// Worker threads currently alive (busy + free).
+    pub fn workers(&self) -> usize {
+        self.shared.state.lock().unwrap().workers
+    }
+
+    /// Workers currently free to take new work.
+    pub fn free_workers(&self) -> usize {
+        self.shared.state.lock().unwrap().free()
+    }
+
+    /// High-water mark of concurrent workers over the pool's lifetime.
+    pub fn peak_workers(&self) -> usize {
+        self.shared.state.lock().unwrap().peak_workers
+    }
+
+    pub fn tasks_executed(&self) -> u64 {
+        self.shared.tasks_executed.load(Ordering::Relaxed)
+    }
+
+    pub fn task_panics(&self) -> u64 {
+        self.shared.task_panics.load(Ordering::Relaxed)
+    }
+
+    /// Drain remaining tasks, stop and join every worker.  Idempotent;
+    /// called by `Engine::drop`.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.shutdown {
+                return;
+            }
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.shared.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run one entry outside the pool (shutdown fallback path).
+fn run_entry(mut entry: TaskEntry, shared: Option<&Shared>) {
+    let panicked = std::panic::catch_unwind(AssertUnwindSafe(entry.run)).is_err();
+    if let Some(shared) = shared {
+        if panicked {
+            shared.task_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        shared.tasks_executed.fetch_add(1, Ordering::Relaxed);
+    }
+    if let Some(done) = entry.done.take() {
+        done();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if let Some(mut entry) = st.queue.pop_front() {
+            st.busy += 1;
+            drop(st);
+            // Keep the worker alive across a panicking task (a poisoned
+            // worker would silently shrink the pool below the
+            // elasticity invariant).
+            if std::panic::catch_unwind(AssertUnwindSafe(entry.run)).is_err() {
+                shared.task_panics.fetch_add(1, Ordering::Relaxed);
+            }
+            shared.tasks_executed.fetch_add(1, Ordering::Relaxed);
+            st = shared.state.lock().unwrap();
+            st.busy -= 1;
+            if let Some(done) = entry.done.take() {
+                // Completion hooks run with the worker already free, so
+                // whoever the hook wakes observes consistent counts.
+                drop(st);
+                done();
+                st = shared.state.lock().unwrap();
+            }
+            continue;
+        }
+        if st.shutdown {
+            st.workers -= 1;
+            return;
+        }
+        st = shared.work_cv.wait(st).unwrap();
+    }
+}
+
+/// Completion latch over the tasks of ONE run.
+///
+/// Cloned into every [`crate::tsqr::Ctx`], so Self-Healing replacement
+/// processes spawned mid-run (`spawnNew`, Alg. 6) register on the same
+/// latch as the primaries.  `wait_idle` is the coordinator's barrier
+/// between world quiescence and result collection: quiescence only says
+/// every rank's *status* is final, while the latch says every process
+/// body has returned — deposits done, trace sinks dropped.
+#[derive(Clone)]
+pub struct TaskGroup {
+    pool: WorkerPool,
+    live: Arc<(Mutex<u64>, Condvar)>,
+}
+
+impl TaskGroup {
+    pub fn new(pool: WorkerPool) -> Self {
+        Self { pool, live: Arc::new((Mutex::new(0), Condvar::new())) }
+    }
+
+    /// Spawn a task onto the pool, tracked by this group.  The latch
+    /// releases even if the task panics.
+    pub fn spawn(&self, f: impl FnOnce() + Send + 'static) {
+        {
+            let (count, _) = &*self.live;
+            *count.lock().unwrap() += 1;
+        }
+        let live = Arc::clone(&self.live);
+        self.pool.execute_with_completion(f, move || {
+            let (count, cv) = &*live;
+            *count.lock().unwrap() -= 1;
+            cv.notify_all();
+        });
+    }
+
+    /// Block until every task spawned through this group has returned.
+    pub fn wait_idle(&self) {
+        let (count, cv) = &*self.live;
+        let mut n = count.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// Tasks of this group currently in flight.
+    pub fn live_tasks(&self) -> u64 {
+        *self.live.0.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn executes_tasks_and_reuses_workers() {
+        let pool = WorkerPool::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let group = TaskGroup::new(pool.clone());
+        for _ in 0..4 {
+            let h = Arc::clone(&hits);
+            group.spawn(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+            group.wait_idle();
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        // Sequential tasks reuse one worker instead of spawning four:
+        // the latch only fires once the worker is free again.
+        assert_eq!(pool.peak_workers(), 1, "sequential tasks must share a worker");
+        assert_eq!(pool.tasks_executed(), 4);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn interdependent_blocking_tasks_cannot_deadlock() {
+        // Task A waits for task B through a condvar: the elasticity
+        // invariant must give both a worker even from a cold pool.
+        let pool = WorkerPool::new();
+        let group = TaskGroup::new(pool.clone());
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let (pa, pb) = (Arc::clone(&pair), Arc::clone(&pair));
+        group.spawn(move || {
+            let (flag, cv) = &*pa;
+            let mut done = flag.lock().unwrap();
+            while !*done {
+                done = cv.wait(done).unwrap();
+            }
+        });
+        group.spawn(move || {
+            let (flag, cv) = &*pb;
+            *flag.lock().unwrap() = true;
+            cv.notify_all();
+        });
+        group.wait_idle();
+        assert!(pool.workers() >= 2);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn panicking_task_does_not_kill_the_worker_or_the_latch() {
+        let pool = WorkerPool::new();
+        let group = TaskGroup::new(pool.clone());
+        group.spawn(|| panic!("boom"));
+        group.wait_idle();
+        assert_eq!(pool.task_panics(), 1);
+        assert_eq!(pool.workers(), 1, "worker survives the panic");
+        // The surviving worker still executes new work.
+        let ok = Arc::new(AtomicUsize::new(0));
+        let ok2 = Arc::clone(&ok);
+        group.spawn(move || {
+            ok2.fetch_add(1, Ordering::SeqCst);
+        });
+        group.wait_idle();
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.peak_workers(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn prewarm_and_shutdown() {
+        let pool = WorkerPool::with_prewarmed(3);
+        assert_eq!(pool.workers(), 3);
+        assert_eq!(pool.free_workers(), 3);
+        pool.shutdown();
+        assert_eq!(pool.workers(), 0, "shutdown joins every worker");
+        pool.shutdown(); // idempotent
+    }
+}

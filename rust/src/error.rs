@@ -3,47 +3,59 @@
 //! `Error::RankFailed` is load-bearing: it is the rust incarnation of the
 //! ULFM error class (`MPI_ERR_PROC_FAILED`) that the paper's Algorithms
 //! 2/3/6 branch on (`if FAIL == f`).
+//!
+//! (`Display`/`Error` are hand-implemented: the default build is
+//! dependency-free so the crate compiles offline with no registry.)
 
 use crate::ulfm::Rank;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// ULFM-style process-failure error: the peer rank is dead.  Returned
     /// by any communication operation that involves a failed process —
     /// operations not touching a failed process proceed unknowingly (§II).
-    #[error("peer rank {0} has failed")]
     RankFailed(Rank),
 
     /// The communicator was revoked / the world aborted (ABORT semantics).
-    #[error("communicator aborted: {0}")]
     Aborted(String),
 
     /// No live replica holds the needed data — more than 2^s − 1 failures.
-    #[error("no live replica for rank {0}'s data")]
     NoReplica(Rank),
 
     /// The local process was killed by the fault injector.
-    #[error("process {0} killed by fault injector")]
     Killed(Rank),
 
     /// Artifact / manifest problems.
-    #[error("artifacts: {0}")]
     Artifacts(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Configuration / CLI validation.
-    #[error("config: {0}")]
     Config(String),
 
     /// Anything else.
-    #[error("{0}")]
     Other(String),
 }
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::RankFailed(r) => write!(f, "peer rank {r} has failed"),
+            Error::Aborted(s) => write!(f, "communicator aborted: {s}"),
+            Error::NoReplica(r) => write!(f, "no live replica for rank {r}'s data"),
+            Error::Killed(r) => write!(f, "process {r} killed by fault injector"),
+            Error::Artifacts(s) => write!(f, "artifacts: {s}"),
+            Error::Xla(s) => write!(f, "xla runtime: {s}"),
+            Error::Config(s) => write!(f, "config: {s}"),
+            Error::Other(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
 
 impl Error {
     /// True if this is the ULFM "process failed" error class — the
@@ -53,6 +65,7 @@ impl Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

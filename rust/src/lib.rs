@@ -24,22 +24,44 @@
 //!
 //! ## Quick start
 //!
+//! The execution API is session-oriented: build a long-lived
+//! [`engine::Engine`] once (backend selection + reusable worker pool),
+//! then submit as many runs as you like — setup cost is paid per
+//! session, not per factorization.
+//!
 //! ```no_run
+//! use ft_tsqr::engine::Engine;
 //! use ft_tsqr::fault::KillSchedule;
-//! use ft_tsqr::runtime::Executor;
 //! use ft_tsqr::tsqr::{Algo, RunSpec};
+//!
+//! // One engine per session: picks PJRT when `make artifacts` has
+//! // run (and the `pjrt` feature is on), pure-rust host otherwise.
+//! let engine = Engine::builder().artifact_dir("artifacts").build().unwrap();
 //!
 //! // Redundant TSQR on 8 simulated processes, one failure at step 1.
 //! let spec = RunSpec::new(Algo::Redundant, 8, 128, 8)
-//!     .with_executor(Executor::auto("artifacts"))
 //!     .with_schedule(KillSchedule::at(&[(5, 1)]));
-//! let result = ft_tsqr::tsqr::run(&spec).unwrap();
+//! let result = engine.submit(spec).wait().unwrap();
 //! assert!(result.success());
+//!
+//! // Batched sweeps amortize setup across thousands of runs and
+//! // aggregate survival statistics.
+//! let specs = (0..1000).map(|seed| {
+//!     RunSpec::new(Algo::Replace, 8, 128, 8).with_seed(seed).with_verify(false)
+//! });
+//! let report = engine.campaign(specs).concurrency(4).run().unwrap();
+//! println!("{}", report.summary());
+//! assert_eq!(report.successes(), 1000);
 //! ```
+//!
+//! The pre-engine one-shot entry point survives as a shim:
+//! `ft_tsqr::tsqr::run(&spec)` builds a single-use engine around the
+//! spec's executor — identical semantics, none of the amortization.
 
 pub mod analysis;
 pub mod checkpoint;
 pub mod config;
+pub mod engine;
 pub mod error;
 pub mod fault;
 pub mod linalg;

@@ -2,22 +2,27 @@
 //!
 //! Subcommands:
 //! * `run`       one factorization (config file and/or flags)
+//! * `campaign`  many factorizations through one engine session, with
+//!               aggregated survival/throughput statistics
 //! * `trace`     replay a named scenario (paper Figures 1–5) and print
 //!               the execution trace
-//! * `sweep`     robustness Monte-Carlo over failure counts
+//! * `sweep`     robustness Monte-Carlo over failure counts (analytic
+//!               engine; `--full` routes through an engine campaign on
+//!               the full simulator)
 //! * `validate`  check the paper's 2^s − 1 bounds against sampled
 //!               failure patterns
 //! * `info`      artifact manifest / backend diagnostics
 //!
-//! Argument parsing is hand-rolled (`--flag value`), since the vendored
-//! crate set has no clap; see `Args` below.
+//! Every executing subcommand builds ONE `Engine` from the config and
+//! submits through it.  Argument parsing is hand-rolled (`--flag
+//! value`), since the vendored crate set has no clap; see `Args` below.
 
-use ft_tsqr::analysis::{SurvivalSweep, max_tolerated_by_step};
+use ft_tsqr::analysis::{FullSimSweep, SurvivalSweep, max_tolerated_by_step};
 use ft_tsqr::config::{Config, FailureConfig};
 use ft_tsqr::fault::Scenario;
 use ft_tsqr::report::{Table, fmt_f, fmt_prob};
-use ft_tsqr::runtime::{Executor, Manifest};
-use ft_tsqr::tsqr::{Algo, TreePlan, run};
+use ft_tsqr::runtime::Manifest;
+use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan};
 use ft_tsqr::{Error, Result};
 
 const USAGE: &str = "\
@@ -26,8 +31,9 @@ repro — fault-tolerant communication-avoiding TSQR (Coti 2015)
 USAGE:
   repro run      [--config FILE] [--algo A] [--procs P] [--rows-per-proc R]
                  [--cols N] [--seed S] [--backend B] [--kill r@s,r@s] [--trace]
+  repro campaign [run flags] [--runs N] [--concurrency W]
   repro trace    <fig3|fig4|fig5|baseline-abort> [--rows-per-proc R] [--cols N]
-  repro sweep    [--algo A] [--procs P] [--trials T]
+  repro sweep    [--algo A] [--procs P] [--trials T] [--full]
   repro validate [--procs P] [--trials T]
   repro info     [--artifact-dir DIR]
 
@@ -50,7 +56,7 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 // boolean flags take no value; everything else takes one
-                if matches!(name, "trace" | "help") {
+                if matches!(name, "trace" | "help" | "full") {
                     flags.insert(name.to_string(), "true".to_string());
                 } else {
                     i += 1;
@@ -102,7 +108,8 @@ fn parse_kills(s: &str) -> Result<Vec<(usize, u32)>> {
         .collect()
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
+/// Shared by `run` and `campaign`: config file + CLI overrides.
+fn load_config(args: &Args) -> Result<Config> {
     let mut cfg = match args.get("config") {
         Some(path) => Config::load(path)?,
         None => Config::default(),
@@ -129,9 +136,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.failures = FailureConfig::At { kills: parse_kills(k)? };
     }
     cfg.trace |= args.get("trace").is_some();
+    Ok(cfg)
+}
 
-    let spec = cfg.to_spec()?;
-    let result = run(&spec)?;
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let engine = cfg.engine()?;
+    let spec = cfg.to_engine_spec()?;
+    let result = engine.run(spec)?;
 
     println!(
         "algo={} procs={} matrix={}x{} backend={:?}",
@@ -139,7 +151,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.procs,
         cfg.procs * cfg.rows_per_proc,
         cfg.cols,
-        spec.executor.backend(),
+        engine.executor().backend(),
     );
     if cfg.trace {
         println!("{}", result.trace.render(cfg.procs, TreePlan::new(cfg.procs).rounds()));
@@ -172,6 +184,56 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let runs = args.parse_flag::<u64>("runs")?.unwrap_or(100);
+    let concurrency = args.parse_flag::<usize>("concurrency")?.unwrap_or(1);
+    if runs == 0 {
+        return Err(Error::Config("--runs must be >= 1".into()));
+    }
+
+    if cfg.trace {
+        eprintln!("note: --trace is ignored by `campaign` (per-run traces are not collected in bulk)");
+    }
+    let engine = cfg.engine()?;
+    let specs = (0..runs)
+        .map(|i| {
+            let mut c = cfg.clone();
+            c.seed = cfg.seed.wrapping_add(i);
+            c.failures = cfg.failures.reseeded(i);
+            c.trace = false;
+            c.to_engine_spec()
+        })
+        .collect::<Result<Vec<RunSpec>>>()?;
+
+    println!(
+        "campaign: algo={} procs={} matrix={}x{} backend={:?} runs={runs} concurrency={concurrency}",
+        cfg.algo.name(),
+        cfg.procs,
+        cfg.procs * cfg.rows_per_proc,
+        cfg.cols,
+        engine.executor().backend(),
+    );
+    let report = engine.campaign(specs).concurrency(concurrency).run()?;
+    println!("{}", report.summary());
+    let m = report.metrics();
+    println!(
+        "totals: messages={} bytes={} posts={} failed_fetches={} respawns={}",
+        m.messages, m.bytes, m.posts, m.failed_fetches, m.respawns
+    );
+    println!(
+        "engine: workers={} peak={} tasks_executed={} total_wall={:?}",
+        engine.stats().workers,
+        engine.stats().peak_workers,
+        engine.stats().tasks_executed,
+        report.total_wall,
+    );
+    if report.successes() < report.runs() {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
 fn cmd_trace(args: &Args) -> Result<()> {
     let name = args
         .positional
@@ -186,8 +248,8 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let rows = args.parse_flag::<usize>("rows-per-proc")?.unwrap_or(64);
     let cols = args.parse_flag::<usize>("cols")?.unwrap_or(4);
     println!("# {} — {}", sc.name, sc.description);
-    let spec = sc.spec(rows, cols).with_executor(Executor::auto("artifacts"));
-    let result = run(&spec)?;
+    let engine = ft_tsqr::engine::Engine::builder().build()?;
+    let result = engine.run(sc.spec(rows, cols))?;
     println!("{}", result.trace.render(sc.procs, TreePlan::new(sc.procs).rounds()));
     println!("success={} holders={:?}", result.success(), result.r_holders);
     Ok(())
@@ -197,10 +259,39 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let algo = args.parse_flag::<Algo>("algo")?.unwrap_or(Algo::Replace);
     let procs = args.parse_flag::<usize>("procs")?.unwrap_or(16);
     let trials = args.parse_flag::<u64>("trials")?.unwrap_or(2000);
+    let full = args.get("full").is_some();
     if !procs.is_power_of_two() {
         return Err(Error::Config("sweep needs a power-of-two world".into()));
     }
     let rounds = TreePlan::new(procs).rounds();
+
+    if full {
+        // Full simulator, batched through one engine campaign: the same
+        // cells as the analytic path, measured on the real stack.
+        let engine = ft_tsqr::engine::Engine::host();
+        let sweep = FullSimSweep::new(&engine, algo, procs)
+            .with_samples(trials.min(200))
+            .with_concurrency(4);
+        let mut table = Table::new(
+            format!(
+                "P(success) — {} on {procs} procs (full simulator, {} runs/cell)",
+                algo.name(),
+                sweep.samples
+            ),
+            &["round", "bound 2^s-1", "f=1", "f=2", "f=4", "f=8"],
+        );
+        for s in 1..rounds {
+            let mut row = vec![s.to_string(), max_tolerated_by_step(s).to_string()];
+            for f in [1usize, 2, 4, 8] {
+                let est = sweep.at_round(s, f)?;
+                row.push(fmt_prob(est.probability(), est.ci95()));
+            }
+            table.row(row);
+        }
+        print!("{}", table.render());
+        return Ok(());
+    }
+
     let sweep = SurvivalSweep::new(algo, procs).with_trials(trials);
     let mut table = Table::new(
         format!("P(success) — {} on {procs} procs ({trials} trials/cell)", algo.name()),
@@ -298,6 +389,7 @@ fn main() {
     }
     let result = match args.positional[0].as_str() {
         "run" => cmd_run(&args),
+        "campaign" => cmd_campaign(&args),
         "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
         "validate" => cmd_validate(&args),

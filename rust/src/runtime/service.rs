@@ -17,22 +17,26 @@
 //! leaf/combine calls at once, and hashing by name would serialize
 //! them on one shard (measured 6x slower at P=64; EXPERIMENTS.md
 //! §Perf).  Each shard compiles lazily and caches per-thread.
+//!
+//! The whole XLA-facing half is gated behind the `pjrt` cargo feature:
+//! without it this module exposes an uninhabited stub with the same
+//! API whose `start` always fails, so the default build needs no
+//! native XLA toolchain and `Executor::auto` falls back to the host
+//! path.
 
+use std::sync::atomic::AtomicU64;
+
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+#[cfg(feature = "pjrt")]
+use std::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(feature = "pjrt")]
 use std::sync::{Arc, mpsc};
 
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 
 use super::manifest::Manifest;
-
-/// One kernel invocation: entry-point name + input matrices.
-struct Request {
-    entry: String,
-    inputs: Vec<Matrix>,
-    reply: mpsc::Sender<Result<Vec<Matrix>>>,
-}
 
 /// Cheap shared counters exported to the perf harness.
 #[derive(Default, Debug)]
@@ -42,7 +46,16 @@ pub struct ServiceStats {
     pub cache_hits: AtomicU64,
 }
 
+/// One kernel invocation: entry-point name + input matrices.
+#[cfg(feature = "pjrt")]
+struct Request {
+    entry: String,
+    inputs: Vec<Matrix>,
+    reply: mpsc::Sender<Result<Vec<Matrix>>>,
+}
+
 /// Handle to the PJRT service — `Clone + Send + Sync`.
+#[cfg(feature = "pjrt")]
 #[derive(Clone)]
 pub struct PjrtService {
     senders: Vec<mpsc::Sender<Request>>,
@@ -51,6 +64,7 @@ pub struct PjrtService {
     next_shard: Arc<AtomicUsize>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtService {
     /// Start `shards` service threads over the artifact directory.
     pub fn start(manifest: Manifest, shards: usize) -> Result<Self> {
@@ -112,6 +126,7 @@ impl PjrtService {
 }
 
 /// Body of one service thread: owns a PJRT client + executable cache.
+#[cfg(feature = "pjrt")]
 fn service_loop(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>, stats: Arc<ServiceStats>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
@@ -131,6 +146,7 @@ fn service_loop(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>, stats: Arc
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn run_one(
     client: &xla::PjRtClient,
     cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
@@ -200,12 +216,47 @@ fn run_one(
         .collect()
 }
 
+/// Stub used when the crate is built without the `pjrt` feature: an
+/// uninhabited type, so no instance ever exists and the non-`start`
+/// methods are statically unreachable (`match *self {}`).  `start`
+/// fails with a pointer at the feature flag; `Executor::auto` catches
+/// that and falls back to the pure-rust host path.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Clone)]
+pub enum PjrtService {}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtService {
+    /// Always fails: the PJRT backend is compiled out.
+    pub fn start(_manifest: Manifest, _shards: usize) -> Result<Self> {
+        Err(Error::Artifacts(
+            "built without the `pjrt` feature — vendor the `xla` crate, add it \
+             under [dependencies] in rust/Cargo.toml (see the comment there), \
+             and rebuild with `--features pjrt`; or use the host/auto backend"
+                .into(),
+        ))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match *self {}
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        match *self {}
+    }
+
+    pub fn execute(&self, _entry: &str, _inputs: Vec<Matrix>) -> Result<Vec<Matrix>> {
+        match *self {}
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // PJRT-backed tests live in rust/tests/integration_runtime.rs (they
     // need built artifacts). Here: only manifest-validation failures.
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn unknown_entry_rejected_without_touching_pjrt() {
         let tmp = crate::util::TestDir::new();
@@ -215,6 +266,7 @@ mod tests {
         assert!(matches!(err, Error::Artifacts(_)));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn input_shape_mismatch_rejected() {
         let tmp = crate::util::TestDir::new();
@@ -227,5 +279,14 @@ mod tests {
         let svc = PjrtService::start(Manifest::load(tmp.path()).unwrap(), 1).unwrap();
         let err = svc.execute("leaf_qr_8x4", vec![Matrix::zeros(4, 4)]).unwrap_err();
         assert!(err.to_string().contains("expected [8, 4]"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_start_points_at_the_feature_flag() {
+        let tmp = crate::util::TestDir::new();
+        tmp.write("manifest.json", r#"{"dtype":"f32","entries":[]}"#);
+        let err = PjrtService::start(Manifest::load(tmp.path()).unwrap(), 1).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

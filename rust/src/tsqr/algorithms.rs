@@ -225,15 +225,16 @@ pub fn sh_rounds(ctx: Ctx, mut r: Matrix, start_round: u32) -> ProcOutcome {
                 if matches!(outcome, crate::ulfm::PeerFetch::Unreachable) {
                     ctx.trace.emit(Event::PeerFailed { rank, peer: buddy, round });
                     if ctx.world.respawn_at(buddy, round) {
-                        // spawnNew(b): launch the replacement — it
-                        // recovers its state from a replica (Alg. 5)
-                        // and rejoins from this round.
+                        // spawnNew(b): launch the replacement on the
+                        // run's worker pool — it recovers its state
+                        // from a replica (Alg. 5) and rejoins from
+                        // this round.
                         ctx.trace.emit(Event::Respawn { rank, dead: buddy, round });
                         let rctx = ctx.for_rank(buddy);
-                        std::thread::spawn(move || {
+                        ctx.tasks.spawn(move || {
                             super::runner::run_process_wrapper(rctx.clone(), || {
                                 sh_recover(rctx.clone(), round)
-                            })
+                            });
                         });
                     }
                 }

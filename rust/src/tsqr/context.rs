@@ -3,6 +3,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::engine::TaskGroup;
 use crate::error::{Error, Result};
 use crate::fault::KillSchedule;
 use crate::linalg::Matrix;
@@ -31,6 +32,11 @@ pub struct Ctx {
     pub trace: TraceSink,
     pub schedule: Arc<KillSchedule>,
     pub results: ResultMap,
+    /// This run's completion latch over the engine worker pool: every
+    /// process body — primaries and Self-Healing replacements alike —
+    /// is spawned through it, so the coordinator can wait for all of
+    /// them before collecting results.
+    pub tasks: TaskGroup,
 }
 
 impl Ctx {

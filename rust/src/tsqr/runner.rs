@@ -1,22 +1,27 @@
-//! Run lifecycle: spawn one thread per rank, wait for quiescence,
-//! gather results, verify, and report.
+//! Run specification and result types, plus the one-shot `run` entry
+//! point.
+//!
+//! Since the engine redesign the run *lifecycle* (worker scheduling,
+//! quiescence, result gathering) lives in `crate::engine::exec`; this
+//! module keeps the public vocabulary — [`Algo`], [`RunSpec`],
+//! [`RunResult`] — and [`run`], now a thin shim over a single-use
+//! [`crate::engine::Engine`].  Long-lived callers should hold an
+//! `Engine` and reuse it: same semantics, amortized setup.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::fault::KillSchedule;
 use crate::linalg::Matrix;
 use crate::runtime::Executor;
 use crate::ulfm::world::MetricsSnapshot;
-use crate::ulfm::{ProcStatus, Rank, World};
+use crate::ulfm::{ProcStatus, Rank};
 
-use super::algorithms::{self, ProcOutcome};
+use super::algorithms::ProcOutcome;
 use super::context::Ctx;
-use super::plan::TreePlan;
-use super::trace::{Event, Trace, TraceSink};
-use super::verify::{self, Verification};
+use super::trace::{Event, Trace};
+use super::verify::Verification;
 
 /// Which of the paper's algorithms to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -95,6 +100,9 @@ pub struct RunSpec {
     pub cols: usize,
     pub seed: u64,
     pub schedule: Arc<KillSchedule>,
+    /// Kernel executor.  Note: specs submitted to an
+    /// [`crate::engine::Engine`] run on the *engine's* executor — this
+    /// field only matters for the one-shot [`run`] path.
     pub executor: Executor,
     pub collect_trace: bool,
     /// Verify the final R against the host oracle (skippable for large
@@ -234,88 +242,16 @@ pub fn run_process_wrapper(ctx: Ctx, body: impl FnOnce() -> ProcOutcome) -> Proc
     outcome
 }
 
-/// Run one factorization end to end: spawns one OS thread per rank
-/// (plus dynamically respawned Self-Healing replacements), blocks
-/// until the world quiesces.
+/// Run one factorization end to end (one-shot convenience).
+///
+/// This is a thin shim over a single-use [`crate::engine::Engine`]
+/// built around the spec's executor: identical semantics to the
+/// original spawn-per-run lifecycle (per-algorithm success criteria,
+/// holder-disagreement check, verification oracle), with the worker
+/// pool torn down on return.  Callers issuing many runs should build
+/// one `Engine` (or a `Campaign`) and reuse it.
 pub fn run(spec: &RunSpec) -> Result<RunResult> {
-    spec.validate()?;
-    let plan = TreePlan::new(spec.procs);
-    let world = World::new(spec.procs);
-    let (sink, collector) = if spec.collect_trace {
-        let (s, c) = TraceSink::channel();
-        (s, Some(c))
-    } else {
-        (TraceSink::disabled(), None)
-    };
-    let results: super::context::ResultMap = Arc::new(Mutex::new(HashMap::new()));
-
-    let a = spec.input_matrix();
-    let started = Instant::now();
-
-    let mut handles = Vec::with_capacity(spec.procs);
-    for rank in 0..spec.procs {
-        let ctx = Ctx {
-            rank,
-            plan,
-            world: Arc::clone(&world),
-            exec: spec.executor.clone(),
-            trace: sink.clone(),
-            schedule: Arc::clone(&spec.schedule),
-            results: Arc::clone(&results),
-        };
-        let panel = a.row_block(rank * spec.rows_per_proc, (rank + 1) * spec.rows_per_proc);
-        let algo = spec.algo;
-        handles.push(std::thread::spawn(move || {
-            run_process_wrapper(ctx.clone(), move || match algo {
-                Algo::Baseline => algorithms::baseline(ctx, panel),
-                Algo::Redundant => algorithms::redundant(ctx, panel),
-                Algo::Replace => algorithms::replace(ctx, panel),
-                Algo::SelfHealing => algorithms::self_healing(ctx, panel),
-                Algo::Checkpointed => crate::checkpoint::checkpointed(ctx, panel),
-            })
-        }));
-    }
-
-    world.await_quiescent();
-    for h in handles {
-        let _ = h.join();
-    }
-    let wall = started.elapsed();
-    drop(sink); // release the trace channel so drain sees everything
-
-    let statuses = world.statuses();
-    let result_map = std::mem::take(&mut *results.lock().unwrap());
-    let mut r_holders: Vec<Rank> = result_map.keys().copied().collect();
-    r_holders.sort_unstable();
-
-    // Consistency across holders: all copies of the final R must agree.
-    let mut holder_disagreement = 0.0f64;
-    let canonical: Option<Matrix> = r_holders.first().map(|r0| result_map[r0].canonicalize_r());
-    if let Some(c0) = &canonical {
-        for r in &r_holders[1..] {
-            holder_disagreement =
-                holder_disagreement.max(result_map[r].canonicalize_r().max_abs_diff(c0));
-        }
-    }
-
-    let verification = if spec.verify && canonical.is_some() {
-        Some(verify::verify_r(&a, canonical.as_ref().unwrap()))
-    } else {
-        None
-    };
-
-    Ok(RunResult {
-        spec_algo: spec.algo,
-        procs: spec.procs,
-        statuses,
-        r_holders,
-        final_r: canonical,
-        holder_disagreement,
-        metrics: world.metrics().snapshot(),
-        trace: collector.map(|c| c.drain()).unwrap_or_default(),
-        wall,
-        verification,
-    })
+    crate::engine::Engine::with_executor(spec.executor.clone()).run(spec.clone())
 }
 
 #[cfg(test)]

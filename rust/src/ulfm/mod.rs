@@ -19,7 +19,7 @@ pub mod comm;
 pub mod world;
 
 pub use comm::{Communicator, ErrorSemantics};
-pub use world::{ExitKind, PeerFetch, ProcStatus, World};
+pub use world::{ExitKind, MetricsSnapshot, PeerFetch, ProcStatus, World};
 
 /// An MPI-style process rank.
 pub type Rank = usize;

@@ -111,6 +111,18 @@ pub struct MetricsSnapshot {
     pub respawns: u64,
 }
 
+impl MetricsSnapshot {
+    /// Accumulate another run's counters — campaign-level aggregation
+    /// (`engine::CampaignReport::metrics`).
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.messages += other.messages;
+        self.bytes += other.bytes;
+        self.posts += other.posts;
+        self.failed_fetches += other.failed_fetches;
+        self.respawns += other.respawns;
+    }
+}
+
 /// Outcome of [`World::fetch_peer`].
 #[derive(Debug, Clone)]
 pub enum PeerFetch {

@@ -133,6 +133,54 @@ fn config_file_run() {
 }
 
 #[test]
+fn campaign_subcommand_aggregates_runs() {
+    let out = run_ok(&[
+        "campaign",
+        "--algo",
+        "replace",
+        "--procs",
+        "4",
+        "--rows-per-proc",
+        "8",
+        "--cols",
+        "4",
+        "--backend",
+        "host",
+        "--runs",
+        "12",
+        "--concurrency",
+        "3",
+    ]);
+    assert!(out.contains("runs=12"), "{out}");
+    assert!(out.contains("successes=12"), "{out}");
+    assert!(out.contains("workers="), "engine stats expected: {out}");
+}
+
+#[test]
+fn campaign_subcommand_survives_injected_failures() {
+    // One kill within the bound on every run: all must still succeed.
+    let out = run_ok(&[
+        "campaign",
+        "--algo",
+        "self-healing",
+        "--procs",
+        "4",
+        "--rows-per-proc",
+        "8",
+        "--cols",
+        "4",
+        "--backend",
+        "host",
+        "--kill",
+        "2@1",
+        "--runs",
+        "6",
+    ]);
+    assert!(out.contains("successes=6"), "{out}");
+    assert!(out.contains("respawns=6"), "six runs, one respawn each: {out}");
+}
+
+#[test]
 fn bad_flags_error_cleanly() {
     let out = repro().args(["run", "--algo", "bogus"]).output().unwrap();
     assert!(!out.status.success());

@@ -1,0 +1,210 @@
+//! Session-engine integration: pooled-worker lifecycle, concurrent
+//! submission, campaign aggregation and determinism, and equivalence
+//! with the one-shot `tsqr::run` shim.
+
+use ft_tsqr::engine::Engine;
+use ft_tsqr::fault::{KillSchedule, Scenario};
+use ft_tsqr::tsqr::{Algo, RunSpec, run};
+
+fn small(algo: Algo) -> RunSpec {
+    RunSpec::new(algo, 8, 16, 4)
+}
+
+// ------------------------------------------------------ shim equivalence
+
+#[test]
+fn engine_run_matches_one_shot_shim() {
+    let engine = Engine::host();
+    let a = engine.run(small(Algo::Redundant)).unwrap();
+    let b = run(&small(Algo::Redundant)).unwrap();
+    assert_eq!(a.r_holders, b.r_holders);
+    assert_eq!(a.final_r.unwrap(), b.final_r.unwrap(), "same seed, bit-identical R");
+    assert_eq!(a.metrics.messages, b.metrics.messages);
+    assert!(a.verification.unwrap().ok);
+    assert!(b.verification.unwrap().ok);
+}
+
+#[test]
+fn scenario_semantics_unchanged_through_engine() {
+    // The paper's kill schedules must behave identically whether driven
+    // one-shot or through a session engine.
+    let engine = Engine::host();
+    for sc in Scenario::all() {
+        let via_engine = engine.run(sc.spec(16, 4)).unwrap();
+        let one_shot = run(&sc.spec(16, 4)).unwrap();
+        assert_eq!(via_engine.success(), one_shot.success(), "{}", sc.name);
+        assert_eq!(via_engine.r_holders, one_shot.r_holders, "{}", sc.name);
+        assert_eq!(via_engine.success(), sc.name != "baseline-abort", "{}", sc.name);
+    }
+    // Self-Healing's dynamic respawn rides the pool: full heal intact.
+    let res = engine.run(Scenario::fig5().spec(16, 4)).unwrap();
+    assert!(res.fully_healed());
+    assert_eq!(res.metrics.respawns, 1);
+}
+
+// --------------------------------------------------- concurrent submits
+
+#[test]
+fn concurrent_submit_from_many_threads() {
+    let engine = Engine::host();
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for t in 0..8u64 {
+            let engine = &engine;
+            joins.push(scope.spawn(move || {
+                let spec = small(Algo::Replace)
+                    .with_seed(t)
+                    .with_schedule(KillSchedule::random_at_round(8, 1, 1, None, t));
+                engine.submit(spec).wait().unwrap()
+            }));
+        }
+        for j in joins {
+            let res = j.join().unwrap();
+            assert!(res.success(), "one step-1 failure is within the bound");
+        }
+    });
+    let stats = engine.stats();
+    assert_eq!(stats.jobs_submitted, 8);
+    assert_eq!(stats.jobs_completed, 8);
+    assert_eq!(stats.jobs_failed, 0);
+}
+
+#[test]
+fn concurrent_submits_are_isolated() {
+    // Two different algorithms in flight at once must not cross-talk
+    // (separate worlds, separate result maps).
+    let engine = Engine::host();
+    let h1 = engine.submit(small(Algo::Baseline));
+    let h2 = engine.submit(small(Algo::Redundant));
+    let r1 = h1.wait().unwrap();
+    let r2 = h2.wait().unwrap();
+    assert_eq!(r1.r_holders, vec![0], "baseline: root only");
+    assert_eq!(r2.r_holders, (0..8).collect::<Vec<_>>(), "redundant: everyone");
+}
+
+// ------------------------------------------------- campaign determinism
+
+#[test]
+fn campaign_results_are_seed_deterministic() {
+    // Replace has no dynamic respawns, so even the communication
+    // counters are timing-independent: everything must match between a
+    // sequential and a pipelined campaign over the same seeds.
+    let engine = Engine::host();
+    let specs = |algo: Algo| -> Vec<RunSpec> {
+        (0..20u64)
+            .map(|i| {
+                small(algo)
+                    .with_seed(i)
+                    .with_schedule(KillSchedule::random_at_round(8, 1, 1, None, i))
+                    .with_verify(false)
+            })
+            .collect()
+    };
+    let a = engine.campaign(specs(Algo::Replace)).run().unwrap();
+    let b = engine.campaign(specs(Algo::Replace)).concurrency(4).run().unwrap();
+    let key = |r: &ft_tsqr::engine::RunRecord| {
+        (r.index, r.seed, r.success, r.holders, r.dead, r.metrics.respawns, r.metrics.messages)
+    };
+    let ka: Vec<_> = a.records.iter().map(key).collect();
+    let kb: Vec<_> = b.records.iter().map(key).collect();
+    assert_eq!(ka, kb, "same seeds must give identical records, any concurrency");
+    assert_eq!(a.survival().probability(), 1.0, "f=1 at s=1 is within the bound");
+
+    // Self-Healing: which rank wins a respawn race is timing-dependent
+    // (message counters may differ by a post or two), but the paper's
+    // *semantics* — success, holder set, deaths, respawn count — are
+    // not.  That is exactly the timing-independence property
+    // prop_invariants.rs pins against the analytic model.
+    let a = engine.campaign(specs(Algo::SelfHealing)).run().unwrap();
+    let b = engine.campaign(specs(Algo::SelfHealing)).concurrency(4).run().unwrap();
+    let sem = |r: &ft_tsqr::engine::RunRecord| {
+        (r.index, r.seed, r.success, r.holders, r.dead, r.metrics.respawns)
+    };
+    let sa: Vec<_> = a.records.iter().map(sem).collect();
+    let sb: Vec<_> = b.records.iter().map(sem).collect();
+    assert_eq!(sa, sb, "SH semantics must be concurrency-independent");
+}
+
+#[test]
+fn campaign_mixed_outcomes_are_counted() {
+    // Kill a whole level-1 group (ranks 0,1 at boundary 1): fatal for
+    // the redundant family; alternate with fault-free runs.
+    let engine = Engine::host();
+    let fatal = KillSchedule::at(&[(0, 1), (1, 1)]);
+    let specs = vec![
+        small(Algo::Replace).with_verify(false),
+        small(Algo::Replace).with_schedule(fatal).with_verify(false),
+        small(Algo::Replace).with_verify(false),
+    ];
+    let report = engine.campaign(specs).run().unwrap();
+    assert_eq!(report.runs(), 3);
+    assert_eq!(report.successes(), 2);
+    assert!(!report.records[1].success, "whole-group loss exceeds 2^1-1");
+    assert!((report.success_rate() - 2.0 / 3.0).abs() < 1e-9);
+}
+
+// ----------------------------------------------- worker-pool lifecycle
+
+#[test]
+fn engine_reuse_keeps_worker_pool_stable_across_100_runs() {
+    let engine = Engine::host();
+    // Warm up: the first runs grow the pool to its high-water mark.
+    for seed in 0..5u64 {
+        assert!(engine.run(small(Algo::Redundant).with_seed(seed)).unwrap().success());
+    }
+    let warm = engine.workers();
+    assert!(warm >= 8, "pool must be able to host all 8 ranks (got {warm})");
+
+    for seed in 0..100u64 {
+        let res = engine
+            .run(small(Algo::Redundant).with_seed(100 + seed).with_verify(false))
+            .unwrap();
+        assert!(res.success());
+    }
+    assert_eq!(engine.workers(), warm, "no worker leakage across 100 reused runs");
+    let stats = engine.stats();
+    assert_eq!(stats.jobs_completed, 105);
+    assert_eq!(stats.peak_workers, warm, "steady state reached during warmup");
+    // 105 runs x 8 ranks each — all executed by the same few workers.
+    assert_eq!(stats.tasks_executed, 105 * 8);
+}
+
+#[test]
+fn self_healing_respawns_reuse_the_pool() {
+    // A respawned replacement is one extra pool task, not a raw thread:
+    // worker count stays put across repeated failing runs.
+    let engine = Engine::host();
+    let spec = || {
+        small(Algo::SelfHealing)
+            .with_schedule(KillSchedule::at(&[(5, 1)]))
+            .with_verify(false)
+    };
+    for _ in 0..3 {
+        let res = engine.run(spec()).unwrap();
+        assert!(res.fully_healed());
+        assert_eq!(res.metrics.respawns, 1);
+    }
+    for _ in 0..20 {
+        assert!(engine.run(spec()).unwrap().success());
+    }
+    // The replacement either reuses the dead rank's freed worker or
+    // adds exactly one — in no case does the pool grow run over run.
+    let workers = engine.workers();
+    assert!((8..=9).contains(&workers), "respawn path leaked workers: {workers}");
+    // 23 runs x (8 primaries + 1 replacement) pool tasks, all reused.
+    assert_eq!(engine.stats().tasks_executed, 23 * 9);
+}
+
+// ------------------------------------------------------- verification
+
+#[test]
+fn campaign_keep_results_verifies_each_r() {
+    let engine = Engine::host();
+    let specs: Vec<RunSpec> = (0..4u64).map(|s| small(Algo::Redundant).with_seed(s)).collect();
+    let report = engine.campaign(specs).keep_results(true).run().unwrap();
+    assert_eq!(report.verification_failures(), 0);
+    for res in report.results.as_ref().unwrap() {
+        assert!(res.verification.as_ref().unwrap().ok);
+        assert_eq!(res.holder_disagreement, 0.0, "replicas bit-identical");
+    }
+}
