@@ -1,5 +1,6 @@
 //! BENCH TAB-E1: session engine vs one-shot runs — what the engine
-//! redesign buys.
+//! redesign buys — plus the zero-copy kernel subsystem's allocation
+//! scorecard.
 //!
 //!   cargo bench --bench engine_throughput
 //!
@@ -11,8 +12,15 @@
 //!                     workers reused run after run);
 //!   * engine (w=4)  — same engine, 4 runs pipelined concurrently.
 //!
-//! Also checks the invariant the reuse claim rests on: the worker pool
-//! does not grow across the campaign (no leakage).
+//! Also checks the invariants the reuse claims rest on: the worker
+//! pool does not grow across the campaign, and the executor's
+//! workspace pool settles (every steady-state kernel call reuses a
+//! scratch arena instead of allocating one).
+//!
+//! Emits `target/reports/BENCH_engine.json` so the perf trajectory is
+//! tracked from PR 2 onward: runs/sec per mode, speedups, allocations
+//! avoided (workspace reuses + Arc-shared posts), and a peak-RSS proxy
+//! (`VmHWM` where /proc exists).
 
 use std::time::Instant;
 
@@ -23,6 +31,19 @@ use ft_tsqr::tsqr::{Algo, RunSpec, run};
 
 fn spec(seed: u64) -> RunSpec {
     RunSpec::new(Algo::Redundant, 8, 32, 8).with_seed(seed).with_verify(false)
+}
+
+/// Peak resident set size in KiB (`VmHWM` from /proc/self/status) —
+/// a cheap RSS proxy on Linux; 0 where /proc is unavailable.
+fn peak_rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines().find(|l| l.starts_with("VmHWM:")).and_then(|l| {
+                l.split_whitespace().nth(1).and_then(|v| v.parse().ok())
+            })
+        })
+        .unwrap_or(0)
 }
 
 fn main() {
@@ -41,10 +62,11 @@ fn main() {
         assert!(res.success());
     }
     let oneshot = t0.elapsed();
+    let oneshot_rps = runs as f64 / oneshot.as_secs_f64();
     table.row(vec![
         "one-shot tsqr::run".into(),
         fmt_duration(oneshot),
-        format!("{:.1}", runs as f64 / oneshot.as_secs_f64()),
+        format!("{oneshot_rps:.1}"),
         "1.00x".into(),
     ]);
 
@@ -53,24 +75,28 @@ fn main() {
     let t0 = Instant::now();
     let report = engine.campaign((0..runs).map(spec)).run().expect("campaign");
     let seq = t0.elapsed();
+    let seq_rps = runs as f64 / seq.as_secs_f64();
     assert_eq!(report.successes(), runs);
+    let seq_metrics = report.metrics();
     let workers_after_campaign = engine.workers();
     table.row(vec![
         "engine campaign".into(),
         fmt_duration(seq),
-        format!("{:.1}", runs as f64 / seq.as_secs_f64()),
+        format!("{seq_rps:.1}"),
         format!("{:.2}x", oneshot.as_secs_f64() / seq.as_secs_f64()),
     ]);
 
     // ------------------------------------------------ engine, pipelined
     let t0 = Instant::now();
-    let report = engine.campaign((0..runs).map(|s| spec(runs + s))).concurrency(4).run().expect("campaign");
+    let report =
+        engine.campaign((0..runs).map(|s| spec(runs + s))).concurrency(4).run().expect("campaign");
     let conc = t0.elapsed();
+    let conc_rps = runs as f64 / conc.as_secs_f64();
     assert_eq!(report.successes(), runs);
     table.row(vec![
         "engine campaign (w=4)".into(),
         fmt_duration(conc),
-        format!("{:.1}", runs as f64 / conc.as_secs_f64()),
+        format!("{conc_rps:.1}"),
         format!("{:.2}x", oneshot.as_secs_f64() / conc.as_secs_f64()),
     ]);
 
@@ -90,6 +116,44 @@ fn main() {
         "pool grew past the concurrency-4 envelope: {}",
         stats.peak_workers
     );
+
+    // --------------------------------------- allocation scorecard
+    // Workspace reuses: kernel calls whose O(m·n) f64 scratch came from
+    // the pool instead of the allocator.  Arc-shared posts: exchange
+    // messages that are refcount bumps instead of matrix deep copies
+    // (pre-refactor every `World::post` cloned its payload).
+    let ws = engine.executor().workspace_stats();
+    let posts_shared = seq_metrics.posts;
+    println!(
+        "zero-copy scorecard (sequential campaign): workspaces created={}, reused={}, \
+         posts shared without cloning={}",
+        ws.created, ws.reused, posts_shared
+    );
+    assert!(
+        ws.created as usize <= 8 + 4 * 9,
+        "workspace pool must settle at the concurrency envelope, created {}",
+        ws.created
+    );
+
+    let peak_rss = peak_rss_kb();
+    let json = format!(
+        "{{\n  \"bench\": \"engine_throughput\",\n  \"runs\": {runs},\n  \"quick\": {quick},\n  \
+         \"oneshot_runs_per_sec\": {oneshot_rps:.2},\n  \"engine_runs_per_sec\": {seq_rps:.2},\n  \
+         \"engine_w4_runs_per_sec\": {conc_rps:.2},\n  \"speedup_engine_vs_oneshot\": {:.3},\n  \
+         \"speedup_w4_vs_oneshot\": {:.3},\n  \"workspaces_created\": {},\n  \
+         \"workspace_reuses\": {},\n  \"posts_shared\": {},\n  \"peak_workers\": {},\n  \
+         \"peak_rss_kb\": {peak_rss}\n}}\n",
+        oneshot.as_secs_f64() / seq.as_secs_f64(),
+        oneshot.as_secs_f64() / conc.as_secs_f64(),
+        ws.created,
+        ws.reused,
+        posts_shared,
+        stats.peak_workers,
+    );
+    std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
+    let json_path = format!("{REPORT_DIR}/BENCH_engine.json");
+    std::fs::write(&json_path, json).expect("write BENCH_engine.json");
+    println!("wrote {json_path}");
 
     if seq < oneshot {
         println!(

@@ -14,6 +14,8 @@
 //!   checkpoint *if the neighbour holding the checkpoint is alive*;
 //!   losing a process and its checkpoint partner together is fatal.
 
+use std::sync::Arc;
+
 use crate::linalg::Matrix;
 use crate::tsqr::algorithms::ProcOutcome;
 use crate::tsqr::context::Ctx;
@@ -59,14 +61,18 @@ pub fn checkpointed(ctx: Ctx, a: Matrix) -> ProcOutcome {
         Ok(f) => f.r,
         Err(_) => return ProcOutcome::GaveUpPeerFailed,
     };
+    // One heartbeat token per process, shared across every round's
+    // post (the payload carries no information — only its existence).
+    let heartbeat = Arc::new(Matrix::zeros(1, 1));
     for round in 0..ctx.plan.rounds() {
         if !ctx.plan.participates(rank, round) {
             return ProcOutcome::DoneNoR;
         }
         // Checkpoint my current state to my partner's memory — one real
         // message of R̃ bytes on every step, failure or not.  This is
-        // the overhead the paper's approach avoids.
-        ctx.world.post(rank, round | CKPT_BIT, r.clone());
+        // the overhead the paper's approach avoids.  (The *simulator*
+        // shares the Arc; the metrics still charge the full payload.)
+        ctx.world.post(rank, round | CKPT_BIT, Arc::clone(&r));
         ctx.world.charge_message(r.size_bytes() as u64);
 
         if ctx.maybe_die(round).is_err() {
@@ -75,7 +81,7 @@ pub fn checkpointed(ctx: Ctx, a: Matrix) -> ProcOutcome {
         // Survived the boundary: heartbeat. A checkpoint stored in my
         // memory is readable during round `round` iff this post exists
         // (dying at the boundary takes the checkpoints down with me).
-        ctx.world.post(rank, round | HB_BIT, Matrix::zeros(1, 1));
+        ctx.world.post(rank, round | HB_BIT, Arc::clone(&heartbeat));
         let Some(buddy) = ctx.plan.buddy(rank, round) else {
             continue;
         };

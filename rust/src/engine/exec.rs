@@ -30,6 +30,12 @@ use super::pool::{TaskGroup, WorkerPool};
 pub(crate) fn execute(spec: &RunSpec, pool: &WorkerPool) -> Result<RunResult> {
     spec.validate()?;
     let plan = TreePlan::new(spec.procs);
+    // Pre-size the executor's workspace pool from the plan: one arena
+    // per rank, each big enough for the run's largest kernel, so the
+    // kernel path performs zero steady-state allocations.  Idempotent
+    // — from the second campaign run on this is a no-op.
+    let (ws_rows, ws_cols) = spec.workspace_shape();
+    spec.executor.warm_workspaces(spec.procs, ws_rows, ws_cols);
     let world = World::new(spec.procs);
     let (sink, collector) = if spec.collect_trace {
         let (s, c) = TraceSink::channel();

@@ -19,8 +19,13 @@
 //!   to HLO text (`make artifacts`).
 //! * **L3 (this crate)** — the simulated ULFM world, the four TSQR
 //!   algorithms, fault injection, robustness analysis, benches and CLI;
-//!   kernels execute through PJRT ([`runtime`]) with a pure-rust
-//!   fallback ([`linalg`]).
+//!   kernels execute through one zero-copy call convention
+//!   (`KernelCall { op, views, workspace }`, see [`runtime::Kernel`])
+//!   dispatched to PJRT or to the blocked pure-rust view kernels in
+//!   [`linalg::view`].  Matrix state crosses the simulated network as
+//!   shared `Arc<Matrix>` handles, and kernel scratch comes from
+//!   pooled, reusable [`linalg::Workspace`] arenas — steady-state
+//!   campaign runs do not touch the allocator in the kernel path.
 //!
 //! ## Quick start
 //!

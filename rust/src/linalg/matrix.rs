@@ -6,6 +6,8 @@
 
 use std::fmt;
 
+use super::view::{MatrixView, MatrixViewMut};
+
 /// Dense row-major `f32` matrix.
 #[derive(Clone, PartialEq)]
 pub struct Matrix {
@@ -70,6 +72,18 @@ impl Matrix {
         self.data
     }
 
+    /// Borrowed view — the zero-copy input convention of the view
+    /// kernels in [`super::view`].
+    pub fn as_view(&self) -> MatrixView<'_> {
+        MatrixView::new(self.rows, self.cols, &self.data)
+    }
+
+    /// Mutable borrowed view — the in-place output convention of the
+    /// view kernels.
+    pub fn as_view_mut(&mut self) -> MatrixViewMut<'_> {
+        MatrixViewMut::new(self.rows, self.cols, &mut self.data)
+    }
+
     /// Bytes of payload — what a sendrecv of this matrix "costs".
     pub fn size_bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<f32>()
@@ -85,10 +99,10 @@ impl Matrix {
         (0..self.rows).map(|i| self[(i, j)]).collect()
     }
 
-    /// Sub-block of consecutive rows [r0, r1).
+    /// Sub-block of consecutive rows [r0, r1) — allocating shim over
+    /// the zero-copy [`MatrixView::rows_range`].
     pub fn row_block(&self, r0: usize, r1: usize) -> Matrix {
-        assert!(r0 <= r1 && r1 <= self.rows);
-        Matrix::from_vec(r1 - r0, self.cols, self.data[r0 * self.cols..r1 * self.cols].to_vec())
+        self.as_view().rows_range(r0, r1).to_matrix()
     }
 
     /// Vertical concatenation [self; other].
@@ -107,21 +121,11 @@ impl Matrix {
 
     /// Matrix product (f64 accumulation — this is a verification path,
     /// not the hot path; the hot path runs matmuls through PJRT).
+    /// Allocating shim over [`super::view::matmul_into`].
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul: inner dim mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let aik = self[(i, k)] as f64;
-                if aik == 0.0 {
-                    continue;
-                }
-                for j in 0..other.cols {
-                    let v = out[(i, j)] as f64 + aik * other[(k, j)] as f64;
-                    out[(i, j)] = v as f32;
-                }
-            }
-        }
+        super::view::matmul_into(self.as_view(), other.as_view(), &mut out.as_view_mut());
         out
     }
 
@@ -167,9 +171,12 @@ impl Matrix {
         true
     }
 
-    /// Keep the upper triangle, zero below the diagonal.
+    /// Keep the upper triangle, zero below the diagonal — allocating
+    /// shim over [`super::view::triu_into`].
     pub fn triu(&self) -> Matrix {
-        Matrix::from_fn(self.rows, self.cols, |i, j| if j >= i { self[(i, j)] } else { 0.0 })
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        super::view::triu_into(self.as_view(), &mut out.as_view_mut());
+        out
     }
 
     /// Canonical R: flip row signs so every diagonal entry is >= 0.
@@ -207,14 +214,24 @@ impl Matrix {
 impl std::ops::Index<(usize, usize)> for Matrix {
     type Output = f32;
     fn index(&self, (i, j): (usize, usize)) -> &f32 {
-        debug_assert!(i < self.rows && j < self.cols);
+        debug_assert!(
+            i < self.rows && j < self.cols,
+            "Matrix index ({i}, {j}) out of bounds for shape {}x{}",
+            self.rows,
+            self.cols
+        );
         &self.data[i * self.cols + j]
     }
 }
 
 impl std::ops::IndexMut<(usize, usize)> for Matrix {
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
-        debug_assert!(i < self.rows && j < self.cols);
+        debug_assert!(
+            i < self.rows && j < self.cols,
+            "Matrix index ({i}, {j}) out of bounds for shape {}x{}",
+            self.rows,
+            self.cols
+        );
         &mut self.data[i * self.cols + j]
     }
 }

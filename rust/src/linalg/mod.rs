@@ -1,9 +1,20 @@
-//! Host-side dense linear algebra: the `Matrix` payload type plus a
-//! pure-rust Householder QR used as verification oracle and as the
-//! fallback backend for shapes outside the AOT manifest.
+//! Host-side dense linear algebra: the `Matrix` payload type, borrowed
+//! [`MatrixView`]/[`MatrixViewMut`] slices, the reusable [`Workspace`]
+//! scratch arena, and the blocked in-place Householder kernels —
+//! verification oracle and fallback backend for shapes outside the AOT
+//! manifest.
+//!
+//! The allocating `householder_qr`/`combine_r`/`backsolve` API is a
+//! thin shim over the zero-copy view kernels in [`view`]; hot paths
+//! (the [`crate::runtime::Executor`]) call the view kernels directly
+//! with pooled workspaces.
 
 pub mod matrix;
 pub mod qr;
+pub mod view;
 
 pub use matrix::Matrix;
-pub use qr::{PackedQr, backsolve, combine_r, householder_qr, qr_r, qr_residuals};
+pub use qr::{
+    PackedQr, backsolve, combine_r, householder_qr, householder_qr_reference, qr_r, qr_residuals,
+};
+pub use view::{MatrixView, MatrixViewMut, Workspace};

@@ -10,7 +10,23 @@
 //! Internally accumulates in `f64` and stores `f32`, which keeps the
 //! oracle at least as accurate as the kernels it validates.
 
+use std::cell::RefCell;
+
 use super::matrix::Matrix;
+use super::view::{self, Workspace};
+
+thread_local! {
+    /// Per-thread scratch arena for the allocating shims below: the
+    /// classic `householder_qr(&a) -> PackedQr` API keeps its
+    /// signature, but its O(m·n) f64 working set is reused across
+    /// calls on the same thread instead of reallocated.  (The executor
+    /// hot path uses an explicit `runtime::WorkspacePool` instead.)
+    static SHIM_WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+fn with_shim_workspace<T>(f: impl FnOnce(&mut Workspace) -> T) -> T {
+    SHIM_WS.with(|ws| f(&mut ws.borrow_mut()))
+}
 
 /// Packed Householder factorization: R above/on the diagonal, reflector
 /// tails below, plus the `tau` coefficients — LAPACK `geqrf` layout and
@@ -77,11 +93,29 @@ impl PackedQr {
     }
 }
 
-/// Unblocked Householder QR of a tall-skinny panel (m >= n).
+/// Householder QR of a tall-skinny panel (m >= n) — allocating shim
+/// over the blocked view kernel [`view::householder_qr_into`] (thread-
+/// local workspace; outputs freshly allocated).  Bit-for-bit identical
+/// to [`householder_qr_reference`].
 ///
 /// Panics if the panel is wide (m < n) — the TSQR plan guarantees
 /// tall-skinny leaves, and the Pallas kernel enforces the same.
 pub fn householder_qr(a: &Matrix) -> PackedQr {
+    let (m, n) = a.shape();
+    assert!(m >= n, "householder_qr: panel must be tall-skinny, got {m}x{n}");
+    let mut packed = Matrix::zeros(m, n);
+    let mut tau = vec![0.0f32; n];
+    with_shim_workspace(|ws| {
+        view::householder_qr_into(a.as_view(), &mut packed.as_view_mut(), &mut tau, ws);
+    });
+    PackedQr { packed, tau }
+}
+
+/// The original unblocked Householder loop, kept verbatim as the
+/// bitwise oracle for the blocked kernels (see the `blocked_qr_*`
+/// property tests): same LAPACK packed layout, same sign convention,
+/// f64 end-to-end with a single rounding to f32 at the end.
+pub fn householder_qr_reference(a: &Matrix) -> PackedQr {
     let (m, n) = a.shape();
     assert!(m >= n, "householder_qr: panel must be tall-skinny, got {m}x{n}");
     // Work in f64 end-to-end, cast once at the end.
@@ -129,32 +163,33 @@ pub fn householder_qr(a: &Matrix) -> PackedQr {
     PackedQr { packed, tau }
 }
 
-/// Just the canonical R factor (diag >= 0) of a tall-skinny panel.
+/// Just the canonical R factor (diag >= 0) of a tall-skinny panel —
+/// shim over [`view::leaf_r_into`] (skips materializing the packed
+/// reflectors entirely).
 pub fn qr_r(a: &Matrix) -> Matrix {
-    householder_qr(a).r().canonicalize_r()
+    let n = a.cols();
+    let mut out = Matrix::zeros(n, n);
+    with_shim_workspace(|ws| view::leaf_r_into(a.as_view(), &mut out.as_view_mut(), ws));
+    out.canonicalize_r()
 }
 
-/// TSQR combine on the host: R of the stacked [r_top; r_bot].
+/// TSQR combine on the host: R of the stacked [r_top; r_bot] — shim
+/// over [`view::combine_r_into`] (the stack is formed in workspace
+/// scratch; no `vstack` allocation).
 pub fn combine_r(r_top: &Matrix, r_bot: &Matrix) -> Matrix {
-    householder_qr(&r_top.vstack(r_bot)).r()
+    let n = r_top.cols();
+    let mut out = Matrix::zeros(n, n);
+    with_shim_workspace(|ws| {
+        view::combine_r_into(r_top.as_view(), r_bot.as_view(), &mut out.as_view_mut(), ws);
+    });
+    out
 }
 
-/// Upper-triangular back-substitution R x = b, b (n, k).
+/// Upper-triangular back-substitution R x = b, b (n, k) — shim over
+/// [`view::backsolve_into`].
 pub fn backsolve(r: &Matrix, b: &Matrix) -> Matrix {
-    let n = r.rows();
-    assert_eq!(r.cols(), n, "backsolve: R must be square");
-    assert_eq!(b.rows(), n, "backsolve: rhs rows must match R");
-    let k = b.cols();
-    let mut x = Matrix::zeros(n, k);
-    for c in 0..k {
-        for i in (0..n).rev() {
-            let mut acc = b[(i, c)] as f64;
-            for j in i + 1..n {
-                acc -= r[(i, j)] as f64 * x[(j, c)] as f64;
-            }
-            x[(i, c)] = (acc / r[(i, i)] as f64) as f32;
-        }
-    }
+    let mut x = Matrix::zeros(r.rows(), b.cols());
+    view::backsolve_into(r.as_view(), b.as_view(), &mut x.as_view_mut());
     x
 }
 

@@ -1,0 +1,704 @@
+//! Zero-copy kernel subsystem: borrowed matrix views, the reusable
+//! [`Workspace`] scratch arena, and blocked in-place Householder
+//! kernels.
+//!
+//! ## Why this module exists
+//!
+//! The TSQR hot path is thousands of small leaf/combine QR kernels per
+//! campaign.  The original kernels allocated on every call (a fresh
+//! `f64` working buffer, a fresh packed output, plus `vstack` copies
+//! for every combine) — at Monte-Carlo campaign scale the allocator
+//! dominated the wall clock.  The kernels here separate three concerns:
+//!
+//! * **inputs** are [`MatrixView`]s — borrowed slices, never copied;
+//! * **scratch** comes from a caller-supplied [`Workspace`] — grown on
+//!   first use, reused forever after (zero steady-state allocations);
+//! * **outputs** are written into caller-provided buffers
+//!   ([`MatrixViewMut`] / `&mut [f32]`) — the caller decides whether
+//!   that buffer is fresh or recycled.
+//!
+//! ## Ownership rules (the call convention)
+//!
+//! 1. The *caller* owns every buffer: views borrow, kernels never free
+//!    or resize anything except the workspace's internal arena.
+//! 2. A [`Workspace`] may be used by one kernel call at a time (take
+//!    `&mut`); pools of workspaces (see `runtime::WorkspacePool`)
+//!    provide concurrency.
+//! 3. Kernels fully overwrite the scratch they use — no state leaks
+//!    between calls, so workspaces can be shared across unrelated runs.
+//!
+//! ## Blocked, yet bit-for-bit reproducible
+//!
+//! [`householder_qr_into`] is a column-panel blocked factorization
+//! (panel width [`PANEL`]): reflectors are formed panel by panel and
+//! the trailing matrix is updated a column-panel at a time, which keeps
+//! the working set in cache for tall panels.  Crucially the result is
+//! **bit-for-bit identical** to the classic unblocked loop
+//! (`qr::householder_qr_reference`): blocking only reorders *which
+//! column* receives its rank-1 update when — never the order of
+//! updates applied to any single column, nor the accumulation order
+//! inside a dot product — and every update reads only reflector
+//! columns that are already final.  The redundancy invariant of the
+//! whole paper (replicas are bit-identical) therefore survives the
+//! optimization, and the property tests in `tests/prop_invariants.rs`
+//! pin it down.
+
+use super::matrix::Matrix;
+
+/// Column-panel width of the blocked factorization.  32 keeps a
+/// 32-column f64 panel of a 1024-row leaf (~256 KiB) inside L2.
+pub const PANEL: usize = 32;
+
+// ---------------------------------------------------------------------
+// Views
+// ---------------------------------------------------------------------
+
+/// Borrowed, immutable row-major view of an `rows x cols` f32 block.
+#[derive(Clone, Copy)]
+pub struct MatrixView<'a> {
+    rows: usize,
+    cols: usize,
+    data: &'a [f32],
+}
+
+impl<'a> MatrixView<'a> {
+    /// View over a row-major buffer.  Panics if the length mismatches.
+    pub fn new(rows: usize, cols: usize, data: &'a [f32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "MatrixView: buffer length != rows*cols");
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Element access (debug-checked with shape context).
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(
+            i < self.rows && j < self.cols,
+            "MatrixView index ({i}, {j}) out of bounds for shape {}x{}",
+            self.rows,
+            self.cols
+        );
+        self.data[i * self.cols + j]
+    }
+
+    /// Sub-view of consecutive rows `[r0, r1)` — zero-copy (row-major
+    /// rows are contiguous).
+    pub fn rows_range(&self, r0: usize, r1: usize) -> MatrixView<'a> {
+        assert!(
+            r0 <= r1 && r1 <= self.rows,
+            "rows_range [{r0}, {r1}) out of bounds for {} rows",
+            self.rows
+        );
+        MatrixView { rows: r1 - r0, cols: self.cols, data: &self.data[r0 * self.cols..r1 * self.cols] }
+    }
+
+    /// Materialize an owned copy (the explicit, visible allocation).
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.to_vec())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatrixView<'_> {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(
+            i < self.rows && j < self.cols,
+            "MatrixView index ({i}, {j}) out of bounds for shape {}x{}",
+            self.rows,
+            self.cols
+        );
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::fmt::Debug for MatrixView<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MatrixView {}x{}", self.rows, self.cols)
+    }
+}
+
+/// Borrowed, mutable row-major view — the output half of the kernel
+/// call convention.
+pub struct MatrixViewMut<'a> {
+    rows: usize,
+    cols: usize,
+    data: &'a mut [f32],
+}
+
+impl<'a> MatrixViewMut<'a> {
+    /// Mutable view over a row-major buffer.  Panics on length mismatch.
+    pub fn new(rows: usize, cols: usize, data: &'a mut [f32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "MatrixViewMut: buffer length != rows*cols");
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Immutable re-borrow.
+    pub fn as_view(&self) -> MatrixView<'_> {
+        MatrixView { rows: self.rows, cols: self.cols, data: self.data }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(
+            i < self.rows && j < self.cols,
+            "MatrixViewMut index ({i}, {j}) out of bounds for shape {}x{}",
+            self.rows,
+            self.cols
+        );
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Overwrite from an equally-shaped source view.
+    pub fn copy_from(&mut self, src: MatrixView<'_>) {
+        assert_eq!(self.shape(), src.shape(), "copy_from: shape mismatch");
+        self.data.copy_from_slice(src.data());
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatrixViewMut<'_> {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(
+            i < self.rows && j < self.cols,
+            "MatrixViewMut index ({i}, {j}) out of bounds for shape {}x{}",
+            self.rows,
+            self.cols
+        );
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for MatrixViewMut<'_> {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(
+            i < self.rows && j < self.cols,
+            "MatrixViewMut index ({i}, {j}) out of bounds for shape {}x{}",
+            self.rows,
+            self.cols
+        );
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl std::fmt::Debug for MatrixViewMut<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MatrixViewMut {}x{}", self.rows, self.cols)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Workspace
+// ---------------------------------------------------------------------
+
+/// Reusable scratch arena for the view kernels.
+///
+/// Buffers grow to the high-water mark of the shapes they have seen and
+/// are then reused without further allocation — the steady state every
+/// campaign run settles into after its first round.  `grows()` exposes
+/// the number of reallocation events, which the allocation-counting
+/// tests use to assert steady state.
+#[derive(Default)]
+pub struct Workspace {
+    f64_buf: Vec<f64>,
+    f32_buf: Vec<f32>,
+    grows: u64,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A workspace pre-sized for factoring an `rows x cols` panel (and
+    /// anything smaller), so the first kernel call allocates nothing.
+    pub fn sized_for(rows: usize, cols: usize) -> Self {
+        let mut ws = Self::new();
+        ws.reserve(rows, cols);
+        ws
+    }
+
+    /// Ensure capacity for an `rows x cols` factorization without
+    /// counting it as a steady-state grow (setup-time warming).
+    pub fn reserve(&mut self, rows: usize, cols: usize) {
+        let need64 = rows * cols + cols; // working copy + f64 tau
+        if self.f64_buf.len() < need64 {
+            self.f64_buf.resize(need64, 0.0);
+        }
+        let need32 = rows * cols;
+        if self.f32_buf.len() < need32 {
+            self.f32_buf.resize(need32, 0.0);
+        }
+    }
+
+    /// Times a scratch request outgrew the arena (0 after warm-up ⇒
+    /// the workspace is allocation-free in steady state).
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// f64 scratch of exactly `len` elements (grown if needed, counted).
+    pub fn f64_scratch(&mut self, len: usize) -> &mut [f64] {
+        if self.f64_buf.len() < len {
+            self.grows += 1;
+            self.f64_buf.resize(len, 0.0);
+        }
+        &mut self.f64_buf[..len]
+    }
+
+    /// f32 scratch of exactly `len` elements (grown if needed, counted).
+    pub fn f32_scratch(&mut self, len: usize) -> &mut [f32] {
+        if self.f32_buf.len() < len {
+            self.grows += 1;
+            self.f32_buf.resize(len, 0.0);
+        }
+        &mut self.f32_buf[..len]
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocked factorization core
+// ---------------------------------------------------------------------
+
+/// Blocked Householder factorization of the row-major f64 working
+/// buffer `w` (`m x n`, `m >= n`), LAPACK `geqrf` packed layout.
+/// `tau64` receives the n reflector coefficients in full precision
+/// (the trailing updates must use the f64 value — rounding it through
+/// f32 would break bitwise equality with the unblocked reference).
+fn factor_packed_f64(w: &mut [f64], m: usize, n: usize, tau64: &mut [f64]) {
+    debug_assert!(m >= n, "factor_packed_f64: panel must be tall-skinny, got {m}x{n}");
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert_eq!(tau64.len(), n);
+    let idx = |i: usize, j: usize| i * n + j;
+
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + PANEL).min(n);
+        // Panel factorization: classic unblocked loop restricted to
+        // columns k0..k1 (updates touch panel columns only).
+        for j in k0..k1 {
+            let mut norm2 = 0.0f64;
+            for i in j..m {
+                norm2 += w[idx(i, j)] * w[idx(i, j)];
+            }
+            let normx = norm2.sqrt();
+            let x0 = w[idx(j, j)];
+            if normx == 0.0 {
+                tau64[j] = 0.0; // zero column: identity reflector
+                continue;
+            }
+            let beta = if x0 >= 0.0 { -normx } else { normx };
+            let denom = x0 - beta;
+            let tj = (beta - x0) / beta;
+            tau64[j] = tj;
+            // v tail = x[j+1..] / denom (v[j] = 1 implicit).
+            for i in j + 1..m {
+                w[idx(i, j)] /= denom;
+            }
+            // Apply H_j to the remaining panel columns.
+            for c in j + 1..k1 {
+                let mut dot = w[idx(j, c)];
+                for i in j + 1..m {
+                    dot += w[idx(i, j)] * w[idx(i, c)];
+                }
+                let s = tj * dot;
+                w[idx(j, c)] -= s;
+                for i in j + 1..m {
+                    w[idx(i, c)] -= w[idx(i, j)] * s;
+                }
+            }
+            w[idx(j, j)] = beta;
+        }
+        // Trailing update: apply the panel's reflectors to each column
+        // beyond the panel, column by column so the column stays hot.
+        // Per trailing column this is the same H_k0..H_{k1-1} sequence
+        // (same operands, same accumulation order) the unblocked loop
+        // performs — hence bit-for-bit identical results.
+        for c in k1..n {
+            for j in k0..k1 {
+                if tau64[j] == 0.0 {
+                    continue; // identity reflector (zero column)
+                }
+                let mut dot = w[idx(j, c)];
+                for i in j + 1..m {
+                    dot += w[idx(i, j)] * w[idx(i, c)];
+                }
+                let s = tau64[j] * dot;
+                w[idx(j, c)] -= s;
+                for i in j + 1..m {
+                    w[idx(i, c)] -= w[idx(i, j)] * s;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// Load an f32 view into an f64 row-major buffer.
+fn load_f64(dst: &mut [f64], src: MatrixView<'_>) {
+    debug_assert_eq!(dst.len(), src.rows() * src.cols());
+    for (d, &s) in dst.iter_mut().zip(src.data()) {
+        *d = s as f64;
+    }
+}
+
+/// Cast an f64 buffer back to f32 (single rounding, as the unblocked
+/// reference does).
+fn store_f32(dst: &mut [f32], src: &[f64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as f32;
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-place kernels (the view call convention)
+// ---------------------------------------------------------------------
+
+/// Blocked Householder QR of a tall-skinny panel into caller buffers:
+/// `packed` (m×n, LAPACK `geqrf` layout) and `tau` (n).  Scratch comes
+/// from `ws`; nothing else is allocated.
+pub fn householder_qr_into(
+    a: MatrixView<'_>,
+    packed: &mut MatrixViewMut<'_>,
+    tau: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "householder_qr_into: panel must be tall-skinny, got {m}x{n}");
+    assert_eq!(packed.shape(), (m, n), "householder_qr_into: packed must be {m}x{n}");
+    assert_eq!(tau.len(), n, "householder_qr_into: tau must have {n} entries");
+    let buf = ws.f64_scratch(m * n + n);
+    let (w, t) = buf.split_at_mut(m * n);
+    load_f64(w, a);
+    factor_packed_f64(w, m, n, t);
+    store_f32(packed.data, w);
+    store_f32(tau, t);
+}
+
+/// Just the R factor of a tall-skinny panel, written into the caller's
+/// n×n buffer (upper triangle of the factorization; zeros below the
+/// diagonal) — the TSQR leaf hot path.
+pub fn leaf_r_into(a: MatrixView<'_>, out: &mut MatrixViewMut<'_>, ws: &mut Workspace) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "leaf_r_into: panel must be tall-skinny, got {m}x{n}");
+    assert_eq!(out.shape(), (n, n), "leaf_r_into: out must be {n}x{n}");
+    let buf = ws.f64_scratch(m * n + n);
+    let (w, t) = buf.split_at_mut(m * n);
+    load_f64(w, a);
+    factor_packed_f64(w, m, n, t);
+    write_triu_top(w, n, out);
+}
+
+/// TSQR combine hot path: R of the stacked `[r_top; r_bot]` written
+/// into the caller's n×n buffer.  The stack is formed directly in the
+/// f64 scratch — no `vstack` copy, no intermediate matrix.
+pub fn combine_r_into(
+    r_top: MatrixView<'_>,
+    r_bot: MatrixView<'_>,
+    out: &mut MatrixViewMut<'_>,
+    ws: &mut Workspace,
+) {
+    let n = r_top.cols();
+    assert_eq!(r_bot.cols(), n, "combine_r_into: column mismatch");
+    let m = r_top.rows() + r_bot.rows();
+    assert!(m >= n, "combine_r_into: stack must be tall-skinny, got {m}x{n}");
+    assert_eq!(out.shape(), (n, n), "combine_r_into: out must be {n}x{n}");
+    let buf = ws.f64_scratch(m * n + n);
+    let (w, t) = buf.split_at_mut(m * n);
+    let split = r_top.rows() * n;
+    load_f64(&mut w[..split], r_top);
+    load_f64(&mut w[split..], r_bot);
+    factor_packed_f64(w, m, n, t);
+    write_triu_top(w, n, out);
+}
+
+/// Full combine factorization (packed + tau) of the stacked
+/// `[r_top; r_bot]` — the retained-Q path.
+pub fn combine_qr_into(
+    r_top: MatrixView<'_>,
+    r_bot: MatrixView<'_>,
+    packed: &mut MatrixViewMut<'_>,
+    tau: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let n = r_top.cols();
+    assert_eq!(r_bot.cols(), n, "combine_qr_into: column mismatch");
+    let m = r_top.rows() + r_bot.rows();
+    assert!(m >= n, "combine_qr_into: stack must be tall-skinny, got {m}x{n}");
+    assert_eq!(packed.shape(), (m, n), "combine_qr_into: packed must be {m}x{n}");
+    assert_eq!(tau.len(), n, "combine_qr_into: tau must have {n} entries");
+    let buf = ws.f64_scratch(m * n + n);
+    let (w, t) = buf.split_at_mut(m * n);
+    let split = r_top.rows() * n;
+    load_f64(&mut w[..split], r_top);
+    load_f64(&mut w[split..], r_bot);
+    factor_packed_f64(w, m, n, t);
+    store_f32(packed.data, w);
+    store_f32(tau, t);
+}
+
+/// Write the upper triangle of the top n rows of a packed m×n f64
+/// buffer into an n×n f32 view (zeros below the diagonal).
+fn write_triu_top(w: &[f64], n: usize, out: &mut MatrixViewMut<'_>) {
+    for i in 0..n {
+        for j in 0..n {
+            out.data[i * n + j] = if j >= i { w[i * n + j] as f32 } else { 0.0 };
+        }
+    }
+}
+
+/// Upper-triangular copy: `out = triu(a)`.
+pub fn triu_into(a: MatrixView<'_>, out: &mut MatrixViewMut<'_>) {
+    assert_eq!(a.shape(), out.shape(), "triu_into: shape mismatch");
+    let (rows, cols) = a.shape();
+    for i in 0..rows {
+        for j in 0..cols {
+            out.data[i * cols + j] = if j >= i { a.data()[i * cols + j] } else { 0.0 };
+        }
+    }
+}
+
+/// Back-substitution `R x = b` into the caller's n×k buffer (R upper
+/// triangular n×n).  f64 accumulation; allocation-free.
+pub fn backsolve_into(r: MatrixView<'_>, b: MatrixView<'_>, out: &mut MatrixViewMut<'_>) {
+    let n = r.rows();
+    assert_eq!(r.cols(), n, "backsolve_into: R must be square");
+    assert_eq!(b.rows(), n, "backsolve_into: rhs rows must match R");
+    let k = b.cols();
+    assert_eq!(out.shape(), (n, k), "backsolve_into: out must be {n}x{k}");
+    for c in 0..k {
+        for i in (0..n).rev() {
+            let mut acc = b.at(i, c) as f64;
+            for j in i + 1..n {
+                acc -= r.at(i, j) as f64 * out.at(j, c) as f64;
+            }
+            out.set(i, c, (acc / r.at(i, i) as f64) as f32);
+        }
+    }
+}
+
+/// Matrix product `out = a @ b` with f64 accumulation — identical
+/// numeric semantics to `Matrix::matmul` (which is now a shim over
+/// this kernel).
+pub fn matmul_into(a: MatrixView<'_>, b: MatrixView<'_>, out: &mut MatrixViewMut<'_>) {
+    assert_eq!(a.cols(), b.rows(), "matmul_into: inner dim mismatch");
+    assert_eq!(out.shape(), (a.rows(), b.cols()), "matmul_into: out shape mismatch");
+    out.fill(0.0);
+    let kn = b.cols();
+    for i in 0..a.rows() {
+        for k in 0..a.cols() {
+            let aik = a.at(i, k) as f64;
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..kn {
+                let v = out.at(i, j) as f64 + aik * b.at(k, j) as f64;
+                out.set(i, j, v as f32);
+            }
+        }
+    }
+}
+
+/// Apply H_j = I − τ_j v_j v_jᵀ (reflector `j` of a packed
+/// factorization) to `out` in place — same numerics as
+/// `PackedQr::apply_reflector`.
+fn apply_reflector(packed: MatrixView<'_>, tau: &[f32], j: usize, out: &mut MatrixViewMut<'_>) {
+    let (m, k) = out.shape();
+    let tj = tau[j] as f64;
+    if tj == 0.0 {
+        return;
+    }
+    for c in 0..k {
+        let mut dot = out.at(j, c) as f64; // v[j] = 1
+        for i in j + 1..m {
+            dot += packed.at(i, j) as f64 * out.at(i, c) as f64;
+        }
+        let w = tj * dot;
+        out.set(j, c, (out.at(j, c) as f64 - w) as f32);
+        for i in j + 1..m {
+            let v = out.at(i, c) as f64 - packed.at(i, j) as f64 * w;
+            out.set(i, c, v as f32);
+        }
+    }
+}
+
+/// Qᵀ @ out in place (reflectors in forward order).
+pub fn apply_qt_in_place(packed: MatrixView<'_>, tau: &[f32], out: &mut MatrixViewMut<'_>) {
+    for j in 0..packed.cols() {
+        apply_reflector(packed, tau, j, out);
+    }
+}
+
+/// Q @ out in place (reflectors in reverse order).
+pub fn apply_q_in_place(packed: MatrixView<'_>, tau: &[f32], out: &mut MatrixViewMut<'_>) {
+    for j in (0..packed.cols()).rev() {
+        apply_reflector(packed, tau, j, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(m: &Matrix) -> Vec<u32> {
+        m.data().iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn views_index_and_subrange() {
+        let m = Matrix::from_fn(3, 2, |i, j| (i * 10 + j) as f32);
+        let v = m.as_view();
+        assert_eq!(v.shape(), (3, 2));
+        assert_eq!(v.at(2, 1), 21.0);
+        assert_eq!(v[(0, 1)], 1.0);
+        let sub = v.rows_range(1, 3);
+        assert_eq!(sub.shape(), (2, 2));
+        assert_eq!(sub.at(0, 0), 10.0);
+        assert_eq!(sub.to_matrix(), m.row_block(1, 3));
+    }
+
+    #[test]
+    fn view_mut_set_and_copy() {
+        let mut m = Matrix::zeros(2, 2);
+        {
+            let mut v = m.as_view_mut();
+            v.set(0, 1, 5.0);
+            v[(1, 0)] = 7.0;
+        }
+        assert_eq!(m[(0, 1)], 5.0);
+        assert_eq!(m[(1, 0)], 7.0);
+        let src = Matrix::eye(2, 2);
+        m.as_view_mut().copy_from(src.as_view());
+        assert_eq!(m, src);
+    }
+
+    #[test]
+    #[should_panic]
+    fn view_length_checked() {
+        let buf = [0.0f32; 3];
+        MatrixView::new(2, 2, &buf);
+    }
+
+    #[test]
+    fn blocked_qr_bitwise_equals_reference() {
+        // Including shapes around the panel boundary and m == n.
+        for (m, n) in [(4, 4), (16, 4), (40, 33), (64, 32), (65, 34), (7, 1), (1, 1)] {
+            let a = Matrix::random(m, n, (m * 131 + n) as u64);
+            let reference = crate::linalg::qr::householder_qr_reference(&a);
+            let mut packed = Matrix::zeros(m, n);
+            let mut tau = vec![0.0f32; n];
+            let mut ws = Workspace::new();
+            householder_qr_into(a.as_view(), &mut packed.as_view_mut(), &mut tau, &mut ws);
+            assert_eq!(bits(&packed), bits(&reference.packed), "packed differs at {m}x{n}");
+            let tb: Vec<u32> = tau.iter().map(|x| x.to_bits()).collect();
+            let rb: Vec<u32> = reference.tau.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(tb, rb, "tau differs at {m}x{n}");
+        }
+    }
+
+    #[test]
+    fn combine_r_into_matches_vstack_reference() {
+        let n = 6;
+        let top = crate::linalg::qr::qr_r(&Matrix::random(12, n, 1));
+        let bot = crate::linalg::qr::qr_r(&Matrix::random(12, n, 2));
+        let reference = crate::linalg::qr::householder_qr_reference(&top.vstack(&bot)).r();
+        let mut out = Matrix::zeros(n, n);
+        let mut ws = Workspace::new();
+        combine_r_into(top.as_view(), bot.as_view(), &mut out.as_view_mut(), &mut ws);
+        assert_eq!(bits(&out), bits(&reference));
+    }
+
+    #[test]
+    fn workspace_reuse_is_allocation_free() {
+        let a = Matrix::random(48, 8, 3);
+        let mut packed = Matrix::zeros(48, 8);
+        let mut tau = vec![0.0f32; 8];
+        let mut ws = Workspace::new();
+        householder_qr_into(a.as_view(), &mut packed.as_view_mut(), &mut tau, &mut ws);
+        let grows_after_first = ws.grows();
+        for _ in 0..10 {
+            householder_qr_into(a.as_view(), &mut packed.as_view_mut(), &mut tau, &mut ws);
+        }
+        assert_eq!(ws.grows(), grows_after_first, "warm workspace must not grow");
+        // A pre-sized workspace never grows at all.
+        let mut warm = Workspace::sized_for(48, 8);
+        householder_qr_into(a.as_view(), &mut packed.as_view_mut(), &mut tau, &mut warm);
+        assert_eq!(warm.grows(), 0);
+    }
+
+    #[test]
+    fn backsolve_into_matches_oracle() {
+        let r = crate::linalg::qr::qr_r(&Matrix::random(16, 5, 4));
+        let b = Matrix::random(5, 3, 5);
+        let oracle = crate::linalg::qr::backsolve(&r, &b);
+        let mut out = Matrix::zeros(5, 3);
+        backsolve_into(r.as_view(), b.as_view(), &mut out.as_view_mut());
+        assert_eq!(bits(&out), bits(&oracle));
+    }
+
+    #[test]
+    fn matmul_into_matches_matrix_matmul() {
+        let a = Matrix::random(7, 5, 6);
+        let b = Matrix::random(5, 4, 7);
+        let oracle = a.matmul(&b);
+        let mut out = Matrix::zeros(7, 4);
+        matmul_into(a.as_view(), b.as_view(), &mut out.as_view_mut());
+        assert_eq!(bits(&out), bits(&oracle));
+    }
+
+    #[test]
+    fn apply_q_roundtrip_via_views() {
+        let a = Matrix::random(24, 6, 11);
+        let f = crate::linalg::qr::householder_qr(&a);
+        let b = Matrix::random(24, 3, 12);
+        let mut out = b.clone();
+        apply_qt_in_place(f.packed.as_view(), &f.tau, &mut out.as_view_mut());
+        apply_q_in_place(f.packed.as_view(), &f.tau, &mut out.as_view_mut());
+        assert!(out.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn zero_matrix_blocked_does_not_nan() {
+        let a = Matrix::zeros(8, 3);
+        let mut packed = Matrix::zeros(8, 3);
+        let mut tau = vec![9.0f32; 3];
+        let mut ws = Workspace::new();
+        householder_qr_into(a.as_view(), &mut packed.as_view_mut(), &mut tau, &mut ws);
+        assert!(packed.data().iter().all(|x| x.is_finite()));
+        assert!(tau.iter().all(|&t| t == 0.0));
+    }
+}

@@ -1,12 +1,17 @@
-//! Typed kernel entry points over the PJRT service, with a host-linalg
-//! fallback for shapes outside the AOT manifest.
+//! Typed kernel entry points over the shared [`Kernel`] call
+//! convention, with backend policy and per-executor workspace pooling.
 //!
 //! Every simulated process holds a cheap `Executor` clone and calls
-//! `leaf_qr` / `combine` / ... — it never sees HLO files or literals.
+//! `leaf_qr` / `combine` / ... — it never sees HLO files, literals, or
+//! workspaces.  Internally every operation is one [`KernelCall`]
+//! dispatched to a `&dyn Kernel` (host or PJRT), with scratch checked
+//! out of the executor's [`WorkspacePool`] — so a steady-state
+//! campaign performs zero scratch allocations (see `linalg::view`).
+//!
 //! Dispatch policy (`Backend`):
 //!   * `Pjrt` — artifacts only; error if a shape is missing (strict mode
 //!     for the integration tests and benches).
-//!   * `Host` — pure-rust Householder path (no artifacts needed).
+//!   * `Host` — pure-rust blocked Householder path (no artifacts).
 //!   * `Auto` — PJRT when the manifest has the shape, host otherwise
 //!     (the default for examples: works out of the box, accelerates
 //!     when `make artifacts` has run).
@@ -15,8 +20,11 @@ use std::sync::Arc;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
-use crate::linalg::{Matrix, PackedQr, householder_qr};
+use crate::linalg::{Matrix, MatrixView, Workspace};
 
+use super::kernel::{
+    HostKernel, Kernel, KernelCall, KernelOp, PjrtKernel, WorkspacePool, WorkspaceStats,
+};
 use super::manifest::Manifest;
 use super::service::PjrtService;
 
@@ -54,18 +62,28 @@ pub struct ExecutorStats {
     pub host_calls: AtomicU64,
 }
 
-/// Shared kernel executor. `Clone` is cheap (Arc inside).
+/// Shared kernel executor. `Clone` is cheap (Arcs inside); clones share
+/// the backend, the stats, and the workspace pool — one pool per
+/// engine session.
 #[derive(Clone)]
 pub struct Executor {
-    service: Option<PjrtService>,
+    pjrt: Option<PjrtKernel>,
+    host: HostKernel,
     backend: Backend,
     stats: Arc<ExecutorStats>,
+    workspaces: Arc<WorkspacePool>,
 }
 
 impl Executor {
     /// Host-only executor (no artifacts required).
     pub fn host() -> Self {
-        Self { service: None, backend: Backend::Host, stats: Arc::default() }
+        Self {
+            pjrt: None,
+            host: HostKernel,
+            backend: Backend::Host,
+            stats: Arc::default(),
+            workspaces: Arc::default(),
+        }
     }
 
     /// Executor over an artifact directory.  `shards` = PJRT service
@@ -76,7 +94,13 @@ impl Executor {
         }
         let manifest = Manifest::load(dir)?;
         let service = PjrtService::start(manifest, shards)?;
-        Ok(Self { service: Some(service), backend, stats: Arc::default() })
+        Ok(Self {
+            pjrt: Some(PjrtKernel::new(service)),
+            host: HostKernel,
+            backend,
+            stats: Arc::default(),
+            workspaces: Arc::default(),
+        })
     }
 
     /// `Auto` from the conventional `artifacts/` location: PJRT if the
@@ -98,17 +122,31 @@ impl Executor {
 
     /// True if this executor has a live PJRT service.
     pub fn has_pjrt(&self) -> bool {
-        self.service.is_some()
+        self.pjrt.is_some()
     }
 
-    fn dispatch_pjrt(&self, entry: &str) -> Option<&PjrtService> {
-        let svc = self.service.as_ref()?;
+    /// Pre-size the workspace pool for a run: at least `count`
+    /// workspaces, each able to factor an `rows x cols` panel without
+    /// growing.  Idempotent — the engine calls this per run with
+    /// shapes precomputed by `tsqr::plan`, and after the first run of
+    /// a campaign it is a no-op.
+    pub fn warm_workspaces(&self, count: usize, rows: usize, cols: usize) {
+        self.workspaces.warm(count, rows, cols);
+    }
+
+    /// Workspace-pool counters (`reused` = scratch allocations avoided).
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        self.workspaces.stats()
+    }
+
+    fn dispatch_pjrt(&self, entry: &str) -> Option<&PjrtKernel> {
+        let k = self.pjrt.as_ref()?;
         match self.backend {
             Backend::Host => None,
-            Backend::Pjrt => Some(svc),
+            Backend::Pjrt => Some(k),
             Backend::Auto => {
-                if svc.manifest().get(entry).is_some() {
-                    Some(svc)
+                if k.supports(entry) {
+                    Some(k)
                 } else {
                     None
                 }
@@ -126,21 +164,53 @@ impl Executor {
         Ok(())
     }
 
+    /// Backend selection for one call.  The manifest entry name (a
+    /// `format!` allocation) is only computed when there is a PJRT
+    /// service to consult or a strict-mode error to phrase — the
+    /// host-only hot path stays allocation-free.
+    fn select_kernel(&self, op: KernelOp, views: &[MatrixView<'_>]) -> Result<&dyn Kernel> {
+        if self.pjrt.is_none() && self.backend != Backend::Pjrt {
+            self.stats.host_calls.fetch_add(1, Ordering::Relaxed);
+            return Ok(&self.host);
+        }
+        let entry = op.entry_name(views);
+        match self.dispatch_pjrt(&entry) {
+            Some(p) => {
+                self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+                Ok(p)
+            }
+            None => {
+                self.host_guard(&entry)?;
+                Ok(&self.host)
+            }
+        }
+    }
+
+    /// The single dispatch point: pick the backend, hand it scratch
+    /// (pooled only when this backend+op actually consumes it), run
+    /// the call.  Both backends see the identical [`KernelCall`].
+    fn call(&self, op: KernelOp, views: &[MatrixView<'_>]) -> Result<Vec<Matrix>> {
+        let kernel = self.select_kernel(op, views)?;
+        if kernel.wants_workspace(op) {
+            let mut ws = self.workspaces.acquire();
+            let out = kernel.execute(KernelCall { op, views, workspace: &mut ws });
+            self.workspaces.release(ws);
+            out
+        } else {
+            // No scratch consumer: an empty Workspace is two empty
+            // Vecs — stack-only, no pool traffic, no counter noise.
+            let mut ws = Workspace::new();
+            kernel.execute(KernelCall { op, views, workspace: &mut ws })
+        }
+    }
+
     /// TSQR leaf: factor the local (m, n) panel.
     pub fn leaf_qr(&self, a: &Matrix) -> Result<Factorization> {
-        let (m, n) = a.shape();
-        let entry = Manifest::leaf_qr_name(m, n);
-        if let Some(svc) = self.dispatch_pjrt(&entry) {
-            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-            let mut out = svc.execute(&entry, vec![a.clone()])?;
-            let tau = out.pop().expect("arity 3");
-            let packed = out.pop().expect("arity 3");
-            let r = out.pop().expect("arity 3");
-            return Ok(Factorization { r, packed, tau });
-        }
-        self.host_guard(&entry)?;
-        let f = host_factorization(a);
-        Ok(f)
+        let mut out = self.call(KernelOp::LeafQr, &[a.as_view()])?;
+        let tau = out.pop().expect("arity 3");
+        let packed = out.pop().expect("arity 3");
+        let r = out.pop().expect("arity 3");
+        Ok(Factorization { r, packed, tau })
     }
 
     /// Hot path: just the R̃ of the local panel — the only thing the
@@ -149,105 +219,65 @@ impl Executor {
     /// EXPERIMENTS.md §Perf), falling back to the full entry, then to
     /// the host path.
     pub fn leaf_r(&self, a: &Matrix) -> Result<Matrix> {
-        let (m, n) = a.shape();
-        let entry = Manifest::leaf_r_name(m, n);
-        if let Some(svc) = self.dispatch_pjrt(&entry) {
-            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-            let mut out = svc.execute(&entry, vec![a.clone()])?;
-            return Ok(out.pop().expect("arity 1"));
+        // The fallback ladder only exists where a PJRT service (or a
+        // strict-mode error) is in play — the host path skips straight
+        // to the kernel without touching entry-name strings.
+        if self.pjrt.is_some() || self.backend == Backend::Pjrt {
+            let (m, n) = a.shape();
+            let entry = Manifest::leaf_r_name(m, n);
+            if self.dispatch_pjrt(&entry).is_none()
+                && (self.backend == Backend::Pjrt
+                    || self.dispatch_pjrt(&Manifest::leaf_qr_name(m, n)).is_some())
+            {
+                return Ok(self.leaf_qr(a)?.r);
+            }
         }
-        if self.backend == Backend::Pjrt || self.dispatch_pjrt(&Manifest::leaf_qr_name(m, n)).is_some()
-        {
-            return Ok(self.leaf_qr(a)?.r);
-        }
-        self.host_guard(&entry)?;
-        Ok(crate::linalg::householder_qr(a).r())
+        let mut out = self.call(KernelOp::LeafR, &[a.as_view()])?;
+        Ok(out.pop().expect("arity 1"))
     }
 
     /// Hot path: just the R̃ of the stacked [r_top; r_bot] combine.
     pub fn combine_r(&self, r_top: &Matrix, r_bot: &Matrix) -> Result<Matrix> {
-        let n = r_top.cols();
-        let entry = Manifest::combine_r_name(n);
-        if let Some(svc) = self.dispatch_pjrt(&entry) {
-            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-            let mut out = svc.execute(&entry, vec![r_top.clone(), r_bot.clone()])?;
-            return Ok(out.pop().expect("arity 1"));
+        if self.pjrt.is_some() || self.backend == Backend::Pjrt {
+            let n = r_top.cols();
+            let entry = Manifest::combine_r_name(n);
+            if self.dispatch_pjrt(&entry).is_none()
+                && (self.backend == Backend::Pjrt
+                    || self.dispatch_pjrt(&Manifest::combine_name(n)).is_some())
+            {
+                return Ok(self.combine(r_top, r_bot)?.r);
+            }
         }
-        if self.backend == Backend::Pjrt || self.dispatch_pjrt(&Manifest::combine_name(n)).is_some()
-        {
-            return Ok(self.combine(r_top, r_bot)?.r);
-        }
-        self.host_guard(&entry)?;
-        Ok(crate::linalg::householder_qr(&r_top.vstack(r_bot)).r())
+        let mut out = self.call(KernelOp::CombineR, &[r_top.as_view(), r_bot.as_view()])?;
+        Ok(out.pop().expect("arity 1"))
     }
 
     /// TSQR combine: QR of [r_top; r_bot] (both n×n upper triangular).
     pub fn combine(&self, r_top: &Matrix, r_bot: &Matrix) -> Result<Factorization> {
-        let n = r_top.cols();
-        let entry = Manifest::combine_name(n);
-        if let Some(svc) = self.dispatch_pjrt(&entry) {
-            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-            let mut out = svc.execute(&entry, vec![r_top.clone(), r_bot.clone()])?;
-            let tau = out.pop().expect("arity 3");
-            let packed = out.pop().expect("arity 3");
-            let r = out.pop().expect("arity 3");
-            return Ok(Factorization { r, packed, tau });
-        }
-        self.host_guard(&entry)?;
-        Ok(host_factorization(&r_top.vstack(r_bot)))
+        let mut out = self.call(KernelOp::Combine, &[r_top.as_view(), r_bot.as_view()])?;
+        let tau = out.pop().expect("arity 3");
+        let packed = out.pop().expect("arity 3");
+        let r = out.pop().expect("arity 3");
+        Ok(Factorization { r, packed, tau })
     }
 
     /// Solve R x = b (R upper triangular n×n, b n×k).
     pub fn backsolve(&self, r: &Matrix, b: &Matrix) -> Result<Matrix> {
-        let entry = Manifest::backsolve_name(r.rows(), b.cols());
-        if let Some(svc) = self.dispatch_pjrt(&entry) {
-            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-            let mut out = svc.execute(&entry, vec![r.clone(), b.clone()])?;
-            return Ok(out.pop().expect("arity 1"));
-        }
-        self.host_guard(&entry)?;
-        Ok(crate::linalg::backsolve(r, b))
+        let mut out = self.call(KernelOp::Backsolve, &[r.as_view(), b.as_view()])?;
+        Ok(out.pop().expect("arity 1"))
     }
 
     /// Qᵀ @ b from a packed factorization.
     pub fn apply_qt(&self, f: &Factorization, b: &Matrix) -> Result<Matrix> {
-        let (m, n) = f.packed.shape();
-        let entry = Manifest::apply_qt_name(m, n, b.cols());
-        if let Some(svc) = self.dispatch_pjrt(&entry) {
-            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-            let mut out =
-                svc.execute(&entry, vec![f.packed.clone(), f.tau.clone(), b.clone()])?;
-            return Ok(out.pop().expect("arity 1"));
-        }
-        self.host_guard(&entry)?;
-        Ok(packed_of(f).apply_qt(b))
+        let mut out =
+            self.call(KernelOp::ApplyQt, &[f.packed.as_view(), f.tau.as_view(), b.as_view()])?;
+        Ok(out.pop().expect("arity 1"))
     }
 
     /// Materialize the thin Q of a packed factorization.
     pub fn build_q(&self, f: &Factorization) -> Result<Matrix> {
-        let (m, n) = f.packed.shape();
-        let entry = Manifest::build_q_name(m, n);
-        if let Some(svc) = self.dispatch_pjrt(&entry) {
-            self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-            let mut out = svc.execute(&entry, vec![f.packed.clone(), f.tau.clone()])?;
-            return Ok(out.pop().expect("arity 1"));
-        }
-        self.host_guard(&entry)?;
-        Ok(packed_of(f).q())
-    }
-}
-
-fn packed_of(f: &Factorization) -> PackedQr {
-    PackedQr { packed: f.packed.clone(), tau: f.tau.data().to_vec() }
-}
-
-fn host_factorization(a: &Matrix) -> Factorization {
-    let f = householder_qr(a);
-    let n = a.cols();
-    Factorization {
-        r: f.packed.row_block(0, n).triu(),
-        tau: Matrix::from_vec(n, 1, f.tau.clone()),
-        packed: f.packed,
+        let mut out = self.call(KernelOp::BuildQ, &[f.packed.as_view(), f.tau.as_view()])?;
+        Ok(out.pop().expect("arity 1"))
     }
 }
 
@@ -288,7 +318,13 @@ mod tests {
     #[test]
     fn pjrt_strict_errors_without_artifacts() {
         // Backend::Pjrt with a host-only executor is a config error path.
-        let ex = Executor { service: None, backend: Backend::Pjrt, stats: Arc::default() };
+        let ex = Executor {
+            pjrt: None,
+            host: HostKernel,
+            backend: Backend::Pjrt,
+            stats: Arc::default(),
+            workspaces: Arc::default(),
+        };
         let err = ex.leaf_qr(&Matrix::zeros(8, 4)).unwrap_err();
         assert!(matches!(err, Error::Artifacts(_)));
     }
@@ -299,5 +335,42 @@ mod tests {
         assert_eq!("host".parse::<Backend>().unwrap(), Backend::Host);
         assert_eq!("auto".parse::<Backend>().unwrap(), Backend::Auto);
         assert!("gpu".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn workspace_pool_settles_across_calls() {
+        let ex = Executor::host();
+        let a = Matrix::random(32, 4, 9);
+        ex.leaf_qr(&a).unwrap();
+        let after_first = ex.workspace_stats();
+        for _ in 0..10 {
+            ex.leaf_r(&a).unwrap();
+        }
+        let s = ex.workspace_stats();
+        assert_eq!(s.created, after_first.created, "steady state must not create workspaces");
+        assert_eq!(s.reused, after_first.reused + 10);
+    }
+
+    #[test]
+    fn warm_workspaces_preallocates() {
+        let ex = Executor::host();
+        ex.warm_workspaces(2, 32, 4);
+        let s0 = ex.workspace_stats();
+        assert_eq!(s0.created, 2);
+        ex.leaf_r(&Matrix::random(32, 4, 3)).unwrap();
+        let s1 = ex.workspace_stats();
+        assert_eq!(s1.created, 2, "warmed pool serves the call");
+        assert_eq!(s1.reused, 1);
+    }
+
+    #[test]
+    fn executor_clones_share_the_pool() {
+        let ex = Executor::host();
+        let ex2 = ex.clone();
+        ex.leaf_r(&Matrix::random(16, 4, 1)).unwrap();
+        ex2.leaf_r(&Matrix::random(16, 4, 2)).unwrap();
+        let s = ex.workspace_stats();
+        assert_eq!(s.created, 1, "second call reuses the clone-shared workspace");
+        assert_eq!(s.reused, 1);
     }
 }

@@ -1,0 +1,353 @@
+//! The kernel call convention shared by every compute backend.
+//!
+//! One object-safe trait — [`Kernel`] — replaces the ad-hoc per-op
+//! entry points: a backend receives a [`KernelCall`] (operation tag,
+//! borrowed input [`MatrixView`]s, and a mutable [`Workspace`] for
+//! scratch) and returns the freshly produced output matrices.  The
+//! [`super::Executor`] owns backend selection and a [`WorkspacePool`]
+//! so concurrent simulated ranks reuse scratch arenas instead of
+//! allocating per call.
+//!
+//! Ownership rules (see also `linalg::view`):
+//! * inputs are **borrowed** — a kernel never clones a view except to
+//!   cross a device boundary (the PJRT backend materializes host
+//!   copies because the transfer copies regardless);
+//! * scratch belongs to the **workspace**, which the executor acquires
+//!   from its pool around each call and returns afterwards;
+//! * outputs are **owned** results — the only allocations a host-side
+//!   kernel performs.
+
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::linalg::{Matrix, MatrixView, Workspace, view};
+
+use super::manifest::Manifest;
+use super::service::PjrtService;
+
+/// Which kernel a [`KernelCall`] requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelOp {
+    /// Tall-skinny panel factorization → `[r, packed, tau]`.
+    LeafQr,
+    /// Panel factorization, R only (the exchange hot path) → `[r]`.
+    LeafR,
+    /// QR of the stacked `[r_top; r_bot]` → `[r, packed, tau]`.
+    Combine,
+    /// Stacked combine, R only (the exchange hot path) → `[r]`.
+    CombineR,
+    /// Upper-triangular solve `R x = b` → `[x]`.
+    Backsolve,
+    /// `Qᵀ b` from a packed factorization → `[qtb]`.
+    ApplyQt,
+    /// Materialize the thin Q of a packed factorization → `[q]`.
+    BuildQ,
+}
+
+impl KernelOp {
+    /// The AOT manifest entry this call maps to, derived from the input
+    /// view shapes (one naming scheme for every backend).
+    pub fn entry_name(&self, views: &[MatrixView<'_>]) -> String {
+        match self {
+            KernelOp::LeafQr => Manifest::leaf_qr_name(views[0].rows(), views[0].cols()),
+            KernelOp::LeafR => Manifest::leaf_r_name(views[0].rows(), views[0].cols()),
+            KernelOp::Combine => Manifest::combine_name(views[0].cols()),
+            KernelOp::CombineR => Manifest::combine_r_name(views[0].cols()),
+            KernelOp::Backsolve => Manifest::backsolve_name(views[0].rows(), views[1].cols()),
+            KernelOp::ApplyQt => {
+                Manifest::apply_qt_name(views[0].rows(), views[0].cols(), views[2].cols())
+            }
+            KernelOp::BuildQ => Manifest::build_q_name(views[0].rows(), views[0].cols()),
+        }
+    }
+}
+
+/// One kernel invocation: operation, borrowed inputs, scratch arena.
+pub struct KernelCall<'call> {
+    pub op: KernelOp,
+    pub views: &'call [MatrixView<'call>],
+    pub workspace: &'call mut Workspace,
+}
+
+/// Object-safe backend interface: Host and PJRT implement the same
+/// call convention, so dispatch is one `&dyn Kernel` decision instead
+/// of per-op branching.
+pub trait Kernel: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Whether this backend consumes [`KernelCall::workspace`] for the
+    /// given op — lets the executor skip pool traffic for ops (or
+    /// backends) that use no scratch.
+    fn wants_workspace(&self, op: KernelOp) -> bool;
+    /// Execute the call, returning the output matrices in manifest
+    /// order (e.g. `[r, packed, tau]` for factorizations).
+    fn execute(&self, call: KernelCall<'_>) -> Result<Vec<Matrix>>;
+}
+
+/// Pure-rust backend over the blocked view kernels in `linalg::view`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HostKernel;
+
+impl Kernel for HostKernel {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn wants_workspace(&self, op: KernelOp) -> bool {
+        // Factorizations run through the f64 scratch arena; the
+        // solve/apply kernels work in place on their outputs.
+        matches!(
+            op,
+            KernelOp::LeafQr | KernelOp::LeafR | KernelOp::Combine | KernelOp::CombineR
+        )
+    }
+
+    fn execute(&self, call: KernelCall<'_>) -> Result<Vec<Matrix>> {
+        let v = call.views;
+        let ws = call.workspace;
+        match call.op {
+            KernelOp::LeafQr => {
+                let (m, n) = v[0].shape();
+                let mut packed = Matrix::zeros(m, n);
+                let mut tau = vec![0.0f32; n];
+                view::householder_qr_into(v[0], &mut packed.as_view_mut(), &mut tau, ws);
+                let mut r = Matrix::zeros(n, n);
+                view::triu_into(packed.as_view().rows_range(0, n), &mut r.as_view_mut());
+                Ok(vec![r, packed, Matrix::from_vec(n, 1, tau)])
+            }
+            KernelOp::LeafR => {
+                let n = v[0].cols();
+                let mut r = Matrix::zeros(n, n);
+                view::leaf_r_into(v[0], &mut r.as_view_mut(), ws);
+                Ok(vec![r])
+            }
+            KernelOp::Combine => {
+                let n = v[0].cols();
+                let m = v[0].rows() + v[1].rows();
+                let mut packed = Matrix::zeros(m, n);
+                let mut tau = vec![0.0f32; n];
+                view::combine_qr_into(v[0], v[1], &mut packed.as_view_mut(), &mut tau, ws);
+                let mut r = Matrix::zeros(n, n);
+                view::triu_into(packed.as_view().rows_range(0, n), &mut r.as_view_mut());
+                Ok(vec![r, packed, Matrix::from_vec(n, 1, tau)])
+            }
+            KernelOp::CombineR => {
+                let n = v[0].cols();
+                let mut r = Matrix::zeros(n, n);
+                view::combine_r_into(v[0], v[1], &mut r.as_view_mut(), ws);
+                Ok(vec![r])
+            }
+            KernelOp::Backsolve => {
+                let mut x = Matrix::zeros(v[0].rows(), v[1].cols());
+                view::backsolve_into(v[0], v[1], &mut x.as_view_mut());
+                Ok(vec![x])
+            }
+            KernelOp::ApplyQt => {
+                // views: [packed, tau (n×1), b]
+                let mut out = v[2].to_matrix();
+                view::apply_qt_in_place(v[0], v[1].data(), &mut out.as_view_mut());
+                Ok(vec![out])
+            }
+            KernelOp::BuildQ => {
+                let (m, n) = v[0].shape();
+                let mut out = Matrix::eye(m, n);
+                view::apply_q_in_place(v[0], v[1].data(), &mut out.as_view_mut());
+                Ok(vec![out])
+            }
+        }
+    }
+}
+
+/// PJRT backend adapter: same call convention, executed through the
+/// AOT artifact service.  Views are materialized into owned matrices
+/// at the boundary — the device transfer copies the payload anyway.
+#[derive(Clone)]
+pub struct PjrtKernel {
+    service: PjrtService,
+}
+
+impl PjrtKernel {
+    pub fn new(service: PjrtService) -> Self {
+        Self { service }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.service.manifest()
+    }
+
+    /// Does the manifest carry this entry?
+    pub fn supports(&self, entry: &str) -> bool {
+        self.service.manifest().get(entry).is_some()
+    }
+}
+
+impl Kernel for PjrtKernel {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn wants_workspace(&self, _op: KernelOp) -> bool {
+        false // scratch lives device-side
+    }
+
+    fn execute(&self, call: KernelCall<'_>) -> Result<Vec<Matrix>> {
+        let entry = call.op.entry_name(call.views);
+        let inputs: Vec<Matrix> = call.views.iter().map(|v| v.to_matrix()).collect();
+        self.service.execute(&entry, inputs)
+    }
+}
+
+/// Counters of [`WorkspacePool`] behaviour (all-relaxed atomics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// Workspaces ever created (pool misses + warming).
+    pub created: u64,
+    /// Acquisitions served from the pool — each one is a full scratch
+    /// allocation (O(m·n) f64) that did NOT happen.
+    pub reused: u64,
+}
+
+/// Shared pool of [`Workspace`] arenas, one checked out per in-flight
+/// kernel call.  An [`super::Executor`] (and therefore an engine
+/// session) owns one pool; it is shared across executor clones, so a
+/// campaign's workspaces survive from run to run — the pool settles at
+/// the concurrency high-water mark and stops allocating.
+#[derive(Default)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<Workspace>>,
+    created: AtomicU64,
+    reused: AtomicU64,
+}
+
+impl WorkspacePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check a workspace out (pop, or create on a cold pool).
+    pub fn acquire(&self) -> Workspace {
+        let ws = self.free.lock().unwrap().pop();
+        match ws {
+            Some(ws) => {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                ws
+            }
+            None => {
+                self.created.fetch_add(1, Ordering::Relaxed);
+                Workspace::new()
+            }
+        }
+    }
+
+    /// Return a workspace to the pool (its grown buffers come with it).
+    pub fn release(&self, ws: Workspace) {
+        self.free.lock().unwrap().push(ws);
+    }
+
+    /// Ensure at least `count` pooled workspaces exist, each pre-sized
+    /// for an `rows x cols` factorization (idempotent; called from the
+    /// run setup with shapes precomputed by `tsqr::plan`).
+    pub fn warm(&self, count: usize, rows: usize, cols: usize) {
+        let mut free = self.free.lock().unwrap();
+        while free.len() < count {
+            self.created.fetch_add(1, Ordering::Relaxed);
+            free.push(Workspace::new());
+        }
+        for ws in free.iter_mut() {
+            ws.reserve(rows, cols);
+        }
+    }
+
+    /// Workspaces currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    pub fn stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            created: self.created.load(Ordering::Relaxed),
+            reused: self.reused.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{combine_r, householder_qr};
+
+    fn call<'c>(
+        op: KernelOp,
+        views: &'c [MatrixView<'c>],
+        ws: &'c mut Workspace,
+    ) -> KernelCall<'c> {
+        KernelCall { op, views, workspace: ws }
+    }
+
+    #[test]
+    fn host_kernel_leaf_matches_shim() {
+        let a = Matrix::random(32, 4, 1);
+        let mut ws = Workspace::new();
+        let views = [a.as_view()];
+        let out = HostKernel.execute(call(KernelOp::LeafQr, &views, &mut ws)).unwrap();
+        let f = householder_qr(&a);
+        assert_eq!(out[1], f.packed);
+        assert_eq!(out[0], f.r());
+        assert_eq!(out[2].data(), &f.tau[..]);
+    }
+
+    #[test]
+    fn host_kernel_combine_r_matches_shim() {
+        let top = householder_qr(&Matrix::random(8, 4, 2)).r();
+        let bot = householder_qr(&Matrix::random(8, 4, 3)).r();
+        let mut ws = Workspace::new();
+        let views = [top.as_view(), bot.as_view()];
+        let out = HostKernel.execute(call(KernelOp::CombineR, &views, &mut ws)).unwrap();
+        assert_eq!(out[0], combine_r(&top, &bot));
+    }
+
+    #[test]
+    fn entry_names_follow_manifest_scheme() {
+        let a = Matrix::zeros(32, 4);
+        let b = Matrix::zeros(4, 4);
+        assert_eq!(
+            KernelOp::LeafQr.entry_name(&[a.as_view()]),
+            Manifest::leaf_qr_name(32, 4)
+        );
+        assert_eq!(
+            KernelOp::CombineR.entry_name(&[b.as_view(), b.as_view()]),
+            Manifest::combine_r_name(4)
+        );
+        assert_eq!(
+            KernelOp::Backsolve.entry_name(&[b.as_view(), Matrix::zeros(4, 2).as_view()]),
+            Manifest::backsolve_name(4, 2)
+        );
+    }
+
+    #[test]
+    fn workspace_pool_reuses() {
+        let pool = WorkspacePool::new();
+        let ws = pool.acquire();
+        pool.release(ws);
+        let ws = pool.acquire();
+        pool.release(ws);
+        let s = pool.stats();
+        assert_eq!(s.created, 1);
+        assert_eq!(s.reused, 1);
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn workspace_pool_warm_is_idempotent() {
+        let pool = WorkspacePool::new();
+        pool.warm(3, 64, 8);
+        pool.warm(3, 64, 8);
+        assert_eq!(pool.pooled(), 3);
+        assert_eq!(pool.stats().created, 3);
+        // Warmed workspaces factor without growing.
+        let mut ws = pool.acquire();
+        assert_eq!(ws.f64_scratch(64 * 8 + 8).len(), 64 * 8 + 8);
+        assert_eq!(ws.grows(), 0);
+        pool.release(ws);
+    }
+}

@@ -6,10 +6,12 @@
 //! self-contained.
 
 pub mod executor;
+pub mod kernel;
 pub mod manifest;
 pub mod service;
 
 pub use executor::{Backend, Executor, Factorization};
+pub use kernel::{Kernel, KernelCall, KernelOp, WorkspacePool, WorkspaceStats};
 pub use manifest::Manifest;
 pub use service::PjrtService;
 

@@ -14,6 +14,8 @@
 //! `ctx.maybe_die(round)` — "crashed at the end of step s" in the
 //! paper's step-granular model.
 
+use std::sync::Arc;
+
 use crate::linalg::Matrix;
 use crate::ulfm::{ExitKind, Rank};
 
@@ -22,10 +24,14 @@ use super::trace::Event;
 
 /// How one process left the computation (the wrapper in runner.rs
 /// translates this into world status + trace events).
+///
+/// The final R travels as an `Arc`: the same immutable allocation a
+/// process posted to the board is what it deposits as its result — no
+/// terminal deep copy.
 #[derive(Debug, Clone)]
 pub enum ProcOutcome {
     /// Finished the algorithm holding the final R.
-    FinalR(Matrix),
+    FinalR(Arc<Matrix>),
     /// Finished its role without the final R (baseline sender).
     DoneNoR,
     /// Returned early: a needed peer failed (Alg. 2 line 7).
@@ -72,7 +78,8 @@ pub fn baseline(ctx: Ctx, a: Matrix) -> ProcOutcome {
             continue; // non-pow2 pass-through round
         };
         if ctx.plan.is_sender(rank, round) {
-            // I am a sender: ship R̃ to the buddy, my job is done.
+            // I am a sender: ship R̃ to the buddy (sharing my handle —
+            // the board takes the same Arc), my job is done.
             ctx.world.post(rank, round, r);
             ctx.trace.emit(Event::Send { rank, to: buddy, round });
             return ProcOutcome::DoneNoR;
@@ -114,8 +121,9 @@ pub fn redundant(ctx: Ctx, a: Matrix) -> ProcOutcome {
         let Some(buddy) = ctx.plan.buddy(rank, round) else {
             continue;
         };
-        // sendrecv: post my half first, then await the buddy's.
-        ctx.world.post(rank, round, r.clone());
+        // sendrecv: post my half first (refcount bump, not a copy —
+        // R̃ is immutable once posted), then await the buddy's.
+        ctx.world.post(rank, round, Arc::clone(&r));
         match ctx.world.fetch(buddy, round) {
             Ok(theirs) => {
                 ctx.trace.emit(Event::Exchange { rank, with: buddy, round });
@@ -155,7 +163,7 @@ pub fn replace(ctx: Ctx, a: Matrix) -> ProcOutcome {
         let Some(buddy) = ctx.plan.buddy(rank, round) else {
             continue;
         };
-        ctx.world.post(rank, round, r.clone());
+        ctx.world.post(rank, round, Arc::clone(&r));
         let (partner, theirs) = match ctx.world.fetch(buddy, round) {
             Ok(m) => (buddy, m),
             Err(e) if e.is_rank_failure() => {
@@ -205,7 +213,7 @@ pub fn self_healing(ctx: Ctx, a: Matrix) -> ProcOutcome {
 /// (`spawnNew`, REBUILD semantics) and retries: the replacement
 /// recovers the buddy's state from a replica (Algorithm 5) and posts
 /// for this round, unblocking us.
-pub fn sh_rounds(ctx: Ctx, mut r: Matrix, start_round: u32) -> ProcOutcome {
+pub fn sh_rounds(ctx: Ctx, mut r: Arc<Matrix>, start_round: u32) -> ProcOutcome {
     let rank = ctx.rank;
     for round in start_round..ctx.plan.rounds() {
         if ctx.maybe_die(round).is_err() {
@@ -214,7 +222,7 @@ pub fn sh_rounds(ctx: Ctx, mut r: Matrix, start_round: u32) -> ProcOutcome {
         let Some(buddy) = ctx.plan.buddy(rank, round) else {
             continue;
         };
-        ctx.world.post(rank, round, r.clone());
+        ctx.world.post(rank, round, Arc::clone(&r));
         let theirs = match ctx.world.fetch_peer(buddy, round) {
             crate::ulfm::PeerFetch::Post(m) => m,
             outcome => {
@@ -270,10 +278,12 @@ pub fn sh_recover(ctx: Ctx, round: u32) -> ProcOutcome {
     // candidate can ever produce one: still-recovering replacements
     // hold no data and do not count as sources, which is what keeps two
     // recoveries in the same dead group from waiting on each other.
-    let state: Matrix = match ctx.world.fetch_from_group(&candidates, rank, round) {
+    // The recovered state is shared, not copied: it is bit-identical
+    // to what the dead incarnation held, and immutable either way.
+    let state: Arc<Matrix> = match ctx.world.fetch_from_group(&candidates, rank, round) {
         Ok((q, m)) => {
             ctx.trace.emit(Event::Recovered { rank, from: q, round });
-            (*m).clone()
+            m
         }
         Err(_) => {
             // The paper's bound (2^s − 1) was exceeded for this group.

@@ -14,11 +14,14 @@ use super::plan::TreePlan;
 use super::trace::{Event, TraceSink};
 
 /// Final R factors, keyed by the rank that finished holding one.
-pub type ResultMap = Arc<Mutex<HashMap<Rank, Matrix>>>;
+/// Values are shared handles: depositing is a refcount bump, and
+/// redundant holders of the same allocation cost nothing extra.
+pub type ResultMap = Arc<Mutex<HashMap<Rank, Arc<Matrix>>>>;
 
-/// Hot-path leaf result: just the R̃ the exchanges ship.
+/// Hot-path leaf result: just the R̃ the exchanges ship, already behind
+/// the `Arc` the post board and the result map share.
 pub struct HotLeaf {
-    pub r: Matrix,
+    pub r: Arc<Matrix>,
 }
 
 /// Handle bundle given to every simulated process (cheap to clone; the
@@ -63,11 +66,15 @@ impl Ctx {
     pub fn leaf_qr(&self, a: &Matrix) -> Result<HotLeaf> {
         let r = self.exec.leaf_r(a)?;
         self.trace.emit(Event::LeafQr { rank: self.rank });
-        Ok(HotLeaf { r })
+        Ok(HotLeaf { r: Arc::new(r) })
     }
 
     /// Tree-node combine. `my_group`/`their_group` fix the stack order
     /// so every replica computes a bit-identical result (plan.rs).
+    /// Returns the new R̃ behind a fresh `Arc` — the one allocation a
+    /// round semantically requires (a new immutable value is being
+    /// published; mutating in place would race receivers still reading
+    /// the previous round's post).
     pub fn combine(
         &self,
         round: u32,
@@ -75,18 +82,19 @@ impl Ctx {
         theirs: &Matrix,
         my_group: usize,
         their_group: usize,
-    ) -> Result<Matrix> {
+    ) -> Result<Arc<Matrix>> {
         let r = if self.plan.my_block_on_top(my_group, their_group) {
             self.exec.combine_r(mine, theirs)
         } else {
             self.exec.combine_r(theirs, mine)
         }?;
         self.trace.emit(Event::Combine { rank: self.rank, round });
-        Ok(r)
+        Ok(Arc::new(r))
     }
 
-    /// Record a final R (the process finished the computation).
-    pub fn deposit_result(&self, r: Matrix) {
+    /// Record a final R (the process finished the computation) —
+    /// shares the handle, no copy.
+    pub fn deposit_result(&self, r: Arc<Matrix>) {
         self.results.lock().unwrap().insert(self.rank, r);
     }
 }

@@ -95,6 +95,30 @@ impl TreePlan {
     pub fn my_block_on_top(&self, my_group: usize, their_group: usize) -> bool {
         my_group < their_group
     }
+
+    /// Shape of the leaf factorization a run with `rows_per_proc`-row
+    /// panels of `cols` columns performs.
+    pub fn leaf_shape(&self, rows_per_proc: usize, cols: usize) -> (usize, usize) {
+        (rows_per_proc, cols)
+    }
+
+    /// Shape of every tree-node combine: QR of two stacked n×n
+    /// triangles.
+    pub fn combine_shape(&self, cols: usize) -> (usize, usize) {
+        (2 * cols, cols)
+    }
+
+    /// The scratch high-water mark of one process over a whole run —
+    /// the element-wise max of the leaf and combine shapes.  Workspaces
+    /// warmed to this shape make every kernel call of the run
+    /// allocation-free (see `runtime::WorkspacePool::warm`), which is
+    /// what lets a steady-state campaign run without touching the
+    /// allocator in the kernel path.
+    pub fn workspace_shape(&self, rows_per_proc: usize, cols: usize) -> (usize, usize) {
+        let (lm, ln) = self.leaf_shape(rows_per_proc, cols);
+        let (cm, cn) = self.combine_shape(cols);
+        (lm.max(cm), ln.max(cn))
+    }
 }
 
 #[cfg(test)]
@@ -188,5 +212,16 @@ mod tests {
         let p = TreePlan::new(4);
         assert!(p.my_block_on_top(0, 1));
         assert!(!p.my_block_on_top(1, 0));
+    }
+
+    #[test]
+    fn workspace_shape_covers_leaf_and_combine() {
+        let p = TreePlan::new(8);
+        // Tall leaves dominate.
+        assert_eq!(p.workspace_shape(128, 8), (128, 8));
+        // Squat leaves: the 2n×n combine dominates the row count.
+        assert_eq!(p.workspace_shape(8, 8), (16, 8));
+        assert_eq!(p.combine_shape(4), (8, 4));
+        assert_eq!(p.leaf_shape(32, 4), (32, 4));
     }
 }

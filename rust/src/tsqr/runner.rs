@@ -182,6 +182,14 @@ impl RunSpec {
     pub fn input_matrix(&self) -> Matrix {
         Matrix::random(self.procs * self.rows_per_proc, self.cols, self.seed)
     }
+
+    /// The per-process scratch high-water mark of this run (leaf vs
+    /// combine, precomputed from the tree plan) — what the engine
+    /// warms executor workspaces to before spawning rank bodies.
+    pub fn workspace_shape(&self) -> (usize, usize) {
+        crate::tsqr::plan::TreePlan::new(self.procs.max(1))
+            .workspace_shape(self.rows_per_proc, self.cols)
+    }
 }
 
 /// Outcome of one run.
@@ -233,7 +241,7 @@ impl RunResult {
 pub fn run_process_wrapper(ctx: Ctx, body: impl FnOnce() -> ProcOutcome) -> ProcOutcome {
     let outcome = body();
     if let ProcOutcome::FinalR(r) = &outcome {
-        ctx.deposit_result(r.clone());
+        ctx.deposit_result(Arc::clone(r)); // share the handle, no copy
     }
     if let Some(kind) = outcome.exit_kind() {
         ctx.world.exit(ctx.rank, kind);

@@ -297,10 +297,17 @@ impl World {
 
     /// Send half of the round-`level` exchange: make `rank`'s R̃ for this
     /// round visible to whoever fetches it.
-    pub fn post(&self, rank: Rank, level: u32, payload: Matrix) {
+    ///
+    /// Takes anything convertible into `Arc<Matrix>`: pass an owned
+    /// `Matrix` to publish a fresh value, or `Arc::clone` an existing
+    /// one to share it at refcount cost — the R factors are immutable
+    /// once posted, so the redundant algorithms post the same `Arc`
+    /// every receiver reads (no per-receiver deep copies; the
+    /// communication *metrics* still charge per fetch).
+    pub fn post(&self, rank: Rank, level: u32, payload: impl Into<Arc<Matrix>>) {
         {
             let mut inner = self.inner.lock().unwrap();
-            inner.board.insert((level, rank), Arc::new(payload));
+            inner.board.insert((level, rank), payload.into());
             inner.recovering[rank] = false; // it holds data again
             // Targeted wakeup: whoever awaits THIS post, plus the
             // global condvar for group-fetch/quiescence waiters.
@@ -494,6 +501,20 @@ mod tests {
         assert_eq!(*got, Matrix::eye(2, 2));
         assert_eq!(w.metrics().snapshot().messages, 1);
         assert_eq!(w.metrics().snapshot().bytes, 16);
+    }
+
+    #[test]
+    fn posting_an_arc_shares_not_copies() {
+        // The zero-copy contract: the board stores the SAME allocation
+        // the poster holds, and every fetch hands back another handle
+        // to it.
+        let w = World::new(2);
+        let r = Arc::new(Matrix::random(16, 16, 7));
+        w.post(1, 0, Arc::clone(&r));
+        let got = w.fetch(1, 0).unwrap();
+        assert!(Arc::ptr_eq(&r, &got), "fetch must alias the posted Arc");
+        let again = w.fetch(1, 0).unwrap();
+        assert!(Arc::ptr_eq(&got, &again));
     }
 
     #[test]

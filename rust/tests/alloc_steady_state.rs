@@ -1,0 +1,174 @@
+//! The allocation-counting hook behind the zero-copy acceptance
+//! criterion: steady-state TSQR runs must not heap-allocate in the
+//! kernel scratch path (workspaces) and must not deep-copy exchange
+//! payloads (Arc sharing).
+//!
+//! A counting `#[global_allocator]` wraps the system allocator for
+//! this test binary only.  Everything runs inside ONE `#[test]` so no
+//! concurrent test thread pollutes the counters; the hot-path
+//! assertions additionally retry a few times so that incidental
+//! harness activity (which can only ADD counts) cannot produce a
+//! false failure — a measurement of zero is trustworthy by
+//! construction.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use ft_tsqr::engine::Engine;
+use ft_tsqr::linalg::{Matrix, Workspace, view};
+use ft_tsqr::tsqr::{Algo, RunSpec};
+use ft_tsqr::ulfm::World;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// (calls, bytes) allocated while running `f`.
+fn measured<T>(f: impl FnOnce() -> T) -> (T, u64, u64) {
+    let c0 = ALLOC_CALLS.load(Ordering::SeqCst);
+    let b0 = ALLOC_BYTES.load(Ordering::SeqCst);
+    let out = f();
+    let c1 = ALLOC_CALLS.load(Ordering::SeqCst);
+    let b1 = ALLOC_BYTES.load(Ordering::SeqCst);
+    (out, c1 - c0, b1 - b0)
+}
+
+/// Retry `f` until it reports zero allocations (background noise can
+/// only add counts, so one clean measurement proves the property).
+fn assert_zero_alloc(what: &str, attempts: u32, mut f: impl FnMut()) {
+    let mut last = (0, 0);
+    for _ in 0..attempts {
+        let ((), calls, bytes) = measured(&mut f);
+        if calls == 0 {
+            return;
+        }
+        last = (calls, bytes);
+    }
+    panic!("{what}: allocated on every attempt (last: {} calls, {} bytes)", last.0, last.1);
+}
+
+#[test]
+fn steady_state_performs_no_kernel_or_collective_allocations() {
+    // ---------------------------------------------------------------
+    // 1. Kernel path: a warm workspace makes every view kernel
+    //    allocation-free — leaf QR, R-only leaf, and combine.
+    // ---------------------------------------------------------------
+    let a = Matrix::random(64, 8, 1);
+    let mut packed = Matrix::zeros(64, 8);
+    let mut tau = vec![0.0f32; 8];
+    let mut r_out = Matrix::zeros(8, 8);
+    let mut ws = Workspace::sized_for(64, 8);
+
+    assert_zero_alloc("warm householder_qr_into", 5, || {
+        view::householder_qr_into(a.as_view(), &mut packed.as_view_mut(), &mut tau, &mut ws);
+    });
+    assert_zero_alloc("warm leaf_r_into", 5, || {
+        view::leaf_r_into(a.as_view(), &mut r_out.as_view_mut(), &mut ws);
+    });
+    let top = r_out.clone();
+    let bot = r_out.clone();
+    assert_zero_alloc("warm combine_r_into", 5, || {
+        view::combine_r_into(top.as_view(), bot.as_view(), &mut r_out.as_view_mut(), &mut ws);
+    });
+    let rhs = Matrix::random(8, 2, 2);
+    let mut x = Matrix::zeros(8, 2);
+    assert_zero_alloc("backsolve_into", 5, || {
+        view::backsolve_into(top.as_view(), rhs.as_view(), &mut x.as_view_mut());
+    });
+    assert_eq!(ws.grows(), 0, "pre-sized workspace must never grow");
+
+    // ---------------------------------------------------------------
+    // 2. Collective path: posting an Arc shares the payload — the
+    //    board insert must cost bookkeeping bytes, not a matrix copy.
+    // ---------------------------------------------------------------
+    let world = World::new(4);
+    let payload = Arc::new(Matrix::random(128, 128, 3)); // 64 KiB payload
+    let payload_bytes = payload.size_bytes() as u64;
+    for level in 0..8 {
+        world.post(0, level, Arc::clone(&payload)); // warm the board map
+    }
+    let (_, _, bytes) = measured(|| {
+        world.post(1, 0, Arc::clone(&payload));
+        world.post(2, 0, Arc::clone(&payload));
+        world.post(3, 0, Arc::clone(&payload));
+    });
+    assert!(
+        bytes < payload_bytes / 2,
+        "Arc posts must not copy the payload: {bytes} bytes allocated for 3 posts of \
+         {payload_bytes}-byte matrices"
+    );
+    let fetched = world.fetch(1, 0).unwrap();
+    assert!(Arc::ptr_eq(&fetched, &payload), "fetch aliases the shared allocation");
+
+    // ---------------------------------------------------------------
+    // 3. Whole-run steady state on a session engine: the workspace
+    //    pool freezes after the first run, and per-run allocation does
+    //    not trend upward across a campaign.
+    // ---------------------------------------------------------------
+    let engine = Engine::host();
+    let spec = |seed: u64| {
+        RunSpec::new(Algo::Redundant, 4, 16, 4).with_seed(seed).with_verify(false)
+    };
+    for seed in 0..3 {
+        assert!(engine.run(spec(seed)).unwrap().success()); // warm-up
+    }
+    let created_after_warmup = engine.executor().workspace_stats().created;
+
+    let (_, _, early_bytes) = measured(|| {
+        for seed in 3..6 {
+            assert!(engine.run(spec(seed)).unwrap().success());
+        }
+    });
+    let (_, _, late_bytes) = measured(|| {
+        for seed in 6..9 {
+            assert!(engine.run(spec(seed)).unwrap().success());
+        }
+    });
+    let stats = engine.executor().workspace_stats();
+    assert_eq!(
+        stats.created, created_after_warmup,
+        "workspace pool must freeze after warm-up (created grew)"
+    );
+    assert!(stats.reused > 0, "steady-state kernel calls must reuse pooled workspaces");
+    // No upward trend (2x headroom for scheduler-dependent wakeups),
+    // and absolutely bounded: a scratch-per-call regression on this
+    // workload would cost ~44 KiB/run in f64 arenas alone.
+    assert!(
+        late_bytes <= early_bytes.max(1) * 2,
+        "per-run allocations trend upward: early {early_bytes} vs late {late_bytes}"
+    );
+    assert!(
+        late_bytes / 3 < 256 * 1024,
+        "steady-state run allocates suspiciously much: {} bytes/run",
+        late_bytes / 3
+    );
+}

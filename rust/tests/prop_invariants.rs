@@ -13,7 +13,9 @@ use std::collections::HashMap;
 
 use ft_tsqr::analysis::robustness::survives_failure_set;
 use ft_tsqr::fault::KillSchedule;
-use ft_tsqr::linalg::{Matrix, householder_qr, qr_r};
+use ft_tsqr::linalg::{
+    Matrix, Workspace, householder_qr, householder_qr_reference, qr_r, view,
+};
 use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan, run};
 use ft_tsqr::ulfm::Rank;
 use ft_tsqr::util::Rng;
@@ -152,6 +154,76 @@ fn plan_invariants_random_worlds() {
             }
         }
     }
+}
+
+/// The zero-copy refactor's core contract: the blocked, view-based,
+/// workspace-fed QR kernel produces the SAME BITS as the classic
+/// unblocked oracle on the `[packed, tau]` layout — across random
+/// tall-skinny shapes, including the m == n and single-column edge
+/// cases and shapes straddling the panel boundary.  (Bit equality is
+/// what keeps redundant replicas bit-identical, the invariant every
+/// algorithm in the paper rests on.)
+#[test]
+fn blocked_view_qr_bitwise_matches_unblocked_oracle() {
+    let mut rng = Rng::new(0xB10C);
+    let mut ws = Workspace::new();
+    let mut shapes: Vec<(usize, usize)> = Vec::new();
+    for _ in 0..60 {
+        let n = 1 + rng.below(40); // crosses the 32-column panel width
+        let m = n + rng.below(60);
+        shapes.push((m, n));
+    }
+    // Forced edge cases: square panels and single columns.
+    shapes.push((1, 1));
+    shapes.push((7, 7));
+    shapes.push((33, 33));
+    shapes.push((40, 1));
+    for (m, n) in shapes {
+        let a = Matrix::random(m, n, rng.next_u64());
+        let oracle = householder_qr_reference(&a);
+        let blocked = householder_qr(&a); // shim over the view kernel
+        let mut packed = Matrix::zeros(m, n);
+        let mut tau = vec![0.0f32; n];
+        view::householder_qr_into(a.as_view(), &mut packed.as_view_mut(), &mut tau, &mut ws);
+        for (idx, (x, y)) in packed.data().iter().zip(oracle.packed.data()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "packed[{idx}] differs at {m}x{n}: {x} vs {y}"
+            );
+        }
+        for (j, (x, y)) in tau.iter().zip(&oracle.tau).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "tau[{j}] differs at {m}x{n}");
+        }
+        assert_eq!(blocked.packed, oracle.packed, "shim packed differs at {m}x{n}");
+        assert_eq!(blocked.tau, oracle.tau, "shim tau differs at {m}x{n}");
+    }
+}
+
+/// Same bitwise contract for the combine kernel: stacking two
+/// triangles in workspace scratch must equal the `vstack`-then-QR
+/// oracle, and a warm workspace must never grow (the zero-allocation
+/// steady state).
+#[test]
+fn blocked_combine_bitwise_matches_vstack_oracle() {
+    let mut rng = Rng::new(0xC0B1);
+    // Pre-sized for the largest combine drawn below (n <= 16 ⇒ stack
+    // is at most 32x16): with the arena warmed, the whole sweep must
+    // run without a single workspace growth — the zero-allocation
+    // steady state every campaign run settles into.
+    let mut ws = Workspace::sized_for(32, 16);
+    for _ in 0..40 {
+        let n = 1 + rng.below(16);
+        let top = qr_r(&Matrix::random(n + rng.below(20), n, rng.next_u64()));
+        let bot = qr_r(&Matrix::random(n + rng.below(20), n, rng.next_u64()));
+        let oracle = householder_qr_reference(&top.vstack(&bot)).r();
+        let mut out = Matrix::zeros(n, n);
+        view::combine_r_into(top.as_view(), bot.as_view(), &mut out.as_view_mut(), &mut ws);
+        for (idx, (x, y)) in out.data().iter().zip(oracle.data()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "combine[{idx}] differs at n={n}");
+        }
+    }
+    assert_eq!(ws.grows(), 0, "pre-sized workspace must never grow");
 }
 
 /// Host QR oracle invariants on random matrices (the rust analogue of
