@@ -1,0 +1,120 @@
+//! BENCH TAB-C1: general-matrix fault-tolerant CAQR throughput — what
+//! the replicated trailing updates cost, and what a mid-update failure
+//! costs to ride through.
+//!
+//!   cargo bench --bench caqr_throughput
+//!
+//! Three measurements on one engine session:
+//!   * fault-free CAQR runs/sec at a few shapes (the steady state);
+//!   * faulted runs/sec (one update-stage death per run, recovered
+//!     from the replica) — the fault-tolerance overhead is the gap;
+//!   * the `ApplyUpdate` kernel in isolation (µs/call via the pooled
+//!     f32 path), the building block PJRT would accelerate.
+//!
+//! Emits `target/reports/BENCH_caqr.json` next to `BENCH_engine.json`
+//! so CI tracks the general-matrix workload from this PR onward.
+
+use std::time::Instant;
+
+use ft_tsqr::caqr::CaqrSpec;
+use ft_tsqr::engine::Engine;
+use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage};
+use ft_tsqr::linalg::Matrix;
+use ft_tsqr::report::bench::{bench, fmt_duration, iters};
+use ft_tsqr::report::{REPORT_DIR, Table};
+use ft_tsqr::tsqr::Algo;
+
+fn main() {
+    let quick = ft_tsqr::report::bench::quick();
+    let runs: u64 = if quick { 20 } else { 200 };
+    let engine = Engine::host();
+
+    let mut table = Table::new(
+        format!("TAB-C1: CAQR throughput — {runs}-run campaigns, 4 procs, panel 8"),
+        &["workload", "matrix", "total wall", "runs/s", "recoveries"],
+    );
+
+    let shape = |m: usize, n: usize, seed: u64| {
+        CaqrSpec::new(Algo::SelfHealing, 4, m, n, 8).with_seed(seed).with_verify(false)
+    };
+
+    // ------------------------------------------------- fault-free
+    let t0 = Instant::now();
+    let report = engine.caqr_campaign((0..runs).map(|s| shape(96, 48, s))).run().expect("caqr");
+    let clean_wall = t0.elapsed();
+    let clean_rps = runs as f64 / clean_wall.as_secs_f64();
+    assert_eq!(report.successes(), runs);
+    table.row(vec![
+        "fault-free".into(),
+        "96x48".into(),
+        fmt_duration(clean_wall),
+        format!("{clean_rps:.1}"),
+        report.metrics().update_recoveries.to_string(),
+    ]);
+
+    // ------------------------------------------------- one death/run
+    let t0 = Instant::now();
+    let report = engine
+        .caqr_campaign((0..runs).map(|s| {
+            shape(96, 48, runs + s)
+                .with_schedule(CaqrKillSchedule::at(&[(1, (s % 6) as usize, CaqrStage::Update)]))
+        }))
+        .run()
+        .expect("caqr faulted");
+    let faulted_wall = t0.elapsed();
+    let faulted_rps = runs as f64 / faulted_wall.as_secs_f64();
+    assert_eq!(report.successes(), runs, "every single failure must be recovered");
+    let recoveries = report.metrics().update_recoveries;
+    assert!(recoveries > 0);
+    table.row(vec![
+        "1 update death/run".into(),
+        "96x48".into(),
+        fmt_duration(faulted_wall),
+        format!("{faulted_rps:.1}"),
+        recoveries.to_string(),
+    ]);
+
+    // ------------------------------------------------- wider matrix
+    let t0 = Instant::now();
+    let wide_runs = runs / 2;
+    let report = engine
+        .caqr_campaign((0..wide_runs.max(1)).map(|s| shape(128, 128, s)))
+        .concurrency(4)
+        .run()
+        .expect("caqr wide");
+    let wide_wall = t0.elapsed();
+    assert_eq!(report.successes(), wide_runs.max(1));
+    table.row(vec![
+        "square, w=4".into(),
+        "128x128".into(),
+        fmt_duration(wide_wall),
+        format!("{:.1}", wide_runs.max(1) as f64 / wide_wall.as_secs_f64()),
+        report.metrics().update_recoveries.to_string(),
+    ]);
+
+    print!("{}", table.render());
+    table.save_csv(REPORT_DIR).expect("csv");
+
+    // ------------------------------------------------- kernel in isolation
+    let exec = engine.executor();
+    let a = Matrix::random(128, 8, 1);
+    let f = exec.leaf_qr(&a).expect("leaf");
+    let block = Matrix::random(128, 8, 2);
+    let sample = bench(3, iters(300, 30), || {
+        std::hint::black_box(exec.apply_update(&f, &block).expect("apply_update"));
+    });
+    println!("\napply_update 128x8 on an 8-col block: median {}", sample.fmt_median());
+
+    let json = format!(
+        "{{\n  \"bench\": \"caqr_throughput\",\n  \"runs\": {runs},\n  \"quick\": {quick},\n  \
+         \"clean_runs_per_sec\": {clean_rps:.2},\n  \"faulted_runs_per_sec\": {faulted_rps:.2},\n  \
+         \"fault_overhead_pct\": {:.2},\n  \"update_recoveries\": {recoveries},\n  \
+         \"apply_update_median_us\": {:.2}\n}}\n",
+        (clean_rps / faulted_rps - 1.0) * 100.0,
+        sample.median_us(),
+    );
+    std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
+    let json_path = format!("{REPORT_DIR}/BENCH_caqr.json");
+    std::fs::write(&json_path, json).expect("write BENCH_caqr.json");
+    println!("wrote {json_path}");
+}

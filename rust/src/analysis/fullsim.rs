@@ -8,9 +8,10 @@
 //! robustness benches and the `repro sweep --full` CLI use.  Both
 //! report the same [`SurvivalEstimate`] type so tables mix freely.
 
+use crate::caqr::CaqrSpec;
 use crate::engine::Engine;
 use crate::error::Result;
-use crate::fault::KillSchedule;
+use crate::fault::{CaqrKillSchedule, KillSchedule};
 use crate::tsqr::{Algo, RunSpec, TreePlan};
 
 use super::survival::SurvivalEstimate;
@@ -18,11 +19,17 @@ use super::survival::SurvivalEstimate;
 /// Parameterized full-stack Monte-Carlo sweep over a shared engine.
 pub struct FullSimSweep<'e> {
     engine: &'e Engine,
+    /// Algorithm under test.
     pub algo: Algo,
+    /// World size.
     pub procs: usize,
+    /// Leaf panel rows per process.
     pub rows_per_proc: usize,
+    /// Matrix columns.
     pub cols: usize,
+    /// Monte-Carlo samples per cell.
     pub samples: u64,
+    /// Base seed of the sample stream.
     pub seed: u64,
     concurrency: usize,
 }
@@ -43,17 +50,20 @@ impl<'e> FullSimSweep<'e> {
         }
     }
 
+    /// Replace the per-cell sample count.
     pub fn with_samples(mut self, samples: u64) -> Self {
         self.samples = samples;
         self
     }
 
+    /// Replace the leaf shape.
     pub fn with_shape(mut self, rows_per_proc: usize, cols: usize) -> Self {
         self.rows_per_proc = rows_per_proc;
         self.cols = cols;
         self
     }
 
+    /// Replace the base seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -110,6 +120,96 @@ impl<'e> FullSimSweep<'e> {
     }
 }
 
+/// Full-stack Monte-Carlo sweep for the CAQR subsystem, batched
+/// through engine campaigns — the general-matrix counterpart of
+/// [`FullSimSweep`], parameterized over *panel counts*: more panels
+/// mean more replicated update stages, so survival under a fixed
+/// number of per-run failures is a function of the panel count (one
+/// lost replica pair anywhere kills the run under Redundant
+/// semantics; Self-Healing resets capacity at every boundary).
+pub struct CaqrSweep<'e> {
+    engine: &'e Engine,
+    /// Failure semantics (`Redundant` or `SelfHealing`).
+    pub algo: Algo,
+    /// World size.
+    pub procs: usize,
+    /// Block-column width (the matrix is `procs·panel` rows by
+    /// `panels·panel` columns, kept tall for every sampled cell).
+    pub panel: usize,
+    /// Monte-Carlo samples per cell.
+    pub samples: u64,
+    /// Base seed of the sample stream.
+    pub seed: u64,
+    concurrency: usize,
+}
+
+impl<'e> CaqrSweep<'e> {
+    /// Defaults: 4-column panels, 40 samples per cell.
+    pub fn new(engine: &'e Engine, algo: Algo, procs: usize) -> Self {
+        Self { engine, algo, procs, panel: 4, samples: 40, seed: 0xCA08, concurrency: 1 }
+    }
+
+    /// Replace the per-cell sample count.
+    pub fn with_samples(mut self, samples: u64) -> Self {
+        self.samples = samples;
+        self
+    }
+
+    /// Replace the block-column width.
+    pub fn with_panel(mut self, panel: usize) -> Self {
+        self.panel = panel.max(1);
+        self
+    }
+
+    /// Replace the base seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Pipeline this many runs concurrently through the engine.
+    pub fn with_concurrency(mut self, window: usize) -> Self {
+        self.concurrency = window.max(1);
+        self
+    }
+
+    /// P(factorization completes | exactly `f` distinct ranks die
+    /// during uniformly random panels' update stages), measured on the
+    /// full CAQR stack with `panels` block columns.
+    pub fn at_panels(&self, panels: usize, f: usize) -> Result<SurvivalEstimate> {
+        let panels = panels.max(1);
+        let n = panels * self.panel;
+        let m = n.max(self.procs * self.panel);
+        let base = self.seed ^ ((panels as u64) << 32) ^ ((f as u64) << 48);
+        let specs: Vec<CaqrSpec> = (0..self.samples)
+            .map(|i| {
+                CaqrSpec::new(self.algo, self.procs, m, n, self.panel)
+                    .with_seed(self.seed)
+                    .with_verify(false)
+                    .with_schedule(CaqrKillSchedule::random_updates(
+                        self.procs,
+                        panels,
+                        f,
+                        base.wrapping_add(i),
+                    ))
+            })
+            .collect();
+        let report = self.engine.caqr_campaign(specs).concurrency(self.concurrency).run()?;
+        Ok(report.survival())
+    }
+
+    /// The survival curve over a list of panel counts at fixed `f` —
+    /// the `FullSimSweep`-over-panel-counts mode `repro caqr --sweep`
+    /// prints.
+    pub fn over_panel_counts(
+        &self,
+        panel_counts: &[usize],
+        f: usize,
+    ) -> Result<Vec<(usize, SurvivalEstimate)>> {
+        panel_counts.iter().map(|&p| Ok((p, self.at_panels(p, f)?))).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +236,40 @@ mod tests {
             .at_round(2, 3)
             .unwrap();
         assert_eq!(a.successes, b.successes, "same seeds, same outcome");
+    }
+
+    #[test]
+    fn caqr_sweep_single_failure_is_certain() {
+        // f = 1 = replication - 1: every single-failure pattern is
+        // recoverable from the surviving replica, at any panel count.
+        let engine = Engine::host();
+        let sweep = CaqrSweep::new(&engine, Algo::Redundant, 4).with_samples(8);
+        for panels in [1usize, 3] {
+            let est = sweep.at_panels(panels, 1).unwrap();
+            assert_eq!(est.trials, 8);
+            assert_eq!(est.probability(), 1.0, "panels={panels}");
+        }
+    }
+
+    #[test]
+    fn caqr_sweep_deterministic_in_seed_and_concurrency() {
+        let engine = Engine::host();
+        let a = CaqrSweep::new(&engine, Algo::SelfHealing, 4)
+            .with_samples(6)
+            .at_panels(2, 2)
+            .unwrap();
+        let b = CaqrSweep::new(&engine, Algo::SelfHealing, 4)
+            .with_samples(6)
+            .with_concurrency(3)
+            .at_panels(2, 2)
+            .unwrap();
+        assert_eq!(a.successes, b.successes);
+        let curve = CaqrSweep::new(&engine, Algo::Redundant, 4)
+            .with_samples(4)
+            .over_panel_counts(&[1, 2], 1)
+            .unwrap();
+        assert_eq!(curve.len(), 2);
+        assert_eq!(curve[0].0, 1);
     }
 
     #[test]

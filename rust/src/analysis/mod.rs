@@ -8,7 +8,7 @@ pub mod robustness;
 pub mod survival;
 
 pub use closed_form::{survival_curve, survival_exact_f_at_round};
-pub use fullsim::FullSimSweep;
+pub use fullsim::{CaqrSweep, FullSimSweep};
 pub use robustness::{
     max_tolerated_by_step, redundancy_copies, self_healing_total_tolerated,
     survives_failure_set,

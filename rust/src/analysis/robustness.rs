@@ -35,15 +35,20 @@ pub fn self_healing_total_tolerated(rounds: u32) -> u64 {
 /// Per-rank liveness in the analytic simulation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AState {
+    /// Still in the computation (ends holding the final R).
     Active,
+    /// Crashed by the failure pattern.
     Dead,
+    /// Returned early (peer failed / no replica).
     GaveUp,
+    /// Finished its role without the final R (baseline sender).
     DoneNoR,
 }
 
 /// Prediction for one failure pattern.
 #[derive(Debug, Clone)]
 pub struct AnalyticOutcome {
+    /// Final per-rank states.
     pub states: Vec<AState>,
     /// Ranks predicted to end holding the final R.
     pub holders: Vec<Rank>,

@@ -13,11 +13,14 @@ use super::robustness::survives_failure_set;
 /// One survival estimate.
 #[derive(Debug, Clone, Copy)]
 pub struct SurvivalEstimate {
+    /// Samples drawn.
     pub trials: u64,
+    /// Samples that survived.
     pub successes: u64,
 }
 
 impl SurvivalEstimate {
+    /// Point estimate `successes / trials` (0 on zero trials).
     pub fn probability(&self) -> f64 {
         if self.trials == 0 {
             return 0.0;
@@ -35,22 +38,29 @@ impl SurvivalEstimate {
 /// Parameterized Monte-Carlo sweep.
 #[derive(Debug, Clone, Copy)]
 pub struct SurvivalSweep {
+    /// Algorithm under test.
     pub algo: Algo,
+    /// World size.
     pub procs: usize,
+    /// Samples per cell.
     pub trials: u64,
+    /// Base seed of the sample stream.
     pub seed: u64,
 }
 
 impl SurvivalSweep {
+    /// A sweep with 2000 trials per cell.
     pub fn new(algo: Algo, procs: usize) -> Self {
         Self { algo, procs, trials: 2000, seed: 0xC0711 }
     }
 
+    /// Replace the per-cell trial count.
     pub fn with_trials(mut self, t: u64) -> Self {
         self.trials = t;
         self
     }
 
+    /// Replace the base seed.
     pub fn with_seed(mut self, s: u64) -> Self {
         self.seed = s;
         self

@@ -1,0 +1,224 @@
+//! Batched CAQR execution: run many [`CaqrSpec`]s through one engine
+//! and aggregate survival + recovery statistics — the CAQR counterpart
+//! of [`crate::engine::Campaign`], shaped for the Monte-Carlo sweeps
+//! over panel counts in [`crate::analysis::fullsim`].
+
+use std::time::{Duration, Instant};
+
+use crate::analysis::SurvivalEstimate;
+use crate::engine::{CaqrJobHandle, Engine};
+use crate::error::Result;
+use crate::tsqr::Algo;
+use crate::ulfm::MetricsSnapshot;
+
+use super::{CaqrResult, CaqrSpec};
+
+/// Compact per-run outcome kept for every campaign member (full
+/// [`CaqrResult`]s — packed factors included — are not retained).
+#[derive(Debug, Clone)]
+pub struct CaqrRecord {
+    /// Position in the campaign's spec list.
+    pub index: usize,
+    /// The spec's input-matrix seed.
+    pub seed: u64,
+    /// Failure semantics the run used.
+    pub algo: Algo,
+    /// World size.
+    pub procs: usize,
+    /// Did the factorization complete?
+    pub success: bool,
+    /// Panels fully completed before the run ended.
+    pub panels_completed: u64,
+    /// Ranks dead at the end of the run.
+    pub dead: usize,
+    /// `None` when verification was skipped.
+    pub verified_ok: Option<bool>,
+    /// Task/recovery counters.
+    pub metrics: MetricsSnapshot,
+    /// Wall clock of the run.
+    pub wall: Duration,
+}
+
+impl CaqrRecord {
+    fn from_result(index: usize, seed: u64, res: &CaqrResult) -> Self {
+        Self {
+            index,
+            seed,
+            algo: res.algo,
+            procs: res.procs,
+            success: res.success(),
+            panels_completed: res.metrics.panels_completed,
+            dead: res.dead_count(),
+            verified_ok: res.verification.as_ref().map(|v| v.ok),
+            metrics: res.metrics,
+            wall: res.wall,
+        }
+    }
+}
+
+/// A batch of CAQR runs bound to an engine.  Built by
+/// [`Engine::caqr_campaign`]; consumed by [`CaqrCampaign::run`].
+pub struct CaqrCampaign<'e> {
+    engine: &'e Engine,
+    specs: Vec<CaqrSpec>,
+    concurrency: usize,
+}
+
+impl<'e> CaqrCampaign<'e> {
+    pub(crate) fn new(engine: &'e Engine, specs: Vec<CaqrSpec>) -> Self {
+        Self { engine, specs, concurrency: 1 }
+    }
+
+    /// Number of runs pipelined concurrently (default 1: sequential).
+    pub fn concurrency(mut self, window: usize) -> Self {
+        self.concurrency = window.max(1);
+        self
+    }
+
+    /// Runs in the campaign.
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// True when the campaign holds no specs.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Execute every spec and aggregate.  Validation is eager: any
+    /// invalid spec fails the campaign before the first run starts.
+    /// (Orchestration — sequential vs sliding window — is shared with
+    /// the TSQR campaign: `engine::campaign::drive`.)
+    pub fn run(self) -> Result<CaqrCampaignReport> {
+        for spec in &self.specs {
+            spec.validate()?;
+        }
+        let started = Instant::now();
+        let seeds: Vec<u64> = self.specs.iter().map(|s| s.seed).collect();
+        let mut records: Vec<CaqrRecord> = Vec::with_capacity(self.specs.len());
+
+        let engine = self.engine;
+        crate::engine::drive(
+            self.specs,
+            self.concurrency,
+            |spec| engine.run_caqr(spec),
+            |spec| engine.submit_caqr(spec),
+            CaqrJobHandle::wait,
+            |index, res| records.push(CaqrRecord::from_result(index, seeds[index], &res)),
+        )?;
+
+        Ok(CaqrCampaignReport { records, total_wall: started.elapsed() })
+    }
+}
+
+/// Aggregated outcome of one CAQR campaign.
+#[derive(Debug)]
+pub struct CaqrCampaignReport {
+    /// One record per run, in spec order.
+    pub records: Vec<CaqrRecord>,
+    /// Wall clock of the whole campaign.
+    pub total_wall: Duration,
+}
+
+impl CaqrCampaignReport {
+    /// Runs executed.
+    pub fn runs(&self) -> u64 {
+        self.records.len() as u64
+    }
+
+    /// Runs whose factorization completed.
+    pub fn successes(&self) -> u64 {
+        self.records.iter().filter(|r| r.success).count() as u64
+    }
+
+    /// Survival statistics over the campaign (probability + 95% CI).
+    pub fn survival(&self) -> SurvivalEstimate {
+        SurvivalEstimate { trials: self.runs(), successes: self.successes() }
+    }
+
+    /// Counters summed over every run.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut total = MetricsSnapshot::default();
+        for r in &self.records {
+            total.merge(&r.metrics);
+        }
+        total
+    }
+
+    /// Completed runs per second of campaign wall clock.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.total_wall.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.runs() as f64 / secs
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let est = self.survival();
+        let m = self.metrics();
+        format!(
+            "caqr runs={} successes={} rate={:.3}±{:.3} panels={} update_tasks={} \
+             recoveries={} respawns={} throughput={:.1}/s",
+            self.runs(),
+            self.successes(),
+            est.probability(),
+            est.ci95(),
+            m.panels_completed,
+            m.update_tasks,
+            m.update_recoveries,
+            m.respawns,
+            self.throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::CaqrKillSchedule;
+
+    fn small(seed: u64) -> CaqrSpec {
+        CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4).with_seed(seed)
+    }
+
+    #[test]
+    fn sequential_campaign_aggregates() {
+        let engine = Engine::host();
+        let report = engine.caqr_campaign((0..4).map(small)).run().unwrap();
+        assert_eq!(report.runs(), 4);
+        assert_eq!(report.successes(), 4);
+        assert!((report.survival().probability() - 1.0).abs() < 1e-12);
+        assert_eq!(report.metrics().panels_completed, 8, "2 panels x 4 runs");
+        assert!(report.metrics().update_tasks > 0);
+        assert!(report.summary().contains("caqr runs=4"), "{}", report.summary());
+    }
+
+    #[test]
+    fn concurrent_campaign_matches_sequential() {
+        let engine = Engine::host();
+        let specs = || {
+            (0..6u64).map(|s| {
+                small(s)
+                    .with_verify(false)
+                    .with_schedule(CaqrKillSchedule::random_updates(4, 2, 1, s))
+            })
+        };
+        let seq = engine.caqr_campaign(specs()).run().unwrap();
+        let conc = engine.caqr_campaign(specs()).concurrency(3).run().unwrap();
+        let key = |r: &CaqrRecord| {
+            (r.index, r.seed, r.success, r.dead, r.metrics.update_recoveries)
+        };
+        let a: Vec<_> = seq.records.iter().map(key).collect();
+        let b: Vec<_> = conc.records.iter().map(key).collect();
+        assert_eq!(a, b, "concurrency must not change per-run outcomes");
+    }
+
+    #[test]
+    fn invalid_spec_fails_eagerly() {
+        let engine = Engine::host();
+        let specs = vec![small(1), CaqrSpec::new(Algo::Baseline, 4, 16, 8, 4)];
+        assert!(engine.caqr_campaign(specs).run().is_err());
+    }
+}

@@ -1,0 +1,353 @@
+//! One CAQR factorization over the engine's worker pool.
+//!
+//! The coordinator walks the [`PanelPlan`] panel by panel.  Per panel:
+//!
+//! 1. **Factor stage** — fire the `(rank, k, Factor)` kills, then
+//!    spawn one factor task per *live* member of the panel's replica
+//!    pair.  Every replica factors its own copy of the identical f64
+//!    snapshot with identical arithmetic, so the copies are
+//!    bit-identical (debug builds assert it); the harvest takes the
+//!    lowest-ranked survivor's copy.
+//! 2. **Update stage** — fire the `(rank, k, Update)` kills, then
+//!    spawn the replicated trailing-update tasks (owner + buddy per
+//!    block).  A kill between spawn and harvest models the paper's
+//!    "process dies mid-update": the dead rank's results are
+//!    discarded, and each of its blocks is harvested from the
+//!    surviving replica instead — a *recovery*, counted in the
+//!    metrics.  If both members of a pair are dead the block has no
+//!    surviving copy and the run fails (`replication − 1` exceeded).
+//! 3. **Panel boundary** — Self-Healing respawns the dead (REBUILD),
+//!    restoring capacity for the next panel; Redundant lets the world
+//!    shrink.
+//!
+//! All inter-task data is `Arc`-shared f64 (never rounded through
+//! f32), which is what keeps the fault-tolerant path bit-identical to
+//! the failure-free oracle.
+//!
+//! [`PanelPlan`]: crate::tsqr::PanelPlan
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::engine::{TaskGroup, WorkerPool};
+use crate::error::Result;
+use crate::fault::CaqrStage;
+use crate::linalg::view::{apply_update_f64, factor_panel_f64};
+use crate::linalg::{Matrix, PackedQr};
+use crate::tsqr::{Algo, verify};
+use crate::ulfm::{MetricsSnapshot, ProcStatus};
+
+use super::{CaqrResult, CaqrSpec, PanelSurvival};
+
+/// Execute one validated spec end to end on pooled workers.
+pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> {
+    spec.validate()?;
+    let plan = spec.plan();
+    let (m, n) = (spec.m, spec.n);
+    let a = spec.input_matrix();
+    let started = Instant::now();
+
+    // The factorization state, f64 end to end (one terminal rounding).
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut tau = vec![0.0f64; n];
+    let mut alive = vec![true; spec.procs];
+    let mut died_at: Vec<Option<usize>> = vec![None; spec.procs];
+    let mut metrics = MetricsSnapshot::default();
+    let mut panel_survival: Vec<PanelSurvival> = Vec::with_capacity(plan.panels());
+    let mut failed_at: Option<(usize, CaqrStage)> = None;
+
+    'panels: for k in 0..plan.panels() {
+        let (c0, c1) = plan.col_range(k);
+        let rows = m - c0;
+        let cols = c1 - c0;
+
+        // ---------------------------------------------- factor stage
+        for r in 0..spec.procs {
+            if alive[r] && spec.schedule.fire(r, k, CaqrStage::Factor) {
+                alive[r] = false;
+                died_at[r] = Some(k);
+            }
+        }
+        let replicas: Vec<usize> =
+            plan.factor_replicas(k).into_iter().filter(|&r| alive[r]).collect();
+        if replicas.is_empty() {
+            failed_at = Some((k, CaqrStage::Factor));
+            break 'panels;
+        }
+        // One immutable snapshot of the panel region (rows c0.., cols
+        // c0..c1); every replica factors its own working copy of it.
+        let mut snap = vec![0.0f64; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                snap[i * cols + j] = w[(c0 + i) * n + (c0 + j)];
+            }
+        }
+        let snap = Arc::new(snap);
+        type FactorMap = BTreeMap<usize, (Vec<f64>, Vec<f64>)>;
+        let factor_results: Arc<Mutex<FactorMap>> = Arc::new(Mutex::new(BTreeMap::new()));
+        let tasks = TaskGroup::new(pool.clone());
+        for &rank in &replicas {
+            let snap = Arc::clone(&snap);
+            let out = Arc::clone(&factor_results);
+            tasks.spawn(move || {
+                let mut wbuf = (*snap).clone();
+                let mut t = vec![0.0f64; cols];
+                factor_panel_f64(&mut wbuf, rows, cols, &mut t);
+                out.lock().unwrap().insert(rank, (wbuf, t));
+            });
+        }
+        tasks.wait_idle();
+        let owner = plan.factor_owner(k);
+        let factor_recovered = !alive[owner];
+        let (panel_buf, panel_tau) = {
+            let mut fr = factor_results.lock().unwrap();
+            #[cfg(debug_assertions)]
+            {
+                // The redundancy invariant: replicas are bit-identical.
+                let mut vals = fr.values();
+                if let Some((w0, t0)) = vals.next() {
+                    for (wi, ti) in vals {
+                        debug_assert!(
+                            w0.iter().zip(wi).all(|(a, b)| a.to_bits() == b.to_bits())
+                                && t0.iter().zip(ti).all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "panel {k}: factor replicas diverged"
+                        );
+                    }
+                }
+            }
+            let chosen = *fr.keys().next().expect("at least one live replica deposited");
+            fr.remove(&chosen).expect("just looked it up")
+        };
+        let panel_shared = Arc::new((panel_buf, panel_tau));
+
+        // ---------------------------------------------- update stage
+        for r in 0..spec.procs {
+            if alive[r] && spec.schedule.fire(r, k, CaqrStage::Update) {
+                alive[r] = false;
+                died_at[r] = Some(k);
+            }
+        }
+        let blocks = plan.update_blocks(k);
+        // Resolve assignees up front: a block whose owner AND replica
+        // are both dead has no surviving copy — the run is lost before
+        // anything needs to be spawned.
+        let mut assignee_sets: Vec<Vec<usize>> = Vec::with_capacity(blocks);
+        for j in 0..blocks {
+            let asg: Vec<usize> =
+                plan.update_assignees(k, j).into_iter().filter(|&r| alive[r]).collect();
+            if asg.is_empty() {
+                failed_at = Some((k, CaqrStage::Update));
+                break 'panels;
+            }
+            assignee_sets.push(asg);
+        }
+        type UpdateMap = BTreeMap<(usize, usize), Vec<f64>>;
+        let update_results: Arc<Mutex<UpdateMap>> = Arc::new(Mutex::new(BTreeMap::new()));
+        let tasks = TaskGroup::new(pool.clone());
+        let mut spawned = 0u64;
+        for (j, asg) in assignee_sets.iter().enumerate() {
+            let (t0, t1) = plan.update_cols(k, j);
+            let bk = t1 - t0;
+            let mut bsnap = vec![0.0f64; rows * bk];
+            for i in 0..rows {
+                for c in 0..bk {
+                    bsnap[i * bk + c] = w[(c0 + i) * n + (t0 + c)];
+                }
+            }
+            let bsnap = Arc::new(bsnap);
+            for &rank in asg {
+                let panel_shared = Arc::clone(&panel_shared);
+                let bsnap = Arc::clone(&bsnap);
+                let out = Arc::clone(&update_results);
+                spawned += 1;
+                tasks.spawn(move || {
+                    let (pan, t) = &*panel_shared;
+                    let mut blk = (*bsnap).clone();
+                    apply_update_f64(pan, rows, cols, t, &mut blk, bk);
+                    out.lock().unwrap().insert((j, rank), blk);
+                });
+            }
+        }
+        tasks.wait_idle();
+        metrics.update_tasks += spawned;
+        let mut panel_recoveries = 0u64;
+        {
+            let mut ur = update_results.lock().unwrap();
+            for (j, asg) in assignee_sets.iter().enumerate() {
+                let block_owner = plan.update_owner(k, j);
+                let source = if asg.contains(&block_owner) {
+                    block_owner
+                } else {
+                    // The owner died mid-update: harvest the replica's
+                    // bit-identical copy instead.
+                    panel_recoveries += 1;
+                    asg[0]
+                };
+                let blk = ur.remove(&(j, source)).expect("assigned task deposited its block");
+                let (t0, t1) = plan.update_cols(k, j);
+                let bk = t1 - t0;
+                for i in 0..rows {
+                    for c in 0..bk {
+                        w[(c0 + i) * n + (t0 + c)] = blk[i * bk + c];
+                    }
+                }
+            }
+        }
+        metrics.update_recoveries += panel_recoveries;
+        // Write the factored panel (and its tau) into the state.
+        {
+            let (pan, ptau) = &*panel_shared;
+            for i in 0..rows {
+                for j in 0..cols {
+                    w[(c0 + i) * n + (c0 + j)] = pan[i * cols + j];
+                }
+            }
+            tau[c0..c1].copy_from_slice(ptau);
+        }
+
+        // --------------------------------------------- panel boundary
+        let mut respawns = 0u64;
+        if spec.algo == Algo::SelfHealing {
+            for r in 0..spec.procs {
+                if !alive[r] {
+                    alive[r] = true;
+                    died_at[r] = None;
+                    respawns += 1;
+                }
+            }
+        }
+        metrics.respawns += respawns;
+        metrics.panels_completed += 1;
+        panel_survival.push(PanelSurvival {
+            panel: k,
+            alive_after: alive.iter().filter(|&&x| x).count(),
+            factor_recovered,
+            update_recoveries: panel_recoveries,
+            respawns,
+        });
+    }
+
+    let statuses: Vec<ProcStatus> = (0..spec.procs)
+        .map(|r| {
+            if alive[r] {
+                ProcStatus::Alive
+            } else {
+                ProcStatus::Dead { at_round: died_at[r].unwrap_or(0) as u32 }
+            }
+        })
+        .collect();
+    let wall = started.elapsed();
+
+    let (factors, final_r, verification) = if failed_at.is_none() {
+        // The single f64 -> f32 rounding of the whole run.
+        let packed = Matrix::from_vec(m, n, w.iter().map(|&x| x as f32).collect());
+        let tau32: Vec<f32> = tau.iter().map(|&x| x as f32).collect();
+        let mut r = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r[(i, j)] = packed[(i, j)];
+            }
+        }
+        let verification = if spec.verify { Some(verify::verify_r(&a, &r)) } else { None };
+        (Some(PackedQr { packed, tau: tau32 }), Some(r), verification)
+    } else {
+        (None, None, None)
+    };
+
+    Ok(CaqrResult {
+        algo: spec.algo,
+        procs: spec.procs,
+        panels: plan.panels(),
+        failed_at,
+        factors,
+        final_r,
+        statuses,
+        metrics,
+        panel_survival,
+        wall,
+        verification,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::CaqrKillSchedule;
+
+    fn run(spec: CaqrSpec) -> CaqrResult {
+        let pool = WorkerPool::new();
+        let res = execute(&spec, &pool).unwrap();
+        pool.shutdown();
+        res
+    }
+
+    #[test]
+    fn fault_free_matches_reference_bitwise() {
+        let spec = CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4);
+        let a = spec.input_matrix();
+        let res = run(spec);
+        assert!(res.success());
+        let reference = crate::linalg::householder_qr_reference(&a);
+        let f = res.factors.as_ref().unwrap();
+        assert_eq!(f.packed.data(), reference.packed.data(), "packed must be bit-identical");
+        assert_eq!(f.tau, reference.tau, "tau must be bit-identical");
+        assert!(res.verification.unwrap().ok);
+        assert_eq!(res.metrics.panels_completed, 3);
+        assert_eq!(res.metrics.update_recoveries, 0);
+        assert_eq!(res.dead_count(), 0);
+    }
+
+    #[test]
+    fn update_strike_recovers_identical_bits() {
+        let clean = run(CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4));
+        let struck = run(
+            CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+                .with_schedule(CaqrKillSchedule::at(&[(1, 0, CaqrStage::Update)])),
+        );
+        assert!(struck.success());
+        assert!(struck.metrics.update_recoveries > 0, "owner's blocks came from the replica");
+        assert_eq!(
+            struck.final_r.as_ref().unwrap().data(),
+            clean.final_r.as_ref().unwrap().data(),
+            "recovered R must be bit-identical"
+        );
+        assert_eq!(struck.dead_count(), 1, "redundant semantics: the dead stay dead");
+    }
+
+    #[test]
+    fn pair_wipe_fails_at_the_bound() {
+        let res = run(
+            CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+                .with_schedule(CaqrKillSchedule::at(&[
+                    (2, 0, CaqrStage::Update),
+                    (3, 0, CaqrStage::Update),
+                ])),
+        );
+        assert!(!res.success(), "both copies of a block lost -> run lost");
+        assert_eq!(res.failed_at, Some((0, CaqrStage::Update)));
+        assert!(res.final_r.is_none());
+    }
+
+    #[test]
+    fn self_healing_respawns_at_panel_boundaries() {
+        let res = run(
+            CaqrSpec::new(Algo::SelfHealing, 4, 24, 12, 4)
+                .with_schedule(CaqrKillSchedule::at(&[(1, 0, CaqrStage::Update)])),
+        );
+        assert!(res.success());
+        assert_eq!(res.metrics.respawns, 1);
+        assert_eq!(res.dead_count(), 0, "healed world ends at full size");
+        assert!(res.panel_survival[0].respawns == 1 && res.panel_survival[0].alive_after == 4);
+    }
+
+    #[test]
+    fn single_process_world_has_no_redundancy_but_works() {
+        let spec = CaqrSpec::new(Algo::Redundant, 1, 16, 8, 3);
+        let a = spec.input_matrix();
+        let res = run(spec);
+        assert!(res.success());
+        let reference = crate::linalg::householder_qr_reference(&a);
+        assert_eq!(res.factors.unwrap().packed.data(), reference.packed.data());
+    }
+}

@@ -1,0 +1,415 @@
+//! Fault-tolerant CAQR: QR factorization of **general** `m x n`
+//! matrices by block column, with the redundant-computation fault
+//! tolerance of the source paper extended to the trailing-matrix
+//! updates — the subject of the direct follow-up, *"Fault Tolerant QR
+//! Factorization for General Matrices"* (Coti, arXiv:1604.02504).
+//!
+//! ## The algorithm
+//!
+//! A general matrix is factored panel by panel (see
+//! [`crate::tsqr::PanelPlan`]): panel `k` is a tall-skinny block
+//! column, factored over the worker pool, and its Householder
+//! reflectors are then applied to every trailing block — the bulk of
+//! the flops, scheduled as independent per-block *update tasks* on the
+//! same pool.  Fault tolerance comes from the paper's one idea,
+//! redundant computation:
+//!
+//! * the **panel factor** is computed by the owner's whole replica
+//!   pair (the level-1 replica group of the per-panel tree plan) —
+//!   every copy is bit-identical, so any survivor's copy is *the*
+//!   result;
+//! * every **trailing-update block** is computed twice, by its owner
+//!   and the owner's round-0 buddy.  A process that dies mid-update
+//!   loses nothing: the harvest takes the surviving replica's block,
+//!   bit for bit what the dead process would have produced.
+//!
+//! Per panel step the subsystem therefore tolerates the loss of any
+//! one member of each replica pair (`replication − 1`, the CAQR
+//! analogue of TSQR's `2^s − 1` at `s = 1`); under
+//! [`Algo::SelfHealing`] dead ranks are respawned at the panel
+//! boundary, restoring full capacity for the next panel, while under
+//! [`Algo::Redundant`] the world shrinks monotonically.
+//!
+//! ## The bitwise contract
+//!
+//! Every handoff between tasks stays f64 (the kernels in
+//! [`crate::linalg::view`]: [`factor_panel_f64`], [`apply_update_f64`])
+//! with one terminal rounding to f32, and panel decomposition never
+//! reorders the arithmetic any single column sees.  Consequently
+//! [`factorize`] reproduces the classic whole-matrix oracle
+//! [`crate::linalg::householder_qr_reference`] **bit for bit** — with
+//! zero failures *and* under every recoverable fault scenario, which
+//! is exactly the redundancy invariant the paper rests on
+//! (`tests/integration_caqr.rs` pins both).
+//!
+//! [`factor_panel_f64`]: crate::linalg::view::factor_panel_f64
+//! [`apply_update_f64`]: crate::linalg::view::apply_update_f64
+//!
+//! ## Quick start
+//!
+//! ```
+//! use ft_tsqr::caqr::{self, CaqrSpec};
+//! use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage};
+//! use ft_tsqr::linalg::householder_qr_reference;
+//! use ft_tsqr::tsqr::Algo;
+//!
+//! // 24x12 general matrix, 4-column panels, 4 simulated processes;
+//! // rank 1 dies during panel 0's trailing updates.
+//! let spec = CaqrSpec::new(Algo::SelfHealing, 4, 24, 12, 4)
+//!     .with_schedule(CaqrKillSchedule::at(&[(1, 0, CaqrStage::Update)]));
+//! let a = spec.input_matrix();
+//! let result = caqr::factorize(spec).unwrap();
+//! assert!(result.success());
+//! assert!(result.metrics.update_recoveries > 0, "replica carried the update");
+//!
+//! // The fault-tolerant path is bit-identical to the classic QR.
+//! let reference = householder_qr_reference(&a).r();
+//! assert_eq!(result.final_r.unwrap().data(), reference.data());
+//! ```
+
+mod campaign;
+mod exec;
+
+pub use campaign::{CaqrCampaign, CaqrCampaignReport, CaqrRecord};
+pub(crate) use exec::execute;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::fault::{CaqrKillSchedule, CaqrStage};
+use crate::linalg::{Matrix, PackedQr};
+use crate::tsqr::verify::Verification;
+use crate::tsqr::{Algo, PanelPlan};
+use crate::ulfm::{MetricsSnapshot, ProcStatus, Rank};
+
+/// Everything needed to run one general-matrix CAQR factorization.
+#[derive(Clone)]
+pub struct CaqrSpec {
+    /// Failure semantics: [`Algo::Redundant`] (dead ranks stay dead)
+    /// or [`Algo::SelfHealing`] (respawned at panel boundaries).
+    pub algo: Algo,
+    /// Simulated processes the tasks are spread over.
+    pub procs: usize,
+    /// Matrix rows.
+    pub m: usize,
+    /// Matrix columns (no longer required to be ≪ `m`).
+    pub n: usize,
+    /// Block-column width.
+    pub panel: usize,
+    /// Input-matrix seed (see [`CaqrSpec::input_matrix`]).
+    pub seed: u64,
+    /// The `(rank, panel, stage)` kill schedule.
+    pub schedule: Arc<CaqrKillSchedule>,
+    /// Verify the final R against the host oracle.
+    pub verify: bool,
+}
+
+impl CaqrSpec {
+    /// Sensible defaults for a fault-free run (seed 42, verify on).
+    pub fn new(algo: Algo, procs: usize, m: usize, n: usize, panel: usize) -> Self {
+        Self {
+            algo,
+            procs,
+            m,
+            n,
+            panel,
+            seed: 42,
+            schedule: Arc::new(CaqrKillSchedule::none()),
+            verify: true,
+        }
+    }
+
+    /// Replace the kill schedule.
+    pub fn with_schedule(mut self, s: CaqrKillSchedule) -> Self {
+        self.schedule = Arc::new(s);
+        self
+    }
+
+    /// Replace the input-matrix seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Toggle oracle verification (skippable for survival sweeps).
+    pub fn with_verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
+    /// Validate shape and semantics.
+    pub fn validate(&self) -> Result<()> {
+        if self.procs == 0 {
+            return Err(Error::Config("procs must be >= 1".into()));
+        }
+        if self.n == 0 || self.panel == 0 {
+            return Err(Error::Config("cols and panel width must be >= 1".into()));
+        }
+        if self.m < self.n {
+            return Err(Error::Config(format!(
+                "CAQR factors m >= n matrices, got {}x{}",
+                self.m, self.n
+            )));
+        }
+        if self.procs > 1 && self.procs % 2 != 0 {
+            // On an odd world the top rank has no round-0 buddy, so its
+            // tasks would have a single copy — the replication − 1
+            // tolerance claim would silently not hold for it.
+            return Err(Error::Config(format!(
+                "CAQR replicates tasks across round-0 buddy pairs; procs must be \
+                 even (or 1), got {}",
+                self.procs
+            )));
+        }
+        match self.algo {
+            Algo::Redundant | Algo::SelfHealing => Ok(()),
+            other => Err(Error::Config(format!(
+                "CAQR supports redundant or self-healing semantics, not {}",
+                other.name()
+            ))),
+        }
+    }
+
+    /// The panel plan this spec factors under.
+    pub fn plan(&self) -> PanelPlan {
+        PanelPlan::new(self.m, self.n, self.panel, self.procs)
+    }
+
+    /// The input matrix (deterministic in the seed).
+    pub fn input_matrix(&self) -> Matrix {
+        Matrix::random(self.m, self.n, self.seed)
+    }
+}
+
+/// Survival accounting for one panel step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PanelSurvival {
+    /// Panel index.
+    pub panel: usize,
+    /// Ranks alive after the panel step (post-respawn for
+    /// Self-Healing).
+    pub alive_after: usize,
+    /// The panel-factor owner was dead at harvest time; a replica's
+    /// bit-identical factor was used.
+    pub factor_recovered: bool,
+    /// Trailing blocks harvested from the replica because the owner
+    /// was dead.
+    pub update_recoveries: u64,
+    /// Dead ranks respawned at this panel boundary (Self-Healing).
+    pub respawns: u64,
+}
+
+/// Outcome of one CAQR factorization.
+#[derive(Debug)]
+pub struct CaqrResult {
+    /// The spec's failure semantics.
+    pub algo: Algo,
+    /// World size.
+    pub procs: usize,
+    /// Panels the plan scheduled.
+    pub panels: usize,
+    /// Where the run died, if it did: more failures than the replica
+    /// pairs could absorb at this `(panel, stage)`.
+    pub failed_at: Option<(usize, CaqrStage)>,
+    /// The full packed factorization (R + reflectors + tau) on success.
+    pub factors: Option<PackedQr>,
+    /// The `n x n` R factor on success — **not** canonicalized, so it
+    /// compares bit-for-bit against `householder_qr_reference(a).r()`.
+    pub final_r: Option<Matrix>,
+    /// Liveness at the end of the run (`Dead { at_round }` carries the
+    /// panel index the rank died at).
+    pub statuses: Vec<ProcStatus>,
+    /// Task/recovery counters (`update_tasks`, `update_recoveries`,
+    /// `panels_completed`, `respawns`).
+    pub metrics: MetricsSnapshot,
+    /// Per-panel survival accounting, one entry per completed panel.
+    pub panel_survival: Vec<PanelSurvival>,
+    /// Wall clock of the factorization.
+    pub wall: Duration,
+    /// Oracle verdict (when the spec asked for verification and the
+    /// run succeeded).
+    pub verification: Option<Verification>,
+}
+
+impl CaqrResult {
+    /// Did the factorization complete?  (Per-panel losses that the
+    /// replica pairs absorbed still count as success — that is the
+    /// point of the redundancy.)
+    pub fn success(&self) -> bool {
+        self.failed_at.is_none()
+    }
+
+    /// Ranks dead at the end of the run.
+    pub fn dead_count(&self) -> usize {
+        self.statuses.iter().filter(|s| matches!(s, ProcStatus::Dead { .. })).count()
+    }
+}
+
+/// Run one CAQR factorization end to end (one-shot convenience).
+///
+/// Thin shim over a single-use [`crate::engine::Engine`]: long-lived
+/// callers should hold an engine and use
+/// [`Engine::run_caqr`](crate::engine::Engine::run_caqr) /
+/// [`Engine::caqr_campaign`](crate::engine::Engine::caqr_campaign) to
+/// amortize pool setup across factorizations.
+///
+/// ```
+/// use ft_tsqr::caqr::{self, CaqrSpec};
+/// use ft_tsqr::tsqr::Algo;
+///
+/// let res = caqr::factorize(CaqrSpec::new(Algo::Redundant, 4, 20, 10, 5)).unwrap();
+/// assert!(res.success());
+/// assert_eq!(res.final_r.unwrap().shape(), (10, 10));
+/// ```
+pub fn factorize(spec: CaqrSpec) -> Result<CaqrResult> {
+    crate::engine::Engine::host().run_caqr(spec)
+}
+
+/// A named, reproducible CAQR failure scenario (the general-matrix
+/// analogues of the paper's Figures 3–5).
+#[derive(Debug, Clone)]
+pub struct CaqrScenario {
+    /// Stable lookup name.
+    pub name: &'static str,
+    /// One-line description of what it demonstrates.
+    pub description: &'static str,
+    /// Failure semantics the scenario runs under.
+    pub algo: Algo,
+    /// World size.
+    pub procs: usize,
+    /// The `(rank, panel, stage)` kills.
+    pub kills: Vec<(Rank, usize, CaqrStage)>,
+    /// Does the factorization survive?
+    pub survives: bool,
+}
+
+impl CaqrScenario {
+    /// One process dies during panel 0's trailing updates; its blocks
+    /// are harvested from the buddy replica — the scenario the
+    /// general-matrix paper adds over plain TSQR.
+    pub fn update_strike() -> Self {
+        CaqrScenario {
+            name: "update-strike",
+            description: "P1 dies during panel 0's trailing updates → \
+                          blocks recovered from buddy P0, identical R",
+            algo: Algo::Redundant,
+            procs: 4,
+            kills: vec![(1, 0, CaqrStage::Update)],
+            survives: true,
+        }
+    }
+
+    /// The panel-factor owner dies during the factor stage; the
+    /// replica's bit-identical factor is used.
+    pub fn factor_strike() -> Self {
+        CaqrScenario {
+            name: "factor-strike",
+            description: "panel 1's factor owner P1 dies during the factor stage → \
+                          replica P0's bit-identical factor is used",
+            algo: Algo::Redundant,
+            procs: 4,
+            kills: vec![(1, 1, CaqrStage::Factor)],
+            survives: true,
+        }
+    }
+
+    /// One death per panel, healed at each boundary — the Self-Healing
+    /// per-step capacity (`2^s − 1` per step, cumulatively more than
+    /// any single step tolerates).
+    pub fn healing_storm() -> Self {
+        CaqrScenario {
+            name: "healing-storm",
+            description: "one death during every panel's updates, respawned at each \
+                          boundary (self-healing) → identical R",
+            algo: Algo::SelfHealing,
+            procs: 4,
+            kills: vec![
+                (1, 0, CaqrStage::Update),
+                (2, 1, CaqrStage::Update),
+                (3, 2, CaqrStage::Update),
+            ],
+            survives: true,
+        }
+    }
+
+    /// Both members of a replica pair die in the same panel step —
+    /// past the `replication − 1` bound, so the data is gone and the
+    /// run fails (the tightness statement).
+    pub fn pair_wipe() -> Self {
+        CaqrScenario {
+            name: "pair-wipe",
+            description: "P2 and P3 (a replica pair) both die during panel 0's \
+                          updates → a block has no surviving copy, run fails",
+            algo: Algo::Redundant,
+            procs: 4,
+            kills: vec![(2, 0, CaqrStage::Update), (3, 0, CaqrStage::Update)],
+            survives: false,
+        }
+    }
+
+    /// All named scenarios.
+    pub fn all() -> Vec<CaqrScenario> {
+        vec![
+            Self::update_strike(),
+            Self::factor_strike(),
+            Self::healing_storm(),
+            Self::pair_wipe(),
+        ]
+    }
+
+    /// Look a scenario up by name.
+    pub fn by_name(name: &str) -> Option<CaqrScenario> {
+        Self::all().into_iter().find(|s| s.name == name)
+    }
+
+    /// Materialize a spec: `m x n` with `panel`-column blocks (the
+    /// scenario's kills assume at least 3 panels).
+    pub fn spec(&self, m: usize, n: usize, panel: usize) -> CaqrSpec {
+        CaqrSpec::new(self.algo, self.procs, m, n, panel)
+            .with_schedule(CaqrKillSchedule::at(&self.kills))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validation() {
+        assert!(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4).validate().is_ok());
+        assert!(CaqrSpec::new(Algo::SelfHealing, 4, 16, 16, 4).validate().is_ok());
+        assert!(CaqrSpec::new(Algo::Redundant, 0, 16, 8, 4).validate().is_err());
+        assert!(CaqrSpec::new(Algo::Redundant, 1, 16, 8, 4).validate().is_ok(), "lone proc ok");
+        assert!(
+            CaqrSpec::new(Algo::Redundant, 3, 16, 8, 4).validate().is_err(),
+            "odd worlds leave the top rank pairless"
+        );
+        assert!(CaqrSpec::new(Algo::Redundant, 4, 8, 16, 4).validate().is_err(), "wide");
+        assert!(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 0).validate().is_err());
+        assert!(CaqrSpec::new(Algo::Baseline, 4, 16, 8, 4).validate().is_err(), "semantics");
+        assert!(CaqrSpec::new(Algo::Replace, 4, 16, 8, 4).validate().is_err());
+    }
+
+    #[test]
+    fn spec_plan_and_matrix_deterministic() {
+        let spec = CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4);
+        assert_eq!(spec.plan().panels(), 3);
+        assert_eq!(spec.input_matrix(), spec.input_matrix());
+        assert_eq!(spec.input_matrix().shape(), (24, 12));
+    }
+
+    #[test]
+    fn scenario_catalog() {
+        let all = CaqrScenario::all();
+        assert_eq!(all.len(), 4);
+        let mut names: Vec<_> = all.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 4, "names unique");
+        assert!(!CaqrScenario::by_name("pair-wipe").unwrap().survives);
+        assert!(CaqrScenario::by_name("fig9").is_none());
+        let spec = CaqrScenario::update_strike().spec(48, 24, 8);
+        assert_eq!(spec.schedule.entries(), vec![(1, 0, CaqrStage::Update)]);
+    }
+}

@@ -134,16 +134,27 @@ impl FailureConfig {
 /// The full run configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Which algorithm to run.
     pub algo: Algo,
+    /// Simulated world size.
     pub procs: usize,
+    /// Leaf panel rows per process.
     pub rows_per_proc: usize,
+    /// Matrix columns.
     pub cols: usize,
+    /// Input-matrix seed.
     pub seed: u64,
+    /// Compute backend (`pjrt` | `host` | `auto`).
     pub backend: Backend,
+    /// Where to look for AOT artifacts.
     pub artifact_dir: String,
+    /// PJRT service threads.
     pub pjrt_shards: usize,
+    /// Verify the final R against the host oracle.
     pub verify: bool,
+    /// Collect an execution trace.
     pub trace: bool,
+    /// Failure-injection model.
     pub failures: FailureConfig,
 }
 

@@ -27,20 +27,27 @@ use super::{Engine, JobHandle};
 pub struct RunRecord {
     /// Position in the campaign's spec list.
     pub index: usize,
+    /// The algorithm that ran.
     pub algo: Algo,
+    /// World size.
     pub procs: usize,
     /// The spec's input-matrix seed.
     pub seed: u64,
+    /// Success under the algorithm's own semantics.
     pub success: bool,
     /// Every rank finished holding the final R (§III-D1).
     pub fully_healed: bool,
+    /// Ranks dead at the end of the run.
     pub dead: usize,
     /// Ranks that finished holding the final R.
     pub holders: usize,
     /// `None` when verification was skipped (`with_verify(false)`).
     pub verified_ok: Option<bool>,
+    /// Max |Δ| between different holders' canonical R's.
     pub holder_disagreement: f64,
+    /// Communication counters of the run.
     pub metrics: MetricsSnapshot,
+    /// Wall clock of the run.
     pub wall: Duration,
 }
 
@@ -65,6 +72,19 @@ impl RunRecord {
 
 /// A batch of runs bound to an engine.  Built by [`Engine::campaign`];
 /// consumed by [`Campaign::run`].
+///
+/// ```
+/// use ft_tsqr::engine::Engine;
+/// use ft_tsqr::tsqr::{Algo, RunSpec};
+///
+/// let engine = Engine::host();
+/// let specs = (0..8).map(|seed| {
+///     RunSpec::new(Algo::Replace, 4, 16, 4).with_seed(seed).with_verify(false)
+/// });
+/// let report = engine.campaign(specs).concurrency(2).run().unwrap();
+/// assert_eq!(report.successes(), 8);
+/// assert!(report.summary().contains("runs=8"));
+/// ```
 pub struct Campaign<'e> {
     engine: &'e Engine,
     specs: Vec<RunSpec>,
@@ -90,10 +110,12 @@ impl<'e> Campaign<'e> {
         self
     }
 
+    /// Runs in the campaign.
     pub fn len(&self) -> usize {
         self.specs.len()
     }
 
+    /// True when the campaign holds no specs.
     pub fn is_empty(&self) -> bool {
         self.specs.is_empty()
     }
@@ -105,40 +127,60 @@ impl<'e> Campaign<'e> {
             spec.validate()?;
         }
         let started = Instant::now();
+        let seeds: Vec<u64> = self.specs.iter().map(|s| s.seed).collect();
         let mut records: Vec<RunRecord> = Vec::with_capacity(self.specs.len());
         let mut results: Option<Vec<RunResult>> =
             if self.keep_results { Some(Vec::with_capacity(self.specs.len())) } else { None };
 
-        let mut record = |index: usize, seed: u64, res: RunResult| {
-            records.push(RunRecord::from_result(index, seed, &res));
-            if let Some(all) = &mut results {
-                all.push(res);
-            }
-        };
-
-        if self.concurrency == 1 {
-            for (index, spec) in self.specs.into_iter().enumerate() {
-                let seed = spec.seed;
-                record(index, seed, self.engine.run(spec)?);
-            }
-        } else {
-            // Sliding window: keep up to `concurrency` runs in flight,
-            // harvest in submission order (records stay ordered).
-            let mut pending = self.specs.into_iter().enumerate();
-            let mut inflight: VecDeque<(usize, u64, JobHandle)> = VecDeque::new();
-            loop {
-                while inflight.len() < self.concurrency {
-                    let Some((index, spec)) = pending.next() else { break };
-                    let seed = spec.seed;
-                    inflight.push_back((index, seed, self.engine.submit(spec)));
+        let engine = self.engine;
+        drive(
+            self.specs,
+            self.concurrency,
+            |spec| engine.run(spec),
+            |spec| engine.submit(spec),
+            JobHandle::wait,
+            |index, res| {
+                records.push(RunRecord::from_result(index, seeds[index], &res));
+                if let Some(all) = &mut results {
+                    all.push(res);
                 }
-                let Some((index, seed, handle)) = inflight.pop_front() else { break };
-                record(index, seed, handle.wait()?);
-            }
-        }
+            },
+        )?;
 
         Ok(CampaignReport { records, results, total_wall: started.elapsed() })
     }
+}
+
+/// Shared campaign orchestration: run every spec, sequentially
+/// (`concurrency == 1`) or through a sliding window of in-flight
+/// submissions, harvesting **in submission order** so records stay
+/// ordered.  One copy of the window logic serves both the TSQR
+/// [`Campaign`] and the CAQR [`crate::caqr::CaqrCampaign`].
+pub(crate) fn drive<S, H, R>(
+    specs: Vec<S>,
+    concurrency: usize,
+    run_sync: impl Fn(S) -> Result<R>,
+    submit: impl Fn(S) -> H,
+    wait: impl Fn(H) -> Result<R>,
+    mut record: impl FnMut(usize, R),
+) -> Result<()> {
+    if concurrency == 1 {
+        for (index, spec) in specs.into_iter().enumerate() {
+            record(index, run_sync(spec)?);
+        }
+        return Ok(());
+    }
+    let mut pending = specs.into_iter().enumerate();
+    let mut inflight: VecDeque<(usize, H)> = VecDeque::new();
+    loop {
+        while inflight.len() < concurrency {
+            let Some((index, spec)) = pending.next() else { break };
+            inflight.push_back((index, submit(spec)));
+        }
+        let Some((index, handle)) = inflight.pop_front() else { break };
+        record(index, wait(handle)?);
+    }
+    Ok(())
 }
 
 /// Aggregated outcome of one campaign.
@@ -153,14 +195,17 @@ pub struct CampaignReport {
 }
 
 impl CampaignReport {
+    /// Runs executed.
     pub fn runs(&self) -> u64 {
         self.records.len() as u64
     }
 
+    /// Runs that succeeded under their algorithm's semantics.
     pub fn successes(&self) -> u64 {
         self.records.iter().filter(|r| r.success).count() as u64
     }
 
+    /// `successes / runs`.
     pub fn success_rate(&self) -> f64 {
         self.survival().probability()
     }
@@ -194,6 +239,7 @@ impl CampaignReport {
         self.records.iter().map(|r| r.wall).sum()
     }
 
+    /// Mean per-run wall time.
     pub fn mean_wall(&self) -> Duration {
         if self.records.is_empty() {
             return Duration::ZERO;

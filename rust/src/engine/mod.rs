@@ -28,12 +28,14 @@ mod campaign;
 mod exec;
 mod pool;
 
+pub(crate) use campaign::drive;
 pub use campaign::{Campaign, CampaignReport, RunRecord};
 pub use pool::{TaskGroup, WorkerPool};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, mpsc};
 
+use crate::caqr::{CaqrCampaign, CaqrResult, CaqrSpec};
 use crate::error::{Error, Result};
 use crate::runtime::{Backend, Executor, DEFAULT_ARTIFACT_DIR};
 use crate::tsqr::{RunResult, RunSpec};
@@ -59,6 +61,7 @@ impl Default for EngineBuilder {
 }
 
 impl EngineBuilder {
+    /// A builder with the defaults (`Auto` backend, `artifacts/`).
     pub fn new() -> Self {
         Self::default()
     }
@@ -124,11 +127,17 @@ struct Counters {
 /// Point-in-time engine statistics.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineStats {
+    /// Jobs ever submitted to this engine.
     pub jobs_submitted: u64,
+    /// Jobs that returned a result.
     pub jobs_completed: u64,
+    /// Jobs that returned an error (validation failures).
     pub jobs_failed: u64,
+    /// Worker threads currently alive.
     pub workers: usize,
+    /// High-water mark of concurrent workers.
     pub peak_workers: usize,
+    /// Pool tasks executed over the engine's lifetime.
     pub tasks_executed: u64,
 }
 
@@ -137,6 +146,16 @@ pub struct EngineStats {
 /// behind a reference or an `Arc` and submit from many threads.
 ///
 /// Dropping the engine shuts the pool down (joining all workers).
+///
+/// ```
+/// use ft_tsqr::engine::Engine;
+/// use ft_tsqr::tsqr::{Algo, RunSpec};
+///
+/// let engine = Engine::host(); // pure-rust backend, no artifacts
+/// let result = engine.run(RunSpec::new(Algo::Redundant, 4, 16, 4)).unwrap();
+/// assert!(result.success());
+/// assert_eq!(result.r_holders, vec![0, 1, 2, 3], "every survivor holds R");
+/// ```
 pub struct Engine {
     executor: Executor,
     pool: WorkerPool,
@@ -144,6 +163,7 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Start configuring an engine.
     pub fn builder() -> EngineBuilder {
         EngineBuilder::new()
     }
@@ -176,6 +196,7 @@ impl Engine {
         self.pool.workers()
     }
 
+    /// Point-in-time job/worker counters.
     pub fn stats(&self) -> EngineStats {
         EngineStats {
             jobs_submitted: self.counters.submitted.load(Ordering::Relaxed),
@@ -231,6 +252,53 @@ impl Engine {
     pub fn campaign(&self, specs: impl IntoIterator<Item = RunSpec>) -> Campaign<'_> {
         Campaign::new(self, specs.into_iter().collect())
     }
+
+    /// Run one general-matrix CAQR factorization synchronously on this
+    /// session's worker pool (see [`crate::caqr`]).
+    ///
+    /// ```
+    /// use ft_tsqr::caqr::CaqrSpec;
+    /// use ft_tsqr::engine::Engine;
+    /// use ft_tsqr::tsqr::Algo;
+    ///
+    /// let engine = Engine::host();
+    /// let res = engine.run_caqr(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4)).unwrap();
+    /// assert!(res.success() && res.verification.unwrap().ok);
+    /// ```
+    pub fn run_caqr(&self, spec: CaqrSpec) -> Result<CaqrResult> {
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let res = crate::caqr::execute(&spec, &self.pool);
+        match &res {
+            Ok(_) => self.counters.completed.fetch_add(1, Ordering::Relaxed),
+            Err(_) => self.counters.failed.fetch_add(1, Ordering::Relaxed),
+        };
+        res
+    }
+
+    /// Submit a CAQR factorization for asynchronous execution — the
+    /// whole coordinator runs on pooled workers; the handle delivers
+    /// the result.
+    pub fn submit_caqr(&self, spec: CaqrSpec) -> CaqrJobHandle {
+        let id = self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let pool = self.pool.clone();
+        let counters = Arc::clone(&self.counters);
+        self.pool.execute(move || {
+            let res = crate::caqr::execute(&spec, &pool);
+            match &res {
+                Ok(_) => counters.completed.fetch_add(1, Ordering::Relaxed),
+                Err(_) => counters.failed.fetch_add(1, Ordering::Relaxed),
+            };
+            let _ = tx.send(res);
+        });
+        CaqrJobHandle { id, rx }
+    }
+
+    /// Start a batched CAQR campaign over many specs (see
+    /// [`CaqrCampaign`]).
+    pub fn caqr_campaign(&self, specs: impl IntoIterator<Item = CaqrSpec>) -> CaqrCampaign<'_> {
+        CaqrCampaign::new(self, specs.into_iter().collect())
+    }
 }
 
 impl Drop for Engine {
@@ -253,6 +321,26 @@ impl JobHandle {
 
     /// Block until the run finishes and take its result.
     pub fn wait(self) -> Result<RunResult> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(Error::Other("engine job lost (worker panicked?)".into())))
+    }
+}
+
+/// Handle to one submitted CAQR factorization.
+pub struct CaqrJobHandle {
+    id: u64,
+    rx: mpsc::Receiver<Result<CaqrResult>>,
+}
+
+impl CaqrJobHandle {
+    /// Monotonic per-engine submission id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the factorization finishes and take its result.
+    pub fn wait(self) -> Result<CaqrResult> {
         self.rx
             .recv()
             .unwrap_or_else(|_| Err(Error::Other("engine job lost (worker panicked?)".into())))

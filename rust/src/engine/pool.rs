@@ -82,6 +82,7 @@ impl Default for WorkerPool {
 }
 
 impl WorkerPool {
+    /// An empty pool (workers spawn on demand).
     pub fn new() -> Self {
         Self {
             shared: Arc::new(Shared {
@@ -170,10 +171,12 @@ impl WorkerPool {
         self.shared.state.lock().unwrap().peak_workers
     }
 
+    /// Tasks executed over the pool's lifetime.
     pub fn tasks_executed(&self) -> u64 {
         self.shared.tasks_executed.load(Ordering::Relaxed)
     }
 
+    /// Tasks whose body panicked (the worker survives).
     pub fn task_panics(&self) -> u64 {
         self.shared.task_panics.load(Ordering::Relaxed)
     }
@@ -258,6 +261,7 @@ pub struct TaskGroup {
 }
 
 impl TaskGroup {
+    /// A fresh latch over `pool`.
     pub fn new(pool: WorkerPool) -> Self {
         Self { pool, live: Arc::new((Mutex::new(0), Condvar::new())) }
     }

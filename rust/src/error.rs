@@ -9,8 +9,11 @@
 
 use crate::ulfm::Rank;
 
+/// Crate-wide result alias over [`Error`].
 pub type Result<T> = std::result::Result<T, Error>;
 
+/// Everything that can go wrong in the simulator, the runtime, or the
+/// configuration surface.
 #[derive(Debug)]
 pub enum Error {
     /// ULFM-style process-failure error: the peer rank is dead.  Returned

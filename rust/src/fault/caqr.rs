@@ -1,0 +1,140 @@
+//! Fault injection for the CAQR subsystem: kills that strike *inside*
+//! a panel step — during the panel factorization or, crucially, during
+//! the trailing-matrix updates the general-matrix extension
+//! (arXiv:1604.02504) replicates.
+//!
+//! TSQR's [`super::KillSchedule`] is round-granular; CAQR failures are
+//! `(rank, panel, stage)`-granular: a process killed at
+//! `(r, k, Update)` completed panel `k`'s factor stage but dies before
+//! its trailing-update results for panel `k` can be harvested — its
+//! blocks are recovered from the surviving replica, mid-factorization.
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use crate::ulfm::Rank;
+use crate::util::Rng;
+
+/// Which stage of a panel step a kill strikes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CaqrStage {
+    /// The redundant panel factorization of the block column.
+    Factor,
+    /// The replicated trailing-matrix updates — the failure mode the
+    /// general-matrix paper adds over plain TSQR.
+    Update,
+}
+
+impl CaqrStage {
+    /// Stable name (`factor` / `update`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CaqrStage::Factor => "factor",
+            CaqrStage::Update => "update",
+        }
+    }
+}
+
+/// One-shot CAQR kill schedule shared by every task of a run.
+///
+/// Entries are `(rank, panel, stage)`: the rank dies at that point of
+/// the factorization.  Like [`super::KillSchedule`], entries are
+/// consumed on fire, so a respawned incarnation (Self-Healing mode) is
+/// not re-killed by the same entry.
+#[derive(Debug, Default)]
+pub struct CaqrKillSchedule {
+    pending: Mutex<HashSet<(Rank, usize, CaqrStage)>>,
+}
+
+impl CaqrKillSchedule {
+    /// No failures (fault-free execution).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Explicit list of `(rank, panel, stage)` kills.
+    pub fn at(entries: &[(Rank, usize, CaqrStage)]) -> Self {
+        Self { pending: Mutex::new(entries.iter().copied().collect()) }
+    }
+
+    /// Exactly `f` distinct ranks die during a uniformly random
+    /// panel's *update* stage (the general-matrix failure model the
+    /// survival sweeps measure).
+    pub fn random_updates(procs: usize, panels: usize, f: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut pool: Vec<Rank> = (0..procs).collect();
+        let mut set = HashSet::new();
+        let panels = panels.max(1);
+        for _ in 0..f.min(procs) {
+            let i = rng.below(pool.len());
+            let rank = pool.swap_remove(i);
+            let panel = rng.below(panels);
+            set.insert((rank, panel, CaqrStage::Update));
+        }
+        Self { pending: Mutex::new(set) }
+    }
+
+    /// Should `rank` die at `(panel, stage)`?  Consumes the entry.
+    pub fn fire(&self, rank: Rank, panel: usize, stage: CaqrStage) -> bool {
+        self.pending.lock().unwrap().remove(&(rank, panel, stage))
+    }
+
+    /// Remaining entries (diagnostics).
+    pub fn remaining(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// All scheduled kills, sorted (diagnostics / reports).
+    pub fn entries(&self) -> Vec<(Rank, usize, CaqrStage)> {
+        let mut v: Vec<_> = self.pending.lock().unwrap().iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_schedule_fires_once() {
+        let s = CaqrKillSchedule::at(&[(1, 2, CaqrStage::Update)]);
+        assert!(!s.fire(1, 2, CaqrStage::Factor), "stage is part of the key");
+        assert!(!s.fire(1, 1, CaqrStage::Update));
+        assert!(s.fire(1, 2, CaqrStage::Update));
+        assert!(!s.fire(1, 2, CaqrStage::Update), "one-shot");
+        assert_eq!(s.remaining(), 0);
+    }
+
+    #[test]
+    fn none_never_fires() {
+        let s = CaqrKillSchedule::none();
+        assert!(!s.fire(0, 0, CaqrStage::Factor));
+        assert_eq!(s.remaining(), 0);
+    }
+
+    #[test]
+    fn random_updates_deterministic_and_distinct_ranks() {
+        let a = CaqrKillSchedule::random_updates(8, 4, 3, 7).entries();
+        let b = CaqrKillSchedule::random_updates(8, 4, 3, 7).entries();
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|&(_, p, st)| p < 4 && st == CaqrStage::Update));
+        let mut ranks: Vec<Rank> = a.iter().map(|&(r, _, _)| r).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        assert_eq!(ranks.len(), 3, "distinct ranks");
+        assert_ne!(a, CaqrKillSchedule::random_updates(8, 4, 3, 8).entries());
+    }
+
+    #[test]
+    fn random_updates_caps_at_world_size() {
+        assert_eq!(CaqrKillSchedule::random_updates(4, 2, 10, 1).remaining(), 4);
+    }
+
+    #[test]
+    fn stage_names() {
+        assert_eq!(CaqrStage::Factor.name(), "factor");
+        assert_eq!(CaqrStage::Update.name(), "update");
+    }
+}

@@ -1,8 +1,11 @@
-//! Fault injection: deterministic and stochastic kill schedules plus
-//! the paper's named failure scenarios (Figures 3–5).
+//! Fault injection: deterministic and stochastic kill schedules, the
+//! paper's named failure scenarios (Figures 3–5), and the CAQR
+//! `(rank, panel, stage)` schedules that strike trailing updates.
 
+pub mod caqr;
 pub mod injector;
 pub mod scenario;
 
+pub use caqr::{CaqrKillSchedule, CaqrStage};
 pub use injector::KillSchedule;
 pub use scenario::Scenario;

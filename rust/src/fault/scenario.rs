@@ -10,10 +10,15 @@ use super::injector::KillSchedule;
 /// A named, reproducible failure scenario.
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    /// Stable lookup name.
     pub name: &'static str,
+    /// One-line description of what it demonstrates.
     pub description: &'static str,
+    /// The algorithm it runs under.
     pub algo: Algo,
+    /// World size.
     pub procs: usize,
+    /// The `(rank, round)` kills.
     pub kills: Vec<(Rank, u32)>,
 }
 
@@ -77,6 +82,7 @@ impl Scenario {
         vec![Self::fig3(), Self::fig4(), Self::fig5(), Self::baseline_abort()]
     }
 
+    /// Look a scenario up by name.
     pub fn by_name(name: &str) -> Option<Scenario> {
         Self::all().into_iter().find(|s| s.name == name)
     }

@@ -62,8 +62,32 @@
 //! The pre-engine one-shot entry point survives as a shim:
 //! `ft_tsqr::tsqr::run(&spec)` builds a single-use engine around the
 //! spec's executor — identical semantics, none of the amortization.
+//!
+//! ## General matrices: CAQR
+//!
+//! Tall-and-skinny is TSQR's home turf; for general `m x n` matrices
+//! the [`caqr`] subsystem factors by block column and replicates the
+//! trailing-matrix updates — the extension of the follow-up paper
+//! (arXiv:1604.02504) — so a process death *mid-update* is recovered
+//! from a surviving replica, bit for bit:
+//!
+//! ```
+//! use ft_tsqr::caqr::CaqrSpec;
+//! use ft_tsqr::engine::Engine;
+//! use ft_tsqr::tsqr::Algo;
+//!
+//! let engine = Engine::host();
+//! let res = engine.run_caqr(CaqrSpec::new(Algo::SelfHealing, 4, 32, 16, 8)).unwrap();
+//! assert!(res.success() && res.verification.unwrap().ok);
+//! ```
+//!
+//! See `docs/PAPER_MAP.md` for the section-by-section map from both
+//! papers to the types and functions implementing them.
+
+#![warn(missing_docs)]
 
 pub mod analysis;
+pub mod caqr;
 pub mod checkpoint;
 pub mod config;
 pub mod engine;

@@ -48,26 +48,32 @@ impl Matrix {
         Self { rows, cols, data }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// `(rows, cols)`.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
 
+    /// The row-major element buffer.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable access to the row-major element buffer.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the matrix, keeping its buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }

@@ -15,6 +15,7 @@ pub mod view;
 
 pub use matrix::Matrix;
 pub use qr::{
-    PackedQr, backsolve, combine_r, householder_qr, householder_qr_reference, qr_r, qr_residuals,
+    PackedQr, backsolve, caqr_reference, combine_r, householder_qr, householder_qr_reference,
+    qr_r, qr_residuals,
 };
 pub use view::{MatrixView, MatrixViewMut, Workspace};

@@ -33,7 +33,10 @@ fn with_shim_workspace<T>(f: impl FnOnce(&mut Workspace) -> T) -> T {
 /// exactly the `[packed, tau]` pair the AOT `leaf_qr` artifact returns.
 #[derive(Clone, Debug)]
 pub struct PackedQr {
+    /// The packed `m x n` factor: R on/above the diagonal, reflector
+    /// tails below.
     pub packed: Matrix,
+    /// The `n` Householder reflector coefficients.
     pub tau: Vec<f32>,
 }
 
@@ -163,6 +166,29 @@ pub fn householder_qr_reference(a: &Matrix) -> PackedQr {
     PackedQr { packed, tau }
 }
 
+/// Sequential CAQR oracle: Householder QR of a general `m x n` matrix
+/// (`m >= n`) factored block column by block column of width `panel`,
+/// each panel's reflectors applied to the trailing matrix before the
+/// next panel is touched — the failure-free reference the distributed
+/// [`crate::caqr`] subsystem is pinned against.
+///
+/// **Bit-for-bit identical to [`householder_qr_reference`] for every
+/// panel width**: panel decomposition only regroups *when* a trailing
+/// column receives each reflector's rank-1 update; per column the
+/// reflectors arrive in the same ascending order with the same f64
+/// accumulation, and the single f64→f32 rounding happens once at the
+/// end.  The property tests pin this for panel widths from 1 to ≥ n.
+pub fn caqr_reference(a: &Matrix, panel: usize) -> PackedQr {
+    let (m, n) = a.shape();
+    assert!(m >= n, "caqr_reference: matrix must satisfy m >= n, got {m}x{n}");
+    assert!(panel >= 1, "caqr_reference: panel width must be >= 1");
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut tau64 = vec![0.0f64; n];
+    view::factor_packed_f64_panelled(&mut w, m, n, &mut tau64, panel);
+    let packed = Matrix::from_vec(m, n, w.into_iter().map(|x| x as f32).collect());
+    PackedQr { packed, tau: tau64.into_iter().map(|x| x as f32).collect() }
+}
+
 /// Just the canonical R factor (diag >= 0) of a tall-skinny panel —
 /// shim over [`view::leaf_r_into`] (skips materializing the packed
 /// reflectors entirely).
@@ -244,6 +270,25 @@ mod tests {
         let f = householder_qr(&Matrix::zeros(8, 3));
         assert!(f.packed.data().iter().all(|x| x.is_finite()));
         assert!(f.tau.iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn caqr_reference_is_bitwise_householder_reference() {
+        for (m, n) in [(24, 24), (40, 17), (64, 8), (9, 9), (16, 1)] {
+            let a = Matrix::random(m, n, (m * 17 + n) as u64);
+            let reference = householder_qr_reference(&a);
+            for panel in [1usize, 2, 7, n, n + 5] {
+                let c = caqr_reference(&a, panel);
+                let pb: Vec<u32> = c.packed.data().iter().map(|x| x.to_bits()).collect();
+                let rb: Vec<u32> = reference.packed.data().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(pb, rb, "packed differs at {m}x{n}, panel {panel}");
+                assert_eq!(
+                    c.tau.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    reference.tau.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "tau differs at {m}x{n}, panel {panel}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -68,18 +68,22 @@ impl<'a> MatrixView<'a> {
         Self { rows, cols, data }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// `(rows, cols)`.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
 
+    /// The underlying row-major slice.
     pub fn data(&self) -> &'a [f32] {
         self.data
     }
@@ -148,14 +152,17 @@ impl<'a> MatrixViewMut<'a> {
         Self { rows, cols, data }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// `(rows, cols)`.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
@@ -165,6 +172,7 @@ impl<'a> MatrixViewMut<'a> {
         MatrixView { rows: self.rows, cols: self.cols, data: self.data }
     }
 
+    /// Element write (debug-checked with shape context).
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f32) {
         debug_assert!(
@@ -176,6 +184,7 @@ impl<'a> MatrixViewMut<'a> {
         self.data[i * self.cols + j] = v;
     }
 
+    /// Set every element to `v`.
     pub fn fill(&mut self, v: f32) {
         self.data.fill(v);
     }
@@ -239,6 +248,7 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// An empty workspace (grows on first use).
     pub fn new() -> Self {
         Self::default()
     }
@@ -299,14 +309,32 @@ impl Workspace {
 /// (the trailing updates must use the f64 value — rounding it through
 /// f32 would break bitwise equality with the unblocked reference).
 fn factor_packed_f64(w: &mut [f64], m: usize, n: usize, tau64: &mut [f64]) {
+    factor_packed_f64_panelled(w, m, n, tau64, PANEL);
+}
+
+/// [`factor_packed_f64`] with an explicit column-panel width — the
+/// f64 core shared by the blocked kernels (`panel = PANEL`) and the
+/// CAQR oracle (`panel` = the caller's block-column width).  The
+/// result is bit-for-bit independent of `panel`: blocking only decides
+/// *when* a trailing column receives a reflector's rank-1 update,
+/// never the order of updates applied to any single column nor the
+/// accumulation order inside a dot product (see the module docs).
+pub(crate) fn factor_packed_f64_panelled(
+    w: &mut [f64],
+    m: usize,
+    n: usize,
+    tau64: &mut [f64],
+    panel: usize,
+) {
     debug_assert!(m >= n, "factor_packed_f64: panel must be tall-skinny, got {m}x{n}");
     debug_assert_eq!(w.len(), m * n);
     debug_assert_eq!(tau64.len(), n);
+    debug_assert!(panel >= 1, "panel width must be >= 1");
     let idx = |i: usize, j: usize| i * n + j;
 
     let mut k0 = 0;
     while k0 < n {
-        let k1 = (k0 + PANEL).min(n);
+        let k1 = (k0 + panel).min(n);
         // Panel factorization: classic unblocked loop restricted to
         // columns k0..k1 (updates touch panel columns only).
         for j in k0..k1 {
@@ -570,6 +598,114 @@ pub fn apply_q_in_place(packed: MatrixView<'_>, tau: &[f32], out: &mut MatrixVie
     }
 }
 
+// ---------------------------------------------------------------------
+// CAQR kernels (f64 end-to-end)
+// ---------------------------------------------------------------------
+//
+// The CAQR subsystem (`crate::caqr`) factors a general m×n matrix
+// panel by panel and must reproduce `qr::householder_qr_reference`
+// BIT FOR BIT — faults or not.  The reference works in f64 from the
+// f32 input with a single terminal rounding, so every inter-task
+// handoff in CAQR stays f64: the kernels below are the f64 halves of
+// that contract.  (The f32 [`apply_update_into`] view kernel is the
+// dispatchable single-precision sibling used by the runtime's
+// `ApplyUpdate` op.)
+
+/// Householder-factor an f64 row-major `rows x cols` panel in place
+/// (LAPACK `geqrf` packed layout), writing the `cols` reflector
+/// coefficients into `tau64`.
+///
+/// This is exactly the arithmetic [`factor_packed_f64_panelled`]
+/// performs on one block column restricted to the panel itself, so a
+/// CAQR run that factors panels with this kernel and updates trailing
+/// blocks with [`apply_update_f64`] is bit-for-bit identical to the
+/// unblocked whole-matrix reference.  Every replica of a panel-factor
+/// task therefore produces the identical bit pattern — the redundancy
+/// invariant CAQR's fault tolerance rests on.
+pub fn factor_panel_f64(w: &mut [f64], rows: usize, cols: usize, tau64: &mut [f64]) {
+    assert!(rows >= cols, "factor_panel_f64: panel must be tall-skinny, got {rows}x{cols}");
+    assert_eq!(w.len(), rows * cols, "factor_panel_f64: buffer length != rows*cols");
+    assert_eq!(tau64.len(), cols, "factor_panel_f64: tau must have {cols} entries");
+    factor_packed_f64_panelled(w, rows, cols, tau64, PANEL);
+}
+
+/// Apply the reflectors of a packed f64 panel (`rows x cols`, from
+/// [`factor_panel_f64`]) to an f64 trailing block (`rows x block_cols`)
+/// in place — the CAQR trailing-matrix update.
+///
+/// Column by column, reflectors in ascending order, f64 dot products —
+/// the exact accumulation order of the trailing loop inside
+/// [`factor_packed_f64_panelled`], so updating a trailing block as a
+/// separate (replicable) task is bit-for-bit identical to factoring
+/// the whole matrix in one buffer.  Distinct blocks touch disjoint
+/// columns, so update tasks parallelize without reordering any
+/// arithmetic.
+pub fn apply_update_f64(
+    panel: &[f64],
+    rows: usize,
+    cols: usize,
+    tau64: &[f64],
+    block: &mut [f64],
+    block_cols: usize,
+) {
+    assert_eq!(panel.len(), rows * cols, "apply_update_f64: panel length != rows*cols");
+    assert_eq!(tau64.len(), cols, "apply_update_f64: tau must have {cols} entries");
+    assert_eq!(
+        block.len(),
+        rows * block_cols,
+        "apply_update_f64: block length != rows*block_cols"
+    );
+    for c in 0..block_cols {
+        for j in 0..cols {
+            if tau64[j] == 0.0 {
+                continue; // identity reflector (zero column)
+            }
+            let mut dot = block[j * block_cols + c];
+            for i in j + 1..rows {
+                dot += panel[i * cols + j] * block[i * block_cols + c];
+            }
+            let s = tau64[j] * dot;
+            block[j * block_cols + c] -= s;
+            for i in j + 1..rows {
+                block[i * block_cols + c] -= panel[i * cols + j] * s;
+            }
+        }
+    }
+}
+
+/// f32 trailing-update view kernel: apply the reflectors of a packed
+/// f32 factorization to `block`, writing the updated block into `out`.
+///
+/// The single-precision sibling of [`apply_update_f64`], shaped for
+/// the runtime's `ApplyUpdate` kernel op: the block is loaded into the
+/// workspace's f64 arena, every reflector accumulates in f64, and the
+/// result is rounded to f32 exactly once — one rounding per element
+/// regardless of the panel width (the in-place `apply_qt_in_place`
+/// rounds after every reflector).
+pub fn apply_update_into(
+    packed: MatrixView<'_>,
+    tau: &[f32],
+    block: MatrixView<'_>,
+    out: &mut MatrixViewMut<'_>,
+    ws: &mut Workspace,
+) {
+    let (m, n) = packed.shape();
+    assert_eq!(tau.len(), n, "apply_update_into: tau must have {n} entries");
+    assert_eq!(block.rows(), m, "apply_update_into: block rows must match packed rows");
+    assert_eq!(out.shape(), block.shape(), "apply_update_into: out must match block shape");
+    let k = block.cols();
+    let buf = ws.f64_scratch(m * (n + k) + n);
+    let (pan, rest) = buf.split_at_mut(m * n);
+    let (t, blk) = rest.split_at_mut(n);
+    load_f64(pan, packed);
+    for (d, &s) in t.iter_mut().zip(tau) {
+        *d = s as f64;
+    }
+    load_f64(blk, block);
+    apply_update_f64(pan, m, n, t, blk, k);
+    store_f32(out.data, blk);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -689,6 +825,106 @@ mod tests {
         apply_qt_in_place(f.packed.as_view(), &f.tau, &mut out.as_view_mut());
         apply_q_in_place(f.packed.as_view(), &f.tau, &mut out.as_view_mut());
         assert!(out.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn panel_width_does_not_change_bits() {
+        // The blocked factorization is bitwise independent of the
+        // panel width — the property CAQR's bitwise contract rests on.
+        let (m, n) = (48, 20);
+        let a = Matrix::random(m, n, 77);
+        let reference = crate::linalg::qr::householder_qr_reference(&a);
+        for panel in [1usize, 3, 5, 8, 20, 64] {
+            let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+            let mut tau = vec![0.0f64; n];
+            factor_packed_f64_panelled(&mut w, m, n, &mut tau, panel);
+            let got: Vec<u32> = w.iter().map(|&x| (x as f32).to_bits()).collect();
+            assert_eq!(got, bits(&reference.packed), "packed differs at panel={panel}");
+        }
+    }
+
+    #[test]
+    fn caqr_f64_kernels_recompose_the_reference() {
+        // factor_panel_f64 on each block column + apply_update_f64 on
+        // the trailing blocks == the whole-matrix reference, bitwise.
+        let (m, n, b) = (32, 12, 5);
+        let a = Matrix::random(m, n, 31);
+        let reference = crate::linalg::qr::householder_qr_reference(&a);
+        let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+        let mut tau_all = vec![0.0f64; n];
+        let mut c0 = 0;
+        while c0 < n {
+            let c1 = (c0 + b).min(n);
+            let (rows, cols) = (m - c0, c1 - c0);
+            // Extract the panel (rows c0.., cols c0..c1) into a dense buffer.
+            let mut panel = vec![0.0f64; rows * cols];
+            for i in 0..rows {
+                for j in 0..cols {
+                    panel[i * cols + j] = w[(c0 + i) * n + (c0 + j)];
+                }
+            }
+            factor_panel_f64(&mut panel, rows, cols, &mut tau_all[c0..c1]);
+            // Update each trailing block independently (as CAQR tasks do).
+            let mut t0 = c1;
+            while t0 < n {
+                let t1 = (t0 + b).min(n);
+                let bk = t1 - t0;
+                let mut block = vec![0.0f64; rows * bk];
+                for i in 0..rows {
+                    for j in 0..bk {
+                        block[i * bk + j] = w[(c0 + i) * n + (t0 + j)];
+                    }
+                }
+                apply_update_f64(&panel, rows, cols, &tau_all[c0..c1], &mut block, bk);
+                for i in 0..rows {
+                    for j in 0..bk {
+                        w[(c0 + i) * n + (t0 + j)] = block[i * bk + j];
+                    }
+                }
+                t0 = t1;
+            }
+            // Write the factored panel back.
+            for i in 0..rows {
+                for j in 0..cols {
+                    w[(c0 + i) * n + (c0 + j)] = panel[i * cols + j];
+                }
+            }
+            c0 = c1;
+        }
+        let got: Vec<u32> = w.iter().map(|&x| (x as f32).to_bits()).collect();
+        assert_eq!(got, bits(&reference.packed), "CAQR recomposition differs from reference");
+        let tb: Vec<u32> = tau_all.iter().map(|&x| (x as f32).to_bits()).collect();
+        let rb: Vec<u32> = reference.tau.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(tb, rb, "tau differs");
+    }
+
+    #[test]
+    fn apply_update_into_matches_f64_path_at_f32_inputs() {
+        // The f32 view kernel must agree with apply_update_f64 run on
+        // the f32-rounded operands (same arithmetic, one rounding).
+        let (m, n, k) = (16, 4, 3);
+        let a = Matrix::random(m, n, 9);
+        let f = crate::linalg::qr::householder_qr(&a);
+        let block = Matrix::random(m, k, 10);
+        let mut out = Matrix::zeros(m, k);
+        let mut ws = Workspace::new();
+        apply_update_into(
+            f.packed.as_view(),
+            &f.tau,
+            block.as_view(),
+            &mut out.as_view_mut(),
+            &mut ws,
+        );
+        let pan: Vec<f64> = f.packed.data().iter().map(|&x| x as f64).collect();
+        let tau: Vec<f64> = f.tau.iter().map(|&x| x as f64).collect();
+        let mut blk: Vec<f64> = block.data().iter().map(|&x| x as f64).collect();
+        apply_update_f64(&pan, m, n, &tau, &mut blk, k);
+        let want: Vec<u32> = blk.iter().map(|&x| (x as f32).to_bits()).collect();
+        assert_eq!(bits(&out), want);
+        // And it must agree with the in-place Qᵀ application numerically.
+        let mut qt = block.clone();
+        apply_qt_in_place(f.packed.as_view(), &f.tau, &mut qt.as_view_mut());
+        assert!(out.max_abs_diff(&qt) < 1e-4);
     }
 
     #[test]

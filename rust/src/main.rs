@@ -9,6 +9,9 @@
 //! * `sweep`     robustness Monte-Carlo over failure counts (analytic
 //!               engine; `--full` routes through an engine campaign on
 //!               the full simulator)
+//! * `caqr`      general-matrix fault-tolerant CAQR: one factorization
+//!               with (rank, panel, stage) kills or a named scenario,
+//!               or `--sweep` for survival over panel counts
 //! * `validate`  check the paper's 2^s − 1 bounds against sampled
 //!               failure patterns
 //! * `info`      artifact manifest / backend diagnostics
@@ -17,9 +20,10 @@
 //! submits through it.  Argument parsing is hand-rolled (`--flag
 //! value`), since the vendored crate set has no clap; see `Args` below.
 
-use ft_tsqr::analysis::{FullSimSweep, SurvivalSweep, max_tolerated_by_step};
+use ft_tsqr::analysis::{CaqrSweep, FullSimSweep, SurvivalSweep, max_tolerated_by_step};
+use ft_tsqr::caqr::{CaqrScenario, CaqrSpec};
 use ft_tsqr::config::{Config, FailureConfig};
-use ft_tsqr::fault::Scenario;
+use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage, Scenario};
 use ft_tsqr::report::{Table, fmt_f, fmt_prob};
 use ft_tsqr::runtime::Manifest;
 use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan};
@@ -34,6 +38,10 @@ USAGE:
   repro campaign [run flags] [--runs N] [--concurrency W]
   repro trace    <fig3|fig4|fig5|baseline-abort> [--rows-per-proc R] [--cols N]
   repro sweep    [--algo A] [--procs P] [--trials T] [--full]
+  repro caqr     [--algo redundant|self-healing] [--procs P] [--rows M]
+                 [--cols N] [--panel B] [--seed S] [--scenario NAME]
+                 [--kill-update r@p,...] [--kill-factor r@p,...]
+                 [--sweep [--f F] [--trials T]]
   repro validate [--procs P] [--trials T]
   repro info     [--artifact-dir DIR]
 
@@ -56,7 +64,7 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 // boolean flags take no value; everything else takes one
-                if matches!(name, "trace" | "help" | "full") {
+                if matches!(name, "trace" | "help" | "full" | "sweep") {
                     flags.insert(name.to_string(), "true".to_string());
                 } else {
                     i += 1;
@@ -92,17 +100,23 @@ impl Args {
 }
 
 fn parse_kills(s: &str) -> Result<Vec<(usize, u32)>> {
+    parse_kills_as(s, "round")
+}
+
+/// `rank@<unit>,rank@<unit>` — `unit` names the second field in
+/// diagnostics (`round` for TSQR kills, `panel` for caqr kills).
+fn parse_kills_as(s: &str, unit: &str) -> Result<Vec<(usize, u32)>> {
     s.split(',')
         .filter(|t| !t.is_empty())
         .map(|tok| {
             let (r, step) = tok
                 .split_once('@')
-                .ok_or_else(|| Error::Config(format!("bad kill '{tok}', want rank@round")))?;
+                .ok_or_else(|| Error::Config(format!("bad kill '{tok}', want rank@{unit}")))?;
             Ok((
                 r.trim().parse().map_err(|e| Error::Config(format!("bad rank '{r}': {e}")))?,
                 step.trim()
                     .parse()
-                    .map_err(|e| Error::Config(format!("bad round '{step}': {e}")))?,
+                    .map_err(|e| Error::Config(format!("bad {unit} '{step}': {e}")))?,
             ))
         })
         .collect()
@@ -309,6 +323,119 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_caqr(args: &Args) -> Result<()> {
+    let algo = args.parse_flag::<Algo>("algo")?.unwrap_or(Algo::Redundant);
+    let procs = args.parse_flag::<usize>("procs")?.unwrap_or(4);
+    let rows = args.parse_flag::<usize>("rows")?.unwrap_or(256);
+    let cols = args.parse_flag::<usize>("cols")?.unwrap_or(64);
+    let panel = args.parse_flag::<usize>("panel")?.unwrap_or(16);
+    let seed = args.parse_flag::<u64>("seed")?.unwrap_or(42);
+    let engine = ft_tsqr::engine::Engine::host();
+
+    if args.get("sweep").is_some() {
+        // Survival over panel counts: the FullSimSweep mode for the
+        // general-matrix workload.
+        let f = args.parse_flag::<usize>("f")?.unwrap_or(2);
+        let trials = args.parse_flag::<u64>("trials")?.unwrap_or(60);
+        let sweep = CaqrSweep::new(&engine, algo, procs)
+            .with_panel(panel)
+            .with_samples(trials)
+            .with_seed(seed)
+            .with_concurrency(4);
+        let mut table = Table::new(
+            format!(
+                "P(complete) — CAQR {} on {procs} procs, {f} update-stage failures \
+                 ({trials} runs/cell)",
+                algo.name()
+            ),
+            &["panels", "matrix", "P(complete)"],
+        );
+        for panels in [1usize, 2, 4, 8] {
+            let n = panels * panel;
+            let m = n.max(procs * panel);
+            let est = sweep.at_panels(panels, f)?;
+            table.row(vec![
+                panels.to_string(),
+                format!("{m}x{n}"),
+                fmt_prob(est.probability(), est.ci95()),
+            ]);
+        }
+        print!("{}", table.render());
+        return Ok(());
+    }
+
+    let spec = if let Some(name) = args.get("scenario") {
+        let sc = CaqrScenario::by_name(name).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown caqr scenario '{name}'; available: {}",
+                CaqrScenario::all().iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+            ))
+        })?;
+        println!("# {} — {}", sc.name, sc.description);
+        sc.spec(rows, cols, panel).with_seed(seed)
+    } else {
+        let mut kills: Vec<(usize, usize, CaqrStage)> = Vec::new();
+        if let Some(k) = args.get("kill-update") {
+            for (r, p) in parse_kills_as(k, "panel")? {
+                kills.push((r, p as usize, CaqrStage::Update));
+            }
+        }
+        if let Some(k) = args.get("kill-factor") {
+            for (r, p) in parse_kills_as(k, "panel")? {
+                kills.push((r, p as usize, CaqrStage::Factor));
+            }
+        }
+        CaqrSpec::new(algo, procs, rows, cols, panel)
+            .with_seed(seed)
+            .with_schedule(CaqrKillSchedule::at(&kills))
+    };
+
+    spec.validate()?; // before plan(): the plan asserts what validate reports
+    println!(
+        "caqr: algo={} procs={} matrix={}x{} panel={} panels={}",
+        spec.algo.name(),
+        spec.procs,
+        spec.m,
+        spec.n,
+        spec.panel,
+        spec.plan().panels(),
+    );
+    let res = engine.run_caqr(spec)?;
+    for ps in &res.panel_survival {
+        println!(
+            "panel {}: alive_after={} factor_recovered={} update_recoveries={} respawns={}",
+            ps.panel, ps.alive_after, ps.factor_recovered, ps.update_recoveries, ps.respawns
+        );
+    }
+    println!(
+        "success={} dead={} panels_completed={}/{} update_tasks={} recoveries={} respawns={} wall={:?}",
+        res.success(),
+        res.dead_count(),
+        res.metrics.panels_completed,
+        res.panels,
+        res.metrics.update_tasks,
+        res.metrics.update_recoveries,
+        res.metrics.respawns,
+        res.wall,
+    );
+    if let Some((panel, stage)) = res.failed_at {
+        println!("FAILED at panel {panel}, {} stage: a replica pair was wiped", stage.name());
+    }
+    if let Some(v) = &res.verification {
+        println!(
+            "verify: rel_fro_err={} max_abs_err={} upper_triangular={} ok={}",
+            fmt_f(v.rel_fro_err),
+            fmt_f(v.max_abs_err),
+            v.upper_triangular,
+            v.ok
+        );
+    }
+    if !res.success() {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let procs = args.parse_flag::<usize>("procs")?.unwrap_or(16);
     let trials = args.parse_flag::<u64>("trials")?.unwrap_or(2000);
@@ -392,6 +519,7 @@ fn main() {
         "campaign" => cmd_campaign(&args),
         "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
+        "caqr" => cmd_caqr(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),
         other => Err(Error::Config(format!("unknown command '{other}'\n\n{USAGE}"))),

@@ -7,16 +7,22 @@ use std::time::{Duration, Instant};
 /// Result of one measurement.
 #[derive(Debug, Clone, Copy)]
 pub struct Sample {
+    /// Timed iterations.
     pub iters: u32,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Median iteration.
     pub median: Duration,
+    /// Mean iteration.
     pub mean: Duration,
 }
 
 impl Sample {
+    /// Median in microseconds.
     pub fn median_us(&self) -> f64 {
         self.median.as_secs_f64() * 1e6
     }
+    /// Median in milliseconds.
     pub fn median_ms(&self) -> f64 {
         self.median.as_secs_f64() * 1e3
     }
@@ -26,6 +32,7 @@ impl Sample {
     }
 }
 
+/// Pretty-print a duration with an adaptive unit (ns/µs/ms/s).
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
     if s < 1e-6 {

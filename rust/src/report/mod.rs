@@ -11,12 +11,16 @@ use crate::error::{Error, Result};
 /// A simple column-aligned table.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Title printed above the table (and slugged into the CSV name).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each the header arity).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with a title and column headers.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Self {
             title: title.into(),

@@ -31,8 +31,11 @@ use super::service::PjrtService;
 /// Which compute path executes kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
+    /// AOT artifacts only; error on shapes outside the manifest.
     Pjrt,
+    /// Pure-rust blocked Householder path (no artifacts).
     Host,
+    /// PJRT when the manifest has the shape, host otherwise.
     Auto,
 }
 
@@ -51,14 +54,21 @@ impl std::str::FromStr for Backend {
 /// Result of a leaf factorization: R plus the implicit-Q representation.
 #[derive(Debug, Clone)]
 pub struct Factorization {
+    /// The `n x n` upper-triangular R factor.
     pub r: Matrix,
+    /// LAPACK `geqrf` packed factor (R above/on the diagonal,
+    /// reflector tails below).
     pub packed: Matrix,
-    pub tau: Matrix, // (n, 1)
+    /// The `(n, 1)` reflector coefficients.
+    pub tau: Matrix,
 }
 
+/// Per-executor dispatch counters (relaxed atomics).
 #[derive(Default, Debug)]
 pub struct ExecutorStats {
+    /// Kernel calls served by the PJRT backend.
     pub pjrt_calls: AtomicU64,
+    /// Kernel calls served by the pure-rust host backend.
     pub host_calls: AtomicU64,
 }
 
@@ -112,10 +122,12 @@ impl Executor {
         Self::with_artifacts(dir, Backend::Auto, 2).unwrap_or_else(|_| Self::host())
     }
 
+    /// The dispatch policy this executor was built with.
     pub fn backend(&self) -> Backend {
         self.backend
     }
 
+    /// Dispatch counters (PJRT vs host calls).
     pub fn stats(&self) -> &ExecutorStats {
         &self.stats
     }
@@ -274,6 +286,19 @@ impl Executor {
         Ok(out.pop().expect("arity 1"))
     }
 
+    /// CAQR trailing-matrix update: apply a packed panel factorization
+    /// to a trailing block.  Same product as [`apply_qt`](Self::apply_qt)
+    /// but accumulated in pooled f64 workspace scratch with a single
+    /// terminal rounding — the single-precision twin of the f64 update
+    /// tasks `crate::caqr` schedules.
+    pub fn apply_update(&self, f: &Factorization, block: &Matrix) -> Result<Matrix> {
+        let mut out = self.call(
+            KernelOp::ApplyUpdate,
+            &[f.packed.as_view(), f.tau.as_view(), block.as_view()],
+        )?;
+        Ok(out.pop().expect("arity 1"))
+    }
+
     /// Materialize the thin Q of a packed factorization.
     pub fn build_q(&self, f: &Factorization) -> Result<Matrix> {
         let mut out = self.call(KernelOp::BuildQ, &[f.packed.as_view(), f.tau.as_view()])?;
@@ -313,6 +338,18 @@ mod tests {
         let qtb = ex.apply_qt(&f, &b).unwrap();
         let x = ex.backsolve(&f.r, &qtb.row_block(0, 4)).unwrap();
         assert!(x.max_abs_diff(&xt) < 1e-2);
+    }
+
+    #[test]
+    fn host_apply_update_matches_apply_qt() {
+        let ex = Executor::host();
+        let a = Matrix::random(24, 4, 5);
+        let f = ex.leaf_qr(&a).unwrap();
+        let b = Matrix::random(24, 3, 6);
+        let upd = ex.apply_update(&f, &b).unwrap();
+        let qt = ex.apply_qt(&f, &b).unwrap();
+        assert_eq!(upd.shape(), (24, 3));
+        assert!(upd.max_abs_diff(&qt) < 1e-4, "ApplyUpdate must compute Qᵀ·block");
     }
 
     #[test]

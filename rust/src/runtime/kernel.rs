@@ -41,6 +41,11 @@ pub enum KernelOp {
     Backsolve,
     /// `Qᵀ b` from a packed factorization → `[qtb]`.
     ApplyQt,
+    /// CAQR trailing-matrix update: apply a packed panel's reflectors
+    /// to a trailing block with f64 workspace accumulation and a
+    /// single rounding → `[updated_block]` (see
+    /// [`crate::linalg::view::apply_update_into`]).
+    ApplyUpdate,
     /// Materialize the thin Q of a packed factorization → `[q]`.
     BuildQ,
 }
@@ -58,6 +63,9 @@ impl KernelOp {
             KernelOp::ApplyQt => {
                 Manifest::apply_qt_name(views[0].rows(), views[0].cols(), views[2].cols())
             }
+            KernelOp::ApplyUpdate => {
+                Manifest::apply_update_name(views[0].rows(), views[0].cols(), views[2].cols())
+            }
             KernelOp::BuildQ => Manifest::build_q_name(views[0].rows(), views[0].cols()),
         }
     }
@@ -65,8 +73,11 @@ impl KernelOp {
 
 /// One kernel invocation: operation, borrowed inputs, scratch arena.
 pub struct KernelCall<'call> {
+    /// Which kernel to run.
     pub op: KernelOp,
+    /// Borrowed inputs, in manifest order.
     pub views: &'call [MatrixView<'call>],
+    /// Scratch arena (pooled by the executor).
     pub workspace: &'call mut Workspace,
 }
 
@@ -74,6 +85,7 @@ pub struct KernelCall<'call> {
 /// call convention, so dispatch is one `&dyn Kernel` decision instead
 /// of per-op branching.
 pub trait Kernel: Send + Sync {
+    /// Stable backend name (`host` / `pjrt`).
     fn name(&self) -> &'static str;
     /// Whether this backend consumes [`KernelCall::workspace`] for the
     /// given op — lets the executor skip pool traffic for ops (or
@@ -94,11 +106,16 @@ impl Kernel for HostKernel {
     }
 
     fn wants_workspace(&self, op: KernelOp) -> bool {
-        // Factorizations run through the f64 scratch arena; the
-        // solve/apply kernels work in place on their outputs.
+        // Factorizations and the CAQR trailing update run through the
+        // f64 scratch arena; the solve/apply kernels work in place on
+        // their outputs.
         matches!(
             op,
-            KernelOp::LeafQr | KernelOp::LeafR | KernelOp::Combine | KernelOp::CombineR
+            KernelOp::LeafQr
+                | KernelOp::LeafR
+                | KernelOp::Combine
+                | KernelOp::CombineR
+                | KernelOp::ApplyUpdate
         )
     }
 
@@ -148,6 +165,12 @@ impl Kernel for HostKernel {
                 view::apply_qt_in_place(v[0], v[1].data(), &mut out.as_view_mut());
                 Ok(vec![out])
             }
+            KernelOp::ApplyUpdate => {
+                // views: [packed, tau (n×1), block]
+                let mut out = Matrix::zeros(v[2].rows(), v[2].cols());
+                view::apply_update_into(v[0], v[1].data(), v[2], &mut out.as_view_mut(), ws);
+                Ok(vec![out])
+            }
             KernelOp::BuildQ => {
                 let (m, n) = v[0].shape();
                 let mut out = Matrix::eye(m, n);
@@ -167,10 +190,12 @@ pub struct PjrtKernel {
 }
 
 impl PjrtKernel {
+    /// Wrap a running PJRT service as a [`Kernel`].
     pub fn new(service: PjrtService) -> Self {
         Self { service }
     }
 
+    /// The artifact manifest the service was started over.
     pub fn manifest(&self) -> &Manifest {
         self.service.manifest()
     }
@@ -220,6 +245,7 @@ pub struct WorkspacePool {
 }
 
 impl WorkspacePool {
+    /// An empty pool (workspaces are created on demand).
     pub fn new() -> Self {
         Self::default()
     }
@@ -263,6 +289,7 @@ impl WorkspacePool {
         self.free.lock().unwrap().len()
     }
 
+    /// Created/reused counters.
     pub fn stats(&self) -> WorkspaceStats {
         WorkspaceStats {
             created: self.created.load(Ordering::Relaxed),

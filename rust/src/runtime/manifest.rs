@@ -12,6 +12,7 @@ use crate::util::Json;
 /// One AOT entry point (`leaf_qr_256x8`, `combine_16`, ...).
 #[derive(Debug, Clone)]
 pub struct Entry {
+    /// Entry-point name (`leaf_qr_256x8`, ...).
     pub name: String,
     /// Kind tag: `leaf_qr` | `combine` | `backsolve` | `apply_qt` | `build_q`.
     pub kind: String,
@@ -26,6 +27,7 @@ pub struct Entry {
 }
 
 impl Entry {
+    /// Shape parameter by name (`m`, `n`, `k`).
     pub fn param(&self, key: &str) -> Option<usize> {
         self.params.get(key).copied()
     }
@@ -55,7 +57,9 @@ impl Entry {
 /// Parsed manifest plus the directory it was loaded from.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// The artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Element dtype of every artifact (`f32`).
     pub dtype: String,
     entries: HashMap<String, Entry>,
 }
@@ -90,14 +94,17 @@ impl Manifest {
         self.entries.get(name)
     }
 
+    /// Number of entry points.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when the manifest carries no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// All entry-point names (unordered).
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(|s| s.as_str())
     }
@@ -107,25 +114,35 @@ impl Manifest {
         self.dir.join(&entry.file)
     }
 
-    /// Canonical entry-point names (must match `aot.py` naming).
+    /// Canonical `leaf_qr_{m}x{n}` entry name (must match `aot.py`).
     pub fn leaf_qr_name(m: usize, n: usize) -> String {
         format!("leaf_qr_{m}x{n}")
     }
+    /// Canonical `leaf_r_{m}x{n}` entry name.
     pub fn leaf_r_name(m: usize, n: usize) -> String {
         format!("leaf_r_{m}x{n}")
     }
+    /// Canonical `combine_r_{n}` entry name.
     pub fn combine_r_name(n: usize) -> String {
         format!("combine_r_{n}")
     }
+    /// Canonical `combine_{n}` entry name.
     pub fn combine_name(n: usize) -> String {
         format!("combine_{n}")
     }
+    /// Canonical `backsolve_{n}x{k}` entry name.
     pub fn backsolve_name(n: usize, k: usize) -> String {
         format!("backsolve_{n}x{k}")
     }
+    /// Canonical `apply_qt_{m}x{n}x{k}` entry name.
     pub fn apply_qt_name(m: usize, n: usize, k: usize) -> String {
         format!("apply_qt_{m}x{n}x{k}")
     }
+    /// `apply_update_{m}x{n}x{k}` — the CAQR trailing-update kernel.
+    pub fn apply_update_name(m: usize, n: usize, k: usize) -> String {
+        format!("apply_update_{m}x{n}x{k}")
+    }
+    /// Canonical `build_q_{m}x{n}` entry name.
     pub fn build_q_name(m: usize, n: usize) -> String {
         format!("build_q_{m}x{n}")
     }

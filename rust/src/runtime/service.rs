@@ -41,8 +41,11 @@ use super::manifest::Manifest;
 /// Cheap shared counters exported to the perf harness.
 #[derive(Default, Debug)]
 pub struct ServiceStats {
+    /// Entry-point executions served.
     pub executions: AtomicU64,
+    /// Lazy HLO compilations performed (cache misses).
     pub compiles: AtomicU64,
+    /// Executions served from the per-shard executable cache.
     pub cache_hits: AtomicU64,
 }
 
@@ -85,10 +88,12 @@ impl PjrtService {
         Ok(Self { senders, manifest, stats, next_shard: Arc::new(AtomicUsize::new(0)) })
     }
 
+    /// The manifest the service was started over.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Execution/compile/cache counters.
     pub fn stats(&self) -> &ServiceStats {
         &self.stats
     }
@@ -237,14 +242,17 @@ impl PjrtService {
         ))
     }
 
+    /// Statically unreachable (no stub instance exists).
     pub fn manifest(&self) -> &Manifest {
         match *self {}
     }
 
+    /// Statically unreachable (no stub instance exists).
     pub fn stats(&self) -> &ServiceStats {
         match *self {}
     }
 
+    /// Statically unreachable (no stub instance exists).
     pub fn execute(&self, _entry: &str, _inputs: Vec<Matrix>) -> Result<Vec<Matrix>> {
         match *self {}
     }

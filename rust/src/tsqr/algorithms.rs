@@ -43,6 +43,8 @@ pub enum ProcOutcome {
 }
 
 impl ProcOutcome {
+    /// The world-status this outcome translates to (`None` for a
+    /// crash: the world already marked the rank Dead).
     pub fn exit_kind(&self) -> Option<ExitKind> {
         match self {
             ProcOutcome::FinalR(_) => Some(ExitKind::CompletedWithR),

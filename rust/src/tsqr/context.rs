@@ -21,6 +21,7 @@ pub type ResultMap = Arc<Mutex<HashMap<Rank, Arc<Matrix>>>>;
 /// Hot-path leaf result: just the R̃ the exchanges ship, already behind
 /// the `Arc` the post board and the result map share.
 pub struct HotLeaf {
+    /// The leaf panel's R̃ factor.
     pub r: Arc<Matrix>,
 }
 
@@ -28,12 +29,19 @@ pub struct HotLeaf {
 /// Self-Healing respawn path clones it for the replacement process).
 #[derive(Clone)]
 pub struct Ctx {
+    /// This process's rank.
     pub rank: Rank,
+    /// The reduction-tree plan of the run.
     pub plan: TreePlan,
+    /// The shared world (post board + failure detector).
     pub world: Arc<World>,
+    /// The kernel executor (session-owned, cheap clone).
     pub exec: Executor,
+    /// Trace sink (disabled on the bench hot path).
     pub trace: TraceSink,
+    /// The run's fault-injection schedule.
     pub schedule: Arc<KillSchedule>,
+    /// Where finished processes deposit their final R.
     pub results: ResultMap,
     /// This run's completion latch over the engine worker pool: every
     /// process body — primaries and Self-Healing replacements alike —

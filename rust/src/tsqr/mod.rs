@@ -2,6 +2,7 @@
 //! TSQR (§III).
 //!
 //! * [`plan`]       — reduction-tree structure, buddies, replica groups
+//! * [`panel`]      — CAQR panel sequencing over per-panel tree plans
 //! * [`algorithms`] — Algorithms 1–6 as simulated-process bodies
 //! * [`runner`]     — run lifecycle, result gathering
 //! * [`trace`]      — machine-checkable execution traces (Figures 1–5)
@@ -10,6 +11,7 @@
 
 pub mod algorithms;
 pub mod context;
+pub mod panel;
 pub mod plan;
 pub mod qfactor;
 pub mod runner;
@@ -18,6 +20,7 @@ pub mod verify;
 
 pub use algorithms::ProcOutcome;
 pub use context::Ctx;
+pub use panel::PanelPlan;
 pub use plan::TreePlan;
 pub use qfactor::QrTree;
 pub use runner::{Algo, RunResult, RunSpec, run};

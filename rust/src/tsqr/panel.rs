@@ -1,0 +1,218 @@
+//! The CAQR panel plan: how a general `m x n` factorization decomposes
+//! into a *sequence* of per-panel task groups, and which simulated
+//! process owns (and which replicates) each task.
+//!
+//! The follow-up paper ("Fault Tolerant QR Factorization for General
+//! Matrices", arXiv:1604.02504) extends the TSQR redundancy idea to
+//! general matrices: each block column is factored as a tall-skinny
+//! panel, and the trailing-matrix updates — the bulk of the flops —
+//! are *replicated* across processes so a failure during an update
+//! loses nothing that a surviving replica does not still hold.
+//!
+//! A [`PanelPlan`] sequences one [`TreePlan`] per panel (the replica
+//! structure — buddy pairing, replica groups — is the same XOR
+//! machinery TSQR uses) and assigns every panel-factor and
+//! trailing-update task an *owner* plus a *replica set*:
+//!
+//! * the **panel factor** of panel `k` is computed redundantly by the
+//!   whole round-1 replica group of its owner (`2` copies on a
+//!   multi-process world — the paper's `2^s` redundancy at `s = 1`);
+//! * **trailing update** block `j` of panel `k` is computed by its
+//!   owner *and* the owner's round-0 buddy — two bit-identical copies,
+//!   so one process death per pair is recoverable mid-factorization.
+//!
+//! The plan is pure bookkeeping (no matrices); `caqr::exec` walks it.
+
+use crate::ulfm::Rank;
+
+use super::plan::TreePlan;
+
+/// Static decomposition of a general `m x n` CAQR factorization over
+/// `procs` simulated processes with block columns of width `panel`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PanelPlan {
+    m: usize,
+    n: usize,
+    panel: usize,
+    procs: usize,
+}
+
+impl PanelPlan {
+    /// Build a plan.  `m >= n >= 1`, `panel >= 1`, `procs >= 1`.
+    pub fn new(m: usize, n: usize, panel: usize, procs: usize) -> Self {
+        assert!(n >= 1, "need at least one column");
+        assert!(m >= n, "CAQR needs m >= n, got {m}x{n}");
+        assert!(panel >= 1, "panel width must be >= 1");
+        assert!(procs >= 1, "need at least one process");
+        Self { m, n, panel, procs }
+    }
+
+    /// Matrix rows.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Matrix columns.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Block-column width.
+    pub fn panel(&self) -> usize {
+        self.panel
+    }
+
+    /// Simulated processes the tasks are spread over.
+    pub fn procs(&self) -> usize {
+        self.procs
+    }
+
+    /// Number of block columns: `ceil(n / panel)`.
+    pub fn panels(&self) -> usize {
+        self.n.div_ceil(self.panel)
+    }
+
+    /// The reduction-tree plan sequenced for panel `k` — one per
+    /// panel, all over the same world (uniform here; the structure is
+    /// what CAQR borrows: buddy pairing and replica groups).
+    pub fn tree(&self, _k: usize) -> TreePlan {
+        TreePlan::new(self.procs)
+    }
+
+    /// Column range `[c0, c1)` of panel `k`.
+    pub fn col_range(&self, k: usize) -> (usize, usize) {
+        let c0 = k * self.panel;
+        (c0, (c0 + self.panel).min(self.n))
+    }
+
+    /// First row panel `k`'s factorization (and its trailing updates)
+    /// touches: rows above the panel's diagonal block are final.
+    pub fn row0(&self, k: usize) -> usize {
+        self.col_range(k).0
+    }
+
+    /// Owner of panel `k`'s factor task (round-robin over processes).
+    pub fn factor_owner(&self, k: usize) -> Rank {
+        k % self.procs
+    }
+
+    /// Ranks that redundantly compute panel `k`'s factor: the owner's
+    /// level-1 replica group (owner + round-0 buddy on a multi-process
+    /// world) — every member produces the identical bit pattern, so
+    /// any survivor's copy is *the* result.
+    pub fn factor_replicas(&self, k: usize) -> Vec<Rank> {
+        self.tree(k).replicas_of(self.factor_owner(k), 1)
+    }
+
+    /// Number of trailing-update blocks panel `k` schedules.
+    pub fn update_blocks(&self, k: usize) -> usize {
+        let (_, c1) = self.col_range(k);
+        (self.n - c1).div_ceil(self.panel)
+    }
+
+    /// Column range `[t0, t1)` of trailing block `j` of panel `k`.
+    pub fn update_cols(&self, k: usize, j: usize) -> (usize, usize) {
+        let (_, c1) = self.col_range(k);
+        let t0 = c1 + j * self.panel;
+        (t0, (t0 + self.panel).min(self.n))
+    }
+
+    /// Owner of trailing block `j` of panel `k` — spread so the update
+    /// work of one panel lands on distinct processes where possible.
+    pub fn update_owner(&self, k: usize, j: usize) -> Rank {
+        (k + 1 + j) % self.procs
+    }
+
+    /// The replica of an update task: the owner's round-0 buddy
+    /// (`owner XOR 1`), i.e. the same pairing the first TSQR exchange
+    /// uses.  `None` on worlds where the buddy does not exist.
+    pub fn update_replica(&self, k: usize, j: usize) -> Option<Rank> {
+        self.tree(k).buddy(self.update_owner(k, j), 0)
+    }
+
+    /// Owner + replica of update task `(k, j)`, owner first.
+    pub fn update_assignees(&self, k: usize, j: usize) -> Vec<Rank> {
+        let owner = self.update_owner(k, j);
+        match self.update_replica(k, j) {
+            Some(r) => vec![owner, r],
+            None => vec![owner],
+        }
+    }
+
+    /// Copies of every CAQR task result (2 on multi-process worlds):
+    /// the per-panel tolerated-failure count is `replication() - 1`,
+    /// the CAQR analogue of the paper's `2^s - 1`.
+    pub fn replication(&self) -> usize {
+        if self.procs >= 2 { 2 } else { 1 }
+    }
+
+    /// Scratch/task high-water shape of one panel step: `(m, panel)`
+    /// (a panel-factor working buffer; update blocks are never wider).
+    pub fn workspace_shape(&self) -> (usize, usize) {
+        (self.m, self.panel.min(self.n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panel_count_and_ranges() {
+        let p = PanelPlan::new(64, 20, 8, 4);
+        assert_eq!(p.panels(), 3);
+        assert_eq!(p.col_range(0), (0, 8));
+        assert_eq!(p.col_range(2), (16, 20), "last panel is ragged");
+        assert_eq!(p.row0(1), 8);
+        assert_eq!(p.update_blocks(0), 2);
+        assert_eq!(p.update_blocks(2), 0, "last panel has no trailing matrix");
+        assert_eq!(p.update_cols(0, 1), (16, 20));
+    }
+
+    #[test]
+    fn owners_rotate_and_replicas_pair() {
+        let p = PanelPlan::new(32, 16, 4, 4);
+        assert_eq!(p.factor_owner(0), 0);
+        assert_eq!(p.factor_owner(5), 1);
+        assert_eq!(p.factor_replicas(0), vec![0, 1], "level-1 replica group");
+        assert_eq!(p.factor_replicas(1), vec![0, 1]);
+        assert_eq!(p.factor_replicas(2), vec![2, 3]);
+        for k in 0..p.panels() {
+            for j in 0..p.update_blocks(k) {
+                let a = p.update_assignees(k, j);
+                assert_eq!(a.len(), 2);
+                assert_eq!(a[0] ^ a[1], 1, "replica is the round-0 buddy");
+            }
+        }
+        assert_eq!(p.replication(), 2);
+    }
+
+    #[test]
+    fn single_process_degenerates() {
+        let p = PanelPlan::new(16, 8, 3, 1);
+        assert_eq!(p.factor_replicas(0), vec![0]);
+        assert_eq!(p.update_assignees(0, 0), vec![0]);
+        assert_eq!(p.replication(), 1, "no redundancy on a lone process");
+    }
+
+    #[test]
+    fn update_blocks_spread_over_distinct_ranks() {
+        let p = PanelPlan::new(64, 32, 8, 4);
+        let owners: Vec<Rank> = (0..p.update_blocks(0)).map(|j| p.update_owner(0, j)).collect();
+        assert_eq!(owners, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn workspace_shape_covers_panel() {
+        let p = PanelPlan::new(64, 20, 8, 4);
+        assert_eq!(p.workspace_shape(), (64, 8));
+        let q = PanelPlan::new(10, 3, 8, 2);
+        assert_eq!(q.workspace_shape(), (10, 3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wide_matrix_rejected() {
+        PanelPlan::new(4, 8, 2, 2);
+    }
+}

@@ -30,6 +30,7 @@ impl TreePlan {
         Self { procs }
     }
 
+    /// World size the plan was built for.
     pub fn procs(&self) -> usize {
         self.procs
     }

@@ -20,8 +20,11 @@ use crate::runtime::{Executor, Factorization};
 /// level 0 holds the leaf factorizations, level k > 0 the combines.
 #[derive(Debug)]
 pub struct QrTree {
+    /// Leaf count (a power of two).
     pub leaves: usize,
+    /// Matrix columns.
     pub cols: usize,
+    /// Rows per leaf panel.
     pub rows_per_leaf: usize,
     /// `levels[0]` = leaf factorizations (one per leaf);
     /// `levels[k]` = combine factorizations (leaves >> k of them).

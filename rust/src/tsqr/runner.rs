@@ -52,6 +52,7 @@ impl Algo {
         Algo::Checkpointed,
     ];
 
+    /// Stable CLI/report name.
     pub fn name(&self) -> &'static str {
         match self {
             Algo::Baseline => "baseline",
@@ -94,16 +95,23 @@ impl std::fmt::Display for Algo {
 /// Everything needed to run one factorization.
 #[derive(Clone)]
 pub struct RunSpec {
+    /// Which algorithm to run.
     pub algo: Algo,
+    /// Simulated world size.
     pub procs: usize,
+    /// Leaf panel rows per process.
     pub rows_per_proc: usize,
+    /// Matrix columns.
     pub cols: usize,
+    /// Input-matrix seed.
     pub seed: u64,
+    /// Fault-injection schedule.
     pub schedule: Arc<KillSchedule>,
     /// Kernel executor.  Note: specs submitted to an
     /// [`crate::engine::Engine`] run on the *engine's* executor — this
     /// field only matters for the one-shot [`run`] path.
     pub executor: Executor,
+    /// Collect an execution trace (off on the bench hot path).
     pub collect_trace: bool,
     /// Verify the final R against the host oracle (skippable for large
     /// Monte-Carlo sweeps where only survival matters).
@@ -126,31 +134,37 @@ impl RunSpec {
         }
     }
 
+    /// Replace the fault-injection schedule.
     pub fn with_schedule(mut self, s: KillSchedule) -> Self {
         self.schedule = Arc::new(s);
         self
     }
 
+    /// Replace the executor (one-shot path only; engines override it).
     pub fn with_executor(mut self, e: Executor) -> Self {
         self.executor = e;
         self
     }
 
+    /// Replace the input-matrix seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Toggle trace collection.
     pub fn with_trace(mut self, on: bool) -> Self {
         self.collect_trace = on;
         self
     }
 
+    /// Toggle oracle verification.
     pub fn with_verify(mut self, on: bool) -> Self {
         self.verify = on;
         self
     }
 
+    /// Check shape and algorithm/world-size compatibility.
     pub fn validate(&self) -> Result<()> {
         if self.procs == 0 {
             return Err(Error::Config("procs must be >= 1".into()));
@@ -195,8 +209,11 @@ impl RunSpec {
 /// Outcome of one run.
 #[derive(Debug)]
 pub struct RunResult {
+    /// The algorithm that ran.
     pub spec_algo: Algo,
+    /// World size.
     pub procs: usize,
+    /// Final status of every rank.
     pub statuses: Vec<ProcStatus>,
     /// Ranks that finished holding the final R.
     pub r_holders: Vec<Rank>,
@@ -205,9 +222,13 @@ pub struct RunResult {
     /// Max |Δ| between the canonical R's of different holders (the
     /// redundancy-consistency check; 0 when holders agree bitwise).
     pub holder_disagreement: f64,
+    /// Communication counters of the run.
     pub metrics: MetricsSnapshot,
+    /// Collected events (empty unless the spec enabled tracing).
     pub trace: Trace,
+    /// Wall clock of the run.
     pub wall: Duration,
+    /// Oracle verdict (when the spec asked for verification).
     pub verification: Option<Verification>,
 }
 
@@ -230,6 +251,7 @@ impl RunResult {
         self.statuses.iter().all(|s| s.has_final_r())
     }
 
+    /// Ranks dead at the end of the run.
     pub fn dead_count(&self) -> usize {
         self.statuses.iter().filter(|s| matches!(s, ProcStatus::Dead { .. })).count()
     }

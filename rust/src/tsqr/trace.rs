@@ -39,6 +39,7 @@ pub enum Event {
 }
 
 impl Event {
+    /// The rank the event happened on.
     pub fn rank(&self) -> Rank {
         match self {
             Event::LeafQr { rank }
@@ -62,15 +63,18 @@ impl Event {
 pub struct TraceSink(Option<mpsc::Sender<Event>>);
 
 impl TraceSink {
+    /// A sink that drops every event (the bench hot path).
     pub fn disabled() -> Self {
         Self(None)
     }
 
+    /// A live sink plus the collector that drains it.
     pub fn channel() -> (Self, TraceCollector) {
         let (tx, rx) = mpsc::channel();
         (Self(Some(tx)), TraceCollector(Mutex::new(rx)))
     }
 
+    /// Record one event (no-op when disabled).
     #[inline]
     pub fn emit(&self, ev: Event) {
         if let Some(tx) = &self.0 {
@@ -78,6 +82,7 @@ impl TraceSink {
         }
     }
 
+    /// True when events are being recorded.
     pub fn is_enabled(&self) -> bool {
         self.0.is_some()
     }
@@ -97,18 +102,22 @@ impl TraceCollector {
 /// The collected event stream of one run.
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
+    /// Every recorded event, in arrival order.
     pub events: Vec<Event>,
 }
 
 impl Trace {
+    /// Number of recorded events.
     pub fn len(&self) -> usize {
         self.events.len()
     }
 
+    /// True when nothing was recorded.
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
 
+    /// Every event of one rank, in order.
     pub fn of_rank(&self, rank: Rank) -> Vec<&Event> {
         self.events.iter().filter(|e| e.rank() == rank).collect()
     }
@@ -145,10 +154,12 @@ impl Trace {
         v
     }
 
+    /// Events matching a predicate.
     pub fn count(&self, pred: impl Fn(&Event) -> bool) -> usize {
         self.events.iter().filter(|e| pred(e)).count()
     }
 
+    /// Every `(rank, exit kind)` pair, in exit order.
     pub fn exits(&self) -> Vec<(Rank, ExitKind)> {
         self.events
             .iter()

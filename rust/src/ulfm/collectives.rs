@@ -27,6 +27,7 @@ pub struct Gathered<T> {
 }
 
 impl<T> Gathered<T> {
+    /// True when every member contributed.
     pub fn complete(&self) -> bool {
         self.missing.is_empty()
     }

@@ -26,9 +26,13 @@ use super::Rank;
 /// FT-MPI per-communicator error-handling semantics.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ErrorSemantics {
+    /// Repair renumbers survivors contiguously into a size-`N−f` comm.
     Shrink,
+    /// Repair keeps size `N`; dead slots become invalid holes.
     Blank,
+    /// Repair respawns every dead member into its old slot.
     Rebuild,
+    /// Repair fails: the application terminates.
     Abort,
 }
 
@@ -66,6 +70,7 @@ impl Communicator {
         Self { world, slots: ranks.iter().copied().map(Some).collect(), semantics }
     }
 
+    /// This communicator's failure semantics.
     pub fn semantics(&self) -> ErrorSemantics {
         self.semantics
     }

@@ -57,6 +57,7 @@ pub enum ExitKind {
 /// Liveness state of one rank.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ProcStatus {
+    /// Running (or not yet started).
     Alive,
     /// Crashed (fault injector) at the given exchange round.
     Dead { at_round: u32 },
@@ -65,6 +66,7 @@ pub enum ProcStatus {
 }
 
 impl ProcStatus {
+    /// Still running.
     pub fn is_alive(&self) -> bool {
         matches!(self, ProcStatus::Alive)
     }
@@ -74,6 +76,7 @@ impl ProcStatus {
     pub fn is_unreachable(&self) -> bool {
         !self.is_alive()
     }
+    /// Finished the algorithm holding the final R.
     pub fn has_final_r(&self) -> bool {
         matches!(self, ProcStatus::Exited(ExitKind::CompletedWithR))
     }
@@ -82,14 +85,21 @@ impl ProcStatus {
 /// Communication counters (relaxed atomics — read after the run).
 #[derive(Debug, Default)]
 pub struct WorldMetrics {
+    /// Messages delivered (one per fetch).
     pub messages: AtomicU64,
+    /// Payload bytes delivered.
     pub bytes: AtomicU64,
+    /// Posts placed on the board.
     pub posts: AtomicU64,
+    /// Fetches that observed a failure.
     pub failed_fetches: AtomicU64,
+    /// Dead ranks brought back (REBUILD).
     pub respawns: AtomicU64,
 }
 
 impl WorldMetrics {
+    /// Plain-data copy of the counters (the CAQR task counters are not
+    /// world-level and stay 0 here; `caqr::exec` fills them).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             messages: self.messages.load(Ordering::Relaxed),
@@ -97,6 +107,7 @@ impl WorldMetrics {
             posts: self.posts.load(Ordering::Relaxed),
             failed_fetches: self.failed_fetches.load(Ordering::Relaxed),
             respawns: self.respawns.load(Ordering::Relaxed),
+            ..Default::default()
         }
     }
 }
@@ -104,11 +115,24 @@ impl WorldMetrics {
 /// Plain-data copy of the counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
+    /// Messages delivered (one per fetch).
     pub messages: u64,
+    /// Payload bytes delivered.
     pub bytes: u64,
+    /// Posts placed on the board.
     pub posts: u64,
+    /// Fetches that observed a failure (ULFM error or no replica).
     pub failed_fetches: u64,
+    /// Dead ranks brought back (Self-Healing / REBUILD).
     pub respawns: u64,
+    /// CAQR: panels whose factor + updates fully completed.
+    pub panels_completed: u64,
+    /// CAQR: trailing-update task executions (replicas included) —
+    /// the redundant computation the fault tolerance is paid with.
+    pub update_tasks: u64,
+    /// CAQR: trailing-update blocks whose owner was dead at harvest
+    /// time and whose result was taken from the surviving replica.
+    pub update_recoveries: u64,
 }
 
 impl MetricsSnapshot {
@@ -120,6 +144,9 @@ impl MetricsSnapshot {
         self.posts += other.posts;
         self.failed_fetches += other.failed_fetches;
         self.respawns += other.respawns;
+        self.panels_completed += other.panels_completed;
+        self.update_tasks += other.update_tasks;
+        self.update_recoveries += other.update_recoveries;
     }
 }
 
@@ -174,6 +201,7 @@ pub struct World {
 }
 
 impl World {
+    /// A fresh world of `size` alive ranks behind an `Arc`.
     pub fn new(size: usize) -> Arc<Self> {
         Arc::new(Self {
             size,
@@ -189,10 +217,12 @@ impl World {
         })
     }
 
+    /// World size (ranks, dead or alive).
     pub fn size(&self) -> usize {
         self.size
     }
 
+    /// The communication counters.
     pub fn metrics(&self) -> &WorldMetrics {
         &self.metrics
     }
@@ -207,10 +237,12 @@ impl World {
         self.cv.notify_all();
     }
 
+    /// Current status of one rank.
     pub fn status(&self, rank: Rank) -> ProcStatus {
         self.inner.lock().unwrap().status[rank]
     }
 
+    /// Current status of every rank.
     pub fn statuses(&self) -> Vec<ProcStatus> {
         self.inner.lock().unwrap().status.clone()
     }

@@ -21,9 +21,13 @@ use crate::error::{Error, Result};
 /// One parsed value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
     /// Arrays of integers or integer pairs (`[[2,1],[5,2]]` flattens to
     /// nested `Arr`).
@@ -31,21 +35,25 @@ pub enum Value {
 }
 
 impl Value {
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The integer value, if this is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(x) => Some(*x),
             _ => None,
         }
     }
+    /// The value as a usize, if it is a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().filter(|x| *x >= 0).map(|x| x as usize)
     }
+    /// The numeric value (floats and integers).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(x) => Some(*x),
@@ -53,12 +61,14 @@ impl Value {
             _ => None,
         }
     }
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -74,6 +84,7 @@ pub struct Doc {
 }
 
 impl Doc {
+    /// Parse a whole config-file text.
     pub fn parse(text: &str) -> Result<Doc> {
         let mut map = BTreeMap::new();
         let mut section = String::new();
@@ -101,26 +112,33 @@ impl Doc {
         Ok(Doc { map })
     }
 
+    /// Raw value by (section-qualified) key.
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.map.get(key)
     }
 
+    /// Every key in the document, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(|s| s.as_str())
     }
 
+    /// String value of a key, if present and a string.
     pub fn str_of(&self, key: &str) -> Option<&str> {
         self.get(key).and_then(Value::as_str)
     }
+    /// usize value of a key, if present and a non-negative integer.
     pub fn usize_of(&self, key: &str) -> Option<usize> {
         self.get(key).and_then(Value::as_usize)
     }
+    /// u64 value of a key, if present and a non-negative integer.
     pub fn u64_of(&self, key: &str) -> Option<u64> {
         self.get(key).and_then(Value::as_i64).filter(|x| *x >= 0).map(|x| x as u64)
     }
+    /// f64 value of a key, if present and numeric.
     pub fn f64_of(&self, key: &str) -> Option<f64> {
         self.get(key).and_then(Value::as_f64)
     }
+    /// bool value of a key, if present and boolean.
     pub fn bool_of(&self, key: &str) -> Option<bool> {
         self.get(key).and_then(Value::as_bool)
     }

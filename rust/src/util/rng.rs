@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// A generator deterministically derived from `seed`.
     pub fn new(seed: u64) -> Self {
         // SplitMix64 to expand the seed into four non-zero words.
         let mut x = seed;

@@ -12,6 +12,7 @@ pub struct TestDir {
 }
 
 impl TestDir {
+    /// Create a fresh unique scratch directory.
     pub fn new() -> Self {
         let n = COUNTER.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir().join(format!(
@@ -26,6 +27,7 @@ impl TestDir {
         Self { path }
     }
 
+    /// The directory's path.
     pub fn path(&self) -> &Path {
         &self.path
     }

@@ -1,0 +1,181 @@
+//! The failure-semantics matrix: a table-driven check that every
+//! semantic tolerates EXACTLY the number of failures the paper
+//! predicts, for small worlds — exhaustively on the analytic
+//! simulator, spot-checked on the full simulator, and extended to the
+//! per-panel CAQR bound of the general-matrix follow-up.
+//!
+//! Paper predictions under test:
+//! * §III-B3/C3 — by the end of step `s` the redundant family holds
+//!   `2^s` copies of every block, so `2^s − 1` simultaneous failures
+//!   at boundary `s` are survivable, and `2^s` (one full replica
+//!   group) is fatal: the bound is tight.
+//! * §III-D3 — Self-Healing restores the world each step, so the
+//!   per-step capacity is `2^s − 1` *at every step*, cumulating to
+//!   `Σ_s (2^s − 1)`.
+//! * arXiv:1604.02504 (CAQR) — every panel-factor and trailing-update
+//!   task has `replication = 2` copies, so each panel step tolerates
+//!   `replication − 1 = 1` process loss per replica pair, and losing a
+//!   whole pair in one step is fatal.
+
+use std::collections::HashMap;
+
+use ft_tsqr::analysis::{
+    FullSimSweep, max_tolerated_by_step, self_healing_total_tolerated, survives_failure_set,
+};
+use ft_tsqr::caqr::CaqrSpec;
+use ft_tsqr::engine::Engine;
+use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage};
+use ft_tsqr::tsqr::Algo;
+use ft_tsqr::ulfm::Rank;
+
+/// All size-`f` subsets of `0..procs`, as kill patterns at `round`.
+fn subsets_at_round(procs: usize, f: usize, round: u32) -> Vec<HashMap<Rank, u32>> {
+    let mut out = Vec::new();
+    let mut pick = vec![0usize; f];
+    fn rec(
+        procs: usize,
+        f: usize,
+        round: u32,
+        start: usize,
+        depth: usize,
+        pick: &mut [usize],
+        out: &mut Vec<HashMap<Rank, u32>>,
+    ) {
+        if depth == f {
+            out.push(pick.iter().map(|&r| (r, round)).collect());
+            return;
+        }
+        for r in start..procs {
+            pick[depth] = r;
+            rec(procs, f, round, r + 1, depth + 1, pick, out);
+        }
+    }
+    rec(procs, f, round, 0, 0, &mut pick, &mut out);
+    out
+}
+
+#[test]
+fn tsqr_semantics_tolerate_exactly_the_papers_counts() {
+    // (semantic, P, step s, tolerated failures at boundary s).
+    // The tolerated count is the paper's 2^s − 1 for every semantic in
+    // the exactly-f-at-one-boundary model; the test proves it
+    // EXHAUSTIVELY (every subset of that size survives) and proves
+    // tightness (some subset of size 2^s is fatal).
+    let table: &[(Algo, usize, u32, u64)] = &[
+        (Algo::Redundant, 4, 1, 1),
+        (Algo::Replace, 4, 1, 1),
+        (Algo::SelfHealing, 4, 1, 1),
+        (Algo::Redundant, 8, 1, 1),
+        (Algo::Replace, 8, 1, 1),
+        (Algo::SelfHealing, 8, 1, 1),
+        (Algo::Redundant, 8, 2, 3),
+        (Algo::Replace, 8, 2, 3),
+        (Algo::SelfHealing, 8, 2, 3),
+    ];
+    for &(algo, procs, s, tolerated) in table {
+        assert_eq!(
+            tolerated,
+            max_tolerated_by_step(s),
+            "table row must carry the paper's 2^s - 1"
+        );
+        // Every pattern within the bound survives.
+        for pattern in subsets_at_round(procs, tolerated as usize, s) {
+            let out = survives_failure_set(algo, procs, &pattern);
+            assert!(
+                out.success(algo),
+                "{algo:?} P={procs} s={s}: within-bound pattern {pattern:?} failed"
+            );
+        }
+        // Tightness: wiping one full level-s replica group is fatal.
+        let group: HashMap<Rank, u32> = (0..(1usize << s)).map(|r| (r, s)).collect();
+        let out = survives_failure_set(algo, procs, &group);
+        assert!(
+            !out.success(algo),
+            "{algo:?} P={procs} s={s}: wiping group {group:?} must be fatal"
+        );
+    }
+}
+
+#[test]
+fn full_simulator_agrees_with_the_matrix_on_sampled_cells() {
+    // The same counts on the real concurrent stack (sampled, not
+    // exhaustive — each cell is a full multi-threaded run).
+    let engine = Engine::host();
+    for &(algo, s) in
+        &[(Algo::Replace, 1u32), (Algo::Replace, 2), (Algo::SelfHealing, 1), (Algo::SelfHealing, 2)]
+    {
+        let f = max_tolerated_by_step(s) as usize;
+        let est =
+            FullSimSweep::new(&engine, algo, 8).with_samples(10).at_round(s, f).unwrap();
+        assert_eq!(
+            est.probability(),
+            1.0,
+            "{algo:?} s={s} f={f}: full simulator must match the analytic bound"
+        );
+    }
+}
+
+#[test]
+fn self_healing_cumulative_capacity_matches_d3() {
+    // §III-D3: "1 process can fail at step 1 … and 3 additional
+    // processes can fail at step 2" — cumulative capacity Σ (2^s − 1).
+    assert_eq!(self_healing_total_tolerated(3), 1 + 3 + 7);
+    let pattern: HashMap<Rank, u32> = [(0, 1), (1, 2), (2, 2), (4, 2)].into_iter().collect();
+    let out = survives_failure_set(Algo::SelfHealing, 8, &pattern);
+    assert!(out.success(Algo::SelfHealing), "within per-step capacity");
+    // The same 4 failures at ONE boundary exceed 2^2 − 1 and can kill:
+    let burst: HashMap<Rank, u32> = [(0, 2), (1, 2), (2, 2), (3, 2)].into_iter().collect();
+    assert!(
+        !survives_failure_set(Algo::SelfHealing, 8, &burst).success(Algo::SelfHealing),
+        "4 failures at s=2 wipe a level-2 group"
+    );
+}
+
+#[test]
+fn caqr_tolerates_exactly_replication_minus_one_per_panel_step() {
+    // Per-panel CAQR bound, exhaustively: EVERY single-process kill at
+    // EVERY (panel, stage) is survivable for both semantics…
+    let engine = Engine::host();
+    let (procs, m, n, panel) = (4usize, 20usize, 12usize, 4usize);
+    let panels = 3usize;
+    for algo in [Algo::Redundant, Algo::SelfHealing] {
+        for rank in 0..procs {
+            for k in 0..panels {
+                for stage in [CaqrStage::Factor, CaqrStage::Update] {
+                    let spec = CaqrSpec::new(algo, procs, m, n, panel)
+                        .with_verify(false)
+                        .with_schedule(CaqrKillSchedule::at(&[(rank, k, stage)]));
+                    let res = engine.run_caqr(spec).unwrap();
+                    assert!(
+                        res.success(),
+                        "{algo:?}: single kill {rank}@{k}/{} must be tolerated",
+                        stage.name()
+                    );
+                }
+            }
+        }
+    }
+    // …and the bound is tight: losing BOTH members of a replica pair
+    // in one panel step is fatal under either semantic.
+    for algo in [Algo::Redundant, Algo::SelfHealing] {
+        let spec = CaqrSpec::new(algo, procs, m, n, panel).with_verify(false).with_schedule(
+            CaqrKillSchedule::at(&[(2, 0, CaqrStage::Update), (3, 0, CaqrStage::Update)]),
+        );
+        let res = engine.run_caqr(spec).unwrap();
+        assert!(!res.success(), "{algo:?}: wiping pair {{2,3}} in one step must be fatal");
+    }
+    // Self-Healing's cumulative capacity mirrors §III-D3: one loss per
+    // panel step, healed at each boundary, totals panels × 1 — more
+    // than any single step tolerates.
+    let storm: Vec<(usize, usize, CaqrStage)> =
+        (0..panels).map(|k| ((k + 1) % procs, k, CaqrStage::Update)).collect();
+    let sh = engine
+        .run_caqr(
+            CaqrSpec::new(Algo::SelfHealing, procs, m, n, panel)
+                .with_verify(false)
+                .with_schedule(CaqrKillSchedule::at(&storm)),
+        )
+        .unwrap();
+    assert!(sh.success());
+    assert_eq!(sh.metrics.respawns, panels as u64);
+}

@@ -1,0 +1,232 @@
+//! Integration tests for the general-matrix fault-tolerant CAQR
+//! subsystem (arXiv:1604.02504 over the source paper's machinery).
+//!
+//! The two claims under test:
+//!
+//! 1. **Bitwise oracle** — with zero injected failures,
+//!    `caqr::factorize` reproduces the classic whole-matrix
+//!    `householder_qr_reference` bit for bit, for every shape and
+//!    panel width.
+//! 2. **Bitwise recovery** — under every fault scenario that strikes a
+//!    trailing update (or a panel factor) within the replication
+//!    bound, the run completes with the *identical* R: redundancy
+//!    means the replica's copy IS the lost copy.
+
+use ft_tsqr::caqr::{self, CaqrScenario, CaqrSpec};
+use ft_tsqr::engine::Engine;
+use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage};
+use ft_tsqr::linalg::{Matrix, householder_qr_reference};
+use ft_tsqr::tsqr::Algo;
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data().iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn fault_free_caqr_is_bitwise_householder_qr() {
+    let engine = Engine::host();
+    // (m, n, panel, procs): square, ragged last panel, single panel,
+    // panel wider than n, one column.
+    for (m, n, panel, procs) in
+        [(24, 24, 8, 4), (40, 18, 5, 4), (32, 8, 8, 2), (16, 6, 9, 4), (12, 1, 4, 2)]
+    {
+        let spec = CaqrSpec::new(Algo::Redundant, procs, m, n, panel);
+        let a = spec.input_matrix();
+        let res = engine.run_caqr(spec).unwrap();
+        assert!(res.success(), "{m}x{n} panel={panel}");
+        let reference = householder_qr_reference(&a);
+        let f = res.factors.as_ref().unwrap();
+        assert_eq!(
+            bits(&f.packed),
+            bits(&reference.packed),
+            "packed differs at {m}x{n} panel={panel} procs={procs}"
+        );
+        let got_tau: Vec<u32> = f.tau.iter().map(|x| x.to_bits()).collect();
+        let want_tau: Vec<u32> = reference.tau.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got_tau, want_tau, "tau differs at {m}x{n}");
+        assert_eq!(bits(res.final_r.as_ref().unwrap()), bits(&reference.r()));
+        assert!(res.verification.as_ref().unwrap().ok);
+    }
+}
+
+#[test]
+fn every_single_update_strike_recovers_the_identical_r() {
+    // THE acceptance property: for EVERY (rank, panel) single-failure
+    // scenario striking a trailing update, the run completes and the R
+    // is bit-identical to the failure-free oracle.
+    let engine = Engine::host();
+    let (procs, m, n, panel) = (4usize, 20usize, 12usize, 4usize);
+    let clean = engine.run_caqr(CaqrSpec::new(Algo::Redundant, procs, m, n, panel)).unwrap();
+    let clean_r = clean.final_r.as_ref().unwrap();
+    let reference = householder_qr_reference(&Matrix::random(m, n, 42)).r();
+    assert_eq!(bits(clean_r), bits(&reference), "clean run == oracle");
+
+    let panels = clean.panels;
+    for algo in [Algo::Redundant, Algo::SelfHealing] {
+        for rank in 0..procs {
+            for panel_k in 0..panels {
+                let spec = CaqrSpec::new(algo, procs, m, n, panel).with_schedule(
+                    CaqrKillSchedule::at(&[(rank, panel_k, CaqrStage::Update)]),
+                );
+                let res = engine.run_caqr(spec).unwrap();
+                assert!(
+                    res.success(),
+                    "{algo:?}: kill {rank}@{panel_k} must be within the replication bound"
+                );
+                assert_eq!(
+                    bits(res.final_r.as_ref().unwrap()),
+                    bits(clean_r),
+                    "{algo:?}: kill {rank}@{panel_k} changed the bits"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_single_factor_strike_recovers_the_identical_r() {
+    let engine = Engine::host();
+    let (procs, m, n, panel) = (4usize, 20usize, 12usize, 4usize);
+    let clean = engine.run_caqr(CaqrSpec::new(Algo::Redundant, procs, m, n, panel)).unwrap();
+    let clean_r = clean.final_r.as_ref().unwrap();
+    for rank in 0..procs {
+        for panel_k in 0..clean.panels {
+            let spec = CaqrSpec::new(Algo::Redundant, procs, m, n, panel)
+                .with_schedule(CaqrKillSchedule::at(&[(rank, panel_k, CaqrStage::Factor)]));
+            let res = engine.run_caqr(spec).unwrap();
+            assert!(res.success(), "factor kill {rank}@{panel_k}");
+            assert_eq!(bits(res.final_r.as_ref().unwrap()), bits(clean_r));
+        }
+    }
+}
+
+#[test]
+fn recovery_is_observable_in_the_metrics() {
+    let engine = Engine::host();
+    // Rank 2 owns update block 1 of panel 0 (owner = (0+1+j) % 4).
+    let res = engine
+        .run_caqr(
+            CaqrSpec::new(Algo::Redundant, 4, 20, 12, 4)
+                .with_schedule(CaqrKillSchedule::at(&[(2, 0, CaqrStage::Update)])),
+        )
+        .unwrap();
+    assert!(res.success());
+    // Panel 0: rank 2's block is recovered from its buddy.  Rank 2
+    // stays dead under Redundant semantics, so the panel-1 block it
+    // would have owned is recovered too — 2 recoveries in total.
+    assert_eq!(res.panel_survival[0].update_recoveries, 1);
+    assert_eq!(res.panel_survival[1].update_recoveries, 1);
+    assert_eq!(res.metrics.update_recoveries, 2);
+    assert_eq!(res.panel_survival[0].alive_after, 3, "redundant: the dead stay dead");
+    assert_eq!(res.dead_count(), 1);
+}
+
+#[test]
+fn named_scenarios_match_their_advertised_outcome() {
+    let engine = Engine::host();
+    let (m, n, panel) = (32usize, 16usize, 4usize); // 4 panels
+    let clean_r = {
+        let res =
+            engine.run_caqr(CaqrSpec::new(Algo::Redundant, 4, m, n, panel)).unwrap();
+        res.final_r.unwrap()
+    };
+    for sc in CaqrScenario::all() {
+        let res = engine.run_caqr(sc.spec(m, n, panel)).unwrap();
+        assert_eq!(res.success(), sc.survives, "scenario {}", sc.name);
+        if sc.survives {
+            assert_eq!(
+                bits(res.final_r.as_ref().unwrap()),
+                bits(&clean_r),
+                "scenario {} must recover the identical R",
+                sc.name
+            );
+        } else {
+            assert!(res.final_r.is_none());
+        }
+    }
+}
+
+#[test]
+fn self_healing_outlives_redundant_on_cross_panel_pair_deaths() {
+    // Rank 2 dies during panel 0's updates, rank 3 during panel 1's.
+    // Under Redundant the pair {2,3} is fully gone by panel 1 and a
+    // block loses both copies; Self-Healing respawned rank 2 at the
+    // panel-0 boundary, so the pair always has a survivor.
+    let kills = [(2usize, 0usize, CaqrStage::Update), (3, 1, CaqrStage::Update)];
+    let engine = Engine::host();
+    let red = engine
+        .run_caqr(
+            CaqrSpec::new(Algo::Redundant, 4, 32, 16, 4)
+                .with_schedule(CaqrKillSchedule::at(&kills)),
+        )
+        .unwrap();
+    assert!(!red.success(), "redundant semantics: pair wiped across panels");
+    assert_eq!(red.failed_at.map(|(p, _)| p), Some(1));
+
+    let sh = engine
+        .run_caqr(
+            CaqrSpec::new(Algo::SelfHealing, 4, 32, 16, 4)
+                .with_schedule(CaqrKillSchedule::at(&kills)),
+        )
+        .unwrap();
+    assert!(sh.success(), "self-healing respawn restores the pair each boundary");
+    assert_eq!(sh.metrics.respawns, 2);
+    assert_eq!(sh.dead_count(), 0);
+}
+
+#[test]
+fn submit_and_campaign_work_through_the_engine() {
+    let engine = Engine::host();
+    let handle = engine.submit_caqr(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4));
+    let res = handle.wait().unwrap();
+    assert!(res.success());
+
+    let specs = (0..6u64).map(|s| {
+        CaqrSpec::new(Algo::SelfHealing, 4, 16, 8, 4)
+            .with_seed(s)
+            .with_verify(false)
+            .with_schedule(CaqrKillSchedule::random_updates(4, 2, 1, s))
+    });
+    let report = engine.caqr_campaign(specs).concurrency(3).run().unwrap();
+    assert_eq!(report.runs(), 6);
+    assert_eq!(report.successes(), 6, "single failures are always within the bound");
+    assert!(report.metrics().update_tasks > 0);
+    let stats = engine.stats();
+    assert!(stats.jobs_completed >= 7);
+}
+
+#[test]
+fn apply_update_kernel_agrees_with_the_f64_path() {
+    // The runtime's ApplyUpdate op (f32 views + pooled f64 scratch) is
+    // the single-precision twin of the update tasks: same product,
+    // within f32 rounding of the f64 path.
+    let engine = Engine::host();
+    let exec = engine.executor();
+    let (m, n, k) = (24usize, 4usize, 6usize);
+    let a = Matrix::random(m, n, 3);
+    let f = exec.leaf_qr(&a).unwrap();
+    let block = Matrix::random(m, k, 4);
+    let updated = exec.apply_update(&f, &block).unwrap();
+    let qt = exec.apply_qt(&f, &block).unwrap();
+    assert!(updated.max_abs_diff(&qt) < 1e-4);
+    // And it reuses pooled workspaces: steady state creates nothing.
+    let before = exec.workspace_stats();
+    for _ in 0..5 {
+        exec.apply_update(&f, &block).unwrap();
+    }
+    let after = exec.workspace_stats();
+    assert_eq!(after.created, before.created, "warm ApplyUpdate must not allocate scratch");
+    assert_eq!(after.reused, before.reused + 5);
+}
+
+#[test]
+fn one_shot_factorize_shim_matches_engine_run() {
+    let spec = CaqrSpec::new(Algo::Redundant, 4, 20, 10, 5);
+    let a = spec.input_matrix();
+    let res = caqr::factorize(spec).unwrap();
+    assert!(res.success());
+    assert_eq!(
+        bits(res.final_r.as_ref().unwrap()),
+        bits(&householder_qr_reference(&a).r())
+    );
+}

@@ -181,6 +181,47 @@ fn campaign_subcommand_survives_injected_failures() {
 }
 
 #[test]
+fn caqr_subcommand_factors_and_recovers() {
+    let out = run_ok(&[
+        "caqr",
+        "--algo",
+        "redundant",
+        "--procs",
+        "4",
+        "--rows",
+        "32",
+        "--cols",
+        "16",
+        "--panel",
+        "4",
+        "--kill-update",
+        "1@0",
+    ]);
+    assert!(out.contains("success=true"), "{out}");
+    assert!(out.contains("recoveries="), "{out}");
+    assert!(out.contains("ok=true"), "verification expected: {out}");
+}
+
+#[test]
+fn caqr_scenario_pair_wipe_exits_nonzero() {
+    let out = repro()
+        .args(["caqr", "--scenario", "pair-wipe", "--rows", "32", "--cols", "16", "--panel", "4"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "a wiped replica pair must exit 2");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("FAILED at panel 0"));
+}
+
+#[test]
+fn caqr_sweep_prints_survival_over_panel_counts() {
+    let out = run_ok(&[
+        "caqr", "--sweep", "--procs", "4", "--panel", "4", "--f", "1", "--trials", "6",
+    ]);
+    assert!(out.contains("P(complete)"), "{out}");
+    assert!(out.contains("panels"), "{out}");
+}
+
+#[test]
 fn bad_flags_error_cleanly() {
     let out = repro().args(["run", "--algo", "bogus"]).output().unwrap();
     assert!(!out.status.success());
