@@ -22,6 +22,7 @@ use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage};
 use ft_tsqr::linalg::Matrix;
 use ft_tsqr::report::bench::{bench, fmt_duration, iters};
 use ft_tsqr::report::{REPORT_DIR, Table};
+use ft_tsqr::runtime::KernelProfile;
 use ft_tsqr::tsqr::Algo;
 
 fn main() {
@@ -37,6 +38,16 @@ fn main() {
     let shape = |m: usize, n: usize, seed: u64| {
         CaqrSpec::new(Algo::SelfHealing, 4, m, n, 8).with_seed(seed).with_verify(false)
     };
+
+    // Hoisted warm-up (NOT timed): spin up the pool workers once so
+    // the first timed campaign does not pay thread creation — on BOTH
+    // profiles, so each worker's thread-local WY scratch is allocated
+    // before the Blocked campaign is measured (the gated
+    // blocked-vs-reference ratio must compare equally warm paths).
+    engine.run_caqr(shape(96, 48, u64::MAX)).expect("warm-up run");
+    engine
+        .run_caqr(shape(96, 48, u64::MAX - 1).with_profile(KernelProfile::Blocked))
+        .expect("blocked warm-up run");
 
     // ------------------------------------------------- fault-free
     let t0 = Instant::now();
@@ -74,6 +85,29 @@ fn main() {
         recoveries.to_string(),
     ]);
 
+    // ------------------------------------------------- blocked profile
+    // Same fault-free workload on the compact-WY fast path: the gap to
+    // the first row is what `KernelProfile::Blocked` buys.
+    let t0 = Instant::now();
+    let report = engine
+        .caqr_campaign(
+            (0..runs).map(|s| shape(96, 48, s).with_profile(KernelProfile::Blocked)),
+        )
+        .run()
+        .expect("caqr blocked");
+    let blocked_wall = t0.elapsed();
+    let blocked_rps = runs as f64 / blocked_wall.as_secs_f64();
+    assert_eq!(report.successes(), runs);
+    let lookahead_hits = report.metrics().lookahead_hits;
+    let panel_stall_ms = report.metrics().panel_stall_ns as f64 / 1e6;
+    table.row(vec![
+        "fault-free (blocked)".into(),
+        "96x48".into(),
+        fmt_duration(blocked_wall),
+        format!("{blocked_rps:.1}"),
+        report.metrics().update_recoveries.to_string(),
+    ]);
+
     // ------------------------------------------------- wider matrix
     let t0 = Instant::now();
     let wide_runs = runs / 2;
@@ -100,21 +134,61 @@ fn main() {
     let a = Matrix::random(128, 8, 1);
     let f = exec.leaf_qr(&a).expect("leaf");
     let block = Matrix::random(128, 8, 2);
+    // Hoisted warm-up (satellite fix): one untimed call grows the
+    // pooled workspace to this op's footprint; the timed region below
+    // must then never create (or grow) an arena.
+    exec.apply_update(&f, &block).expect("warm apply_update");
+    let t = exec.build_t(&f).expect("warm build_t");
+    exec.apply_wy(&f, &t, &block).expect("warm apply_wy");
+    let created_frozen = exec.workspace_stats().created;
     let sample = bench(3, iters(300, 30), || {
         std::hint::black_box(exec.apply_update(&f, &block).expect("apply_update"));
     });
     println!("\napply_update 128x8 on an 8-col block: median {}", sample.fmt_median());
+    let wy_sample = bench(3, iters(300, 30), || {
+        std::hint::black_box(exec.apply_wy(&f, &t, &block).expect("apply_wy"));
+    });
+    println!("apply_wy     128x8 on an 8-col block: median {}", wy_sample.fmt_median());
+    assert_eq!(
+        exec.workspace_stats().created,
+        created_frozen,
+        "workspace pool created-count must be frozen during measurement"
+    );
 
+    let blocked_speedup = blocked_rps / clean_rps;
+    println!(
+        "\nblocked vs reference (96x48 campaign): {blocked_speedup:.2}x, \
+         lookahead_hits={lookahead_hits}, panel_stall={panel_stall_ms:.1}ms"
+    );
     let json = format!(
         "{{\n  \"bench\": \"caqr_throughput\",\n  \"runs\": {runs},\n  \"quick\": {quick},\n  \
          \"clean_runs_per_sec\": {clean_rps:.2},\n  \"faulted_runs_per_sec\": {faulted_rps:.2},\n  \
+         \"blocked_runs_per_sec\": {blocked_rps:.2},\n  \
+         \"blocked_speedup_vs_reference\": {blocked_speedup:.3},\n  \
+         \"lookahead_hits\": {lookahead_hits},\n  \"panel_stall_ms\": {panel_stall_ms:.3},\n  \
          \"fault_overhead_pct\": {:.2},\n  \"update_recoveries\": {recoveries},\n  \
-         \"apply_update_median_us\": {:.2}\n}}\n",
+         \"apply_update_median_us\": {:.2},\n  \"apply_wy_median_us\": {:.2}\n}}\n",
         (clean_rps / faulted_rps - 1.0) * 100.0,
         sample.median_us(),
+        wy_sample.median_us(),
     );
     std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
     let json_path = format!("{REPORT_DIR}/BENCH_caqr.json");
-    std::fs::write(&json_path, json).expect("write BENCH_caqr.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_caqr.json");
     println!("wrote {json_path}");
+    if std::env::var("BENCH_WRITE_BASELINE").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all("benches/baselines").expect("mkdir baselines");
+        std::fs::write("benches/baselines/BENCH_caqr.json", &json).expect("write baseline");
+        println!("refreshed baseline benches/baselines/BENCH_caqr.json");
+    }
+    // CI perf gate (BENCH_REGRESS=1): ratio metrics only.  NOTE: at
+    // this small benchmark shape (96x48, panel 8) the WY fast path's
+    // advantage is modest — the headline 2x+ lives at the big shapes
+    // kernel_throughput measures; here the gate just keeps Blocked
+    // from regressing below Reference.
+    ft_tsqr::report::bench::enforce_regress_gate(
+        "caqr_throughput",
+        "benches/baselines/BENCH_caqr.json",
+        &[("blocked_speedup_vs_reference", blocked_speedup)],
+    );
 }

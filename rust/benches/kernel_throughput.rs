@@ -1,0 +1,197 @@
+//! BENCH TAB-K1: the deterministic fast-kernel layer — GEMM microkernel
+//! GFLOP/s, blocked (compact-WY) vs reference trailing updates across
+//! panel widths, and the end-to-end `KernelProfile::Blocked` vs
+//! `Reference` CAQR speedup.
+//!
+//!   cargo bench --bench kernel_throughput
+//!
+//! Emits `target/reports/BENCH_kernels.json`.  With
+//! `BENCH_WRITE_BASELINE=1` it also refreshes the committed baseline at
+//! `benches/baselines/BENCH_kernels.json`; with `BENCH_REGRESS=1` it
+//! compares against that baseline and fails on a >20% drop (the CI
+//! `bench-regress` job).  The gated metrics are machine-relative
+//! ratios (speedups) plus one very conservative absolute floor
+//! (GEMM GFLOP/s), so the gate is robust to CI-host variance.
+
+use std::time::Instant;
+
+use ft_tsqr::caqr::CaqrSpec;
+use ft_tsqr::engine::Engine;
+use ft_tsqr::linalg::Matrix;
+use ft_tsqr::linalg::gemm::{self, Accum, GEMM_SCRATCH};
+use ft_tsqr::linalg::view::{apply_update_f64, factor_panel_f64};
+use ft_tsqr::linalg::wy;
+use ft_tsqr::report::bench::{bench, enforce_regress_gate, iters, quick};
+use ft_tsqr::report::{REPORT_DIR, Table};
+use ft_tsqr::runtime::KernelProfile;
+use ft_tsqr::tsqr::Algo;
+
+const BASELINE: &str = "benches/baselines/BENCH_kernels.json";
+
+fn randf64(rows: usize, cols: usize, seed: u64) -> Vec<f64> {
+    Matrix::random(rows, cols, seed).data().iter().map(|&x| x as f64).collect()
+}
+
+fn main() {
+    let quick = quick();
+
+    // ------------------------------------------------------ GEMM GFLOP/s
+    let mut gtab = Table::new(
+        "TAB-K1: packed f64 GEMM microkernel (fixed summation order)",
+        &["m x n x k", "median", "GFLOP/s"],
+    );
+    let gemm_shapes: &[(usize, usize, usize)] = if quick {
+        &[(192, 192, 192), (384, 192, 96)]
+    } else {
+        &[(256, 256, 256), (512, 512, 256), (1024, 256, 512)]
+    };
+    let mut gemm_gflops = 0.0f64;
+    for &(m, n, k) in gemm_shapes {
+        let a = randf64(m, k, 1);
+        let b = randf64(k, n, 2);
+        let mut c = vec![0.0f64; m * n];
+        let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+        let s = bench(2, iters(20, 5), || {
+            gemm::gemm_into(m, n, k, &a, false, &b, Accum::Set, &mut c, &mut scratch);
+            std::hint::black_box(&c);
+        });
+        let gflops = gemm::gemm_flops(m, n, k) as f64 / s.median.as_secs_f64() / 1e9;
+        gemm_gflops = gemm_gflops.max(gflops);
+        gtab.row(vec![format!("{m}x{n}x{k}"), s.fmt_median(), format!("{gflops:.2}")]);
+    }
+    print!("{}", gtab.render());
+    gtab.save_csv(REPORT_DIR).expect("csv");
+
+    // -------------------------- blocked vs reference trailing update
+    let (upd_m, upd_bk) = if quick { (384usize, 96usize) } else { (1536, 256) };
+    let mut utab = Table::new(
+        format!("TAB-K1b: {upd_m}-row x {upd_bk}-col trailing update — rank-1 vs compact-WY"),
+        &["panel", "rank-1 (reference)", "WY+GEMM (blocked)", "speedup"],
+    );
+    let mut wy_speedups: Vec<(usize, f64)> = Vec::new();
+    for panel in [16usize, 32, 64] {
+        let mut packed = randf64(upd_m, panel, panel as u64);
+        let mut tau = vec![0.0f64; panel];
+        factor_panel_f64(&mut packed, upd_m, panel, &mut tau);
+        let wyf = wy::build_wy(&packed, upd_m, panel, &tau);
+        let block = randf64(upd_m, upd_bk, 9);
+
+        let mut buf = block.clone();
+        let s_ref = bench(1, iters(10, 3), || {
+            buf.copy_from_slice(&block);
+            apply_update_f64(&packed, upd_m, panel, &tau, &mut buf, upd_bk);
+            std::hint::black_box(&buf);
+        });
+        let mut scratch = Vec::new();
+        let s_wy = bench(1, iters(10, 3), || {
+            buf.copy_from_slice(&block);
+            wy::apply_wyt_into(&wyf, &mut buf, upd_bk, &mut scratch);
+            std::hint::black_box(&buf);
+        });
+        let speedup = s_ref.median.as_secs_f64() / s_wy.median.as_secs_f64();
+        wy_speedups.push((panel, speedup));
+        utab.row(vec![
+            panel.to_string(),
+            s_ref.fmt_median(),
+            s_wy.fmt_median(),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    print!("{}", utab.render());
+    utab.save_csv(REPORT_DIR).expect("csv");
+
+    // ---------------------- end-to-end CAQR: Blocked vs Reference
+    // The acceptance shape (m=4096, n=512, panel=64) in full mode; a
+    // scaled-down cousin in quick mode so CI stays fast.
+    let (cm, cn, cp) = if quick { (1024usize, 256usize, 64usize) } else { (4096, 512, 64) };
+    let engine = Engine::host();
+    // Hoisted warm-up (not timed): spin up pool workers (and, for the
+    // Blocked path, each worker's thread-local WY scratch) once so the
+    // timed runs measure steady state.  The f64 CAQR task path never
+    // touches the executor's WorkspacePool, so the created-count
+    // freeze assertion lives in caqr_throughput's kernel-in-isolation
+    // section, where the pool is actually exercised.
+    for profile in [KernelProfile::Reference, KernelProfile::Blocked] {
+        engine
+            .run_caqr(
+                CaqrSpec::new(Algo::Redundant, 4, 128, 64, 16)
+                    .with_verify(false)
+                    .with_profile(profile),
+            )
+            .expect("warm-up run");
+    }
+    let e2e = |profile: KernelProfile| {
+        let t0 = Instant::now();
+        let res = engine
+            .run_caqr(
+                CaqrSpec::new(Algo::Redundant, 4, cm, cn, cp)
+                    .with_verify(false)
+                    .with_profile(profile),
+            )
+            .expect("caqr run");
+        assert!(res.success());
+        (t0.elapsed(), res.metrics)
+    };
+    let (ref_wall, _) = e2e(KernelProfile::Reference);
+    let (blk_wall, blk_metrics) = e2e(KernelProfile::Blocked);
+    let caqr_speedup = ref_wall.as_secs_f64() / blk_wall.as_secs_f64();
+    let mut etab = Table::new(
+        format!("TAB-K1c: CAQR {cm}x{cn}, panel {cp}, 4 procs — profile face-off"),
+        &["profile", "wall", "speedup", "lookahead hits", "panel stall"],
+    );
+    etab.row(vec![
+        "reference".into(),
+        format!("{ref_wall:.2?}"),
+        "1.00x".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    etab.row(vec![
+        "blocked".into(),
+        format!("{blk_wall:.2?}"),
+        format!("{caqr_speedup:.2}x"),
+        blk_metrics.lookahead_hits.to_string(),
+        format!("{:.2?}", std::time::Duration::from_nanos(blk_metrics.panel_stall_ns)),
+    ]);
+    print!("{}", etab.render());
+    etab.save_csv(REPORT_DIR).expect("csv");
+
+    // ------------------------------------------------------------- JSON
+    let wy_json: String = wy_speedups
+        .iter()
+        .map(|(p, s)| format!("  \"wy_speedup_p{p}\": {s:.3},\n"))
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"kernel_throughput\",\n  \"quick\": {quick},\n  \
+         \"gemm_gflops\": {gemm_gflops:.3},\n{wy_json}  \"caqr_m\": {cm},\n  \
+         \"caqr_n\": {cn},\n  \"caqr_panel\": {cp},\n  \
+         \"caqr_reference_wall_s\": {:.3},\n  \"caqr_blocked_wall_s\": {:.3},\n  \
+         \"caqr_blocked_speedup\": {caqr_speedup:.3},\n  \
+         \"lookahead_hits\": {},\n  \"panel_stall_ms\": {:.3}\n}}\n",
+        ref_wall.as_secs_f64(),
+        blk_wall.as_secs_f64(),
+        blk_metrics.lookahead_hits,
+        blk_metrics.panel_stall_ns as f64 / 1e6,
+    );
+    std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
+    let json_path = format!("{REPORT_DIR}/BENCH_kernels.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_kernels.json");
+    println!("wrote {json_path}");
+
+    if std::env::var("BENCH_WRITE_BASELINE").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all("benches/baselines").expect("mkdir baselines");
+        std::fs::write(BASELINE, &json).expect("write baseline");
+        println!("refreshed baseline {BASELINE}");
+    }
+
+    let wy64 = wy_speedups.iter().find(|(p, _)| *p == 64).map(|(_, s)| *s).unwrap_or(0.0);
+    enforce_regress_gate(
+        "kernel_throughput",
+        BASELINE,
+        &[
+            ("gemm_gflops", gemm_gflops),
+            ("wy_speedup_p64", wy64),
+            ("caqr_blocked_speedup", caqr_speedup),
+        ],
+    );
+}

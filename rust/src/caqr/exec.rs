@@ -1,31 +1,58 @@
-//! One CAQR factorization over the engine's worker pool.
+//! One CAQR factorization over the engine's worker pool, with
+//! lookahead pipelining.
 //!
 //! The coordinator walks the [`PanelPlan`] panel by panel.  Per panel:
 //!
-//! 1. **Factor stage** — fire the `(rank, k, Factor)` kills, then
-//!    spawn one factor task per *live* member of the panel's replica
-//!    pair.  Every replica factors its own copy of the identical f64
-//!    snapshot with identical arithmetic, so the copies are
-//!    bit-identical (debug builds assert it); the harvest takes the
-//!    lowest-ranked survivor's copy.
-//! 2. **Update stage** — fire the `(rank, k, Update)` kills, then
-//!    spawn the replicated trailing-update tasks (owner + buddy per
-//!    block).  A kill between spawn and harvest models the paper's
-//!    "process dies mid-update": the dead rank's results are
-//!    discarded, and each of its blocks is harvested from the
-//!    surviving replica instead — a *recovery*, counted in the
+//! 1. **Factor stage** — spawn one factor task per *live* member of
+//!    the panel's replica pair (or take the results of a factor the
+//!    lookahead scheduler dispatched early, see below).  Every replica
+//!    factors its own copy of the identical f64 snapshot with
+//!    identical arithmetic, so the copies are bit-identical (debug
+//!    builds assert it); the harvest takes the lowest-ranked
+//!    survivor's copy.
+//! 2. **Update stage** — spawn the replicated trailing-update tasks
+//!    (owner + buddy per block).  A kill between spawn and harvest
+//!    models the paper's "process dies mid-update": the dead rank's
+//!    results are discarded, and each of its blocks is harvested from
+//!    the surviving replica instead — a *recovery*, counted in the
 //!    metrics.  If both members of a pair are dead the block has no
 //!    surviving copy and the run fails (`replication − 1` exceeded).
 //! 3. **Panel boundary** — Self-Healing respawns the dead (REBUILD),
 //!    restoring capacity for the next panel; Redundant lets the world
 //!    shrink.
 //!
+//! ## Lookahead
+//!
+//! Strictly sequential panel processing leaves the pool idle while the
+//! coordinator factors panel `k+1`: the classic CAQR fix is to factor
+//! ahead.  Update block 0 of panel `k` covers exactly panel `k+1`'s
+//! columns ([`PanelPlan::lookahead_block`]), so as soon as **both**
+//! copies of that block complete — owner *and* replica, keeping the
+//! harvest rule and therefore the recovery semantics unchanged — the
+//! coordinator dispatches panel `k+1`'s factor tasks concurrently with
+//! panel `k`'s remaining updates.  [`MetricsSnapshot`] exposes the
+//! overlap: `lookahead_hits` counts panels whose early factor had
+//! already finished when it was needed, `panel_stall_ns` the time the
+//! coordinator still spent blocked on factor results.
+//!
+//! Fault injection is *pre-simulated*: the `(rank, panel, stage)` kill
+//! schedule and the respawn policy are deterministic, so the liveness
+//! timeline — who is alive at every stage of every panel, where the
+//! run fails — is computed up front ([`Timeline`]).  Task dispatch is
+//! then free to overlap stages without perturbing replica selection,
+//! harvest choices, or failure points: the results (and every byte of
+//! the recovery bookkeeping) are identical to the sequential schedule.
+//!
 //! All inter-task data is `Arc`-shared f64 (never rounded through
 //! f32), which is what keeps the fault-tolerant path bit-identical to
-//! the failure-free oracle.
+//! the failure-free oracle under [`KernelProfile::Reference`] — and
+//! deterministic (replicas bit-identical to *each other*) under
+//! [`KernelProfile::Blocked`], whose compact-WY updates trade the
+//! bitwise pin against the unblocked oracle for level-3 speed.
 //!
 //! [`PanelPlan`]: crate::tsqr::PanelPlan
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -34,28 +61,187 @@ use crate::engine::{TaskGroup, WorkerPool};
 use crate::error::Result;
 use crate::fault::CaqrStage;
 use crate::linalg::view::{apply_update_f64, factor_panel_f64};
+use crate::linalg::wy::{self, WyFactor};
 use crate::linalg::{Matrix, PackedQr};
-use crate::tsqr::{Algo, verify};
+use crate::runtime::KernelProfile;
+use crate::tsqr::{Algo, PanelPlan, verify};
 use crate::ulfm::{MetricsSnapshot, ProcStatus};
 
 use super::{CaqrResult, CaqrSpec, PanelSurvival};
+
+thread_local! {
+    /// Per-worker GEMM/WY scratch for the Blocked update tasks.  Pool
+    /// workers are long-lived, so after the first task on each worker
+    /// the fast-path updates allocate nothing (the ~700 KiB packing
+    /// arena would otherwise be allocated and zeroed per task).
+    static WY_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Pre-simulated liveness: who is alive at every stage of every panel,
+/// given the (deterministic) kill schedule and respawn policy.
+/// Computing this up front is what lets the lookahead scheduler
+/// dispatch panel `k+1`'s factor mid-way through panel `k`'s updates
+/// without changing replica selection or harvest choices.
+struct Timeline {
+    /// Liveness at panel `k`'s factor-task spawn (factor kills fired).
+    alive_factor: Vec<Vec<bool>>,
+    /// Liveness at panel `k`'s update-task spawn (update kills fired).
+    alive_update: Vec<Vec<bool>>,
+    /// Ranks respawned at panel `k`'s boundary (Self-Healing), one
+    /// entry per *completed* panel.
+    respawns: Vec<u64>,
+    /// Final panel each dead rank died at.
+    died_at: Vec<Option<usize>>,
+    /// First `(panel, stage)` at which some task lost every replica.
+    failed_at: Option<(usize, CaqrStage)>,
+    /// Liveness at the end of the run (at failure or completion).
+    final_alive: Vec<bool>,
+}
+
+/// Walk the kill schedule through the panel sequence exactly as the
+/// sequential coordinator would, recording liveness at every stage.
+/// Consumes the schedule's entries (they are one-shot), which is fine:
+/// this runs once per `execute` and nothing else fires them.
+fn simulate_timeline(spec: &CaqrSpec, plan: &PanelPlan) -> Timeline {
+    let procs = spec.procs;
+    let mut alive = vec![true; procs];
+    let mut died_at: Vec<Option<usize>> = vec![None; procs];
+    let mut tl = Timeline {
+        alive_factor: Vec::with_capacity(plan.panels()),
+        alive_update: Vec::with_capacity(plan.panels()),
+        respawns: Vec::with_capacity(plan.panels()),
+        died_at: Vec::new(),
+        failed_at: None,
+        final_alive: Vec::new(),
+    };
+    'panels: for k in 0..plan.panels() {
+        for r in 0..procs {
+            if alive[r] && spec.schedule.fire(r, k, CaqrStage::Factor) {
+                alive[r] = false;
+                died_at[r] = Some(k);
+            }
+        }
+        tl.alive_factor.push(alive.clone());
+        if !plan.factor_replicas(k).into_iter().any(|r| alive[r]) {
+            tl.failed_at = Some((k, CaqrStage::Factor));
+            break 'panels;
+        }
+        for r in 0..procs {
+            if alive[r] && spec.schedule.fire(r, k, CaqrStage::Update) {
+                alive[r] = false;
+                died_at[r] = Some(k);
+            }
+        }
+        tl.alive_update.push(alive.clone());
+        for j in 0..plan.update_blocks(k) {
+            if !plan.update_assignees(k, j).into_iter().any(|r| alive[r]) {
+                tl.failed_at = Some((k, CaqrStage::Update));
+                break 'panels;
+            }
+        }
+        let mut respawns = 0u64;
+        if spec.algo == Algo::SelfHealing {
+            for r in 0..procs {
+                if !alive[r] {
+                    alive[r] = true;
+                    died_at[r] = None;
+                    respawns += 1;
+                }
+            }
+        }
+        tl.respawns.push(respawns);
+    }
+    tl.died_at = died_at;
+    tl.final_alive = alive;
+    tl
+}
+
+/// One replica's factor output: the packed panel, its tau, and (under
+/// the Blocked profile) the compact-WY factor the update tasks consume.
+type FactorOut = (Vec<f64>, Vec<f64>, Option<Arc<WyFactor>>);
+type FactorMap = BTreeMap<usize, FactorOut>;
+type UpdateMap = BTreeMap<(usize, usize), Vec<f64>>;
+
+/// A factor stage in flight: the task latch plus the replica deposits.
+struct FactorStage {
+    tasks: TaskGroup,
+    results: Arc<Mutex<FactorMap>>,
+}
+
+/// Spawn one factor task per live replica over a shared panel snapshot.
+fn spawn_factor(
+    pool: &WorkerPool,
+    replicas: &[usize],
+    snap: Arc<Vec<f64>>,
+    rows: usize,
+    cols: usize,
+    profile: KernelProfile,
+) -> FactorStage {
+    let results: Arc<Mutex<FactorMap>> = Arc::new(Mutex::new(BTreeMap::new()));
+    let tasks = TaskGroup::new(pool.clone());
+    for &rank in replicas {
+        let snap = Arc::clone(&snap);
+        let out = Arc::clone(&results);
+        tasks.spawn(move || {
+            let mut wbuf = (*snap).clone();
+            let mut t = vec![0.0f64; cols];
+            let wy = match profile {
+                KernelProfile::Reference => {
+                    factor_panel_f64(&mut wbuf, rows, cols, &mut t);
+                    None
+                }
+                KernelProfile::Blocked => {
+                    Some(Arc::new(wy::factor_panel_blocked_f64(&mut wbuf, rows, cols, &mut t)))
+                }
+            };
+            out.lock().unwrap().insert(rank, (wbuf, t, wy));
+        });
+    }
+    FactorStage { tasks, results }
+}
+
+/// Take the lowest-ranked surviving replica's factor (debug builds
+/// assert the redundancy invariant: every deposit is bit-identical).
+fn harvest_factor(stage: &FactorStage, k: usize) -> FactorOut {
+    let mut fr = stage.results.lock().unwrap();
+    #[cfg(debug_assertions)]
+    {
+        let mut vals = fr.values();
+        if let Some((w0, t0, _)) = vals.next() {
+            for (wi, ti, _) in vals {
+                debug_assert!(
+                    w0.iter().zip(wi).all(|(a, b)| a.to_bits() == b.to_bits())
+                        && t0.iter().zip(ti).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "panel {k}: factor replicas diverged"
+                );
+            }
+        }
+    }
+    #[cfg(not(debug_assertions))]
+    let _ = k;
+    let chosen = *fr.keys().next().expect("at least one live replica deposited");
+    fr.remove(&chosen).expect("just looked it up")
+}
 
 /// Execute one validated spec end to end on pooled workers.
 pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> {
     spec.validate()?;
     let plan = spec.plan();
+    let profile = spec.profile.unwrap_or_default();
     let (m, n) = (spec.m, spec.n);
     let a = spec.input_matrix();
     let started = Instant::now();
 
+    let tl = simulate_timeline(spec, &plan);
+
     // The factorization state, f64 end to end (one terminal rounding).
     let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
     let mut tau = vec![0.0f64; n];
-    let mut alive = vec![true; spec.procs];
-    let mut died_at: Vec<Option<usize>> = vec![None; spec.procs];
     let mut metrics = MetricsSnapshot::default();
     let mut panel_survival: Vec<PanelSurvival> = Vec::with_capacity(plan.panels());
     let mut failed_at: Option<(usize, CaqrStage)> = None;
+    // Factor stage the lookahead dispatched for the *next* panel.
+    let mut pending: Option<FactorStage> = None;
 
     'panels: for k in 0..plan.panels() {
         let (c0, c1) = plan.col_range(k);
@@ -63,88 +249,57 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
         let cols = c1 - c0;
 
         // ---------------------------------------------- factor stage
-        for r in 0..spec.procs {
-            if alive[r] && spec.schedule.fire(r, k, CaqrStage::Factor) {
-                alive[r] = false;
-                died_at[r] = Some(k);
-            }
-        }
-        let replicas: Vec<usize> =
-            plan.factor_replicas(k).into_iter().filter(|&r| alive[r]).collect();
-        if replicas.is_empty() {
-            failed_at = Some((k, CaqrStage::Factor));
+        if tl.failed_at == Some((k, CaqrStage::Factor)) {
+            failed_at = tl.failed_at;
             break 'panels;
         }
-        // One immutable snapshot of the panel region (rows c0.., cols
-        // c0..c1); every replica factors its own working copy of it.
-        let mut snap = vec![0.0f64; rows * cols];
-        for i in 0..rows {
-            for j in 0..cols {
-                snap[i * cols + j] = w[(c0 + i) * n + (c0 + j)];
+        let alive_f = &tl.alive_factor[k];
+        let stall_t0 = Instant::now();
+        let stage = match pending.take() {
+            Some(stage) => {
+                // Dispatched early by the lookahead; a hit means it
+                // finished while panel k−1's updates were draining.
+                if stage.tasks.live_tasks() == 0 {
+                    metrics.lookahead_hits += 1;
+                }
+                stage
             }
-        }
-        let snap = Arc::new(snap);
-        type FactorMap = BTreeMap<usize, (Vec<f64>, Vec<f64>)>;
-        let factor_results: Arc<Mutex<FactorMap>> = Arc::new(Mutex::new(BTreeMap::new()));
-        let tasks = TaskGroup::new(pool.clone());
-        for &rank in &replicas {
-            let snap = Arc::clone(&snap);
-            let out = Arc::clone(&factor_results);
-            tasks.spawn(move || {
-                let mut wbuf = (*snap).clone();
-                let mut t = vec![0.0f64; cols];
-                factor_panel_f64(&mut wbuf, rows, cols, &mut t);
-                out.lock().unwrap().insert(rank, (wbuf, t));
-            });
-        }
-        tasks.wait_idle();
-        let owner = plan.factor_owner(k);
-        let factor_recovered = !alive[owner];
-        let (panel_buf, panel_tau) = {
-            let mut fr = factor_results.lock().unwrap();
-            #[cfg(debug_assertions)]
-            {
-                // The redundancy invariant: replicas are bit-identical.
-                let mut vals = fr.values();
-                if let Some((w0, t0)) = vals.next() {
-                    for (wi, ti) in vals {
-                        debug_assert!(
-                            w0.iter().zip(wi).all(|(a, b)| a.to_bits() == b.to_bits())
-                                && t0.iter().zip(ti).all(|(a, b)| a.to_bits() == b.to_bits()),
-                            "panel {k}: factor replicas diverged"
-                        );
+            None => {
+                let replicas: Vec<usize> =
+                    plan.factor_replicas(k).into_iter().filter(|&r| alive_f[r]).collect();
+                let mut snap = vec![0.0f64; rows * cols];
+                for i in 0..rows {
+                    for j in 0..cols {
+                        snap[i * cols + j] = w[(c0 + i) * n + (c0 + j)];
                     }
                 }
+                spawn_factor(pool, &replicas, Arc::new(snap), rows, cols, profile)
             }
-            let chosen = *fr.keys().next().expect("at least one live replica deposited");
-            fr.remove(&chosen).expect("just looked it up")
         };
+        stage.tasks.wait_idle();
+        metrics.panel_stall_ns += stall_t0.elapsed().as_nanos() as u64;
+        let owner = plan.factor_owner(k);
+        let factor_recovered = !alive_f[owner];
+        let (panel_buf, panel_tau, panel_wy) = harvest_factor(&stage, k);
         let panel_shared = Arc::new((panel_buf, panel_tau));
 
         // ---------------------------------------------- update stage
-        for r in 0..spec.procs {
-            if alive[r] && spec.schedule.fire(r, k, CaqrStage::Update) {
-                alive[r] = false;
-                died_at[r] = Some(k);
-            }
+        if tl.failed_at == Some((k, CaqrStage::Update)) {
+            failed_at = tl.failed_at;
+            break 'panels;
         }
+        let alive_u = &tl.alive_update[k];
         let blocks = plan.update_blocks(k);
-        // Resolve assignees up front: a block whose owner AND replica
-        // are both dead has no surviving copy — the run is lost before
-        // anything needs to be spawned.
-        let mut assignee_sets: Vec<Vec<usize>> = Vec::with_capacity(blocks);
-        for j in 0..blocks {
-            let asg: Vec<usize> =
-                plan.update_assignees(k, j).into_iter().filter(|&r| alive[r]).collect();
-            if asg.is_empty() {
-                failed_at = Some((k, CaqrStage::Update));
-                break 'panels;
-            }
-            assignee_sets.push(asg);
-        }
-        type UpdateMap = BTreeMap<(usize, usize), Vec<f64>>;
+        let assignee_sets: Vec<Vec<usize>> = (0..blocks)
+            .map(|j| plan.update_assignees(k, j).into_iter().filter(|&r| alive_u[r]).collect())
+            .collect();
         let update_results: Arc<Mutex<UpdateMap>> = Arc::new(Mutex::new(BTreeMap::new()));
-        let tasks = TaskGroup::new(pool.clone());
+        // Block 0 (the lookahead block) gets its own latch so the
+        // coordinator can dispatch panel k+1's factor the moment both
+        // of its copies are in, while the remaining blocks drain.
+        let look_block = plan.lookahead_block(k);
+        let look_group = TaskGroup::new(pool.clone());
+        let rest_group = TaskGroup::new(pool.clone());
         let mut spawned = 0u64;
         for (j, asg) in assignee_sets.iter().enumerate() {
             let (t0, t1) = plan.update_cols(k, j);
@@ -156,41 +311,104 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                 }
             }
             let bsnap = Arc::new(bsnap);
+            let group = if look_block == Some(j) { &look_group } else { &rest_group };
             for &rank in asg {
                 let panel_shared = Arc::clone(&panel_shared);
+                let panel_wy = panel_wy.clone();
                 let bsnap = Arc::clone(&bsnap);
                 let out = Arc::clone(&update_results);
                 spawned += 1;
-                tasks.spawn(move || {
-                    let (pan, t) = &*panel_shared;
+                group.spawn(move || {
                     let mut blk = (*bsnap).clone();
-                    apply_update_f64(pan, rows, cols, t, &mut blk, bk);
+                    match &panel_wy {
+                        Some(wy) => {
+                            WY_SCRATCH.with(|scratch| {
+                                wy::apply_wyt_into(wy, &mut blk, bk, &mut scratch.borrow_mut());
+                            });
+                        }
+                        None => {
+                            let (pan, t) = &*panel_shared;
+                            apply_update_f64(pan, rows, cols, t, &mut blk, bk);
+                        }
+                    }
                     out.lock().unwrap().insert((j, rank), blk);
                 });
             }
         }
-        tasks.wait_idle();
         metrics.update_tasks += spawned;
+
         let mut panel_recoveries = 0u64;
+        let mut written = vec![false; blocks];
+        let harvest_block = |j: usize,
+                             asg: &[usize],
+                             ur: &mut UpdateMap,
+                             w: &mut [f64],
+                             panel_recoveries: &mut u64| {
+            let block_owner = plan.update_owner(k, j);
+            let source = if asg.contains(&block_owner) {
+                block_owner
+            } else {
+                // The owner died mid-update: harvest the replica's
+                // copy instead (bit-identical — both ran the same
+                // deterministic kernel on the same snapshot).
+                *panel_recoveries += 1;
+                asg[0]
+            };
+            let blk = ur.remove(&(j, source)).expect("assigned task deposited its block");
+            let (t0, t1) = plan.update_cols(k, j);
+            let bk = t1 - t0;
+            for i in 0..rows {
+                for c in 0..bk {
+                    w[(c0 + i) * n + (t0 + c)] = blk[i * bk + c];
+                }
+            }
+        };
+
+        // ------------------------------------ lookahead dispatch
+        look_group.wait_idle();
+        if let Some(j0) = look_block {
+            {
+                let mut ur = update_results.lock().unwrap();
+                harvest_block(j0, &assignee_sets[j0], &mut ur, &mut w, &mut panel_recoveries);
+            }
+            written[j0] = true;
+            // Panel k+1's factor region (rows c1.., cols c1..c2) is
+            // fully contained in the block just harvested: dispatch
+            // its factor tasks now, overlapping the remaining updates.
+            if let Some(alive_next) = tl.alive_factor.get(k + 1) {
+                let replicas_next: Vec<usize> = plan
+                    .factor_replicas(k + 1)
+                    .into_iter()
+                    .filter(|&r| alive_next[r])
+                    .collect();
+                if !replicas_next.is_empty() {
+                    let (n0, n1) = plan.col_range(k + 1);
+                    let (next_rows, next_cols) = (m - n0, n1 - n0);
+                    let mut snap = vec![0.0f64; next_rows * next_cols];
+                    for i in 0..next_rows {
+                        for j in 0..next_cols {
+                            snap[i * next_cols + j] = w[(n0 + i) * n + (n0 + j)];
+                        }
+                    }
+                    pending = Some(spawn_factor(
+                        pool,
+                        &replicas_next,
+                        Arc::new(snap),
+                        next_rows,
+                        next_cols,
+                        profile,
+                    ));
+                }
+            }
+        }
+
+        // ------------------------------------ remaining updates
+        rest_group.wait_idle();
         {
             let mut ur = update_results.lock().unwrap();
             for (j, asg) in assignee_sets.iter().enumerate() {
-                let block_owner = plan.update_owner(k, j);
-                let source = if asg.contains(&block_owner) {
-                    block_owner
-                } else {
-                    // The owner died mid-update: harvest the replica's
-                    // bit-identical copy instead.
-                    panel_recoveries += 1;
-                    asg[0]
-                };
-                let blk = ur.remove(&(j, source)).expect("assigned task deposited its block");
-                let (t0, t1) = plan.update_cols(k, j);
-                let bk = t1 - t0;
-                for i in 0..rows {
-                    for c in 0..bk {
-                        w[(c0 + i) * n + (t0 + c)] = blk[i * bk + c];
-                    }
+                if !written[j] {
+                    harvest_block(j, asg, &mut ur, &mut w, &mut panel_recoveries);
                 }
             }
         }
@@ -207,33 +425,29 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
         }
 
         // --------------------------------------------- panel boundary
-        let mut respawns = 0u64;
-        if spec.algo == Algo::SelfHealing {
-            for r in 0..spec.procs {
-                if !alive[r] {
-                    alive[r] = true;
-                    died_at[r] = None;
-                    respawns += 1;
-                }
-            }
-        }
+        let respawns = tl.respawns[k];
         metrics.respawns += respawns;
         metrics.panels_completed += 1;
         panel_survival.push(PanelSurvival {
             panel: k,
-            alive_after: alive.iter().filter(|&&x| x).count(),
+            alive_after: alive_u.iter().filter(|&&x| x).count() + respawns as usize,
             factor_recovered,
             update_recoveries: panel_recoveries,
             respawns,
         });
     }
+    // Every dispatched lookahead stage is consumed by the next panel's
+    // factor stage (which always runs before that panel's update-failure
+    // break), and none is dispatched when the next panel's factor stage
+    // is doomed (no live replica) — so nothing can be left in flight.
+    debug_assert!(pending.is_none(), "lookahead factor stage left unconsumed");
 
     let statuses: Vec<ProcStatus> = (0..spec.procs)
         .map(|r| {
-            if alive[r] {
+            if tl.final_alive[r] {
                 ProcStatus::Alive
             } else {
-                ProcStatus::Dead { at_round: died_at[r].unwrap_or(0) as u32 }
+                ProcStatus::Dead { at_round: tl.died_at[r].unwrap_or(0) as u32 }
             }
         })
         .collect();
@@ -257,6 +471,7 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
 
     Ok(CaqrResult {
         algo: spec.algo,
+        profile,
         procs: spec.procs,
         panels: plan.panels(),
         failed_at,
@@ -288,6 +503,7 @@ mod tests {
         let a = spec.input_matrix();
         let res = run(spec);
         assert!(res.success());
+        assert_eq!(res.profile, KernelProfile::Reference);
         let reference = crate::linalg::householder_qr_reference(&a);
         let f = res.factors.as_ref().unwrap();
         assert_eq!(f.packed.data(), reference.packed.data(), "packed must be bit-identical");
@@ -296,6 +512,10 @@ mod tests {
         assert_eq!(res.metrics.panels_completed, 3);
         assert_eq!(res.metrics.update_recoveries, 0);
         assert_eq!(res.dead_count(), 0);
+        // Lookahead is observable but never exceeds the panels that
+        // have a successor.
+        assert!(res.metrics.lookahead_hits <= 2);
+        assert!(res.metrics.panel_stall_ns > 0, "panel 0 always stalls on its factor");
     }
 
     #[test]
@@ -327,6 +547,7 @@ mod tests {
         assert!(!res.success(), "both copies of a block lost -> run lost");
         assert_eq!(res.failed_at, Some((0, CaqrStage::Update)));
         assert!(res.final_r.is_none());
+        assert_eq!(res.metrics.update_tasks, 0, "no update task spawns on the failing panel");
     }
 
     #[test]
@@ -349,5 +570,47 @@ mod tests {
         assert!(res.success());
         let reference = crate::linalg::householder_qr_reference(&a);
         assert_eq!(res.factors.unwrap().packed.data(), reference.packed.data());
+    }
+
+    #[test]
+    fn blocked_profile_is_deterministic_and_close_to_reference() {
+        let spec = || {
+            CaqrSpec::new(Algo::Redundant, 4, 32, 16, 4)
+                .with_profile(KernelProfile::Blocked)
+        };
+        let a = spec().input_matrix();
+        let r1 = run(spec());
+        let r2 = run(spec());
+        assert!(r1.success());
+        assert_eq!(r1.profile, KernelProfile::Blocked);
+        assert_eq!(
+            r1.final_r.as_ref().unwrap().data(),
+            r2.final_r.as_ref().unwrap().data(),
+            "blocked profile must be run-to-run bit-deterministic"
+        );
+        let reference = crate::linalg::householder_qr_reference(&a).r();
+        assert!(
+            r1.final_r.as_ref().unwrap().max_abs_diff(&reference) < 1e-3,
+            "blocked profile must agree with the oracle numerically"
+        );
+        assert!(r1.verification.unwrap().ok);
+    }
+
+    #[test]
+    fn blocked_profile_recovers_bitwise_against_its_own_clean_run() {
+        let mk = |kills: &[(usize, usize, CaqrStage)]| {
+            CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+                .with_profile(KernelProfile::Blocked)
+                .with_schedule(CaqrKillSchedule::at(kills))
+        };
+        let clean = run(mk(&[]));
+        let struck = run(mk(&[(1, 0, CaqrStage::Update)]));
+        assert!(struck.success());
+        assert!(struck.metrics.update_recoveries > 0);
+        assert_eq!(
+            struck.final_r.as_ref().unwrap().data(),
+            clean.final_r.as_ref().unwrap().data(),
+            "blocked recovery must reproduce the clean blocked bits"
+        );
     }
 }

@@ -79,6 +79,7 @@ use std::time::Duration;
 use crate::error::{Error, Result};
 use crate::fault::{CaqrKillSchedule, CaqrStage};
 use crate::linalg::{Matrix, PackedQr};
+use crate::runtime::KernelProfile;
 use crate::tsqr::verify::Verification;
 use crate::tsqr::{Algo, PanelPlan};
 use crate::ulfm::{MetricsSnapshot, ProcStatus, Rank};
@@ -103,6 +104,12 @@ pub struct CaqrSpec {
     pub schedule: Arc<CaqrKillSchedule>,
     /// Verify the final R against the host oracle.
     pub verify: bool,
+    /// Kernel profile the factor/update tasks run:
+    /// [`KernelProfile::Reference`] (bitwise-pinned rank-1 updates) or
+    /// [`KernelProfile::Blocked`] (compact-WY + GEMM fast path).
+    /// `None` inherits the engine's default (`Reference` for one-shot
+    /// [`factorize`] runs).
+    pub profile: Option<KernelProfile>,
 }
 
 impl CaqrSpec {
@@ -117,6 +124,7 @@ impl CaqrSpec {
             seed: 42,
             schedule: Arc::new(CaqrKillSchedule::none()),
             verify: true,
+            profile: None,
         }
     }
 
@@ -135,6 +143,13 @@ impl CaqrSpec {
     /// Toggle oracle verification (skippable for survival sweeps).
     pub fn with_verify(mut self, on: bool) -> Self {
         self.verify = on;
+        self
+    }
+
+    /// Pin the kernel profile for this spec (overrides the engine's
+    /// default).
+    pub fn with_profile(mut self, profile: KernelProfile) -> Self {
+        self.profile = Some(profile);
         self
     }
 
@@ -205,6 +220,9 @@ pub struct PanelSurvival {
 pub struct CaqrResult {
     /// The spec's failure semantics.
     pub algo: Algo,
+    /// Kernel profile the run executed under (resolved from the spec
+    /// or the engine default).
+    pub profile: KernelProfile,
     /// World size.
     pub procs: usize,
     /// Panels the plan scheduled.

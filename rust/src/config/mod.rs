@@ -28,7 +28,7 @@ use std::path::Path;
 use crate::engine::{Engine, EngineBuilder};
 use crate::error::{Error, Result};
 use crate::fault::KillSchedule;
-use crate::runtime::{Backend, Executor};
+use crate::runtime::{Backend, Executor, KernelProfile};
 use crate::tsqr::{Algo, RunSpec, TreePlan};
 use crate::util::kv::Doc;
 
@@ -156,6 +156,14 @@ pub struct Config {
     pub trace: bool,
     /// Failure-injection model.
     pub failures: FailureConfig,
+    /// Kernel profile (`reference` | `blocked`); `None` keeps the
+    /// engine default (`reference`).
+    pub profile: Option<KernelProfile>,
+    /// Pool workers to pre-spawn (0 = grow on demand).  This removes
+    /// first-run thread-creation jitter from bench measurements; the
+    /// pool stays elastic and can still grow past this count if a run
+    /// needs more concurrent blocking tasks (see `engine::WorkerPool`).
+    pub threads: usize,
 }
 
 impl Default for Config {
@@ -172,6 +180,8 @@ impl Default for Config {
             verify: true,
             trace: false,
             failures: FailureConfig::None,
+            profile: None,
+            threads: 0,
         }
     }
 }
@@ -189,6 +199,8 @@ const KNOWN_KEYS: &[&str] = &[
     "pjrt-shards",
     "verify",
     "trace",
+    "profile",
+    "threads",
     "failures.mode",
     "failures.kills",
     "failures.p",
@@ -239,6 +251,12 @@ impl Config {
         if let Some(v) = doc.bool_of("trace") {
             cfg.trace = v;
         }
+        if let Some(v) = doc.str_of("profile") {
+            cfg.profile = Some(v.parse()?);
+        }
+        if let Some(v) = doc.usize_of("threads") {
+            cfg.threads = v;
+        }
         cfg.failures = FailureConfig::from_doc(&doc)?;
         Ok(cfg)
     }
@@ -268,6 +286,8 @@ impl Config {
             .backend(self.backend)
             .artifact_dir(self.artifact_dir.clone())
             .pjrt_shards(self.pjrt_shards)
+            .kernel_profile(self.profile.unwrap_or_default())
+            .prewarm(self.threads)
             .build()
     }
 
@@ -327,6 +347,20 @@ mod tests {
         assert!(cfg.trace);
         let spec = cfg.to_spec().unwrap();
         assert_eq!(spec.schedule.entries(), vec![(2, 1), (5, 2)]);
+    }
+
+    #[test]
+    fn profile_and_threads_parse_and_reach_the_engine() {
+        let cfg = Config::from_text(
+            "backend = \"host\"\nprofile = \"blocked\"\nthreads = 3",
+        )
+        .unwrap();
+        assert_eq!(cfg.profile, Some(KernelProfile::Blocked));
+        assert_eq!(cfg.threads, 3);
+        let engine = cfg.engine().unwrap();
+        assert_eq!(engine.default_kernel_profile(), KernelProfile::Blocked);
+        assert_eq!(engine.workers(), 3, "threads prewarms the pool");
+        assert!(Config::from_text("profile = \"warp\"").is_err(), "bad profile rejected");
     }
 
     #[test]

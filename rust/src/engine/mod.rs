@@ -37,7 +37,7 @@ use std::sync::{Arc, mpsc};
 
 use crate::caqr::{CaqrCampaign, CaqrResult, CaqrSpec};
 use crate::error::{Error, Result};
-use crate::runtime::{Backend, Executor, DEFAULT_ARTIFACT_DIR};
+use crate::runtime::{Backend, Executor, KernelProfile, DEFAULT_ARTIFACT_DIR};
 use crate::tsqr::{RunResult, RunSpec};
 
 /// Configures and builds an [`Engine`].
@@ -47,6 +47,7 @@ pub struct EngineBuilder {
     artifact_dir: String,
     pjrt_shards: usize,
     prewarm: usize,
+    kernel_profile: KernelProfile,
 }
 
 impl Default for EngineBuilder {
@@ -56,6 +57,7 @@ impl Default for EngineBuilder {
             artifact_dir: DEFAULT_ARTIFACT_DIR.into(),
             pjrt_shards: 2,
             prewarm: 0,
+            kernel_profile: KernelProfile::default(),
         }
     }
 }
@@ -98,6 +100,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Default [`KernelProfile`] for CAQR work submitted through this
+    /// engine: `Reference` (bitwise-pinned oracle path, the default) or
+    /// `Blocked` (compact-WY + GEMM fast path).  A spec-level
+    /// [`CaqrSpec::with_profile`](crate::caqr::CaqrSpec::with_profile)
+    /// overrides this per submission.
+    pub fn kernel_profile(mut self, profile: KernelProfile) -> Self {
+        self.kernel_profile = profile;
+        self
+    }
+
     /// Build the engine: load the backend once, start the pool.
     pub fn build(self) -> Result<Engine> {
         let executor = match self.backend {
@@ -112,7 +124,7 @@ impl EngineBuilder {
                 Executor::with_artifacts(&self.artifact_dir, Backend::Pjrt, self.pjrt_shards)?
             }
         };
-        Ok(Engine::from_parts(executor, self.prewarm))
+        Ok(Engine::from_parts(executor, self.prewarm, self.kernel_profile))
     }
 }
 
@@ -160,6 +172,7 @@ pub struct Engine {
     executor: Executor,
     pool: WorkerPool,
     counters: Arc<Counters>,
+    default_profile: KernelProfile,
 }
 
 impl Engine {
@@ -177,18 +190,24 @@ impl Engine {
     /// Wrap an existing executor in a fresh single-session engine (the
     /// substrate of the one-shot `tsqr::run` shim).
     pub fn with_executor(executor: Executor) -> Self {
-        Self::from_parts(executor, 0)
+        Self::from_parts(executor, 0, KernelProfile::default())
     }
 
-    fn from_parts(executor: Executor, prewarm: usize) -> Self {
+    fn from_parts(executor: Executor, prewarm: usize, default_profile: KernelProfile) -> Self {
         let pool =
             if prewarm > 0 { WorkerPool::with_prewarmed(prewarm) } else { WorkerPool::new() };
-        Self { executor, pool, counters: Arc::new(Counters::default()) }
+        Self { executor, pool, counters: Arc::new(Counters::default()), default_profile }
     }
 
     /// The session executor every submitted spec runs on.
     pub fn executor(&self) -> &Executor {
         &self.executor
+    }
+
+    /// The default [`KernelProfile`] CAQR submissions inherit when
+    /// their spec does not pin one.
+    pub fn default_kernel_profile(&self) -> KernelProfile {
+        self.default_profile
     }
 
     /// Worker threads currently alive in the pool.
@@ -212,6 +231,15 @@ impl Engine {
     /// is replaced by the session executor.
     fn adopt(&self, mut spec: RunSpec) -> RunSpec {
         spec.executor = self.executor.clone();
+        spec
+    }
+
+    /// Resolve a CAQR spec's kernel profile: a spec-level pin wins,
+    /// otherwise the engine's default applies.
+    fn adopt_caqr(&self, mut spec: CaqrSpec) -> CaqrSpec {
+        if spec.profile.is_none() {
+            spec.profile = Some(self.default_profile);
+        }
         spec
     }
 
@@ -266,6 +294,7 @@ impl Engine {
     /// assert!(res.success() && res.verification.unwrap().ok);
     /// ```
     pub fn run_caqr(&self, spec: CaqrSpec) -> Result<CaqrResult> {
+        let spec = self.adopt_caqr(spec);
         self.counters.submitted.fetch_add(1, Ordering::Relaxed);
         let res = crate::caqr::execute(&spec, &self.pool);
         match &res {
@@ -279,6 +308,7 @@ impl Engine {
     /// whole coordinator runs on pooled workers; the handle delivers
     /// the result.
     pub fn submit_caqr(&self, spec: CaqrSpec) -> CaqrJobHandle {
+        let spec = self.adopt_caqr(spec);
         let id = self.counters.submitted.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let pool = self.pool.clone();
@@ -297,7 +327,7 @@ impl Engine {
     /// Start a batched CAQR campaign over many specs (see
     /// [`CaqrCampaign`]).
     pub fn caqr_campaign(&self, specs: impl IntoIterator<Item = CaqrSpec>) -> CaqrCampaign<'_> {
-        CaqrCampaign::new(self, specs.into_iter().collect())
+        CaqrCampaign::new(self, specs.into_iter().map(|s| self.adopt_caqr(s)).collect())
     }
 }
 
@@ -383,6 +413,25 @@ mod tests {
         let err = engine.submit(RunSpec::new(Algo::Redundant, 6, 16, 4)).wait();
         assert!(err.is_err(), "non-pow2 redundant world must fail validation");
         assert_eq!(engine.stats().jobs_failed, 1);
+    }
+
+    #[test]
+    fn kernel_profile_knob_flows_into_caqr_runs() {
+        use crate::caqr::CaqrSpec;
+        let engine =
+            Engine::builder().host_only().kernel_profile(KernelProfile::Blocked).build().unwrap();
+        assert_eq!(engine.default_kernel_profile(), KernelProfile::Blocked);
+        let res = engine.run_caqr(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4)).unwrap();
+        assert!(res.success());
+        assert_eq!(res.profile, KernelProfile::Blocked, "engine default applies");
+        // A spec-level pin overrides the engine default.
+        let res = engine
+            .run_caqr(
+                CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4)
+                    .with_profile(KernelProfile::Reference),
+            )
+            .unwrap();
+        assert_eq!(res.profile, KernelProfile::Reference);
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //!   shared `Arc<Matrix>` handles, and kernel scratch comes from
 //!   pooled, reusable [`linalg::Workspace`] arenas — steady-state
 //!   campaign runs do not touch the allocator in the kernel path.
+//!   The compute-heavy CAQR paths additionally offer a deterministic
+//!   fast-kernel layer ([`runtime::KernelProfile::Blocked`]):
+//!   compact-WY trailing updates ([`linalg::wy`]) over a packed,
+//!   fixed-summation-order f64 GEMM microkernel ([`linalg::gemm`]),
+//!   with lookahead pipelining in the CAQR scheduler.
 //!
 //! ## Quick start
 //!

@@ -1,0 +1,323 @@
+//! Deterministic packed f64 GEMM — the level-3 engine of the
+//! compact-WY fast path.
+//!
+//! ## Why hand-rolled
+//!
+//! The crate builds with zero external dependencies (no BLAS, no
+//! `matrixmultiply`), and the CAQR fault-tolerance contract adds a
+//! constraint most BLAS libraries do not make: results must be
+//! **bit-reproducible run to run** so that two replicas of the same
+//! update task — the redundancy the paper's fault tolerance is paid
+//! with — always produce identical bit patterns.  This kernel fixes
+//! the summation order by construction:
+//!
+//! * single-threaded, no reduction-tree reassociation;
+//! * the k dimension is consumed in ascending [`KC`]-sized chunks, and
+//!   within a chunk the microkernel accumulates k ascending — so every
+//!   `C[i][j]` is a left-to-right ordered sum, the same order every
+//!   run;
+//! * packing pads partial register tiles with zeros, which never
+//!   perturbs a sum.
+//!
+//! ## Shape of the kernel
+//!
+//! Classic three-level blocking (BLIS-style): `NC`-wide column slabs of
+//! B × `KC`-deep k chunks × `MC`-tall row slabs of A, with A packed
+//! into [`MR`]-row strips and B into [`NR`]-column strips so the inner
+//! [`MR`]×[`NR`] register tile streams both operands contiguously.
+//! Plain safe rust — the 4×8 f64 tile autovectorizes on every target
+//! the CI builds for; no intrinsics, no `unsafe`.
+//!
+//! Scratch (the two packing buffers) is caller-provided — hot paths
+//! hand in a [`crate::linalg::Workspace`] slice so steady-state calls
+//! allocate nothing (see `tests/alloc_steady_state.rs`).
+
+/// Register-tile rows (A strip height).
+pub const MR: usize = 4;
+/// Register-tile columns (B strip width).
+pub const NR: usize = 8;
+/// k-dimension cache block: one packed A strip (`MR·KC` f64 = 8 KiB)
+/// stays in L1 while it is reused across the whole B slab.
+pub const KC: usize = 256;
+/// Row cache block (multiple of [`MR`]): the packed `MC×KC` A block
+/// (~192 KiB) targets L2.
+pub const MC: usize = 96;
+/// Column cache block (multiple of [`NR`]): the packed `KC×NC` B slab
+/// (~512 KiB) targets L3.
+pub const NC: usize = 256;
+
+/// f64 scratch (both packing buffers) one [`gemm_into`] call needs.
+pub const GEMM_SCRATCH: usize = MC * KC + KC * NC;
+
+/// How [`gemm_into`] combines the product with the existing `C`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Accum {
+    /// `C = A·B` (C's prior contents are ignored).
+    Set,
+    /// `C += A·B`.
+    Add,
+    /// `C -= A·B`.
+    Sub,
+}
+
+/// Pack the `mc×kc` block of A at `(ic, pc)` into [`MR`]-row strips.
+///
+/// `a` is row-major `m×k` when `a_trans` is false, or row-major `k×m`
+/// holding Aᵀ when true (the packing absorbs the transpose, so the
+/// microkernel never strides).  Partial strips are zero-padded.
+#[allow(clippy::too_many_arguments)] // BLAS-shaped: dims + operands + block offsets
+pub fn pack_a(
+    a: &[f64],
+    a_trans: bool,
+    m: usize,
+    k: usize,
+    ic: usize,
+    pc: usize,
+    mc: usize,
+    kc: usize,
+    out: &mut [f64],
+) {
+    debug_assert!(out.len() >= mc.div_ceil(MR) * MR * kc);
+    for s in 0..mc.div_ceil(MR) {
+        let base = s * MR * kc;
+        for p in 0..kc {
+            for r in 0..MR {
+                let i = ic + s * MR + r;
+                out[base + p * MR + r] = if s * MR + r < mc {
+                    if a_trans { a[(pc + p) * m + i] } else { a[i * k + (pc + p)] }
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// Pack the `kc×nc` block of row-major `k×n` B at `(pc, jc)` into
+/// [`NR`]-column strips (zero-padded).
+pub fn pack_b(
+    b: &[f64],
+    n: usize,
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+    out: &mut [f64],
+) {
+    debug_assert!(out.len() >= nc.div_ceil(NR) * NR * kc);
+    for t in 0..nc.div_ceil(NR) {
+        let base = t * NR * kc;
+        for p in 0..kc {
+            for c in 0..NR {
+                let j = jc + t * NR + c;
+                out[base + p * NR + c] =
+                    if t * NR + c < nc { b[(pc + p) * n + j] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// The [`MR`]×[`NR`] register tile: `acc += a_strip · b_strip` over one
+/// `kc` chunk, k ascending (the fixed summation order).
+#[inline(always)]
+fn microkernel(kc: usize, a: &[f64], b: &[f64], acc: &mut [f64; MR * NR]) {
+    debug_assert!(a.len() >= kc * MR && b.len() >= kc * NR);
+    for p in 0..kc {
+        let ap = &a[p * MR..p * MR + MR];
+        let bp = &b[p * NR..p * NR + NR];
+        for (i, &ai) in ap.iter().enumerate() {
+            let row = &mut acc[i * NR..i * NR + NR];
+            for (j, &bj) in bp.iter().enumerate() {
+                row[j] += ai * bj;
+            }
+        }
+    }
+}
+
+/// Packed, cache-blocked, register-tiled `C (m×n) ?= A (m×k) · B (k×n)`
+/// with a fixed summation order (bit-reproducible run to run; see the
+/// module docs).  All operands row-major; `a_trans` reinterprets `a` as
+/// a row-major `k×m` buffer holding Aᵀ.  `scratch` must provide at
+/// least [`GEMM_SCRATCH`] f64 (packing buffers — no allocation inside).
+#[allow(clippy::too_many_arguments)] // the classic GEMM signature
+pub fn gemm_into(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    a_trans: bool,
+    b: &[f64],
+    acc: Accum,
+    c: &mut [f64],
+    scratch: &mut [f64],
+) {
+    assert_eq!(a.len(), m * k, "gemm_into: A length != m*k");
+    assert_eq!(b.len(), k * n, "gemm_into: B length != k*n");
+    assert_eq!(c.len(), m * n, "gemm_into: C length != m*n");
+    assert!(scratch.len() >= GEMM_SCRATCH, "gemm_into: scratch must hold GEMM_SCRATCH f64");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if acc == Accum::Set {
+            c.fill(0.0);
+        }
+        return;
+    }
+    let (apack, bpack) = scratch.split_at_mut(MC * KC);
+
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            // How this kc chunk lands in C: the first chunk carries the
+            // caller's Accum, later chunks accumulate on top of it.
+            let chunk_acc = if pc == 0 {
+                acc
+            } else if acc == Accum::Sub {
+                Accum::Sub
+            } else {
+                Accum::Add
+            };
+            pack_b(b, n, pc, jc, kc, nc, bpack);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                pack_a(a, a_trans, m, k, ic, pc, mc, kc, apack);
+                for jr in (0..nc).step_by(NR) {
+                    let nr = NR.min(nc - jr);
+                    let bstrip = &bpack[(jr / NR) * NR * kc..(jr / NR + 1) * NR * kc];
+                    for ir in (0..mc).step_by(MR) {
+                        let mr = MR.min(mc - ir);
+                        let astrip = &apack[(ir / MR) * MR * kc..(ir / MR + 1) * MR * kc];
+                        let mut tile = [0.0f64; MR * NR];
+                        microkernel(kc, astrip, bstrip, &mut tile);
+                        for i in 0..mr {
+                            let crow = (ic + ir + i) * n + jc + jr;
+                            for j in 0..nr {
+                                let v = tile[i * NR + j];
+                                match chunk_acc {
+                                    Accum::Set => c[crow + j] = v,
+                                    Accum::Add => c[crow + j] += v,
+                                    Accum::Sub => c[crow + j] -= v,
+                                }
+                            }
+                        }
+                    }
+                }
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Modelled flop count of one `m×n×k` GEMM (`2·m·n·k`).
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> u64 {
+    2 * m as u64 * n as u64 * k as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(m: usize, n: usize, k: usize, a: &[f64], a_trans: bool, b: &[f64]) -> Vec<f64> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    let av = if a_trans { a[p * m + i] } else { a[i * k + p] };
+                    acc += av * b[p * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn randvec(rng: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.f64() - 0.5).collect()
+    }
+
+    #[test]
+    fn matches_naive_exactly_when_k_fits_one_chunk() {
+        // One KC chunk ⇒ identical left-to-right summation order as the
+        // naive loop ⇒ bitwise equality, including ragged tile edges.
+        let mut rng = Rng::new(7);
+        for (m, n, k) in [(1, 1, 1), (5, 9, 3), (13, 17, 31), (MC + 3, NC + 5, KC), (4, 8, 64)] {
+            let a = randvec(&mut rng, m * k);
+            let b = randvec(&mut rng, k * n);
+            let want = naive(m, n, k, &a, false, &b);
+            let mut c = vec![f64::NAN; m * n];
+            let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+            gemm_into(m, n, k, &a, false, &b, Accum::Set, &mut c, &mut scratch);
+            let cb: Vec<u64> = c.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(cb, wb, "bitwise mismatch at {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn transposed_a_and_accumulate_modes() {
+        let mut rng = Rng::new(11);
+        let (m, n, k) = (10, 12, 20);
+        let at = randvec(&mut rng, k * m); // row-major k×m = Aᵀ
+        let b = randvec(&mut rng, k * n);
+        let want = naive(m, n, k, &at, true, &b);
+        let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+        let mut c = vec![0.0f64; m * n];
+        gemm_into(m, n, k, &at, true, &b, Accum::Set, &mut c, &mut scratch);
+        for (g, w) in c.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12, "trans: {g} vs {w}");
+        }
+        // Add then Sub round-trips back to the Set result.
+        let set = c.clone();
+        gemm_into(m, n, k, &at, true, &b, Accum::Add, &mut c, &mut scratch);
+        gemm_into(m, n, k, &at, true, &b, Accum::Sub, &mut c, &mut scratch);
+        let cb: Vec<u64> = c.iter().map(|x| x.to_bits()).collect();
+        let sb: Vec<u64> = set.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(cb, sb, "Add then Sub of the same product must cancel bitwise");
+    }
+
+    #[test]
+    fn multi_chunk_k_is_accurate_and_run_to_run_deterministic() {
+        let mut rng = Rng::new(13);
+        let (m, n, k) = (9, 11, 2 * KC + 37); // forces chunked accumulation
+        let a = randvec(&mut rng, m * k);
+        let b = randvec(&mut rng, k * n);
+        let want = naive(m, n, k, &a, false, &b);
+        let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+        let run = |scratch: &mut Vec<f64>| {
+            let mut c = vec![0.0f64; m * n];
+            gemm_into(m, n, k, &a, false, &b, Accum::Set, &mut c, scratch);
+            c
+        };
+        let c1 = run(&mut scratch);
+        let c2 = run(&mut scratch);
+        assert_eq!(
+            c1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            c2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "identical inputs must give identical bits"
+        );
+        for (g, w) in c1.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10 * k as f64, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims() {
+        let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+        let mut c = vec![5.0f64; 6];
+        gemm_into(2, 3, 0, &[], false, &[], Accum::Set, &mut c, &mut scratch);
+        assert!(c.iter().all(|&x| x == 0.0), "k=0 Set zeroes C");
+        let mut c = vec![5.0f64; 6];
+        gemm_into(2, 3, 0, &[], false, &[], Accum::Add, &mut c, &mut scratch);
+        assert!(c.iter().all(|&x| x == 5.0), "k=0 Add leaves C");
+        gemm_into(0, 0, 4, &[], false, &[], Accum::Set, &mut [], &mut scratch);
+    }
+}

@@ -8,14 +8,24 @@
 //! thin shim over the zero-copy view kernels in [`view`]; hot paths
 //! (the [`crate::runtime::Executor`]) call the view kernels directly
 //! with pooled workspaces.
+//!
+//! The deterministic fast-kernel layer lives in [`gemm`] (packed,
+//! cache-blocked f64 GEMM microkernel with a fixed summation order) and
+//! [`wy`] (compact-WY accumulation, turning a panel's trailing update
+//! into two GEMMs) — the `KernelProfile::Blocked` path of the CAQR
+//! subsystem.
 
+pub mod gemm;
 pub mod matrix;
 pub mod qr;
 pub mod view;
+pub mod wy;
 
+pub use gemm::{Accum, gemm_into};
 pub use matrix::Matrix;
 pub use qr::{
     PackedQr, backsolve, caqr_reference, combine_r, householder_qr, householder_qr_reference,
     qr_r, qr_residuals,
 };
 pub use view::{MatrixView, MatrixViewMut, Workspace};
+pub use wy::WyFactor;

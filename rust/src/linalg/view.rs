@@ -706,6 +706,82 @@ pub fn apply_update_into(
     store_f32(out.data, blk);
 }
 
+// ---------------------------------------------------------------------
+// Compact-WY view kernels (the runtime's BuildT / ApplyWy ops)
+// ---------------------------------------------------------------------
+
+/// Materialize the unit-lower-trapezoidal V of a packed f32 view into
+/// an f64 buffer (the view-input twin of [`super::wy::materialize_v`]):
+/// reflector tails below the diagonal, 1 on it, zeros above.
+fn load_unit_lower_f64(packed: MatrixView<'_>, v: &mut [f64]) {
+    let (m, n) = packed.shape();
+    debug_assert_eq!(v.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            v[i * n + j] = match i.cmp(&j) {
+                std::cmp::Ordering::Greater => packed.at(i, j) as f64,
+                std::cmp::Ordering::Equal => 1.0,
+                std::cmp::Ordering::Less => 0.0,
+            };
+        }
+    }
+}
+
+/// Build the `n×n` upper-triangular compact-WY T factor of a packed
+/// f32 factorization into the caller's buffer (f64 internally, one
+/// terminal rounding).  Scratch comes from `ws`; nothing is allocated.
+pub fn build_t_into(
+    packed: MatrixView<'_>,
+    tau: &[f32],
+    out: &mut MatrixViewMut<'_>,
+    ws: &mut Workspace,
+) {
+    let (m, n) = packed.shape();
+    assert_eq!(tau.len(), n, "build_t_into: tau must have {n} entries");
+    assert_eq!(out.shape(), (n, n), "build_t_into: out must be {n}x{n}");
+    let buf = ws.f64_scratch(m * n + n * n + 2 * n);
+    let (v, rest) = buf.split_at_mut(m * n);
+    let (t, rest) = rest.split_at_mut(n * n);
+    let (t64, w) = rest.split_at_mut(n);
+    load_unit_lower_f64(packed, v);
+    for (d, &s) in t64.iter_mut().zip(tau) {
+        *d = s as f64;
+    }
+    super::wy::build_t_f64(v, m, n, t64, t, w);
+    store_f32(out.data, t);
+}
+
+/// Compact-WY trailing update: apply a packed f32 panel's reflectors to
+/// `block` via `out = block − V·(Tᵀ·(Vᵀ·block))` — two GEMMs through
+/// the packed [`crate::linalg::gemm`] microkernel instead of `n` rank-1
+/// sweeps.  f64 accumulation with a single terminal rounding;
+/// allocation-free on a warm workspace.  Deterministic (fixed summation
+/// order) but NOT bitwise-identical to [`apply_update_into`] — the
+/// level-3 fast path reassociates sums (see `linalg::wy`).
+pub fn apply_wy_into(
+    packed: MatrixView<'_>,
+    t: MatrixView<'_>,
+    block: MatrixView<'_>,
+    out: &mut MatrixViewMut<'_>,
+    ws: &mut Workspace,
+) {
+    let (m, n) = packed.shape();
+    assert_eq!(t.shape(), (n, n), "apply_wy_into: T must be {n}x{n}");
+    assert_eq!(block.rows(), m, "apply_wy_into: block rows must match packed rows");
+    assert_eq!(out.shape(), block.shape(), "apply_wy_into: out must match block shape");
+    let k = block.cols();
+    let need = m * n + n * n + m * k + super::wy::apply_wyt_scratch(n, k);
+    let buf = ws.f64_scratch(need);
+    let (v, rest) = buf.split_at_mut(m * n);
+    let (t64, rest) = rest.split_at_mut(n * n);
+    let (c, scratch) = rest.split_at_mut(m * k);
+    load_unit_lower_f64(packed, v);
+    load_f64(t64, t);
+    load_f64(c, block);
+    super::wy::apply_wyt_with_scratch(v, t64, m, n, c, k, scratch);
+    store_f32(out.data, c);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -925,6 +1001,62 @@ mod tests {
         let mut qt = block.clone();
         apply_qt_in_place(f.packed.as_view(), &f.tau, &mut qt.as_view_mut());
         assert!(out.max_abs_diff(&qt) < 1e-4);
+    }
+
+    #[test]
+    fn build_t_and_apply_wy_match_the_rank1_update() {
+        let (m, n, k) = (32, 8, 6);
+        let a = Matrix::random(m, n, 21);
+        let f = crate::linalg::qr::householder_qr(&a);
+        let mut ws = Workspace::new();
+        let mut t = Matrix::zeros(n, n);
+        build_t_into(f.packed.as_view(), &f.tau, &mut t.as_view_mut(), &mut ws);
+        assert!(t.is_upper_triangular(0.0), "T must be upper triangular");
+        for j in 0..n {
+            assert_eq!(t[(j, j)], f.tau[j], "diag(T) is tau");
+        }
+        let block = Matrix::random(m, k, 22);
+        let mut fast = Matrix::zeros(m, k);
+        apply_wy_into(
+            f.packed.as_view(),
+            t.as_view(),
+            block.as_view(),
+            &mut fast.as_view_mut(),
+            &mut ws,
+        );
+        let mut slow = Matrix::zeros(m, k);
+        apply_update_into(
+            f.packed.as_view(),
+            &f.tau,
+            block.as_view(),
+            &mut slow.as_view_mut(),
+            &mut ws,
+        );
+        assert!(
+            fast.max_abs_diff(&slow) < 1e-4,
+            "WY update must agree with the rank-1 path numerically"
+        );
+        // Deterministic: same call, same bits.
+        let mut again = Matrix::zeros(m, k);
+        apply_wy_into(
+            f.packed.as_view(),
+            t.as_view(),
+            block.as_view(),
+            &mut again.as_view_mut(),
+            &mut ws,
+        );
+        assert_eq!(bits(&fast), bits(&again), "apply_wy_into must be deterministic");
+        // Warm workspace: repeat calls never grow the arena.
+        let grows = ws.grows();
+        build_t_into(f.packed.as_view(), &f.tau, &mut t.as_view_mut(), &mut ws);
+        apply_wy_into(
+            f.packed.as_view(),
+            t.as_view(),
+            block.as_view(),
+            &mut again.as_view_mut(),
+            &mut ws,
+        );
+        assert_eq!(ws.grows(), grows, "warm WY kernels must not grow the workspace");
     }
 
     #[test]

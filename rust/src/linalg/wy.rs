@@ -1,0 +1,307 @@
+//! Compact-WY accumulation: apply a panel's Householder reflectors to
+//! the trailing matrix as **two GEMMs** instead of `n` rank-1 sweeps.
+//!
+//! ## The representation
+//!
+//! A panel factorization `H_0 H_1 … H_{b-1}` (each `H_j = I − τ_j v_j
+//! v_jᵀ`) has the compact-WY form `Q = I − V T Vᵀ` (LAPACK `larft`,
+//! forward columnwise): `V` is the unit-lower-trapezoidal matrix of
+//! reflector tails and `T` is `b×b` upper triangular.  The trailing
+//! update then becomes
+//!
+//! ```text
+//! QᵀC = C − V · (Tᵀ · (Vᵀ · C))
+//! ```
+//!
+//! — two large level-3 products ([`crate::linalg::gemm`]) plus one tiny
+//! `b×b` triangular one, instead of `b` memory-bound rank-1 passes over
+//! `C`.  That is the classic CAQR answer to the paper's cost model: the
+//! *replicated* trailing updates are the bulk of the redundant flops,
+//! so turning them into GEMM is the single biggest end-to-end lever.
+//!
+//! ## Determinism, not bit-identity
+//!
+//! The WY update reassociates the arithmetic, so its results differ
+//! from the rank-1 reference path by normal rounding (bounded by the
+//! usual `c·n·ε‖A‖`).  What the fault-tolerance contract actually
+//! needs is weaker and fully preserved: every kernel here is
+//! **deterministic** (fixed summation order, single-threaded), so two
+//! replicas of the same update task still produce identical bit
+//! patterns, and recovery still hands back exactly the bits the dead
+//! owner would have produced.  The `KernelProfile::Reference` path
+//! keeps the bitwise-pinned kernels for the oracle tests.
+
+use super::gemm::{self, Accum, GEMM_SCRATCH};
+use super::view;
+
+/// A panel's compact-WY factor: `Q = I − V T Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct WyFactor {
+    /// Materialized unit-lower-trapezoidal `rows×cols` V (1 on the
+    /// diagonal, reflector tails below, zeros above) — dense so the
+    /// GEMMs stream it without special-casing the triangle.
+    pub v: Vec<f64>,
+    /// The `cols×cols` upper-triangular T (forward `larft`).
+    pub t: Vec<f64>,
+    /// Panel rows.
+    pub rows: usize,
+    /// Panel columns (reflector count).
+    pub cols: usize,
+}
+
+/// Materialize the unit-lower-trapezoidal V from a packed (`geqrf`
+/// layout) panel: `v[i][j] = packed[i][j]` below the diagonal, 1 on it,
+/// 0 above.
+pub fn materialize_v(packed: &[f64], rows: usize, cols: usize, v: &mut [f64]) {
+    debug_assert_eq!(packed.len(), rows * cols);
+    debug_assert_eq!(v.len(), rows * cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            v[i * cols + j] = match i.cmp(&j) {
+                std::cmp::Ordering::Greater => packed[i * cols + j],
+                std::cmp::Ordering::Equal => 1.0,
+                std::cmp::Ordering::Less => 0.0,
+            };
+        }
+    }
+}
+
+/// Build the upper-triangular T of the compact-WY form from a
+/// materialized V and the reflector coefficients (LAPACK `larft`,
+/// forward columnwise).  `t` is `cols×cols`, fully overwritten;
+/// `w` is a `cols`-length scratch column (caller-provided so warm
+/// callers allocate nothing).
+///
+/// A zero `τ_j` (identity reflector from a zero column) produces an
+/// all-zero column `j` of T, which drops `H_j = I` from the product —
+/// the same skip the rank-1 path takes.
+pub fn build_t_f64(
+    v: &[f64],
+    rows: usize,
+    cols: usize,
+    tau: &[f64],
+    t: &mut [f64],
+    w: &mut [f64],
+) {
+    debug_assert_eq!(v.len(), rows * cols);
+    debug_assert_eq!(tau.len(), cols);
+    debug_assert_eq!(t.len(), cols * cols);
+    debug_assert!(w.len() >= cols);
+    t.fill(0.0);
+    for j in 0..cols {
+        let tj = tau[j];
+        if tj == 0.0 {
+            continue; // identity reflector: column j of T stays zero
+        }
+        // w = V[:, 0..j]ᵀ · v_j.  Both columns are zero above their own
+        // diagonal, so the product is supported on rows j..rows.
+        for (i, wi) in w.iter_mut().enumerate().take(j) {
+            let mut acc = 0.0f64;
+            for r in j..rows {
+                acc += v[r * cols + i] * v[r * cols + j];
+            }
+            *wi = acc;
+        }
+        // T[0..j, j] = −τ_j · T[0..j, 0..j] · w
+        for i in 0..j {
+            let mut acc = 0.0f64;
+            for (p, wp) in w.iter().enumerate().take(j).skip(i) {
+                acc += t[i * cols + p] * wp;
+            }
+            t[i * cols + j] = -tj * acc;
+        }
+        t[j * cols + j] = tj;
+    }
+}
+
+/// Build a [`WyFactor`] from a packed panel factorization (allocating
+/// convenience for the f64 CAQR task path; the zero-allocation view
+/// kernels in [`crate::linalg::view`] build into caller buffers).
+pub fn build_wy(packed: &[f64], rows: usize, cols: usize, tau: &[f64]) -> WyFactor {
+    let mut v = vec![0.0f64; rows * cols];
+    materialize_v(packed, rows, cols, &mut v);
+    let mut t = vec![0.0f64; cols * cols];
+    let mut w = vec![0.0f64; cols];
+    build_t_f64(&v, rows, cols, tau, &mut t, &mut w);
+    WyFactor { v, t, rows, cols }
+}
+
+/// Blocked variant of [`view::factor_panel_f64`] that emits the
+/// compact-WY T factor alongside the packed panel: `w` is factored in
+/// place (bit-for-bit identical to the unblocked-profile factor — the
+/// panelled core is bitwise independent of its block width) and the
+/// returned [`WyFactor`] is what the trailing updates consume.
+pub fn factor_panel_blocked_f64(
+    w: &mut [f64],
+    rows: usize,
+    cols: usize,
+    tau64: &mut [f64],
+) -> WyFactor {
+    view::factor_panel_f64(w, rows, cols, tau64);
+    build_wy(w, rows, cols, tau64)
+}
+
+/// f64 scratch [`apply_wyt_with_scratch`] needs for a `cols`-reflector
+/// panel applied to a `block_cols`-wide trailing block.
+pub const fn apply_wyt_scratch(cols: usize, block_cols: usize) -> usize {
+    2 * cols * block_cols + GEMM_SCRATCH
+}
+
+/// `block ← Qᵀ·block = block − V·(Tᵀ·(Vᵀ·block))` with caller-provided
+/// scratch (at least [`apply_wyt_scratch`] f64) — the allocation-free
+/// core shared by the f64 CAQR tasks and the runtime's `ApplyWy` view
+/// kernel.
+pub fn apply_wyt_with_scratch(
+    v: &[f64],
+    t: &[f64],
+    rows: usize,
+    cols: usize,
+    block: &mut [f64],
+    block_cols: usize,
+    scratch: &mut [f64],
+) {
+    assert_eq!(v.len(), rows * cols, "apply_wyt: V length != rows*cols");
+    assert_eq!(t.len(), cols * cols, "apply_wyt: T must be cols x cols");
+    assert_eq!(block.len(), rows * block_cols, "apply_wyt: block length != rows*block_cols");
+    assert!(
+        scratch.len() >= apply_wyt_scratch(cols, block_cols),
+        "apply_wyt: scratch too small"
+    );
+    let (wbuf, rest) = scratch.split_at_mut(cols * block_cols);
+    let (w2, gs) = rest.split_at_mut(cols * block_cols);
+    // W = Vᵀ · C
+    gemm::gemm_into(cols, block_cols, rows, v, true, block, Accum::Set, wbuf, gs);
+    // W₂ = Tᵀ · W  (T is upper triangular; the zeros cost one tiny GEMM)
+    gemm::gemm_into(cols, block_cols, cols, t, true, wbuf, Accum::Set, w2, gs);
+    // C −= V · W₂
+    gemm::gemm_into(rows, block_cols, cols, v, false, w2, Accum::Sub, block, gs);
+}
+
+/// [`apply_wyt_with_scratch`] over a [`WyFactor`], growing a reusable
+/// caller `Vec` for scratch — the CAQR update-task entry point (each
+/// task reuses one scratch vector across its panel's GEMM calls).
+pub fn apply_wyt_into(
+    wy: &WyFactor,
+    block: &mut [f64],
+    block_cols: usize,
+    scratch: &mut Vec<f64>,
+) {
+    let need = apply_wyt_scratch(wy.cols, block_cols);
+    if scratch.len() < need {
+        scratch.resize(need, 0.0);
+    }
+    apply_wyt_with_scratch(&wy.v, &wy.t, wy.rows, wy.cols, block, block_cols, scratch);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::linalg::view::{apply_update_f64, factor_panel_f64};
+
+    fn factored_panel(rows: usize, cols: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let a = Matrix::random(rows, cols, seed);
+        let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+        let mut tau = vec![0.0f64; cols];
+        factor_panel_f64(&mut w, rows, cols, &mut tau);
+        (w, tau)
+    }
+
+    #[test]
+    fn blocked_factor_is_bitwise_the_reference_factor() {
+        let (rows, cols) = (40, 12);
+        let a = Matrix::random(rows, cols, 5);
+        let mut wr: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+        let mut tr = vec![0.0f64; cols];
+        factor_panel_f64(&mut wr, rows, cols, &mut tr);
+        let mut wb: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+        let mut tb = vec![0.0f64; cols];
+        let wy = factor_panel_blocked_f64(&mut wb, rows, cols, &mut tb);
+        assert_eq!(
+            wr.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            wb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "blocked factor must leave the identical packed panel"
+        );
+        assert_eq!(
+            tr.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            tb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!((wy.rows, wy.cols), (rows, cols));
+    }
+
+    #[test]
+    fn wy_update_matches_rank1_reference_numerically() {
+        for (rows, cols, bk) in [(24, 6, 5), (48, 16, 16), (33, 7, 2), (16, 1, 4)] {
+            let (packed, tau) = factored_panel(rows, cols, (rows * 7 + bk) as u64);
+            let wy = build_wy(&packed, rows, cols, &tau);
+            let block = Matrix::random(rows, bk, 99);
+            let b0: Vec<f64> = block.data().iter().map(|&x| x as f64).collect();
+
+            let mut want = b0.clone();
+            apply_update_f64(&packed, rows, cols, &tau, &mut want, bk);
+
+            let mut got = b0.clone();
+            let mut scratch = Vec::new();
+            apply_wyt_into(&wy, &mut got, bk, &mut scratch);
+
+            let scale: f64 =
+                b0.iter().fold(1.0f64, |m, x| m.max(x.abs())) * cols as f64;
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() <= 1e-12 * scale.max(1.0),
+                    "{rows}x{cols} on {bk}-wide block: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wy_update_is_run_to_run_deterministic() {
+        let (rows, cols, bk) = (64, 16, 24);
+        let (packed, tau) = factored_panel(rows, cols, 3);
+        let block = Matrix::random(rows, bk, 4);
+        let run = || {
+            let wy = build_wy(&packed, rows, cols, &tau);
+            let mut b: Vec<f64> = block.data().iter().map(|&x| x as f64).collect();
+            let mut scratch = Vec::new();
+            apply_wyt_into(&wy, &mut b, bk, &mut scratch);
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "identical inputs must produce identical bits");
+    }
+
+    #[test]
+    fn zero_column_panel_yields_identity_contribution() {
+        // A zero column gives τ = 0; the WY product must skip it just
+        // like the rank-1 path does (zero T column).
+        let (rows, cols) = (12, 3);
+        let z = Matrix::zeros(rows, cols);
+        let mut wz: Vec<f64> = z.data().iter().map(|&x| x as f64).collect();
+        let mut tz = vec![0.0f64; cols];
+        let wy = factor_panel_blocked_f64(&mut wz, rows, cols, &mut tz);
+        assert!(tz.iter().all(|&t| t == 0.0));
+        let block = Matrix::random(rows, 4, 9);
+        let mut b: Vec<f64> = block.data().iter().map(|&x| x as f64).collect();
+        let before = b.clone();
+        let mut scratch = Vec::new();
+        apply_wyt_into(&wy, &mut b, 4, &mut scratch);
+        assert_eq!(
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            before.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "all-identity panel must leave the block untouched"
+        );
+    }
+
+    #[test]
+    fn t_is_upper_triangular() {
+        let (rows, cols) = (20, 6);
+        let (packed, tau) = factored_panel(rows, cols, 2);
+        let wy = build_wy(&packed, rows, cols, &tau);
+        for i in 0..cols {
+            for j in 0..i {
+                assert_eq!(wy.t[i * cols + j], 0.0, "T[{i}][{j}] below diagonal");
+            }
+            assert_eq!(wy.t[i * cols + i], tau[i], "diagonal is tau");
+        }
+    }
+}

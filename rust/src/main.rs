@@ -25,7 +25,7 @@ use ft_tsqr::caqr::{CaqrScenario, CaqrSpec};
 use ft_tsqr::config::{Config, FailureConfig};
 use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage, Scenario};
 use ft_tsqr::report::{Table, fmt_f, fmt_prob};
-use ft_tsqr::runtime::Manifest;
+use ft_tsqr::runtime::{KernelProfile, Manifest};
 use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan};
 use ft_tsqr::{Error, Result};
 
@@ -35,18 +35,23 @@ repro — fault-tolerant communication-avoiding TSQR (Coti 2015)
 USAGE:
   repro run      [--config FILE] [--algo A] [--procs P] [--rows-per-proc R]
                  [--cols N] [--seed S] [--backend B] [--kill r@s,r@s] [--trace]
+                 [--profile K] [--threads N]
   repro campaign [run flags] [--runs N] [--concurrency W]
   repro trace    <fig3|fig4|fig5|baseline-abort> [--rows-per-proc R] [--cols N]
   repro sweep    [--algo A] [--procs P] [--trials T] [--full]
   repro caqr     [--algo redundant|self-healing] [--procs P] [--rows M]
                  [--cols N] [--panel B] [--seed S] [--scenario NAME]
                  [--kill-update r@p,...] [--kill-factor r@p,...]
+                 [--profile K] [--threads N]
                  [--sweep [--f F] [--trials T]]
   repro validate [--procs P] [--trials T]
   repro info     [--artifact-dir DIR]
 
   A: baseline|redundant|replace|self-healing|checkpointed
   B: pjrt|host|auto
+  K: reference|blocked   (kernel profile: bitwise-pinned vs compact-WY fast path)
+  --threads N pre-spawns N pool workers (removes first-run spawn jitter;
+  the pool stays elastic and may still grow under load)
 ";
 
 /// Tiny `--key value` / `--flag` parser.
@@ -148,6 +153,12 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if let Some(k) = args.get("kill") {
         cfg.failures = FailureConfig::At { kills: parse_kills(k)? };
+    }
+    if let Some(p) = args.parse_flag::<KernelProfile>("profile")? {
+        cfg.profile = Some(p);
+    }
+    if let Some(t) = args.parse_flag::<usize>("threads")? {
+        cfg.threads = t;
     }
     cfg.trace |= args.get("trace").is_some();
     Ok(cfg)
@@ -330,7 +341,13 @@ fn cmd_caqr(args: &Args) -> Result<()> {
     let cols = args.parse_flag::<usize>("cols")?.unwrap_or(64);
     let panel = args.parse_flag::<usize>("panel")?.unwrap_or(16);
     let seed = args.parse_flag::<u64>("seed")?.unwrap_or(42);
-    let engine = ft_tsqr::engine::Engine::host();
+    let profile = args.parse_flag::<KernelProfile>("profile")?.unwrap_or_default();
+    let threads = args.parse_flag::<usize>("threads")?.unwrap_or(0);
+    let engine = ft_tsqr::engine::Engine::builder()
+        .host_only()
+        .kernel_profile(profile)
+        .prewarm(threads)
+        .build()?;
 
     if args.get("sweep").is_some() {
         // Survival over panel counts: the FullSimSweep mode for the
@@ -392,13 +409,14 @@ fn cmd_caqr(args: &Args) -> Result<()> {
 
     spec.validate()?; // before plan(): the plan asserts what validate reports
     println!(
-        "caqr: algo={} procs={} matrix={}x{} panel={} panels={}",
+        "caqr: algo={} procs={} matrix={}x{} panel={} panels={} profile={}",
         spec.algo.name(),
         spec.procs,
         spec.m,
         spec.n,
         spec.panel,
         spec.plan().panels(),
+        profile,
     );
     let res = engine.run_caqr(spec)?;
     for ps in &res.panel_survival {
@@ -408,7 +426,8 @@ fn cmd_caqr(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "success={} dead={} panels_completed={}/{} update_tasks={} recoveries={} respawns={} wall={:?}",
+        "success={} dead={} panels_completed={}/{} update_tasks={} recoveries={} respawns={} \
+         lookahead_hits={} panel_stall={:?} wall={:?}",
         res.success(),
         res.dead_count(),
         res.metrics.panels_completed,
@@ -416,6 +435,8 @@ fn cmd_caqr(args: &Args) -> Result<()> {
         res.metrics.update_tasks,
         res.metrics.update_recoveries,
         res.metrics.respawns,
+        res.metrics.lookahead_hits,
+        std::time::Duration::from_nanos(res.metrics.panel_stall_ns),
         res.wall,
     );
     if let Some((panel, stage)) = res.failed_at {

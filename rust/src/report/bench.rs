@@ -70,6 +70,120 @@ pub fn quick() -> bool {
     std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Regression-gate switch: `BENCH_REGRESS=1` makes the bench binaries
+/// compare their higher-is-better metrics against the committed
+/// baselines in `benches/baselines/` and exit non-zero on a drop
+/// beyond the tolerance (the CI `bench-regress` job).
+pub fn regress_enabled() -> bool {
+    std::env::var("BENCH_REGRESS").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Outcome of one [`regress_check`] comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Regression {
+    /// Every compared metric is within tolerance of the baseline.
+    Pass(String),
+    /// No baseline file exists yet — nothing to gate against.
+    NoBaseline(String),
+    /// At least one metric dropped beyond the tolerance.
+    Fail(String),
+}
+
+/// Tolerant comparator for the CI perf gate: compare `current`
+/// higher-is-better metrics against the committed baseline JSON.
+///
+/// A metric regresses when `current < baseline * (1 − tolerance)`
+/// (e.g. `tolerance = 0.20` fails on a >20 % drop).  Keys absent from
+/// the baseline are skipped — adding a metric to a bench never breaks
+/// the gate until the baseline is refreshed.  Two escape hatches keep
+/// the gate honest rather than noisy:
+///
+/// * a baseline carrying `"provisional": true` (the seeded floors
+///   committed before the first measured refresh) reports drops as
+///   warnings inside [`Regression::Pass`] instead of failing;
+/// * a baseline whose recorded `"quick"` flag differs from the current
+///   run's mode also only warns — quick and full runs use different
+///   bench shapes, and ratios are only comparable like-for-like (the
+///   CI gate runs quick, so baselines must be refreshed with
+///   `BENCH_QUICK=1` to arm it).
+///
+/// Baselines are deliberately dominated by machine-*relative* metrics
+/// (speedup ratios, not absolute runs/sec): CI hosts vary widely in
+/// absolute speed, but a fast path that stops beating its reference
+/// path regresses on every machine.
+pub fn regress_check(
+    bench: &str,
+    baseline_path: &str,
+    current: &[(&str, f64)],
+    tolerance: f64,
+    quick_mode: bool,
+) -> Regression {
+    let text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(_) => {
+            return Regression::NoBaseline(format!(
+                "{bench}: no baseline at {baseline_path}; run with BENCH_WRITE_BASELINE=1 \
+                 to seed one"
+            ));
+        }
+    };
+    let json = match crate::util::Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => return Regression::Fail(format!("{bench}: unreadable baseline: {e}")),
+    };
+    let baseline_quick = json.get("quick").and_then(crate::util::Json::as_bool);
+    let mode_mismatch = baseline_quick.is_some_and(|q| q != quick_mode);
+    let provisional =
+        json.get("provisional").and_then(crate::util::Json::as_bool).unwrap_or(false)
+            || mode_mismatch;
+    let mut drops = Vec::new();
+    let mut compared = 0usize;
+    for &(key, cur) in current {
+        let Some(base) = json.get(key).and_then(crate::util::Json::as_f64) else {
+            continue;
+        };
+        if base <= 0.0 {
+            continue;
+        }
+        compared += 1;
+        if cur < base * (1.0 - tolerance) {
+            drops.push(format!(
+                "{key}: {cur:.3} vs baseline {base:.3} (-{:.1}% > {:.0}% tolerance)",
+                (1.0 - cur / base) * 100.0,
+                tolerance * 100.0
+            ));
+        }
+    }
+    if drops.is_empty() {
+        Regression::Pass(format!("{bench}: {compared} metrics within tolerance of baseline"))
+    } else if provisional {
+        let why = if mode_mismatch { "MODE-MISMATCHED (quick vs full)" } else { "PROVISIONAL" };
+        Regression::Pass(format!(
+            "{bench}: drops vs {why} baseline (warning only): {}",
+            drops.join("; ")
+        ))
+    } else {
+        Regression::Fail(format!("{bench}: perf regression: {}", drops.join("; ")))
+    }
+}
+
+/// Bench-binary helper: run the gate when `BENCH_REGRESS=1`, print the
+/// verdict, and exit non-zero on a real regression.  The current run's
+/// [`quick`] mode is compared against the baseline's recorded mode so
+/// ratios are never hard-gated across different bench shapes.
+pub fn enforce_regress_gate(bench: &str, baseline_path: &str, current: &[(&str, f64)]) {
+    if !regress_enabled() {
+        return;
+    }
+    match regress_check(bench, baseline_path, current, 0.20, quick()) {
+        Regression::Pass(msg) | Regression::NoBaseline(msg) => println!("bench-regress: {msg}"),
+        Regression::Fail(msg) => {
+            eprintln!("bench-regress: {msg}");
+            std::process::exit(3);
+        }
+    }
+}
+
 /// Pick an iteration count depending on quick mode.
 pub fn iters(full: u32, quick_n: u32) -> u32 {
     if quick() { quick_n } else { full }
@@ -89,6 +203,50 @@ mod tests {
         assert_eq!(count, 6, "warmup + iters");
         assert_eq!(s.iters, 5);
         assert!(s.min <= s.median && s.median.as_nanos() > 0);
+    }
+
+    #[test]
+    fn regress_comparator_tolerates_and_fails() {
+        let tmp = crate::util::TestDir::new();
+        let p = tmp.write(
+            "BENCH_x.json",
+            r#"{"bench":"x","quick":true,"speedup":2.0,"gflops":4.0,"zero":0.0}"#,
+        );
+        let path = p.to_str().unwrap();
+        // Within tolerance (10% drop < 20%).
+        assert!(matches!(
+            regress_check("x", path, &[("speedup", 1.8), ("gflops", 4.5)], 0.20, true),
+            Regression::Pass(_)
+        ));
+        // Beyond tolerance, same mode: hard fail.
+        assert!(matches!(
+            regress_check("x", path, &[("speedup", 1.5)], 0.20, true),
+            Regression::Fail(_)
+        ));
+        // Same drop, but the baseline was recorded in a different mode
+        // (different bench shapes): warning only.
+        assert!(matches!(
+            regress_check("x", path, &[("speedup", 1.5)], 0.20, false),
+            Regression::Pass(_)
+        ));
+        // Unknown + non-positive keys are skipped, missing file is soft.
+        assert!(matches!(
+            regress_check("x", path, &[("new_metric", 0.1), ("zero", 0.0)], 0.20, true),
+            Regression::Pass(_)
+        ));
+        assert!(matches!(
+            regress_check("x", "/nonexistent/b.json", &[("speedup", 1.0)], 0.20, true),
+            Regression::NoBaseline(_)
+        ));
+        // Provisional baselines warn instead of failing.
+        let p2 = tmp.write(
+            "BENCH_y.json",
+            r#"{"bench":"y","quick":true,"provisional":true,"speedup":2.0}"#,
+        );
+        assert!(matches!(
+            regress_check("y", p2.to_str().unwrap(), &[("speedup", 0.5)], 0.20, true),
+            Regression::Pass(_)
+        ));
     }
 
     #[test]

@@ -26,6 +26,56 @@ use crate::linalg::{Matrix, MatrixView, Workspace, view};
 use super::manifest::Manifest;
 use super::service::PjrtService;
 
+/// Which kernel implementation family the compute-heavy paths run.
+///
+/// * [`Reference`](KernelProfile::Reference) keeps the bitwise-pinned
+///   kernels: rank-1 trailing updates whose results are bit-identical
+///   to `householder_qr_reference` — the oracle the recovery tests pin.
+/// * [`Blocked`](KernelProfile::Blocked) is the compact-WY fast path:
+///   trailing updates become two GEMMs through the packed
+///   [`crate::linalg::gemm`] microkernel.  Its results differ from the
+///   oracle by normal rounding, but every kernel is *deterministic*
+///   (fixed summation order), which is all the replica-comparison
+///   fault tolerance needs: both buddies run the identical kernel, so
+///   recovery still restores the exact bits the dead owner held.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelProfile {
+    /// Bitwise-pinned rank-1 kernels (the oracle path).
+    #[default]
+    Reference,
+    /// Compact-WY + GEMM fast path (deterministic, not bit-pinned).
+    Blocked,
+}
+
+impl KernelProfile {
+    /// Stable name (`reference` / `blocked`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelProfile::Reference => "reference",
+            KernelProfile::Blocked => "blocked",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for KernelProfile {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "reference" | "ref" => Ok(KernelProfile::Reference),
+            "blocked" | "wy" => Ok(KernelProfile::Blocked),
+            other => Err(Error::Config(format!(
+                "unknown kernel profile '{other}' (reference|blocked)"
+            ))),
+        }
+    }
+}
+
 /// Which kernel a [`KernelCall`] requests.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelOp {
@@ -46,6 +96,14 @@ pub enum KernelOp {
     /// single rounding → `[updated_block]` (see
     /// [`crate::linalg::view::apply_update_into`]).
     ApplyUpdate,
+    /// Build the compact-WY T factor of a packed panel → `[t]` (see
+    /// [`crate::linalg::view::build_t_into`]).
+    BuildT,
+    /// Compact-WY trailing update: two GEMMs instead of n rank-1
+    /// sweeps → `[updated_block]` (see
+    /// [`crate::linalg::view::apply_wy_into`]).  The
+    /// [`KernelProfile::Blocked`] sibling of [`ApplyUpdate`](Self::ApplyUpdate).
+    ApplyWy,
     /// Materialize the thin Q of a packed factorization → `[q]`.
     BuildQ,
 }
@@ -65,6 +123,10 @@ impl KernelOp {
             }
             KernelOp::ApplyUpdate => {
                 Manifest::apply_update_name(views[0].rows(), views[0].cols(), views[2].cols())
+            }
+            KernelOp::BuildT => Manifest::build_t_name(views[0].rows(), views[0].cols()),
+            KernelOp::ApplyWy => {
+                Manifest::apply_wy_name(views[0].rows(), views[0].cols(), views[2].cols())
             }
             KernelOp::BuildQ => Manifest::build_q_name(views[0].rows(), views[0].cols()),
         }
@@ -106,8 +168,10 @@ impl Kernel for HostKernel {
     }
 
     fn wants_workspace(&self, op: KernelOp) -> bool {
-        // Factorizations and the CAQR trailing update run through the
-        // f64 scratch arena; the solve/apply kernels work in place on
+        // Factorizations, the CAQR trailing updates (rank-1 and
+        // compact-WY), and the T build run through the f64 scratch
+        // arena (the WY ops additionally draw their GEMM packing
+        // buffers from it); the solve/apply kernels work in place on
         // their outputs.
         matches!(
             op,
@@ -116,6 +180,8 @@ impl Kernel for HostKernel {
                 | KernelOp::Combine
                 | KernelOp::CombineR
                 | KernelOp::ApplyUpdate
+                | KernelOp::BuildT
+                | KernelOp::ApplyWy
         )
     }
 
@@ -169,6 +235,19 @@ impl Kernel for HostKernel {
                 // views: [packed, tau (n×1), block]
                 let mut out = Matrix::zeros(v[2].rows(), v[2].cols());
                 view::apply_update_into(v[0], v[1].data(), v[2], &mut out.as_view_mut(), ws);
+                Ok(vec![out])
+            }
+            KernelOp::BuildT => {
+                // views: [packed, tau (n×1)]
+                let n = v[0].cols();
+                let mut t = Matrix::zeros(n, n);
+                view::build_t_into(v[0], v[1].data(), &mut t.as_view_mut(), ws);
+                Ok(vec![t])
+            }
+            KernelOp::ApplyWy => {
+                // views: [packed, t (n×n), block]
+                let mut out = Matrix::zeros(v[2].rows(), v[2].cols());
+                view::apply_wy_into(v[0], v[1], v[2], &mut out.as_view_mut(), ws);
                 Ok(vec![out])
             }
             KernelOp::BuildQ => {
@@ -349,6 +428,46 @@ mod tests {
             KernelOp::Backsolve.entry_name(&[b.as_view(), Matrix::zeros(4, 2).as_view()]),
             Manifest::backsolve_name(4, 2)
         );
+    }
+
+    #[test]
+    fn host_kernel_wy_ops_agree_with_rank1_update() {
+        let a = Matrix::random(24, 4, 5);
+        let f = householder_qr(&a);
+        let block = Matrix::random(24, 3, 6);
+        let tau = Matrix::from_vec(4, 1, f.tau.clone());
+        let mut ws = Workspace::new();
+        let t_views = [f.packed.as_view(), tau.as_view()];
+        let t = HostKernel
+            .execute(call(KernelOp::BuildT, &t_views, &mut ws))
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert_eq!(t.shape(), (4, 4));
+        let wy_views = [f.packed.as_view(), t.as_view(), block.as_view()];
+        let fast = HostKernel
+            .execute(call(KernelOp::ApplyWy, &wy_views, &mut ws))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let upd_views = [f.packed.as_view(), tau.as_view(), block.as_view()];
+        let slow = HostKernel
+            .execute(call(KernelOp::ApplyUpdate, &upd_views, &mut ws))
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert!(fast.max_abs_diff(&slow) < 1e-4, "WY op must match the rank-1 op");
+    }
+
+    #[test]
+    fn kernel_profile_parses_and_prints() {
+        use super::KernelProfile;
+        assert_eq!("reference".parse::<KernelProfile>().unwrap(), KernelProfile::Reference);
+        assert_eq!("blocked".parse::<KernelProfile>().unwrap(), KernelProfile::Blocked);
+        assert_eq!("wy".parse::<KernelProfile>().unwrap(), KernelProfile::Blocked);
+        assert!("fast".parse::<KernelProfile>().is_err());
+        assert_eq!(KernelProfile::default(), KernelProfile::Reference);
+        assert_eq!(KernelProfile::Blocked.to_string(), "blocked");
     }
 
     #[test]

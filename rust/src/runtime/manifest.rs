@@ -142,6 +142,14 @@ impl Manifest {
     pub fn apply_update_name(m: usize, n: usize, k: usize) -> String {
         format!("apply_update_{m}x{n}x{k}")
     }
+    /// `build_t_{m}x{n}` — the compact-WY T-factor kernel.
+    pub fn build_t_name(m: usize, n: usize) -> String {
+        format!("build_t_{m}x{n}")
+    }
+    /// `apply_wy_{m}x{n}x{k}` — the compact-WY trailing-update kernel.
+    pub fn apply_wy_name(m: usize, n: usize, k: usize) -> String {
+        format!("apply_wy_{m}x{n}x{k}")
+    }
     /// Canonical `build_q_{m}x{n}` entry name.
     pub fn build_q_name(m: usize, n: usize) -> String {
         format!("build_q_{m}x{n}")
@@ -197,6 +205,8 @@ mod tests {
         assert_eq!(Manifest::combine_name(16), "combine_16");
         assert_eq!(Manifest::backsolve_name(8, 1), "backsolve_8x1");
         assert_eq!(Manifest::apply_qt_name(64, 8, 1), "apply_qt_64x8x1");
+        assert_eq!(Manifest::build_t_name(64, 8), "build_t_64x8");
+        assert_eq!(Manifest::apply_wy_name(64, 8, 16), "apply_wy_64x8x16");
         assert_eq!(Manifest::build_q_name(64, 8), "build_q_64x8");
     }
 }

@@ -11,7 +11,7 @@ pub mod manifest;
 pub mod service;
 
 pub use executor::{Backend, Executor, Factorization};
-pub use kernel::{Kernel, KernelCall, KernelOp, WorkspacePool, WorkspaceStats};
+pub use kernel::{Kernel, KernelCall, KernelOp, KernelProfile, WorkspacePool, WorkspaceStats};
 pub use manifest::Manifest;
 pub use service::PjrtService;
 

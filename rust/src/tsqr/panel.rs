@@ -139,6 +139,19 @@ impl PanelPlan {
         }
     }
 
+    /// The trailing-update block of panel `k` whose columns are exactly
+    /// panel `k + 1`'s block column — the block the lookahead scheduler
+    /// waits on before dispatching panel `k + 1`'s factor tasks early
+    /// (concurrently with panel `k`'s remaining updates).  `None` when
+    /// panel `k` is the last panel (no trailing matrix, nothing to look
+    /// ahead to).
+    ///
+    /// Block 0 always qualifies because update blocks and panels share
+    /// the same column width: `update_cols(k, 0) == col_range(k + 1)`.
+    pub fn lookahead_block(&self, k: usize) -> Option<usize> {
+        (self.update_blocks(k) > 0).then_some(0)
+    }
+
     /// Copies of every CAQR task result (2 on multi-process worlds):
     /// the per-panel tolerated-failure count is `replication() - 1`,
     /// the CAQR analogue of the paper's `2^s - 1`.
@@ -200,6 +213,25 @@ mod tests {
         let p = PanelPlan::new(64, 32, 8, 4);
         let owners: Vec<Rank> = (0..p.update_blocks(0)).map(|j| p.update_owner(0, j)).collect();
         assert_eq!(owners, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn lookahead_block_covers_the_next_panel_exactly() {
+        let p = PanelPlan::new(64, 20, 8, 4);
+        for k in 0..p.panels() {
+            match p.lookahead_block(k) {
+                Some(j) => {
+                    assert_eq!(j, 0);
+                    assert_eq!(
+                        p.update_cols(k, j),
+                        p.col_range(k + 1),
+                        "lookahead block must be panel {}'s column range",
+                        k + 1
+                    );
+                }
+                None => assert_eq!(k, p.panels() - 1, "only the last panel has no lookahead"),
+            }
+        }
     }
 
     #[test]

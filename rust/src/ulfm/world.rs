@@ -133,6 +133,14 @@ pub struct MetricsSnapshot {
     /// CAQR: trailing-update blocks whose owner was dead at harvest
     /// time and whose result was taken from the surviving replica.
     pub update_recoveries: u64,
+    /// CAQR: panels whose factor tasks were dispatched early by the
+    /// lookahead scheduler *and* had already completed when the
+    /// coordinator reached the panel (zero factor stall).
+    pub lookahead_hits: u64,
+    /// CAQR: nanoseconds the coordinator spent stalled waiting for
+    /// panel-factor results — the critical-path gap lookahead shrinks
+    /// (panel 0 always pays its full factor latency here).
+    pub panel_stall_ns: u64,
 }
 
 impl MetricsSnapshot {
@@ -147,6 +155,8 @@ impl MetricsSnapshot {
         self.panels_completed += other.panels_completed;
         self.update_tasks += other.update_tasks;
         self.update_recoveries += other.update_recoveries;
+        self.lookahead_hits += other.lookahead_hits;
+        self.panel_stall_ns += other.panel_stall_ns;
     }
 }
 

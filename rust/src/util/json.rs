@@ -68,6 +68,14 @@ impl Json {
         self.as_f64().filter(|x| x.fract() == 0.0 && *x >= 0.0).map(|x| x as usize)
     }
 
+    /// The boolean value, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {

@@ -106,6 +106,35 @@ fn steady_state_performs_no_kernel_or_collective_allocations() {
     });
     assert_eq!(ws.grows(), 0, "pre-sized workspace must never grow");
 
+    // Compact-WY fast-path kernels: bigger scratch footprint (GEMM
+    // packing buffers live in the workspace too), so warm with one
+    // untimed call each — every call after that must allocate nothing.
+    let mut t_out = Matrix::zeros(8, 8);
+    let block = Matrix::random(64, 6, 4);
+    let mut wy_out = Matrix::zeros(64, 6);
+    view::build_t_into(packed.as_view(), &tau, &mut t_out.as_view_mut(), &mut ws);
+    view::apply_wy_into(
+        packed.as_view(),
+        t_out.as_view(),
+        block.as_view(),
+        &mut wy_out.as_view_mut(),
+        &mut ws,
+    );
+    let wy_grows = ws.grows();
+    assert_zero_alloc("warm build_t_into", 5, || {
+        view::build_t_into(packed.as_view(), &tau, &mut t_out.as_view_mut(), &mut ws);
+    });
+    assert_zero_alloc("warm apply_wy_into", 5, || {
+        view::apply_wy_into(
+            packed.as_view(),
+            t_out.as_view(),
+            block.as_view(),
+            &mut wy_out.as_view_mut(),
+            &mut ws,
+        );
+    });
+    assert_eq!(ws.grows(), wy_grows, "warm WY kernels must never grow the arena");
+
     // ---------------------------------------------------------------
     // 2. Collective path: posting an Arc shares the payload — the
     //    board insert must cost bookkeeping bytes, not a matrix copy.

@@ -203,6 +203,24 @@ fn caqr_subcommand_factors_and_recovers() {
 }
 
 #[test]
+fn caqr_profile_and_threads_flags_are_accepted() {
+    let out = run_ok(&[
+        "caqr", "--procs", "4", "--rows", "32", "--cols", "16", "--panel", "4", "--profile",
+        "blocked", "--threads", "2",
+    ]);
+    assert!(out.contains("profile=blocked"), "{out}");
+    assert!(out.contains("success=true"), "{out}");
+    assert!(out.contains("ok=true"), "blocked profile must still verify: {out}");
+
+    let out = repro()
+        .args(["caqr", "--procs", "4", "--rows", "16", "--cols", "8", "--profile", "warp"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "unknown profile must be rejected");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown kernel profile"));
+}
+
+#[test]
 fn caqr_scenario_pair_wipe_exits_nonzero() {
     let out = repro()
         .args(["caqr", "--scenario", "pair-wipe", "--rows", "32", "--cols", "16", "--panel", "4"])

@@ -226,6 +226,108 @@ fn blocked_combine_bitwise_matches_vstack_oracle() {
     assert_eq!(ws.grows(), 0, "pre-sized workspace must never grow");
 }
 
+/// The packed GEMM microkernel against a naive triple loop, across
+/// random shapes (ragged register tiles, transposed A, all accumulate
+/// modes) — and the fixed-summation-order claim: identical inputs give
+/// identical bits, and for k within one KC chunk the association
+/// matches the naive ascending loop exactly (bitwise).
+#[test]
+fn gemm_matches_naive_and_is_deterministic() {
+    use ft_tsqr::linalg::gemm::{self, Accum, GEMM_SCRATCH, KC};
+    let mut rng = Rng::new(0x6E44);
+    let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+    for case in 0..40 {
+        let m = 1 + rng.below(40);
+        let n = 1 + rng.below(40);
+        let k = 1 + rng.below(96);
+        let a_trans = rng.bool(0.5);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.f64() - 0.5).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.f64() - 0.5).collect();
+        let mut want = vec![0.0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    let av = if a_trans { a[p * m + i] } else { a[i * k + p] };
+                    acc += av * b[p * n + j];
+                }
+                want[i * n + j] = acc;
+            }
+        }
+        let mut c = vec![f64::NAN; m * n];
+        gemm::gemm_into(m, n, k, &a, a_trans, &b, Accum::Set, &mut c, &mut scratch);
+        assert!(k <= KC, "drawn k stays within one chunk");
+        for (idx, (g, w)) in c.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "case {case}: C[{idx}] differs at {m}x{n}x{k} trans={a_trans}: {g} vs {w}"
+            );
+        }
+        // Determinism: a second run reproduces the bits.
+        let mut c2 = vec![0.0f64; m * n];
+        gemm::gemm_into(m, n, k, &a, a_trans, &b, Accum::Set, &mut c2, &mut scratch);
+        assert_eq!(
+            c.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            c2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "case {case}: rerun changed bits"
+        );
+    }
+}
+
+/// Compact-WY invariants across random panels: (1) the blocked factor
+/// leaves bitwise the same packed panel + tau as the reference factor;
+/// (2) the WY trailing update agrees with the rank-1 reference within
+/// `c·n·ε`-scaled tolerance; (3) the WY update is bitwise
+/// deterministic — the property replica recovery rests on.
+#[test]
+fn compact_wy_update_matches_rank1_within_tolerance_and_is_deterministic() {
+    use ft_tsqr::linalg::wy;
+    let mut rng = Rng::new(0x77AA);
+    for case in 0..30 {
+        let cols = 1 + rng.below(20);
+        let rows = cols + rng.below(60);
+        let bk = 1 + rng.below(24);
+        let a = Matrix::random(rows, cols, rng.next_u64());
+        let mut w_ref: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+        let mut tau_ref = vec![0.0f64; cols];
+        view::factor_panel_f64(&mut w_ref, rows, cols, &mut tau_ref);
+
+        let mut w_blk: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+        let mut tau_blk = vec![0.0f64; cols];
+        let wyf = wy::factor_panel_blocked_f64(&mut w_blk, rows, cols, &mut tau_blk);
+        for (idx, (x, y)) in w_ref.iter().zip(&w_blk).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: packed[{idx}] differs");
+        }
+        for (j, (x, y)) in tau_ref.iter().zip(&tau_blk).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: tau[{j}] differs");
+        }
+
+        let block = Matrix::random(rows, bk, rng.next_u64());
+        let b0: Vec<f64> = block.data().iter().map(|&x| x as f64).collect();
+        let mut want = b0.clone();
+        view::apply_update_f64(&w_ref, rows, cols, &tau_ref, &mut want, bk);
+        let mut got = b0.clone();
+        let mut scratch = Vec::new();
+        wy::apply_wyt_into(&wyf, &mut got, bk, &mut scratch);
+        let scale =
+            b0.iter().fold(1.0f64, |m, x| m.max(x.abs())) * (cols as f64) * (rows as f64).sqrt();
+        for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-12 * scale,
+                "case {case}: block[{idx}] {rows}x{cols}->{bk}: {g} vs {w}"
+            );
+        }
+        let mut again = b0.clone();
+        wy::apply_wyt_into(&wyf, &mut again, bk, &mut scratch);
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            again.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "case {case}: WY update rerun changed bits"
+        );
+    }
+}
+
 /// Host QR oracle invariants on random matrices (the rust analogue of
 /// the hypothesis sweep in python/tests).
 #[test]
