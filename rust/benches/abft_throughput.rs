@@ -1,0 +1,160 @@
+//! BENCH TAB-A1: what the checksum ABFT layer costs — and what it
+//! buys.
+//!
+//!   cargo bench --bench abft_throughput
+//!
+//! The source paper's pitch is that replication's redundancy is
+//! "free" (the idle half of the tree was going to idle anyway).  The
+//! checksum layer is NOT free: every panel stage encodes `c` checksum
+//! blocks and runs `c` extra checksum-update tasks.  This bench
+//! measures that overhead against the replication-only baseline, the
+//! cost of actually riding through a pair wipe, and the tolerance the
+//! checksums buy (the `CodedSweep` table).
+//!
+//! Emits `target/reports/BENCH_abft.json` next to the other bench
+//! artifacts; the CI perf gate tracks the checksummed-vs-plain
+//! throughput ratio (a collapsing ratio means encoding has become
+//! accidentally expensive).
+
+use std::time::Instant;
+
+use ft_tsqr::abft::RecoveryPolicy;
+use ft_tsqr::analysis::CodedSweep;
+use ft_tsqr::caqr::CaqrSpec;
+use ft_tsqr::engine::Engine;
+use ft_tsqr::fault::{CaqrStage, PairWipeSchedule};
+use ft_tsqr::report::{REPORT_DIR, Table};
+use ft_tsqr::tsqr::Algo;
+
+fn main() {
+    let quick = ft_tsqr::report::bench::quick();
+    let runs: u64 = if quick { 20 } else { 200 };
+    let engine = Engine::host();
+
+    let shape = |m: usize, n: usize, seed: u64| {
+        CaqrSpec::new(Algo::SelfHealing, 4, m, n, 8).with_seed(seed).with_verify(false)
+    };
+    let coded = |m: usize, n: usize, seed: u64, c: usize| {
+        shape(m, n, seed).with_policy(RecoveryPolicy::Hybrid).with_checksums(c)
+    };
+
+    // Hoisted warm-up (NOT timed): spin the pool up once so the first
+    // timed campaign pays no thread creation.
+    engine.run_caqr(coded(96, 48, u64::MAX, 1)).expect("warm-up run");
+
+    let mut table = Table::new(
+        format!("TAB-A1: checksum ABFT overhead — {runs}-run campaigns, 4 procs, panel 8"),
+        &["workload", "matrix", "total wall", "runs/s", "vs plain"],
+    );
+    let mut campaign = |label: &str, mk: &dyn Fn(u64) -> CaqrSpec| -> f64 {
+        let t0 = Instant::now();
+        let report = engine.caqr_campaign((0..runs).map(mk)).run().expect(label);
+        let wall = t0.elapsed();
+        assert_eq!(report.successes(), runs, "{label}: every run must complete");
+        let rps = runs as f64 / wall.as_secs_f64();
+        table.row(vec![
+            label.into(),
+            "96x48".into(),
+            ft_tsqr::report::bench::fmt_duration(wall),
+            format!("{rps:.1}"),
+            String::new(),
+        ]);
+        rps
+    };
+
+    // ------------------------------------------------- the overhead
+    let plain_rps = campaign("replication only (c=0)", &|s| shape(96, 48, s));
+    let c1_rps = campaign("hybrid c=1", &|s| coded(96, 48, s, 1));
+    let c2_rps = campaign("hybrid c=2", &|s| coded(96, 48, s, 2));
+
+    // ------------------------------------------------- riding a wipe
+    // One pair wipe per run: fatal for the plain baseline, a
+    // reconstruction for the hybrid ladder.  96x24 keeps each replica
+    // pair's per-stage footprint at one block, so c=1 always suffices;
+    // the fault-free run at the same shape is the wipe comparison
+    // baseline.
+    let c1_small_rps = campaign("hybrid c=1 (96x24, fault-free)", &|s| coded(96, 24, s, 1));
+    let wipe_rps = campaign("hybrid c=1 + pair wipe/run (96x24)", &|s| {
+        coded(96, 24, s, 1)
+            .with_schedule(PairWipeSchedule::new(2, (s % 2) as usize, CaqrStage::Update).schedule())
+    });
+    let t0 = Instant::now();
+    let report = engine
+        .caqr_campaign((0..runs).map(|s| {
+            shape(96, 24, s).with_schedule(
+                PairWipeSchedule::new(2, (s % 2) as usize, CaqrStage::Update).schedule(),
+            )
+        }))
+        .run()
+        .expect("plain pair-wipe campaign");
+    let plain_wipe_wall = t0.elapsed();
+    assert_eq!(report.successes(), 0, "replication alone must lose every pair-wiped run");
+    table.row(vec![
+        "replication only + pair wipe/run (96x24, all abort)".into(),
+        "96x24".into(),
+        ft_tsqr::report::bench::fmt_duration(plain_wipe_wall),
+        "-".into(),
+        String::new(),
+    ]);
+
+    print!("{}", table.render());
+    table.save_csv(REPORT_DIR).expect("csv");
+
+    // ------------------------------------------------- what it buys
+    let sweep = CodedSweep::new(&engine, 8).with_panel(4);
+    let tol_replica = sweep
+        .tolerated_failures(RecoveryPolicy::Replica, 0)
+        .expect("replica tolerance");
+    let tol_hybrid_c1 =
+        sweep.tolerated_failures(RecoveryPolicy::Hybrid, 1).expect("hybrid c=1 tolerance");
+    let tol_hybrid_c3 =
+        sweep.tolerated_failures(RecoveryPolicy::Hybrid, 3).expect("hybrid c=3 tolerance");
+    println!(
+        "\ntolerated adversarial failures on P=8 (panel-0 update stage): \
+         replica={tol_replica}, hybrid c=1: {tol_hybrid_c1}, hybrid c=3: {tol_hybrid_c3}"
+    );
+    assert!(tol_hybrid_c1 > tol_replica, "the checksums must buy tolerance");
+
+    let ratio_c1 = c1_rps / plain_rps;
+    let ratio_c2 = c2_rps / plain_rps;
+    let wipe_ratio = wipe_rps / c1_small_rps;
+    println!(
+        "checksum overhead: c=1 {:.1}% (ratio {ratio_c1:.3}), c=2 {:.1}% (ratio {ratio_c2:.3}), \
+         pair-wipe recovery ratio {wipe_ratio:.3}",
+        (plain_rps / c1_rps - 1.0) * 100.0,
+        (plain_rps / c2_rps - 1.0) * 100.0,
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"abft_throughput\",\n  \"runs\": {runs},\n  \"quick\": {quick},\n  \
+         \"plain_runs_per_sec\": {plain_rps:.2},\n  \"c1_runs_per_sec\": {c1_rps:.2},\n  \
+         \"c2_runs_per_sec\": {c2_rps:.2},\n  \"pairwipe_runs_per_sec\": {wipe_rps:.2},\n  \
+         \"checksum_throughput_ratio_c1\": {ratio_c1:.3},\n  \
+         \"checksum_throughput_ratio_c2\": {ratio_c2:.3},\n  \
+         \"pairwipe_recovery_ratio\": {wipe_ratio:.3},\n  \
+         \"checksum_overhead_pct_c1\": {:.2},\n  \
+         \"tolerated_replica\": {tol_replica},\n  \"tolerated_hybrid_c1\": {tol_hybrid_c1},\n  \
+         \"tolerated_hybrid_c3\": {tol_hybrid_c3}\n}}\n",
+        (plain_rps / c1_rps - 1.0) * 100.0,
+    );
+    std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
+    let json_path = format!("{REPORT_DIR}/BENCH_abft.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_abft.json");
+    println!("wrote {json_path}");
+    if std::env::var("BENCH_WRITE_BASELINE").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all("benches/baselines").expect("mkdir baselines");
+        std::fs::write("benches/baselines/BENCH_abft.json", &json).expect("write baseline");
+        println!("refreshed baseline benches/baselines/BENCH_abft.json");
+    }
+    // CI perf gate (BENCH_REGRESS=1): ratio metrics only — the
+    // checksummed path collapsing relative to the plain path is the
+    // regression this bench exists to catch.
+    ft_tsqr::report::bench::enforce_regress_gate(
+        "abft_throughput",
+        "benches/baselines/BENCH_abft.json",
+        &[
+            ("checksum_throughput_ratio_c1", ratio_c1),
+            ("pairwipe_recovery_ratio", wipe_ratio),
+        ],
+    );
+}

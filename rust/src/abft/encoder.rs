@@ -1,0 +1,387 @@
+//! The checksum [`Encoder`]: Vandermonde-weighted row/column checksum
+//! blocks and their algebraic inverse, the block reconstruction solve.
+//!
+//! ## The encoding
+//!
+//! Given `N` data blocks `B_0 … B_{N−1}` (each row-major
+//! `rows × widths[j]`, padded conceptually to `pad` columns with
+//! zeros), the encoder produces `c` checksum blocks
+//!
+//! ```text
+//! S_l = Σ_j  w(l, j) · B_j          w(l, j) = (l + 1)^j
+//! ```
+//!
+//! entrywise in f64 with a fixed summation order (ascending `j`), so
+//! encoding is deterministic bit for bit.  The weight family is a
+//! Vandermonde system with distinct positive nodes `1, 2, …, c`: every
+//! square submatrix formed by choosing `t` checksums and `t` lost
+//! blocks is nonsingular, so **any `t ≤ c` lost blocks are recoverable
+//! from any `t` surviving checksums** (the classic ABFT property of
+//! Bosilca et al., arXiv:0806.3121).  Checksum `0` has all weights
+//! `1` — a plain sum — so the common single-loss reconstruction is a
+//! perfectly conditioned subtract-and-done.
+//!
+//! ## The two shapes the CAQR subsystem encodes
+//!
+//! * **Column blocks** (the trailing-update tasks): blocks share
+//!   `rows`, widths may differ (the ragged last block).  Because the
+//!   trailing update `B ↦ Q₁ᵀB` is *linear*, a checksum carried
+//!   through the update kernel equals the checksum of the updated
+//!   blocks (up to rounding): reconstruction recovers a lost task
+//!   *output* without re-execution.
+//! * **Row shards** (the panel-factor input): a `rows × cols` panel
+//!   split into contiguous row ranges is encoded by treating each
+//!   shard as a `1 × len` block — same code path, `rows = 1`.
+//!
+//! Reconstruction accuracy: one encode + one solve round-trip differs
+//! from the original data by `O(c · N · ε)` relative to the block
+//! norms — the `c · n · ε · ‖A‖` bound `tests/integration_abft.rs`
+//! pins.
+
+use crate::error::{Error, Result};
+
+/// Deterministic Vandermonde checksum encoder over `c` checksum blocks.
+///
+/// See the [module docs](self) for the weight family and the recovery
+/// guarantee.  The encoder is pure arithmetic — *which* simulated rank
+/// holds which checksum, and when reconstruction is permitted, is the
+/// recovery policy's business (`crate::caqr` / [`super::RecoveryPolicy`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Encoder {
+    c: usize,
+}
+
+impl Encoder {
+    /// An encoder producing `c` checksum blocks.
+    pub fn new(c: usize) -> Self {
+        Self { c }
+    }
+
+    /// Number of checksum blocks this encoder produces.
+    pub fn checksums(&self) -> usize {
+        self.c
+    }
+
+    /// The Vandermonde weight of data block `j` in checksum `l`:
+    /// `(l + 1)^j`.  Exact in f64 for every shape this crate schedules
+    /// (small `l`, block counts far below the 2^53 mantissa limit).
+    pub fn weight(l: usize, j: usize) -> f64 {
+        ((l + 1) as f64).powi(j as i32)
+    }
+
+    /// Encode `c` checksum blocks over `blocks` (row-major
+    /// `rows × widths[j]` each), padded to `pad ≥ max(widths)` columns.
+    ///
+    /// Entry `(i, col)` of block `j` participates iff `col < widths[j]`
+    /// — narrower blocks are implicitly zero-padded on the right.
+    pub fn encode(
+        &self,
+        rows: usize,
+        widths: &[usize],
+        blocks: &[&[f64]],
+        pad: usize,
+    ) -> Vec<Vec<f64>> {
+        assert_eq!(blocks.len(), widths.len(), "encode: one width per block");
+        for (j, (b, &w)) in blocks.iter().zip(widths).enumerate() {
+            assert_eq!(b.len(), rows * w, "encode: block {j} length != rows*width");
+            assert!(w <= pad, "encode: block {j} wider than pad");
+        }
+        let mut out = Vec::with_capacity(self.c);
+        for l in 0..self.c {
+            let mut s = vec![0.0f64; rows * pad];
+            for (j, (b, &w)) in blocks.iter().zip(widths).enumerate() {
+                let wt = Self::weight(l, j);
+                for i in 0..rows {
+                    for col in 0..w {
+                        s[i * pad + col] += wt * b[i * w + col];
+                    }
+                }
+            }
+            out.push(s);
+        }
+        out
+    }
+
+    /// Reconstruct every lost block (`blocks[j] == None`) from the
+    /// surviving blocks and the available checksum outputs
+    /// `checks = [(l, S_l), …]`.
+    ///
+    /// Per padded column the solve uses the first `t` available
+    /// checksums, where `t` is the number of lost blocks wide enough to
+    /// reach that column — the `t × t` Vandermonde submatrix is
+    /// LU-factored once per column and back-substituted per row
+    /// (deterministic: fixed pivot order, fixed summation order).
+    ///
+    /// Returns `(j, reconstructed rows × widths[j] block)` pairs in
+    /// ascending `j`.  Errors if more blocks were lost than checksums
+    /// are available.
+    pub fn reconstruct(
+        &self,
+        rows: usize,
+        widths: &[usize],
+        blocks: &[Option<&[f64]>],
+        checks: &[(usize, &[f64])],
+        pad: usize,
+    ) -> Result<Vec<(usize, Vec<f64>)>> {
+        assert_eq!(blocks.len(), widths.len(), "reconstruct: one width per block");
+        let lost: Vec<usize> =
+            blocks.iter().enumerate().filter(|(_, b)| b.is_none()).map(|(j, _)| j).collect();
+        if lost.is_empty() {
+            return Ok(Vec::new());
+        }
+        if checks.len() < lost.len() {
+            return Err(Error::Other(format!(
+                "checksum reconstruction infeasible: {} blocks lost, {} checksums available",
+                lost.len(),
+                checks.len()
+            )));
+        }
+        for (l, s) in checks {
+            assert_eq!(s.len(), rows * pad, "reconstruct: checksum {l} length != rows*pad");
+        }
+        let mut out: Vec<(usize, Vec<f64>)> =
+            lost.iter().map(|&j| (j, vec![0.0f64; rows * widths[j]])).collect();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let mut perm = Vec::new();
+        for col in 0..pad {
+            // Lost blocks wide enough to reach this column.
+            let live_lost: Vec<usize> =
+                lost.iter().copied().filter(|&j| widths[j] > col).collect();
+            let t = live_lost.len();
+            if t == 0 {
+                continue;
+            }
+            // LU-factor the t×t weight submatrix once for the column.
+            a.clear();
+            for &(l, _) in checks.iter().take(t) {
+                for &j in &live_lost {
+                    a.push(Self::weight(l, j));
+                }
+            }
+            lu_factor(&mut a, t, &mut perm)?;
+            for i in 0..rows {
+                b.clear();
+                for &(l, s) in checks.iter().take(t) {
+                    let mut rhs = s[i * pad + col];
+                    for (j, blk) in blocks.iter().enumerate() {
+                        if let Some(blk) = blk {
+                            if widths[j] > col {
+                                rhs -= Self::weight(l, j) * blk[i * widths[j] + col];
+                            }
+                        }
+                    }
+                    b.push(rhs);
+                }
+                lu_solve(&a, t, &perm, &mut b);
+                for (q, &j) in live_lost.iter().enumerate() {
+                    let slot = out.iter_mut().find(|(oj, _)| *oj == j).expect("lost entry");
+                    slot.1[i * widths[j] + col] = b[q];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Split `rows` into `parts` contiguous row ranges (ceil-balanced),
+    /// the sharding the panel-factor reconstruction path uses.  Returns
+    /// `(start, end)` pairs; trailing shards may be empty.
+    pub fn shard_rows(rows: usize, parts: usize) -> Vec<(usize, usize)> {
+        assert!(parts >= 1, "shard_rows: need at least one part");
+        let chunk = rows.div_ceil(parts);
+        (0..parts)
+            .map(|i| {
+                let s = (i * chunk).min(rows);
+                let e = ((i + 1) * chunk).min(rows);
+                (s, e)
+            })
+            .collect()
+    }
+}
+
+/// In-place LU factorization with partial pivoting of a dense `n×n`
+/// row-major matrix (deterministic: ties keep the earlier row).
+fn lu_factor(a: &mut [f64], n: usize, perm: &mut Vec<usize>) -> Result<()> {
+    debug_assert_eq!(a.len(), n * n);
+    perm.clear();
+    perm.extend(0..n);
+    for k in 0..n {
+        let mut p = k;
+        let mut best = a[perm[k] * n + k].abs();
+        for (idx, &r) in perm.iter().enumerate().skip(k + 1) {
+            let v = a[r * n + k].abs();
+            if v > best {
+                best = v;
+                p = idx;
+            }
+        }
+        if best == 0.0 {
+            return Err(Error::Other("checksum weight system is singular".into()));
+        }
+        perm.swap(k, p);
+        let piv = a[perm[k] * n + k];
+        for &r in perm.iter().skip(k + 1) {
+            let f = a[r * n + k] / piv;
+            a[r * n + k] = f;
+            for j in k + 1..n {
+                a[r * n + j] -= f * a[perm[k] * n + j];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Solve `A x = b` given [`lu_factor`]'s output; `b` becomes `x`
+/// (entries in original, unpermuted unknown order).
+fn lu_solve(a: &[f64], n: usize, perm: &[usize], b: &mut [f64]) {
+    debug_assert_eq!(b.len(), n);
+    // Forward substitution on the permuted rows.
+    let mut y = vec![0.0f64; n];
+    for k in 0..n {
+        let mut v = b[perm[k]];
+        for j in 0..k {
+            v -= a[perm[k] * n + j] * y[j];
+        }
+        y[k] = v;
+    }
+    // Back substitution.
+    for k in (0..n).rev() {
+        let mut v = y[k];
+        for j in k + 1..n {
+            v -= a[perm[k] * n + j] * b[j];
+        }
+        b[k] = v / a[perm[k] * n + k];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(rows: usize, w: usize, seed: u64) -> Vec<f64> {
+        // Small integer-valued data: exact under the weight-1 checksum.
+        (0..rows * w).map(|i| ((i as u64).wrapping_mul(seed + 3) % 17) as f64 - 8.0).collect()
+    }
+
+    #[test]
+    fn weights_are_a_vandermonde_family() {
+        assert_eq!(Encoder::weight(0, 0), 1.0);
+        assert_eq!(Encoder::weight(0, 7), 1.0, "checksum 0 is the plain sum");
+        assert_eq!(Encoder::weight(1, 3), 8.0);
+        assert_eq!(Encoder::weight(2, 2), 9.0);
+    }
+
+    #[test]
+    fn single_loss_roundtrip_is_exact_on_integer_data() {
+        let enc = Encoder::new(1);
+        let (rows, w) = (6, 4);
+        let b: Vec<Vec<f64>> = (0..3).map(|j| block(rows, w, j)).collect();
+        let refs: Vec<&[f64]> = b.iter().map(|x| x.as_slice()).collect();
+        let checks = enc.encode(rows, &[w, w, w], &refs, w);
+        assert_eq!(checks.len(), 1);
+        for lost in 0..3 {
+            let opts: Vec<Option<&[f64]>> =
+                (0..3).map(|j| if j == lost { None } else { Some(refs[j]) }).collect();
+            let got = enc
+                .reconstruct(rows, &[w, w, w], &opts, &[(0, checks[0].as_slice())], w)
+                .unwrap();
+            assert_eq!(got.len(), 1);
+            assert_eq!(got[0].0, lost);
+            assert_eq!(got[0].1, b[lost], "integer data reconstructs exactly");
+        }
+    }
+
+    #[test]
+    fn double_loss_recovers_within_rounding_on_ragged_blocks() {
+        let enc = Encoder::new(3);
+        let rows = 5;
+        let widths = [4usize, 4, 4, 2]; // ragged last block
+        let b: Vec<Vec<f64>> = widths
+            .iter()
+            .enumerate()
+            .map(|(j, &w)| (0..rows * w).map(|i| ((i + 7 * j) as f64).sin()).collect())
+            .collect();
+        let refs: Vec<&[f64]> = b.iter().map(|x| x.as_slice()).collect();
+        let checks = enc.encode(rows, &widths, &refs, 4);
+        // Lose blocks 1 and 3; use checksums 0 and 2 (any pair works).
+        let opts: Vec<Option<&[f64]>> =
+            (0..4).map(|j| if j == 1 || j == 3 { None } else { Some(refs[j]) }).collect();
+        let got = enc
+            .reconstruct(
+                rows,
+                &widths,
+                &opts,
+                &[(0, checks[0].as_slice()), (2, checks[2].as_slice())],
+                4,
+            )
+            .unwrap();
+        assert_eq!(got.len(), 2);
+        for (j, data) in &got {
+            assert_eq!(data.len(), rows * widths[*j]);
+            for (x, y) in data.iter().zip(&b[*j]) {
+                assert!((x - y).abs() < 1e-12, "block {j}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_shard_mode_reconstructs_a_panel_shard() {
+        // Row shards are 1×len blocks: same code path, rows = 1.
+        let enc = Encoder::new(1);
+        let panel: Vec<f64> = (0..48).map(|i| (i as f64) * 0.25 - 3.0).collect();
+        let shards = Encoder::shard_rows(12, 3); // 12 rows of width 4
+        assert_eq!(shards, vec![(0, 4), (4, 8), (8, 12)]);
+        let parts: Vec<&[f64]> = shards.iter().map(|&(s, e)| &panel[s * 4..e * 4]).collect();
+        let lens: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let pad = *lens.iter().max().unwrap();
+        let checks = enc.encode(1, &lens, &parts, pad);
+        let opts = [Some(parts[0]), None, Some(parts[2])];
+        let got =
+            enc.reconstruct(1, &lens, &opts, &[(0, checks[0].as_slice())], pad).unwrap();
+        assert_eq!(got[0].0, 1);
+        for (x, y) in got[0].1.iter().zip(parts[1]) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reconstruction_is_deterministic() {
+        let enc = Encoder::new(2);
+        let rows = 4;
+        let b: Vec<Vec<f64>> = (0..3).map(|j| block(rows, 3, 100 + j)).collect();
+        let refs: Vec<&[f64]> = b.iter().map(|x| x.as_slice()).collect();
+        let checks = enc.encode(rows, &[3, 3, 3], &refs, 3);
+        let run = || {
+            let opts = [None, Some(refs[1]), None];
+            enc.reconstruct(
+                rows,
+                &[3, 3, 3],
+                &opts,
+                &[(0, checks[0].as_slice()), (1, checks[1].as_slice())],
+                3,
+            )
+            .unwrap()
+        };
+        let (a, b2) = (run(), run());
+        for ((ja, da), (jb, db)) in a.iter().zip(&b2) {
+            assert_eq!(ja, jb);
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(da), bits(db), "reconstruction must be bit-deterministic");
+        }
+    }
+
+    #[test]
+    fn too_many_losses_error_cleanly() {
+        let enc = Encoder::new(1);
+        let b = block(2, 2, 1);
+        let checks = enc.encode(2, &[2, 2], &[&b, &b], 2);
+        let opts: [Option<&[f64]>; 2] = [None, None];
+        assert!(
+            enc.reconstruct(2, &[2, 2], &opts, &[(0, checks[0].as_slice())], 2).is_err(),
+            "2 losses with 1 checksum must be infeasible"
+        );
+        // Zero losses is a no-op.
+        let opts = [Some(b.as_slice()), Some(b.as_slice())];
+        assert!(enc.reconstruct(2, &[2, 2], &opts, &[], 2).unwrap().is_empty());
+    }
+}

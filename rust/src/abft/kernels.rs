@@ -1,0 +1,142 @@
+//! f32 view kernels for the runtime's checksum ops
+//! (`KernelOp::EncodeChecksum` / `KernelOp::ReconstructBlock`):
+//! single-precision siblings of the f64 [`Encoder`](super::Encoder)
+//! paths, shaped like every other view kernel — borrowed inputs, f64
+//! accumulation in pooled [`Workspace`] scratch, one terminal rounding.
+
+use crate::linalg::{MatrixView, MatrixViewMut, Workspace};
+
+/// Encode ONE weighted checksum block: `out = Σ_j weights[j] · blocks[j]`.
+///
+/// `weights` is a `1 × N` row vector; the `N` blocks share their row
+/// count and may be narrower than `out` (implicit zero padding on the
+/// right, the ragged-last-block convention).  Accumulation is f64 in
+/// workspace scratch with a fixed order (ascending `j`), rounded to
+/// f32 once.
+pub fn encode_checksum_into(
+    weights: MatrixView<'_>,
+    blocks: &[MatrixView<'_>],
+    out: &mut MatrixViewMut<'_>,
+    ws: &mut Workspace,
+) {
+    let n = blocks.len();
+    assert!(n >= 1, "encode_checksum_into: need at least one block");
+    assert_eq!(weights.shape(), (1, n), "encode_checksum_into: weights must be 1x{n}");
+    let (rows, pad) = out.shape();
+    let acc = ws.f64_scratch(rows * pad);
+    acc.fill(0.0);
+    for (j, b) in blocks.iter().enumerate() {
+        assert_eq!(b.rows(), rows, "encode_checksum_into: block {j} row mismatch");
+        assert!(b.cols() <= pad, "encode_checksum_into: block {j} wider than out");
+        let w = weights.at(0, j) as f64;
+        for i in 0..rows {
+            for col in 0..b.cols() {
+                acc[i * pad + col] += w * b.at(i, col) as f64;
+            }
+        }
+    }
+    for i in 0..rows {
+        for col in 0..pad {
+            out.set(i, col, acc[i * pad + col] as f32);
+        }
+    }
+}
+
+/// Reconstruct ONE lost block from one checksum and the survivors:
+/// `out = (checksum − Σ_q weights[q + 1] · survivors[q]) / weights[0]`.
+///
+/// Convention: `weights` is `1 × N` with the **lost block's weight
+/// first**, followed by the survivors' weights in the same order as
+/// `survivors` — the single-loss fast path of
+/// [`Encoder::reconstruct`](super::Encoder::reconstruct) (multi-loss
+/// solves run coordinator-side in f64).  The output has the checksum's
+/// (padded) shape; callers slice the lost block's true width.
+pub fn reconstruct_block_into(
+    weights: MatrixView<'_>,
+    checksum: MatrixView<'_>,
+    survivors: &[MatrixView<'_>],
+    out: &mut MatrixViewMut<'_>,
+    ws: &mut Workspace,
+) {
+    let n = survivors.len() + 1;
+    assert_eq!(weights.shape(), (1, n), "reconstruct_block_into: weights must be 1x{n}");
+    let w0 = weights.at(0, 0) as f64;
+    assert!(w0 != 0.0, "reconstruct_block_into: lost block's weight must be nonzero");
+    let (rows, pad) = out.shape();
+    assert_eq!(checksum.shape(), (rows, pad), "reconstruct_block_into: checksum shape");
+    let acc = ws.f64_scratch(rows * pad);
+    for i in 0..rows {
+        for col in 0..pad {
+            acc[i * pad + col] = checksum.at(i, col) as f64;
+        }
+    }
+    for (q, s) in survivors.iter().enumerate() {
+        assert_eq!(s.rows(), rows, "reconstruct_block_into: survivor {q} row mismatch");
+        assert!(s.cols() <= pad, "reconstruct_block_into: survivor {q} wider than out");
+        let w = weights.at(0, q + 1) as f64;
+        for i in 0..rows {
+            for col in 0..s.cols() {
+                acc[i * pad + col] -= w * s.at(i, col) as f64;
+            }
+        }
+    }
+    for i in 0..rows {
+        for col in 0..pad {
+            out.set(i, col, (acc[i * pad + col] / w0) as f32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn encode_then_reconstruct_roundtrips_in_f32() {
+        let rows = 6;
+        let blocks: Vec<Matrix> = (0..3).map(|s| Matrix::random(rows, 4, s)).collect();
+        let weights = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        let mut ws = Workspace::new();
+        let mut sum = Matrix::zeros(rows, 4);
+        let views: Vec<_> = blocks.iter().map(|b| b.as_view()).collect();
+        encode_checksum_into(weights.as_view(), &views, &mut sum.as_view_mut(), &mut ws);
+
+        // Lose block 1: weights reordered lost-first.
+        let rw = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        let mut got = Matrix::zeros(rows, 4);
+        reconstruct_block_into(
+            rw.as_view(),
+            sum.as_view(),
+            &[blocks[0].as_view(), blocks[2].as_view()],
+            &mut got.as_view_mut(),
+            &mut ws,
+        );
+        assert!(
+            got.max_abs_diff(&blocks[1]) < 1e-5,
+            "f32 roundtrip must recover the lost block within rounding"
+        );
+    }
+
+    #[test]
+    fn ragged_blocks_pad_with_zeros() {
+        let rows = 3;
+        let wide = Matrix::random(rows, 4, 1);
+        let narrow = Matrix::random(rows, 2, 2);
+        let weights = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let mut ws = Workspace::new();
+        let mut sum = Matrix::zeros(rows, 4);
+        encode_checksum_into(
+            weights.as_view(),
+            &[wide.as_view(), narrow.as_view()],
+            &mut sum.as_view_mut(),
+            &mut ws,
+        );
+        // Columns past the narrow block's width carry only the wide block.
+        for i in 0..rows {
+            assert_eq!(sum[(i, 3)], wide[(i, 3)]);
+            let want = wide[(i, 0)] as f64 + 2.0 * narrow[(i, 0)] as f64;
+            assert!((sum[(i, 0)] as f64 - want).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Checksum-coded algorithm-based fault tolerance: surviving the
+//! failures that replication alone cannot.
+//!
+//! The source paper's replica pairs tolerate one loss per pair per
+//! panel step; when **both** members of a pair die in the same step (a
+//! *pair wipe*), the data they held has no surviving copy and the
+//! replication-only engine must abort.  Classic checksum ABFT
+//! (Bosilca et al., arXiv:0806.3121) and coded-computing QR (Nguyen et
+//! al., arXiv:2311.11943) recover such losses *algebraically*: encode
+//! `c` weighted checksum blocks alongside the data, and any `≤ c` lost
+//! blocks are reconstructible from the survivors — no re-execution
+//! from scratch, no checkpoint.
+//!
+//! This module provides the two ingredients, policy and arithmetic:
+//!
+//! * [`RecoveryPolicy`] — the recovery **ladder** a CAQR run walks
+//!   when a task result is needed: surviving replica first, checksum
+//!   reconstruction second, abort last.
+//! * [`Encoder`] — deterministic Vandermonde checksum encoding and the
+//!   reconstruction solve, for both shapes CAQR protects (trailing
+//!   column blocks and panel row shards).
+//!
+//! The f32 view-kernel siblings in [`kernels`] back the runtime's
+//! `KernelOp::EncodeChecksum` / `KernelOp::ReconstructBlock` dispatch;
+//! `crate::caqr` threads the ladder through its pre-simulated
+//! [`Timeline`] so reconstruction decisions are deterministic.
+//!
+//! ## What a pair wipe loses, and what rebuilds it
+//!
+//! * **Update stage** — both copies of a trailing-update task's output
+//!   are gone.  The update `B ↦ Q₁ᵀB` is linear, so `c` *checksum
+//!   update tasks* (the same kernel applied to
+//!   `S_l = Σ_j w(l,j)·B_j`) ran alongside the data tasks, and the
+//!   lost outputs are solved back out of the surviving outputs — the
+//!   Bosilca-style output reconstruction.
+//! * **Factor stage** — both copies of the panel-factor result are
+//!   gone, *and* QR is nonlinear, so the result cannot be solved back.
+//!   Instead the **input** panel is rebuilt from its row-shard
+//!   checksums (each replica pair holds one contiguous row shard plus
+//!   rotated checksum shards) and the factor re-executes on the
+//!   lowest-ranked survivor — reconstruct-then-recompute.
+//!
+//! Both paths round-trip the data through one encode + one solve, so a
+//! survived pair wipe perturbs the result by at most `c·n·ε·‖A‖`
+//! (pinned in `tests/integration_abft.rs`); with **zero** failures the
+//! checksum tasks are pure bystanders and the factorization reproduces
+//! the un-checksummed run bit for bit.
+//!
+//! [`Timeline`]: crate::caqr
+//!
+//! ## Quick start
+//!
+//! ```
+//! use ft_tsqr::abft::RecoveryPolicy;
+//! use ft_tsqr::caqr::{self, CaqrSpec};
+//! use ft_tsqr::fault::{CaqrStage, PairWipeSchedule};
+//! use ft_tsqr::tsqr::Algo;
+//!
+//! // Kill BOTH replicas of rank 1's pair during panel 0's updates —
+//! // fatal under replication alone, survived with one checksum.
+//! // (Self-Healing respawns the pair at the panel boundary; under
+//! // Redundant the dead stay dead and every later panel pays the
+//! // checksum rung again.)
+//! let wipe = PairWipeSchedule::new(1, 0, CaqrStage::Update);
+//! let spec = CaqrSpec::new(Algo::SelfHealing, 4, 24, 12, 4)
+//!     .with_schedule(wipe.schedule())
+//!     .with_policy(RecoveryPolicy::Hybrid)
+//!     .with_checksums(1);
+//! let res = caqr::factorize(spec).unwrap();
+//! assert!(res.success());
+//! assert_eq!(res.metrics.pair_wipes_survived, 1);
+//! assert!(res.metrics.checksum_reconstructions >= 1);
+//! ```
+
+pub mod encoder;
+pub mod kernels;
+
+pub use encoder::Encoder;
+
+use crate::error::{Error, Result};
+
+/// The recovery ladder a CAQR run walks when a task's result must be
+/// harvested: **surviving replica → checksum reconstruction → abort**.
+///
+/// The variants select which rungs exist:
+///
+/// | Policy | Task replication | Checksum tasks | Survives per stage |
+/// |---|---|---|---|
+/// | [`Replica`](Self::Replica) | owner + buddy | none | 1 loss per pair (the papers' scheme) |
+/// | [`Checksum`](Self::Checksum) | owner only | `c` | up to `c` lost tasks |
+/// | [`Hybrid`](Self::Hybrid) | owner + buddy | `c` | 1 loss per pair **and** up to `c` pair wipes |
+///
+/// `Replica` is the default and reproduces PR 1–4 behaviour exactly.
+/// `Checksum` trades the 2× replicated flops for the much cheaper
+/// `c`-checksum redundancy (the coded-computing end of the spectrum);
+/// `Hybrid` pays both and survives everything either rung covers.
+/// With zero failures all three produce bit-identical factorizations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RecoveryPolicy {
+    /// Replication only: a task that loses every replica aborts the
+    /// run (the source papers' semantics).
+    #[default]
+    Replica,
+    /// Checksums only: tasks run un-replicated; up to `c` lost task
+    /// results per stage are reconstructed algebraically.
+    Checksum,
+    /// Replication first, checksums when a whole pair is wiped — the
+    /// full ladder.
+    Hybrid,
+}
+
+impl RecoveryPolicy {
+    /// Stable name (`replica` / `checksum` / `hybrid`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::Replica => "replica",
+            RecoveryPolicy::Checksum => "checksum",
+            RecoveryPolicy::Hybrid => "hybrid",
+        }
+    }
+
+    /// Does this policy run every task on a replica pair?
+    pub fn replicates(&self) -> bool {
+        !matches!(self, RecoveryPolicy::Checksum)
+    }
+
+    /// Does this policy encode (and reconstruct from) checksums?
+    pub fn uses_checksums(&self) -> bool {
+        !matches!(self, RecoveryPolicy::Replica)
+    }
+}
+
+impl std::fmt::Display for RecoveryPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for RecoveryPolicy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "replica" | "replication" => Ok(RecoveryPolicy::Replica),
+            "checksum" | "coded" => Ok(RecoveryPolicy::Checksum),
+            "hybrid" => Ok(RecoveryPolicy::Hybrid),
+            other => Err(Error::Config(format!(
+                "unknown recovery policy '{other}' (replica|checksum|hybrid)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parses_and_prints() {
+        assert_eq!("replica".parse::<RecoveryPolicy>().unwrap(), RecoveryPolicy::Replica);
+        assert_eq!("checksum".parse::<RecoveryPolicy>().unwrap(), RecoveryPolicy::Checksum);
+        assert_eq!("coded".parse::<RecoveryPolicy>().unwrap(), RecoveryPolicy::Checksum);
+        assert_eq!("hybrid".parse::<RecoveryPolicy>().unwrap(), RecoveryPolicy::Hybrid);
+        assert!("raid".parse::<RecoveryPolicy>().is_err());
+        assert_eq!(RecoveryPolicy::default(), RecoveryPolicy::Replica);
+        assert_eq!(RecoveryPolicy::Hybrid.to_string(), "hybrid");
+    }
+
+    #[test]
+    fn ladder_rungs_per_policy() {
+        assert!(RecoveryPolicy::Replica.replicates());
+        assert!(!RecoveryPolicy::Replica.uses_checksums());
+        assert!(!RecoveryPolicy::Checksum.replicates());
+        assert!(RecoveryPolicy::Checksum.uses_checksums());
+        assert!(RecoveryPolicy::Hybrid.replicates());
+        assert!(RecoveryPolicy::Hybrid.uses_checksums());
+    }
+}

@@ -1,0 +1,175 @@
+//! Coded-vs-replicated tolerance sweep: how many simultaneous process
+//! failures each [`RecoveryPolicy`] rides through, measured on the
+//! full CAQR stack.
+//!
+//! Replication alone tolerates one loss per replica pair per stage —
+//! an *adversarial* failure pattern that completes a pair kills the
+//! run at `f = 2`.  The checksum rung lifts that: every wiped pair
+//! costs checksum capacity instead of the run, until the `c` checksums
+//! are exhausted.  [`CodedSweep`] measures the crossover empirically:
+//! for a fixed world it kills `f = 1, 2, …` ranks (pair-completing
+//! order, the worst case for replication) during panel 0's update
+//! stage and reports the largest `f` each `(policy, c)` survives — the
+//! tables `docs/PAPER_MAP.md` quotes and `tests/failure_semantics.rs`
+//! pins.
+
+use crate::abft::RecoveryPolicy;
+use crate::caqr::CaqrSpec;
+use crate::engine::Engine;
+use crate::error::Result;
+use crate::fault::{CaqrKillSchedule, CaqrStage};
+use crate::tsqr::Algo;
+use crate::ulfm::Rank;
+
+/// One row of the coded-tolerance table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CodedRow {
+    /// Recovery ladder measured.
+    pub policy: RecoveryPolicy,
+    /// Checksum blocks armed.
+    pub checksums: usize,
+    /// Largest adversarial same-stage failure count survived.
+    pub tolerated: usize,
+}
+
+/// Deterministic tolerated-failure sweep over recovery policies (see
+/// the [module docs](self)).  Runs under [`Algo::Redundant`] — the
+/// worst case: the dead stay dead, so panel 0's losses echo through
+/// every later panel.
+pub struct CodedSweep<'e> {
+    engine: &'e Engine,
+    /// World size (even, ≥ 2).
+    pub procs: usize,
+    /// Block-column width; the sweep factors a square
+    /// `(procs·panel) × (procs·panel)` matrix, one panel per process.
+    pub panel: usize,
+    /// Input-matrix seed.
+    pub seed: u64,
+}
+
+impl<'e> CodedSweep<'e> {
+    /// A sweep over `procs` simulated processes (4-column panels).
+    pub fn new(engine: &'e Engine, procs: usize) -> Self {
+        Self { engine, procs, panel: 4, seed: 42 }
+    }
+
+    /// Replace the block-column width.
+    pub fn with_panel(mut self, panel: usize) -> Self {
+        self.panel = panel.max(1);
+        self
+    }
+
+    /// Replace the input-matrix seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The adversarial kill order: complete replica pairs one by one,
+    /// hitting each pair's update-task *owner* first (`1, 0, 3, 2, …`)
+    /// — the pattern replication is weakest against.
+    pub fn kill_order(procs: usize) -> Vec<Rank> {
+        (0..procs / 2).flat_map(|g| [2 * g + 1, 2 * g]).collect()
+    }
+
+    /// Does one run with the first `f` kills of the adversarial order
+    /// (fired during panel 0's update stage) complete?
+    pub fn survives(&self, policy: RecoveryPolicy, checksums: usize, f: usize) -> Result<bool> {
+        let n = self.procs * self.panel;
+        let kills: Vec<(Rank, usize, CaqrStage)> = Self::kill_order(self.procs)
+            .into_iter()
+            .take(f)
+            .map(|r| (r, 0, CaqrStage::Update))
+            .collect();
+        let spec = CaqrSpec::new(Algo::Redundant, self.procs, n, n, self.panel)
+            .with_seed(self.seed)
+            .with_verify(false)
+            .with_policy(policy)
+            .with_checksums(checksums)
+            .with_schedule(CaqrKillSchedule::at(&kills));
+        Ok(self.engine.run_caqr(spec)?.success())
+    }
+
+    /// Largest `f` the `(policy, c)` pair survives.  Monotone in `f`
+    /// (the kill sets are nested), so the scan stops at the first
+    /// failure.
+    pub fn tolerated_failures(&self, policy: RecoveryPolicy, checksums: usize) -> Result<usize> {
+        let mut tolerated = 0;
+        for f in 1..=self.procs {
+            if self.survives(policy, checksums, f)? {
+                tolerated = f;
+            } else {
+                break;
+            }
+        }
+        Ok(tolerated)
+    }
+
+    /// The tolerance table: replication-only, then replication +
+    /// checksums for each requested `c` (and the un-replicated
+    /// checksum-only ladder alongside) — the comparison the ABFT layer
+    /// exists to win.
+    pub fn table(&self, checksum_counts: &[usize]) -> Result<Vec<CodedRow>> {
+        let mut rows = vec![CodedRow {
+            policy: RecoveryPolicy::Replica,
+            checksums: 0,
+            tolerated: self.tolerated_failures(RecoveryPolicy::Replica, 0)?,
+        }];
+        for &c in checksum_counts {
+            rows.push(CodedRow {
+                policy: RecoveryPolicy::Hybrid,
+                checksums: c,
+                tolerated: self.tolerated_failures(RecoveryPolicy::Hybrid, c)?,
+            });
+        }
+        for &c in checksum_counts {
+            rows.push(CodedRow {
+                policy: RecoveryPolicy::Checksum,
+                checksums: c,
+                tolerated: self.tolerated_failures(RecoveryPolicy::Checksum, c)?,
+            });
+        }
+        Ok(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_order_completes_pairs_owner_first() {
+        assert_eq!(CodedSweep::kill_order(4), vec![1, 0, 3, 2]);
+        assert_eq!(CodedSweep::kill_order(8), vec![1, 0, 3, 2, 5, 4, 7, 6]);
+    }
+
+    #[test]
+    fn replication_only_dies_at_the_first_completed_pair() {
+        let engine = Engine::host();
+        let sweep = CodedSweep::new(&engine, 4);
+        assert_eq!(sweep.tolerated_failures(RecoveryPolicy::Replica, 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn hybrid_tolerates_strictly_more_than_replication() {
+        let engine = Engine::host();
+        let sweep = CodedSweep::new(&engine, 4);
+        let replica = sweep.tolerated_failures(RecoveryPolicy::Replica, 0).unwrap();
+        let hybrid = sweep.tolerated_failures(RecoveryPolicy::Hybrid, 1).unwrap();
+        assert!(
+            hybrid > replica,
+            "one checksum must beat replication alone ({hybrid} vs {replica})"
+        );
+    }
+
+    #[test]
+    fn table_rows_cover_every_requested_cell() {
+        let engine = Engine::host();
+        let rows = CodedSweep::new(&engine, 4).with_panel(2).table(&[1]).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].policy, RecoveryPolicy::Replica);
+        assert_eq!(rows[1].policy, RecoveryPolicy::Hybrid);
+        assert_eq!(rows[2].policy, RecoveryPolicy::Checksum);
+        assert!(rows[1].tolerated >= rows[0].tolerated);
+    }
+}

@@ -140,13 +140,34 @@ pub struct CaqrSweep<'e> {
     pub samples: u64,
     /// Base seed of the sample stream.
     pub seed: u64,
+    /// Checksum blocks armed per panel stage (0 = replication only;
+    /// only consumed when the engine/spec recovery policy uses
+    /// checksums — see [`crate::abft::RecoveryPolicy`]).
+    pub checksums: usize,
     concurrency: usize,
 }
 
 impl<'e> CaqrSweep<'e> {
-    /// Defaults: 4-column panels, 40 samples per cell.
+    /// Defaults: 4-column panels, 40 samples per cell, no checksums.
     pub fn new(engine: &'e Engine, algo: Algo, procs: usize) -> Self {
-        Self { engine, algo, procs, panel: 4, samples: 40, seed: 0xCA08, concurrency: 1 }
+        Self {
+            engine,
+            algo,
+            procs,
+            panel: 4,
+            samples: 40,
+            seed: 0xCA08,
+            checksums: 0,
+            concurrency: 1,
+        }
+    }
+
+    /// Arm `c` checksum blocks on every sampled spec (the sweep's
+    /// engine must run a checksum-using recovery policy for them to
+    /// matter).
+    pub fn with_checksums(mut self, c: usize) -> Self {
+        self.checksums = c;
+        self
     }
 
     /// Replace the per-cell sample count.
@@ -186,6 +207,7 @@ impl<'e> CaqrSweep<'e> {
                 CaqrSpec::new(self.algo, self.procs, m, n, self.panel)
                     .with_seed(self.seed)
                     .with_verify(false)
+                    .with_checksums(self.checksums)
                     .with_schedule(CaqrKillSchedule::random_updates(
                         self.procs,
                         panels,
@@ -270,6 +292,33 @@ mod tests {
             .unwrap();
         assert_eq!(curve.len(), 2);
         assert_eq!(curve[0].0, 1);
+    }
+
+    #[test]
+    fn caqr_sweep_checksums_reach_the_specs() {
+        // On a hybrid-ladder engine, an armed sweep survives EVERY
+        // f=2 update-kill pattern at P=4, panels=2: the only fatal
+        // pattern (both members of the block-owning pair at panel 0)
+        // becomes a reconstruction, and dead factor pairs re-execute.
+        use crate::abft::RecoveryPolicy;
+        let engine = crate::engine::Engine::builder()
+            .host_only()
+            .recovery_policy(RecoveryPolicy::Hybrid)
+            .build()
+            .unwrap();
+        let hybrid = CaqrSweep::new(&engine, Algo::Redundant, 4)
+            .with_samples(10)
+            .with_checksums(1)
+            .at_panels(2, 2)
+            .unwrap();
+        assert_eq!(hybrid.probability(), 1.0, "armed sweep must ride every pattern");
+        // Same engine, no checksums armed: the ladder has no rung to
+        // stand on, so survival can only be lower or equal.
+        let bare = CaqrSweep::new(&engine, Algo::Redundant, 4)
+            .with_samples(10)
+            .at_panels(2, 2)
+            .unwrap();
+        assert!(bare.probability() <= hybrid.probability());
     }
 
     #[test]

@@ -3,11 +3,13 @@
 //! validation benches use to check them empirically.
 
 pub mod closed_form;
+pub mod coded;
 pub mod fullsim;
 pub mod robustness;
 pub mod survival;
 
 pub use closed_form::{survival_curve, survival_exact_f_at_round};
+pub use coded::{CodedRow, CodedSweep};
 pub use fullsim::{CaqrSweep, FullSimSweep};
 pub use robustness::{
     max_tolerated_by_step, redundancy_copies, self_healing_total_tolerated,

@@ -1,5 +1,5 @@
 //! One CAQR factorization over the engine's worker pool, with
-//! lookahead pipelining.
+//! lookahead pipelining and the checksum-coded recovery ladder.
 //!
 //! The coordinator walks the [`PanelPlan`] panel by panel.  Per panel:
 //!
@@ -15,11 +15,37 @@
 //!    models the paper's "process dies mid-update": the dead rank's
 //!    results are discarded, and each of its blocks is harvested from
 //!    the surviving replica instead — a *recovery*, counted in the
-//!    metrics.  If both members of a pair are dead the block has no
-//!    surviving copy and the run fails (`replication − 1` exceeded).
+//!    metrics.
 //! 3. **Panel boundary** — Self-Healing respawns the dead (REBUILD),
 //!    restoring capacity for the next panel; Redundant lets the world
 //!    shrink.
+//!
+//! ## The recovery ladder
+//!
+//! When a task has lost **every** replica (a *pair wipe* — or any loss
+//! under the un-replicated [`RecoveryPolicy::Checksum`]), the resolved
+//! [`RecoveryPolicy`] decides what happens next:
+//!
+//! * `Replica` — abort, exactly the source papers' semantics (and
+//!   bit-for-bit the pre-ABFT behaviour of this module).
+//! * `Checksum` / `Hybrid` — walk down to the **checksum rung**:
+//!   * *update stage*: `c` checksum-update tasks ran alongside the
+//!     data tasks (the same kernel applied to the Vandermonde
+//!     combinations `S_l = Σ_j w(l,j)·B_j` — the update is linear, so
+//!     `S_l`'s update IS the combination of the updated blocks).  The
+//!     lost outputs are solved back out via [`Encoder::reconstruct`].
+//!   * *factor stage*: QR is nonlinear, so the lost *result* cannot be
+//!     solved for; instead the factor's **input** panel is rebuilt —
+//!     row shards held by the wiped pairs are reconstructed from the
+//!     rotated checksum shards ([`PanelPlan::checksum_assignees`]) —
+//!     and the factor re-executes on the lowest-ranked survivor.
+//!
+//! Both rungs are pre-decided by the [`Timeline`] (fault injection is
+//! deterministic), reconstruction counts land in
+//! [`MetricsSnapshot::checksum_reconstructions`] /
+//! [`MetricsSnapshot::pair_wipes_survived`], and with zero failures the
+//! checksum tasks never touch the factorization state — checksummed
+//! runs reproduce the un-checksummed bits exactly.
 //!
 //! ## Lookahead
 //!
@@ -33,15 +59,19 @@
 //! panel `k`'s remaining updates.  [`MetricsSnapshot`] exposes the
 //! overlap: `lookahead_hits` counts panels whose early factor had
 //! already finished when it was needed, `panel_stall_ns` the time the
-//! coordinator still spent blocked on factor results.
+//! coordinator still spent blocked on factor results.  A panel whose
+//! update stage needs reconstruction falls back to the sequential
+//! schedule (reconstruction is a barrier: it needs every surviving
+//! block *and* checksum output).
 //!
 //! Fault injection is *pre-simulated*: the `(rank, panel, stage)` kill
 //! schedule and the respawn policy are deterministic, so the liveness
-//! timeline — who is alive at every stage of every panel, where the
-//! run fails — is computed up front ([`Timeline`]).  Task dispatch is
-//! then free to overlap stages without perturbing replica selection,
-//! harvest choices, or failure points: the results (and every byte of
-//! the recovery bookkeeping) are identical to the sequential schedule.
+//! timeline — who is alive at every stage of every panel, which rung
+//! of the ladder each stage takes, where the run fails — is computed
+//! up front ([`Timeline`]).  Task dispatch is then free to overlap
+//! stages without perturbing replica selection, harvest choices, or
+//! failure points: the results (and every byte of the recovery
+//! bookkeeping) are identical to the sequential schedule.
 //!
 //! All inter-task data is `Arc`-shared f64 (never rounded through
 //! f32), which is what keeps the fault-tolerant path bit-identical to
@@ -51,12 +81,16 @@
 //! bitwise pin against the unblocked oracle for level-3 speed.
 //!
 //! [`PanelPlan`]: crate::tsqr::PanelPlan
+//! [`PanelPlan::checksum_assignees`]: crate::tsqr::PanelPlan::checksum_assignees
+//! [`MetricsSnapshot::checksum_reconstructions`]: crate::ulfm::MetricsSnapshot
+//! [`MetricsSnapshot::pair_wipes_survived`]: crate::ulfm::MetricsSnapshot
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::abft::{Encoder, RecoveryPolicy};
 use crate::engine::{TaskGroup, WorkerPool};
 use crate::error::Result;
 use crate::fault::CaqrStage;
@@ -77,44 +111,124 @@ thread_local! {
     static WY_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
 }
 
-/// Pre-simulated liveness: who is alive at every stage of every panel,
-/// given the (deterministic) kill schedule and respawn policy.
-/// Computing this up front is what lets the lookahead scheduler
-/// dispatch panel `k+1`'s factor mid-way through panel `k`'s updates
-/// without changing replica selection or harvest choices.
+/// The ranks that compute panel `k`'s factor under `policy`: the
+/// owner's replica pair, or the owner alone when the policy does not
+/// replicate.
+fn factor_task_ranks(plan: &PanelPlan, k: usize, policy: RecoveryPolicy) -> Vec<usize> {
+    if policy.replicates() {
+        plan.factor_replicas(k)
+    } else {
+        vec![plan.factor_owner(k)]
+    }
+}
+
+/// The ranks that compute update block `(k, j)` under `policy`.
+fn update_task_ranks(
+    plan: &PanelPlan,
+    k: usize,
+    j: usize,
+    policy: RecoveryPolicy,
+) -> Vec<usize> {
+    if policy.replicates() {
+        plan.update_assignees(k, j)
+    } else {
+        vec![plan.update_owner(k, j)]
+    }
+}
+
+/// The replica groups that hold panel data between stages: buddy pairs
+/// under replicating policies (a shard dies only when its whole pair
+/// does), single ranks otherwise.
+fn holder_groups(procs: usize, policy: RecoveryPolicy) -> Vec<Vec<usize>> {
+    if !policy.replicates() || procs < 2 {
+        (0..procs).map(|r| vec![r]).collect()
+    } else {
+        (0..procs / 2).map(|g| vec![2 * g, 2 * g + 1]).collect()
+    }
+}
+
+/// Checksum indices `l < c` whose holder set has a survivor in `alive`
+/// — the checksums a reconstruction at panel `k` may consume, in
+/// ascending (deterministic) order.
+fn live_checksums(plan: &PanelPlan, k: usize, c: usize, alive: &[bool]) -> Vec<usize> {
+    (0..c)
+        .filter(|&l| plan.checksum_assignees(k, l).into_iter().any(|r| alive[r]))
+        .collect()
+}
+
+/// The factor stage's checksum rung, pre-decided by the timeline:
+/// which row shards of the panel input must be rebuilt, and who
+/// re-executes the factor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct FactorRebuild {
+    /// Number of data shards the panel input is split over (the holder
+    /// groups with a survivor at panel start).
+    holder_count: usize,
+    /// Shard indices (into `0..holder_count`) whose holder group was
+    /// freshly wiped at this factor stage.
+    lost: Vec<usize>,
+    /// Lowest-ranked survivor; re-executes the factor task.
+    exec_rank: usize,
+}
+
+/// Pre-simulated liveness *and ladder decisions*: who is alive at every
+/// stage of every panel, which stages take the checksum rung, where
+/// the run fails.  Computing this up front is what lets the lookahead
+/// scheduler dispatch panel `k+1`'s factor mid-way through panel `k`'s
+/// updates without changing replica selection or harvest choices.
 struct Timeline {
+    /// Liveness at panel `k`'s start (before its factor kills fire).
+    alive_start: Vec<Vec<bool>>,
     /// Liveness at panel `k`'s factor-task spawn (factor kills fired).
     alive_factor: Vec<Vec<bool>>,
     /// Liveness at panel `k`'s update-task spawn (update kills fired).
     alive_update: Vec<Vec<bool>>,
+    /// `Some` when panel `k`'s factor lost every replica and the
+    /// checksum rung rebuilds it.
+    factor_rebuild: Vec<Option<FactorRebuild>>,
+    /// Update blocks of panel `k` that lost every replica and are
+    /// reconstructed from the checksum-update outputs.
+    update_lost: Vec<Vec<usize>>,
     /// Ranks respawned at panel `k`'s boundary (Self-Healing), one
     /// entry per *completed* panel.
     respawns: Vec<u64>,
     /// Final panel each dead rank died at.
     died_at: Vec<Option<usize>>,
-    /// First `(panel, stage)` at which some task lost every replica.
+    /// First `(panel, stage)` at which some task exhausted the ladder.
     failed_at: Option<(usize, CaqrStage)>,
     /// Liveness at the end of the run (at failure or completion).
     final_alive: Vec<bool>,
 }
 
 /// Walk the kill schedule through the panel sequence exactly as the
-/// sequential coordinator would, recording liveness at every stage.
-/// Consumes the schedule's entries (they are one-shot), which is fine:
-/// this runs once per `execute` and nothing else fires them.
-fn simulate_timeline(spec: &CaqrSpec, plan: &PanelPlan) -> Timeline {
+/// sequential coordinator would, recording liveness and ladder
+/// decisions at every stage.  Consumes the schedule's entries (they
+/// are one-shot), which is fine: this runs once per `execute` and
+/// nothing else fires them.
+fn simulate_timeline(
+    spec: &CaqrSpec,
+    plan: &PanelPlan,
+    policy: RecoveryPolicy,
+    c: usize,
+) -> Timeline {
     let procs = spec.procs;
     let mut alive = vec![true; procs];
     let mut died_at: Vec<Option<usize>> = vec![None; procs];
     let mut tl = Timeline {
+        alive_start: Vec::with_capacity(plan.panels()),
         alive_factor: Vec::with_capacity(plan.panels()),
         alive_update: Vec::with_capacity(plan.panels()),
+        factor_rebuild: Vec::with_capacity(plan.panels()),
+        update_lost: Vec::with_capacity(plan.panels()),
         respawns: Vec::with_capacity(plan.panels()),
         died_at: Vec::new(),
         failed_at: None,
         final_alive: Vec::new(),
     };
+    let groups = holder_groups(procs, policy);
+    let use_checksums = policy.uses_checksums() && c > 0;
     'panels: for k in 0..plan.panels() {
+        tl.alive_start.push(alive.clone());
         for r in 0..procs {
             if alive[r] && spec.schedule.fire(r, k, CaqrStage::Factor) {
                 alive[r] = false;
@@ -122,9 +236,37 @@ fn simulate_timeline(spec: &CaqrSpec, plan: &PanelPlan) -> Timeline {
             }
         }
         tl.alive_factor.push(alive.clone());
-        if !plan.factor_replicas(k).into_iter().any(|r| alive[r]) {
-            tl.failed_at = Some((k, CaqrStage::Factor));
-            break 'panels;
+        if factor_task_ranks(plan, k, policy).into_iter().any(|r| alive[r]) {
+            tl.factor_rebuild.push(None);
+        } else {
+            // Every factor replica is dead: the checksum rung rebuilds
+            // the wiped pairs' input shards and re-executes — if the
+            // policy has the rung, a survivor exists, and enough
+            // checksum shards survive.
+            let alive_start = &tl.alive_start[k];
+            let holders: Vec<&Vec<usize>> =
+                groups.iter().filter(|g| g.iter().any(|&r| alive_start[r])).collect();
+            let lost: Vec<usize> = holders
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| !g.iter().any(|&r| alive[r]))
+                .map(|(h, _)| h)
+                .collect();
+            let exec_rank = (0..procs).find(|&r| alive[r]);
+            let feasible = use_checksums
+                && exec_rank.is_some()
+                && lost.len() <= live_checksums(plan, k, c, &alive).len();
+            match (feasible, exec_rank) {
+                (true, Some(rank)) => tl.factor_rebuild.push(Some(FactorRebuild {
+                    holder_count: holders.len(),
+                    lost,
+                    exec_rank: rank,
+                })),
+                _ => {
+                    tl.failed_at = Some((k, CaqrStage::Factor));
+                    break 'panels;
+                }
+            }
         }
         for r in 0..procs {
             if alive[r] && spec.schedule.fire(r, k, CaqrStage::Update) {
@@ -133,12 +275,20 @@ fn simulate_timeline(spec: &CaqrSpec, plan: &PanelPlan) -> Timeline {
             }
         }
         tl.alive_update.push(alive.clone());
-        for j in 0..plan.update_blocks(k) {
-            if !plan.update_assignees(k, j).into_iter().any(|r| alive[r]) {
+        let lost: Vec<usize> = (0..plan.update_blocks(k))
+            .filter(|&j| {
+                !update_task_ranks(plan, k, j, policy).into_iter().any(|r| alive[r])
+            })
+            .collect();
+        if !lost.is_empty() {
+            let feasible =
+                use_checksums && lost.len() <= live_checksums(plan, k, c, &alive).len();
+            if !feasible {
                 tl.failed_at = Some((k, CaqrStage::Update));
                 break 'panels;
             }
         }
+        tl.update_lost.push(lost);
         let mut respawns = 0u64;
         if spec.algo == Algo::SelfHealing {
             for r in 0..procs {
@@ -161,6 +311,7 @@ fn simulate_timeline(spec: &CaqrSpec, plan: &PanelPlan) -> Timeline {
 type FactorOut = (Vec<f64>, Vec<f64>, Option<Arc<WyFactor>>);
 type FactorMap = BTreeMap<usize, FactorOut>;
 type UpdateMap = BTreeMap<(usize, usize), Vec<f64>>;
+type ChecksumMap = BTreeMap<(usize, usize), Vec<f64>>;
 
 /// A factor stage in flight: the task latch plus the replica deposits.
 struct FactorStage {
@@ -223,16 +374,57 @@ fn harvest_factor(stage: &FactorStage, k: usize) -> FactorOut {
     fr.remove(&chosen).expect("just looked it up")
 }
 
+/// The checksum rung of the factor stage: rebuild the wiped holder
+/// groups' row shards of the panel snapshot from the rotated checksum
+/// shards, then re-dispatch the factor to the surviving rank.
+///
+/// The snapshot round-trips one encode + one solve, so the re-executed
+/// factor differs from the clean run by `O(c·n·ε·‖A‖)` — the bound
+/// `tests/integration_abft.rs` pins.  Surviving shards keep their
+/// exact bytes.
+fn rebuild_factor_snapshot(
+    snap: &[f64],
+    rows: usize,
+    cols: usize,
+    rb: &FactorRebuild,
+    c: usize,
+    avail: &[usize],
+) -> Result<Vec<f64>> {
+    let enc = Encoder::new(c);
+    let shards = Encoder::shard_rows(rows, rb.holder_count);
+    let parts: Vec<&[f64]> =
+        shards.iter().map(|&(s, e)| &snap[s * cols..e * cols]).collect();
+    let lens: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+    let pad = lens.iter().copied().max().unwrap_or(0);
+    let checks_all = enc.encode(1, &lens, &parts, pad);
+    let opts: Vec<Option<&[f64]>> = parts
+        .iter()
+        .enumerate()
+        .map(|(h, p)| if rb.lost.contains(&h) { None } else { Some(*p) })
+        .collect();
+    let checks: Vec<(usize, &[f64])> =
+        avail.iter().map(|&l| (l, checks_all[l].as_slice())).collect();
+    let rebuilt = enc.reconstruct(1, &lens, &opts, &checks, pad)?;
+    let mut out = snap.to_vec();
+    for (h, data) in rebuilt {
+        let (s, _) = shards[h];
+        out[s * cols..s * cols + data.len()].copy_from_slice(&data);
+    }
+    Ok(out)
+}
+
 /// Execute one validated spec end to end on pooled workers.
 pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> {
     spec.validate()?;
     let plan = spec.plan();
     let profile = spec.profile.unwrap_or_default();
+    let policy = spec.policy.unwrap_or_default();
+    let checksums = if policy.uses_checksums() { spec.checksums } else { 0 };
     let (m, n) = (spec.m, spec.n);
     let a = spec.input_matrix();
     let started = Instant::now();
 
-    let tl = simulate_timeline(spec, &plan);
+    let tl = simulate_timeline(spec, &plan, policy, checksums);
 
     // The factorization state, f64 end to end (one terminal rounding).
     let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
@@ -242,11 +434,13 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
     let mut failed_at: Option<(usize, CaqrStage)> = None;
     // Factor stage the lookahead dispatched for the *next* panel.
     let mut pending: Option<FactorStage> = None;
+    let encoder = Encoder::new(checksums);
 
     'panels: for k in 0..plan.panels() {
         let (c0, c1) = plan.col_range(k);
         let rows = m - c0;
         let cols = c1 - c0;
+        let mut panel_reconstructions = 0u64;
 
         // ---------------------------------------------- factor stage
         if tl.failed_at == Some((k, CaqrStage::Factor)) {
@@ -265,15 +459,41 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                 stage
             }
             None => {
-                let replicas: Vec<usize> =
-                    plan.factor_replicas(k).into_iter().filter(|&r| alive_f[r]).collect();
                 let mut snap = vec![0.0f64; rows * cols];
                 for i in 0..rows {
                     for j in 0..cols {
                         snap[i * cols + j] = w[(c0 + i) * n + (c0 + j)];
                     }
                 }
-                spawn_factor(pool, &replicas, Arc::new(snap), rows, cols, profile)
+                match &tl.factor_rebuild[k] {
+                    Some(rb) => {
+                        // Checksum rung: every replica is gone —
+                        // rebuild the wiped shards, re-execute on the
+                        // lowest-ranked survivor.
+                        let avail = live_checksums(&plan, k, checksums, alive_f);
+                        let snap2 = rebuild_factor_snapshot(
+                            &snap, rows, cols, rb, checksums, &avail,
+                        )?;
+                        panel_reconstructions += rb.lost.len() as u64;
+                        metrics.checksum_reconstructions += rb.lost.len() as u64;
+                        metrics.pair_wipes_survived += 1;
+                        spawn_factor(
+                            pool,
+                            &[rb.exec_rank],
+                            Arc::new(snap2),
+                            rows,
+                            cols,
+                            profile,
+                        )
+                    }
+                    None => {
+                        let replicas: Vec<usize> = factor_task_ranks(&plan, k, policy)
+                            .into_iter()
+                            .filter(|&r| alive_f[r])
+                            .collect();
+                        spawn_factor(pool, &replicas, Arc::new(snap), rows, cols, profile)
+                    }
+                }
             }
         };
         stage.tasks.wait_idle();
@@ -290,18 +510,21 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
         }
         let alive_u = &tl.alive_update[k];
         let blocks = plan.update_blocks(k);
+        let lost = &tl.update_lost[k];
         let assignee_sets: Vec<Vec<usize>> = (0..blocks)
-            .map(|j| plan.update_assignees(k, j).into_iter().filter(|&r| alive_u[r]).collect())
+            .map(|j| {
+                update_task_ranks(&plan, k, j, policy)
+                    .into_iter()
+                    .filter(|&r| alive_u[r])
+                    .collect()
+            })
             .collect();
-        let update_results: Arc<Mutex<UpdateMap>> = Arc::new(Mutex::new(BTreeMap::new()));
-        // Block 0 (the lookahead block) gets its own latch so the
-        // coordinator can dispatch panel k+1's factor the moment both
-        // of its copies are in, while the remaining blocks drain.
-        let look_block = plan.lookahead_block(k);
-        let look_group = TaskGroup::new(pool.clone());
-        let rest_group = TaskGroup::new(pool.clone());
-        let mut spawned = 0u64;
-        for (j, asg) in assignee_sets.iter().enumerate() {
+        // Snapshot every trailing block up front: the update tasks
+        // consume them, and (when checksums are armed) so does the
+        // encoder.
+        let mut widths = Vec::with_capacity(blocks);
+        let mut bsnaps: Vec<Arc<Vec<f64>>> = Vec::with_capacity(blocks);
+        for j in 0..blocks {
             let (t0, t1) = plan.update_cols(k, j);
             let bk = t1 - t0;
             let mut bsnap = vec![0.0f64; rows * bk];
@@ -310,29 +533,75 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                     bsnap[i * bk + c] = w[(c0 + i) * n + (t0 + c)];
                 }
             }
-            let bsnap = Arc::new(bsnap);
+            widths.push(bk);
+            bsnaps.push(Arc::new(bsnap));
+        }
+        let update_results: Arc<Mutex<UpdateMap>> = Arc::new(Mutex::new(BTreeMap::new()));
+        let checksum_results: Arc<Mutex<ChecksumMap>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        // Block 0 (the lookahead block) gets its own latch so the
+        // coordinator can dispatch panel k+1's factor the moment both
+        // of its copies are in, while the remaining blocks drain.  A
+        // stage that needs reconstruction is a barrier instead.
+        let do_lookahead = lost.is_empty();
+        let look_block = plan.lookahead_block(k).filter(|_| do_lookahead);
+        let look_group = TaskGroup::new(pool.clone());
+        let rest_group = TaskGroup::new(pool.clone());
+        let mut spawned = 0u64;
+        let spawn_update = |group: &TaskGroup,
+                            rank: usize,
+                            key_is_checksum: Option<usize>,
+                            j: usize,
+                            bsnap: Arc<Vec<f64>>,
+                            bk: usize| {
+            let panel_shared = Arc::clone(&panel_shared);
+            let panel_wy = panel_wy.clone();
+            let out = Arc::clone(&update_results);
+            let cout = Arc::clone(&checksum_results);
+            group.spawn(move || {
+                let mut blk = (*bsnap).clone();
+                match &panel_wy {
+                    Some(wy) => {
+                        WY_SCRATCH.with(|scratch| {
+                            wy::apply_wyt_into(wy, &mut blk, bk, &mut scratch.borrow_mut());
+                        });
+                    }
+                    None => {
+                        let (pan, t) = &*panel_shared;
+                        apply_update_f64(pan, rows, cols, t, &mut blk, bk);
+                    }
+                }
+                match key_is_checksum {
+                    Some(l) => cout.lock().unwrap().insert((l, rank), blk),
+                    None => out.lock().unwrap().insert((j, rank), blk),
+                };
+            });
+        };
+        for (j, asg) in assignee_sets.iter().enumerate() {
             let group = if look_block == Some(j) { &look_group } else { &rest_group };
             for &rank in asg {
-                let panel_shared = Arc::clone(&panel_shared);
-                let panel_wy = panel_wy.clone();
-                let bsnap = Arc::clone(&bsnap);
-                let out = Arc::clone(&update_results);
                 spawned += 1;
-                group.spawn(move || {
-                    let mut blk = (*bsnap).clone();
-                    match &panel_wy {
-                        Some(wy) => {
-                            WY_SCRATCH.with(|scratch| {
-                                wy::apply_wyt_into(wy, &mut blk, bk, &mut scratch.borrow_mut());
-                            });
-                        }
-                        None => {
-                            let (pan, t) = &*panel_shared;
-                            apply_update_f64(pan, rows, cols, t, &mut blk, bk);
-                        }
-                    }
-                    out.lock().unwrap().insert((j, rank), blk);
-                });
+                spawn_update(group, rank, None, j, Arc::clone(&bsnaps[j]), widths[j]);
+            }
+        }
+        // Checksum-update tasks: the same kernel over the Vandermonde
+        // combinations of the block snapshots.  They ride along every
+        // panel the policy arms them — paying the (measured) encode
+        // cost — but their outputs are consumed only on reconstruction.
+        let pad = widths.iter().copied().max().unwrap_or(0);
+        if checksums > 0 && blocks > 0 {
+            let brefs: Vec<&[f64]> = bsnaps.iter().map(|b| b.as_slice()).collect();
+            let csnaps = encoder.encode(rows, &widths, &brefs, pad);
+            for (l, csnap) in csnaps.into_iter().enumerate() {
+                let csnap = Arc::new(csnap);
+                for rank in plan
+                    .checksum_assignees(k, l)
+                    .into_iter()
+                    .filter(|&r| alive_u[r])
+                {
+                    spawned += 1;
+                    spawn_update(&rest_group, rank, Some(l), 0, Arc::clone(&csnap), pad);
+                }
             }
         }
         metrics.update_tasks += spawned;
@@ -343,7 +612,8 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                              asg: &[usize],
                              ur: &mut UpdateMap,
                              w: &mut [f64],
-                             panel_recoveries: &mut u64| {
+                             panel_recoveries: &mut u64|
+         -> Vec<f64> {
             let block_owner = plan.update_owner(k, j);
             let source = if asg.contains(&block_owner) {
                 block_owner
@@ -362,6 +632,7 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                     w[(c0 + i) * n + (t0 + c)] = blk[i * bk + c];
                 }
             }
+            blk
         };
 
         // ------------------------------------ lookahead dispatch
@@ -375,9 +646,10 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
             // Panel k+1's factor region (rows c1.., cols c1..c2) is
             // fully contained in the block just harvested: dispatch
             // its factor tasks now, overlapping the remaining updates.
+            // (A doomed or rebuilt next factor — no live replica —
+            // dispatches nothing and is handled sequentially.)
             if let Some(alive_next) = tl.alive_factor.get(k + 1) {
-                let replicas_next: Vec<usize> = plan
-                    .factor_replicas(k + 1)
+                let replicas_next: Vec<usize> = factor_task_ranks(&plan, k + 1, policy)
                     .into_iter()
                     .filter(|&r| alive_next[r])
                     .collect();
@@ -404,13 +676,61 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
 
         // ------------------------------------ remaining updates
         rest_group.wait_idle();
+        let mut survivor_blocks: Vec<Option<Vec<f64>>> = vec![None; blocks];
         {
             let mut ur = update_results.lock().unwrap();
             for (j, asg) in assignee_sets.iter().enumerate() {
-                if !written[j] {
-                    harvest_block(j, asg, &mut ur, &mut w, &mut panel_recoveries);
+                if !written[j] && !lost.contains(&j) {
+                    let blk =
+                        harvest_block(j, asg, &mut ur, &mut w, &mut panel_recoveries);
+                    if !lost.is_empty() {
+                        survivor_blocks[j] = Some(blk);
+                    }
                 }
             }
+        }
+        // ------------------------------------ checksum rung (updates)
+        if !lost.is_empty() {
+            let cr = checksum_results.lock().unwrap();
+            let avail = live_checksums(&plan, k, checksums, alive_u);
+            let mut checks: Vec<(usize, &[f64])> = Vec::with_capacity(avail.len());
+            for &l in &avail {
+                // Lowest-ranked live holder's deposit; holders compute
+                // identical bits (same snapshot, same kernel).
+                let rank = plan
+                    .checksum_assignees(k, l)
+                    .into_iter()
+                    .find(|&r| alive_u[r])
+                    .expect("live_checksums guarantees a live holder");
+                checks.push((l, cr.get(&(l, rank)).expect("holder deposited").as_slice()));
+            }
+            let opts: Vec<Option<&[f64]>> = (0..blocks)
+                .map(|j| {
+                    if lost.contains(&j) {
+                        None
+                    } else if written[j] {
+                        // The lookahead never harvests early on a
+                        // reconstruction panel, so every survivor was
+                        // stashed above.
+                        unreachable!("reconstruction panels run sequentially")
+                    } else {
+                        Some(survivor_blocks[j].as_deref().expect("survivor stashed"))
+                    }
+                })
+                .collect();
+            let rebuilt = encoder.reconstruct(rows, &widths, &opts, &checks, pad)?;
+            for (j, blk) in rebuilt {
+                let (t0, t1) = plan.update_cols(k, j);
+                let bk = t1 - t0;
+                for i in 0..rows {
+                    for c in 0..bk {
+                        w[(c0 + i) * n + (t0 + c)] = blk[i * bk + c];
+                    }
+                }
+            }
+            panel_reconstructions += lost.len() as u64;
+            metrics.checksum_reconstructions += lost.len() as u64;
+            metrics.pair_wipes_survived += 1;
         }
         metrics.update_recoveries += panel_recoveries;
         // Write the factored panel (and its tau) into the state.
@@ -433,13 +753,15 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
             alive_after: alive_u.iter().filter(|&&x| x).count() + respawns as usize,
             factor_recovered,
             update_recoveries: panel_recoveries,
+            checksum_reconstructions: panel_reconstructions,
             respawns,
         });
     }
     // Every dispatched lookahead stage is consumed by the next panel's
     // factor stage (which always runs before that panel's update-failure
     // break), and none is dispatched when the next panel's factor stage
-    // is doomed (no live replica) — so nothing can be left in flight.
+    // is doomed or rebuilt (no live replica) — so nothing can be left
+    // in flight.
     debug_assert!(pending.is_none(), "lookahead factor stage left unconsumed");
 
     let statuses: Vec<ProcStatus> = (0..spec.procs)
@@ -472,6 +794,8 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
     Ok(CaqrResult {
         algo: spec.algo,
         profile,
+        policy,
+        checksums,
         procs: spec.procs,
         panels: plan.panels(),
         failed_at,
@@ -488,7 +812,7 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fault::CaqrKillSchedule;
+    use crate::fault::{CaqrKillSchedule, PairWipeSchedule};
 
     fn run(spec: CaqrSpec) -> CaqrResult {
         let pool = WorkerPool::new();
@@ -504,6 +828,7 @@ mod tests {
         let res = run(spec);
         assert!(res.success());
         assert_eq!(res.profile, KernelProfile::Reference);
+        assert_eq!(res.policy, RecoveryPolicy::Replica);
         let reference = crate::linalg::householder_qr_reference(&a);
         let f = res.factors.as_ref().unwrap();
         assert_eq!(f.packed.data(), reference.packed.data(), "packed must be bit-identical");
@@ -511,6 +836,7 @@ mod tests {
         assert!(res.verification.unwrap().ok);
         assert_eq!(res.metrics.panels_completed, 3);
         assert_eq!(res.metrics.update_recoveries, 0);
+        assert_eq!(res.metrics.checksum_reconstructions, 0);
         assert_eq!(res.dead_count(), 0);
         // Lookahead is observable but never exceeds the panels that
         // have a successor.
@@ -612,5 +938,62 @@ mod tests {
             clean.final_r.as_ref().unwrap().data(),
             "blocked recovery must reproduce the clean blocked bits"
         );
+    }
+
+    #[test]
+    fn hybrid_survives_the_pair_wipe_replication_cannot() {
+        // The same schedule as `pair_wipe_fails_at_the_bound`, one
+        // checksum armed: the lost block is reconstructed and the run
+        // completes — the tentpole property of the ABFT layer.
+        let wipe = PairWipeSchedule::new(2, 0, CaqrStage::Update);
+        let res = run(
+            CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+                .with_schedule(wipe.schedule())
+                .with_policy(RecoveryPolicy::Hybrid)
+                .with_checksums(1),
+        );
+        assert!(res.success(), "hybrid must ride through the pair wipe");
+        assert_eq!(res.policy, RecoveryPolicy::Hybrid);
+        assert_eq!(res.checksums, 1);
+        assert!(res.metrics.pair_wipes_survived >= 1);
+        assert!(res.metrics.checksum_reconstructions >= 1);
+        assert!(res.verification.unwrap().ok, "reconstructed R must still verify");
+        assert_eq!(res.dead_count(), 2);
+    }
+
+    #[test]
+    fn zero_failure_checksummed_run_is_bitwise_identical() {
+        let clean = run(CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4));
+        for policy in [RecoveryPolicy::Hybrid, RecoveryPolicy::Checksum] {
+            let coded = run(
+                CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+                    .with_policy(policy)
+                    .with_checksums(2),
+            );
+            assert!(coded.success());
+            assert_eq!(
+                coded.final_r.as_ref().unwrap().data(),
+                clean.final_r.as_ref().unwrap().data(),
+                "{policy}: checksum tasks must be bystanders with zero failures"
+            );
+            assert_eq!(coded.metrics.checksum_reconstructions, 0);
+            assert_eq!(coded.metrics.pair_wipes_survived, 0);
+        }
+    }
+
+    #[test]
+    fn checksum_policy_reconstructs_unreplicated_losses() {
+        // Under the un-replicated policy a single death loses its
+        // blocks outright; the checksum rung carries them.
+        let res = run(
+            CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+                .with_policy(RecoveryPolicy::Checksum)
+                .with_checksums(1)
+                .with_schedule(CaqrKillSchedule::at(&[(1, 0, CaqrStage::Update)])),
+        );
+        assert!(res.success());
+        assert_eq!(res.metrics.update_recoveries, 0, "no replicas to recover from");
+        assert!(res.metrics.checksum_reconstructions >= 1);
+        assert!(res.verification.unwrap().ok);
     }
 }

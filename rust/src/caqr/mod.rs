@@ -30,6 +30,16 @@
 //! boundary, restoring full capacity for the next panel, while under
 //! [`Algo::Redundant`] the world shrinks monotonically.
 //!
+//! Beyond replication, a [`CaqrSpec`] can arm the **checksum rung** of
+//! the recovery ladder ([`crate::abft`]):
+//! [`with_policy`](CaqrSpec::with_policy)`(`[`RecoveryPolicy::Hybrid`]`)`
+//! plus [`with_checksums`](CaqrSpec::with_checksums)`(c)` encodes `c`
+//! Vandermonde checksum blocks per panel stage, so even a *pair wipe*
+//! (both replicas of a task dead in one stage — fatal above) is
+//! survived by reconstructing the lost results algebraically.
+//!
+//! [`RecoveryPolicy::Hybrid`]: crate::abft::RecoveryPolicy::Hybrid
+//!
 //! ## The bitwise contract
 //!
 //! Every handoff between tasks stays f64 (the kernels in
@@ -76,6 +86,7 @@ pub(crate) use exec::execute;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::abft::RecoveryPolicy;
 use crate::error::{Error, Result};
 use crate::fault::{CaqrKillSchedule, CaqrStage};
 use crate::linalg::{Matrix, PackedQr};
@@ -110,6 +121,16 @@ pub struct CaqrSpec {
     /// `None` inherits the engine's default (`Reference` for one-shot
     /// [`factorize`] runs).
     pub profile: Option<KernelProfile>,
+    /// Recovery ladder this run walks when a task loses replicas
+    /// (`Replica → Checksum → Abort`; see [`RecoveryPolicy`]).  `None`
+    /// inherits the engine's default (`Replica` for one-shot
+    /// [`factorize`] runs — the papers' semantics).
+    pub policy: Option<RecoveryPolicy>,
+    /// Checksum blocks `c` encoded per panel stage when the resolved
+    /// policy uses checksums: up to `c` tasks that lost **every**
+    /// replica are reconstructed per stage.  Ignored (and free) under
+    /// [`RecoveryPolicy::Replica`].
+    pub checksums: usize,
 }
 
 impl CaqrSpec {
@@ -125,6 +146,8 @@ impl CaqrSpec {
             schedule: Arc::new(CaqrKillSchedule::none()),
             verify: true,
             profile: None,
+            policy: None,
+            checksums: 0,
         }
     }
 
@@ -153,6 +176,20 @@ impl CaqrSpec {
         self
     }
 
+    /// Pin the recovery policy for this spec (overrides the engine's
+    /// default; see [`RecoveryPolicy`]).
+    pub fn with_policy(mut self, policy: RecoveryPolicy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Encode `c` checksum blocks per panel stage (only consumed when
+    /// the resolved policy uses checksums).
+    pub fn with_checksums(mut self, c: usize) -> Self {
+        self.checksums = c;
+        self
+    }
+
     /// Validate shape and semantics.
     pub fn validate(&self) -> Result<()> {
         if self.procs == 0 {
@@ -176,6 +213,23 @@ impl CaqrSpec {
                  even (or 1), got {}",
                 self.procs
             )));
+        }
+        if self.checksums > 0 {
+            if self.procs < 2 {
+                return Err(Error::Config(
+                    "checksums need at least one rank besides the data holders; \
+                     procs must be >= 2"
+                        .into(),
+                ));
+            }
+            if self.checksums > self.procs / 2 {
+                return Err(Error::Config(format!(
+                    "at most procs/2 checksum blocks fit distinct holder pairs: \
+                     checksums = {} > {}",
+                    self.checksums,
+                    self.procs / 2
+                )));
+            }
         }
         match self.algo {
             Algo::Redundant | Algo::SelfHealing => Ok(()),
@@ -211,6 +265,9 @@ pub struct PanelSurvival {
     /// Trailing blocks harvested from the replica because the owner
     /// was dead.
     pub update_recoveries: u64,
+    /// Task results rebuilt from checksums at this panel (both
+    /// stages), after every replica was lost.
+    pub checksum_reconstructions: u64,
     /// Dead ranks respawned at this panel boundary (Self-Healing).
     pub respawns: u64,
 }
@@ -223,6 +280,12 @@ pub struct CaqrResult {
     /// Kernel profile the run executed under (resolved from the spec
     /// or the engine default).
     pub profile: KernelProfile,
+    /// Recovery ladder the run executed under (resolved from the spec
+    /// or the engine default).
+    pub policy: RecoveryPolicy,
+    /// Checksum blocks encoded per panel stage (0 under
+    /// [`RecoveryPolicy::Replica`]).
+    pub checksums: usize,
     /// World size.
     pub procs: usize,
     /// Panels the plan scheduled.
@@ -407,6 +470,11 @@ mod tests {
         assert!(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 0).validate().is_err());
         assert!(CaqrSpec::new(Algo::Baseline, 4, 16, 8, 4).validate().is_err(), "semantics");
         assert!(CaqrSpec::new(Algo::Replace, 4, 16, 8, 4).validate().is_err());
+        // Checksum budget: at most one per holder pair, never on a
+        // lone process.
+        assert!(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4).with_checksums(2).validate().is_ok());
+        assert!(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4).with_checksums(3).validate().is_err());
+        assert!(CaqrSpec::new(Algo::Redundant, 1, 16, 8, 4).with_checksums(1).validate().is_err());
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub use pool::{TaskGroup, WorkerPool};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, mpsc};
 
+use crate::abft::RecoveryPolicy;
 use crate::caqr::{CaqrCampaign, CaqrResult, CaqrSpec};
 use crate::error::{Error, Result};
 use crate::runtime::{Backend, Executor, KernelProfile, DEFAULT_ARTIFACT_DIR};
@@ -48,6 +49,7 @@ pub struct EngineBuilder {
     pjrt_shards: usize,
     prewarm: usize,
     kernel_profile: KernelProfile,
+    recovery_policy: RecoveryPolicy,
 }
 
 impl Default for EngineBuilder {
@@ -58,6 +60,7 @@ impl Default for EngineBuilder {
             pjrt_shards: 2,
             prewarm: 0,
             kernel_profile: KernelProfile::default(),
+            recovery_policy: RecoveryPolicy::default(),
         }
     }
 }
@@ -110,6 +113,19 @@ impl EngineBuilder {
         self
     }
 
+    /// Default [`RecoveryPolicy`] for CAQR work submitted through this
+    /// engine: `Replica` (the papers' replication-only ladder, the
+    /// default), `Checksum`, or `Hybrid` (replication + checksum
+    /// reconstruction — survives pair wipes).  A spec-level
+    /// [`CaqrSpec::with_policy`](crate::caqr::CaqrSpec::with_policy)
+    /// overrides this per submission; the checksum *count* always
+    /// comes from the spec
+    /// ([`CaqrSpec::with_checksums`](crate::caqr::CaqrSpec::with_checksums)).
+    pub fn recovery_policy(mut self, policy: RecoveryPolicy) -> Self {
+        self.recovery_policy = policy;
+        self
+    }
+
     /// Build the engine: load the backend once, start the pool.
     pub fn build(self) -> Result<Engine> {
         let executor = match self.backend {
@@ -124,7 +140,7 @@ impl EngineBuilder {
                 Executor::with_artifacts(&self.artifact_dir, Backend::Pjrt, self.pjrt_shards)?
             }
         };
-        Ok(Engine::from_parts(executor, self.prewarm, self.kernel_profile))
+        Ok(Engine::from_parts(executor, self.prewarm, self.kernel_profile, self.recovery_policy))
     }
 }
 
@@ -173,6 +189,7 @@ pub struct Engine {
     pool: WorkerPool,
     counters: Arc<Counters>,
     default_profile: KernelProfile,
+    default_policy: RecoveryPolicy,
 }
 
 impl Engine {
@@ -190,13 +207,24 @@ impl Engine {
     /// Wrap an existing executor in a fresh single-session engine (the
     /// substrate of the one-shot `tsqr::run` shim).
     pub fn with_executor(executor: Executor) -> Self {
-        Self::from_parts(executor, 0, KernelProfile::default())
+        Self::from_parts(executor, 0, KernelProfile::default(), RecoveryPolicy::default())
     }
 
-    fn from_parts(executor: Executor, prewarm: usize, default_profile: KernelProfile) -> Self {
+    fn from_parts(
+        executor: Executor,
+        prewarm: usize,
+        default_profile: KernelProfile,
+        default_policy: RecoveryPolicy,
+    ) -> Self {
         let pool =
             if prewarm > 0 { WorkerPool::with_prewarmed(prewarm) } else { WorkerPool::new() };
-        Self { executor, pool, counters: Arc::new(Counters::default()), default_profile }
+        Self {
+            executor,
+            pool,
+            counters: Arc::new(Counters::default()),
+            default_profile,
+            default_policy,
+        }
     }
 
     /// The session executor every submitted spec runs on.
@@ -208,6 +236,12 @@ impl Engine {
     /// their spec does not pin one.
     pub fn default_kernel_profile(&self) -> KernelProfile {
         self.default_profile
+    }
+
+    /// The default [`RecoveryPolicy`] CAQR submissions inherit when
+    /// their spec does not pin one.
+    pub fn default_recovery_policy(&self) -> RecoveryPolicy {
+        self.default_policy
     }
 
     /// Worker threads currently alive in the pool.
@@ -234,11 +268,14 @@ impl Engine {
         spec
     }
 
-    /// Resolve a CAQR spec's kernel profile: a spec-level pin wins,
-    /// otherwise the engine's default applies.
+    /// Resolve a CAQR spec's kernel profile and recovery policy: a
+    /// spec-level pin wins, otherwise the engine's defaults apply.
     fn adopt_caqr(&self, mut spec: CaqrSpec) -> CaqrSpec {
         if spec.profile.is_none() {
             spec.profile = Some(self.default_profile);
+        }
+        if spec.policy.is_none() {
+            spec.policy = Some(self.default_policy);
         }
         spec
     }
@@ -432,6 +469,32 @@ mod tests {
             )
             .unwrap();
         assert_eq!(res.profile, KernelProfile::Reference);
+    }
+
+    #[test]
+    fn recovery_policy_knob_flows_into_caqr_runs() {
+        use crate::caqr::CaqrSpec;
+        let engine = Engine::builder()
+            .host_only()
+            .recovery_policy(RecoveryPolicy::Hybrid)
+            .build()
+            .unwrap();
+        assert_eq!(engine.default_recovery_policy(), RecoveryPolicy::Hybrid);
+        let res = engine
+            .run_caqr(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4).with_checksums(1))
+            .unwrap();
+        assert!(res.success());
+        assert_eq!(res.policy, RecoveryPolicy::Hybrid, "engine default applies");
+        assert_eq!(res.checksums, 1);
+        // A spec-level pin overrides the engine default.
+        let res = engine
+            .run_caqr(
+                CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4)
+                    .with_policy(RecoveryPolicy::Replica),
+            )
+            .unwrap();
+        assert_eq!(res.policy, RecoveryPolicy::Replica);
+        assert_eq!(res.checksums, 0, "replica policy never encodes");
     }
 
     #[test]

@@ -92,6 +92,52 @@ impl CaqrKillSchedule {
     }
 }
 
+/// Deterministically kill **both** members of a replica pair at one
+/// `(panel, stage)` — the failure replication alone cannot survive.
+///
+/// The pair of `rank` is `{rank & !1, rank | 1}` (the round-0 buddy
+/// pairing every CAQR task replicates across), so a pair wipe destroys
+/// every copy of the tasks that pair owned at that stage.  Under
+/// [`RecoveryPolicy::Replica`] the run aborts there; with checksums
+/// ([`RecoveryPolicy::Hybrid`]) the lost results are reconstructed —
+/// `tests/integration_abft.rs` pins both outcomes on every
+/// `(rank, panel, stage)`.
+///
+/// [`RecoveryPolicy::Replica`]: crate::abft::RecoveryPolicy::Replica
+/// [`RecoveryPolicy::Hybrid`]: crate::abft::RecoveryPolicy::Hybrid
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PairWipeSchedule {
+    /// Either member of the pair to wipe.
+    pub rank: Rank,
+    /// Panel whose stage the wipe strikes.
+    pub panel: usize,
+    /// Stage (factor or update) the wipe strikes.
+    pub stage: CaqrStage,
+}
+
+impl PairWipeSchedule {
+    /// Wipe the pair containing `rank` at `(panel, stage)`.
+    pub fn new(rank: Rank, panel: usize, stage: CaqrStage) -> Self {
+        Self { rank, panel, stage }
+    }
+
+    /// The two ranks this schedule kills (lower first).
+    pub fn pair(&self) -> (Rank, Rank) {
+        (self.rank & !1, self.rank | 1)
+    }
+
+    /// The `(rank, panel, stage)` kill entries, lower rank first.
+    pub fn kills(&self) -> Vec<(Rank, usize, CaqrStage)> {
+        let (a, b) = self.pair();
+        vec![(a, self.panel, self.stage), (b, self.panel, self.stage)]
+    }
+
+    /// Materialize the one-shot kill schedule.
+    pub fn schedule(&self) -> CaqrKillSchedule {
+        CaqrKillSchedule::at(&self.kills())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +182,20 @@ mod tests {
     fn stage_names() {
         assert_eq!(CaqrStage::Factor.name(), "factor");
         assert_eq!(CaqrStage::Update.name(), "update");
+    }
+
+    #[test]
+    fn pair_wipe_kills_both_buddies() {
+        let w = PairWipeSchedule::new(3, 1, CaqrStage::Update);
+        assert_eq!(w.pair(), (2, 3));
+        assert_eq!(PairWipeSchedule::new(2, 1, CaqrStage::Update).pair(), (2, 3));
+        assert_eq!(
+            w.kills(),
+            vec![(2, 1, CaqrStage::Update), (3, 1, CaqrStage::Update)]
+        );
+        let s = w.schedule();
+        assert!(s.fire(2, 1, CaqrStage::Update));
+        assert!(s.fire(3, 1, CaqrStage::Update));
+        assert_eq!(s.remaining(), 0);
     }
 }

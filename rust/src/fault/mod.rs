@@ -6,6 +6,6 @@ pub mod caqr;
 pub mod injector;
 pub mod scenario;
 
-pub use caqr::{CaqrKillSchedule, CaqrStage};
+pub use caqr::{CaqrKillSchedule, CaqrStage, PairWipeSchedule};
 pub use injector::KillSchedule;
 pub use scenario::Scenario;

@@ -86,11 +86,41 @@
 //! assert!(res.success() && res.verification.unwrap().ok);
 //! ```
 //!
-//! See `docs/PAPER_MAP.md` for the section-by-section map from both
-//! papers to the types and functions implementing them.
+//! ## Beyond replication: the checksum ABFT layer
+//!
+//! Replication tolerates one loss per replica pair; the [`abft`]
+//! subsystem survives the *pair wipe* — both copies of a task gone in
+//! one stage — by encoding `c` Vandermonde checksum blocks per panel
+//! stage and reconstructing lost results algebraically (the
+//! `Replica → Checksum → Abort` recovery ladder,
+//! [`abft::RecoveryPolicy`]):
+//!
+//! ```
+//! use ft_tsqr::abft::RecoveryPolicy;
+//! use ft_tsqr::caqr::CaqrSpec;
+//! use ft_tsqr::engine::Engine;
+//! use ft_tsqr::fault::{CaqrStage, PairWipeSchedule};
+//! use ft_tsqr::tsqr::Algo;
+//!
+//! let engine = Engine::builder().host_only()
+//!     .recovery_policy(RecoveryPolicy::Hybrid).build().unwrap();
+//! let spec = CaqrSpec::new(Algo::SelfHealing, 4, 24, 12, 4)
+//!     .with_checksums(1)
+//!     .with_schedule(PairWipeSchedule::new(2, 0, CaqrStage::Update).schedule());
+//! let res = engine.run_caqr(spec).unwrap();
+//! assert!(res.success(), "fatal under replication alone");
+//! assert_eq!(res.metrics.pair_wipes_survived, 1);
+//! ```
+//!
+//! See `docs/ARCHITECTURE.md` for the layer-by-layer walkthrough of
+//! the whole stack, `docs/TUTORIAL.md` (mirrored as the runnable
+//! [`tutorial`] module) for the end-to-end guided tour, and
+//! `docs/PAPER_MAP.md` for the section-by-section map from the papers
+//! to the types and functions implementing them.
 
 #![warn(missing_docs)]
 
+pub mod abft;
 pub mod analysis;
 pub mod caqr;
 pub mod checkpoint;
@@ -105,5 +135,8 @@ pub mod runtime;
 pub mod tsqr;
 pub mod ulfm;
 pub mod util;
+
+#[doc = include_str!("../../docs/TUTORIAL.md")]
+pub mod tutorial {}
 
 pub use error::{Error, Result};

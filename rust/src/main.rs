@@ -20,6 +20,7 @@
 //! submits through it.  Argument parsing is hand-rolled (`--flag
 //! value`), since the vendored crate set has no clap; see `Args` below.
 
+use ft_tsqr::abft::RecoveryPolicy;
 use ft_tsqr::analysis::{CaqrSweep, FullSimSweep, SurvivalSweep, max_tolerated_by_step};
 use ft_tsqr::caqr::{CaqrScenario, CaqrSpec};
 use ft_tsqr::config::{Config, FailureConfig};
@@ -43,6 +44,7 @@ USAGE:
                  [--cols N] [--panel B] [--seed S] [--scenario NAME]
                  [--kill-update r@p,...] [--kill-factor r@p,...]
                  [--profile K] [--threads N]
+                 [--policy replica|checksum|hybrid] [--checksums C]
                  [--sweep [--f F] [--trials T]]
   repro validate [--procs P] [--trials T]
   repro info     [--artifact-dir DIR]
@@ -52,6 +54,9 @@ USAGE:
   K: reference|blocked   (kernel profile: bitwise-pinned vs compact-WY fast path)
   --threads N pre-spawns N pool workers (removes first-run spawn jitter;
   the pool stays elastic and may still grow under load)
+  --policy picks the recovery ladder (replica = papers' replication only;
+  hybrid = replication + --checksums C Vandermonde checksum blocks, which
+  survives pair wipes that replication alone cannot)
 ";
 
 /// Tiny `--key value` / `--flag` parser.
@@ -343,9 +348,21 @@ fn cmd_caqr(args: &Args) -> Result<()> {
     let seed = args.parse_flag::<u64>("seed")?.unwrap_or(42);
     let profile = args.parse_flag::<KernelProfile>("profile")?.unwrap_or_default();
     let threads = args.parse_flag::<usize>("threads")?.unwrap_or(0);
+    let policy = args.parse_flag::<RecoveryPolicy>("policy")?.unwrap_or_default();
+    let checksums = args.parse_flag::<usize>("checksums")?.unwrap_or(0);
+    // The resolved arming: a non-checksum ladder never encodes, so a
+    // stray --checksums must not read as armed protection.
+    let armed = if policy.uses_checksums() { checksums } else { 0 };
+    if checksums > 0 && armed == 0 {
+        eprintln!(
+            "note: --checksums {checksums} is ignored under --policy {policy} \
+             (use --policy checksum or hybrid to arm the checksum rung)"
+        );
+    }
     let engine = ft_tsqr::engine::Engine::builder()
         .host_only()
         .kernel_profile(profile)
+        .recovery_policy(policy)
         .prewarm(threads)
         .build()?;
 
@@ -358,11 +375,12 @@ fn cmd_caqr(args: &Args) -> Result<()> {
             .with_panel(panel)
             .with_samples(trials)
             .with_seed(seed)
+            .with_checksums(armed)
             .with_concurrency(4);
         let mut table = Table::new(
             format!(
-                "P(complete) — CAQR {} on {procs} procs, {f} update-stage failures \
-                 ({trials} runs/cell)",
+                "P(complete) — CAQR {} on {procs} procs, {f} update-stage failures, \
+                 policy {policy} c={armed} ({trials} runs/cell)",
                 algo.name()
             ),
             &["panels", "matrix", "P(complete)"],
@@ -389,7 +407,7 @@ fn cmd_caqr(args: &Args) -> Result<()> {
             ))
         })?;
         println!("# {} — {}", sc.name, sc.description);
-        sc.spec(rows, cols, panel).with_seed(seed)
+        sc.spec(rows, cols, panel).with_seed(seed).with_checksums(armed)
     } else {
         let mut kills: Vec<(usize, usize, CaqrStage)> = Vec::new();
         if let Some(k) = args.get("kill-update") {
@@ -404,12 +422,13 @@ fn cmd_caqr(args: &Args) -> Result<()> {
         }
         CaqrSpec::new(algo, procs, rows, cols, panel)
             .with_seed(seed)
+            .with_checksums(armed)
             .with_schedule(CaqrKillSchedule::at(&kills))
     };
 
     spec.validate()?; // before plan(): the plan asserts what validate reports
     println!(
-        "caqr: algo={} procs={} matrix={}x{} panel={} panels={} profile={}",
+        "caqr: algo={} procs={} matrix={}x{} panel={} panels={} profile={} policy={} checksums={}",
         spec.algo.name(),
         spec.procs,
         spec.m,
@@ -417,30 +436,45 @@ fn cmd_caqr(args: &Args) -> Result<()> {
         spec.panel,
         spec.plan().panels(),
         profile,
+        policy,
+        armed,
     );
     let res = engine.run_caqr(spec)?;
     for ps in &res.panel_survival {
         println!(
-            "panel {}: alive_after={} factor_recovered={} update_recoveries={} respawns={}",
-            ps.panel, ps.alive_after, ps.factor_recovered, ps.update_recoveries, ps.respawns
+            "panel {}: alive_after={} factor_recovered={} update_recoveries={} \
+             reconstructions={} respawns={}",
+            ps.panel,
+            ps.alive_after,
+            ps.factor_recovered,
+            ps.update_recoveries,
+            ps.checksum_reconstructions,
+            ps.respawns
         );
     }
     println!(
-        "success={} dead={} panels_completed={}/{} update_tasks={} recoveries={} respawns={} \
-         lookahead_hits={} panel_stall={:?} wall={:?}",
+        "success={} dead={} panels_completed={}/{} update_tasks={} recoveries={} \
+         reconstructions={} pair_wipes_survived={} respawns={} lookahead_hits={} \
+         panel_stall={:?} wall={:?}",
         res.success(),
         res.dead_count(),
         res.metrics.panels_completed,
         res.panels,
         res.metrics.update_tasks,
         res.metrics.update_recoveries,
+        res.metrics.checksum_reconstructions,
+        res.metrics.pair_wipes_survived,
         res.metrics.respawns,
         res.metrics.lookahead_hits,
         std::time::Duration::from_nanos(res.metrics.panel_stall_ns),
         res.wall,
     );
     if let Some((panel, stage)) = res.failed_at {
-        println!("FAILED at panel {panel}, {} stage: a replica pair was wiped", stage.name());
+        println!(
+            "FAILED at panel {panel}, {} stage: losses exceeded the {} ladder",
+            stage.name(),
+            res.policy,
+        );
     }
     if let Some(v) = &res.verification {
         println!(

@@ -250,6 +250,40 @@ mod tests {
     }
 
     #[test]
+    fn provisional_warn_path_names_its_reason_and_keeps_the_drop_visible() {
+        // The warn path must stay a *warning* (Pass) yet say WHY it did
+        // not gate, and carry the drop text — otherwise a provisional
+        // baseline silently hides real regressions from the CI log.
+        let tmp = crate::util::TestDir::new();
+        let p = tmp.write(
+            "BENCH_p.json",
+            r#"{"bench":"p","quick":true,"provisional":true,"speedup":2.0}"#,
+        );
+        match regress_check("p", p.to_str().unwrap(), &[("speedup", 0.5)], 0.20, true) {
+            Regression::Pass(msg) => {
+                assert!(msg.contains("PROVISIONAL"), "must name the escape hatch: {msg}");
+                assert!(msg.contains("speedup"), "must keep the dropped metric visible: {msg}");
+                assert!(msg.contains("-75.0%"), "must quantify the drop: {msg}");
+            }
+            other => panic!("provisional drop must warn, not {other:?}"),
+        }
+        // Mode mismatch is the other warn reason, and it must say so.
+        let q = tmp.write("BENCH_q.json", r#"{"bench":"q","quick":true,"speedup":2.0}"#);
+        match regress_check("q", q.to_str().unwrap(), &[("speedup", 0.5)], 0.20, false) {
+            Regression::Pass(msg) => {
+                assert!(msg.contains("MODE-MISMATCHED"), "must name the reason: {msg}");
+            }
+            other => panic!("mode-mismatched drop must warn, not {other:?}"),
+        }
+        // A provisional baseline with NO drop passes with the normal
+        // within-tolerance message (no scare words).
+        match regress_check("p", p.to_str().unwrap(), &[("speedup", 2.1)], 0.20, true) {
+            Regression::Pass(msg) => assert!(!msg.contains("PROVISIONAL"), "{msg}"),
+            other => panic!("clean provisional run must pass, not {other:?}"),
+        }
+    }
+
+    #[test]
     fn duration_formatting() {
         assert!(fmt_duration(Duration::from_nanos(50)).ends_with("ns"));
         assert!(fmt_duration(Duration::from_micros(50)).ends_with("µs"));

@@ -322,6 +322,36 @@ impl Executor {
         let mut out = self.call(KernelOp::BuildQ, &[f.packed.as_view(), f.tau.as_view()])?;
         Ok(out.pop().expect("arity 1"))
     }
+
+    /// ABFT: encode one weighted checksum block over `blocks`
+    /// (`weights` is `1 × blocks.len()`; see
+    /// [`crate::abft::kernels::encode_checksum_into`]).  Scratch comes
+    /// from the pooled workspaces, like every other op.
+    pub fn encode_checksum(&self, weights: &Matrix, blocks: &[&Matrix]) -> Result<Matrix> {
+        let views: Vec<MatrixView<'_>> = std::iter::once(weights.as_view())
+            .chain(blocks.iter().map(|b| b.as_view()))
+            .collect();
+        let mut out = self.call(KernelOp::EncodeChecksum, &views)?;
+        Ok(out.pop().expect("arity 1"))
+    }
+
+    /// ABFT: reconstruct one lost block from one checksum and the
+    /// survivors (`weights` is `1 × (survivors.len() + 1)` with the
+    /// lost block's weight first; see
+    /// [`crate::abft::kernels::reconstruct_block_into`]).
+    pub fn reconstruct_block(
+        &self,
+        weights: &Matrix,
+        checksum: &Matrix,
+        survivors: &[&Matrix],
+    ) -> Result<Matrix> {
+        let views: Vec<MatrixView<'_>> = [weights.as_view(), checksum.as_view()]
+            .into_iter()
+            .chain(survivors.iter().map(|b| b.as_view()))
+            .collect();
+        let mut out = self.call(KernelOp::ReconstructBlock, &views)?;
+        Ok(out.pop().expect("arity 1"))
+    }
 }
 
 #[cfg(test)]
@@ -432,6 +462,30 @@ mod tests {
         let s1 = ex.workspace_stats();
         assert_eq!(s1.created, 2, "warmed pool serves the call");
         assert_eq!(s1.reused, 1);
+    }
+
+    #[test]
+    fn checksum_ops_roundtrip_through_the_dispatch() {
+        // A leaf panel split into row blocks: encode a plain-sum
+        // checksum, lose one block, reconstruct it through the same
+        // &dyn Kernel dispatch the factor/update ops use.
+        let ex = Executor::host();
+        let blocks: Vec<Matrix> = (0..3).map(|s| Matrix::random(8, 4, s)).collect();
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        let weights = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        let sum = ex.encode_checksum(&weights, &refs).unwrap();
+        assert_eq!(sum.shape(), (8, 4));
+        let got = ex
+            .reconstruct_block(&weights, &sum, &[&blocks[0], &blocks[2]])
+            .unwrap();
+        assert!(got.max_abs_diff(&blocks[1]) < 1e-5, "lost row block must reconstruct");
+        // Pooled scratch: steady state creates nothing.
+        let before = ex.workspace_stats();
+        for _ in 0..4 {
+            ex.encode_checksum(&weights, &refs).unwrap();
+        }
+        assert_eq!(ex.workspace_stats().created, before.created);
+        assert_eq!(ex.workspace_stats().reused, before.reused + 4);
     }
 
     #[test]

@@ -106,6 +106,17 @@ pub enum KernelOp {
     ApplyWy,
     /// Materialize the thin Q of a packed factorization → `[q]`.
     BuildQ,
+    /// ABFT: encode one Vandermonde-weighted checksum block over `N`
+    /// data blocks → `[checksum]` (views: `[weights (1×N), block_0,
+    /// …, block_{N−1}]`; see
+    /// [`crate::abft::kernels::encode_checksum_into`]).
+    EncodeChecksum,
+    /// ABFT: reconstruct one lost block from one checksum and the
+    /// `N − 1` survivors → `[block]` (views: `[weights (1×N,
+    /// lost-first), checksum, survivor_0, …]`; see
+    /// [`crate::abft::kernels::reconstruct_block_into`]).  Multi-loss
+    /// solves run coordinator-side through [`crate::abft::Encoder`].
+    ReconstructBlock,
 }
 
 impl KernelOp {
@@ -129,6 +140,16 @@ impl KernelOp {
                 Manifest::apply_wy_name(views[0].rows(), views[0].cols(), views[2].cols())
             }
             KernelOp::BuildQ => Manifest::build_q_name(views[0].rows(), views[0].cols()),
+            KernelOp::EncodeChecksum => Manifest::encode_checksum_name(
+                views[1].rows(),
+                views[1].cols(),
+                views.len() - 1,
+            ),
+            KernelOp::ReconstructBlock => Manifest::reconstruct_block_name(
+                views[1].rows(),
+                views[1].cols(),
+                views.len() - 1,
+            ),
         }
     }
 }
@@ -169,10 +190,10 @@ impl Kernel for HostKernel {
 
     fn wants_workspace(&self, op: KernelOp) -> bool {
         // Factorizations, the CAQR trailing updates (rank-1 and
-        // compact-WY), and the T build run through the f64 scratch
-        // arena (the WY ops additionally draw their GEMM packing
-        // buffers from it); the solve/apply kernels work in place on
-        // their outputs.
+        // compact-WY), the T build, and the ABFT checksum ops run
+        // through the f64 scratch arena (the WY ops additionally draw
+        // their GEMM packing buffers from it); the solve/apply kernels
+        // work in place on their outputs.
         matches!(
             op,
             KernelOp::LeafQr
@@ -182,6 +203,8 @@ impl Kernel for HostKernel {
                 | KernelOp::ApplyUpdate
                 | KernelOp::BuildT
                 | KernelOp::ApplyWy
+                | KernelOp::EncodeChecksum
+                | KernelOp::ReconstructBlock
         )
     }
 
@@ -254,6 +277,31 @@ impl Kernel for HostKernel {
                 let (m, n) = v[0].shape();
                 let mut out = Matrix::eye(m, n);
                 view::apply_q_in_place(v[0], v[1].data(), &mut out.as_view_mut());
+                Ok(vec![out])
+            }
+            KernelOp::EncodeChecksum => {
+                // views: [weights (1×N), block_0, …]; pad = widest block.
+                let blocks = &v[1..];
+                let pad = blocks.iter().map(|b| b.cols()).max().unwrap_or(0);
+                let mut out = Matrix::zeros(blocks[0].rows(), pad);
+                crate::abft::kernels::encode_checksum_into(
+                    v[0],
+                    blocks,
+                    &mut out.as_view_mut(),
+                    ws,
+                );
+                Ok(vec![out])
+            }
+            KernelOp::ReconstructBlock => {
+                // views: [weights (1×N, lost-first), checksum, survivors…].
+                let mut out = Matrix::zeros(v[1].rows(), v[1].cols());
+                crate::abft::kernels::reconstruct_block_into(
+                    v[0],
+                    v[1],
+                    &v[2..],
+                    &mut out.as_view_mut(),
+                    ws,
+                );
                 Ok(vec![out])
             }
         }
@@ -427,6 +475,15 @@ mod tests {
         assert_eq!(
             KernelOp::Backsolve.entry_name(&[b.as_view(), Matrix::zeros(4, 2).as_view()]),
             Manifest::backsolve_name(4, 2)
+        );
+        let w = Matrix::zeros(1, 2);
+        assert_eq!(
+            KernelOp::EncodeChecksum.entry_name(&[w.as_view(), b.as_view(), b.as_view()]),
+            Manifest::encode_checksum_name(4, 4, 2)
+        );
+        assert_eq!(
+            KernelOp::ReconstructBlock.entry_name(&[w.as_view(), b.as_view(), b.as_view()]),
+            Manifest::reconstruct_block_name(4, 4, 2)
         );
     }
 

@@ -154,6 +154,17 @@ impl Manifest {
     pub fn build_q_name(m: usize, n: usize) -> String {
         format!("build_q_{m}x{n}")
     }
+    /// `encode_checksum_{m}x{k}x{b}` — the ABFT checksum-encode kernel
+    /// (`m` rows, `k` padded columns, `b` data blocks).
+    pub fn encode_checksum_name(m: usize, k: usize, b: usize) -> String {
+        format!("encode_checksum_{m}x{k}x{b}")
+    }
+    /// `reconstruct_block_{m}x{k}x{b}` — the ABFT single-loss
+    /// reconstruction kernel (`m` rows, `k` padded columns, `b` data
+    /// blocks counting the lost one).
+    pub fn reconstruct_block_name(m: usize, k: usize, b: usize) -> String {
+        format!("reconstruct_block_{m}x{k}x{b}")
+    }
 }
 
 #[cfg(test)]

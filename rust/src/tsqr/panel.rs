@@ -152,6 +152,24 @@ impl PanelPlan {
         (self.update_blocks(k) > 0).then_some(0)
     }
 
+    /// Ranks that hold checksum task `l` of panel `k`'s stages (ABFT,
+    /// `crate::abft`): two ranks drawn from **different** replica
+    /// pairs, rotating from the top of the world so checksums land
+    /// away from the low-ranked data-task owners.  Spreading the two
+    /// holders across pairs is what makes any *single* pair wipe
+    /// unable to take a checksum down with the data it protects.
+    /// Single-rank (and two-rank) worlds degenerate to one holder.
+    pub fn checksum_assignees(&self, k: usize, l: usize) -> Vec<Rank> {
+        if self.procs < 2 {
+            return vec![0];
+        }
+        let groups = self.procs / 2;
+        let g = groups - 1 - ((k + l) % groups);
+        let a = 2 * g;
+        let b = (a + 2) % self.procs;
+        if b == a { vec![a] } else { vec![a, b] }
+    }
+
     /// Copies of every CAQR task result (2 on multi-process worlds):
     /// the per-panel tolerated-failure count is `replication() - 1`,
     /// the CAQR analogue of the paper's `2^s - 1`.
@@ -232,6 +250,25 @@ mod tests {
                 None => assert_eq!(k, p.panels() - 1, "only the last panel has no lookahead"),
             }
         }
+    }
+
+    #[test]
+    fn checksum_assignees_straddle_distinct_pairs() {
+        let p = PanelPlan::new(64, 32, 8, 8);
+        for k in 0..p.panels() {
+            for l in 0..4 {
+                let a = p.checksum_assignees(k, l);
+                assert_eq!(a.len(), 2);
+                assert_ne!(a[0] / 2, a[1] / 2, "holders must sit in different pairs");
+            }
+        }
+        // P=4: always one holder in each pair.
+        let q = PanelPlan::new(16, 8, 4, 4);
+        assert_eq!(q.checksum_assignees(0, 0), vec![2, 0]);
+        assert_eq!(q.checksum_assignees(1, 0), vec![0, 2]);
+        // Degenerate worlds collapse to a single holder.
+        assert_eq!(PanelPlan::new(16, 8, 4, 2).checksum_assignees(0, 0), vec![0]);
+        assert_eq!(PanelPlan::new(16, 8, 4, 1).checksum_assignees(3, 2), vec![0]);
     }
 
     #[test]

@@ -127,7 +127,8 @@ pub struct MetricsSnapshot {
     pub respawns: u64,
     /// CAQR: panels whose factor + updates fully completed.
     pub panels_completed: u64,
-    /// CAQR: trailing-update task executions (replicas included) —
+    /// CAQR: trailing-update task executions (replicas and, when a
+    /// checksum policy is armed, checksum-update tasks included) —
     /// the redundant computation the fault tolerance is paid with.
     pub update_tasks: u64,
     /// CAQR: trailing-update blocks whose owner was dead at harvest
@@ -141,6 +142,14 @@ pub struct MetricsSnapshot {
     /// panel-factor results — the critical-path gap lookahead shrinks
     /// (panel 0 always pays its full factor latency here).
     pub panel_stall_ns: u64,
+    /// ABFT: task results (trailing-update blocks, panel-input row
+    /// shards) rebuilt algebraically from checksums after every
+    /// replica of the task was lost (`crate::abft::Encoder`).
+    pub checksum_reconstructions: u64,
+    /// ABFT: `(panel, stage)` events where some task had lost **every**
+    /// replica — fatal under replication alone — and the checksum rung
+    /// of the recovery ladder carried the run past it.
+    pub pair_wipes_survived: u64,
 }
 
 impl MetricsSnapshot {
@@ -157,6 +166,8 @@ impl MetricsSnapshot {
         self.update_recoveries += other.update_recoveries;
         self.lookahead_hits += other.lookahead_hits;
         self.panel_stall_ns += other.panel_stall_ns;
+        self.checksum_reconstructions += other.checksum_reconstructions;
+        self.pair_wipes_survived += other.pair_wipes_survived;
     }
 }
 

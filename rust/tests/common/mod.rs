@@ -1,0 +1,58 @@
+//! Helpers shared by the CAQR/ABFT integration suites: bit-pattern
+//! extraction, the exhaustive `(rank, panel, stage)` strike
+//! enumeration, and the `c·n·ε·‖A‖`-style accuracy bound.
+//!
+//! Each integration test binary compiles its own copy (`mod common;`),
+//! so not every helper is used everywhere — hence the allow.
+#![allow(dead_code)]
+
+use ft_tsqr::fault::CaqrStage;
+use ft_tsqr::linalg::Matrix;
+
+/// The f32 bit patterns of a matrix — the currency of every bitwise
+/// pin in these suites (NaN-safe, unlike `==` on floats).
+pub fn bits(m: &Matrix) -> Vec<u32> {
+    m.data().iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every single-process `(rank, panel, stage)` strike in a
+/// `procs`-rank, `panels`-panel run — the exhaustive enumeration the
+/// recovery suites sweep.  Deterministic order: stage-major
+/// (update first), then rank, then panel.
+pub fn all_single_strikes(
+    procs: usize,
+    panels: usize,
+) -> Vec<(usize, usize, CaqrStage)> {
+    let mut out = Vec::with_capacity(2 * procs * panels);
+    for stage in [CaqrStage::Update, CaqrStage::Factor] {
+        for rank in 0..procs {
+            for panel in 0..panels {
+                out.push((rank, panel, stage));
+            }
+        }
+    }
+    out
+}
+
+/// Column-wise accuracy bound:
+/// `‖got[:,j] − want[:,j]‖_∞ ≤ scale · cols · ε_f32 · max(‖A‖_F, 1)`.
+///
+/// `scale` absorbs the modest constants of the path under test (64
+/// for the compact-WY reassociation, `64·c` for checksum
+/// reconstruction round-trips).
+pub fn assert_columnwise_close(got: &Matrix, want: &Matrix, a: &Matrix, scale: f64, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape mismatch");
+    let (rows, cols) = got.shape();
+    let norm_a: f64 = a.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    let bound = scale * cols as f64 * f32::EPSILON as f64 * norm_a.max(1.0);
+    for j in 0..cols {
+        let mut max_diff = 0.0f64;
+        for i in 0..rows {
+            max_diff = max_diff.max((got[(i, j)] as f64 - want[(i, j)] as f64).abs());
+        }
+        assert!(
+            max_diff <= bound,
+            "{what}: column {j} off by {max_diff:.3e} > bound {bound:.3e}"
+        );
+    }
+}

@@ -1,0 +1,190 @@
+//! Markdown link-and-anchor checker over `README.md` and `docs/*.md`
+//! — the docs-CI gate: a dead relative link or a dangling `#anchor`
+//! fails `cargo test --test docs_links` (and therefore the `docs` CI
+//! job), so the documentation system cannot silently rot as files
+//! move.
+//!
+//! Scope: inline `[text](target)` links outside fenced code blocks.
+//! External schemes (`http://`, `https://`, `mailto:`) are skipped —
+//! this gate is about *repository* integrity, not the internet.
+//! Anchors are checked against GitHub-style heading slugs of the
+//! target markdown file.
+
+use std::collections::HashSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The repository root (this crate lives in `<root>/rust`).
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf()
+}
+
+/// README.md plus every markdown file under docs/, sorted.
+fn doc_files() -> Vec<PathBuf> {
+    let root = repo_root();
+    let mut files = vec![root.join("README.md")];
+    let mut docs: Vec<PathBuf> = fs::read_dir(root.join("docs"))
+        .expect("docs/ directory exists")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "md"))
+        .collect();
+    docs.sort();
+    files.extend(docs);
+    files
+}
+
+/// Inline `[text](target)` targets, skipping fenced code blocks.
+fn extract_links(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let bytes = line.as_bytes();
+        let mut i = 0;
+        while i + 1 < bytes.len() {
+            if bytes[i] == b']' && bytes[i + 1] == b'(' {
+                if let Some(end) = line[i + 2..].find(')') {
+                    out.push(line[i + 2..i + 2 + end].to_string());
+                    i += 2 + end;
+                } else {
+                    break;
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// GitHub-style heading slug: lowercase, alphanumerics and
+/// hyphens/underscores kept, spaces become hyphens, everything else
+/// dropped.
+fn slug(heading: &str) -> String {
+    heading
+        .chars()
+        .filter_map(|c| {
+            let c = c.to_ascii_lowercase();
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                Some(c)
+            } else if c == ' ' {
+                Some('-')
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Slugs of every ATX heading (`#`–`######`) outside code fences.
+fn heading_slugs(text: &str) -> HashSet<String> {
+    let mut out = HashSet::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        let t = line.trim_start();
+        if t.starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence || !t.starts_with('#') {
+            continue;
+        }
+        out.insert(slug(t.trim_start_matches('#').trim()));
+    }
+    out
+}
+
+/// Check one markdown file; returns human-readable problems.
+fn check_file(path: &Path) -> Vec<String> {
+    let text = fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+    let dir = path.parent().expect("doc file has a parent dir");
+    let mut problems = Vec::new();
+    for link in extract_links(&text) {
+        if link.starts_with("http://")
+            || link.starts_with("https://")
+            || link.starts_with("mailto:")
+        {
+            continue;
+        }
+        let (target, anchor) = match link.split_once('#') {
+            Some((t, a)) => (t, Some(a.to_string())),
+            None => (link.as_str(), None),
+        };
+        let target_path =
+            if target.is_empty() { path.to_path_buf() } else { dir.join(target) };
+        if !target_path.exists() {
+            problems.push(format!("{}: dead link '{link}'", path.display()));
+            continue;
+        }
+        if let Some(anchor) = anchor {
+            if target_path.extension().is_some_and(|e| e == "md") {
+                let ttext = fs::read_to_string(&target_path)
+                    .unwrap_or_else(|e| panic!("cannot read {}: {e}", target_path.display()));
+                if !heading_slugs(&ttext).contains(&anchor) {
+                    problems.push(format!(
+                        "{}: link '{link}' points at missing anchor '#{anchor}' in {}",
+                        path.display(),
+                        target_path.display()
+                    ));
+                }
+            }
+        }
+    }
+    problems
+}
+
+#[test]
+fn every_repo_doc_link_and_anchor_resolves() {
+    let files = doc_files();
+    assert!(files.len() >= 4, "README + at least 3 docs expected, found {files:?}");
+    let mut problems = Vec::new();
+    let mut checked = 0usize;
+    for f in &files {
+        problems.extend(check_file(f));
+        checked += 1;
+    }
+    assert!(checked >= 4);
+    assert!(
+        problems.is_empty(),
+        "documentation link check failed:\n  {}",
+        problems.join("\n  ")
+    );
+}
+
+#[test]
+fn checker_catches_dead_links_and_missing_anchors() {
+    // Fixture sanity: the gate must actually be able to fail.
+    let tmp = ft_tsqr::util::TestDir::new();
+    tmp.write("real.md", "# A Real Heading\n\nbody\n");
+    let bad = tmp.write(
+        "bad.md",
+        "[ok](real.md) [dead](missing.md) [anchor](real.md#a-real-heading) \
+         [bad-anchor](real.md#nope)\n",
+    );
+    let problems = check_file(&bad);
+    assert_eq!(problems.len(), 2, "exactly the dead link and the bad anchor: {problems:?}");
+    assert!(problems[0].contains("missing.md"));
+    assert!(problems[1].contains("#nope"));
+}
+
+#[test]
+fn slugs_and_link_extraction_follow_the_conventions() {
+    assert_eq!(slug("The module diagram"), "the-module-diagram");
+    assert_eq!(
+        slug("Cross-cutting invariants (the contracts tests pin)"),
+        "cross-cutting-invariants-the-contracts-tests-pin"
+    );
+    assert_eq!(slug("§III-A — TSQR itself"), "iii-a--tsqr-itself");
+    let text = "pre [a](x.md) mid [b](y.md#h) post\n```\n[not](a-link.md)\n```\n[c](z.md)\n";
+    assert_eq!(extract_links(text), vec!["x.md", "y.md#h", "z.md"]);
+}

@@ -19,8 +19,10 @@
 
 use std::collections::HashMap;
 
+use ft_tsqr::abft::RecoveryPolicy;
 use ft_tsqr::analysis::{
-    FullSimSweep, max_tolerated_by_step, self_healing_total_tolerated, survives_failure_set,
+    CodedSweep, FullSimSweep, max_tolerated_by_step, self_healing_total_tolerated,
+    survives_failure_set,
 };
 use ft_tsqr::caqr::CaqrSpec;
 use ft_tsqr::engine::Engine;
@@ -178,4 +180,32 @@ fn caqr_tolerates_exactly_replication_minus_one_per_panel_step() {
         .unwrap();
     assert!(sh.success());
     assert_eq!(sh.metrics.respawns, panels as u64);
+}
+
+#[test]
+fn hybrid_checksum_ladder_extends_the_tolerated_counts() {
+    // The recovery-ladder rows of the matrix: under the adversarial
+    // pair-completing kill order (CodedSweep: 1, 0, 3, 2, …, all
+    // during panel 0's update stage, Redundant semantics) the papers'
+    // replication dies at the first completed pair (tolerated = 1),
+    // while the hybrid ladder keeps riding until its c checksums are
+    // exhausted.  The counts are exact and deterministic.
+    let engine = Engine::host();
+    // (procs, policy, checksums, tolerated adversarial failures).
+    let table: &[(usize, RecoveryPolicy, usize, usize)] = &[
+        (4, RecoveryPolicy::Replica, 0, 1),
+        (4, RecoveryPolicy::Hybrid, 1, 3),
+        (4, RecoveryPolicy::Hybrid, 2, 3), // f=4 kills the whole world
+        (8, RecoveryPolicy::Replica, 0, 1),
+        (8, RecoveryPolicy::Hybrid, 1, 3),
+        (8, RecoveryPolicy::Hybrid, 3, 5),
+    ];
+    for &(procs, policy, c, want) in table {
+        let sweep = CodedSweep::new(&engine, procs).with_panel(4);
+        assert_eq!(
+            sweep.tolerated_failures(policy, c).unwrap(),
+            want,
+            "P={procs} {policy} c={c}: tolerated count must match the ladder's capacity"
+        );
+    }
 }

@@ -1,0 +1,348 @@
+//! Integration tests for the checksum-coded ABFT layer (`abft` +
+//! the recovery ladder in `caqr/exec.rs`).
+//!
+//! The contract under test (the acceptance criteria of the subsystem):
+//!
+//! 1. **Bitwise bystander** — with zero failures, a checksummed run
+//!    (any policy, any `c`) reproduces the un-checksummed
+//!    factorization bit for bit.
+//! 2. **Pair-wipe survival** — for EVERY `(rank, panel, stage)` pair
+//!    wipe, the `Hybrid` ladder with `c = 1` completes within the
+//!    `c·n·ε·‖A‖` reconstruction bound, while replication-only on the
+//!    same schedule aborts (whenever the wipe actually cost a task its
+//!    last copy).
+//! 3. **Tightness** — `c` checksums tolerate exactly `c` wiped tasks
+//!    in one stage; `c + 1` aborts.
+//! 4. **Determinism** — reconstruction is bit-reproducible run to run
+//!    and campaign-concurrency-independent.
+//! 5. **Inheritance** — the engine-level `recovery_policy` default
+//!    applies to specs that don't pin one; spec pins win.
+
+mod common;
+
+use common::{all_single_strikes, bits};
+use ft_tsqr::abft::RecoveryPolicy;
+use ft_tsqr::caqr::CaqrSpec;
+use ft_tsqr::engine::Engine;
+use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage, PairWipeSchedule};
+use ft_tsqr::runtime::KernelProfile;
+use ft_tsqr::tsqr::Algo;
+
+#[test]
+fn zero_failure_checksummed_runs_are_bitwise_identical() {
+    let engine = Engine::host();
+    let (procs, m, n, panel) = (4usize, 24usize, 12usize, 4usize);
+    let clean = engine.run_caqr(CaqrSpec::new(Algo::Redundant, procs, m, n, panel)).unwrap();
+    let cf = clean.factors.as_ref().unwrap();
+    for (policy, c) in [
+        (RecoveryPolicy::Hybrid, 1),
+        (RecoveryPolicy::Hybrid, 2),
+        (RecoveryPolicy::Checksum, 1),
+    ] {
+        let res = engine
+            .run_caqr(
+                CaqrSpec::new(Algo::Redundant, procs, m, n, panel)
+                    .with_policy(policy)
+                    .with_checksums(c),
+            )
+            .unwrap();
+        assert!(res.success());
+        let f = res.factors.as_ref().unwrap();
+        assert_eq!(
+            bits(&f.packed),
+            bits(&cf.packed),
+            "{policy} c={c}: checksum tasks must be pure bystanders"
+        );
+        assert_eq!(f.tau, cf.tau, "{policy} c={c}: tau must be bit-identical");
+        assert_eq!(
+            bits(res.final_r.as_ref().unwrap()),
+            bits(clean.final_r.as_ref().unwrap())
+        );
+        assert_eq!(res.metrics.checksum_reconstructions, 0);
+        assert_eq!(res.metrics.pair_wipes_survived, 0);
+    }
+}
+
+#[test]
+fn every_pair_wipe_survives_hybrid_within_the_bound_and_kills_replica() {
+    // THE acceptance property: for EVERY (rank, panel, stage) pair
+    // wipe, Hybrid with one checksum completes — bit-identical to the
+    // clean run when the wipe cost nothing, within the reconstruction
+    // bound when the checksum rung fired — and replication-only on
+    // the exact same schedule aborts precisely when the rung fired.
+    let engine = Engine::host();
+    let (procs, m, n, panel) = (4usize, 20usize, 12usize, 4usize);
+    let clean = engine.run_caqr(CaqrSpec::new(Algo::Redundant, procs, m, n, panel)).unwrap();
+    let clean_r = clean.final_r.as_ref().unwrap();
+    let a = CaqrSpec::new(Algo::Redundant, procs, m, n, panel).input_matrix();
+
+    for algo in [Algo::Redundant, Algo::SelfHealing] {
+        // Ranks 0 and 2 cover both replica pairs of a 4-rank world.
+        for (rank, panel_k, stage) in all_single_strikes(procs, clean.panels)
+            .into_iter()
+            .filter(|&(r, _, _)| r % 2 == 0)
+        {
+            let wipe = PairWipeSchedule::new(rank, panel_k, stage);
+            let what = format!("{algo:?}: wipe {:?}@{panel_k}/{}", wipe.pair(), stage.name());
+
+            let hybrid = engine
+                .run_caqr(
+                    CaqrSpec::new(algo, procs, m, n, panel)
+                        .with_schedule(wipe.schedule())
+                        .with_policy(RecoveryPolicy::Hybrid)
+                        .with_checksums(1),
+                )
+                .unwrap();
+            assert!(hybrid.success(), "{what}: hybrid must survive");
+            let hybrid_r = hybrid.final_r.as_ref().unwrap();
+            if hybrid.metrics.pair_wipes_survived == 0 {
+                // The wiped pair owned no live task at that stage: the
+                // run never left the replica rung, so the bits are
+                // untouched.
+                assert_eq!(bits(hybrid_r), bits(clean_r), "{what}: no rung, same bits");
+                assert_eq!(hybrid.metrics.checksum_reconstructions, 0);
+            } else {
+                // Reconstruction happened: pinned to the clean run
+                // within the c·n·ε·‖A‖ bound (c = 1 here).
+                common::assert_columnwise_close(hybrid_r, clean_r, &a, 64.0, &what);
+                assert!(hybrid.verification.as_ref().unwrap().ok, "{what}: must verify");
+            }
+
+            // Replication-only on the same schedule aborts exactly
+            // when the hybrid ladder had to leave the replica rung.
+            let replica = engine
+                .run_caqr(
+                    CaqrSpec::new(algo, procs, m, n, panel).with_schedule(wipe.schedule()),
+                )
+                .unwrap();
+            assert_eq!(
+                replica.success(),
+                hybrid.metrics.pair_wipes_survived == 0,
+                "{what}: replication-only must die iff the checksum rung fired \
+                 (hybrid survived {} wipes)",
+                hybrid.metrics.pair_wipes_survived,
+            );
+        }
+    }
+}
+
+#[test]
+fn factor_stage_pair_wipe_rebuilds_the_input_and_reexecutes() {
+    // Focused look at the factor rung: wiping the factor owner's pair
+    // AT the factor stage loses both copies of the factor task; the
+    // input is rebuilt from row-shard checksums and re-executed.
+    let engine = Engine::host();
+    let wipe = PairWipeSchedule::new(0, 0, CaqrStage::Factor);
+    let res = engine
+        .run_caqr(
+            CaqrSpec::new(Algo::SelfHealing, 4, 24, 12, 4)
+                .with_schedule(wipe.schedule())
+                .with_policy(RecoveryPolicy::Hybrid)
+                .with_checksums(1),
+        )
+        .unwrap();
+    assert!(res.success());
+    assert!(res.panel_survival[0].factor_recovered, "owner was dead at harvest");
+    assert!(
+        res.panel_survival[0].checksum_reconstructions >= 1,
+        "the wiped pair's input shard was rebuilt"
+    );
+    // The wiped pair also owned update block 0 of panel 0, so the
+    // update rung fired too before the boundary respawn healed the
+    // world.
+    assert!(res.metrics.pair_wipes_survived >= 1);
+    assert_eq!(res.metrics.respawns, 2);
+    assert!(res.verification.unwrap().ok);
+
+    let replica = engine
+        .run_caqr(
+            CaqrSpec::new(Algo::SelfHealing, 4, 24, 12, 4).with_schedule(wipe.schedule()),
+        )
+        .unwrap();
+    assert!(!replica.success());
+    assert_eq!(replica.failed_at, Some((0, CaqrStage::Factor)));
+}
+
+#[test]
+fn tightness_c_checksums_tolerate_exactly_c_wiped_tasks() {
+    // P=8 geometries where wiping pairs {0,1} and {2,3} during panel
+    // 0's updates loses exactly 2 (n = 3·panel) or exactly 3
+    // (n = 4·panel) update blocks.  c wiped tasks survive with c
+    // checksums; c+1 abort.
+    let engine = Engine::host();
+    let two_pairs: Vec<(usize, usize, CaqrStage)> = vec![
+        (0, 0, CaqrStage::Update),
+        (1, 0, CaqrStage::Update),
+        (2, 0, CaqrStage::Update),
+        (3, 0, CaqrStage::Update),
+    ];
+    let run = |n: usize, c: usize, kills: &[(usize, usize, CaqrStage)]| {
+        engine
+            .run_caqr(
+                CaqrSpec::new(Algo::Redundant, 8, 32, n, 4)
+                    .with_schedule(CaqrKillSchedule::at(kills))
+                    .with_policy(RecoveryPolicy::Hybrid)
+                    .with_checksums(c)
+                    .with_verify(false),
+            )
+            .unwrap()
+    };
+
+    // One wiped task (single pair wipe, n = 12 → 2 blocks, 1 lost).
+    let one_pair = PairWipeSchedule::new(0, 0, CaqrStage::Update).kills();
+    let res = run(12, 1, &one_pair);
+    assert!(res.success(), "c=1 tolerates 1 wiped task");
+    assert_eq!(res.panel_survival[0].checksum_reconstructions, 1);
+
+    // Two wiped tasks (n = 12 → blocks owned by ranks 1 and 2 both
+    // lose their pairs).
+    let res = run(12, 2, &two_pairs);
+    assert!(res.success(), "c=2 tolerates 2 wiped tasks");
+    assert_eq!(res.panel_survival[0].checksum_reconstructions, 2);
+    let res = run(12, 1, &two_pairs);
+    assert!(!res.success(), "c=1 must abort on 2 wiped tasks");
+    assert_eq!(res.failed_at, Some((0, CaqrStage::Update)));
+
+    // Three wiped tasks (n = 16 → owners 1, 2, 3 all in wiped pairs).
+    let res = run(16, 3, &two_pairs);
+    assert!(res.success(), "c=3 tolerates 3 wiped tasks");
+    assert_eq!(res.panel_survival[0].checksum_reconstructions, 3);
+    let res = run(16, 2, &two_pairs);
+    assert!(!res.success(), "c=2 must abort on 3 wiped tasks");
+    assert_eq!(res.failed_at, Some((0, CaqrStage::Update)));
+}
+
+#[test]
+fn reconstruction_is_deterministic_and_campaign_concurrency_independent() {
+    let engine = Engine::host();
+    let wipe = PairWipeSchedule::new(2, 0, CaqrStage::Update);
+    let spec = |seed: u64| {
+        CaqrSpec::new(Algo::SelfHealing, 4, 24, 12, 4)
+            .with_seed(seed)
+            .with_policy(RecoveryPolicy::Hybrid)
+            .with_checksums(1)
+            .with_schedule(wipe.schedule())
+            .with_verify(false)
+    };
+    // Run-to-run bitwise determinism of the reconstruction path.
+    let r1 = engine.run_caqr(spec(7)).unwrap();
+    let r2 = engine.run_caqr(spec(7)).unwrap();
+    assert!(r1.success() && r1.metrics.checksum_reconstructions >= 1);
+    assert_eq!(
+        bits(r1.final_r.as_ref().unwrap()),
+        bits(r2.final_r.as_ref().unwrap()),
+        "reconstruction must be bit-deterministic"
+    );
+
+    // Campaigns: identical records regardless of the concurrency
+    // window, reconstruction counters included.
+    let specs = |_| (0..6u64).map(spec);
+    let seq = engine.caqr_campaign(specs(())).run().unwrap();
+    let conc = engine.caqr_campaign(specs(())).concurrency(3).run().unwrap();
+    assert_eq!(seq.successes(), 6);
+    let key = |r: &ft_tsqr::caqr::CaqrRecord| {
+        (r.index, r.success, r.metrics.checksum_reconstructions, r.metrics.pair_wipes_survived)
+    };
+    let a: Vec<_> = seq.records.iter().map(key).collect();
+    let b: Vec<_> = conc.records.iter().map(key).collect();
+    assert_eq!(a, b, "concurrency must not change reconstruction outcomes");
+    assert_eq!(seq.metrics().pair_wipes_survived, 6, "one survived wipe per run");
+}
+
+#[test]
+fn blocked_profile_reconstruction_is_deterministic_and_verifies() {
+    // The checksum rung composes with the compact-WY fast path: the
+    // checksum-update tasks run the same WY kernel, so linearity (and
+    // determinism) hold there too.
+    let engine = Engine::host();
+    let wipe = PairWipeSchedule::new(2, 0, CaqrStage::Update);
+    let spec = || {
+        CaqrSpec::new(Algo::SelfHealing, 4, 32, 16, 4)
+            .with_profile(KernelProfile::Blocked)
+            .with_policy(RecoveryPolicy::Hybrid)
+            .with_checksums(1)
+            .with_schedule(wipe.schedule())
+    };
+    let r1 = engine.run_caqr(spec()).unwrap();
+    let r2 = engine.run_caqr(spec()).unwrap();
+    assert!(r1.success());
+    assert_eq!(r1.profile, KernelProfile::Blocked);
+    assert!(r1.metrics.checksum_reconstructions >= 1);
+    assert!(r1.verification.as_ref().unwrap().ok);
+    assert_eq!(
+        bits(r1.final_r.as_ref().unwrap()),
+        bits(r2.final_r.as_ref().unwrap()),
+        "blocked reconstruction must be bit-deterministic"
+    );
+}
+
+#[test]
+fn recovery_policy_inheritance_engine_default_and_spec_override() {
+    // Engine default applies to specs that don't pin a policy…
+    let hybrid_engine = Engine::builder()
+        .host_only()
+        .recovery_policy(RecoveryPolicy::Hybrid)
+        .build()
+        .unwrap();
+    let wipe = PairWipeSchedule::new(0, 0, CaqrStage::Update);
+    let spec = || {
+        CaqrSpec::new(Algo::SelfHealing, 4, 24, 12, 4)
+            .with_checksums(1)
+            .with_schedule(wipe.schedule())
+            .with_verify(false)
+    };
+    let res = hybrid_engine.run_caqr(spec()).unwrap();
+    assert_eq!(res.policy, RecoveryPolicy::Hybrid);
+    assert!(res.success(), "inherited hybrid ladder survives the wipe");
+
+    // …and a spec-level pin overrides it in both directions.
+    let res = hybrid_engine
+        .run_caqr(spec().with_policy(RecoveryPolicy::Replica))
+        .unwrap();
+    assert_eq!(res.policy, RecoveryPolicy::Replica);
+    assert!(!res.success(), "pinned replica-only ladder still dies on the wipe");
+
+    let replica_engine = Engine::host();
+    let res = replica_engine.run_caqr(spec()).unwrap();
+    assert_eq!(res.policy, RecoveryPolicy::Replica, "host engine defaults to replica");
+    assert!(!res.success());
+    let res = replica_engine
+        .run_caqr(spec().with_policy(RecoveryPolicy::Hybrid))
+        .unwrap();
+    assert!(res.success(), "pinned hybrid ladder survives on a replica-default engine");
+
+    // Campaigns inherit through the same adopt path.
+    let report = hybrid_engine
+        .caqr_campaign((0..4u64).map(|s| spec().with_seed(s)))
+        .concurrency(2)
+        .run()
+        .unwrap();
+    assert_eq!(report.successes(), 4, "campaign members inherit the hybrid ladder");
+}
+
+#[test]
+fn checksum_only_policy_survives_on_the_cheap_redundancy() {
+    // The coded-computing end of the spectrum: no replicated tasks at
+    // all, c checksums carry single losses.
+    let engine = Engine::host();
+    let clean = engine.run_caqr(CaqrSpec::new(Algo::Redundant, 4, 20, 12, 4)).unwrap();
+    let res = engine
+        .run_caqr(
+            CaqrSpec::new(Algo::SelfHealing, 4, 20, 12, 4)
+                .with_policy(RecoveryPolicy::Checksum)
+                .with_checksums(2)
+                .with_schedule(CaqrKillSchedule::at(&[(1, 0, CaqrStage::Update)])),
+        )
+        .unwrap();
+    assert!(res.success());
+    assert_eq!(res.metrics.update_recoveries, 0, "there are no replicas to harvest");
+    assert!(res.metrics.checksum_reconstructions >= 1);
+    let a = CaqrSpec::new(Algo::Redundant, 4, 20, 12, 4).input_matrix();
+    common::assert_columnwise_close(
+        res.final_r.as_ref().unwrap(),
+        clean.final_r.as_ref().unwrap(),
+        &a,
+        128.0,
+        "checksum-only reconstruction",
+    );
+}

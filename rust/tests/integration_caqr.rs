@@ -12,15 +12,14 @@
 //!    bound, the run completes with the *identical* R: redundancy
 //!    means the replica's copy IS the lost copy.
 
+mod common;
+
+use common::{all_single_strikes, bits};
 use ft_tsqr::caqr::{self, CaqrScenario, CaqrSpec};
 use ft_tsqr::engine::Engine;
 use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage};
 use ft_tsqr::linalg::{Matrix, householder_qr_reference};
 use ft_tsqr::tsqr::Algo;
-
-fn bits(m: &Matrix) -> Vec<u32> {
-    m.data().iter().map(|x| x.to_bits()).collect()
-}
 
 #[test]
 fn fault_free_caqr_is_bitwise_householder_qr() {
@@ -61,24 +60,23 @@ fn every_single_update_strike_recovers_the_identical_r() {
     let reference = householder_qr_reference(&Matrix::random(m, n, 42)).r();
     assert_eq!(bits(clean_r), bits(&reference), "clean run == oracle");
 
-    let panels = clean.panels;
     for algo in [Algo::Redundant, Algo::SelfHealing] {
-        for rank in 0..procs {
-            for panel_k in 0..panels {
-                let spec = CaqrSpec::new(algo, procs, m, n, panel).with_schedule(
-                    CaqrKillSchedule::at(&[(rank, panel_k, CaqrStage::Update)]),
-                );
-                let res = engine.run_caqr(spec).unwrap();
-                assert!(
-                    res.success(),
-                    "{algo:?}: kill {rank}@{panel_k} must be within the replication bound"
-                );
-                assert_eq!(
-                    bits(res.final_r.as_ref().unwrap()),
-                    bits(clean_r),
-                    "{algo:?}: kill {rank}@{panel_k} changed the bits"
-                );
-            }
+        for (rank, panel_k, stage) in all_single_strikes(procs, clean.panels)
+            .into_iter()
+            .filter(|&(_, _, s)| s == CaqrStage::Update)
+        {
+            let spec = CaqrSpec::new(algo, procs, m, n, panel)
+                .with_schedule(CaqrKillSchedule::at(&[(rank, panel_k, stage)]));
+            let res = engine.run_caqr(spec).unwrap();
+            assert!(
+                res.success(),
+                "{algo:?}: kill {rank}@{panel_k} must be within the replication bound"
+            );
+            assert_eq!(
+                bits(res.final_r.as_ref().unwrap()),
+                bits(clean_r),
+                "{algo:?}: kill {rank}@{panel_k} changed the bits"
+            );
         }
     }
 }
@@ -89,14 +87,15 @@ fn every_single_factor_strike_recovers_the_identical_r() {
     let (procs, m, n, panel) = (4usize, 20usize, 12usize, 4usize);
     let clean = engine.run_caqr(CaqrSpec::new(Algo::Redundant, procs, m, n, panel)).unwrap();
     let clean_r = clean.final_r.as_ref().unwrap();
-    for rank in 0..procs {
-        for panel_k in 0..clean.panels {
-            let spec = CaqrSpec::new(Algo::Redundant, procs, m, n, panel)
-                .with_schedule(CaqrKillSchedule::at(&[(rank, panel_k, CaqrStage::Factor)]));
-            let res = engine.run_caqr(spec).unwrap();
-            assert!(res.success(), "factor kill {rank}@{panel_k}");
-            assert_eq!(bits(res.final_r.as_ref().unwrap()), bits(clean_r));
-        }
+    for (rank, panel_k, stage) in all_single_strikes(procs, clean.panels)
+        .into_iter()
+        .filter(|&(_, _, s)| s == CaqrStage::Factor)
+    {
+        let spec = CaqrSpec::new(Algo::Redundant, procs, m, n, panel)
+            .with_schedule(CaqrKillSchedule::at(&[(rank, panel_k, stage)]));
+        let res = engine.run_caqr(spec).unwrap();
+        assert!(res.success(), "factor kill {rank}@{panel_k}");
+        assert_eq!(bits(res.final_r.as_ref().unwrap()), bits(clean_r));
     }
 }
 

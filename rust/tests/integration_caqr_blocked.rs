@@ -15,6 +15,9 @@
 //!    redundancy means the replica's copy IS the lost copy, fast path
 //!    or not.
 
+mod common;
+
+use common::{all_single_strikes, bits};
 use ft_tsqr::caqr::CaqrSpec;
 use ft_tsqr::engine::Engine;
 use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage};
@@ -23,26 +26,10 @@ use ft_tsqr::runtime::KernelProfile;
 use ft_tsqr::tsqr::Algo;
 use ft_tsqr::util::Rng;
 
-fn bits(m: &Matrix) -> Vec<u32> {
-    m.data().iter().map(|x| x.to_bits()).collect()
-}
-
-/// Column-wise accuracy bound: `‖got[:,j] − want[:,j]‖_∞ ≤ c·n·ε·‖A‖_F`.
+/// Column-wise accuracy bound at the compact-WY constant (see
+/// `common::assert_columnwise_close`).
 fn assert_columnwise_close(got: &Matrix, want: &Matrix, a: &Matrix, what: &str) {
-    assert_eq!(got.shape(), want.shape(), "{what}: shape mismatch");
-    let (rows, cols) = got.shape();
-    let norm_a: f64 = a.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
-    let bound = 64.0 * cols as f64 * f32::EPSILON as f64 * norm_a.max(1.0);
-    for j in 0..cols {
-        let mut max_diff = 0.0f64;
-        for i in 0..rows {
-            max_diff = max_diff.max((got[(i, j)] as f64 - want[(i, j)] as f64).abs());
-        }
-        assert!(
-            max_diff <= bound,
-            "{what}: column {j} off by {max_diff:.3e} > bound {bound:.3e}"
-        );
-    }
+    common::assert_columnwise_close(got, want, a, 64.0, what);
 }
 
 fn blocked_engine() -> Engine {
@@ -108,25 +95,21 @@ fn blocked_recovers_bitwise_identically_under_every_single_strike() {
     let clean_r = clean.final_r.as_ref().unwrap();
 
     for algo in [Algo::Redundant, Algo::SelfHealing] {
-        for stage in [CaqrStage::Update, CaqrStage::Factor] {
-            for rank in 0..procs {
-                for panel_k in 0..clean.panels {
-                    let spec = CaqrSpec::new(algo, procs, m, n, panel)
-                        .with_schedule(CaqrKillSchedule::at(&[(rank, panel_k, stage)]));
-                    let res = engine.run_caqr(spec).unwrap();
-                    assert!(
-                        res.success(),
-                        "{algo:?}: kill {rank}@{panel_k} ({}) must be within the bound",
-                        stage.name()
-                    );
-                    assert_eq!(
-                        bits(res.final_r.as_ref().unwrap()),
-                        bits(clean_r),
-                        "{algo:?}: kill {rank}@{panel_k} ({}) changed the bits",
-                        stage.name()
-                    );
-                }
-            }
+        for (rank, panel_k, stage) in all_single_strikes(procs, clean.panels) {
+            let spec = CaqrSpec::new(algo, procs, m, n, panel)
+                .with_schedule(CaqrKillSchedule::at(&[(rank, panel_k, stage)]));
+            let res = engine.run_caqr(spec).unwrap();
+            assert!(
+                res.success(),
+                "{algo:?}: kill {rank}@{panel_k} ({}) must be within the bound",
+                stage.name()
+            );
+            assert_eq!(
+                bits(res.final_r.as_ref().unwrap()),
+                bits(clean_r),
+                "{algo:?}: kill {rank}@{panel_k} ({}) changed the bits",
+                stage.name()
+            );
         }
     }
 }

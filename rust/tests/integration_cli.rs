@@ -221,6 +221,46 @@ fn caqr_profile_and_threads_flags_are_accepted() {
 }
 
 #[test]
+fn caqr_policy_and_checksum_flags_arm_the_ladder() {
+    // The pair wipe that aborts under replication (exit 2)…
+    let out = repro()
+        .args([
+            "caqr", "--procs", "4", "--rows", "24", "--cols", "12", "--panel", "4",
+            "--kill-update", "2@0,3@0",
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "pair wipe must abort under the default ladder");
+
+    // …completes under the hybrid ladder with one checksum.
+    let out = run_ok(&[
+        "caqr", "--procs", "4", "--rows", "24", "--cols", "12", "--panel", "4",
+        "--kill-update", "2@0,3@0", "--policy", "hybrid", "--checksums", "1",
+    ]);
+    assert!(out.contains("policy=hybrid"), "{out}");
+    assert!(out.contains("checksums=1"), "{out}");
+    assert!(out.contains("success=true"), "{out}");
+    assert!(out.contains("pair_wipes_survived="), "{out}");
+
+    let out = repro()
+        .args(["caqr", "--procs", "4", "--rows", "16", "--cols", "8", "--policy", "raid5"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "unknown policy must be rejected");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown recovery policy"));
+
+    // --checksums under the replication-only ladder is inert: the
+    // header must report the RESOLVED arming (0) and say why.
+    let out = repro()
+        .args(["caqr", "--procs", "4", "--rows", "16", "--cols", "8", "--checksums", "1"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("checksums=0"));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("ignored under --policy replica"));
+}
+
+#[test]
 fn caqr_scenario_pair_wipe_exits_nonzero() {
     let out = repro()
         .args(["caqr", "--scenario", "pair-wipe", "--rows", "32", "--cols", "16", "--panel", "4"])
