@@ -1,0 +1,148 @@
+//! BENCH TAB-S1: what the discrete-event simulator is worth.
+//!
+//!   cargo bench --bench sim_throughput
+//!
+//! Two numbers matter.  First, raw event throughput at mega scale: the
+//! committed `scenarios/mega_1e5.toml` campaign (10⁵ ranks, churn +
+//! rack bursts, hybrid ladder) replayed end to end, reported as events
+//! per *real* second.  Second — the gated metric — the speedup of the
+//! event-driven replay over the thread-based executor on the SAME
+//! workload at small P, where both can run.  The small-P parity tests
+//! (`tests/integration_sim.rs`) prove the two agree bit-for-bit on
+//! ladder outcomes; this bench proves the replay is also vastly
+//! cheaper, which is the simulator's whole reason to exist.
+//!
+//! Emits `target/reports/BENCH_sim.json`; the CI perf gate tracks
+//! `sim_vs_thread_speedup` (a collapsing speedup means the replay has
+//! accidentally grown per-rank work).
+
+use std::time::Instant;
+
+use ft_tsqr::caqr::CaqrSpec;
+use ft_tsqr::engine::Engine;
+use ft_tsqr::fault::CaqrKillSchedule;
+use ft_tsqr::report::{REPORT_DIR, Table};
+use ft_tsqr::sim::{SimScenario, replay};
+use ft_tsqr::tsqr::Algo;
+
+fn main() {
+    let quick = ft_tsqr::report::bench::quick();
+    let engine = Engine::host();
+
+    // ---------------------------------------- mega-scale throughput
+    // The committed headline scenario, scaled up when not in quick
+    // mode: 10⁶ ranks is the paper-motivated exascale regime.
+    let mut sc = SimScenario::load("scenarios/mega_1e5.toml").expect("committed scenario");
+    if !quick {
+        sc.procs = 1_000_000;
+        sc.name = "mega-1e6".into();
+    }
+    sc.samples = if quick { 2 } else { 4 };
+    let batch = engine.simulate(&sc).expect("mega campaign");
+    let events = batch.events();
+    let events_per_sec = batch.events_per_sec();
+    let survival = batch.survival();
+
+    let mut table = Table::new(
+        format!("TAB-S1: simulator throughput — {} ({} samples)", sc.name, sc.samples),
+        &["campaign", "procs", "events", "events/s", "virtual", "wall"],
+    );
+    table.row(vec![
+        sc.name.clone(),
+        sc.procs.to_string(),
+        events.to_string(),
+        format!("{events_per_sec:.0}"),
+        format!("{:.2}s", batch.virtual_ns() as f64 / 1e9),
+        ft_tsqr::report::bench::fmt_duration(batch.wall),
+    ]);
+
+    // ------------------------------- replay vs threads, same workload
+    // Identical specs through both engines: P=8, 32x16, panel 4, one
+    // scheduled update kill per run.  `replay` is matrix-free, so the
+    // gap is the cost of threads + real arithmetic — the overhead the
+    // simulator exists to avoid.
+    let runs: u64 = if quick { 40 } else { 400 };
+    let mk = |seed: u64| {
+        CaqrSpec::new(Algo::SelfHealing, 8, 32, 16, 4)
+            .with_seed(seed)
+            .with_verify(false)
+            .with_schedule(CaqrKillSchedule::random_updates(8, 4, 1, seed))
+    };
+    // Warm the pool outside the timed window.
+    engine.run_caqr(mk(u64::MAX)).expect("warm-up run");
+
+    let t0 = Instant::now();
+    let report = engine.caqr_campaign((0..runs).map(mk)).run().expect("thread campaign");
+    let thread_wall = t0.elapsed();
+    let thread_successes = report.successes();
+
+    let t0 = Instant::now();
+    let mut sim_successes = 0u64;
+    for s in 0..runs {
+        if replay(&mk(s)).expect("replay").success() {
+            sim_successes += 1;
+        }
+    }
+    let sim_wall = t0.elapsed();
+    assert_eq!(
+        sim_successes, thread_successes,
+        "parity: the replay must agree with the executor on every outcome"
+    );
+
+    let thread_rps = runs as f64 / thread_wall.as_secs_f64();
+    let sim_rps = runs as f64 / sim_wall.as_secs_f64();
+    let speedup = sim_rps / thread_rps;
+    table.row(vec![
+        format!("threads: {runs} faulty CAQR runs"),
+        "8".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        ft_tsqr::report::bench::fmt_duration(thread_wall),
+    ]);
+    table.row(vec![
+        format!("replay: same {runs} runs"),
+        "8".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        ft_tsqr::report::bench::fmt_duration(sim_wall),
+    ]);
+    print!("{}", table.render());
+    table.save_csv(REPORT_DIR).expect("csv");
+    println!(
+        "\nmega campaign: {events} events at {events_per_sec:.0}/s, survival {:.2}; \
+         small-P replay speedup over threads: {speedup:.0}x",
+        survival.probability()
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"sim_throughput\",\n  \"quick\": {quick},\n  \
+         \"provisional\": true,\n  \
+         \"mega_procs\": {},\n  \"mega_samples\": {},\n  \"mega_events\": {events},\n  \
+         \"mega_events_per_sec\": {events_per_sec:.0},\n  \
+         \"mega_survival\": {:.3},\n  \
+         \"thread_runs_per_sec\": {thread_rps:.2},\n  \"sim_runs_per_sec\": {sim_rps:.2},\n  \
+         \"sim_vs_thread_speedup\": {speedup:.1}\n}}\n",
+        sc.procs,
+        sc.samples,
+        survival.probability(),
+    );
+    std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
+    let json_path = format!("{REPORT_DIR}/BENCH_sim.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_sim.json");
+    println!("wrote {json_path}");
+    if std::env::var("BENCH_WRITE_BASELINE").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all("benches/baselines").expect("mkdir baselines");
+        std::fs::write("benches/baselines/BENCH_sim.json", &json).expect("write baseline");
+        println!("refreshed baseline benches/baselines/BENCH_sim.json");
+    }
+    // CI perf gate (BENCH_REGRESS=1): the speedup ratio only — raw
+    // events/sec tracks host speed, but replay-vs-thread speedup on
+    // one host is a property of the algorithm.
+    ft_tsqr::report::bench::enforce_regress_gate(
+        "sim_throughput",
+        "benches/baselines/BENCH_sim.json",
+        &[("sim_vs_thread_speedup", speedup)],
+    );
+}

@@ -82,41 +82,42 @@ impl<'e> FullSimSweep<'e> {
             .with_verify(false)
     }
 
-    fn estimate(&self, schedules: impl Iterator<Item = KillSchedule>) -> Result<SurvivalEstimate> {
-        let specs: Vec<RunSpec> = schedules.map(|s| self.spec(s)).collect();
-        let report =
-            self.engine.campaign(specs).concurrency(self.concurrency).run()?;
-        Ok(report.survival())
+    /// One cell: sample schedules through [`super::sample_cell`]'s
+    /// seeding rule, run them as an engine campaign, aggregate.
+    fn estimate(
+        &self,
+        base: u64,
+        schedule_at: impl Fn(u64) -> KillSchedule,
+    ) -> Result<SurvivalEstimate> {
+        super::sample_cell(
+            self.samples,
+            base,
+            |seed| self.spec(schedule_at(seed)),
+            |specs| Ok(self.engine.campaign(specs).concurrency(self.concurrency).run()?.survival()),
+        )
     }
 
     /// P(success | exactly `f` distinct ranks die at round boundary
     /// `round`), measured on the full simulator.
     pub fn at_round(&self, round: u32, f: usize) -> Result<SurvivalEstimate> {
         let base = self.seed ^ ((round as u64) << 32) ^ ((f as u64) << 48);
-        self.estimate((0..self.samples).map(|i| {
-            KillSchedule::random_at_round(self.procs, round, f, None, base.wrapping_add(i))
-        }))
+        self.estimate(base, |seed| {
+            KillSchedule::random_at_round(self.procs, round, f, None, seed)
+        })
     }
 
     /// P(success) under per-rank exponential lifetimes (deaths/step).
     pub fn exponential(&self, rate: f64) -> Result<SurvivalEstimate> {
         let rounds = TreePlan::new(self.procs).rounds();
         let base = self.seed ^ rate.to_bits();
-        self.estimate(
-            (0..self.samples).map(|i| {
-                KillSchedule::exponential(self.procs, rounds, rate, base.wrapping_add(i))
-            }),
-        )
+        self.estimate(base, |seed| KillSchedule::exponential(self.procs, rounds, rate, seed))
     }
 
     /// P(success) when every (rank, round) fails independently w.p. `p`.
     pub fn bernoulli(&self, p: f64) -> Result<SurvivalEstimate> {
         let rounds = TreePlan::new(self.procs).rounds();
         let base = self.seed ^ p.to_bits();
-        self.estimate(
-            (0..self.samples)
-                .map(|i| KillSchedule::bernoulli(self.procs, rounds, p, base.wrapping_add(i))),
-        )
+        self.estimate(base, |seed| KillSchedule::bernoulli(self.procs, rounds, p, seed))
     }
 }
 
@@ -202,22 +203,20 @@ impl<'e> CaqrSweep<'e> {
         let n = panels * self.panel;
         let m = n.max(self.procs * self.panel);
         let base = self.seed ^ ((panels as u64) << 32) ^ ((f as u64) << 48);
-        let specs: Vec<CaqrSpec> = (0..self.samples)
-            .map(|i| {
+        super::sample_cell(
+            self.samples,
+            base,
+            |seed| {
                 CaqrSpec::new(self.algo, self.procs, m, n, self.panel)
                     .with_seed(self.seed)
                     .with_verify(false)
                     .with_checksums(self.checksums)
-                    .with_schedule(CaqrKillSchedule::random_updates(
-                        self.procs,
-                        panels,
-                        f,
-                        base.wrapping_add(i),
-                    ))
-            })
-            .collect();
-        let report = self.engine.caqr_campaign(specs).concurrency(self.concurrency).run()?;
-        Ok(report.survival())
+                    .with_schedule(CaqrKillSchedule::random_updates(self.procs, panels, f, seed))
+            },
+            |specs| {
+                Ok(self.engine.caqr_campaign(specs).concurrency(self.concurrency).run()?.survival())
+            },
+        )
     }
 
     /// The survival curve over a list of panel counts at fixed `f` —

@@ -6,6 +6,7 @@ pub mod closed_form;
 pub mod coded;
 pub mod fullsim;
 pub mod robustness;
+pub mod simsweep;
 pub mod survival;
 
 pub use closed_form::{survival_curve, survival_exact_f_at_round};
@@ -15,4 +16,22 @@ pub use robustness::{
     max_tolerated_by_step, redundancy_copies, self_healing_total_tolerated,
     survives_failure_set,
 };
+pub use simsweep::SimSweep;
 pub use survival::{SurvivalEstimate, SurvivalSweep};
+
+/// The one Monte-Carlo cell shape every sweep in this module shares:
+/// build `samples` specs, one per sample with its seed drawn from
+/// [`crate::util::derive_seed`]`(base, i)`, then hand the whole batch
+/// to a campaign runner and return its aggregate.
+///
+/// Hoisted out of [`FullSimSweep`] and [`CaqrSweep`] (which had grown
+/// three copies of the loop between them) so the per-sample seeding
+/// rule lives in exactly one place.
+pub(crate) fn sample_cell<S, R>(
+    samples: u64,
+    base: u64,
+    spec_at: impl Fn(u64) -> S,
+    run: impl FnOnce(Vec<S>) -> crate::error::Result<R>,
+) -> crate::error::Result<R> {
+    run((0..samples).map(|i| spec_at(crate::util::derive_seed(base, i))).collect())
+}

@@ -1,0 +1,164 @@
+//! Discrete-event survival sweeps: the mega-scale counterpart of
+//! [`super::fullsim`].
+//!
+//! [`FullSimSweep`](super::FullSimSweep) measures survival on the real
+//! concurrent implementation — gold-standard semantics, but each
+//! sample actually factors a matrix, which caps the world size at tens
+//! of ranks.  [`SimSweep`] measures the same quantity on the
+//! [`crate::sim`] event-driven replay, where a sample at P = 10⁶ costs
+//! the same per panel as one at P = 8, so survival *curves over the
+//! failure rate* at datacenter scale take seconds.  Both report
+//! [`SurvivalEstimate`], so tables mix freely — and the small-P parity
+//! pin (`tests/integration_sim.rs`) is what licenses quoting the two
+//! side by side.
+
+use crate::engine::Engine;
+use crate::error::Result;
+use crate::sim::{ChurnModel, SimScenario};
+use crate::tsqr::Algo;
+use crate::abft::RecoveryPolicy;
+use crate::util::derive_seed;
+
+use super::survival::SurvivalEstimate;
+
+/// Monte-Carlo survival sweep over Poisson failure rates, batched
+/// through [`Engine::simulate`].
+pub struct SimSweep<'e> {
+    engine: &'e Engine,
+    /// Failure semantics (`Redundant` or `SelfHealing`).
+    pub algo: Algo,
+    /// Simulated world size (this axis is the point: 10⁵–10⁶ work).
+    pub procs: usize,
+    /// Panels per sampled factorization.
+    pub panels: usize,
+    /// Block-column width.
+    pub panel: usize,
+    /// Recovery ladder the samples run.
+    pub policy: RecoveryPolicy,
+    /// Checksum blocks armed per panel stage.
+    pub checksums: usize,
+    /// Monte-Carlo samples per rate cell.
+    pub samples: u64,
+    /// Base seed of the sample stream.
+    pub seed: u64,
+}
+
+impl<'e> SimSweep<'e> {
+    /// Defaults: 16 panels of width 8, replica ladder, 100 samples.
+    pub fn new(engine: &'e Engine, algo: Algo, procs: usize) -> Self {
+        Self {
+            engine,
+            algo,
+            procs,
+            panels: 16,
+            panel: 8,
+            policy: RecoveryPolicy::Replica,
+            checksums: 0,
+            samples: 100,
+            seed: 0x51A0,
+        }
+    }
+
+    /// Replace the per-cell sample count.
+    pub fn with_samples(mut self, samples: u64) -> Self {
+        self.samples = samples.max(1);
+        self
+    }
+
+    /// Replace the panel shape.
+    pub fn with_shape(mut self, panels: usize, panel: usize) -> Self {
+        self.panels = panels.max(1);
+        self.panel = panel.max(1);
+        self
+    }
+
+    /// Replace the recovery ladder.
+    pub fn with_policy(mut self, policy: RecoveryPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Arm `c` checksum blocks per panel stage.
+    pub fn with_checksums(mut self, c: usize) -> Self {
+        self.checksums = c;
+        self
+    }
+
+    /// Replace the base seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The scenario one rate cell runs (each cell gets its own seed
+    /// stream so curves don't share failure patterns across rates).
+    fn scenario(&self, rate: f64) -> SimScenario {
+        SimScenario {
+            name: format!("simsweep-p{}-rate{rate}", self.procs),
+            procs: self.procs,
+            panels: self.panels,
+            panel: self.panel,
+            algo: self.algo,
+            policy: self.policy,
+            checksums: self.checksums,
+            samples: self.samples,
+            seed: derive_seed(self.seed, rate.to_bits()),
+            churn: ChurnModel { fail_rate: rate, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    /// P(factorization completes) under independent per-rank Poisson
+    /// failures at `rate` deaths per rank per virtual second.
+    pub fn at_rate(&self, rate: f64) -> Result<SurvivalEstimate> {
+        Ok(self.engine.simulate(&self.scenario(rate))?.survival())
+    }
+
+    /// The survival curve over a list of failure rates — what
+    /// `repro simulate --curve` prints.
+    pub fn curve(&self, rates: &[f64]) -> Result<Vec<(f64, SurvivalEstimate)>> {
+        rates.iter().map(|&r| Ok((r, self.at_rate(r)?))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_is_certain_even_at_scale() {
+        let engine = Engine::host();
+        let est = SimSweep::new(&engine, Algo::Redundant, 10_000)
+            .with_samples(8)
+            .at_rate(0.0)
+            .unwrap();
+        assert_eq!(est.trials, 8);
+        assert_eq!(est.probability(), 1.0, "no churn, no deaths");
+    }
+
+    #[test]
+    fn deterministic_in_seed_and_monotone_setup() {
+        let engine = Engine::host();
+        let sweep = SimSweep::new(&engine, Algo::SelfHealing, 64)
+            .with_shape(4, 4)
+            .with_samples(12)
+            .with_policy(RecoveryPolicy::Hybrid)
+            .with_checksums(4);
+        let a = sweep.at_rate(50.0).unwrap();
+        let b = sweep.at_rate(50.0).unwrap();
+        assert_eq!(a.successes, b.successes, "same seed stream, same outcome");
+        let curve = sweep.curve(&[0.0, 50.0]).unwrap();
+        assert_eq!(curve.len(), 2);
+        assert_eq!(curve[0].1.probability(), 1.0);
+        assert!(curve[1].1.probability() <= 1.0);
+    }
+
+    #[test]
+    fn rate_cells_use_distinct_seed_streams() {
+        let engine = Engine::host();
+        let sweep = SimSweep::new(&engine, Algo::Redundant, 16);
+        let a = sweep.scenario(0.1).seed;
+        let b = sweep.scenario(0.2).seed;
+        assert_ne!(a, b, "each rate cell reseeds");
+    }
+}

@@ -232,12 +232,36 @@ impl CaqrSpec {
             }
         }
         match self.algo {
-            Algo::Redundant | Algo::SelfHealing => Ok(()),
-            other => Err(Error::Config(format!(
-                "CAQR supports redundant or self-healing semantics, not {}",
-                other.name()
-            ))),
+            Algo::Redundant | Algo::SelfHealing => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "CAQR supports redundant or self-healing semantics, not {}",
+                    other.name()
+                )));
+            }
         }
+        // An out-of-range kill entry can never fire; reject it here so
+        // a typo'd `--kill-update 9@0` fails loudly instead of running
+        // a silently fault-free campaign.
+        let panels = self.n.div_ceil(self.panel);
+        for (rank, panel, stage) in self.schedule.entries() {
+            if rank >= self.procs {
+                return Err(Error::Config(format!(
+                    "kill ({rank}, {panel}, {}) names rank {rank} outside the \
+                     {}-rank world",
+                    stage.name(),
+                    self.procs
+                )));
+            }
+            if panel >= panels {
+                return Err(Error::Config(format!(
+                    "kill ({rank}, {panel}, {}) names panel {panel} but the plan \
+                     has only {panels} panels",
+                    stage.name()
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// The panel plan this spec factors under.

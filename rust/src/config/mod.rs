@@ -67,24 +67,23 @@ impl FailureConfig {
         }
     }
 
-    /// Same stochastic model, shifted seed stream — how campaign seed
-    /// sweeps draw a fresh failure pattern per run.  Deterministic
-    /// models (`None`, `At`) are returned unchanged.
-    pub fn reseeded(&self, offset: u64) -> FailureConfig {
+    /// Same stochastic model, fresh seed stream — how campaign seed
+    /// sweeps draw a fresh failure pattern per run.  Stream `i` draws
+    /// its seed through [`crate::util::derive_seed`]`(seed, i)` (the
+    /// crate-wide derivation rule, so adjacent streams never overlap
+    /// the way `seed + i` does).  Deterministic models (`None`, `At`)
+    /// are returned unchanged.
+    pub fn reseeded(&self, stream: u64) -> FailureConfig {
+        let derive = |seed| crate::util::derive_seed(seed, stream);
         match self.clone() {
             FailureConfig::Bernoulli { p, seed } => {
-                FailureConfig::Bernoulli { p, seed: seed.wrapping_add(offset) }
+                FailureConfig::Bernoulli { p, seed: derive(seed) }
             }
             FailureConfig::Exponential { rate, seed } => {
-                FailureConfig::Exponential { rate, seed: seed.wrapping_add(offset) }
+                FailureConfig::Exponential { rate, seed: derive(seed) }
             }
             FailureConfig::RandomAtRound { round, f, seed, protect_root } => {
-                FailureConfig::RandomAtRound {
-                    round,
-                    f,
-                    seed: seed.wrapping_add(offset),
-                    protect_root,
-                }
+                FailureConfig::RandomAtRound { round, f, seed: derive(seed), protect_root }
             }
             deterministic => deterministic,
         }
@@ -419,10 +418,15 @@ mod tests {
 
     #[test]
     fn reseeding_shifts_stochastic_models_only() {
+        use crate::util::derive_seed;
         let b = FailureConfig::Bernoulli { p: 0.1, seed: 3 };
-        assert_eq!(b.reseeded(4), FailureConfig::Bernoulli { p: 0.1, seed: 7 });
+        assert_eq!(b.reseeded(4), FailureConfig::Bernoulli { p: 0.1, seed: derive_seed(3, 4) });
+        assert_ne!(b.reseeded(4), b.reseeded(5), "streams are distinct");
         let e = FailureConfig::Exponential { rate: 0.5, seed: 1 };
-        assert_eq!(e.reseeded(1), FailureConfig::Exponential { rate: 0.5, seed: 2 });
+        assert_eq!(
+            e.reseeded(1),
+            FailureConfig::Exponential { rate: 0.5, seed: derive_seed(1, 1) }
+        );
         let at = FailureConfig::At { kills: vec![(1, 0)] };
         assert_eq!(at.reseeded(9), at, "deterministic schedules unchanged");
         assert_eq!(FailureConfig::None.reseeded(9), FailureConfig::None);

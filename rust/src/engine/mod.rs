@@ -33,12 +33,13 @@ pub use campaign::{Campaign, CampaignReport, RunRecord};
 pub use pool::{TaskGroup, WorkerPool};
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, mpsc};
+use std::sync::{Arc, Mutex, mpsc};
 
 use crate::abft::RecoveryPolicy;
 use crate::caqr::{CaqrCampaign, CaqrResult, CaqrSpec};
 use crate::error::{Error, Result};
 use crate::runtime::{Backend, Executor, KernelProfile, DEFAULT_ARTIFACT_DIR};
+use crate::sim::{SimBatchReport, SimScenario};
 use crate::tsqr::{RunResult, RunSpec};
 
 /// Configures and builds an [`Engine`].
@@ -366,6 +367,46 @@ impl Engine {
     pub fn caqr_campaign(&self, specs: impl IntoIterator<Item = CaqrSpec>) -> CaqrCampaign<'_> {
         CaqrCampaign::new(self, specs.into_iter().map(|s| self.adopt_caqr(s)).collect())
     }
+
+    /// Run a discrete-event fault campaign on this session's worker
+    /// pool: every sample of the scenario (reseeded through
+    /// [`crate::util::derive_seed`]) runs concurrently, and the batch
+    /// report aggregates survival and events-per-second throughput.
+    ///
+    /// Unlike [`run_caqr`](Self::run_caqr), no matrices are touched —
+    /// a sample at `procs = 10⁶` costs the same per panel as one at
+    /// `procs = 8` (see [`crate::sim`]).
+    ///
+    /// ```
+    /// use ft_tsqr::engine::Engine;
+    /// use ft_tsqr::sim::SimScenario;
+    ///
+    /// let engine = Engine::host();
+    /// let sc = SimScenario { procs: 1024, samples: 32, ..Default::default() };
+    /// let batch = engine.simulate(&sc).unwrap();
+    /// assert_eq!(batch.survival().probability(), 1.0, "no faults armed");
+    /// ```
+    pub fn simulate(&self, scenario: &SimScenario) -> Result<SimBatchReport> {
+        scenario.validate()?;
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let start = std::time::Instant::now();
+        let n = scenario.samples as usize;
+        let slots: Arc<Vec<Mutex<Option<crate::sim::SimReport>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        let group = TaskGroup::new(self.pool.clone());
+        for i in 0..n {
+            let sample = scenario.sample(i as u64);
+            let slots = Arc::clone(&slots);
+            group.spawn(move || {
+                let report = crate::sim::run_validated(&sample);
+                *slots[i].lock().unwrap() = Some(report);
+            });
+        }
+        group.wait_idle();
+        let reports: Vec<_> = slots.iter().filter_map(|s| s.lock().unwrap().take()).collect();
+        self.counters.completed.fetch_add(1, Ordering::Relaxed);
+        Ok(SimBatchReport { reports, wall: start.elapsed() })
+    }
 }
 
 impl Drop for Engine {
@@ -495,6 +536,21 @@ mod tests {
             .unwrap();
         assert_eq!(res.policy, RecoveryPolicy::Replica);
         assert_eq!(res.checksums, 0, "replica policy never encodes");
+    }
+
+    #[test]
+    fn simulate_runs_every_sample_and_reports_throughput() {
+        use crate::sim::SimScenario;
+        let engine = Engine::host();
+        let sc = SimScenario { procs: 256, samples: 16, ..Default::default() };
+        let batch = engine.simulate(&sc).unwrap();
+        assert_eq!(batch.reports.len(), 16, "one report per sample");
+        assert_eq!(batch.successes(), 16, "no faults armed");
+        assert!(batch.events() > 0);
+        assert!(batch.virtual_ns() > 0);
+        // Bad scenarios fail validation before touching the pool.
+        let bad = SimScenario { procs: 0, ..Default::default() };
+        assert!(engine.simulate(&bad).is_err());
     }
 
     #[test]

@@ -74,6 +74,33 @@ impl CaqrKillSchedule {
         Self { pending: Mutex::new(set) }
     }
 
+    /// Rate-based schedule: every `(rank, panel, stage)` cell fails
+    /// independently with probability `1 − exp(−rate)` — the discrete
+    /// hazard of a Poisson process with `rate` expected failures per
+    /// rank per stage.  This is the bridge between the paper's
+    /// "f failures" counting semantics and the failure-*rate* semantics
+    /// the [`crate::sim`] campaigns sweep: at small rates the expected
+    /// kill count is `2 · procs · panels · rate`.
+    ///
+    /// Deterministic per `(procs, panels, rate, seed)`; cells are drawn
+    /// in `(rank, panel, Factor→Update)` order from one
+    /// [`Rng`] stream.
+    pub fn poisson(procs: usize, panels: usize, rate: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let p = 1.0 - (-rate.max(0.0)).exp();
+        let mut set = HashSet::new();
+        for rank in 0..procs {
+            for panel in 0..panels {
+                for stage in [CaqrStage::Factor, CaqrStage::Update] {
+                    if rng.bool(p) {
+                        set.insert((rank, panel, stage));
+                    }
+                }
+            }
+        }
+        Self { pending: Mutex::new(set) }
+    }
+
     /// Should `rank` die at `(panel, stage)`?  Consumes the entry.
     pub fn fire(&self, rank: Rank, panel: usize, stage: CaqrStage) -> bool {
         self.pending.lock().unwrap().remove(&(rank, panel, stage))
@@ -176,6 +203,20 @@ mod tests {
     #[test]
     fn random_updates_caps_at_world_size() {
         assert_eq!(CaqrKillSchedule::random_updates(4, 2, 10, 1).remaining(), 4);
+    }
+
+    #[test]
+    fn poisson_schedule_rate_extremes_and_determinism() {
+        assert_eq!(CaqrKillSchedule::poisson(8, 4, 0.0, 9).remaining(), 0, "rate 0 kills nobody");
+        // rate → ∞ saturates every cell: procs × panels × 2 stages.
+        assert_eq!(CaqrKillSchedule::poisson(4, 3, 1e9, 9).remaining(), 24);
+        let a = CaqrKillSchedule::poisson(16, 8, 0.3, 42).entries();
+        assert_eq!(a, CaqrKillSchedule::poisson(16, 8, 0.3, 42).entries(), "seeded");
+        assert_ne!(a, CaqrKillSchedule::poisson(16, 8, 0.3, 43).entries());
+        assert!(a.iter().all(|&(r, k, _)| r < 16 && k < 8), "cells in range");
+        // Expected count 2·16·8·(1−e^−0.3) ≈ 66 of 256 cells; a seeded
+        // draw sits well inside ±5σ of that.
+        assert!(a.len() > 30 && a.len() < 110, "got {}", a.len());
     }
 
     #[test]

@@ -112,6 +112,26 @@
 //! assert_eq!(res.metrics.pair_wipes_survived, 1);
 //! ```
 //!
+//! ## Mega-scale campaigns: the discrete-event simulator
+//!
+//! The thread-based executor tops out at tens of ranks; the [`sim`]
+//! subsystem replays the same panel walk and recovery ladder as
+//! events on a virtual clock — matrix-free, thread-free — so survival
+//! campaigns run at P = 10⁵–10⁶ ranks with Poisson churn, rack-wipe
+//! bursts, and network models, in seconds
+//! (`repro simulate --scenario rust/scenarios/mega_1e5.toml`).  At
+//! small P the simulator reproduces the executor's survival/abort
+//! outcomes *exactly* (pinned in `tests/integration_sim.rs`), which is
+//! what licenses the extrapolation:
+//!
+//! ```
+//! use ft_tsqr::sim::{SimScenario, run_scenario};
+//!
+//! let sc = SimScenario { procs: 100_000, ..Default::default() };
+//! let report = run_scenario(&sc).unwrap();
+//! assert!(report.success() && report.virtual_ns > 0);
+//! ```
+//!
 //! See `docs/ARCHITECTURE.md` for the layer-by-layer walkthrough of
 //! the whole stack, `docs/TUTORIAL.md` (mirrored as the runnable
 //! [`tutorial`] module) for the end-to-end guided tour, and
@@ -132,6 +152,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod sim;
 pub mod tsqr;
 pub mod ulfm;
 pub mod util;

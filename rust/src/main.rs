@@ -12,6 +12,10 @@
 //! * `caqr`      general-matrix fault-tolerant CAQR: one factorization
 //!               with (rank, panel, stage) kills or a named scenario,
 //!               or `--sweep` for survival over panel counts
+//! * `simulate`  discrete-event fault campaign from a scenario file —
+//!               survival at 10⁵–10⁶ simulated ranks with churn,
+//!               bursts, and network models (`--curve` sweeps the
+//!               failure rate)
 //! * `validate`  check the paper's 2^s − 1 bounds against sampled
 //!               failure patterns
 //! * `info`      artifact manifest / backend diagnostics
@@ -21,13 +25,15 @@
 //! value`), since the vendored crate set has no clap; see `Args` below.
 
 use ft_tsqr::abft::RecoveryPolicy;
-use ft_tsqr::analysis::{CaqrSweep, FullSimSweep, SurvivalSweep, max_tolerated_by_step};
+use ft_tsqr::analysis::{CaqrSweep, FullSimSweep, SimSweep, SurvivalSweep, max_tolerated_by_step};
 use ft_tsqr::caqr::{CaqrScenario, CaqrSpec};
 use ft_tsqr::config::{Config, FailureConfig};
 use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage, Scenario};
 use ft_tsqr::report::{Table, fmt_f, fmt_prob};
 use ft_tsqr::runtime::{KernelProfile, Manifest};
+use ft_tsqr::sim::SimScenario;
 use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan};
+use ft_tsqr::util::derive_seed;
 use ft_tsqr::{Error, Result};
 
 const USAGE: &str = "\
@@ -39,13 +45,15 @@ USAGE:
                  [--profile K] [--threads N]
   repro campaign [run flags] [--runs N] [--concurrency W]
   repro trace    <fig3|fig4|fig5|baseline-abort> [--rows-per-proc R] [--cols N]
-  repro sweep    [--algo A] [--procs P] [--trials T] [--full]
+  repro sweep    [--algo A] [--procs P] [--trials T] [--seed S] [--full]
   repro caqr     [--algo redundant|self-healing] [--procs P] [--rows M]
                  [--cols N] [--panel B] [--seed S] [--scenario NAME]
                  [--kill-update r@p,...] [--kill-factor r@p,...]
                  [--profile K] [--threads N]
                  [--policy replica|checksum|hybrid] [--checksums C]
                  [--sweep [--f F] [--trials T]]
+  repro simulate --scenario FILE [--seed S] [--samples N] [--procs P]
+                 [--threads N] [--curve [--rates R,R,...]]
   repro validate [--procs P] [--trials T]
   repro info     [--artifact-dir DIR]
 
@@ -57,6 +65,10 @@ USAGE:
   --policy picks the recovery ladder (replica = papers' replication only;
   hybrid = replication + --checksums C Vandermonde checksum blocks, which
   survives pair wipes that replication alone cannot)
+  simulate replays the recovery ladder event-driven (no matrices, no
+  threads-per-rank), so scenario files can ask for 10^5-10^6 ranks; see
+  rust/scenarios/ for committed examples and --curve for survival over
+  Poisson failure rates
 ";
 
 /// Tiny `--key value` / `--flag` parser.
@@ -74,7 +86,7 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 // boolean flags take no value; everything else takes one
-                if matches!(name, "trace" | "help" | "full" | "sweep") {
+                if matches!(name, "trace" | "help" | "full" | "sweep" | "curve") {
                     flags.insert(name.to_string(), "true".to_string());
                 } else {
                     i += 1;
@@ -229,7 +241,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     let specs = (0..runs)
         .map(|i| {
             let mut c = cfg.clone();
-            c.seed = cfg.seed.wrapping_add(i);
+            c.seed = derive_seed(cfg.seed, i);
             c.failures = cfg.failures.reseeded(i);
             c.trace = false;
             c.to_engine_spec()
@@ -289,6 +301,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let algo = args.parse_flag::<Algo>("algo")?.unwrap_or(Algo::Replace);
     let procs = args.parse_flag::<usize>("procs")?.unwrap_or(16);
     let trials = args.parse_flag::<u64>("trials")?.unwrap_or(2000);
+    let seed = args.parse_flag::<u64>("seed")?;
     let full = args.get("full").is_some();
     if !procs.is_power_of_two() {
         return Err(Error::Config("sweep needs a power-of-two world".into()));
@@ -299,9 +312,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         // Full simulator, batched through one engine campaign: the same
         // cells as the analytic path, measured on the real stack.
         let engine = ft_tsqr::engine::Engine::host();
-        let sweep = FullSimSweep::new(&engine, algo, procs)
+        let mut sweep = FullSimSweep::new(&engine, algo, procs)
             .with_samples(trials.min(200))
             .with_concurrency(4);
+        if let Some(s) = seed {
+            sweep = sweep.with_seed(s);
+        }
         let mut table = Table::new(
             format!(
                 "P(success) — {} on {procs} procs (full simulator, {} runs/cell)",
@@ -322,7 +338,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let sweep = SurvivalSweep::new(algo, procs).with_trials(trials);
+    let mut sweep = SurvivalSweep::new(algo, procs).with_trials(trials);
+    if let Some(s) = seed {
+        sweep = sweep.with_seed(s);
+    }
     let mut table = Table::new(
         format!("P(success) — {} on {procs} procs ({trials} trials/cell)", algo.name()),
         &["round", "bound 2^s-1", "f=1", "f=2", "f=4", "f=8"],
@@ -491,6 +510,121 @@ fn cmd_caqr(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let path = args
+        .get("scenario")
+        .ok_or_else(|| Error::Config("simulate needs --scenario FILE".into()))?;
+    let mut sc = SimScenario::load(path)?;
+    if let Some(s) = args.parse_flag::<u64>("seed")? {
+        sc.seed = s;
+    }
+    if let Some(n) = args.parse_flag::<u64>("samples")? {
+        sc.samples = n;
+    }
+    if let Some(p) = args.parse_flag::<usize>("procs")? {
+        sc.procs = p;
+    }
+    sc.validate()?;
+    let threads = args.parse_flag::<usize>("threads")?.unwrap_or(0);
+    let engine = ft_tsqr::engine::Engine::builder().host_only().prewarm(threads).build()?;
+
+    println!(
+        "simulate: scenario={} procs={} panels={}x{} algo={} policy={} checksums={} \
+         network={} samples={} seed={}",
+        sc.name,
+        sc.procs,
+        sc.panels,
+        sc.panel,
+        sc.algo.name(),
+        sc.policy,
+        sc.armed_checksums(),
+        sc.network.name(),
+        sc.samples,
+        sc.seed,
+    );
+
+    if args.get("curve").is_some() {
+        // Survival curve over Poisson failure rates: the scenario
+        // supplies the shape/policy, --rates supplies the x axis.
+        let rates: Vec<f64> = match args.get("rates") {
+            Some(list) => list
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.trim()
+                        .parse::<f64>()
+                        .map_err(|e| Error::Config(format!("bad rate '{t}': {e}")))
+                })
+                .collect::<Result<_>>()?,
+            None => vec![0.0, 0.01, 0.05, 0.1, 0.5, 1.0],
+        };
+        let sweep = SimSweep::new(&engine, sc.algo, sc.procs)
+            .with_shape(sc.panels, sc.panel)
+            .with_policy(sc.policy)
+            .with_checksums(sc.checksums)
+            .with_samples(sc.samples)
+            .with_seed(sc.seed);
+        let mut table = Table::new(
+            format!(
+                "P(complete) — {} on {} simulated ranks, policy {} c={} ({} samples/cell)",
+                sc.algo.name(),
+                sc.procs,
+                sc.policy,
+                sc.armed_checksums(),
+                sc.samples
+            ),
+            &["rate (deaths/rank/s)", "P(complete)"],
+        );
+        for (rate, est) in sweep.curve(&rates)? {
+            table.row(vec![rate.to_string(), fmt_prob(est.probability(), est.ci95())]);
+        }
+        print!("{}", table.render());
+        return Ok(());
+    }
+
+    let batch = engine.simulate(&sc)?;
+    let survival = batch.survival();
+    let (mut failures, mut rejoins, mut bursts, mut recon, mut wipes, mut respawns) =
+        (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+    for r in &batch.reports {
+        failures += r.failures;
+        rejoins += r.rejoins;
+        bursts += r.bursts;
+        recon += r.checksum_reconstructions;
+        wipes += r.pair_wipes_survived;
+        respawns += r.respawns;
+    }
+    let time = batch.time();
+    println!(
+        "survival={} successes={}/{}",
+        fmt_prob(survival.probability(), survival.ci95()),
+        survival.successes,
+        survival.trials,
+    );
+    println!(
+        "events={} scheduled={} events/sec={:.0} virtual={:?} wall={:?}",
+        batch.events(),
+        batch.reports.iter().map(|r| r.events_scheduled).sum::<u64>(),
+        batch.events_per_sec(),
+        std::time::Duration::from_nanos(batch.virtual_ns()),
+        batch.wall,
+    );
+    println!(
+        "virtual time: compute={:?} network={:?} recovery={:?} (recovery fraction {:.4})",
+        std::time::Duration::from_nanos(time.compute_ns),
+        std::time::Duration::from_nanos(time.network_ns),
+        std::time::Duration::from_nanos(time.recovery_ns),
+        time.recovery_fraction(),
+    );
+    println!(
+        "totals: failures={failures} rejoins={rejoins} bursts={bursts} \
+         reconstructions={recon} pair_wipes_survived={wipes} respawns={respawns}"
+    );
+    // Unlike `run`/`caqr`, a sub-1.0 survival fraction is the
+    // *measurement*, not an error: exit 0 either way.
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let procs = args.parse_flag::<usize>("procs")?.unwrap_or(16);
     let trials = args.parse_flag::<u64>("trials")?.unwrap_or(2000);
@@ -575,6 +709,7 @@ fn main() {
         "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
         "caqr" => cmd_caqr(&args),
+        "simulate" => cmd_simulate(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),
         other => Err(Error::Config(format!("unknown command '{other}'\n\n{USAGE}"))),

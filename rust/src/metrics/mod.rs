@@ -72,9 +72,64 @@ pub fn redundancy_flop_overhead(procs: usize, rows_per_proc: usize, n: usize) ->
     (red - base) / base
 }
 
+/// Where a simulated run's virtual time went — the discrete-event
+/// simulator's ([`crate::sim`]) analogue of wall-clock profiling.
+///
+/// Every stage the runner schedules charges its duration to exactly one
+/// bucket: useful work to `compute_ns`, modelled message latency (and
+/// lossy retransmits) to `network_ns`, and ladder penalties — factor
+/// re-execution, checksum reconstruction of wiped blocks — to
+/// `recovery_ns`.  The buckets therefore sum to the run's total virtual
+/// time, so `recovery_fraction()` is the stall share the paper's §III
+/// recovery semantics cost under a given failure rate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct VirtualTimeBreakdown {
+    /// Virtual nanoseconds spent in factor/update work proper.
+    pub compute_ns: u64,
+    /// Virtual nanoseconds of modelled network latency, jitter and
+    /// retransmits.
+    pub network_ns: u64,
+    /// Virtual nanoseconds of recovery stalls (rebuilds and checksum
+    /// reconstructions).
+    pub recovery_ns: u64,
+}
+
+impl VirtualTimeBreakdown {
+    /// Sum of all buckets.
+    pub fn total_ns(&self) -> u64 {
+        self.compute_ns + self.network_ns + self.recovery_ns
+    }
+
+    /// Share of virtual time lost to recovery, in [0, 1] (0 for an
+    /// empty breakdown).
+    pub fn recovery_fraction(&self) -> f64 {
+        let total = self.total_ns();
+        if total == 0 { 0.0 } else { self.recovery_ns as f64 / total as f64 }
+    }
+
+    /// Accumulate another run's breakdown (campaign aggregation).
+    pub fn merge(&mut self, other: &VirtualTimeBreakdown) {
+        self.compute_ns += other.compute_ns;
+        self.network_ns += other.network_ns;
+        self.recovery_ns += other.recovery_ns;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn virtual_time_breakdown_accounting() {
+        let mut t = VirtualTimeBreakdown::default();
+        assert_eq!(t.total_ns(), 0);
+        assert_eq!(t.recovery_fraction(), 0.0);
+        t.merge(&VirtualTimeBreakdown { compute_ns: 60, network_ns: 20, recovery_ns: 20 });
+        assert_eq!(t.total_ns(), 100);
+        assert!((t.recovery_fraction() - 0.2).abs() < 1e-12);
+        t.merge(&VirtualTimeBreakdown { compute_ns: 40, network_ns: 0, recovery_ns: 60 });
+        assert_eq!(t, VirtualTimeBreakdown { compute_ns: 100, network_ns: 20, recovery_ns: 80 });
+    }
 
     #[test]
     fn leaf_flops_formula() {

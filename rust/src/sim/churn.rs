@@ -1,0 +1,151 @@
+//! Process churn and correlated failures: the failure *processes* the
+//! simulator layers on top of (or instead of) explicit kill schedules.
+//!
+//! Three generators, all driven by one seeded RNG stream:
+//!
+//! * **independent churn** — every rank's lifetime is
+//!   `Exponential(fail_rate)`, i.e. a Poisson failure process per rank
+//!   (the paper's §III failure-rate semantics, versus its `f`-failures
+//!   counting semantics);
+//! * **rejoin** — a crashed rank re-enters the world `rejoin_ns` after
+//!   its death (kill + rejoin, not just one-shot kills);
+//! * **bursts** — whole *racks* of `rack` consecutive ranks are wiped
+//!   together at `Exponential(burst_rate)` intervals.  `rack = 2`
+//!   recreates [`crate::fault::PairWipeSchedule`]'s buddy-pair wipe at
+//!   a random time; larger racks model correlated hardware failures.
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// Exponential draws are clamped below u64 range so a tiny rate's
+/// multi-century lifetime cannot overflow the nanosecond clock.
+const MAX_NS: f64 = (u64::MAX / 4) as f64;
+
+/// Churn parameters for one simulated run (all rates are *per second
+/// of virtual time*; zero disables the corresponding process).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnModel {
+    /// Independent failure rate per rank per virtual second.
+    pub fail_rate: f64,
+    /// Virtual nanoseconds after a churn death before the rank
+    /// rejoins (0 = crashed ranks never rejoin).
+    pub rejoin_ns: u64,
+    /// Rack-wipe rate per virtual second (whole world).
+    pub burst_rate: f64,
+    /// Ranks per rack (burst blast radius); 2 generalizes the buddy
+    /// pair wipe.
+    pub rack: usize,
+}
+
+impl Default for ChurnModel {
+    fn default() -> Self {
+        Self { fail_rate: 0.0, rejoin_ns: 0, burst_rate: 0.0, rack: 2 }
+    }
+}
+
+impl ChurnModel {
+    /// Does any rank ever die from independent churn?
+    pub fn churns(&self) -> bool {
+        self.fail_rate > 0.0
+    }
+
+    /// Are correlated rack wipes scheduled?
+    pub fn bursts(&self) -> bool {
+        self.burst_rate > 0.0
+    }
+
+    /// Check parameters: rates must be finite and non-negative, the
+    /// rack must hold at least one rank when bursts are armed.
+    pub fn validate(&self) -> Result<()> {
+        for (name, rate) in [("fail-rate", self.fail_rate), ("burst-rate", self.burst_rate)] {
+            if !rate.is_finite() || rate < 0.0 {
+                return Err(Error::Config(format!(
+                    "churn {name} must be finite and >= 0, got {rate}"
+                )));
+            }
+        }
+        if self.bursts() && self.rack == 0 {
+            return Err(Error::Config("burst rack must hold at least one rank".into()));
+        }
+        Ok(())
+    }
+
+    /// Draw one rank lifetime in virtual nanoseconds
+    /// (`Exponential(fail_rate)`).  Only meaningful when
+    /// [`churns`](Self::churns).
+    pub fn lifetime_ns(&self, rng: &mut Rng) -> u64 {
+        (rng.exponential(self.fail_rate) * 1e9).min(MAX_NS) as u64
+    }
+
+    /// Draw the gap to the next rack wipe in virtual nanoseconds
+    /// (`Exponential(burst_rate)`).  Only meaningful when
+    /// [`bursts`](Self::bursts).
+    pub fn burst_gap_ns(&self, rng: &mut Rng) -> u64 {
+        (rng.exponential(self.burst_rate) * 1e9).min(MAX_NS) as u64
+    }
+
+    /// Number of racks a `procs`-rank world partitions into.
+    pub fn racks(&self, procs: usize) -> usize {
+        procs.div_ceil(self.rack.max(1))
+    }
+
+    /// The rank range `[lo, hi)` of rack `g` (the last rack may be
+    /// ragged).
+    pub fn rack_range(&self, g: usize, procs: usize) -> (usize, usize) {
+        let lo = g * self.rack;
+        (lo, (lo + self.rack).min(procs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_inert() {
+        let c = ChurnModel::default();
+        assert!(!c.churns());
+        assert!(!c.bursts());
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn lifetimes_follow_the_rate() {
+        let c = ChurnModel { fail_rate: 2.0, ..Default::default() };
+        let mut rng = Rng::new(9);
+        let n = 20_000;
+        let mean_s: f64 =
+            (0..n).map(|_| c.lifetime_ns(&mut rng) as f64 / 1e9).sum::<f64>() / n as f64;
+        assert!((mean_s - 0.5).abs() < 0.02, "mean lifetime {mean_s}s, expected 0.5s");
+    }
+
+    #[test]
+    fn tiny_rates_clamp_instead_of_overflowing() {
+        let c = ChurnModel { fail_rate: 1e-15, ..Default::default() };
+        let mut rng = Rng::new(10);
+        for _ in 0..100 {
+            assert!(c.lifetime_ns(&mut rng) <= u64::MAX / 4);
+        }
+    }
+
+    #[test]
+    fn rack_partition_covers_the_world() {
+        let c = ChurnModel { rack: 64, ..Default::default() };
+        assert_eq!(c.racks(1000), 16);
+        assert_eq!(c.rack_range(0, 1000), (0, 64));
+        assert_eq!(c.rack_range(15, 1000), (960, 1000), "last rack is ragged");
+        let pair = ChurnModel { rack: 2, ..Default::default() };
+        assert_eq!(pair.rack_range(1, 8), (2, 4), "rack=2 is the buddy pair");
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        assert!(ChurnModel { fail_rate: -1.0, ..Default::default() }.validate().is_err());
+        assert!(ChurnModel { burst_rate: f64::NAN, ..Default::default() }.validate().is_err());
+        assert!(
+            ChurnModel { burst_rate: 1.0, rack: 0, ..Default::default() }.validate().is_err(),
+            "armed bursts need a non-empty rack"
+        );
+        assert!(ChurnModel { burst_rate: 0.0, rack: 0, ..Default::default() }.validate().is_ok());
+    }
+}

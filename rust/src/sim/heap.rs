@@ -1,0 +1,141 @@
+//! The discrete-event priority queue: a binary heap keyed by virtual
+//! time with a **deterministic tie-break**.
+//!
+//! Two events scheduled for the same virtual nanosecond pop in the
+//! order they were pushed (an insertion sequence number is the
+//! secondary key).  That single rule is what makes every simulated run
+//! a pure function of `(scenario, seed)`: the heap never consults the
+//! payload, wall clock, or allocation order, so replaying a scenario
+//! replays the exact event interleaving — the invariant the small-P
+//! parity suite (`tests/integration_sim.rs`) rests on.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled event: `(time, seq)` is the total order, `payload`
+/// is opaque cargo.
+struct Entry<T> {
+    time: u64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    /// Reversed on purpose: `BinaryHeap` is a max-heap, and the
+    /// "greatest" entry must be the earliest `(time, seq)`.
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Min-heap of timestamped events with FIFO tie-breaking.
+pub struct EventHeap<T> {
+    heap: BinaryHeap<Entry<T>>,
+    next_seq: u64,
+}
+
+impl<T> Default for EventHeap<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventHeap<T> {
+    /// An empty heap.
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    /// Schedule `payload` at virtual time `time` (nanoseconds).
+    /// Events at equal times pop in push order.
+    pub fn push(&mut self, time: u64, payload: T) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry { time, seq, payload });
+    }
+
+    /// Pop the earliest event, `None` when drained.
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        self.heap.pop().map(|e| (e.time, e.payload))
+    }
+
+    /// Virtual time of the next event without popping it.
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Events currently scheduled.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Is the heap drained?
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total events ever pushed (scheduled, whether or not processed).
+    pub fn scheduled(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut h = EventHeap::new();
+        h.push(30, "c");
+        h.push(10, "a");
+        h.push(20, "b");
+        assert_eq!(h.peek_time(), Some(10));
+        assert_eq!(h.pop(), Some((10, "a")));
+        assert_eq!(h.pop(), Some((20, "b")));
+        assert_eq!(h.pop(), Some((30, "c")));
+        assert_eq!(h.pop(), None);
+        assert!(h.is_empty());
+        assert_eq!(h.scheduled(), 3);
+    }
+
+    #[test]
+    fn equal_times_pop_fifo() {
+        let mut h = EventHeap::new();
+        for i in 0..100 {
+            h.push(7, i);
+        }
+        h.push(3, 1000);
+        assert_eq!(h.pop(), Some((3, 1000)));
+        for i in 0..100 {
+            assert_eq!(h.pop(), Some((7, i)), "tie-break must be insertion order");
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order() {
+        let mut h = EventHeap::new();
+        h.push(5, 'x');
+        h.push(1, 'y');
+        assert_eq!(h.pop(), Some((1, 'y')));
+        h.push(2, 'z');
+        h.push(5, 'w');
+        assert_eq!(h.pop(), Some((2, 'z')));
+        assert_eq!(h.pop(), Some((5, 'x')), "earlier-pushed 5 first");
+        assert_eq!(h.pop(), Some((5, 'w')));
+        assert_eq!(h.len(), 0);
+    }
+}

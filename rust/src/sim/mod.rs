@@ -1,0 +1,57 @@
+//! `sim` — the mega-scale discrete-event fault simulator.
+//!
+//! The thread-based executor ([`crate::caqr`]) runs real tasks on a
+//! real worker pool: perfect for verifying numerics at P ∈ {4, 8},
+//! hopeless for asking *"what fraction of 10⁶-rank runs survive a
+//! 5%/s churn?"*.  This module answers that question by replaying the
+//! CAQR panel walk and the `Replica → Checksum → Abort` recovery
+//! ladder ([`crate::abft::RecoveryPolicy`]) as **events on a virtual
+//! clock** — no matrices, no threads, no sleeps — so a fault campaign
+//! at P = 10⁵–10⁶ ranks completes in seconds.
+//!
+//! The pieces:
+//!
+//! * [`EventHeap`] — binary heap keyed `(virtual time, sequence)`;
+//!   the FIFO tie-break makes a run a pure function of
+//!   `(scenario, seed)`;
+//! * [`VirtualClock`] — monotonic simulated nanoseconds (time travel
+//!   panics);
+//! * [`NetworkModel`] — ideal / uniform-jitter / lossy-retransmit
+//!   stage-barrier delays;
+//! * [`ChurnModel`] — per-rank Poisson failures, rejoin after a
+//!   delay, and correlated rack wipes generalizing
+//!   [`crate::fault::PairWipeSchedule`];
+//! * [`SimScenario`] — declarative TOML-subset campaign files
+//!   (`repro simulate --scenario FILE`, examples in `rust/scenarios/`);
+//! * [`replay`] / [`run_scenario`] — the runner, emitting a
+//!   [`SimReport`] whose ladder counters carry the executor's exact
+//!   semantics.
+//!
+//! ## The parity anchor
+//!
+//! What makes the extrapolation to 10⁶ ranks trustworthy: at small P
+//! the simulator is not *approximately* the executor, it **is** the
+//! executor's decision procedure.  [`replay`] on a [`CaqrSpec`] with
+//! the executor's own kill schedule reproduces
+//! [`Engine::run_caqr`](crate::engine::Engine::run_caqr)'s
+//! survival/abort outcome and recovery counters exactly — pinned for
+//! P ∈ {4, 8} across all three recovery policies in
+//! `tests/integration_sim.rs`.
+//!
+//! [`CaqrSpec`]: crate::caqr::CaqrSpec
+
+mod churn;
+mod clock;
+mod heap;
+mod network;
+mod runner;
+mod scenario;
+
+pub use churn::ChurnModel;
+pub use clock::VirtualClock;
+pub use heap::EventHeap;
+pub use network::NetworkModel;
+pub use runner::{SimBatchReport, SimReport, replay, run_scenario};
+pub use scenario::{CostModel, SimScenario};
+
+pub(crate) use runner::run_validated;

@@ -1,0 +1,163 @@
+//! Pluggable network models: how long a stage's communication takes in
+//! virtual time.
+//!
+//! The thread-based executor has no network at all (tasks share
+//! memory); the simulator models one delay draw per stage barrier —
+//! the critical-path message of the stage's reduction/broadcast.  The
+//! models only stretch virtual time: they never change *who* is alive
+//! at a stage boundary relative to the scheduled kills, so the small-P
+//! parity pin holds under every model (parity scenarios use
+//! [`NetworkModel::Ideal`], where the draw is identically zero).
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// Network latency model for one simulated run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NetworkModel {
+    /// Zero-latency network (the thread-based executor's semantics).
+    Ideal,
+    /// Fixed latency plus uniform jitter in `[0, jitter_ns]`.
+    Uniform {
+        /// Base latency per stage barrier, nanoseconds.
+        latency_ns: u64,
+        /// Maximum additional uniform jitter, nanoseconds.
+        jitter_ns: u64,
+    },
+    /// [`NetworkModel::Uniform`] plus packet loss: each retransmit
+    /// round (probability `loss`, geometric) costs `retransmit_ns`.
+    Lossy {
+        /// Base latency per stage barrier, nanoseconds.
+        latency_ns: u64,
+        /// Maximum additional uniform jitter, nanoseconds.
+        jitter_ns: u64,
+        /// Per-message loss probability in `[0, 1)`.
+        loss: f64,
+        /// Timeout-and-retransmit penalty per lost round, nanoseconds.
+        retransmit_ns: u64,
+    },
+}
+
+/// Retransmit rounds are capped so a `loss` close to 1 cannot spin the
+/// geometric draw unboundedly (64 rounds ≈ a dead link; the virtual
+/// time cost is already enormous by then).
+const MAX_RETRANSMITS: u32 = 64;
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel::Ideal
+    }
+}
+
+impl NetworkModel {
+    /// Stable name (`ideal` / `uniform` / `lossy`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetworkModel::Ideal => "ideal",
+            NetworkModel::Uniform { .. } => "uniform",
+            NetworkModel::Lossy { .. } => "lossy",
+        }
+    }
+
+    /// Check model parameters (loss must be a probability below 1).
+    pub fn validate(&self) -> Result<()> {
+        if let NetworkModel::Lossy { loss, .. } = self {
+            if !(0.0..1.0).contains(loss) || !loss.is_finite() {
+                return Err(Error::Config(format!(
+                    "network loss must be in [0, 1), got {loss}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Draw one stage-barrier delay in virtual nanoseconds.
+    pub fn delay(&self, rng: &mut Rng) -> u64 {
+        match *self {
+            NetworkModel::Ideal => 0,
+            NetworkModel::Uniform { latency_ns, jitter_ns } => {
+                latency_ns + jitter(rng, jitter_ns)
+            }
+            NetworkModel::Lossy { latency_ns, jitter_ns, loss, retransmit_ns } => {
+                let mut d = latency_ns + jitter(rng, jitter_ns);
+                let mut rounds = 0;
+                while rounds < MAX_RETRANSMITS && rng.bool(loss) {
+                    d += retransmit_ns;
+                    rounds += 1;
+                }
+                d
+            }
+        }
+    }
+}
+
+fn jitter(rng: &mut Rng, jitter_ns: u64) -> u64 {
+    if jitter_ns == 0 { 0 } else { rng.range_u64(0, jitter_ns + 1) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_free_and_deterministic() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(NetworkModel::Ideal.delay(&mut rng), 0);
+        }
+        assert_eq!(NetworkModel::default(), NetworkModel::Ideal);
+    }
+
+    #[test]
+    fn uniform_stays_in_band() {
+        let m = NetworkModel::Uniform { latency_ns: 100, jitter_ns: 50 };
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let d = m.delay(&mut rng);
+            assert!((100..=150).contains(&d), "delay {d} outside [100, 150]");
+        }
+        let fixed = NetworkModel::Uniform { latency_ns: 7, jitter_ns: 0 };
+        assert_eq!(fixed.delay(&mut rng), 7, "zero jitter draws nothing");
+    }
+
+    #[test]
+    fn lossy_adds_retransmits_and_caps() {
+        let m = NetworkModel::Lossy {
+            latency_ns: 10,
+            jitter_ns: 0,
+            loss: 0.5,
+            retransmit_ns: 100,
+        };
+        let mut rng = Rng::new(3);
+        let n = 10_000;
+        let total: u64 = (0..n).map(|_| m.delay(&mut rng)).sum();
+        // E[delay] = 10 + 100 · loss/(1−loss) = 110.
+        let mean = total as f64 / n as f64;
+        assert!((mean - 110.0).abs() < 10.0, "mean {mean}");
+        // Even a near-dead link terminates.
+        let dead = NetworkModel::Lossy {
+            latency_ns: 0,
+            jitter_ns: 0,
+            loss: 0.999999,
+            retransmit_ns: 1,
+        };
+        assert!(dead.delay(&mut rng) <= MAX_RETRANSMITS as u64);
+    }
+
+    #[test]
+    fn validation_rejects_bad_loss() {
+        assert!(NetworkModel::Ideal.validate().is_ok());
+        let ok = NetworkModel::Lossy { latency_ns: 1, jitter_ns: 1, loss: 0.3, retransmit_ns: 1 };
+        assert!(ok.validate().is_ok());
+        for loss in [1.0, 1.5, -0.1, f64::NAN] {
+            let bad = NetworkModel::Lossy { latency_ns: 1, jitter_ns: 1, loss, retransmit_ns: 1 };
+            assert!(bad.validate().is_err(), "loss {loss} must be rejected");
+        }
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(NetworkModel::Ideal.name(), "ideal");
+        assert_eq!(NetworkModel::Uniform { latency_ns: 0, jitter_ns: 0 }.name(), "uniform");
+    }
+}

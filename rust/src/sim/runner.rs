@@ -1,0 +1,794 @@
+//! The event-driven replay of the CAQR coordinator: the
+//! [`crate::caqr::exec`] panel walk and recovery ladder re-expressed
+//! as heap events over a virtual clock.
+//!
+//! No matrices, no per-rank threads, no real sleeps: per panel the
+//! runner costs `O(blocks + checksums + deaths)` **independent of the
+//! world size**, which is what moves fault campaigns from the
+//! thread-based executor's P ∈ {4, 8} to P = 10⁵–10⁶ ranks.
+//!
+//! ## The parity contract
+//!
+//! For a scenario with no churn and an ideal network, the runner's
+//! ladder decisions are *byte-for-byte* the thread-based executor's:
+//! it fires the same `(rank, panel, stage)` kills at the same stage
+//! boundaries, walks the identical replica → checksum → abort ladder
+//! ([`crate::abft::RecoveryPolicy`]), and reproduces the executor's
+//! survival/abort outcome and recovery counters exactly.
+//! [`replay`] packages that path for a [`CaqrSpec`], and
+//! `tests/integration_sim.rs` pins it against
+//! [`Engine::run_caqr`](crate::engine::Engine::run_caqr) for
+//! P ∈ {4, 8} across all three policies.
+//!
+//! Churn, bursts, and network delays then *extend* the same machine:
+//! they only add liveness flips and virtual-time stretches between
+//! the stage boundaries the ladder already evaluates.
+
+use std::collections::HashMap;
+
+use crate::abft::RecoveryPolicy;
+use crate::caqr::CaqrSpec;
+use crate::error::Result;
+use crate::fault::CaqrStage;
+use crate::metrics::VirtualTimeBreakdown;
+use crate::tsqr::{Algo, PanelPlan};
+use crate::util::Rng;
+
+use super::clock::VirtualClock;
+use super::heap::EventHeap;
+use super::scenario::SimScenario;
+
+/// One simulator event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Event {
+    /// Panel `k`'s stage begins: scheduled kills for the stage fire.
+    StageStart(usize, CaqrStage),
+    /// Panel `k`'s stage barrier: the recovery ladder is evaluated
+    /// against current liveness.
+    StageEnd(usize, CaqrStage),
+    /// Independent churn death of a rank.
+    Fail(usize),
+    /// A churn-killed rank re-enters the world.
+    Rejoin(usize),
+    /// Correlated rack wipe.
+    Burst,
+}
+
+/// Outcome and accounting of one simulated run.
+///
+/// The counter fields carry the executor's
+/// [`MetricsSnapshot`](crate::ulfm::MetricsSnapshot) semantics (that
+/// is the parity contract); the churn/virtual-time fields are
+/// simulator-only.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimReport {
+    /// Simulated world size.
+    pub procs: usize,
+    /// Panels the plan scheduled.
+    pub panels: usize,
+    /// Failure semantics the run executed under.
+    pub algo: Algo,
+    /// Recovery ladder the run executed under.
+    pub policy: RecoveryPolicy,
+    /// Checksum blocks armed per panel stage.
+    pub checksums: usize,
+    /// Where the run died, if it did (ladder exhausted).
+    pub failed_at: Option<(usize, CaqrStage)>,
+    /// Panels whose factor + updates fully completed.
+    pub panels_completed: u64,
+    /// Live update-task executions (data replicas + armed checksum
+    /// tasks), counted exactly as the executor spawns them.
+    pub update_tasks: u64,
+    /// Blocks harvested from the surviving replica (owner dead).
+    pub update_recoveries: u64,
+    /// Completed panels whose factor owner was dead at harvest.
+    pub factor_recoveries: u64,
+    /// Task results rebuilt algebraically from checksums.
+    pub checksum_reconstructions: u64,
+    /// `(panel, stage)` events the checksum rung carried the run past.
+    pub pair_wipes_survived: u64,
+    /// Dead ranks respawned at panel boundaries (Self-Healing).
+    pub respawns: u64,
+    /// Scheduled `(rank, panel, stage)` kills that actually fired.
+    pub scheduled_kills: u64,
+    /// Independent churn + burst deaths.
+    pub failures: u64,
+    /// Churn-killed ranks that re-entered the world.
+    pub rejoins: u64,
+    /// Rack wipes that struck.
+    pub bursts: u64,
+    /// Ranks dead at the end of the run.
+    pub dead: usize,
+    /// Events processed (clock advances).
+    pub events: u64,
+    /// Events ever scheduled (the heap may hold unfired churn events
+    /// at termination).
+    pub events_scheduled: u64,
+    /// Virtual time at termination, nanoseconds.
+    pub virtual_ns: u64,
+    /// Where the virtual time went.
+    pub time: VirtualTimeBreakdown,
+}
+
+impl SimReport {
+    /// Did the factorization complete?
+    pub fn success(&self) -> bool {
+        self.failed_at.is_none()
+    }
+}
+
+/// Aggregate of one simulated campaign: every sample's [`SimReport`]
+/// plus the real (wall-clock) time the batch took — the numerator of
+/// the simulator's reason to exist, events per *real* second.
+/// Produced by [`Engine::simulate`](crate::engine::Engine::simulate).
+#[derive(Debug, Clone)]
+pub struct SimBatchReport {
+    /// Per-sample reports, in sample order.
+    pub reports: Vec<SimReport>,
+    /// Real time the whole batch took.
+    pub wall: std::time::Duration,
+}
+
+impl SimBatchReport {
+    /// Samples that completed the factorization.
+    pub fn successes(&self) -> u64 {
+        self.reports.iter().filter(|r| r.success()).count() as u64
+    }
+
+    /// Survival statistics over the batch.
+    pub fn survival(&self) -> crate::analysis::SurvivalEstimate {
+        crate::analysis::SurvivalEstimate {
+            trials: self.reports.len() as u64,
+            successes: self.successes(),
+        }
+    }
+
+    /// Total simulator events processed across all samples.
+    pub fn events(&self) -> u64 {
+        self.reports.iter().map(|r| r.events).sum()
+    }
+
+    /// Events processed per real second — the throughput the
+    /// `sim_throughput` bench gates on.
+    pub fn events_per_sec(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s > 0.0 { self.events() as f64 / s } else { 0.0 }
+    }
+
+    /// Total virtual time simulated across all samples, nanoseconds.
+    pub fn virtual_ns(&self) -> u64 {
+        self.reports.iter().map(|r| r.virtual_ns).sum()
+    }
+
+    /// Merged virtual-time breakdown across all samples.
+    pub fn time(&self) -> VirtualTimeBreakdown {
+        let mut t = VirtualTimeBreakdown::default();
+        for r in &self.reports {
+            t.merge(&r.time);
+        }
+        t
+    }
+}
+
+/// Replay a [`CaqrSpec`]'s kill schedule event-driven — the parity
+/// entry point.  Reads the schedule without consuming it, resolves the
+/// policy/checksums exactly as the executor does, and runs with zero
+/// network delay and no churn.
+pub fn replay(spec: &CaqrSpec) -> Result<SimReport> {
+    spec.validate()?;
+    let policy = spec.policy.unwrap_or_default();
+    let armed = if policy.uses_checksums() { spec.checksums } else { 0 };
+    let mut sim = Sim::new(
+        spec.plan(),
+        spec.algo,
+        policy,
+        armed,
+        super::scenario::CostModel::default(),
+        super::NetworkModel::Ideal,
+        super::ChurnModel::default(),
+        &spec.schedule.entries(),
+        spec.seed,
+    );
+    Ok(sim.run())
+}
+
+/// Run one scenario sample (validates first).  Campaigns go through
+/// [`Engine::simulate`](crate::engine::Engine::simulate) instead,
+/// which fans the samples over the worker pool.
+pub fn run_scenario(sc: &SimScenario) -> Result<SimReport> {
+    sc.validate()?;
+    Ok(run_validated(sc))
+}
+
+/// Scenario entry for callers that already validated (the engine).
+pub(crate) fn run_validated(sc: &SimScenario) -> SimReport {
+    let mut sim = Sim::new(
+        sc.plan(),
+        sc.algo,
+        sc.policy,
+        sc.armed_checksums(),
+        sc.costs,
+        sc.network,
+        sc.churn,
+        &sc.kills,
+        sc.seed,
+    );
+    sim.run()
+}
+
+struct Sim {
+    plan: PanelPlan,
+    procs: usize,
+    algo: Algo,
+    policy: RecoveryPolicy,
+    checksums: usize,
+    use_checksums: bool,
+    costs: super::scenario::CostModel,
+    network: super::NetworkModel,
+    churn: super::ChurnModel,
+    rng: Rng,
+    heap: EventHeap<Event>,
+    clock: VirtualClock,
+    alive: Vec<bool>,
+    alive_count: usize,
+    /// Pending scheduled kills, indexed by the stage they strike.
+    kills: HashMap<(usize, CaqrStage), Vec<usize>>,
+    /// Journal of liveness at the current panel's start: records a
+    /// rank's panel-start value the first time it flips within the
+    /// panel.  Cleared at each factor StageStart — O(flips), never
+    /// O(P), unlike the executor's full snapshots.
+    panel_start: HashMap<usize, bool>,
+    /// One pending churn Fail event per rank at most.
+    fail_pending: Vec<bool>,
+    /// Ranks that died since the last boundary (Self-Healing respawn
+    /// set; unused under Redundant).
+    died_since_boundary: Vec<usize>,
+    /// Factor owner of the in-flight panel was dead at harvest.
+    pending_factor_recovered: bool,
+    report: SimReport,
+    done: bool,
+}
+
+impl Sim {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        plan: PanelPlan,
+        algo: Algo,
+        policy: RecoveryPolicy,
+        checksums: usize,
+        costs: super::scenario::CostModel,
+        network: super::NetworkModel,
+        churn: super::ChurnModel,
+        kills: &[(usize, usize, CaqrStage)],
+        seed: u64,
+    ) -> Self {
+        let procs = plan.procs();
+        let mut by_stage: HashMap<(usize, CaqrStage), Vec<usize>> = HashMap::new();
+        for &(r, k, stage) in kills {
+            by_stage.entry((k, stage)).or_default().push(r);
+        }
+        for ranks in by_stage.values_mut() {
+            ranks.sort_unstable();
+            ranks.dedup();
+        }
+        let report = SimReport {
+            procs,
+            panels: plan.panels(),
+            algo,
+            policy,
+            checksums,
+            failed_at: None,
+            panels_completed: 0,
+            update_tasks: 0,
+            update_recoveries: 0,
+            factor_recoveries: 0,
+            checksum_reconstructions: 0,
+            pair_wipes_survived: 0,
+            respawns: 0,
+            scheduled_kills: 0,
+            failures: 0,
+            rejoins: 0,
+            bursts: 0,
+            dead: 0,
+            events: 0,
+            events_scheduled: 0,
+            virtual_ns: 0,
+            time: VirtualTimeBreakdown::default(),
+        };
+        Self {
+            plan,
+            procs,
+            algo,
+            policy,
+            checksums,
+            use_checksums: policy.uses_checksums() && checksums > 0,
+            costs,
+            network,
+            churn,
+            rng: Rng::new(seed),
+            heap: EventHeap::new(),
+            clock: VirtualClock::new(),
+            alive: vec![true; procs],
+            alive_count: procs,
+            kills: by_stage,
+            panel_start: HashMap::new(),
+            fail_pending: vec![false; procs],
+            died_since_boundary: Vec::new(),
+            pending_factor_recovered: false,
+            report,
+            done: false,
+        }
+    }
+
+    fn run(&mut self) -> SimReport {
+        // Seed the event horizon: one churn lifetime per rank, the
+        // first rack wipe, and panel 0's factor stage.
+        if self.churn.churns() {
+            for r in 0..self.procs {
+                let t = self.churn.lifetime_ns(&mut self.rng);
+                self.heap.push(t, Event::Fail(r));
+                self.fail_pending[r] = true;
+            }
+        }
+        if self.churn.bursts() {
+            let gap = self.churn.burst_gap_ns(&mut self.rng);
+            self.heap.push(gap, Event::Burst);
+        }
+        self.heap.push(0, Event::StageStart(0, CaqrStage::Factor));
+
+        while !self.done {
+            let Some((t, ev)) = self.heap.pop() else { break };
+            self.clock.advance_to(t);
+            self.handle(ev);
+        }
+
+        self.report.dead = self.procs - self.alive_count;
+        self.report.events = self.clock.events_processed();
+        self.report.events_scheduled = self.heap.scheduled();
+        self.report.virtual_ns = self.clock.now_ns();
+        self.report.clone()
+    }
+
+    // ------------------------------------------------ liveness flips
+
+    /// Journal `r`'s current liveness as its panel-start value, unless
+    /// the panel already saw it flip.
+    fn journal(&mut self, r: usize) {
+        self.panel_start.entry(r).or_insert(self.alive[r]);
+    }
+
+    fn alive_at_panel_start(&self, r: usize) -> bool {
+        *self.panel_start.get(&r).unwrap_or(&self.alive[r])
+    }
+
+    /// Kill `r` if alive; returns whether it died.
+    fn kill(&mut self, r: usize) -> bool {
+        if !self.alive[r] {
+            return false;
+        }
+        self.journal(r);
+        self.alive[r] = false;
+        self.alive_count -= 1;
+        if self.algo == Algo::SelfHealing {
+            self.died_since_boundary.push(r);
+        }
+        true
+    }
+
+    fn revive(&mut self, r: usize) {
+        debug_assert!(!self.alive[r]);
+        self.journal(r);
+        self.alive[r] = true;
+        self.alive_count += 1;
+    }
+
+    /// After a revival, re-arm the rank's churn clock (at most one
+    /// pending Fail per rank).
+    fn rearm_churn(&mut self, r: usize) {
+        if self.churn.churns() && !self.fail_pending[r] {
+            let t = self.clock.now_ns() + self.churn.lifetime_ns(&mut self.rng);
+            self.heap.push(t, Event::Fail(r));
+            self.fail_pending[r] = true;
+        }
+    }
+
+    /// A rank died to churn/burst: count it and schedule its rejoin.
+    fn churn_death(&mut self, r: usize) {
+        self.report.failures += 1;
+        if self.churn.rejoin_ns > 0 {
+            self.heap.push(self.clock.now_ns() + self.churn.rejoin_ns, Event::Rejoin(r));
+        }
+    }
+
+    // ------------------------------------------------- ladder helpers
+
+    /// The ranks that compute panel `k`'s factor under the policy
+    /// (mirrors the executor's `factor_task_ranks`).
+    fn factor_alive(&self, k: usize) -> bool {
+        if self.policy.replicates() {
+            self.plan.factor_replicas(k).into_iter().any(|r| self.alive[r])
+        } else {
+            self.alive[self.plan.factor_owner(k)]
+        }
+    }
+
+    /// Checksums of panel `k` with a live holder (mirrors the
+    /// executor's `live_checksums`), as a count.
+    fn live_checksums(&self, k: usize) -> usize {
+        (0..self.checksums)
+            .filter(|&l| self.plan.checksum_assignees(k, l).into_iter().any(|r| self.alive[r]))
+            .count()
+    }
+
+    /// Holder groups freshly wiped at panel `k`'s factor stage: of the
+    /// groups that held panel data at panel start, how many have no
+    /// survivor now (mirrors the executor's `holder_groups` walk).
+    fn lost_holder_groups(&self, _k: usize) -> usize {
+        let pairs = self.policy.replicates() && self.procs >= 2;
+        let groups = if pairs { self.procs / 2 } else { self.procs };
+        let mut lost = 0;
+        for g in 0..groups {
+            let (a, b) = if pairs { (2 * g, 2 * g + 1) } else { (g, g) };
+            let held = self.alive_at_panel_start(a) || self.alive_at_panel_start(b);
+            if held && !(self.alive[a] || self.alive[b]) {
+                lost += 1;
+            }
+        }
+        lost
+    }
+
+    // ------------------------------------------------- event handlers
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::StageStart(k, stage) => self.stage_start(k, stage),
+            Event::StageEnd(k, stage) => self.stage_end(k, stage),
+            Event::Fail(r) => {
+                self.fail_pending[r] = false;
+                if self.kill(r) {
+                    self.churn_death(r);
+                }
+            }
+            Event::Rejoin(r) => {
+                if !self.alive[r] {
+                    self.revive(r);
+                    self.report.rejoins += 1;
+                    self.rearm_churn(r);
+                }
+            }
+            Event::Burst => {
+                self.report.bursts += 1;
+                let g = self.rng.below(self.churn.racks(self.procs));
+                let (lo, hi) = self.churn.rack_range(g, self.procs);
+                for r in lo..hi {
+                    if self.kill(r) {
+                        self.churn_death(r);
+                    }
+                }
+                let gap = self.churn.burst_gap_ns(&mut self.rng);
+                self.heap.push(self.clock.now_ns() + gap, Event::Burst);
+            }
+        }
+    }
+
+    /// Fire the scheduled kills of `(k, stage)` — exactly the
+    /// executor's rule: an entry fires only if its rank is alive.
+    fn fire_scheduled(&mut self, k: usize, stage: CaqrStage) {
+        if let Some(ranks) = self.kills.remove(&(k, stage)) {
+            for r in ranks {
+                if self.kill(r) {
+                    self.report.scheduled_kills += 1;
+                }
+            }
+        }
+    }
+
+    fn stage_start(&mut self, k: usize, stage: CaqrStage) {
+        match stage {
+            CaqrStage::Factor => {
+                // New panel: reset the panel-start journal *before*
+                // this stage's kills fire, so the ladder sees who held
+                // data when the panel began.
+                self.panel_start.clear();
+                self.fire_scheduled(k, CaqrStage::Factor);
+                let work = self.costs.factor_ns;
+                let net = self.network.delay(&mut self.rng);
+                self.report.time.compute_ns += work;
+                self.report.time.network_ns += net;
+                self.heap.push(
+                    self.clock.now_ns() + work + net,
+                    Event::StageEnd(k, CaqrStage::Factor),
+                );
+            }
+            CaqrStage::Update => {
+                self.fire_scheduled(k, CaqrStage::Update);
+                let blocks = self.plan.update_blocks(k);
+                let repl = if self.policy.replicates() && self.procs >= 2 { 2 } else { 1 };
+                let check_holders = if self.procs > 2 { 2 } else { 1 };
+                let tasks = blocks * repl
+                    + if blocks > 0 { self.checksums * check_holders } else { 0 };
+                let slots = self.alive_count.max(1);
+                let work = self.costs.update_ns * tasks.div_ceil(slots) as u64;
+                let net = self.network.delay(&mut self.rng);
+                self.report.time.compute_ns += work;
+                self.report.time.network_ns += net;
+                self.heap.push(
+                    self.clock.now_ns() + work + net,
+                    Event::StageEnd(k, CaqrStage::Update),
+                );
+            }
+        }
+    }
+
+    fn stage_end(&mut self, k: usize, stage: CaqrStage) {
+        match stage {
+            CaqrStage::Factor => self.factor_barrier(k),
+            CaqrStage::Update => self.update_barrier(k),
+        }
+    }
+
+    /// Factor-stage barrier: the executor's factor ladder.
+    fn factor_barrier(&mut self, k: usize) {
+        let mut penalty = 0u64;
+        if !self.factor_alive(k) {
+            // Every factor replica is dead: the checksum rung rebuilds
+            // the wiped pairs' input shards and re-executes — if the
+            // policy has the rung, a survivor exists, and enough
+            // checksum shards survive.
+            let lost = self.lost_holder_groups(k);
+            let feasible = self.use_checksums
+                && self.alive_count > 0
+                && lost <= self.live_checksums(k);
+            if !feasible {
+                self.report.failed_at = Some((k, CaqrStage::Factor));
+                self.done = true;
+                return;
+            }
+            self.report.checksum_reconstructions += lost as u64;
+            self.report.pair_wipes_survived += 1;
+            // Rebuild the lost shards, then re-execute the factor.
+            penalty = self.costs.factor_ns + self.costs.update_ns * lost as u64;
+            self.report.time.recovery_ns += penalty;
+        }
+        self.pending_factor_recovered = !self.alive[self.plan.factor_owner(k)];
+        self.heap.push(
+            self.clock.now_ns() + penalty,
+            Event::StageStart(k, CaqrStage::Update),
+        );
+    }
+
+    /// Update-stage barrier: the executor's update ladder, task
+    /// accounting, and panel boundary.
+    fn update_barrier(&mut self, k: usize) {
+        let blocks = self.plan.update_blocks(k);
+        let replicates = self.policy.replicates();
+        let (mut lost, mut live_tasks, mut recoveries) = (0u64, 0u64, 0u64);
+        for j in 0..blocks {
+            let owner = self.plan.update_owner(k, j);
+            let (live, owner_alive) = if replicates {
+                let asg = self.plan.update_assignees(k, j);
+                (
+                    asg.iter().filter(|&&r| self.alive[r]).count() as u64,
+                    self.alive[owner],
+                )
+            } else {
+                (u64::from(self.alive[owner]), self.alive[owner])
+            };
+            if live == 0 {
+                lost += 1;
+            } else {
+                live_tasks += live;
+                if !owner_alive {
+                    recoveries += 1;
+                }
+            }
+        }
+        if lost > 0 {
+            let feasible = self.use_checksums && lost as usize <= self.live_checksums(k);
+            if !feasible {
+                self.report.failed_at = Some((k, CaqrStage::Update));
+                self.done = true;
+                // The executor breaks before spawning this panel's
+                // update tasks: count nothing.
+                return;
+            }
+            self.report.checksum_reconstructions += lost;
+            self.report.pair_wipes_survived += 1;
+            let penalty = self.costs.update_ns * lost;
+            self.report.time.recovery_ns += penalty;
+        }
+        if self.checksums > 0 && blocks > 0 {
+            for l in 0..self.checksums {
+                live_tasks += self
+                    .plan
+                    .checksum_assignees(k, l)
+                    .into_iter()
+                    .filter(|&r| self.alive[r])
+                    .count() as u64;
+            }
+        }
+        self.report.update_tasks += live_tasks;
+        self.report.update_recoveries += recoveries;
+        self.report.factor_recoveries += u64::from(self.pending_factor_recovered);
+        self.report.panels_completed += 1;
+
+        // --------------------------------------------- panel boundary
+        if self.algo == Algo::SelfHealing && !self.died_since_boundary.is_empty() {
+            let mut dead = std::mem::take(&mut self.died_since_boundary);
+            dead.sort_unstable();
+            dead.dedup();
+            for r in dead {
+                if !self.alive[r] {
+                    self.revive(r);
+                    self.report.respawns += 1;
+                    self.rearm_churn(r);
+                }
+            }
+        }
+        let recovery_lag = self.costs.update_ns * lost;
+        if k + 1 < self.plan.panels() {
+            self.heap.push(
+                self.clock.now_ns() + recovery_lag,
+                Event::StageStart(k + 1, CaqrStage::Factor),
+            );
+        } else {
+            self.done = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::CaqrKillSchedule;
+
+    fn spec(procs: usize) -> CaqrSpec {
+        CaqrSpec::new(Algo::Redundant, procs, 32, 16, 4).with_verify(false)
+    }
+
+    #[test]
+    fn fault_free_run_completes_all_panels() {
+        let r = replay(&spec(4)).unwrap();
+        assert!(r.success());
+        assert_eq!(r.panels_completed, 4);
+        assert_eq!(r.dead, 0);
+        assert_eq!(r.failed_at, None);
+        assert_eq!(r.update_tasks, (3 + 2 + 1) * 2, "3 panels of trailing blocks, 2 copies");
+        assert!(r.events >= 16, "4 panels x 4 stage events");
+        assert!(r.virtual_ns > 0);
+        assert_eq!(r.time.recovery_ns, 0);
+        assert_eq!(r.time.network_ns, 0, "parity path is an ideal network");
+    }
+
+    #[test]
+    fn replay_is_deterministic_and_nonconsuming() {
+        let s = spec(8).with_schedule(CaqrKillSchedule::at(&[(1, 0, CaqrStage::Update)]));
+        let a = replay(&s).unwrap();
+        let b = replay(&s).unwrap();
+        assert_eq!(a, b, "same spec, same report — and the schedule was not consumed");
+        assert_eq!(a.scheduled_kills, 1);
+        assert_eq!(a.update_recoveries, 1, "owner's block came from the replica");
+        assert_eq!(a.dead, 1);
+    }
+
+    #[test]
+    fn pair_wipe_aborts_without_checksums_and_survives_with() {
+        let wipe = [(2, 0, CaqrStage::Update), (3, 0, CaqrStage::Update)];
+        let aborted = replay(&spec(4).with_schedule(CaqrKillSchedule::at(&wipe))).unwrap();
+        assert_eq!(aborted.failed_at, Some((0, CaqrStage::Update)));
+        assert_eq!(aborted.update_tasks, 0, "no tasks spawn on the failing panel");
+
+        // The wiped pair (2, 3) owns *two* of panel 0's three update
+        // blocks (owners 1+j mod 4 = 1, 2, 3, buddies owner^1), so
+        // healing needs two checksum blocks, the P = 4 maximum.
+        let healed = replay(
+            &spec(4)
+                .with_schedule(CaqrKillSchedule::at(&wipe))
+                .with_policy(RecoveryPolicy::Hybrid)
+                .with_checksums(2),
+        )
+        .unwrap();
+        assert!(healed.success());
+        assert_eq!(healed.checksum_reconstructions, 2);
+        assert_eq!(healed.pair_wipes_survived, 1);
+        assert!(healed.time.recovery_ns > 0, "reconstruction costs virtual time");
+    }
+
+    #[test]
+    fn self_healing_respawns_at_the_boundary() {
+        let s = CaqrSpec::new(Algo::SelfHealing, 4, 32, 16, 4)
+            .with_verify(false)
+            .with_schedule(CaqrKillSchedule::at(&[(1, 0, CaqrStage::Update)]));
+        let r = replay(&s).unwrap();
+        assert!(r.success());
+        assert_eq!(r.respawns, 1);
+        assert_eq!(r.dead, 0, "healed world ends at full size");
+    }
+
+    #[test]
+    fn churn_kills_and_rejoins_ranks() {
+        let sc = SimScenario {
+            procs: 64,
+            panels: 8,
+            panel: 8,
+            algo: Algo::SelfHealing,
+            // ~1 death per rank per virtual second against ~1 ms
+            // panels: raise the rate so deaths land inside the run.
+            churn: super::super::ChurnModel {
+                fail_rate: 2000.0,
+                rejoin_ns: 200_000,
+                ..Default::default()
+            },
+            policy: RecoveryPolicy::Hybrid,
+            checksums: 8,
+            ..Default::default()
+        };
+        let r = run_scenario(&sc).unwrap();
+        assert!(r.failures > 0, "churn must strike at this rate: {r:?}");
+        assert!(r.rejoins > 0 || r.respawns > 0, "the world must heal: {r:?}");
+        let again = run_scenario(&sc).unwrap();
+        assert_eq!(r, again, "churn runs are a pure function of the seed");
+    }
+
+    #[test]
+    fn bursts_wipe_racks() {
+        let sc = SimScenario {
+            procs: 32,
+            panels: 4,
+            panel: 4,
+            // ~20µs between wipes against a ~500µs run: the first
+            // burst lands well inside the factorization.
+            churn: super::super::ChurnModel {
+                burst_rate: 50_000.0,
+                rack: 8,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = run_scenario(&sc).unwrap();
+        assert!(r.bursts > 0, "burst rate of 5000/s must strike: {r:?}");
+        assert!(
+            r.failures >= 8 || r.failed_at.is_some(),
+            "a burst kills a whole rack: {r:?}"
+        );
+    }
+
+    #[test]
+    fn network_latency_stretches_virtual_time_only() {
+        let ideal = SimScenario { procs: 8, ..Default::default() };
+        let slow = SimScenario {
+            procs: 8,
+            network: super::super::NetworkModel::Uniform {
+                latency_ns: 1_000_000,
+                jitter_ns: 0,
+            },
+            ..Default::default()
+        };
+        let a = run_scenario(&ideal).unwrap();
+        let b = run_scenario(&slow).unwrap();
+        assert!(b.virtual_ns > a.virtual_ns, "latency must stretch the clock");
+        assert_eq!(b.time.network_ns, 16 * 1_000_000, "8 panels x 2 stage barriers x 1ms");
+        assert_eq!(
+            (a.failed_at, a.panels_completed, a.update_tasks),
+            (b.failed_at, b.panels_completed, b.update_tasks),
+            "the network must not change ladder outcomes"
+        );
+    }
+
+    #[test]
+    fn mega_world_runs_in_panel_bounded_work() {
+        // 10^5 ranks: the whole point of the event-driven core.  No
+        // churn, so the run processes O(panels) events regardless of P.
+        let sc = SimScenario {
+            procs: 100_000,
+            panels: 16,
+            panel: 8,
+            ..Default::default()
+        };
+        let r = run_scenario(&sc).unwrap();
+        assert!(r.success());
+        assert_eq!(r.procs, 100_000);
+        assert_eq!(r.panels_completed, 16);
+        assert_eq!(r.events, 16 * 4, "4 events per panel, independent of P");
+    }
+}

@@ -1,0 +1,451 @@
+//! Declarative fault-campaign scenarios: the TOML-subset files behind
+//! `repro simulate --scenario FILE`.
+//!
+//! A scenario pins everything a simulated campaign needs — world size,
+//! panel plan, recovery policy, cost/network/churn models, explicit
+//! kills, sample count and seed — so a campaign is reproducible from
+//! one committed file (see `rust/scenarios/` for examples).  Format:
+//!
+//! ```text
+//! name = "pair-wipe-demo"
+//! procs = 1024
+//! panels = 16          # plan is (panels·panel) square, block width `panel`
+//! panel = 8
+//! algo = "self-healing"
+//! policy = "hybrid"
+//! checksums = 4
+//! samples = 100
+//! seed = 42
+//!
+//! [costs]
+//! factor-us = 100      # virtual cost of one panel factor stage
+//! update-us = 25       # virtual cost of one update-task slot
+//!
+//! [network]
+//! model = "lossy"      # ideal | uniform | lossy
+//! latency-us = 10
+//! jitter-us = 2
+//! loss = 0.01
+//! retransmit-us = 50
+//!
+//! [churn]
+//! fail-rate = 0.05     # deaths per rank per virtual second
+//! rejoin-ms = 400      # crashed ranks rejoin (0 = never)
+//! burst-rate = 0.2     # rack wipes per virtual second
+//! rack = 64            # ranks per rack (2 = buddy-pair wipe)
+//!
+//! [kills]
+//! update = [[2, 0], [3, 0]]   # explicit (rank, panel) update-stage kills
+//! factor = [[1, 1]]           # explicit (rank, panel) factor-stage kills
+//! ```
+//!
+//! Parsing reuses [`crate::util::kv::Doc`] (the crate's `toml`
+//! replacement) and rejects unknown keys, like [`crate::config`].
+
+use std::path::Path;
+
+use crate::abft::RecoveryPolicy;
+use crate::error::{Error, Result};
+use crate::fault::CaqrStage;
+use crate::tsqr::{Algo, PanelPlan};
+use crate::util::kv::Doc;
+use crate::util::derive_seed;
+
+use super::churn::ChurnModel;
+use super::network::NetworkModel;
+
+/// Virtual cost of one stage of work (what the simulator charges to
+/// [`crate::metrics::VirtualTimeBreakdown::compute_ns`] per stage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostModel {
+    /// Virtual nanoseconds of one panel-factor stage.
+    pub factor_ns: u64,
+    /// Virtual nanoseconds of one update-task pool slot.
+    pub update_ns: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // 100µs factor / 25µs update slot: panel-factor-bound, the
+        // regime the lookahead scheduler was built for.
+        Self { factor_ns: 100_000, update_ns: 25_000 }
+    }
+}
+
+/// Keys accepted in a scenario file (anything else is a config error —
+/// catches typos the way serde's `deny_unknown_fields` would).
+const KNOWN_KEYS: &[&str] = &[
+    "name",
+    "procs",
+    "panels",
+    "panel",
+    "algo",
+    "policy",
+    "checksums",
+    "samples",
+    "seed",
+    "costs.factor-us",
+    "costs.update-us",
+    "network.model",
+    "network.latency-us",
+    "network.jitter-us",
+    "network.loss",
+    "network.retransmit-us",
+    "churn.fail-rate",
+    "churn.rejoin-ms",
+    "churn.burst-rate",
+    "churn.rack",
+    "kills.update",
+    "kills.factor",
+];
+
+/// One declarative simulation campaign.
+#[derive(Debug, Clone)]
+pub struct SimScenario {
+    /// Display name (reports and logs).
+    pub name: String,
+    /// Simulated world size — the axis the simulator exists for
+    /// (10⁵–10⁶ ranks are routine).
+    pub procs: usize,
+    /// Panels in the plan (the factorization is `(panels·panel)`²).
+    pub panels: usize,
+    /// Block-column width.
+    pub panel: usize,
+    /// Failure semantics ([`Algo::Redundant`] or [`Algo::SelfHealing`]).
+    pub algo: Algo,
+    /// Recovery ladder ([`RecoveryPolicy`]).
+    pub policy: RecoveryPolicy,
+    /// Checksum blocks per panel stage (consumed only when the policy
+    /// uses checksums, mirroring [`crate::caqr::CaqrSpec`]).
+    pub checksums: usize,
+    /// Monte-Carlo samples the campaign runs.
+    pub samples: u64,
+    /// Base seed; sample `i` runs under
+    /// [`derive_seed`]`(seed, i)`.
+    pub seed: u64,
+    /// Virtual stage costs.
+    pub costs: CostModel,
+    /// Network model.
+    pub network: NetworkModel,
+    /// Churn / burst model.
+    pub churn: ChurnModel,
+    /// Explicit `(rank, panel, stage)` kills, fired exactly like a
+    /// [`crate::fault::CaqrKillSchedule`].
+    pub kills: Vec<(usize, usize, CaqrStage)>,
+}
+
+impl Default for SimScenario {
+    fn default() -> Self {
+        Self {
+            name: "unnamed".into(),
+            procs: 8,
+            panels: 8,
+            panel: 8,
+            algo: Algo::Redundant,
+            policy: RecoveryPolicy::Replica,
+            checksums: 0,
+            samples: 1,
+            seed: 42,
+            costs: CostModel::default(),
+            network: NetworkModel::default(),
+            churn: ChurnModel::default(),
+            kills: Vec::new(),
+        }
+    }
+}
+
+impl SimScenario {
+    /// Parse a scenario from file text.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let doc = Doc::parse(text)?;
+        for k in doc.keys() {
+            if !KNOWN_KEYS.contains(&k) {
+                return Err(Error::Config(format!("unknown scenario key '{k}'")));
+            }
+        }
+        let mut sc = SimScenario::default();
+        if let Some(v) = doc.str_of("name") {
+            sc.name = v.to_string();
+        }
+        if let Some(v) = doc.usize_of("procs") {
+            sc.procs = v;
+        }
+        if let Some(v) = doc.usize_of("panels") {
+            sc.panels = v;
+        }
+        if let Some(v) = doc.usize_of("panel") {
+            sc.panel = v;
+        }
+        if let Some(v) = doc.str_of("algo") {
+            sc.algo = v.parse()?;
+        }
+        if let Some(v) = doc.str_of("policy") {
+            sc.policy = v.parse()?;
+        }
+        if let Some(v) = doc.usize_of("checksums") {
+            sc.checksums = v;
+        }
+        if let Some(v) = doc.u64_of("samples") {
+            sc.samples = v;
+        }
+        if let Some(v) = doc.u64_of("seed") {
+            sc.seed = v;
+        }
+        if let Some(v) = doc.usize_of("costs.factor-us") {
+            sc.costs.factor_ns = (v as u64) * 1_000;
+        }
+        if let Some(v) = doc.usize_of("costs.update-us") {
+            sc.costs.update_ns = (v as u64) * 1_000;
+        }
+        sc.network = parse_network(&doc)?;
+        if let Some(v) = doc.f64_of("churn.fail-rate") {
+            sc.churn.fail_rate = v;
+        }
+        if let Some(v) = doc.usize_of("churn.rejoin-ms") {
+            sc.churn.rejoin_ns = (v as u64) * 1_000_000;
+        }
+        if let Some(v) = doc.f64_of("churn.burst-rate") {
+            sc.churn.burst_rate = v;
+        }
+        if let Some(v) = doc.usize_of("churn.rack") {
+            sc.churn.rack = v;
+        }
+        for (key, stage) in [("kills.update", CaqrStage::Update), ("kills.factor", CaqrStage::Factor)]
+        {
+            if doc.get(key).is_some() {
+                let pairs = doc.pairs_of(key).ok_or_else(|| {
+                    Error::Config(format!("{key} must be [[rank, panel], ...]"))
+                })?;
+                sc.kills.extend(pairs.into_iter().map(|(r, k)| (r, k as usize, stage)));
+            }
+        }
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Load a scenario from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!("cannot read scenario {}: {e}", path.display()))
+        })?;
+        Self::from_text(&text)
+    }
+
+    /// Validate shapes, model parameters, and kill-entry ranges
+    /// (mirrors [`crate::caqr::CaqrSpec::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.procs == 0 {
+            return Err(Error::Config("procs must be >= 1".into()));
+        }
+        if self.procs > 1 && self.procs % 2 != 0 {
+            return Err(Error::Config(format!(
+                "the replica pairing needs an even world (or 1), got procs = {}",
+                self.procs
+            )));
+        }
+        if self.panels == 0 || self.panel == 0 {
+            return Err(Error::Config("panels and panel width must be >= 1".into()));
+        }
+        if self.samples == 0 {
+            return Err(Error::Config("samples must be >= 1".into()));
+        }
+        if self.checksums > 0 {
+            if self.procs < 2 {
+                return Err(Error::Config("checksums need procs >= 2".into()));
+            }
+            if self.checksums > self.procs / 2 {
+                return Err(Error::Config(format!(
+                    "at most procs/2 checksum blocks fit distinct holder pairs: \
+                     checksums = {} > {}",
+                    self.checksums,
+                    self.procs / 2
+                )));
+            }
+        }
+        match self.algo {
+            Algo::Redundant | Algo::SelfHealing => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "the simulator replays redundant or self-healing semantics, not {}",
+                    other.name()
+                )));
+            }
+        }
+        self.network.validate()?;
+        self.churn.validate()?;
+        for &(rank, panel, stage) in &self.kills {
+            if rank >= self.procs {
+                return Err(Error::Config(format!(
+                    "kill ({rank}, {panel}, {}) names rank {rank} outside the \
+                     {}-rank world",
+                    stage.name(),
+                    self.procs
+                )));
+            }
+            if panel >= self.panels {
+                return Err(Error::Config(format!(
+                    "kill ({rank}, {panel}, {}) names panel {panel} but the scenario \
+                     has only {} panels",
+                    stage.name(),
+                    self.panels
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The panel plan the runner replays: a `(panels·panel)`-square
+    /// matrix in `panel`-column blocks over `procs` ranks — same shape
+    /// rules as [`crate::caqr::CaqrSpec::plan`], matrix-free.
+    pub fn plan(&self) -> PanelPlan {
+        let n = self.panels * self.panel;
+        PanelPlan::new(n, n, self.panel, self.procs)
+    }
+
+    /// Checksum blocks the ladder actually arms (0 unless the policy
+    /// uses checksums — mirroring the executor's resolution).
+    pub fn armed_checksums(&self) -> usize {
+        if self.policy.uses_checksums() { self.checksums } else { 0 }
+    }
+
+    /// Sample `i` of the campaign: the same scenario, single-sample,
+    /// reseeded via [`derive_seed`].
+    pub fn sample(&self, i: u64) -> SimScenario {
+        SimScenario { seed: derive_seed(self.seed, i), samples: 1, ..self.clone() }
+    }
+}
+
+fn parse_network(doc: &Doc) -> Result<NetworkModel> {
+    let latency_ns = doc.usize_of("network.latency-us").unwrap_or(0) as u64 * 1_000;
+    let jitter_ns = doc.usize_of("network.jitter-us").unwrap_or(0) as u64 * 1_000;
+    match doc.str_of("network.model").unwrap_or("ideal") {
+        "ideal" => Ok(NetworkModel::Ideal),
+        "uniform" => Ok(NetworkModel::Uniform { latency_ns, jitter_ns }),
+        "lossy" => Ok(NetworkModel::Lossy {
+            latency_ns,
+            jitter_ns,
+            loss: doc.f64_of("network.loss").unwrap_or(0.0),
+            retransmit_ns: doc.usize_of("network.retransmit-us").unwrap_or(0) as u64 * 1_000,
+        }),
+        other => Err(Error::Config(format!(
+            "unknown network model '{other}' (ideal|uniform|lossy)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"
+        name = "full"
+        procs = 1024
+        panels = 16
+        panel = 8
+        algo = "self-healing"
+        policy = "hybrid"
+        checksums = 4
+        samples = 100
+        seed = 7
+        [costs]
+        factor-us = 50
+        update-us = 10
+        [network]
+        model = "lossy"
+        latency-us = 10
+        jitter-us = 2
+        loss = 0.01
+        retransmit-us = 50
+        [churn]
+        fail-rate = 0.05
+        rejoin-ms = 400
+        burst-rate = 0.2
+        rack = 64
+        [kills]
+        update = [[2, 0], [3, 0]]
+        factor = [[1, 1]]
+    "#;
+
+    #[test]
+    fn parses_every_section() {
+        let sc = SimScenario::from_text(FULL).unwrap();
+        assert_eq!(sc.name, "full");
+        assert_eq!(sc.procs, 1024);
+        assert_eq!((sc.panels, sc.panel), (16, 8));
+        assert_eq!(sc.algo, Algo::SelfHealing);
+        assert_eq!(sc.policy, RecoveryPolicy::Hybrid);
+        assert_eq!(sc.checksums, 4);
+        assert_eq!((sc.samples, sc.seed), (100, 7));
+        assert_eq!(sc.costs, CostModel { factor_ns: 50_000, update_ns: 10_000 });
+        assert_eq!(
+            sc.network,
+            NetworkModel::Lossy {
+                latency_ns: 10_000,
+                jitter_ns: 2_000,
+                loss: 0.01,
+                retransmit_ns: 50_000
+            }
+        );
+        assert_eq!(sc.churn.fail_rate, 0.05);
+        assert_eq!(sc.churn.rejoin_ns, 400_000_000);
+        assert_eq!(sc.churn.rack, 64);
+        assert_eq!(
+            sc.kills,
+            vec![
+                (2, 0, CaqrStage::Update),
+                (3, 0, CaqrStage::Update),
+                (1, 1, CaqrStage::Factor)
+            ]
+        );
+        assert_eq!(sc.plan().panels(), 16);
+        assert_eq!(sc.armed_checksums(), 4);
+    }
+
+    #[test]
+    fn defaults_fill_a_minimal_file() {
+        let sc = SimScenario::from_text("procs = 4\n").unwrap();
+        assert_eq!(sc.procs, 4);
+        assert_eq!(sc.network, NetworkModel::Ideal);
+        assert!(!sc.churn.churns());
+        assert!(sc.kills.is_empty());
+        assert_eq!(sc.armed_checksums(), 0, "replica policy arms nothing");
+    }
+
+    #[test]
+    fn unknown_keys_and_models_rejected() {
+        assert!(SimScenario::from_text("bogus = 1\n").is_err());
+        assert!(SimScenario::from_text("[network]\nmodel = \"carrier-pigeon\"\n").is_err());
+        assert!(SimScenario::from_text("[kills]\nupdate = [[1, 2, 3]]\n").is_err(), "triples");
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes_and_ranges() {
+        assert!(SimScenario::from_text("procs = 0\n").is_err());
+        assert!(SimScenario::from_text("procs = 3\n").is_err(), "odd world");
+        assert!(SimScenario::from_text("samples = 0\n").is_err());
+        assert!(SimScenario::from_text("checksums = 5\n").is_err(), "over procs/2");
+        assert!(SimScenario::from_text("algo = \"baseline\"\n").is_err());
+        assert!(
+            SimScenario::from_text("procs = 4\npanels = 2\n[kills]\nupdate = [[9, 0]]\n").is_err(),
+            "rank out of range"
+        );
+        assert!(
+            SimScenario::from_text("procs = 4\npanels = 2\n[kills]\nupdate = [[1, 5]]\n").is_err(),
+            "panel out of range"
+        );
+        assert!(SimScenario::from_text("[network]\nmodel = \"lossy\"\nloss = 1.5\n").is_err());
+        assert!(SimScenario::from_text("[churn]\nfail-rate = -2.0\n").is_err());
+    }
+
+    #[test]
+    fn samples_reseed_through_derive_seed() {
+        let sc = SimScenario::from_text("procs = 4\nseed = 11\nsamples = 3\n").unwrap();
+        let s0 = sc.sample(0);
+        let s1 = sc.sample(1);
+        assert_eq!(s0.samples, 1);
+        assert_eq!(s0.seed, derive_seed(11, 0));
+        assert_ne!(s0.seed, s1.seed);
+        assert_eq!(s0.procs, sc.procs, "everything but the seed carries over");
+    }
+}

@@ -12,5 +12,5 @@ pub mod rng;
 pub mod testdir;
 
 pub use json::Json;
-pub use rng::Rng;
+pub use rng::{Rng, derive_seed};
 pub use testdir::TestDir;

@@ -1,0 +1,361 @@
+//! Integration tests for the `sim` discrete-event fault simulator.
+//!
+//! The heart of the file is the **small-P parity pin**: the ISSUE's
+//! anchor that for P ∈ {4, 8} the event-driven replay reproduces the
+//! thread-based executor's survival/abort outcome and recovery
+//! counters EXACTLY, for identical kill schedules, across all three
+//! recovery policies.  That exactness is what licenses trusting the
+//! simulator's numbers at P = 10⁵–10⁶, where no thread-based check is
+//! possible.
+
+use ft_tsqr::abft::RecoveryPolicy;
+use ft_tsqr::caqr::CaqrSpec;
+use ft_tsqr::engine::Engine;
+use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage, PairWipeSchedule};
+use ft_tsqr::sim::{SimScenario, replay, run_scenario};
+use ft_tsqr::tsqr::Algo;
+
+/// The parity shapes: 4 panels of width 4 (32×16), the executor's own
+/// test geometry.
+const M: usize = 32;
+const N: usize = 16;
+const PANEL: usize = 4;
+const PANELS: usize = 4;
+
+/// Run the same spec through both engines and require identical ladder
+/// outcomes and counters.  `mk` builds a fresh spec per call because
+/// the thread-based executor consumes its schedule's entries.
+fn assert_parity(label: &str, engine: &Engine, mk: &dyn Fn() -> CaqrSpec) {
+    let thread = engine.run_caqr(mk()).unwrap_or_else(|e| panic!("{label}: executor: {e}"));
+    let sim = replay(&mk()).unwrap_or_else(|e| panic!("{label}: sim: {e}"));
+
+    assert_eq!(sim.failed_at, thread.failed_at, "{label}: failure point");
+    assert_eq!(sim.success(), thread.success(), "{label}: outcome");
+    assert_eq!(
+        sim.panels_completed, thread.metrics.panels_completed,
+        "{label}: panels_completed"
+    );
+    assert_eq!(sim.update_tasks, thread.metrics.update_tasks, "{label}: update_tasks");
+    assert_eq!(
+        sim.update_recoveries, thread.metrics.update_recoveries,
+        "{label}: update_recoveries"
+    );
+    assert_eq!(
+        sim.checksum_reconstructions, thread.metrics.checksum_reconstructions,
+        "{label}: checksum_reconstructions"
+    );
+    assert_eq!(
+        sim.pair_wipes_survived, thread.metrics.pair_wipes_survived,
+        "{label}: pair_wipes_survived"
+    );
+    assert_eq!(sim.respawns, thread.metrics.respawns, "{label}: respawns");
+    assert_eq!(sim.dead, thread.dead_count(), "{label}: dead ranks");
+    let thread_factor_recoveries =
+        thread.panel_survival.iter().filter(|p| p.factor_recovered).count() as u64;
+    assert_eq!(
+        sim.factor_recoveries, thread_factor_recoveries,
+        "{label}: factor recoveries"
+    );
+    assert_eq!(sim.checksums, thread.checksums, "{label}: armed checksums");
+}
+
+/// The kill schedules the parity pin covers: explicit strikes, pair
+/// wipes at both stages, final-stage strikes, and stochastic
+/// (random-update and Poisson) schedules over several seeds.
+fn parity_schedules(procs: usize) -> Vec<(String, Box<dyn Fn() -> CaqrKillSchedule>)> {
+    let mut out: Vec<(String, Box<dyn Fn() -> CaqrKillSchedule>)> = vec![
+        ("fault-free".into(), Box::new(CaqrKillSchedule::none)),
+        (
+            "single-update-kill".into(),
+            Box::new(|| CaqrKillSchedule::at(&[(1, 0, CaqrStage::Update)])),
+        ),
+        (
+            "factor-pair-wipe".into(),
+            Box::new(|| PairWipeSchedule::new(0, 0, CaqrStage::Factor).schedule()),
+        ),
+        (
+            "update-pair-wipe".into(),
+            Box::new(|| PairWipeSchedule::new(2, 0, CaqrStage::Update).schedule()),
+        ),
+        (
+            "final-panel-factor-strike".into(),
+            Box::new(move || CaqrKillSchedule::at(&[(procs - 1, PANELS - 1, CaqrStage::Factor)])),
+        ),
+        (
+            // The last panel has zero update blocks: a strike there
+            // must be a no-op on the ladder (nothing left to lose).
+            "final-panel-update-strike".into(),
+            Box::new(|| CaqrKillSchedule::at(&[(0, PANELS - 1, CaqrStage::Update)])),
+        ),
+    ];
+    for seed in [1u64, 2] {
+        out.push((
+            format!("random-updates-f2-seed{seed}"),
+            Box::new(move || CaqrKillSchedule::random_updates(procs, PANELS, 2, seed)),
+        ));
+        out.push((
+            format!("poisson-r0.15-seed{seed}"),
+            Box::new(move || CaqrKillSchedule::poisson(procs, PANELS, 0.15, seed)),
+        ));
+    }
+    out
+}
+
+#[test]
+fn parity_with_thread_executor_at_small_p() {
+    let engine = Engine::host();
+    // (policy pin, checksum count): the three ladders, plus the
+    // default (no pin = engine default = Replica).
+    let ladders: &[(Option<RecoveryPolicy>, usize)] = &[
+        (None, 0),
+        (Some(RecoveryPolicy::Replica), 2),
+        (Some(RecoveryPolicy::Checksum), 2),
+        (Some(RecoveryPolicy::Hybrid), 2),
+    ];
+    for procs in [4usize, 8] {
+        for algo in [Algo::Redundant, Algo::SelfHealing] {
+            for &(policy, checksums) in ladders {
+                for (name, schedule) in parity_schedules(procs) {
+                    let mk = || {
+                        let mut s = CaqrSpec::new(algo, procs, M, N, PANEL)
+                            .with_verify(false)
+                            .with_checksums(checksums)
+                            .with_schedule(schedule());
+                        if let Some(p) = policy {
+                            s = s.with_policy(p);
+                        }
+                        s
+                    };
+                    let label = format!(
+                        "P={procs} {} {:?} c={checksums} [{name}]",
+                        algo.name(),
+                        policy
+                    );
+                    assert_parity(&label, &engine, &mk);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn final_stage_strike_is_survivable_and_exact() {
+    // The very last (panel, stage) cell: panel 3's update stage has 0
+    // trailing blocks, so even killing the whole non-factor world
+    // there changes nothing but the death toll.
+    let spec = || {
+        CaqrSpec::new(Algo::Redundant, 4, M, N, PANEL).with_verify(false).with_schedule(
+            CaqrKillSchedule::at(&[
+                (0, PANELS - 1, CaqrStage::Update),
+                (1, PANELS - 1, CaqrStage::Update),
+                (2, PANELS - 1, CaqrStage::Update),
+            ]),
+        )
+    };
+    let sim = replay(&spec()).unwrap();
+    assert!(sim.success(), "no blocks left to lose at the final update stage");
+    assert_eq!(sim.panels_completed, PANELS as u64);
+    assert_eq!(sim.dead, 3);
+    let thread = Engine::host().run_caqr(spec()).unwrap();
+    assert!(thread.success());
+    assert_eq!(thread.dead_count(), 3);
+}
+
+#[test]
+fn out_of_range_kills_rejected_at_validation() {
+    // Rank outside the world.
+    let bad_rank = CaqrSpec::new(Algo::Redundant, 4, M, N, PANEL)
+        .with_schedule(CaqrKillSchedule::at(&[(9, 0, CaqrStage::Update)]));
+    let err = bad_rank.validate().unwrap_err().to_string();
+    assert!(err.contains("rank 9"), "diagnostic names the rank: {err}");
+    assert!(Engine::host().run_caqr(bad_rank).is_err(), "executor rejects it too");
+
+    // Panel beyond the plan.
+    let bad_panel = CaqrSpec::new(Algo::Redundant, 4, M, N, PANEL)
+        .with_schedule(CaqrKillSchedule::at(&[(1, 99, CaqrStage::Factor)]));
+    let err = bad_panel.validate().unwrap_err().to_string();
+    assert!(err.contains("panel 99"), "diagnostic names the panel: {err}");
+    assert!(replay(&bad_panel).is_err(), "the simulator rejects it too");
+
+    // The scenario layer applies the same rule.
+    let sc = SimScenario {
+        procs: 4,
+        panels: 2,
+        kills: vec![(9, 0, CaqrStage::Update)],
+        ..Default::default()
+    };
+    assert!(sc.validate().is_err());
+}
+
+#[test]
+fn empty_schedule_is_a_no_op_everywhere() {
+    let spec =
+        || CaqrSpec::new(Algo::SelfHealing, 4, M, N, PANEL).with_verify(false);
+    let sim = replay(&spec()).unwrap();
+    let thread = Engine::host().run_caqr(spec()).unwrap();
+    assert!(sim.success() && thread.success());
+    assert_eq!(sim.dead, 0);
+    assert_eq!(sim.scheduled_kills, 0);
+    assert_eq!(
+        (sim.respawns, sim.update_recoveries, sim.checksum_reconstructions),
+        (0, 0, 0)
+    );
+    assert_eq!(thread.metrics.respawns, 0);
+}
+
+// ---------------------------------------------------------------------
+// Scenario files
+
+fn scenarios_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+#[test]
+fn committed_scenarios_parse_and_validate() {
+    let mut seen = 0;
+    let mut mega_procs = 0;
+    for entry in std::fs::read_dir(scenarios_dir()).expect("rust/scenarios/ exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let sc = SimScenario::load(&path)
+            .unwrap_or_else(|e| panic!("{} must parse: {e}", path.display()));
+        seen += 1;
+        if path.file_name().and_then(|n| n.to_str()) == Some("mega_1e5.toml") {
+            mega_procs = sc.procs;
+        }
+    }
+    assert!(seen >= 3, "expected the committed scenario set, found {seen}");
+    assert!(mega_procs >= 100_000, "the headline scenario must be mega-scale");
+}
+
+#[test]
+fn mega_scenario_runs_to_completion_at_1e5_ranks() {
+    let mut sc = SimScenario::load(scenarios_dir().join("mega_1e5.toml")).unwrap();
+    sc.samples = 1;
+    let report = run_scenario(&sc).unwrap();
+    assert_eq!(report.procs, 100_000);
+    assert!(report.events > 0, "events were processed");
+    assert!(report.virtual_ns > 0, "virtual time advanced");
+    assert!(report.failures > 0, "0.05/rank/s churn over ~3 virtual seconds must strike");
+    // The survival outcome is the *measurement* (seed-dependent); what
+    // is pinned is that the run terminates cleanly one way or another.
+    match report.failed_at {
+        None => assert_eq!(report.panels_completed, sc.panels as u64),
+        Some((panel, _)) => assert!((panel as usize) < sc.panels),
+    }
+}
+
+#[test]
+fn simulator_is_a_pure_function_of_scenario_and_seed() {
+    let mut sc = SimScenario::load(scenarios_dir().join("churn_rejoin.toml")).unwrap();
+    sc.samples = 1;
+    let a = run_scenario(&sc).unwrap();
+    let b = run_scenario(&sc).unwrap();
+    assert_eq!(a, b, "identical scenario + seed must replay identically");
+    sc.seed ^= 1;
+    let c = run_scenario(&sc).unwrap();
+    // (Not a hard guarantee per-seed, but churn at 2/rank/s makes a
+    // bitwise-identical event history astronomically unlikely.)
+    assert_ne!(a.events_scheduled, 0);
+    assert!(c.events > 0);
+}
+
+// ---------------------------------------------------------------------
+// CLI
+
+fn repro(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .output()
+        .expect("repro binary runs")
+}
+
+#[test]
+fn simulate_cli_reports_survival_events_and_virtual_time() {
+    let dir = ft_tsqr::util::TestDir::new();
+    let path = dir.write(
+        "small.toml",
+        "name = \"cli-smoke\"\nprocs = 64\npanels = 4\npanel = 4\n\
+         algo = \"self-healing\"\npolicy = \"hybrid\"\nchecksums = 4\nsamples = 5\n\
+         [churn]\nfail-rate = 50.0\nrejoin-ms = 1\n",
+    );
+    let out = repro(&["simulate", "--scenario", path.to_str().unwrap()]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("survival="), "{stdout}");
+    assert!(stdout.contains("events="), "{stdout}");
+    assert!(stdout.contains("virtual="), "{stdout}");
+    assert!(stdout.contains("samples=5"), "{stdout}");
+
+    // --seed and --samples override the file.
+    let out = repro(&[
+        "simulate",
+        "--scenario",
+        path.to_str().unwrap(),
+        "--samples",
+        "2",
+        "--seed",
+        "99",
+    ]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("samples=2") && stdout.contains("seed=99"), "{stdout}");
+}
+
+#[test]
+fn simulate_cli_runs_the_committed_mega_scenario() {
+    // The acceptance pin: a *committed* scenario at >= 1e5 ranks runs
+    // through the real CLI to completion.
+    let path = scenarios_dir().join("mega_1e5.toml");
+    let out = repro(&["simulate", "--scenario", path.to_str().unwrap()]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("procs=100000"), "{stdout}");
+    assert!(stdout.contains("survival="), "{stdout}");
+    assert!(stdout.contains("events="), "{stdout}");
+    assert!(stdout.contains("virtual="), "{stdout}");
+}
+
+#[test]
+fn simulate_cli_curve_mode_and_errors() {
+    let dir = ft_tsqr::util::TestDir::new();
+    let path = dir.write(
+        "curve.toml",
+        "procs = 32\npanels = 2\npanel = 4\nsamples = 4\n",
+    );
+    let out = repro(&[
+        "simulate",
+        "--scenario",
+        path.to_str().unwrap(),
+        "--curve",
+        "--rates",
+        "0.0,5.0",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("P(complete)"), "{stdout}");
+    // The fault-free cell is certain: "1.000±0.000" in the rate-0 row.
+    assert!(stdout.contains("1.000"), "{stdout}");
+
+    let out = repro(&["simulate"]);
+    assert!(!out.status.success(), "missing --scenario must fail");
+    let out = repro(&["simulate", "--scenario", "/nonexistent/x.toml"]);
+    assert!(!out.status.success(), "unreadable scenario must fail");
+}
+
+#[test]
+fn sweep_cli_accepts_a_seed() {
+    let run = |seed: &str| {
+        let out = repro(&[
+            "sweep", "--algo", "replace", "--procs", "4", "--trials", "50", "--seed", seed,
+        ]);
+        assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    let a = run("7");
+    let b = run("7");
+    assert_eq!(a, b, "seeded sweeps are reproducible");
+    assert!(a.contains("P(success)"), "{a}");
+}
