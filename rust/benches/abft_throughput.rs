@@ -126,7 +126,7 @@ fn main() {
     );
 
     let json = format!(
-        "{{\n  \"bench\": \"abft_throughput\",\n  \"runs\": {runs},\n  \"quick\": {quick},\n  \
+        "{{\n  \"bench\": \"abft_throughput\",\n  \"runs\": {runs},\n  \"quick\": {quick},\n  {host},\n  \
          \"plain_runs_per_sec\": {plain_rps:.2},\n  \"c1_runs_per_sec\": {c1_rps:.2},\n  \
          \"c2_runs_per_sec\": {c2_rps:.2},\n  \"pairwipe_runs_per_sec\": {wipe_rps:.2},\n  \
          \"checksum_throughput_ratio_c1\": {ratio_c1:.3},\n  \
@@ -136,6 +136,7 @@ fn main() {
          \"tolerated_replica\": {tol_replica},\n  \"tolerated_hybrid_c1\": {tol_hybrid_c1},\n  \
          \"tolerated_hybrid_c3\": {tol_hybrid_c3}\n}}\n",
         (plain_rps / c1_rps - 1.0) * 100.0,
+        host = ft_tsqr::report::bench::host_json_fields(),
     );
     std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
     let json_path = format!("{REPORT_DIR}/BENCH_abft.json");

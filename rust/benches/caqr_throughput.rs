@@ -161,7 +161,7 @@ fn main() {
          lookahead_hits={lookahead_hits}, panel_stall={panel_stall_ms:.1}ms"
     );
     let json = format!(
-        "{{\n  \"bench\": \"caqr_throughput\",\n  \"runs\": {runs},\n  \"quick\": {quick},\n  \
+        "{{\n  \"bench\": \"caqr_throughput\",\n  \"runs\": {runs},\n  \"quick\": {quick},\n  {host},\n  \
          \"clean_runs_per_sec\": {clean_rps:.2},\n  \"faulted_runs_per_sec\": {faulted_rps:.2},\n  \
          \"blocked_runs_per_sec\": {blocked_rps:.2},\n  \
          \"blocked_speedup_vs_reference\": {blocked_speedup:.3},\n  \
@@ -171,6 +171,7 @@ fn main() {
         (clean_rps / faulted_rps - 1.0) * 100.0,
         sample.median_us(),
         wy_sample.median_us(),
+        host = ft_tsqr::report::bench::host_json_fields(),
     );
     std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
     let json_path = format!("{REPORT_DIR}/BENCH_caqr.json");

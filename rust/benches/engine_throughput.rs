@@ -156,7 +156,7 @@ fn main() {
     let speedup_seq = oneshot.as_secs_f64() / seq.as_secs_f64();
     let speedup_w4 = oneshot.as_secs_f64() / conc.as_secs_f64();
     let json = format!(
-        "{{\n  \"bench\": \"engine_throughput\",\n  \"runs\": {runs},\n  \"quick\": {quick},\n  \
+        "{{\n  \"bench\": \"engine_throughput\",\n  \"runs\": {runs},\n  \"quick\": {quick},\n  {host},\n  \
          \"oneshot_runs_per_sec\": {oneshot_rps:.2},\n  \"engine_runs_per_sec\": {seq_rps:.2},\n  \
          \"engine_w4_runs_per_sec\": {conc_rps:.2},\n  \"speedup_engine_vs_oneshot\": {speedup_seq:.3},\n  \
          \"speedup_w4_vs_oneshot\": {speedup_w4:.3},\n  \"workspaces_created\": {},\n  \
@@ -166,6 +166,7 @@ fn main() {
         ws.reused,
         posts_shared,
         stats.peak_workers,
+        host = ft_tsqr::report::bench::host_json_fields(),
     );
     std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
     let json_path = format!("{REPORT_DIR}/BENCH_engine.json");

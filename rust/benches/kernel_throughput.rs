@@ -1,29 +1,35 @@
 //! BENCH TAB-K1: the deterministic fast-kernel layer — GEMM microkernel
-//! GFLOP/s, blocked (compact-WY) vs reference trailing updates across
-//! panel widths, and the end-to-end `KernelProfile::Blocked` vs
-//! `Reference` CAQR speedup.
+//! GFLOP/s (tuned ISA path), SIMD-vs-scalar and pool-threads-vs-1
+//! speedups, blocked (compact-WY) vs reference trailing updates across
+//! panel widths, the end-to-end `KernelProfile::Blocked` vs `Reference`
+//! CAQR speedup, and the leaf-QR/combine oracle comparison folded in
+//! from the retired pre-engine `kernels` bench (PJRT columns when
+//! artifacts exist).
 //!
 //!   cargo bench --bench kernel_throughput
 //!
-//! Emits `target/reports/BENCH_kernels.json`.  With
-//! `BENCH_WRITE_BASELINE=1` it also refreshes the committed baseline at
+//! Emits `target/reports/BENCH_kernels.json`, stamped with the host
+//! `CpuInfo` (model, ISA, features, threads) so the perf gate only
+//! hard-compares like-for-like hosts.  With `BENCH_WRITE_BASELINE=1` it
+//! also refreshes the committed baseline at
 //! `benches/baselines/BENCH_kernels.json`; with `BENCH_REGRESS=1` it
 //! compares against that baseline and fails on a >20% drop (the CI
-//! `bench-regress` job).  The gated metrics are machine-relative
-//! ratios (speedups) plus one very conservative absolute floor
-//! (GEMM GFLOP/s), so the gate is robust to CI-host variance.
+//! `bench-regress` job).  The gated metrics are machine-relative ratios
+//! (speedups) plus the absolute GEMM GFLOP/s floor, which the host
+//! fingerprint protects from cross-machine comparison.
 
 use std::time::Instant;
 
 use ft_tsqr::caqr::CaqrSpec;
-use ft_tsqr::engine::Engine;
+use ft_tsqr::engine::{Engine, WorkerPool};
 use ft_tsqr::linalg::Matrix;
-use ft_tsqr::linalg::gemm::{self, Accum, GEMM_SCRATCH};
+use ft_tsqr::linalg::gemm::{self, Accum, GEMM_SCRATCH, GemmParams, Isa};
 use ft_tsqr::linalg::view::{apply_update_f64, factor_panel_f64};
 use ft_tsqr::linalg::wy;
-use ft_tsqr::report::bench::{bench, enforce_regress_gate, iters, quick};
+use ft_tsqr::metrics;
+use ft_tsqr::report::bench::{bench, enforce_regress_gate, host_json_fields, iters, quick};
 use ft_tsqr::report::{REPORT_DIR, Table};
-use ft_tsqr::runtime::KernelProfile;
+use ft_tsqr::runtime::{Backend, CpuInfo, Executor, KernelProfile};
 use ft_tsqr::tsqr::Algo;
 
 const BASELINE: &str = "benches/baselines/BENCH_kernels.json";
@@ -34,10 +40,14 @@ fn randf64(rows: usize, cols: usize, seed: u64) -> Vec<f64> {
 
 fn main() {
     let quick = quick();
+    let cpu = CpuInfo::cached();
+    println!("host: {}", cpu.summary());
 
     // ------------------------------------------------------ GEMM GFLOP/s
+    // The tuned path: detected ISA + autotuned tiles (what production
+    // callers get from gemm_into).
     let mut gtab = Table::new(
-        "TAB-K1: packed f64 GEMM microkernel (fixed summation order)",
+        "TAB-K1: packed f64 GEMM microkernel (fixed summation order, tuned ISA)",
         &["m x n x k", "median", "GFLOP/s"],
     );
     let gemm_shapes: &[(usize, usize, usize)] = if quick {
@@ -61,6 +71,59 @@ fn main() {
     }
     print!("{}", gtab.render());
     gtab.save_csv(REPORT_DIR).expect("csv");
+
+    // ------------------------------------- SIMD vs scalar, threads vs 1
+    // Both ratios are recorded in the JSON (not hard-gated: a 1-core CI
+    // host can legitimately see threads_vs_1 ≈ 1).  The forced-dispatch
+    // entry point keeps the comparison honest: same tiles, same
+    // summation order, only the microkernel differs — and the results
+    // are bitwise identical either way, so this is pure speed.
+    let (pm, pn, pk) = if quick { (192usize, 192usize, 192usize) } else { (512, 512, 256) };
+    let pa = randf64(pm, pk, 3);
+    let pb = randf64(pk, pn, 4);
+    let mut pc = vec![0.0f64; pm * pn];
+    let mut pscratch = vec![0.0f64; GEMM_SCRATCH];
+    let isa = Isa::detect();
+    let time_isa = |which: Isa, c: &mut Vec<f64>, scratch: &mut Vec<f64>| {
+        let params = GemmParams::with_isa(which);
+        bench(2, iters(15, 5), || {
+            gemm::gemm_into_with(&params, pm, pn, pk, &pa, false, &pb, Accum::Set, c, scratch);
+            std::hint::black_box(&c);
+        })
+    };
+    let s_scalar = time_isa(Isa::Scalar, &mut pc, &mut pscratch);
+    let s_simd = time_isa(isa, &mut pc, &mut pscratch);
+    let simd_vs_scalar = s_scalar.median.as_secs_f64() / s_simd.median.as_secs_f64();
+
+    let pool = WorkerPool::new();
+    let hw_threads = cpu.threads;
+    let s_seq = bench(2, iters(15, 5), || {
+        gemm::gemm_into(pm, pn, pk, &pa, false, &pb, Accum::Set, &mut pc, &mut pscratch);
+        std::hint::black_box(&pc);
+    });
+    let s_par = bench(2, iters(15, 5), || {
+        gemm::gemm_into_pooled(
+            &pool, hw_threads, pm, pn, pk, &pa, false, &pb, Accum::Set, &mut pc, &mut pscratch,
+        );
+        std::hint::black_box(&pc);
+    });
+    let threads_vs_1 = s_seq.median.as_secs_f64() / s_par.median.as_secs_f64();
+    pool.shutdown();
+
+    let mut ptab = Table::new(
+        format!("TAB-K1s: {pm}x{pn}x{pk} GEMM — ISA dispatch and pool slabs (bit-identical)"),
+        &["path", "median", "vs scalar/seq"],
+    );
+    ptab.row(vec!["scalar".into(), s_scalar.fmt_median(), "1.00x".into()]);
+    ptab.row(vec![isa.name().into(), s_simd.fmt_median(), format!("{simd_vs_scalar:.2}x")]);
+    ptab.row(vec!["1 thread".into(), s_seq.fmt_median(), "1.00x".into()]);
+    ptab.row(vec![
+        format!("{hw_threads} threads"),
+        s_par.fmt_median(),
+        format!("{threads_vs_1:.2}x"),
+    ]);
+    print!("{}", ptab.render());
+    ptab.save_csv(REPORT_DIR).expect("csv");
 
     // -------------------------- blocked vs reference trailing update
     let (upd_m, upd_bk) = if quick { (384usize, 96usize) } else { (1536, 256) };
@@ -156,6 +219,65 @@ fn main() {
     print!("{}", etab.render());
     etab.save_csv(REPORT_DIR).expect("csv");
 
+    // ------------------- oracle kernels (folded from the old `kernels`
+    // bench): leaf QR and TSQR combine, PJRT (AOT Pallas) when the
+    // artifacts exist, host otherwise.  Skipped in quick mode — these
+    // are informational oracle timings, not gated metrics.
+    if !quick {
+        let pjrt = Executor::with_artifacts("artifacts", Backend::Pjrt, 2).ok();
+        let host = Executor::host();
+        if pjrt.is_none() {
+            println!("NOTE: artifacts not built — PJRT columns read n/a. Run `make artifacts`.");
+        }
+        let mut leaf = Table::new(
+            "TAB-K1d: leaf QR + TSQR combine — PJRT (AOT Pallas) vs host oracle",
+            &["op", "shape", "pjrt", "host", "host MFLOP/s"],
+        );
+        for (m, n) in [(256usize, 8usize), (1024, 32)] {
+            let a = Matrix::random(m, n, (m * 7 + n) as u64);
+            let p_time = pjrt.as_ref().map(|ex| {
+                bench(2, iters(30, 5), || {
+                    let _ = ex.leaf_qr(&a).expect("pjrt leaf");
+                })
+            });
+            let h_time = bench(2, iters(30, 5), || {
+                let _ = host.leaf_qr(&a).expect("host leaf");
+            });
+            let flops = metrics::leaf_qr_flops(m, n);
+            leaf.row(vec![
+                "leaf_qr".into(),
+                format!("{m}x{n}"),
+                p_time.map(|s| s.fmt_median()).unwrap_or_else(|| "n/a".into()),
+                h_time.fmt_median(),
+                format!("{:.0}", flops as f64 / h_time.median_us()),
+            ]);
+        }
+        for n in [8usize, 32] {
+            let rt = ft_tsqr::linalg::qr_r(&Matrix::random(2 * n, n, 1));
+            let rb = ft_tsqr::linalg::qr_r(&Matrix::random(2 * n, n, 2));
+            let p_time = pjrt.as_ref().map(|ex| {
+                bench(2, iters(30, 5), || {
+                    let _ = ex.combine(&rt, &rb).expect("pjrt combine");
+                })
+            });
+            let h_time = bench(2, iters(30, 5), || {
+                let _ = host.combine(&rt, &rb).expect("host combine");
+            });
+            leaf.row(vec![
+                "combine".into(),
+                format!("2x {n}x{n}"),
+                p_time.map(|s| s.fmt_median()).unwrap_or_else(|| "n/a".into()),
+                h_time.fmt_median(),
+                format!(
+                    "aware/dense {:.1}x",
+                    metrics::combine_flops_dense(n) as f64 / metrics::combine_flops(n) as f64
+                ),
+            ]);
+        }
+        print!("{}", leaf.render());
+        leaf.save_csv(REPORT_DIR).expect("csv");
+    }
+
     // ------------------------------------------------------------- JSON
     let wy_json: String = wy_speedups
         .iter()
@@ -163,7 +285,12 @@ fn main() {
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"kernel_throughput\",\n  \"quick\": {quick},\n  \
-         \"gemm_gflops\": {gemm_gflops:.3},\n{wy_json}  \"caqr_m\": {cm},\n  \
+         \"provisional\": false,\n  {host},\n  \
+         \"isa\": \"{isa_name}\",\n  \
+         \"gemm_gflops\": {gemm_gflops:.3},\n  \
+         \"simd_vs_scalar_speedup\": {simd_vs_scalar:.3},\n  \
+         \"threads_vs_1_speedup\": {threads_vs_1:.3},\n  \
+         \"gemm_threads\": {hw_threads},\n{wy_json}  \"caqr_m\": {cm},\n  \
          \"caqr_n\": {cn},\n  \"caqr_panel\": {cp},\n  \
          \"caqr_reference_wall_s\": {:.3},\n  \"caqr_blocked_wall_s\": {:.3},\n  \
          \"caqr_blocked_speedup\": {caqr_speedup:.3},\n  \
@@ -172,6 +299,8 @@ fn main() {
         blk_wall.as_secs_f64(),
         blk_metrics.lookahead_hits,
         blk_metrics.panel_stall_ns as f64 / 1e6,
+        host = host_json_fields(),
+        isa_name = isa.name(),
     );
     std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
     let json_path = format!("{REPORT_DIR}/BENCH_kernels.json");

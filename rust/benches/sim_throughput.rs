@@ -117,7 +117,7 @@ fn main() {
     );
 
     let json = format!(
-        "{{\n  \"bench\": \"sim_throughput\",\n  \"quick\": {quick},\n  \
+        "{{\n  \"bench\": \"sim_throughput\",\n  \"quick\": {quick},\n  {host},\n  \
          \"provisional\": true,\n  \
          \"mega_procs\": {},\n  \"mega_samples\": {},\n  \"mega_events\": {events},\n  \
          \"mega_events_per_sec\": {events_per_sec:.0},\n  \
@@ -127,6 +127,7 @@ fn main() {
         sc.procs,
         sc.samples,
         survival.probability(),
+        host = ft_tsqr::report::bench::host_json_fields(),
     );
     std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
     let json_path = format!("{REPORT_DIR}/BENCH_sim.json");

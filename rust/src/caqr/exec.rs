@@ -419,6 +419,7 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
     let plan = spec.plan();
     let profile = spec.profile.unwrap_or_default();
     let policy = spec.policy.unwrap_or_default();
+    let parallelism = spec.parallelism.unwrap_or_default();
     let checksums = if policy.uses_checksums() { spec.checksums } else { 0 };
     let (m, n) = (spec.m, spec.n);
     let a = spec.input_matrix();
@@ -558,12 +559,23 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
             let panel_wy = panel_wy.clone();
             let out = Arc::clone(&update_results);
             let cout = Arc::clone(&checksum_results);
+            let gemm_pool = pool.clone();
             group.spawn(move || {
                 let mut blk = (*bsnap).clone();
                 match &panel_wy {
                     Some(wy) => {
+                        // Blocked path: the WY GEMMs may fan out across
+                        // the same elastic pool (bit-neutral — every
+                        // thread count reproduces the sequential bits).
                         WY_SCRATCH.with(|scratch| {
-                            wy::apply_wyt_into(wy, &mut blk, bk, &mut scratch.borrow_mut());
+                            wy::apply_wyt_pooled(
+                                wy,
+                                &mut blk,
+                                bk,
+                                &mut scratch.borrow_mut(),
+                                &gemm_pool,
+                                parallelism.gemm_threads(),
+                            );
                         });
                     }
                     None => {

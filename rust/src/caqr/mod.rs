@@ -90,7 +90,7 @@ use crate::abft::RecoveryPolicy;
 use crate::error::{Error, Result};
 use crate::fault::{CaqrKillSchedule, CaqrStage};
 use crate::linalg::{Matrix, PackedQr};
-use crate::runtime::KernelProfile;
+use crate::runtime::{KernelProfile, Parallelism};
 use crate::tsqr::verify::Verification;
 use crate::tsqr::{Algo, PanelPlan};
 use crate::ulfm::{MetricsSnapshot, ProcStatus, Rank};
@@ -131,6 +131,12 @@ pub struct CaqrSpec {
     /// replica are reconstructed per stage.  Ignored (and free) under
     /// [`RecoveryPolicy::Replica`].
     pub checksums: usize,
+    /// Intra-task kernel parallelism: how many pool workers one
+    /// trailing-update GEMM may fan out across (bit-neutral — every
+    /// setting reproduces the sequential bits; see
+    /// [`crate::linalg::gemm`]).  `None` inherits the engine's default
+    /// ([`Parallelism::single`] for one-shot [`factorize`] runs).
+    pub parallelism: Option<Parallelism>,
 }
 
 impl CaqrSpec {
@@ -148,6 +154,7 @@ impl CaqrSpec {
             profile: None,
             policy: None,
             checksums: 0,
+            parallelism: None,
         }
     }
 
@@ -187,6 +194,13 @@ impl CaqrSpec {
     /// the resolved policy uses checksums).
     pub fn with_checksums(mut self, c: usize) -> Self {
         self.checksums = c;
+        self
+    }
+
+    /// Pin the intra-task kernel parallelism for this spec (overrides
+    /// the engine's default; bit-neutral at every setting).
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.parallelism = Some(par);
         self
     }
 

@@ -158,10 +158,14 @@ pub struct Config {
     /// Kernel profile (`reference` | `blocked`); `None` keeps the
     /// engine default (`reference`).
     pub profile: Option<KernelProfile>,
-    /// Pool workers to pre-spawn (0 = grow on demand).  This removes
-    /// first-run thread-creation jitter from bench measurements; the
-    /// pool stays elastic and can still grow past this count if a run
-    /// needs more concurrent blocking tasks (see `engine::WorkerPool`).
+    /// The `--threads` knob: pool workers to pre-spawn **and** the
+    /// per-kernel GEMM fan-out width (0 = unset: grow on demand,
+    /// sequential kernels).  Flows as one `runtime::Parallelism` value
+    /// from here through `EngineBuilder::threads` to the GEMM slab
+    /// scheduler and the CAQR trailing-update fan-out; every setting is
+    /// bit-identical (see `linalg::gemm`).  The pool stays elastic and
+    /// can still grow past this count if a run needs more concurrent
+    /// blocking tasks (see `engine::WorkerPool`).
     pub threads: usize,
 }
 
@@ -286,7 +290,7 @@ impl Config {
             .artifact_dir(self.artifact_dir.clone())
             .pjrt_shards(self.pjrt_shards)
             .kernel_profile(self.profile.unwrap_or_default())
-            .prewarm(self.threads)
+            .threads(self.threads)
             .build()
     }
 
@@ -359,6 +363,11 @@ mod tests {
         let engine = cfg.engine().unwrap();
         assert_eq!(engine.default_kernel_profile(), KernelProfile::Blocked);
         assert_eq!(engine.workers(), 3, "threads prewarms the pool");
+        assert_eq!(
+            engine.default_parallelism().gemm_threads(),
+            3,
+            "threads must reach kernel execution, not just prewarm"
+        );
         assert!(Config::from_text("profile = \"warp\"").is_err(), "bad profile rejected");
     }
 

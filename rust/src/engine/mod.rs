@@ -4,7 +4,9 @@
 //! *session* instead of once per factorization.
 //!
 //! * [`EngineBuilder`] — backend selection (host linalg vs PJRT),
-//!   artifact directory, PJRT sharding, worker prewarming.
+//!   artifact directory, PJRT sharding, worker prewarming, and the
+//!   [`threads`](EngineBuilder::threads) kernel-parallelism knob
+//!   (pool fan-out inside GEMM, bit-identical at every setting).
 //! * [`Engine::run`] — one factorization, synchronously.
 //! * [`Engine::submit`] — async-style submission returning a
 //!   [`JobHandle`]; safe to call concurrently from many threads.
@@ -38,7 +40,7 @@ use std::sync::{Arc, Mutex, mpsc};
 use crate::abft::RecoveryPolicy;
 use crate::caqr::{CaqrCampaign, CaqrResult, CaqrSpec};
 use crate::error::{Error, Result};
-use crate::runtime::{Backend, Executor, KernelProfile, DEFAULT_ARTIFACT_DIR};
+use crate::runtime::{Backend, CpuInfo, Executor, KernelProfile, Parallelism, DEFAULT_ARTIFACT_DIR};
 use crate::sim::{SimBatchReport, SimScenario};
 use crate::tsqr::{RunResult, RunSpec};
 
@@ -49,6 +51,7 @@ pub struct EngineBuilder {
     artifact_dir: String,
     pjrt_shards: usize,
     prewarm: usize,
+    threads: usize,
     kernel_profile: KernelProfile,
     recovery_policy: RecoveryPolicy,
 }
@@ -60,6 +63,7 @@ impl Default for EngineBuilder {
             artifact_dir: DEFAULT_ARTIFACT_DIR.into(),
             pjrt_shards: 2,
             prewarm: 0,
+            threads: 0,
             kernel_profile: KernelProfile::default(),
             recovery_policy: RecoveryPolicy::default(),
         }
@@ -104,6 +108,19 @@ impl EngineBuilder {
         self
     }
 
+    /// The `--threads` knob: pre-spawn `n` pool workers **and** let
+    /// each kernel call fan its GEMM slabs out across up to `n` workers
+    /// (the [`Parallelism`] default CAQR submissions inherit).  `0`
+    /// means unset: grow the pool on demand, keep kernels sequential.
+    /// Every setting is bit-identical — `threads = 1` *is* the
+    /// sequential path, and larger counts reproduce its bits (see
+    /// [`crate::linalg::gemm`]).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.prewarm = n;
+        self.threads = n;
+        self
+    }
+
     /// Default [`KernelProfile`] for CAQR work submitted through this
     /// engine: `Reference` (bitwise-pinned oracle path, the default) or
     /// `Blocked` (compact-WY + GEMM fast path).  A spec-level
@@ -127,8 +144,15 @@ impl EngineBuilder {
         self
     }
 
-    /// Build the engine: load the backend once, start the pool.
+    /// Build the engine: load the backend once, start the pool, and
+    /// warm the process-wide kernel caches — the GEMM autotune probe
+    /// ([`crate::linalg::gemm::GemmParams::tuned`]: ISA dispatch +
+    /// cache-tile selection, cached so every task and replica shares
+    /// one configuration) and the host [`CpuInfo`] the perf reports
+    /// stamp into their JSON.
     pub fn build(self) -> Result<Engine> {
+        let _ = crate::linalg::gemm::GemmParams::tuned();
+        let _ = CpuInfo::cached();
         let executor = match self.backend {
             Backend::Host => Executor::host(),
             // Like `Executor::auto`, but honoring the configured shard
@@ -141,7 +165,13 @@ impl EngineBuilder {
                 Executor::with_artifacts(&self.artifact_dir, Backend::Pjrt, self.pjrt_shards)?
             }
         };
-        Ok(Engine::from_parts(executor, self.prewarm, self.kernel_profile, self.recovery_policy))
+        Ok(Engine::from_parts(
+            executor,
+            self.prewarm,
+            Parallelism::new(self.threads),
+            self.kernel_profile,
+            self.recovery_policy,
+        ))
     }
 }
 
@@ -191,6 +221,7 @@ pub struct Engine {
     counters: Arc<Counters>,
     default_profile: KernelProfile,
     default_policy: RecoveryPolicy,
+    default_parallelism: Parallelism,
 }
 
 impl Engine {
@@ -208,12 +239,19 @@ impl Engine {
     /// Wrap an existing executor in a fresh single-session engine (the
     /// substrate of the one-shot `tsqr::run` shim).
     pub fn with_executor(executor: Executor) -> Self {
-        Self::from_parts(executor, 0, KernelProfile::default(), RecoveryPolicy::default())
+        Self::from_parts(
+            executor,
+            0,
+            Parallelism::single(),
+            KernelProfile::default(),
+            RecoveryPolicy::default(),
+        )
     }
 
     fn from_parts(
         executor: Executor,
         prewarm: usize,
+        default_parallelism: Parallelism,
         default_profile: KernelProfile,
         default_policy: RecoveryPolicy,
     ) -> Self {
@@ -225,6 +263,7 @@ impl Engine {
             counters: Arc::new(Counters::default()),
             default_profile,
             default_policy,
+            default_parallelism,
         }
     }
 
@@ -243,6 +282,20 @@ impl Engine {
     /// their spec does not pin one.
     pub fn default_recovery_policy(&self) -> RecoveryPolicy {
         self.default_policy
+    }
+
+    /// The default intra-task kernel [`Parallelism`] CAQR submissions
+    /// inherit when their spec does not pin one (the `--threads` knob).
+    pub fn default_parallelism(&self) -> Parallelism {
+        self.default_parallelism
+    }
+
+    /// What the engine learned about the host at build time: CPU model,
+    /// SIMD features, the microkernel ISA the GEMM dispatcher selected,
+    /// and hardware threads.  Stamped into every perf report so the
+    /// bench-regress gate only compares like-for-like hosts.
+    pub fn cpu_info(&self) -> &'static CpuInfo {
+        CpuInfo::cached()
     }
 
     /// Worker threads currently alive in the pool.
@@ -277,6 +330,9 @@ impl Engine {
         }
         if spec.policy.is_none() {
             spec.policy = Some(self.default_policy);
+        }
+        if spec.parallelism.is_none() {
+            spec.parallelism = Some(self.default_parallelism);
         }
         spec
     }
@@ -475,6 +531,20 @@ mod tests {
         assert_eq!(stats.jobs_submitted, 1);
         assert_eq!(stats.jobs_completed, 1);
         assert_eq!(stats.jobs_failed, 0);
+    }
+
+    #[test]
+    fn threads_knob_sets_pool_and_kernel_parallelism() {
+        // --threads must govern BOTH pool prewarm and the GEMM slab
+        // fan-out (the PR-7 plumbing fix), and build() must have warmed
+        // the host introspection caches.
+        let engine = Engine::builder().host_only().threads(3).build().unwrap();
+        assert_eq!(engine.workers(), 3, "threads prewarms the pool");
+        assert_eq!(engine.default_parallelism().gemm_threads(), 3, "threads reaches kernels");
+        assert!(engine.cpu_info().threads >= 1);
+        assert!(engine.cpu_info().isa.usable());
+        // Unset stays sequential: the historical default path.
+        assert!(!Engine::host().default_parallelism().is_parallel());
     }
 
     #[test]

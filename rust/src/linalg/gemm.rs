@@ -1,5 +1,6 @@
 //! Deterministic packed f64 GEMM — the level-3 engine of the
-//! compact-WY fast path.
+//! compact-WY fast path, with runtime-dispatched SIMD microkernels and
+//! pool-parallel column slabs.
 //!
 //! ## Why hand-rolled
 //!
@@ -11,7 +12,6 @@
 //! with — always produce identical bit patterns.  This kernel fixes
 //! the summation order by construction:
 //!
-//! * single-threaded, no reduction-tree reassociation;
 //! * the k dimension is consumed in ascending [`KC`]-sized chunks, and
 //!   within a chunk the microkernel accumulates k ascending — so every
 //!   `C[i][j]` is a left-to-right ordered sum, the same order every
@@ -19,35 +19,364 @@
 //! * packing pads partial register tiles with zeros, which never
 //!   perturbs a sum.
 //!
-//! ## Shape of the kernel
+//! ## ISA dispatch and the no-FMA rule
 //!
-//! Classic three-level blocking (BLIS-style): `NC`-wide column slabs of
-//! B × `KC`-deep k chunks × `MC`-tall row slabs of A, with A packed
-//! into [`MR`]-row strips and B into [`NR`]-column strips so the inner
-//! [`MR`]×[`NR`] register tile streams both operands contiguously.
-//! Plain safe rust — the 4×8 f64 tile autovectorizes on every target
-//! the CI builds for; no intrinsics, no `unsafe`.
+//! The [`MR`]×[`NR`] register tile has three implementations selected
+//! **once per process** ([`Isa::detect`], cached in
+//! [`GemmParams::tuned`]): a scalar kernel (the fallback and the
+//! desk-checkable reference), an AVX2 kernel (gated on runtime
+//! detection of `avx2` *and* `fma`), and a NEON kernel on aarch64.
+//! Every implementation computes each `C[i][j]` with the **same
+//! per-element operation sequence** — an IEEE multiply followed by an
+//! IEEE add, k ascending.  The AVX2 kernel deliberately does **not**
+//! use `fmadd`: a fused multiply-add rounds once where `mul`+`add`
+//! rounds twice, which would make the SIMD path bitwise-diverge from
+//! the scalar kernel and (worse) make results depend on which host a
+//! replica ran on.  Dropping the contraction costs a little peak
+//! throughput and buys the property the whole recovery story rests on:
+//! **every ISA path produces identical bits** (pinned by the
+//! `simd_paths_match_scalar_bitwise` test through the forced-dispatch
+//! override).
+//!
+//! ## Tile autotuning
+//!
+//! Cache-block sizes are runtime values ([`GemmParams`]), picked once
+//! per process by a short timed probe (`EngineBuilder::build` warms it
+//! eagerly; the first GEMM call warms it lazily otherwise) and cached
+//! in a process-global `OnceLock` so every task — and every *replica*
+//! — in the process uses the same tiles.  Two classes of parameter are
+//! treated very differently:
+//!
+//! * `MC`/`NC` only reorder the traversal of *independent* `C`
+//!   elements; they never change any sum's association, so the probe
+//!   may pick them freely (bit-neutral).
+//! * [`KC`] sets the chunk boundaries of the k-summation, so changing
+//!   it changes bits for `k > KC`.  It is therefore **frozen** at its
+//!   compile-time value; the autotuner never moves it.
+//!
+//! Environment overrides (all optional): `FT_GEMM_ISA=scalar|avx2|neon`
+//! forces the dispatch (used by the equivalence tests; silently
+//! downgraded to `scalar` when the hardware lacks the ISA),
+//! `FT_GEMM_TILES=mc,nc` pins the bit-neutral tiles, and
+//! `FT_GEMM_AUTOTUNE=0` skips the probe (defaults apply).
+//!
+//! ## Pool-parallel slabs
+//!
+//! [`gemm_into_pooled`] partitions `C` into contiguous [`NR`]-aligned
+//! column slabs, one per thread: every worker *reads* the shared `A`
+//! and `B` operands and *writes only its own slab* (write-local /
+//! read-all, no locks on the hot path).  Within a slab the traversal
+//! is exactly the sequential kernel's, so **any thread count produces
+//! the sequential bits** — `threads = 1` is not just equivalent, it is
+//! the same code path, and `threads = 64` reproduces it bitwise.
+//! Slab tasks run on the engine's elastic
+//! [`WorkerPool`](crate::engine::WorkerPool) (nested spawning is safe:
+//! the pool spawns a worker whenever the queue outgrows the free set).
 //!
 //! Scratch (the two packing buffers) is caller-provided — hot paths
 //! hand in a [`crate::linalg::Workspace`] slice so steady-state calls
-//! allocate nothing (see `tests/alloc_steady_state.rs`).
+//! allocate nothing (see `tests/alloc_steady_state.rs`).  Pool-side
+//! slab tasks use a per-worker thread-local arena, grown once per
+//! worker thread.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+use crate::engine::{TaskGroup, WorkerPool};
 
 /// Register-tile rows (A strip height).
 pub const MR: usize = 4;
 /// Register-tile columns (B strip width).
 pub const NR: usize = 8;
 /// k-dimension cache block: one packed A strip (`MR·KC` f64 = 8 KiB)
-/// stays in L1 while it is reused across the whole B slab.
+/// stays in L1 while it is reused across the whole B slab.  **Frozen**:
+/// KC sets the chunk boundaries of the fixed summation order, so the
+/// autotuner never moves it (see the module docs).
 pub const KC: usize = 256;
-/// Row cache block (multiple of [`MR`]): the packed `MC×KC` A block
-/// (~192 KiB) targets L2.
+/// Default row cache block (multiple of [`MR`]): the packed `MC×KC` A
+/// block (~192 KiB) targets L2.  The autotune probe may pick a larger
+/// or smaller value at runtime ([`GemmParams`]); bit-neutral.
 pub const MC: usize = 96;
-/// Column cache block (multiple of [`NR`]): the packed `KC×NC` B slab
-/// (~512 KiB) targets L3.
+/// Default column cache block (multiple of [`NR`]): the packed `KC×NC`
+/// B slab (~512 KiB) targets L3.  Runtime-tunable like [`MC`];
+/// bit-neutral.
 pub const NC: usize = 256;
 
+/// Upper bound the autotuner (and `FT_GEMM_TILES`) may raise `mc` to.
+const MC_MAX: usize = 192;
+/// Upper bound the autotuner (and `FT_GEMM_TILES`) may raise `nc` to.
+const NC_MAX: usize = 512;
+
 /// f64 scratch (both packing buffers) one [`gemm_into`] call needs.
-pub const GEMM_SCRATCH: usize = MC * KC + KC * NC;
+/// Sized for the **largest** tile configuration the autotuner may
+/// select, so a buffer of this size is sufficient whatever
+/// [`GemmParams::tuned`] resolves to on this host.
+pub const GEMM_SCRATCH: usize = MC_MAX * KC + KC * NC_MAX;
+
+/// A parallel slab dispatch is only worth the pool hop when the GEMM
+/// is at least this many flops (`2·m·n·k`); smaller calls run
+/// sequentially whatever the thread budget.  Shape-only — never data-
+/// or timing-dependent — so the sequential/parallel choice is
+/// deterministic (and bit-irrelevant anyway: both paths produce the
+/// same bits).
+const PAR_MIN_FLOPS: u64 = 2_000_000;
+
+thread_local! {
+    /// Per-worker packing arena for pool-side slab tasks: grown to
+    /// [`GEMM_SCRATCH`] on the first slab a worker executes, reused
+    /// (zero allocation) for every slab after that.
+    static SLAB_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+// ---------------------------------------------------------------------
+// ISA detection and forced dispatch
+// ---------------------------------------------------------------------
+
+/// Instruction-set paths the microkernel dispatches over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar kernel — the fallback on every target and the
+    /// reference the SIMD paths are bitwise-pinned against.
+    Scalar,
+    /// 4-lane f64 AVX2 kernel (x86_64; requires runtime `avx2` + `fma`
+    /// detection — `fma` is required as a target-generation gate even
+    /// though the kernel deliberately never fuses, see module docs).
+    Avx2,
+    /// 2-lane f64 NEON kernel (aarch64).
+    Neon,
+}
+
+impl Isa {
+    /// Stable lowercase name (recorded in `CpuInfo` and bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a [`name`](Self::name) (the `FT_GEMM_ISA` syntax).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Is this path executable on the current hardware?
+    pub fn usable(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            Isa::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Isa::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Every path usable on this host (always includes `Scalar`) — the
+    /// equivalence tests iterate this to cover each reachable kernel.
+    pub fn available() -> Vec<Isa> {
+        [Isa::Scalar, Isa::Avx2, Isa::Neon].into_iter().filter(|i| i.usable()).collect()
+    }
+
+    /// The best usable path, honoring a `FT_GEMM_ISA` override (an
+    /// override naming an unusable path downgrades to `Scalar` rather
+    /// than risking an illegal instruction).
+    pub fn detect() -> Isa {
+        let forced = std::env::var("FT_GEMM_ISA").ok();
+        Self::detect_from(forced.as_deref())
+    }
+
+    /// [`detect`](Self::detect) with the override injected (testable
+    /// without touching process environment).
+    pub fn detect_from(forced: Option<&str>) -> Isa {
+        if let Some(name) = forced {
+            let want = Isa::parse(name).unwrap_or(Isa::Scalar);
+            return if want.usable() { want } else { Isa::Scalar };
+        }
+        if Isa::Avx2.usable() {
+            Isa::Avx2
+        } else if Isa::Neon.usable() {
+            Isa::Neon
+        } else {
+            Isa::Scalar
+        }
+    }
+
+    /// Downgrade to a usable path (guards a hand-built
+    /// [`GemmParams`] naming an ISA this hardware lacks — the unsafe
+    /// kernels are only ever entered behind this check).
+    fn validated(self) -> Isa {
+        if self.usable() { self } else { Isa::Scalar }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Runtime tile parameters + autotune
+// ---------------------------------------------------------------------
+
+/// Runtime kernel configuration: the dispatched [`Isa`] plus the cache
+/// tiles.  `kc` is always [`KC`] (frozen, bit-affecting); `mc`/`nc` are
+/// bit-neutral and autotuned.  Obtain via [`GemmParams::tuned`] (the
+/// process-wide cached probe) or build one explicitly for tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmParams {
+    /// Microkernel path (validated against the hardware at call time).
+    pub isa: Isa,
+    /// k cache block — always [`KC`] after normalization.
+    pub kc: usize,
+    /// Row cache block (multiple of [`MR`], at most `MC_MAX`).
+    pub mc: usize,
+    /// Column cache block (multiple of [`NR`], at most `NC_MAX`).
+    pub nc: usize,
+}
+
+impl GemmParams {
+    /// The compile-time default tiles on the scalar path — the pinned
+    /// configuration the bitwise tests reference.
+    pub fn pinned() -> GemmParams {
+        GemmParams { isa: Isa::Scalar, kc: KC, mc: MC, nc: NC }
+    }
+
+    /// Default tiles on an explicit ISA path.
+    pub fn with_isa(isa: Isa) -> GemmParams {
+        GemmParams { isa, ..Self::pinned() }
+    }
+
+    /// f64 packing scratch one sequential call with these tiles needs
+    /// (always ≤ [`GEMM_SCRATCH`] after normalization).
+    pub fn scratch_len(&self) -> usize {
+        self.mc * self.kc + self.kc * self.nc
+    }
+
+    /// Clamp to legal values: `kc` frozen at [`KC`], `mc`/`nc` rounded
+    /// down to register-tile multiples within the [`GEMM_SCRATCH`]
+    /// budget, ISA downgraded if the hardware lacks it.
+    pub fn normalized(mut self) -> GemmParams {
+        self.isa = self.isa.validated();
+        self.kc = KC;
+        self.mc = (self.mc.clamp(MR, MC_MAX) / MR) * MR;
+        self.nc = (self.nc.clamp(NR, NC_MAX) / NR) * NR;
+        self
+    }
+
+    /// The process-wide tuned configuration: detected ISA + probed
+    /// tiles, computed once and cached (every replica in the process
+    /// shares it — see the module docs on determinism).
+    pub fn tuned() -> &'static GemmParams {
+        static TUNED: OnceLock<GemmParams> = OnceLock::new();
+        TUNED.get_or_init(|| {
+            let isa = Isa::detect();
+            let tiles = std::env::var("FT_GEMM_TILES").ok();
+            let skip = std::env::var("FT_GEMM_AUTOTUNE").is_ok_and(|v| v == "0");
+            resolve_params(isa, tiles.as_deref(), skip)
+        })
+    }
+}
+
+/// Resolve the tuned parameters from the (injected) environment: an
+/// explicit `FT_GEMM_TILES=mc,nc` wins, `FT_GEMM_AUTOTUNE=0` falls
+/// back to the defaults, otherwise the timed probe picks the tiles.
+fn resolve_params(isa: Isa, tiles: Option<&str>, skip_probe: bool) -> GemmParams {
+    if let Some(p) = parse_tiles(isa, tiles) {
+        return p;
+    }
+    if skip_probe {
+        return GemmParams::with_isa(isa).normalized();
+    }
+    autotune_probe(isa)
+}
+
+/// Parse `FT_GEMM_TILES=mc,nc` (normalized; `None` on absent/bad input).
+fn parse_tiles(isa: Isa, tiles: Option<&str>) -> Option<GemmParams> {
+    let spec = tiles?;
+    let mut it = spec.split(',').map(|t| t.trim().parse::<usize>());
+    match (it.next(), it.next(), it.next()) {
+        (Some(Ok(mc)), Some(Ok(nc)), None) => {
+            Some(GemmParams { isa, kc: KC, mc, nc }.normalized())
+        }
+        _ => None,
+    }
+}
+
+/// Short timed probe over bit-neutral `(mc, nc)` candidates: one fixed
+/// synthetic GEMM per candidate, fastest wins with hysteresis toward
+/// the default (a candidate must beat it by >5 % to displace it).  The
+/// *choice* is timing-dependent but every choice is bit-neutral, and
+/// the result is cached process-wide, so numerical reproducibility is
+/// unaffected (see module docs).
+fn autotune_probe(isa: Isa) -> GemmParams {
+    const CANDIDATES: &[(usize, usize)] = &[(MC, NC), (48, NC), (192, NC), (MC, 512), (192, 512)];
+    let (m, n, k) = (192, 256, KC);
+    // Deterministic synthetic operands (cheap xorshift fill).
+    let mut s = 0x9E3779B97F4A7C15u64;
+    let mut fill = |len: usize| -> Vec<f64> {
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+            })
+            .collect()
+    };
+    let a = fill(m * k);
+    let b = fill(k * n);
+    let mut c = vec![0.0f64; m * n];
+    let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+    let mut time = |p: &GemmParams| {
+        // Two runs, keep the faster (smooths one-off cache misses).
+        let mut best = std::time::Duration::MAX;
+        for _ in 0..2 {
+            let t0 = std::time::Instant::now();
+            gemm_into_with(p, m, n, k, &a, false, &b, Accum::Set, &mut c, &mut scratch);
+            best = best.min(t0.elapsed());
+        }
+        best
+    };
+    let default = GemmParams::with_isa(isa).normalized();
+    let t_default = time(&default);
+    let mut best = default;
+    let mut t_best = t_default;
+    for &(mc, nc) in CANDIDATES {
+        let p = GemmParams { isa, kc: KC, mc, nc }.normalized();
+        if p == default {
+            continue;
+        }
+        let t = time(&p);
+        if t < t_best {
+            best = p;
+            t_best = t;
+        }
+    }
+    // Hysteresis: stay on the default unless the winner is >5% faster.
+    if best != default && t_best.as_secs_f64() > t_default.as_secs_f64() * 0.95 {
+        best = default;
+    }
+    std::hint::black_box(&c);
+    best
+}
 
 /// How [`gemm_into`] combines the product with the existing `C`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,6 +388,10 @@ pub enum Accum {
     /// `C -= A·B`.
     Sub,
 }
+
+// ---------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------
 
 /// Pack the `mc×kc` block of A at `(ic, pc)` into [`MR`]-row strips.
 ///
@@ -117,8 +450,12 @@ pub fn pack_b(
     }
 }
 
-/// The [`MR`]×[`NR`] register tile: `acc += a_strip · b_strip` over one
-/// `kc` chunk, k ascending (the fixed summation order).
+// ---------------------------------------------------------------------
+// Microkernels (one per ISA; all bitwise-identical by construction)
+// ---------------------------------------------------------------------
+
+/// The scalar [`MR`]×[`NR`] register tile: `acc += a_strip · b_strip`
+/// over one `kc` chunk, k ascending (the fixed summation order).
 #[inline(always)]
 fn microkernel(kc: usize, a: &[f64], b: &[f64], acc: &mut [f64; MR * NR]) {
     debug_assert!(a.len() >= kc * MR && b.len() >= kc * NR);
@@ -134,13 +471,146 @@ fn microkernel(kc: usize, a: &[f64], b: &[f64], acc: &mut [f64; MR * NR]) {
     }
 }
 
-/// Packed, cache-blocked, register-tiled `C (m×n) ?= A (m×k) · B (k×n)`
-/// with a fixed summation order (bit-reproducible run to run; see the
-/// module docs).  All operands row-major; `a_trans` reinterprets `a` as
-/// a row-major `k×m` buffer holding Aᵀ.  `scratch` must provide at
-/// least [`GEMM_SCRATCH`] f64 (packing buffers — no allocation inside).
-#[allow(clippy::too_many_arguments)] // the classic GEMM signature
-pub fn gemm_into(
+/// AVX2 variant of [`microkernel`]: 8 ymm accumulators (4 rows × 2
+/// vectors of 4 lanes).  Uses separate `mul` + `add` — **never**
+/// `fmadd` — so every lane performs bit-for-bit the scalar kernel's
+/// round-twice arithmetic (see the module docs on the no-FMA rule).
+///
+/// # Safety
+///
+/// Caller must have verified `avx2` is available on the running CPU
+/// (this module only calls it behind [`Isa::usable`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_avx2(kc: usize, a: &[f64], b: &[f64], acc: &mut [f64; MR * NR]) {
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_storeu_pd,
+    };
+    debug_assert!(a.len() >= kc * MR && b.len() >= kc * NR);
+    // SAFETY: every pointer below stays within the slices whose lengths
+    // were just asserted (a: kc*MR, b: kc*NR, acc: MR*NR); loadu/storeu
+    // have no alignment requirement.
+    unsafe {
+        let mut c: [[__m256d; 2]; MR] = [[_mm256_set1_pd(0.0); 2]; MR];
+        for (i, ci) in c.iter_mut().enumerate() {
+            ci[0] = _mm256_loadu_pd(acc.as_ptr().add(i * NR));
+            ci[1] = _mm256_loadu_pd(acc.as_ptr().add(i * NR + 4));
+        }
+        for p in 0..kc {
+            let bp = b.as_ptr().add(p * NR);
+            let b0 = _mm256_loadu_pd(bp);
+            let b1 = _mm256_loadu_pd(bp.add(4));
+            let ap = a.as_ptr().add(p * MR);
+            for (i, ci) in c.iter_mut().enumerate() {
+                let ai = _mm256_set1_pd(*ap.add(i));
+                // mul then add, never fmadd: bit-parity with scalar.
+                ci[0] = _mm256_add_pd(ci[0], _mm256_mul_pd(ai, b0));
+                ci[1] = _mm256_add_pd(ci[1], _mm256_mul_pd(ai, b1));
+            }
+        }
+        for (i, ci) in c.iter().enumerate() {
+            _mm256_storeu_pd(acc.as_mut_ptr().add(i * NR), ci[0]);
+            _mm256_storeu_pd(acc.as_mut_ptr().add(i * NR + 4), ci[1]);
+        }
+    }
+}
+
+/// NEON variant of [`microkernel`]: 16 q-register accumulators (4 rows
+/// × 4 vectors of 2 lanes), `vmul` + `vadd` (never `vfma`) for bit
+/// parity with the scalar kernel.
+///
+/// # Safety
+///
+/// Caller must have verified `neon` is available on the running CPU
+/// (this module only calls it behind [`Isa::usable`]).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_neon(kc: usize, a: &[f64], b: &[f64], acc: &mut [f64; MR * NR]) {
+    use std::arch::aarch64::{
+        float64x2_t, vaddq_f64, vdupq_n_f64, vld1q_f64, vmulq_f64, vst1q_f64,
+    };
+    debug_assert!(a.len() >= kc * MR && b.len() >= kc * NR);
+    // SAFETY: every pointer below stays within the slices whose lengths
+    // were just asserted; vld1q/vst1q are alignment-free on aarch64.
+    unsafe {
+        let mut c: [[float64x2_t; 4]; MR] = [[vdupq_n_f64(0.0); 4]; MR];
+        for (i, ci) in c.iter_mut().enumerate() {
+            for (v, cv) in ci.iter_mut().enumerate() {
+                *cv = vld1q_f64(acc.as_ptr().add(i * NR + 2 * v));
+            }
+        }
+        for p in 0..kc {
+            let bp = b.as_ptr().add(p * NR);
+            let bv = [
+                vld1q_f64(bp),
+                vld1q_f64(bp.add(2)),
+                vld1q_f64(bp.add(4)),
+                vld1q_f64(bp.add(6)),
+            ];
+            let ap = a.as_ptr().add(p * MR);
+            for (i, ci) in c.iter_mut().enumerate() {
+                let ai = vdupq_n_f64(*ap.add(i));
+                for (v, cv) in ci.iter_mut().enumerate() {
+                    // mul then add, never vfma: bit-parity with scalar.
+                    *cv = vaddq_f64(*cv, vmulq_f64(ai, bv[v]));
+                }
+            }
+        }
+        for (i, ci) in c.iter().enumerate() {
+            for (v, cv) in ci.iter().enumerate() {
+                vst1q_f64(acc.as_mut_ptr().add(i * NR + 2 * v), *cv);
+            }
+        }
+    }
+}
+
+/// Dispatch one register tile to the ISA's kernel.  `isa` must be
+/// pre-validated ([`Isa::validated`]) — that check is the safety
+/// argument for entering the `target_feature` kernels.
+#[inline(always)]
+fn run_microkernel(isa: Isa, kc: usize, a: &[f64], b: &[f64], acc: &mut [f64; MR * NR]) {
+    match isa {
+        Isa::Scalar => microkernel(kc, a, b, acc),
+        Isa::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Isa::Avx2 reaches here only via Isa::validated(),
+            // which confirmed runtime avx2+fma support.
+            unsafe {
+                microkernel_avx2(kc, a, b, acc)
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            microkernel(kc, a, b, acc)
+        }
+        Isa::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: Isa::Neon reaches here only via Isa::validated(),
+            // which confirmed runtime neon support.
+            unsafe {
+                microkernel_neon(kc, a, b, acc)
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            microkernel(kc, a, b, acc)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The blocked loop nest (sequential core, window-addressed)
+// ---------------------------------------------------------------------
+
+/// The packed loop nest over the column window `[j_lo, j_hi)` of C.
+///
+/// Raw-pointer C is what lets the pool-parallel slabs write disjoint
+/// windows of one buffer without aliasing `&mut`s.
+///
+/// # Safety
+///
+/// `c` must point to a row-major `m×n` f64 buffer that is valid for
+/// writes, and no other thread may concurrently access elements in
+/// columns `[j_lo, j_hi)` while this runs (slab disjointness).
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_window_raw(
+    params: &GemmParams,
     m: usize,
     n: usize,
     k: usize,
@@ -148,30 +618,21 @@ pub fn gemm_into(
     a_trans: bool,
     b: &[f64],
     acc: Accum,
-    c: &mut [f64],
+    c: *mut f64,
+    j_lo: usize,
+    j_hi: usize,
     scratch: &mut [f64],
 ) {
-    assert_eq!(a.len(), m * k, "gemm_into: A length != m*k");
-    assert_eq!(b.len(), k * n, "gemm_into: B length != k*n");
-    assert_eq!(c.len(), m * n, "gemm_into: C length != m*n");
-    assert!(scratch.len() >= GEMM_SCRATCH, "gemm_into: scratch must hold GEMM_SCRATCH f64");
-    if m == 0 || n == 0 {
-        return;
-    }
-    if k == 0 {
-        if acc == Accum::Set {
-            c.fill(0.0);
-        }
-        return;
-    }
-    let (apack, bpack) = scratch.split_at_mut(MC * KC);
+    let (kc_blk, mc_blk, nc_blk) = (params.kc, params.mc, params.nc);
+    let (apack, rest) = scratch.split_at_mut(mc_blk * kc_blk);
+    let bpack = &mut rest[..kc_blk * nc_blk];
 
-    let mut jc = 0;
-    while jc < n {
-        let nc = NC.min(n - jc);
+    let mut jc = j_lo;
+    while jc < j_hi {
+        let nc = nc_blk.min(j_hi - jc);
         let mut pc = 0;
         while pc < k {
-            let kc = KC.min(k - pc);
+            let kc = kc_blk.min(k - pc);
             // How this kc chunk lands in C: the first chunk carries the
             // caller's Accum, later chunks accumulate on top of it.
             let chunk_acc = if pc == 0 {
@@ -184,7 +645,7 @@ pub fn gemm_into(
             pack_b(b, n, pc, jc, kc, nc, bpack);
             let mut ic = 0;
             while ic < m {
-                let mc = MC.min(m - ic);
+                let mc = mc_blk.min(m - ic);
                 pack_a(a, a_trans, m, k, ic, pc, mc, kc, apack);
                 for jr in (0..nc).step_by(NR) {
                     let nr = NR.min(nc - jr);
@@ -193,15 +654,22 @@ pub fn gemm_into(
                         let mr = MR.min(mc - ir);
                         let astrip = &apack[(ir / MR) * MR * kc..(ir / MR + 1) * MR * kc];
                         let mut tile = [0.0f64; MR * NR];
-                        microkernel(kc, astrip, bstrip, &mut tile);
+                        run_microkernel(params.isa, kc, astrip, bstrip, &mut tile);
                         for i in 0..mr {
                             let crow = (ic + ir + i) * n + jc + jr;
                             for j in 0..nr {
                                 let v = tile[i * NR + j];
-                                match chunk_acc {
-                                    Accum::Set => c[crow + j] = v,
-                                    Accum::Add => c[crow + j] += v,
-                                    Accum::Sub => c[crow + j] -= v,
+                                // SAFETY: (ic+ir+i) < m and jc+jr+j <
+                                // j_hi ≤ n, so the element is inside the
+                                // m×n buffer and inside this window —
+                                // the caller's disjointness contract.
+                                unsafe {
+                                    let p = c.add(crow + j);
+                                    match chunk_acc {
+                                        Accum::Set => *p = v,
+                                        Accum::Add => *p += v,
+                                        Accum::Sub => *p -= v,
+                                    }
                                 }
                             }
                         }
@@ -213,6 +681,178 @@ pub fn gemm_into(
         }
         jc += nc;
     }
+}
+
+/// Validate operand shapes shared by every entry point.
+fn check_shapes(m: usize, n: usize, k: usize, a: &[f64], b: &[f64], c: &[f64]) {
+    assert_eq!(a.len(), m * k, "gemm: A length != m*k");
+    assert_eq!(b.len(), k * n, "gemm: B length != k*n");
+    assert_eq!(c.len(), m * n, "gemm: C length != m*n");
+}
+
+/// `k == 0` degenerate handling: `Set` zeroes C, `Add`/`Sub` leave it.
+fn handle_k0(acc: Accum, c: &mut [f64]) {
+    if acc == Accum::Set {
+        c.fill(0.0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public entry points
+// ---------------------------------------------------------------------
+
+/// Packed, cache-blocked, register-tiled `C (m×n) ?= A (m×k) · B (k×n)`
+/// with a fixed summation order (bit-reproducible run to run and across
+/// every ISA path; see the module docs).  All operands row-major;
+/// `a_trans` reinterprets `a` as a row-major `k×m` buffer holding Aᵀ.
+/// `scratch` must provide at least [`GEMM_SCRATCH`] f64 (packing
+/// buffers — no allocation inside).  Uses the process-wide
+/// [`GemmParams::tuned`] configuration.
+#[allow(clippy::too_many_arguments)] // the classic GEMM signature
+pub fn gemm_into(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    a_trans: bool,
+    b: &[f64],
+    acc: Accum,
+    c: &mut [f64],
+    scratch: &mut [f64],
+) {
+    gemm_into_with(GemmParams::tuned(), m, n, k, a, a_trans, b, acc, c, scratch);
+}
+
+/// [`gemm_into`] under an explicit configuration — the forced-dispatch
+/// entry the SIMD/scalar equivalence tests (and the autotune probe)
+/// drive.  `params` is re-normalized, so a hand-built value can never
+/// reach an unsupported kernel or overrun `scratch`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_with(
+    params: &GemmParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    a_trans: bool,
+    b: &[f64],
+    acc: Accum,
+    c: &mut [f64],
+    scratch: &mut [f64],
+) {
+    check_shapes(m, n, k, a, b, c);
+    let p = params.normalized();
+    assert!(
+        scratch.len() >= p.scratch_len(),
+        "gemm_into: scratch must hold at least {} f64 (have {})",
+        p.scratch_len(),
+        scratch.len()
+    );
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        handle_k0(acc, c);
+        return;
+    }
+    // SAFETY: `c` is an exclusive borrow covering the full [0, n)
+    // window; no other thread can touch it.
+    unsafe {
+        gemm_window_raw(&p, m, n, k, a, a_trans, b, acc, c.as_mut_ptr(), 0, n, scratch);
+    }
+}
+
+/// Shared operand pointers smuggled into pool tasks.  Sound because
+/// [`gemm_into_pooled`] joins every slab task before returning (the
+/// borrows strictly outlive every access) and slabs write disjoint
+/// column windows of `c` (read-all / write-local).
+#[derive(Clone, Copy)]
+struct RawOperands {
+    a: *const f64,
+    b: *const f64,
+    c: *mut f64,
+}
+// SAFETY: see `RawOperands` — accesses are read-only (a, b) or
+// disjoint-window writes (c), all joined before the borrows end.
+unsafe impl Send for RawOperands {}
+
+/// Pool-parallel [`gemm_into`]: C is split into `threads` contiguous
+/// [`NR`]-aligned column slabs, each computed by the sequential kernel
+/// — so the result is **bitwise identical to the sequential call for
+/// every thread count** (each element sees exactly the same operation
+/// sequence; only the traversal interleaving across independent
+/// elements changes).  `threads <= 1`, degenerate shapes, and GEMMs
+/// under the flop threshold take the sequential path outright.
+///
+/// The calling thread computes slab 0 on `scratch`; slabs 1.. run on
+/// `pool` workers with per-worker thread-local arenas (zero steady-
+/// state allocation once each worker has warmed).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_pooled(
+    pool: &WorkerPool,
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    a_trans: bool,
+    b: &[f64],
+    acc: Accum,
+    c: &mut [f64],
+    scratch: &mut [f64],
+) {
+    let t = threads.min(n.div_ceil(NR)).max(1);
+    if t <= 1 || gemm_flops(m, n, k) < PAR_MIN_FLOPS {
+        return gemm_into(m, n, k, a, a_trans, b, acc, c, scratch);
+    }
+    check_shapes(m, n, k, a, b, c);
+    let p = GemmParams::tuned().normalized();
+    assert!(
+        scratch.len() >= p.scratch_len(),
+        "gemm_into_pooled: scratch must hold at least {} f64",
+        p.scratch_len()
+    );
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        handle_k0(acc, c);
+        return;
+    }
+    // NR-aligned slab bounds: slab i covers columns [bound(i), bound(i+1)).
+    let units = n.div_ceil(NR);
+    let bound = |i: usize| ((units * i / t) * NR).min(n);
+    let ops = RawOperands { a: a.as_ptr(), b: b.as_ptr(), c: c.as_mut_ptr() };
+    let group = TaskGroup::new(pool.clone());
+    for i in 1..t {
+        let (j_lo, j_hi) = (bound(i), bound(i + 1));
+        group.spawn(move || {
+            SLAB_SCRATCH.with(|cell| {
+                let mut arena = cell.borrow_mut();
+                if arena.len() < GEMM_SCRATCH {
+                    arena.resize(GEMM_SCRATCH, 0.0);
+                }
+                // SAFETY: the pointers outlive this task (the caller
+                // joins the group before returning), a/b are only
+                // read, and this slab writes only columns
+                // [j_lo, j_hi) — disjoint from every other slab.
+                unsafe {
+                    let av = std::slice::from_raw_parts(ops.a, m * k);
+                    let bv = std::slice::from_raw_parts(ops.b, k * n);
+                    gemm_window_raw(
+                        &p, m, n, k, av, a_trans, bv, acc, ops.c, j_lo, j_hi, &mut arena,
+                    );
+                }
+            });
+        });
+    }
+    // Slab 0 on the calling thread, using the caller's scratch.
+    // SAFETY: exclusive ownership of columns [bound(0), bound(1)).
+    unsafe {
+        let (j_lo, j_hi) = (bound(0), bound(1));
+        gemm_window_raw(&p, m, n, k, a, a_trans, b, acc, c.as_mut_ptr(), j_lo, j_hi, scratch);
+    }
+    group.wait_idle();
 }
 
 /// Modelled flop count of one `m×n×k` GEMM (`2·m·n·k`).
@@ -244,22 +884,148 @@ mod tests {
         (0..len).map(|_| rng.f64() - 0.5).collect()
     }
 
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
     #[test]
     fn matches_naive_exactly_when_k_fits_one_chunk() {
         // One KC chunk ⇒ identical left-to-right summation order as the
-        // naive loop ⇒ bitwise equality, including ragged tile edges.
+        // naive loop ⇒ bitwise equality, including ragged tile edges —
+        // on EVERY usable ISA path.
         let mut rng = Rng::new(7);
         for (m, n, k) in [(1, 1, 1), (5, 9, 3), (13, 17, 31), (MC + 3, NC + 5, KC), (4, 8, 64)] {
             let a = randvec(&mut rng, m * k);
             let b = randvec(&mut rng, k * n);
             let want = naive(m, n, k, &a, false, &b);
-            let mut c = vec![f64::NAN; m * n];
-            let mut scratch = vec![0.0f64; GEMM_SCRATCH];
-            gemm_into(m, n, k, &a, false, &b, Accum::Set, &mut c, &mut scratch);
-            let cb: Vec<u64> = c.iter().map(|x| x.to_bits()).collect();
-            let wb: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
-            assert_eq!(cb, wb, "bitwise mismatch at {m}x{n}x{k}");
+            for isa in Isa::available() {
+                let params = GemmParams::with_isa(isa);
+                let mut c = vec![f64::NAN; m * n];
+                let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+                gemm_into_with(&params, m, n, k, &a, false, &b, Accum::Set, &mut c, &mut scratch);
+                assert_eq!(bits(&c), bits(&want), "bitwise mismatch at {m}x{n}x{k} on {isa:?}");
+            }
         }
+    }
+
+    #[test]
+    fn simd_paths_match_scalar_bitwise() {
+        // Forced-dispatch equivalence sweep: every usable ISA equals
+        // the scalar kernel bit for bit — ragged edges (m, n not
+        // multiples of MR/NR), transposed A, multi-chunk k, every
+        // accumulate mode.
+        let mut rng = Rng::new(0xA5A5);
+        let isas = Isa::available();
+        for case in 0..24 {
+            let m = 1 + rng.below(2 * MR * 3 + 1);
+            let n = 1 + rng.below(2 * NR * 3 + 1);
+            let k = 1 + rng.below(2 * KC + 17); // crosses chunk boundaries
+            let a_trans = rng.bool(0.5);
+            let a = randvec(&mut rng, m * k);
+            let b = randvec(&mut rng, k * n);
+            for acc_mode in [Accum::Set, Accum::Add, Accum::Sub] {
+                let c0 = randvec(&mut rng, m * n);
+                let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+                let mut want = c0.clone();
+                gemm_into_with(
+                    &GemmParams::with_isa(Isa::Scalar),
+                    m,
+                    n,
+                    k,
+                    &a,
+                    a_trans,
+                    &b,
+                    acc_mode,
+                    &mut want,
+                    &mut scratch,
+                );
+                for &isa in &isas {
+                    let mut got = c0.clone();
+                    gemm_into_with(
+                        &GemmParams::with_isa(isa),
+                        m,
+                        n,
+                        k,
+                        &a,
+                        a_trans,
+                        &b,
+                        acc_mode,
+                        &mut got,
+                        &mut scratch,
+                    );
+                    assert_eq!(
+                        bits(&got),
+                        bits(&want),
+                        "case {case}: {isa:?} diverged from scalar at \
+                         {m}x{n}x{k} trans={a_trans} acc={acc_mode:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_sizes_are_bit_neutral() {
+        // MC/NC only reorder independent C elements: any normalized
+        // tile pair must reproduce the pinned configuration's bits.
+        let mut rng = Rng::new(0xBEEF);
+        let (m, n, k) = (37, 53, KC + 29);
+        let a = randvec(&mut rng, m * k);
+        let b = randvec(&mut rng, k * n);
+        let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+        let mut want = vec![0.0f64; m * n];
+        let pinned = GemmParams::pinned();
+        gemm_into_with(&pinned, m, n, k, &a, false, &b, Accum::Set, &mut want, &mut scratch);
+        for (mc, nc) in [(48, 128), (192, 512), (MR, NR), (100, 260)] {
+            let p = GemmParams { isa: Isa::Scalar, kc: KC, mc, nc }.normalized();
+            let mut c = vec![0.0f64; m * n];
+            gemm_into_with(&p, m, n, k, &a, false, &b, Accum::Set, &mut c, &mut scratch);
+            assert_eq!(bits(&c), bits(&want), "tiles ({mc},{nc}) changed bits");
+        }
+    }
+
+    #[test]
+    fn pooled_any_thread_count_matches_sequential_bitwise() {
+        let mut rng = Rng::new(0x717A);
+        // Big enough to clear PAR_MIN_FLOPS so slabs really dispatch.
+        let (m, n, k) = (64, 160, 160);
+        assert!(gemm_flops(m, n, k) >= PAR_MIN_FLOPS, "shape must take the parallel path");
+        let a = randvec(&mut rng, m * k);
+        let b = randvec(&mut rng, k * n);
+        let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+        let mut want = vec![0.0f64; m * n];
+        gemm_into(m, n, k, &a, false, &b, Accum::Set, &mut want, &mut scratch);
+        let pool = WorkerPool::new();
+        for threads in [1, 2, 3, 5, 16] {
+            let mut c = vec![f64::NAN; m * n];
+            gemm_into_pooled(
+                &pool, threads, m, n, k, &a, false, &b, Accum::Set, &mut c, &mut scratch,
+            );
+            assert_eq!(bits(&c), bits(&want), "threads={threads} changed bits");
+            // Run-to-run: a second parallel run reproduces the bits.
+            let mut c2 = vec![0.0f64; m * n];
+            gemm_into_pooled(
+                &pool, threads, m, n, k, &a, false, &b, Accum::Set, &mut c2, &mut scratch,
+            );
+            assert_eq!(bits(&c), bits(&c2), "threads={threads} not run-to-run stable");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pooled_small_problems_stay_sequential() {
+        // Under the flop threshold nothing is dispatched to the pool.
+        let pool = WorkerPool::new();
+        let mut rng = Rng::new(3);
+        let (m, n, k) = (8, 16, 8);
+        let a = randvec(&mut rng, m * k);
+        let b = randvec(&mut rng, k * n);
+        let mut scratch = vec![0.0f64; GEMM_SCRATCH];
+        let mut c = vec![0.0f64; m * n];
+        gemm_into_pooled(&pool, 8, m, n, k, &a, false, &b, Accum::Set, &mut c, &mut scratch);
+        assert_eq!(pool.tasks_executed(), 0, "small GEMM must not touch the pool");
+        assert_eq!(bits(&c), bits(&naive(m, n, k, &a, false, &b)));
+        pool.shutdown();
     }
 
     #[test]
@@ -279,9 +1045,7 @@ mod tests {
         let set = c.clone();
         gemm_into(m, n, k, &at, true, &b, Accum::Add, &mut c, &mut scratch);
         gemm_into(m, n, k, &at, true, &b, Accum::Sub, &mut c, &mut scratch);
-        let cb: Vec<u64> = c.iter().map(|x| x.to_bits()).collect();
-        let sb: Vec<u64> = set.iter().map(|x| x.to_bits()).collect();
-        assert_eq!(cb, sb, "Add then Sub of the same product must cancel bitwise");
+        assert_eq!(bits(&c), bits(&set), "Add then Sub of the same product must cancel bitwise");
     }
 
     #[test]
@@ -299,11 +1063,7 @@ mod tests {
         };
         let c1 = run(&mut scratch);
         let c2 = run(&mut scratch);
-        assert_eq!(
-            c1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-            c2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-            "identical inputs must give identical bits"
-        );
+        assert_eq!(bits(&c1), bits(&c2), "identical inputs must give identical bits");
         for (g, w) in c1.iter().zip(&want) {
             assert!((g - w).abs() < 1e-10 * k as f64, "{g} vs {w}");
         }
@@ -319,5 +1079,59 @@ mod tests {
         gemm_into(2, 3, 0, &[], false, &[], Accum::Add, &mut c, &mut scratch);
         assert!(c.iter().all(|&x| x == 5.0), "k=0 Add leaves C");
         gemm_into(0, 0, 4, &[], false, &[], Accum::Set, &mut [], &mut scratch);
+        // Pooled degenerates behave identically.
+        let pool = WorkerPool::new();
+        let mut c = vec![5.0f64; 6];
+        gemm_into_pooled(&pool, 4, 2, 3, 0, &[], false, &[], Accum::Set, &mut c, &mut scratch);
+        assert!(c.iter().all(|&x| x == 0.0));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn isa_parsing_detection_and_fallback() {
+        assert_eq!(Isa::parse("scalar"), Some(Isa::Scalar));
+        assert_eq!(Isa::parse(" AVX2 "), Some(Isa::Avx2));
+        assert_eq!(Isa::parse("neon"), Some(Isa::Neon));
+        assert_eq!(Isa::parse("sse9"), None);
+        assert!(Isa::Scalar.usable(), "scalar is always usable");
+        let avail = Isa::available();
+        assert!(avail.contains(&Isa::Scalar));
+        assert!(avail.contains(&Isa::detect_from(None)), "detected ISA must be usable");
+        // A forced-but-unusable (or unknown) override degrades to scalar.
+        assert_eq!(Isa::detect_from(Some("warp9")), Isa::Scalar);
+        for isa in [Isa::Avx2, Isa::Neon] {
+            if !isa.usable() {
+                assert_eq!(Isa::detect_from(Some(isa.name())), Isa::Scalar);
+            } else {
+                assert_eq!(Isa::detect_from(Some(isa.name())), isa);
+            }
+        }
+        assert_eq!(Isa::detect_from(Some("scalar")), Isa::Scalar, "scalar can always be forced");
+    }
+
+    #[test]
+    fn params_normalize_and_env_tile_parsing() {
+        let p = GemmParams { isa: Isa::Scalar, kc: 9999, mc: 1000, nc: 7 }.normalized();
+        assert_eq!(p.kc, KC, "kc is frozen");
+        assert_eq!(p.mc, MC_MAX, "mc clamped to the scratch budget");
+        assert_eq!(p.nc, NR, "nc rounded to an NR multiple");
+        assert!(p.scratch_len() <= GEMM_SCRATCH);
+        assert_eq!(GemmParams::pinned().scratch_len(), MC * KC + KC * NC);
+        // FT_GEMM_TILES parsing (injected, no process-env mutation).
+        let t = parse_tiles(Isa::Scalar, Some("192, 512")).unwrap();
+        assert_eq!((t.mc, t.nc), (192, 512));
+        assert!(parse_tiles(Isa::Scalar, Some("192")).is_none(), "two fields required");
+        assert!(parse_tiles(Isa::Scalar, Some("a,b")).is_none());
+        assert!(parse_tiles(Isa::Scalar, None).is_none());
+        // resolve_params: explicit tiles win; skip-probe takes defaults.
+        let r = resolve_params(Isa::Scalar, Some("48,128"), false);
+        assert_eq!((r.mc, r.nc), (48, 128));
+        let d = resolve_params(Isa::Scalar, None, true);
+        assert_eq!((d.mc, d.nc), (MC, NC));
+        // The cached process-wide params are normalized and stable.
+        let a = GemmParams::tuned();
+        let b = GemmParams::tuned();
+        assert!(std::ptr::eq(a, b), "tuned params are cached once");
+        assert_eq!(*a, a.normalized(), "cached params are normalized");
     }
 }

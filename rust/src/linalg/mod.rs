@@ -10,10 +10,11 @@
 //! with pooled workspaces.
 //!
 //! The deterministic fast-kernel layer lives in [`gemm`] (packed,
-//! cache-blocked f64 GEMM microkernel with a fixed summation order) and
-//! [`wy`] (compact-WY accumulation, turning a panel's trailing update
-//! into two GEMMs) — the `KernelProfile::Blocked` path of the CAQR
-//! subsystem.
+//! cache-blocked f64 GEMM with runtime-dispatched SIMD microkernels, a
+//! fixed summation order, autotuned cache tiles, and pool-parallel
+//! column slabs) and [`wy`] (compact-WY accumulation, turning a panel's
+//! trailing update into two GEMMs) — the `KernelProfile::Blocked` path
+//! of the CAQR subsystem.
 
 pub mod gemm;
 pub mod matrix;
@@ -21,7 +22,7 @@ pub mod qr;
 pub mod view;
 pub mod wy;
 
-pub use gemm::{Accum, gemm_into};
+pub use gemm::{Accum, GemmParams, Isa, gemm_into, gemm_into_pooled};
 pub use matrix::Matrix;
 pub use qr::{
     PackedQr, backsolve, caqr_reference, combine_r, householder_qr, householder_qr_reference,

@@ -25,14 +25,17 @@
 //! from the rank-1 reference path by normal rounding (bounded by the
 //! usual `c·n·ε‖A‖`).  What the fault-tolerance contract actually
 //! needs is weaker and fully preserved: every kernel here is
-//! **deterministic** (fixed summation order, single-threaded), so two
-//! replicas of the same update task still produce identical bit
-//! patterns, and recovery still hands back exactly the bits the dead
-//! owner would have produced.  The `KernelProfile::Reference` path
-//! keeps the bitwise-pinned kernels for the oracle tests.
+//! **deterministic** (fixed summation order — and the pool-parallel
+//! path partitions work so that every thread count reproduces the
+//! sequential bits, see [`crate::linalg::gemm`]), so two replicas of
+//! the same update task still produce identical bit patterns, and
+//! recovery still hands back exactly the bits the dead owner would
+//! have produced.  The `KernelProfile::Reference` path keeps the
+//! bitwise-pinned kernels for the oracle tests.
 
 use super::gemm::{self, Accum, GEMM_SCRATCH};
 use super::view;
+use crate::engine::WorkerPool;
 
 /// A panel's compact-WY factor: `Q = I − V T Vᵀ`.
 #[derive(Debug, Clone)]
@@ -193,6 +196,44 @@ pub fn apply_wyt_into(
     apply_wyt_with_scratch(&wy.v, &wy.t, wy.rows, wy.cols, block, block_cols, scratch);
 }
 
+/// Pool-parallel [`apply_wyt_into`]: the two large GEMMs (`Vᵀ·C` and
+/// `C −= V·W₂`) fan their column slabs out across up to `threads`
+/// workers of `pool`; the tiny `cols×cols` triangular product stays
+/// sequential.  **Bitwise identical to the sequential path for every
+/// thread count** (each slab runs the sequential kernel on disjoint
+/// columns — see [`gemm::gemm_into_pooled`]); `threads <= 1` *is* the
+/// sequential path.
+pub fn apply_wyt_pooled(
+    wy: &WyFactor,
+    block: &mut [f64],
+    block_cols: usize,
+    scratch: &mut Vec<f64>,
+    pool: &WorkerPool,
+    threads: usize,
+) {
+    if threads <= 1 {
+        return apply_wyt_into(wy, block, block_cols, scratch);
+    }
+    let (rows, cols) = (wy.rows, wy.cols);
+    assert_eq!(block.len(), rows * block_cols, "apply_wyt: block length != rows*block_cols");
+    let need = apply_wyt_scratch(cols, block_cols);
+    if scratch.len() < need {
+        scratch.resize(need, 0.0);
+    }
+    let (wbuf, rest) = scratch.split_at_mut(cols * block_cols);
+    let (w2, gs) = rest.split_at_mut(cols * block_cols);
+    // W = Vᵀ · C
+    gemm::gemm_into_pooled(
+        pool, threads, cols, block_cols, rows, &wy.v, true, block, Accum::Set, wbuf, gs,
+    );
+    // W₂ = Tᵀ · W (tiny; never worth a pool hop)
+    gemm::gemm_into(cols, block_cols, cols, &wy.t, true, wbuf, Accum::Set, w2, gs);
+    // C −= V · W₂
+    gemm::gemm_into_pooled(
+        pool, threads, rows, block_cols, cols, &wy.v, false, w2, Accum::Sub, block, gs,
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +331,37 @@ mod tests {
             before.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             "all-identity panel must leave the block untouched"
         );
+    }
+
+    #[test]
+    fn pooled_update_matches_sequential_bitwise_for_every_thread_count() {
+        // Large enough that the slab scheduler actually dispatches
+        // (gemm::PAR_MIN_FLOPS): the pooled trailing update must be
+        // indistinguishable — bit for bit — from the sequential one.
+        let (rows, cols, bk) = (256, 16, 256);
+        let (packed, tau) = factored_panel(rows, cols, 21);
+        let wy = build_wy(&packed, rows, cols, &tau);
+        let block = Matrix::random(rows, bk, 77);
+        let b0: Vec<f64> = block.data().iter().map(|&x| x as f64).collect();
+
+        let mut want = b0.clone();
+        let mut scratch = Vec::new();
+        apply_wyt_into(&wy, &mut want, bk, &mut scratch);
+        let want_bits: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+
+        let pool = crate::engine::WorkerPool::new();
+        for threads in [1, 2, 4, 7] {
+            let mut got = b0.clone();
+            let mut scratch = Vec::new();
+            apply_wyt_pooled(&wy, &mut got, bk, &mut scratch, &pool, threads);
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want_bits,
+                "threads={threads} diverged from the sequential update"
+            );
+        }
+        assert!(pool.tasks_executed() > 0, "threads>1 must really fan out");
+        pool.shutdown();
     }
 
     #[test]

@@ -60,8 +60,9 @@ USAGE:
   A: baseline|redundant|replace|self-healing|checkpointed
   B: pjrt|host|auto
   K: reference|blocked   (kernel profile: bitwise-pinned vs compact-WY fast path)
-  --threads N pre-spawns N pool workers (removes first-run spawn jitter;
-  the pool stays elastic and may still grow under load)
+  --threads N pre-spawns N pool workers AND fans each kernel's GEMM out
+  across up to N workers (bit-identical at every N; the pool stays
+  elastic and may still grow under load)
   --policy picks the recovery ladder (replica = papers' replication only;
   hybrid = replication + --checksums C Vandermonde checksum blocks, which
   survives pair wipes that replication alone cannot)
@@ -382,7 +383,7 @@ fn cmd_caqr(args: &Args) -> Result<()> {
         .host_only()
         .kernel_profile(profile)
         .recovery_policy(policy)
-        .prewarm(threads)
+        .threads(threads)
         .build()?;
 
     if args.get("sweep").is_some() {
@@ -526,7 +527,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     sc.validate()?;
     let threads = args.parse_flag::<usize>("threads")?.unwrap_or(0);
-    let engine = ft_tsqr::engine::Engine::builder().host_only().prewarm(threads).build()?;
+    let engine = ft_tsqr::engine::Engine::builder().host_only().threads(threads).build()?;
 
     println!(
         "simulate: scenario={} procs={} panels={}x{} algo={} policy={} checksums={} \

@@ -105,18 +105,27 @@ pub enum Regression {
 ///   run's mode also only warns — quick and full runs use different
 ///   bench shapes, and ratios are only comparable like-for-like (the
 ///   CI gate runs quick, so baselines must be refreshed with
-///   `BENCH_QUICK=1` to arm it).
+///   `BENCH_QUICK=1` to arm it);
+/// * a baseline whose recorded `"host_fingerprint"` differs from
+///   `host_fingerprint` (the current host, see
+///   `runtime::CpuInfo::fingerprint`) also only warns — an absolute
+///   GFLOP/s number measured on one machine is not a contract for a
+///   different machine.  The check is skipped when either side is
+///   empty (legacy baselines without a fingerprint stay hard-gated).
 ///
 /// Baselines are deliberately dominated by machine-*relative* metrics
 /// (speedup ratios, not absolute runs/sec): CI hosts vary widely in
 /// absolute speed, but a fast path that stops beating its reference
-/// path regresses on every machine.
+/// path regresses on every machine.  The host fingerprint protects the
+/// few absolute metrics (GEMM GFLOP/s) that a heterogeneous host would
+/// otherwise trip.
 pub fn regress_check(
     bench: &str,
     baseline_path: &str,
     current: &[(&str, f64)],
     tolerance: f64,
     quick_mode: bool,
+    host_fingerprint: &str,
 ) -> Regression {
     let text = match std::fs::read_to_string(baseline_path) {
         Ok(t) => t,
@@ -133,9 +142,18 @@ pub fn regress_check(
     };
     let baseline_quick = json.get("quick").and_then(crate::util::Json::as_bool);
     let mode_mismatch = baseline_quick.is_some_and(|q| q != quick_mode);
+    let baseline_host = json
+        .get("host_fingerprint")
+        .and_then(crate::util::Json::as_str)
+        .unwrap_or_default()
+        .to_string();
+    let host_mismatch = !baseline_host.is_empty()
+        && !host_fingerprint.is_empty()
+        && baseline_host != host_fingerprint;
     let provisional =
         json.get("provisional").and_then(crate::util::Json::as_bool).unwrap_or(false)
-            || mode_mismatch;
+            || mode_mismatch
+            || host_mismatch;
     let mut drops = Vec::new();
     let mut compared = 0usize;
     for &(key, cur) in current {
@@ -157,7 +175,13 @@ pub fn regress_check(
     if drops.is_empty() {
         Regression::Pass(format!("{bench}: {compared} metrics within tolerance of baseline"))
     } else if provisional {
-        let why = if mode_mismatch { "MODE-MISMATCHED (quick vs full)" } else { "PROVISIONAL" };
+        let why = if host_mismatch {
+            format!("HOST-MISMATCHED (baseline '{baseline_host}' vs current '{host_fingerprint}')")
+        } else if mode_mismatch {
+            "MODE-MISMATCHED (quick vs full)".to_string()
+        } else {
+            "PROVISIONAL".to_string()
+        };
         Regression::Pass(format!(
             "{bench}: drops vs {why} baseline (warning only): {}",
             drops.join("; ")
@@ -168,20 +192,43 @@ pub fn regress_check(
 }
 
 /// Bench-binary helper: run the gate when `BENCH_REGRESS=1`, print the
-/// verdict, and exit non-zero on a real regression.  The current run's
-/// [`quick`] mode is compared against the baseline's recorded mode so
-/// ratios are never hard-gated across different bench shapes.
+/// host identity and the verdict, and exit non-zero on a real
+/// regression.  The current run's [`quick`] mode and the host's
+/// `CpuInfo` fingerprint are compared against the baseline's recorded
+/// ones, so metrics are never hard-gated across different bench shapes
+/// or different machines.
 pub fn enforce_regress_gate(bench: &str, baseline_path: &str, current: &[(&str, f64)]) {
     if !regress_enabled() {
         return;
     }
-    match regress_check(bench, baseline_path, current, 0.20, quick()) {
+    let cpu = crate::runtime::CpuInfo::cached();
+    println!("bench-regress host: {}", cpu.summary());
+    match regress_check(bench, baseline_path, current, 0.20, quick(), &cpu.fingerprint()) {
         Regression::Pass(msg) | Regression::NoBaseline(msg) => println!("bench-regress: {msg}"),
         Regression::Fail(msg) => {
             eprintln!("bench-regress: {msg}");
             std::process::exit(3);
         }
     }
+}
+
+/// JSON fields (no surrounding braces, no trailing comma) identifying
+/// the host a bench report was measured on — spliced into every
+/// `BENCH_*.json` so [`regress_check`] can refuse to hard-gate across
+/// machines and humans can see what hardware produced a number.
+pub fn host_json_fields() -> String {
+    let cpu = crate::runtime::CpuInfo::cached();
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    format!(
+        "\"host_fingerprint\": \"{}\", \"host_model\": \"{}\", \"host_arch\": \"{}\", \
+         \"host_isa\": \"{}\", \"host_features\": \"{}\", \"host_threads\": {}",
+        esc(&cpu.fingerprint()),
+        esc(&cpu.model),
+        cpu.arch,
+        cpu.isa.name(),
+        cpu.features.join("+"),
+        cpu.threads
+    )
 }
 
 /// Pick an iteration count depending on quick mode.
@@ -215,27 +262,27 @@ mod tests {
         let path = p.to_str().unwrap();
         // Within tolerance (10% drop < 20%).
         assert!(matches!(
-            regress_check("x", path, &[("speedup", 1.8), ("gflops", 4.5)], 0.20, true),
+            regress_check("x", path, &[("speedup", 1.8), ("gflops", 4.5)], 0.20, true, ""),
             Regression::Pass(_)
         ));
         // Beyond tolerance, same mode: hard fail.
         assert!(matches!(
-            regress_check("x", path, &[("speedup", 1.5)], 0.20, true),
+            regress_check("x", path, &[("speedup", 1.5)], 0.20, true, ""),
             Regression::Fail(_)
         ));
         // Same drop, but the baseline was recorded in a different mode
         // (different bench shapes): warning only.
         assert!(matches!(
-            regress_check("x", path, &[("speedup", 1.5)], 0.20, false),
+            regress_check("x", path, &[("speedup", 1.5)], 0.20, false, ""),
             Regression::Pass(_)
         ));
         // Unknown + non-positive keys are skipped, missing file is soft.
         assert!(matches!(
-            regress_check("x", path, &[("new_metric", 0.1), ("zero", 0.0)], 0.20, true),
+            regress_check("x", path, &[("new_metric", 0.1), ("zero", 0.0)], 0.20, true, ""),
             Regression::Pass(_)
         ));
         assert!(matches!(
-            regress_check("x", "/nonexistent/b.json", &[("speedup", 1.0)], 0.20, true),
+            regress_check("x", "/nonexistent/b.json", &[("speedup", 1.0)], 0.20, true, ""),
             Regression::NoBaseline(_)
         ));
         // Provisional baselines warn instead of failing.
@@ -244,9 +291,87 @@ mod tests {
             r#"{"bench":"y","quick":true,"provisional":true,"speedup":2.0}"#,
         );
         assert!(matches!(
-            regress_check("y", p2.to_str().unwrap(), &[("speedup", 0.5)], 0.20, true),
+            regress_check("y", p2.to_str().unwrap(), &[("speedup", 0.5)], 0.20, true, ""),
             Regression::Pass(_)
         ));
+    }
+
+    #[test]
+    fn armed_baseline_hard_fails_synthetic_drop_on_matching_host() {
+        // The acceptance-criterion shape: a measured (non-provisional)
+        // baseline with a matching host fingerprint MUST hard-fail a
+        // synthetic >20% drop — the gate is a contract, not a warning.
+        let tmp = crate::util::TestDir::new();
+        let p = tmp.write(
+            "BENCH_armed.json",
+            r#"{"bench":"armed","quick":true,"provisional":false,
+                "host_fingerprint":"x86_64|TestCpu|avx2+fma|4t","gemm_gflops":4.0}"#,
+        );
+        let path = p.to_str().unwrap();
+        let host = "x86_64|TestCpu|avx2+fma|4t";
+        match regress_check("armed", path, &[("gemm_gflops", 2.0)], 0.20, true, host) {
+            Regression::Fail(msg) => {
+                assert!(msg.contains("perf regression"), "{msg}");
+                assert!(msg.contains("-50.0%"), "must quantify the drop: {msg}");
+            }
+            other => panic!("measured baseline + matching host must FAIL, not {other:?}"),
+        }
+        // Within tolerance still passes on the same armed baseline.
+        assert!(matches!(
+            regress_check("armed", path, &[("gemm_gflops", 3.9)], 0.20, true, host),
+            Regression::Pass(_)
+        ));
+    }
+
+    #[test]
+    fn host_fingerprint_mismatch_warns_with_both_hosts_and_the_drop() {
+        let tmp = crate::util::TestDir::new();
+        let p = tmp.write(
+            "BENCH_h.json",
+            r#"{"bench":"h","quick":true,"provisional":false,
+                "host_fingerprint":"x86_64|CpuA|avx2|8t","gemm_gflops":4.0}"#,
+        );
+        let path = p.to_str().unwrap();
+        // Different host: the same >20% drop becomes a visible warning
+        // naming BOTH fingerprints and keeping the drop quantified.
+        match regress_check("h", path, &[("gemm_gflops", 1.0)], 0.20, true, "arm64|CpuB|neon|2t") {
+            Regression::Pass(msg) => {
+                assert!(msg.contains("HOST-MISMATCHED"), "must name the reason: {msg}");
+                assert!(msg.contains("CpuA") && msg.contains("CpuB"), "both hosts: {msg}");
+                assert!(msg.contains("-75.0%"), "must quantify the drop: {msg}");
+            }
+            other => panic!("host-mismatched drop must warn, not {other:?}"),
+        }
+        // Legacy baseline without a fingerprint stays hard-gated even
+        // when the current host is known.
+        let legacy =
+            tmp.write("BENCH_l.json", r#"{"bench":"l","quick":true,"gemm_gflops":4.0}"#);
+        assert!(matches!(
+            regress_check("l", legacy.to_str().unwrap(), &[("gemm_gflops", 1.0)], 0.2, true, "any"),
+            Regression::Fail(_)
+        ));
+        // An empty current fingerprint skips the check (hard gate holds).
+        assert!(matches!(
+            regress_check("h", path, &[("gemm_gflops", 1.0)], 0.20, true, ""),
+            Regression::Fail(_)
+        ));
+    }
+
+    #[test]
+    fn host_json_fields_carry_the_cached_fingerprint() {
+        let fields = host_json_fields();
+        let cpu = crate::runtime::CpuInfo::cached();
+        assert!(fields.contains("\"host_fingerprint\""), "{fields}");
+        assert!(fields.contains(&format!("\"host_threads\": {}", cpu.threads)), "{fields}");
+        assert!(fields.contains(cpu.isa.name()), "{fields}");
+        // Splicing into an object yields parseable JSON whose
+        // fingerprint round-trips through the gate's reader.
+        let doc = format!("{{{fields}}}");
+        let json = crate::util::Json::parse(&doc).expect("host fields must be valid JSON");
+        assert_eq!(
+            json.get("host_fingerprint").and_then(crate::util::Json::as_str),
+            Some(cpu.fingerprint().as_str())
+        );
     }
 
     #[test]
@@ -259,7 +384,7 @@ mod tests {
             "BENCH_p.json",
             r#"{"bench":"p","quick":true,"provisional":true,"speedup":2.0}"#,
         );
-        match regress_check("p", p.to_str().unwrap(), &[("speedup", 0.5)], 0.20, true) {
+        match regress_check("p", p.to_str().unwrap(), &[("speedup", 0.5)], 0.20, true, "") {
             Regression::Pass(msg) => {
                 assert!(msg.contains("PROVISIONAL"), "must name the escape hatch: {msg}");
                 assert!(msg.contains("speedup"), "must keep the dropped metric visible: {msg}");
@@ -269,7 +394,7 @@ mod tests {
         }
         // Mode mismatch is the other warn reason, and it must say so.
         let q = tmp.write("BENCH_q.json", r#"{"bench":"q","quick":true,"speedup":2.0}"#);
-        match regress_check("q", q.to_str().unwrap(), &[("speedup", 0.5)], 0.20, false) {
+        match regress_check("q", q.to_str().unwrap(), &[("speedup", 0.5)], 0.20, false, "") {
             Regression::Pass(msg) => {
                 assert!(msg.contains("MODE-MISMATCHED"), "must name the reason: {msg}");
             }
@@ -277,7 +402,7 @@ mod tests {
         }
         // A provisional baseline with NO drop passes with the normal
         // within-tolerance message (no scare words).
-        match regress_check("p", p.to_str().unwrap(), &[("speedup", 2.1)], 0.20, true) {
+        match regress_check("p", p.to_str().unwrap(), &[("speedup", 2.1)], 0.20, true, "") {
             Regression::Pass(msg) => assert!(!msg.contains("PROVISIONAL"), "{msg}"),
             other => panic!("clean provisional run must pass, not {other:?}"),
         }

@@ -1,0 +1,188 @@
+//! Host CPU introspection and the engine-wide parallelism knob.
+//!
+//! [`CpuInfo`] is detected once at `EngineBuilder::build()` and stamped
+//! into every `BENCH_*.json` the report layer writes: the perf gate
+//! (`report::bench::regress_check`) only hard-fails a drop when the
+//! baseline's [`CpuInfo::fingerprint`] matches the current host — a
+//! GFLOP/s number measured on one machine is not a contract for a
+//! different one.
+//!
+//! [`Parallelism`] is the single struct the `--threads` CLI knob flows
+//! through: CLI/config → `EngineBuilder` → `Engine` → `CaqrSpec` → the
+//! GEMM slab scheduler ([`crate::linalg::gemm::gemm_into_pooled`]) and
+//! the trailing-update fan-out in `caqr::exec`.  `threads = 1` is the
+//! sequential path itself (not merely equivalent to it), so the
+//! historical bit-level behaviour is preserved exactly.
+
+use crate::linalg::gemm::Isa;
+
+/// Degree of intra-task parallelism for the kernel layer.
+///
+/// One value, threaded everywhere — prewarmed pool workers and GEMM
+/// slab fan-out always agree.  Every thread count produces bitwise
+/// identical results (see [`crate::linalg::gemm`]); this knob trades
+/// wall-clock only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Parallelism {
+    /// Sequential execution (the default; bit-identical to every other
+    /// setting, but uses no pool workers inside a kernel call).
+    pub fn single() -> Parallelism {
+        Parallelism { threads: 1 }
+    }
+
+    /// `threads`-way parallelism; `0` is the CLI's "unset" and maps to
+    /// sequential.
+    pub fn new(threads: usize) -> Parallelism {
+        Parallelism { threads: threads.max(1) }
+    }
+
+    /// Worker threads a pooled GEMM may fan out across (≥ 1).
+    pub fn gemm_threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Does this setting ever dispatch kernel work to the pool?
+    pub fn is_parallel(&self) -> bool {
+        self.threads > 1
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::single()
+    }
+}
+
+/// What the engine learned about the host at build time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CpuInfo {
+    /// Human-readable CPU model (`/proc/cpuinfo` "model name", or the
+    /// architecture when unavailable).
+    pub model: String,
+    /// Target architecture (`x86_64`, `aarch64`, …).
+    pub arch: &'static str,
+    /// Microkernel path the GEMM dispatcher selected for this process
+    /// (post `FT_GEMM_ISA` override).
+    pub isa: Isa,
+    /// Runtime-detected SIMD features relevant to the kernel layer.
+    pub features: Vec<&'static str>,
+    /// Hardware threads available to this process.
+    pub threads: usize,
+}
+
+impl CpuInfo {
+    /// Detect the current host (cheap; feature probes are cached by
+    /// `std`).
+    pub fn detect() -> CpuInfo {
+        CpuInfo {
+            model: cpu_model(),
+            arch: std::env::consts::ARCH,
+            isa: Isa::detect(),
+            features: detected_features(),
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+
+    /// The process-wide cached detection (one `/proc` read per process;
+    /// `EngineBuilder::build` warms it so every engine shares it).
+    pub fn cached() -> &'static CpuInfo {
+        static CACHED: std::sync::OnceLock<CpuInfo> = std::sync::OnceLock::new();
+        CACHED.get_or_init(CpuInfo::detect)
+    }
+
+    /// Stable like-for-like identity for baseline comparison: two runs
+    /// with equal fingerprints ran on comparable hardware with the same
+    /// kernel dispatch.  Format: `arch|model|features|Nt`.
+    pub fn fingerprint(&self) -> String {
+        format!("{}|{}|{}|{}t", self.arch, self.model, self.features.join("+"), self.threads)
+    }
+
+    /// One-line human summary for bench logs and the CI perf gate.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ({}, isa={}, features=[{}], {} threads)",
+            self.model,
+            self.arch,
+            self.isa.name(),
+            self.features.join(", "),
+            self.threads
+        )
+    }
+}
+
+/// Best-effort CPU model string.
+fn cpu_model() -> String {
+    if let Ok(text) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in text.lines() {
+            // x86 uses "model name", aarch64 often only "CPU part".
+            if let Some(rest) = line.strip_prefix("model name") {
+                if let Some((_, v)) = rest.split_once(':') {
+                    let v = v.trim();
+                    if !v.is_empty() {
+                        return v.to_string();
+                    }
+                }
+            }
+        }
+    }
+    std::env::consts::ARCH.to_string()
+}
+
+/// The SIMD features the kernel layer cares about, in a fixed order so
+/// fingerprints compare stably.
+fn detected_features() -> Vec<&'static str> {
+    let mut f = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            f.push("avx2");
+        }
+        if std::is_x86_feature_detected!("fma") {
+            f.push("fma");
+        }
+        if std::is_x86_feature_detected!("avx512f") {
+            f.push("avx512f");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            f.push("neon");
+        }
+    }
+    if f.is_empty() {
+        f.push("baseline");
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_defaults_and_clamps() {
+        assert_eq!(Parallelism::default(), Parallelism::single());
+        assert_eq!(Parallelism::new(0).gemm_threads(), 1, "0 means unset, maps to sequential");
+        assert!(!Parallelism::new(1).is_parallel());
+        assert!(Parallelism::new(4).is_parallel());
+        assert_eq!(Parallelism::new(4).gemm_threads(), 4);
+    }
+
+    #[test]
+    fn cpu_info_detects_and_fingerprints_stably() {
+        let a = CpuInfo::detect();
+        let b = CpuInfo::detect();
+        assert!(!a.model.is_empty());
+        assert!(a.threads >= 1);
+        assert!(!a.features.is_empty());
+        assert!(a.isa.usable(), "selected ISA must run on this host");
+        assert_eq!(a.fingerprint(), b.fingerprint(), "fingerprint is stable within a process");
+        assert!(a.fingerprint().contains(a.arch));
+        assert!(a.summary().contains(a.isa.name()));
+    }
+}

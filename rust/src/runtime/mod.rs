@@ -5,11 +5,13 @@
 //! Python is build-time only; after `make artifacts` the rust binary is
 //! self-contained.
 
+pub mod cpu;
 pub mod executor;
 pub mod kernel;
 pub mod manifest;
 pub mod service;
 
+pub use cpu::{CpuInfo, Parallelism};
 pub use executor::{Backend, Executor, Factorization};
 pub use kernel::{Kernel, KernelCall, KernelOp, KernelProfile, WorkspacePool, WorkspaceStats};
 pub use manifest::Manifest;

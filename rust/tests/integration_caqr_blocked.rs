@@ -115,6 +115,50 @@ fn blocked_recovers_bitwise_identically_under_every_single_strike() {
 }
 
 #[test]
+fn blocked_with_threads_matches_sequential_bitwise_under_every_strike() {
+    // The pool-parallel kernel path (SIMD dispatch + `--threads` GEMM
+    // slab fan-out) must be invisible at the bit level: an engine built
+    // with `threads(4)` produces the exact bits of the sequential
+    // engine, failure-free AND under every single strike within the
+    // bound.  (Slab-level engagement of the pool is pinned separately
+    // by the `linalg::gemm` / `linalg::wy` unit tests, which assert
+    // `tasks_executed > 0` at shapes above the fan-out threshold; this
+    // test pins the end-to-end plumbing and the recovery invariant.)
+    let seq = blocked_engine();
+    let par = Engine::builder()
+        .host_only()
+        .kernel_profile(KernelProfile::Blocked)
+        .threads(4)
+        .build()
+        .unwrap();
+    assert_eq!(par.default_parallelism().gemm_threads(), 4);
+
+    let (procs, m, n, panel) = (4usize, 40usize, 20usize, 4usize);
+    let clean_seq = seq.run_caqr(CaqrSpec::new(Algo::Redundant, procs, m, n, panel)).unwrap();
+    let clean_par = par.run_caqr(CaqrSpec::new(Algo::Redundant, procs, m, n, panel)).unwrap();
+    assert!(clean_seq.success() && clean_par.success());
+    let clean_bits = bits(clean_seq.final_r.as_ref().unwrap());
+    assert_eq!(
+        bits(clean_par.final_r.as_ref().unwrap()),
+        clean_bits,
+        "threads=4 must be bit-identical to the sequential engine"
+    );
+
+    for (rank, panel_k, stage) in all_single_strikes(procs, clean_par.panels) {
+        let spec = CaqrSpec::new(Algo::Redundant, procs, m, n, panel)
+            .with_schedule(CaqrKillSchedule::at(&[(rank, panel_k, stage)]));
+        let res = par.run_caqr(spec).unwrap();
+        assert!(res.success(), "kill {rank}@{panel_k} ({}) within the bound", stage.name());
+        assert_eq!(
+            bits(res.final_r.as_ref().unwrap()),
+            clean_bits,
+            "threads=4 + kill {rank}@{panel_k} ({}) changed the bits",
+            stage.name()
+        );
+    }
+}
+
+#[test]
 fn blocked_pair_wipe_still_fails_at_the_bound() {
     // The fast path must not weaken the tightness statement.
     let engine = blocked_engine();
