@@ -1,0 +1,215 @@
+//! BENCH TAB-V1: what the multi-tenant service layer costs.
+//!
+//!   cargo bench --bench service_throughput
+//!
+//! Three legs.  First — the gated metric — the *efficiency* of the
+//! service path: the same job set pushed through a direct
+//! `engine.campaign` at concurrency W versus through the bounded-queue
+//! DRR dispatcher at `max_inflight = W`.  Both run on one host in one
+//! process, so the ratio is machine-relative; a collapsing ratio means
+//! admission/dispatch overhead has crept into the per-job path.
+//! Second, an offered-load sweep (tenant count × think time) against a
+//! deliberately shallow queue: achieved jobs/s, queue-wait p50/p99 and
+//! shed counts as load crosses saturation — load-shedding is the
+//! measurement, not a failure.  Third, the same drive with the
+//! driver's survivable kill schedule armed on every 4th job, to put
+//! the recovery path on the clock.
+//!
+//! Emits `target/reports/BENCH_service.json`; the CI perf gate tracks
+//! `service_vs_direct_efficiency`.
+
+use std::time::{Duration, Instant};
+
+use ft_tsqr::engine::Engine;
+use ft_tsqr::metrics::LatencyHistogram;
+use ft_tsqr::report::{REPORT_DIR, Table};
+use ft_tsqr::service::{Job, ServiceBuilder, TrafficSpec, run_traffic};
+use ft_tsqr::tsqr::RunSpec;
+
+const PROCS: usize = 4;
+const ROWS_PER_PROC: usize = 32;
+const COLS: usize = 8;
+const INFLIGHT: usize = 4;
+
+/// K flooding tenants with mildly staggered DRR weights.
+fn workload(tenants: usize, jobs: u64) -> TrafficSpec {
+    let mut spec = TrafficSpec::new(PROCS, ROWS_PER_PROC, COLS);
+    for i in 0..tenants {
+        spec = spec.tenant(format!("t{i}"), 1 + (i as u64 % 3), jobs);
+    }
+    spec
+}
+
+/// The exact specs the traffic driver would submit, flattened for a
+/// direct campaign — byte-identical work, no service in the way.
+fn direct_specs(spec: &TrafficSpec) -> Vec<RunSpec> {
+    let mut specs = Vec::new();
+    for (i, t) in spec.tenants.iter().enumerate() {
+        let input = spec.share_input.then(|| spec.shared_input(i));
+        for j in 0..t.jobs {
+            match spec.job_for(i, j, input.as_ref()) {
+                Job::Tsqr(s) => specs.push(s),
+                Job::Caqr(_) => unreachable!("the traffic driver emits TSQR jobs"),
+            }
+        }
+    }
+    specs
+}
+
+fn main() {
+    let quick = ft_tsqr::report::bench::quick();
+    let jobs: u64 = if quick { 10 } else { 60 };
+    let sweep_jobs: u64 = if quick { 6 } else { 30 };
+
+    // ------------------------- service vs direct, identical job set
+    let spec = workload(4, jobs);
+    let specs = direct_specs(&spec);
+    let total = specs.len() as u64;
+
+    let engine = Engine::host();
+    engine.run(specs[0].clone()).expect("warm-up run");
+    let t0 = Instant::now();
+    let campaign = engine.campaign(specs.clone()).concurrency(INFLIGHT).run().expect("campaign");
+    let direct_wall = t0.elapsed();
+    assert_eq!(campaign.successes(), total, "fault-free workload must fully succeed");
+    drop(engine);
+
+    let service_engine = Engine::host();
+    service_engine.run(specs[0].clone()).expect("warm-up run");
+    let service = ServiceBuilder::new()
+        .queue_depth(4096)
+        .tenant_depth(4096)
+        .max_inflight(INFLIGHT)
+        .build(service_engine);
+    let report = run_traffic(&service, &spec).expect("service drive");
+    assert_eq!(report.service.shed, 0, "deep queue: nothing sheds");
+    assert_eq!(report.service.completed, total);
+    drop(service);
+
+    let direct_rps = total as f64 / direct_wall.as_secs_f64();
+    let service_rps = report.throughput();
+    let efficiency = service_rps / direct_rps;
+
+    let mut table = Table::new(
+        format!("TAB-V1: service throughput — {PROCS}-proc TSQR jobs, window {INFLIGHT}"),
+        &["drive", "tenants", "offered", "shed", "jobs/s", "p50 wait", "p99 wait"],
+    );
+    table.row(vec![
+        format!("direct campaign ({total} jobs)"),
+        "-".into(),
+        total.to_string(),
+        "-".into(),
+        format!("{direct_rps:.1}"),
+        "-".into(),
+        "-".into(),
+    ]);
+    let mut wait = LatencyHistogram::new();
+    for t in &report.tenants {
+        wait.merge(&t.snapshot.queue_wait);
+    }
+    table.row(vec![
+        format!("service ({total} jobs)"),
+        "4".into(),
+        report.service.submitted.to_string(),
+        report.service.shed.to_string(),
+        format!("{service_rps:.1}"),
+        ft_tsqr::report::bench::fmt_duration(wait.p50()),
+        ft_tsqr::report::bench::fmt_duration(wait.p99()),
+    ]);
+
+    // ------------------------------------------- offered-load sweep
+    // Shallow queue (16 global / 8 per tenant): flooding clients cross
+    // saturation and shed; think time re-opens headroom.
+    for (tenants, think_ms) in [(2usize, 0u64), (4, 0), (8, 0), (4, 2)] {
+        let mut sp = workload(tenants, sweep_jobs);
+        for t in &mut sp.tenants {
+            t.think = Duration::from_millis(think_ms);
+        }
+        let svc = ServiceBuilder::new()
+            .queue_depth(16)
+            .tenant_depth(8)
+            .max_inflight(INFLIGHT)
+            .build(Engine::host());
+        let rep = run_traffic(&svc, &sp).expect("sweep drive");
+        let mut w = LatencyHistogram::new();
+        for t in &rep.tenants {
+            w.merge(&t.snapshot.queue_wait);
+        }
+        table.row(vec![
+            format!("sweep: think {think_ms}ms, queue 16/8"),
+            tenants.to_string(),
+            rep.service.submitted.to_string(),
+            rep.service.shed.to_string(),
+            format!("{:.1}", rep.throughput()),
+            ft_tsqr::report::bench::fmt_duration(w.p50()),
+            ft_tsqr::report::bench::fmt_duration(w.p99()),
+        ]);
+    }
+
+    // ------------------------------------- injected-failure leg
+    // Every 4th job carries a survivable kill: Self-Healing absorbs
+    // all of them, so survival stays 1.0 while respawn/recovery work
+    // lands on the measured clock.
+    let faulty_spec = workload(4, sweep_jobs).with_failures(true);
+    let svc = ServiceBuilder::new()
+        .queue_depth(4096)
+        .tenant_depth(4096)
+        .max_inflight(INFLIGHT)
+        .build(Engine::host());
+    let faulty = run_traffic(&svc, &faulty_spec).expect("faulty drive");
+    let (mut completed, mut successes) = (0u64, 0u64);
+    for t in &faulty.tenants {
+        completed += t.snapshot.completed;
+        successes += t.snapshot.successes;
+    }
+    assert_eq!(successes, completed, "every injected kill must be survived");
+    let faulty_rps = faulty.throughput();
+    let mut w = LatencyHistogram::new();
+    for t in &faulty.tenants {
+        w.merge(&t.snapshot.queue_wait);
+    }
+    table.row(vec![
+        format!("with failures ({completed} jobs, survival 1.0)"),
+        "4".into(),
+        faulty.service.submitted.to_string(),
+        faulty.service.shed.to_string(),
+        format!("{faulty_rps:.1}"),
+        ft_tsqr::report::bench::fmt_duration(w.p50()),
+        ft_tsqr::report::bench::fmt_duration(w.p99()),
+    ]);
+
+    print!("{}", table.render());
+    table.save_csv(REPORT_DIR).expect("csv");
+    println!(
+        "\ndirect {direct_rps:.1} jobs/s vs service {service_rps:.1} jobs/s — \
+         efficiency {efficiency:.2}; with failures {faulty_rps:.1} jobs/s"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"service_throughput\",\n  \"quick\": {quick},\n  {host},\n  \
+         \"provisional\": true,\n  \
+         \"tenants\": 4,\n  \"jobs_per_tenant\": {jobs},\n  \
+         \"direct_runs_per_sec\": {direct_rps:.2},\n  \
+         \"service_runs_per_sec\": {service_rps:.2},\n  \
+         \"faulty_runs_per_sec\": {faulty_rps:.2},\n  \
+         \"service_vs_direct_efficiency\": {efficiency:.3}\n}}\n",
+        host = ft_tsqr::report::bench::host_json_fields(),
+    );
+    std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
+    let json_path = format!("{REPORT_DIR}/BENCH_service.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_service.json");
+    println!("wrote {json_path}");
+    if std::env::var("BENCH_WRITE_BASELINE").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all("benches/baselines").expect("mkdir baselines");
+        std::fs::write("benches/baselines/BENCH_service.json", &json).expect("write baseline");
+        println!("refreshed baseline benches/baselines/BENCH_service.json");
+    }
+    // CI perf gate (BENCH_REGRESS=1): the efficiency ratio only — raw
+    // jobs/sec tracks host speed, but service-vs-direct efficiency on
+    // one host is a property of the dispatcher.
+    ft_tsqr::report::bench::enforce_regress_gate(
+        "service_throughput",
+        "benches/baselines/BENCH_service.json",
+        &[("service_vs_direct_efficiency", efficiency)],
+    );
+}

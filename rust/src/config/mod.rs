@@ -130,6 +130,49 @@ impl FailureConfig {
     }
 }
 
+/// Multi-tenant service-layer knobs (`[service]` section) — the
+/// bounded-queue and dispatch-window settings `repro serve` builds its
+/// [`crate::service::ServiceBuilder`] from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Global bound on waiting jobs (`service.queue-depth`).
+    pub queue_depth: usize,
+    /// Per-tenant bound on waiting jobs (`service.tenant-depth`).
+    pub tenant_depth: usize,
+    /// Campaigns kept in flight concurrently (`service.inflight`).
+    pub inflight: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { queue_depth: 256, tenant_depth: 256, inflight: 4 }
+    }
+}
+
+impl ServiceConfig {
+    /// Materialize a builder with these bounds.
+    pub fn builder(&self) -> crate::service::ServiceBuilder {
+        crate::service::ServiceBuilder::new()
+            .queue_depth(self.queue_depth)
+            .tenant_depth(self.tenant_depth)
+            .max_inflight(self.inflight)
+    }
+
+    fn from_doc(doc: &Doc) -> ServiceConfig {
+        let mut sc = ServiceConfig::default();
+        if let Some(v) = doc.usize_of("service.queue-depth") {
+            sc.queue_depth = v;
+        }
+        if let Some(v) = doc.usize_of("service.tenant-depth") {
+            sc.tenant_depth = v;
+        }
+        if let Some(v) = doc.usize_of("service.inflight") {
+            sc.inflight = v;
+        }
+        sc
+    }
+}
+
 /// The full run configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -167,6 +210,8 @@ pub struct Config {
     /// can still grow past this count if a run needs more concurrent
     /// blocking tasks (see `engine::WorkerPool`).
     pub threads: usize,
+    /// Multi-tenant service bounds (`repro serve`).
+    pub service: ServiceConfig,
 }
 
 impl Default for Config {
@@ -185,6 +230,7 @@ impl Default for Config {
             failures: FailureConfig::None,
             profile: None,
             threads: 0,
+            service: ServiceConfig::default(),
         }
     }
 }
@@ -212,6 +258,9 @@ const KNOWN_KEYS: &[&str] = &[
     "failures.f",
     "failures.seed",
     "failures.protect-root",
+    "service.queue-depth",
+    "service.tenant-depth",
+    "service.inflight",
 ];
 
 impl Config {
@@ -261,6 +310,7 @@ impl Config {
             cfg.threads = v;
         }
         cfg.failures = FailureConfig::from_doc(&doc)?;
+        cfg.service = ServiceConfig::from_doc(&doc);
         Ok(cfg)
     }
 
@@ -375,6 +425,26 @@ mod tests {
     fn rejects_unknown_keys() {
         assert!(Config::from_text("bogus = 1").is_err());
         assert!(Config::from_text("[failures]\nmystery = 2").is_err());
+        assert!(Config::from_text("[service]\nqueue = 9").is_err(), "typo'd service key");
+    }
+
+    #[test]
+    fn service_section_parses_with_defaults() {
+        let cfg = Config::from_text("").unwrap();
+        assert_eq!(cfg.service, ServiceConfig::default());
+        let cfg = Config::from_text(
+            "[service]\nqueue-depth = 32\ntenant-depth = 8\ninflight = 2",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.service,
+            ServiceConfig { queue_depth: 32, tenant_depth: 8, inflight: 2 }
+        );
+        // The builder carries the bounds into a live service.
+        let svc = cfg.service.builder().build(Engine::host());
+        assert_eq!(svc.queue_depth(), 32);
+        assert_eq!(svc.tenant_depth(), 8);
+        assert_eq!(svc.max_inflight(), 2);
     }
 
     #[test]

@@ -46,7 +46,11 @@ pub(crate) fn execute(spec: &RunSpec, pool: &WorkerPool) -> Result<RunResult> {
     let results: ResultMap = Arc::new(Mutex::new(HashMap::new()));
     let tasks = TaskGroup::new(pool.clone());
 
-    let a = spec.input_matrix();
+    // Shared zero-copy override when the spec carries one (service
+    // tenants submitting N jobs over one matrix), else generated from
+    // the seed.  `row_block` copies the rank's panel either way; the
+    // full matrix itself is never duplicated.
+    let a = spec.resolve_input();
     let started = Instant::now();
 
     for rank in 0..spec.procs {

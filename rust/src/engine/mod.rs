@@ -303,6 +303,13 @@ impl Engine {
         self.pool.workers()
     }
 
+    /// The session worker pool — the service layer dispatches jobs
+    /// onto it directly so service jobs and direct `submit()` calls
+    /// share one elastic set of workers.
+    pub(crate) fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
     /// Point-in-time job/worker counters.
     pub fn stats(&self) -> EngineStats {
         EngineStats {

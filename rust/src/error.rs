@@ -12,6 +12,51 @@ use crate::ulfm::Rank;
 /// Crate-wide result alias over [`Error`].
 pub type Result<T> = std::result::Result<T, Error>;
 
+/// Why the multi-tenant service front door ([`crate::service`])
+/// refused a job *at submission time* — admission control and load
+/// shedding.  Carried by [`Error::Submission`], so a caller can always
+/// tell "the service shed my job before running it" apart from "my job
+/// ran and failed": shed jobs touched no engine state and are safe to
+/// retry or drop; execution failures are a property of the run itself.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Rejection {
+    /// The service's global bounded queue is at capacity — the system
+    /// as a whole is overloaded and this job was shed.
+    Overloaded {
+        /// Jobs waiting in the global queue when this one was refused.
+        queued: usize,
+        /// The configured global queue depth.
+        depth: usize,
+    },
+    /// This tenant's own admission quota is exhausted (other tenants
+    /// may still be admitted — per-tenant bounds are what keep one
+    /// flooding client from consuming the whole queue).
+    TenantOverloaded {
+        /// The tenant whose quota is exhausted.
+        tenant: String,
+        /// Jobs this tenant already has waiting.
+        queued: usize,
+        /// The configured per-tenant queue depth.
+        depth: usize,
+    },
+    /// The service is shutting down; no new work is admitted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for Rejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejection::Overloaded { queued, depth } => {
+                write!(f, "overloaded: global queue full ({queued}/{depth} jobs queued)")
+            }
+            Rejection::TenantOverloaded { tenant, queued, depth } => {
+                write!(f, "overloaded: tenant '{tenant}' queue full ({queued}/{depth} queued)")
+            }
+            Rejection::ShuttingDown => write!(f, "service is shutting down"),
+        }
+    }
+}
+
 /// Everything that can go wrong in the simulator, the runtime, or the
 /// configuration surface.
 #[derive(Debug)]
@@ -39,6 +84,12 @@ pub enum Error {
     /// Configuration / CLI validation.
     Config(String),
 
+    /// A job was refused at submission time by the multi-tenant
+    /// service's admission control ([`crate::service`]) — the job was
+    /// *shed*, never executed.  Distinct from every execution-time
+    /// error so callers can tell "shed" from "crashed".
+    Submission(Rejection),
+
     /// Anything else.
     Other(String),
 }
@@ -53,6 +104,7 @@ impl std::fmt::Display for Error {
             Error::Artifacts(s) => write!(f, "artifacts: {s}"),
             Error::Xla(s) => write!(f, "xla runtime: {s}"),
             Error::Config(s) => write!(f, "config: {s}"),
+            Error::Submission(r) => write!(f, "submission rejected: {r}"),
             Error::Other(s) => write!(f, "{s}"),
         }
     }
@@ -65,6 +117,19 @@ impl Error {
     /// condition Algorithms 2/3/6 test for after a sendrecv.
     pub fn is_rank_failure(&self) -> bool {
         matches!(self, Error::RankFailed(_) | Error::Killed(_))
+    }
+
+    /// True if the service shed this job under load (global or
+    /// per-tenant queue full) — safe to retry later; the job never
+    /// touched the engine.  `false` for every execution-time error
+    /// *and* for [`Rejection::ShuttingDown`] (retrying against a
+    /// stopping service is pointless).
+    pub fn is_overload(&self) -> bool {
+        matches!(
+            self,
+            Error::Submission(Rejection::Overloaded { .. })
+                | Error::Submission(Rejection::TenantOverloaded { .. })
+        )
     }
 }
 
@@ -91,5 +156,46 @@ mod tests {
     fn display_messages() {
         assert_eq!(Error::RankFailed(2).to_string(), "peer rank 2 has failed");
         assert!(Error::NoReplica(5).to_string().contains("replica"));
+    }
+
+    /// The satellite fix this variant exists for: a shed job must be
+    /// distinguishable from a crashed one by type alone, not by
+    /// parsing strings.
+    #[test]
+    fn submission_rejection_is_distinct_from_execution_failure() {
+        let shed = Error::Submission(Rejection::Overloaded { queued: 8, depth: 8 });
+        let quota = Error::Submission(Rejection::TenantOverloaded {
+            tenant: "mallory".into(),
+            queued: 4,
+            depth: 4,
+        });
+        let stopping = Error::Submission(Rejection::ShuttingDown);
+        let crashed = Error::Aborted("too many failures".into());
+
+        // Overload classification: global + per-tenant sheds are
+        // retryable overload; shutdown and execution errors are not.
+        assert!(shed.is_overload());
+        assert!(quota.is_overload());
+        assert!(!stopping.is_overload());
+        assert!(!crashed.is_overload());
+        assert!(!Error::RankFailed(1).is_overload());
+
+        // Sheds are not rank failures (they never ran).
+        assert!(!shed.is_rank_failure());
+
+        // Display carries the admission numbers for operator logs.
+        assert_eq!(
+            shed.to_string(),
+            "submission rejected: overloaded: global queue full (8/8 jobs queued)"
+        );
+        assert!(quota.to_string().contains("tenant 'mallory'"));
+        assert!(stopping.to_string().contains("shutting down"));
+
+        // Rejection itself is comparable, so tests can pin exact kinds.
+        assert_eq!(
+            Rejection::Overloaded { queued: 8, depth: 8 },
+            Rejection::Overloaded { queued: 8, depth: 8 }
+        );
+        assert_ne!(Rejection::ShuttingDown, Rejection::Overloaded { queued: 0, depth: 1 });
     }
 }

@@ -112,6 +112,27 @@
 //! assert_eq!(res.metrics.pair_wipes_survived, 1);
 //! ```
 //!
+//! ## Many tenants, one engine: the service layer
+//!
+//! A single engine serves one caller; the [`service`] subsystem turns
+//! it into a multi-tenant front door — bounded admission queues,
+//! deficit-round-robin fair scheduling across tenants (configurable
+//! weights, no starvation), load-shedding with typed
+//! [`Error::Submission`] rejections under overload, zero-copy
+//! submission of shared inputs, and streaming per-tenant metrics
+//! (survival, queue-wait/service-time histograms, shed counts):
+//!
+//! ```
+//! use ft_tsqr::engine::Engine;
+//! use ft_tsqr::service::{Job, ServiceBuilder};
+//! use ft_tsqr::tsqr::{Algo, RunSpec};
+//!
+//! let service = ServiceBuilder::new().queue_depth(64).build(Engine::host());
+//! let alice = service.register_tenant("alice", 3).unwrap();
+//! let ticket = service.submit(alice, Job::Tsqr(RunSpec::new(Algo::Redundant, 4, 16, 4)));
+//! assert!(ticket.unwrap().wait().unwrap().success());
+//! ```
+//!
 //! ## Mega-scale campaigns: the discrete-event simulator
 //!
 //! The thread-based executor tops out at tens of ranks; the [`sim`]
@@ -152,6 +173,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod tsqr;
 pub mod ulfm;

@@ -16,6 +16,10 @@
 //!               survival at 10⁵–10⁶ simulated ranks with churn,
 //!               bursts, and network models (`--curve` sweeps the
 //!               failure rate)
+//! * `serve`     synthetic many-client drive of the multi-tenant
+//!               engine service: K weighted tenants flood one engine
+//!               through bounded DRR queues; reports per-tenant
+//!               shed/completion counts and latency quantiles
 //! * `validate`  check the paper's 2^s − 1 bounds against sampled
 //!               failure patterns
 //! * `info`      artifact manifest / backend diagnostics
@@ -31,6 +35,7 @@ use ft_tsqr::config::{Config, FailureConfig};
 use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage, Scenario};
 use ft_tsqr::report::{Table, fmt_f, fmt_prob};
 use ft_tsqr::runtime::{KernelProfile, Manifest};
+use ft_tsqr::service::{TrafficSpec, run_traffic};
 use ft_tsqr::sim::SimScenario;
 use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan};
 use ft_tsqr::util::derive_seed;
@@ -54,6 +59,10 @@ USAGE:
                  [--sweep [--f F] [--trials T]]
   repro simulate --scenario FILE [--seed S] [--samples N] [--procs P]
                  [--threads N] [--curve [--rates R,R,...]]
+  repro serve    [--tenants K] [--weights w1,w2,...] [--jobs N] [--procs P]
+                 [--rows-per-proc R] [--cols C] [--queue-depth Q]
+                 [--tenant-depth D] [--inflight W] [--seed S] [--threads T]
+                 [--think-ms MS] [--failures] [--no-share]
   repro validate [--procs P] [--trials T]
   repro info     [--artifact-dir DIR]
 
@@ -70,6 +79,12 @@ USAGE:
   threads-per-rank), so scenario files can ask for 10^5-10^6 ranks; see
   rust/scenarios/ for committed examples and --curve for survival over
   Poisson failure rates
+  serve floods the multi-tenant service with K synthetic clients:
+  --weights sets DRR shares (default all 1), --think-ms throttles the
+  offered load, --failures arms a survivable kill on every 4th job,
+  --no-share disables zero-copy per-tenant shared inputs.  Shed
+  submissions are the measurement, not an error; only execution
+  failures exit nonzero
 ";
 
 /// Tiny `--key value` / `--flag` parser.
@@ -87,7 +102,10 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 // boolean flags take no value; everything else takes one
-                if matches!(name, "trace" | "help" | "full" | "sweep" | "curve") {
+                if matches!(
+                    name,
+                    "trace" | "help" | "full" | "sweep" | "curve" | "failures" | "no-share"
+                ) {
                     flags.insert(name.to_string(), "true".to_string());
                 } else {
                     i += 1;
@@ -626,6 +644,124 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let weights: Vec<u64> = match args.get("weights") {
+        Some(list) => list
+            .split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse::<u64>()
+                    .map_err(|e| Error::Config(format!("bad weight '{t}': {e}")))
+            })
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
+    let tenants = match (args.parse_flag::<usize>("tenants")?, weights.len()) {
+        (Some(k), 0) => k,
+        (Some(k), w) if k != w => {
+            return Err(Error::Config(format!("--tenants {k} but --weights lists {w} weights")));
+        }
+        (_, w) if w > 0 => w,
+        (None, _) => 4,
+    };
+    if tenants == 0 {
+        return Err(Error::Config("serve needs at least one tenant".into()));
+    }
+    let jobs = args.parse_flag::<u64>("jobs")?.unwrap_or(8);
+    let think = args.parse_flag::<u64>("think-ms")?.unwrap_or(0);
+
+    let mut builder = cfg.service.builder();
+    if let Some(q) = args.parse_flag::<usize>("queue-depth")? {
+        builder = builder.queue_depth(q);
+    }
+    if let Some(d) = args.parse_flag::<usize>("tenant-depth")? {
+        builder = builder.tenant_depth(d);
+    }
+    if let Some(w) = args.parse_flag::<usize>("inflight")? {
+        builder = builder.max_inflight(w);
+    }
+    let service = builder.build(cfg.engine()?);
+
+    let mut spec = TrafficSpec::new(cfg.procs, cfg.rows_per_proc, cfg.cols)
+        .with_seed(cfg.seed)
+        .with_failures(args.get("failures").is_some())
+        .with_share_input(args.get("no-share").is_none());
+    for i in 0..tenants {
+        spec = spec.tenant(format!("tenant{i}"), weights.get(i).copied().unwrap_or(1), jobs);
+        if think > 0 {
+            spec = spec.with_think(std::time::Duration::from_millis(think));
+        }
+    }
+
+    println!(
+        "serve: tenants={tenants} jobs/tenant={jobs} procs={} matrix={}x{} \
+         queue={}/tenant {} inflight={} failures={} share-input={} backend={:?}",
+        cfg.procs,
+        cfg.procs * cfg.rows_per_proc,
+        cfg.cols,
+        service.queue_depth(),
+        service.tenant_depth(),
+        service.max_inflight(),
+        spec.failures,
+        spec.share_input,
+        service.engine().executor().backend(),
+    );
+    let report = run_traffic(&service, &spec)?;
+
+    let mut table = Table::new(
+        format!(
+            "per-tenant service report ({} offered, {} shed)",
+            report.service.submitted, report.service.shed
+        ),
+        &[
+            "tenant",
+            "weight",
+            "offered",
+            "shed",
+            "ok",
+            "failed",
+            "p50 wait",
+            "p99 wait",
+            "p50 service",
+            "p99 service",
+        ],
+    );
+    for t in &report.tenants {
+        let s = &t.snapshot;
+        table.row(vec![
+            s.name.clone(),
+            s.weight.to_string(),
+            t.offered.to_string(),
+            t.shed.to_string(),
+            t.ok.to_string(),
+            t.exec_failed.to_string(),
+            format!("{:?}", s.queue_wait.p50()),
+            format!("{:?}", s.queue_wait.p99()),
+            format!("{:?}", s.service_time.p50()),
+            format!("{:?}", s.service_time.p99()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "totals: completed={} throughput={:.1} jobs/s shed_rate={:.3} peak_queued={} \
+         peak_inflight={} wall={:?}",
+        report.service.completed,
+        report.throughput(),
+        report.shed_rate(),
+        report.service.peak_queued,
+        report.service.peak_inflight,
+        report.wall,
+    );
+    // Sheds under overload are the measurement; only execution
+    // failures are an error.
+    if report.tenants.iter().any(|t| t.exec_failed > 0) {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let procs = args.parse_flag::<usize>("procs")?.unwrap_or(16);
     let trials = args.parse_flag::<u64>("trials")?.unwrap_or(2000);
@@ -711,6 +847,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "caqr" => cmd_caqr(&args),
         "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),
         other => Err(Error::Config(format!("unknown command '{other}'\n\n{USAGE}"))),

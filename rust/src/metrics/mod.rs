@@ -115,6 +115,152 @@ impl VirtualTimeBreakdown {
     }
 }
 
+/// Number of bucket slots in a [`LatencyHistogram`]: 4 exact sub-4ns
+/// buckets plus 4 minor buckets per power of two up to 2⁶³.
+const LATENCY_BUCKETS: usize = 252;
+
+/// Fixed-footprint latency histogram with log₂ major buckets and 4
+/// linear minor buckets each (HDR-style), covering 0 ns to `u64::MAX`
+/// ns with ≤ 25 % relative quantile error and no allocation.
+///
+/// The service layer ([`crate::service`]) keeps two per tenant —
+/// queue-wait and service-time — and merges worker-side recordings
+/// into streaming snapshots.  Merging is a plain bucket-wise sum, so
+/// aggregated histograms are independent of recording order (the
+/// property the service's determinism tests rely on for *counts*;
+/// the recorded durations themselves are wall-clock and excluded from
+/// determinism assertions).
+///
+/// ```
+/// use ft_tsqr::metrics::LatencyHistogram;
+/// use std::time::Duration;
+///
+/// let mut h = LatencyHistogram::new();
+/// for us in [100u64, 200, 300, 400, 50_000] {
+///     h.record(Duration::from_micros(us));
+/// }
+/// assert_eq!(h.count(), 5);
+/// // p50 is the 300µs sample, reported ≤ 25% above its true value;
+/// // p99 is the 50ms outlier.
+/// assert!(h.quantile_ns(0.50) >= 300_000 && h.quantile_ns(0.50) <= 375_000);
+/// assert!(h.quantile_ns(0.99) >= 50_000_000);
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    buckets: [u64; LATENCY_BUCKETS],
+    count: u64,
+    total_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: [0; LATENCY_BUCKETS], count: 0, total_ns: 0, max_ns: 0 }
+    }
+
+    /// Bucket index of a duration: values < 4 ns get exact buckets
+    /// 0..=3; above that, major = floor(log₂ ns) and the next two bits
+    /// pick one of 4 minor buckets → index (major−1)·4 + minor.
+    fn bucket(ns: u64) -> usize {
+        if ns < 4 {
+            return ns as usize;
+        }
+        let major = 63 - ns.leading_zeros() as usize; // ≥ 2
+        let minor = ((ns >> (major - 2)) & 3) as usize;
+        (major - 1) * 4 + minor
+    }
+
+    /// Inclusive upper bound (ns) of the bucket at `idx` — what
+    /// quantile queries report.
+    fn bucket_upper(idx: usize) -> u64 {
+        if idx < 4 {
+            return idx as u64;
+        }
+        let major = idx / 4 + 1;
+        let minor = (idx % 4) as u64;
+        let low = (1u64 << major) + minor * (1u64 << (major - 2));
+        low + (1u64 << (major - 2)) - 1
+    }
+
+    /// Record one duration.
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record one duration given in nanoseconds.
+    pub fn record_ns(&mut self, ns: u64) {
+        self.buckets[Self::bucket(ns)] += 1;
+        self.count += 1;
+        self.total_ns = self.total_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Number of recorded durations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True if nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean of all recorded durations in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.total_ns / self.count }
+    }
+
+    /// Largest recorded duration in nanoseconds.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Value (ns) at quantile `q` ∈ [0, 1]: the upper bound of the
+    /// bucket containing the ⌈q·count⌉-th smallest recording (≤ 25 %
+    /// above the true value).  Returns 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_upper(idx).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Median latency ([`quantile_ns`](Self::quantile_ns) at 0.50).
+    pub fn p50(&self) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.quantile_ns(0.50))
+    }
+
+    /// Tail latency ([`quantile_ns`](Self::quantile_ns) at 0.99).
+    pub fn p99(&self) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.quantile_ns(0.99))
+    }
+
+    /// Accumulate another histogram (bucket-wise sum — order-free).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.total_ns = self.total_ns.saturating_add(other.total_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +275,65 @@ mod tests {
         assert!((t.recovery_fraction() - 0.2).abs() < 1e-12);
         t.merge(&VirtualTimeBreakdown { compute_ns: 40, network_ns: 0, recovery_ns: 60 });
         assert_eq!(t, VirtualTimeBreakdown { compute_ns: 100, network_ns: 20, recovery_ns: 80 });
+    }
+
+    #[test]
+    fn latency_histogram_buckets_are_exact_below_4ns() {
+        let mut h = LatencyHistogram::new();
+        for ns in [0u64, 1, 2, 3] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.quantile_ns(0.0), 0); // rank 1 → first sample
+        assert_eq!(h.quantile_ns(1.0), 3);
+        assert_eq!(h.mean_ns(), 1);
+        assert_eq!(h.max_ns(), 3);
+    }
+
+    #[test]
+    fn latency_histogram_quantile_error_bound() {
+        // Upper-bound reporting: quantile ≥ true value and ≤ 1.25×.
+        let mut h = LatencyHistogram::new();
+        for ns in [5u64, 17, 100, 1_000, 65_537, 1_000_000, u64::MAX / 2] {
+            h.record_ns(ns);
+            let q = h.quantile_ns(1.0);
+            assert!(q >= ns, "q={q} < ns={ns}");
+            assert!(q - ns <= ns / 4 + 1, "q={q} too far above ns={ns}");
+        }
+    }
+
+    #[test]
+    fn latency_histogram_merge_is_order_free() {
+        let samples = [3u64, 40, 500, 6_000, 70_000, 800_000];
+        let mut forward = LatencyHistogram::new();
+        let mut split_a = LatencyHistogram::new();
+        let mut split_b = LatencyHistogram::new();
+        for (i, &ns) in samples.iter().enumerate() {
+            forward.record_ns(ns);
+            if i % 2 == 0 {
+                split_a.record_ns(ns);
+            } else {
+                split_b.record_ns(ns);
+            }
+        }
+        // Merge in the "wrong" order: b ← a-recorded-backwards.
+        let mut merged = split_b.clone();
+        merged.merge(&split_a);
+        assert_eq!(merged, forward);
+        assert_eq!(merged.count(), 6);
+        assert_eq!(merged.mean_ns(), forward.mean_ns());
+    }
+
+    #[test]
+    fn latency_histogram_empty_and_saturating() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_ns(0.99), 0);
+        assert_eq!(h.p50(), std::time::Duration::ZERO);
+        let mut h = LatencyHistogram::new();
+        h.record_ns(u64::MAX);
+        h.record_ns(u64::MAX); // total_ns saturates, no overflow panic
+        assert_eq!(h.quantile_ns(1.0), u64::MAX);
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! The PJRT execution service.
 //!
+//! Not to be confused with the *multi-tenant job service*
+//! ([`crate::service`]): this module is the backend-internal bridge
+//! that marshals kernel calls onto XLA's non-`Send` PJRT handles,
+//! while `crate::service` is the user-facing front door that admits
+//! and schedules whole campaigns across tenants.
+//!
 //! The `xla` crate's PJRT handles hold raw pointers and are not `Send`,
 //! so all XLA state lives on dedicated *service threads*; simulated MPI
 //! processes (OS threads) talk to them through an mpsc request channel.

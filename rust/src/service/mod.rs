@@ -1,0 +1,801 @@
+//! Multi-tenant engine service: the "millions of users" front door.
+//!
+//! One [`Engine`] is a single-process library; this layer turns it into
+//! a *service* that many concurrent clients share safely.  The shape is
+//! active-message-style dispatch (cf. lamellar's `exec_am_pe`):
+//! [`EngineService::submit`] never blocks and never runs the job on the
+//! caller's thread — it either admits the job into a **bounded queue**
+//! and returns a [`Ticket`] immediately, or *sheds* it with a typed
+//! [`Error::Submission`] rejection the caller can distinguish from an
+//! execution failure.  A single dispatcher thread drains the queues in
+//! **deficit-round-robin** order (per-tenant weights, no starvation —
+//! see [`queue`](self) internals) onto the engine's elastic worker
+//! pool, keeping at most `max_inflight` campaigns running at once;
+//! everything beyond that is backpressure, and everything beyond the
+//! queue bounds is load-shedding with per-tenant shed counters.
+//!
+//! Per tenant the service streams a [`TenantSnapshot`]: survival stats,
+//! aggregated run [`MetricsSnapshot`]s, queue-wait and service-time
+//! [`LatencyHistogram`]s, and admission/shed/completion counters.
+//! Aggregation is order-free (sums and bucket-wise histogram merges),
+//! so per-tenant counts are independent of thread interleaving — the
+//! property `tests/integration_service.rs` pins.
+//!
+//! ```
+//! use ft_tsqr::engine::Engine;
+//! use ft_tsqr::service::{Job, ServiceBuilder};
+//! use ft_tsqr::tsqr::{Algo, RunSpec};
+//!
+//! let service = ServiceBuilder::new().queue_depth(64).max_inflight(2).build(Engine::host());
+//! let alice = service.register_tenant("alice", 3).unwrap();
+//! let bob = service.register_tenant("bob", 1).unwrap();
+//!
+//! let t1 = service.submit(alice, Job::Tsqr(RunSpec::new(Algo::Redundant, 4, 16, 4))).unwrap();
+//! let t2 = service.submit(bob, Job::Tsqr(RunSpec::new(Algo::Baseline, 2, 8, 4))).unwrap();
+//! assert!(t1.wait().unwrap().success());
+//! assert!(t2.wait().unwrap().success());
+//!
+//! let snap = service.tenant_snapshot(alice).unwrap();
+//! assert_eq!((snap.completed, snap.shed), (1, 0));
+//! assert_eq!(snap.survival().probability(), 1.0);
+//! ```
+
+mod driver;
+mod queue;
+
+pub use driver::{TenantLoad, TenantTrafficReport, TrafficReport, TrafficSpec, run_traffic};
+
+use std::panic::{AssertUnwindSafe, catch_unwind};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use crate::analysis::SurvivalEstimate;
+use crate::caqr::{CaqrResult, CaqrSpec};
+use crate::engine::Engine;
+use crate::error::{Error, Rejection, Result};
+use crate::metrics::LatencyHistogram;
+use crate::tsqr::{RunResult, RunSpec};
+use crate::ulfm::world::MetricsSnapshot;
+
+use queue::{DrrQueues, Overflow};
+
+/// Opaque per-service tenant handle returned by
+/// [`EngineService::register_tenant`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TenantId(usize);
+
+impl TenantId {
+    /// Registration index of the tenant (stable for the service's
+    /// lifetime; also its position in [`EngineService::tenant_snapshots`]).
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// One unit of tenant work: a full factorization campaign run.
+#[derive(Clone)]
+pub enum Job {
+    /// A tall-skinny TSQR run (Algorithms 1–6 of the paper).
+    Tsqr(RunSpec),
+    /// A general-matrix CAQR run.
+    Caqr(CaqrSpec),
+}
+
+impl Job {
+    /// Validate the underlying spec — submission surfaces shape or
+    /// world-size errors immediately as [`Error::Config`] (they are
+    /// *not* sheds: the job was never admissible).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            Job::Tsqr(s) => s.validate(),
+            Job::Caqr(s) => s.validate(),
+        }
+    }
+}
+
+/// What a completed [`Job`] produced.
+#[derive(Debug)]
+pub enum JobOutcome {
+    /// Result of a [`Job::Tsqr`] run.
+    Tsqr(RunResult),
+    /// Result of a [`Job::Caqr`] run.
+    Caqr(CaqrResult),
+}
+
+impl JobOutcome {
+    /// Success under the algorithm's own semantics (at least one
+    /// survivor holding R / factorization completed).
+    pub fn success(&self) -> bool {
+        match self {
+            JobOutcome::Tsqr(r) => r.success(),
+            JobOutcome::Caqr(r) => r.success(),
+        }
+    }
+
+    /// The run's communication/recovery counters.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        match self {
+            JobOutcome::Tsqr(r) => r.metrics,
+            JobOutcome::Caqr(r) => r.metrics,
+        }
+    }
+
+    /// The TSQR result, if this was a TSQR job.
+    pub fn as_tsqr(&self) -> Option<&RunResult> {
+        match self {
+            JobOutcome::Tsqr(r) => Some(r),
+            JobOutcome::Caqr(_) => None,
+        }
+    }
+
+    /// The CAQR result, if this was a CAQR job.
+    pub fn as_caqr(&self) -> Option<&CaqrResult> {
+        match self {
+            JobOutcome::Caqr(r) => Some(r),
+            JobOutcome::Tsqr(_) => None,
+        }
+    }
+}
+
+/// Claim check for an admitted job: delivery handle for its result.
+/// Dropping the ticket abandons the result but never the job — once
+/// admitted, a job always runs (accepted work is a promise; shedding
+/// happens only at the submission boundary).
+pub struct Ticket {
+    id: u64,
+    tenant: TenantId,
+    rx: mpsc::Receiver<Result<JobOutcome>>,
+}
+
+impl Ticket {
+    /// Service-wide monotone job id (admission order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The tenant the job was submitted under.
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
+    }
+
+    /// Block until the job finishes and take its outcome.
+    pub fn wait(self) -> Result<JobOutcome> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(Error::Other("service job result channel closed".into())))
+    }
+
+    /// Non-blocking poll: `Some` once the job has finished.
+    pub fn poll(&self) -> Option<Result<JobOutcome>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Streaming per-tenant accounting — everything the service knows
+/// about one tenant at a point in time.  Counters and the aggregated
+/// [`MetricsSnapshot`] are order-free sums (deterministic under
+/// interleaving); the two histograms record wall-clock durations and
+/// are excluded from determinism guarantees.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    /// Tenant name as registered.
+    pub name: String,
+    /// DRR scheduling weight.
+    pub weight: u64,
+    /// Jobs offered via `submit` (accepted + shed).
+    pub submitted: u64,
+    /// Jobs admitted into the queue.
+    pub accepted: u64,
+    /// Jobs shed by admission control (global or per-tenant bound).
+    pub shed: u64,
+    /// Jobs that ran to completion (successfully or not — see
+    /// `successes`).
+    pub completed: u64,
+    /// Jobs that returned an execution error.
+    pub failed: u64,
+    /// Completed jobs whose outcome reported success (survived their
+    /// fault schedule).
+    pub successes: u64,
+    /// Jobs currently waiting in this tenant's queue.
+    pub queued: usize,
+    /// Aggregated run counters over every completed job.
+    pub metrics: MetricsSnapshot,
+    /// Admission-to-dispatch wait-time distribution.
+    pub queue_wait: LatencyHistogram,
+    /// Dispatch-to-completion service-time distribution.
+    pub service_time: LatencyHistogram,
+}
+
+impl TenantSnapshot {
+    /// Survival statistics over completed jobs (the per-tenant
+    /// analogue of a campaign's survival estimate).
+    pub fn survival(&self) -> SurvivalEstimate {
+        SurvivalEstimate { trials: self.completed, successes: self.successes }
+    }
+}
+
+/// Point-in-time service-wide totals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceSnapshot {
+    /// Registered tenants.
+    pub tenants: usize,
+    /// Jobs offered across all tenants (accepted + shed).
+    pub submitted: u64,
+    /// Jobs admitted into the queue.
+    pub accepted: u64,
+    /// Jobs shed by admission control.
+    pub shed: u64,
+    /// Jobs handed to the engine so far.
+    pub dispatched: u64,
+    /// Jobs completed (with or without execution success).
+    pub completed: u64,
+    /// Jobs that returned an execution error.
+    pub failed: u64,
+    /// Jobs currently waiting across all tenant queues.
+    pub queued: usize,
+    /// High-water mark of `queued`.
+    pub peak_queued: usize,
+    /// Jobs currently executing on the engine.
+    pub inflight: usize,
+    /// High-water mark of `inflight`.
+    pub peak_inflight: usize,
+}
+
+struct QueuedJob {
+    job: Job,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<JobOutcome>>,
+}
+
+struct TenantState {
+    name: String,
+    weight: u64,
+    submitted: u64,
+    accepted: u64,
+    shed: u64,
+    completed: u64,
+    failed: u64,
+    successes: u64,
+    metrics: MetricsSnapshot,
+    queue_wait: LatencyHistogram,
+    service_time: LatencyHistogram,
+}
+
+impl TenantState {
+    fn new(name: String, weight: u64) -> Self {
+        TenantState {
+            name,
+            weight,
+            submitted: 0,
+            accepted: 0,
+            shed: 0,
+            completed: 0,
+            failed: 0,
+            successes: 0,
+            metrics: MetricsSnapshot::default(),
+            queue_wait: LatencyHistogram::new(),
+            service_time: LatencyHistogram::new(),
+        }
+    }
+}
+
+struct ServiceState {
+    queues: DrrQueues<QueuedJob>,
+    tenants: Vec<TenantState>,
+    inflight: usize,
+    peak_inflight: usize,
+    paused: bool,
+    shutdown: bool,
+    next_job_id: u64,
+    submitted: u64,
+    accepted: u64,
+    shed: u64,
+    dispatched: u64,
+    completed: u64,
+    failed: u64,
+    dispatch_log: Option<Vec<TenantId>>,
+}
+
+struct Shared {
+    state: Mutex<ServiceState>,
+    /// Wakes the dispatcher: new work, freed inflight slot, resume,
+    /// shutdown.
+    work_cv: Condvar,
+    /// Wakes `wait_idle` when a job completes.
+    idle_cv: Condvar,
+    max_inflight: usize,
+}
+
+/// Configuration for an [`EngineService`] (bounded-queue depths,
+/// dispatch window, test hooks).
+///
+/// Defaults: global queue depth 256, per-tenant depth 256, 4 campaigns
+/// in flight, running (not paused), dispatch-order recording off.
+#[derive(Debug, Clone)]
+pub struct ServiceBuilder {
+    queue_depth: usize,
+    tenant_depth: usize,
+    max_inflight: usize,
+    start_paused: bool,
+    record_dispatch: bool,
+}
+
+impl Default for ServiceBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServiceBuilder {
+    /// Builder with the default bounds.
+    pub fn new() -> Self {
+        ServiceBuilder {
+            queue_depth: 256,
+            tenant_depth: 256,
+            max_inflight: 4,
+            start_paused: false,
+            record_dispatch: false,
+        }
+    }
+
+    /// Global bound on *waiting* jobs (≥ 1).  Submissions beyond it are
+    /// shed with [`Rejection::Overloaded`].  Jobs already dispatched do
+    /// not count — up to [`max_inflight`](Self::max_inflight) more are
+    /// executing.
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Per-tenant bound on waiting jobs (≥ 1); beyond it a tenant's
+    /// submissions are shed with [`Rejection::TenantOverloaded`] while
+    /// other tenants are still admitted.
+    pub fn tenant_depth(mut self, depth: usize) -> Self {
+        self.tenant_depth = depth.max(1);
+        self
+    }
+
+    /// Campaigns the dispatcher keeps running concurrently (≥ 1) —
+    /// the backpressure window between the queue and the engine.
+    pub fn max_inflight(mut self, n: usize) -> Self {
+        self.max_inflight = n.max(1);
+        self
+    }
+
+    /// Start with the dispatcher paused: jobs are admitted (and shed)
+    /// but none dispatched until [`EngineService::resume`] — the hook
+    /// the deterministic overload/fairness tests use.
+    pub fn start_paused(mut self, paused: bool) -> Self {
+        self.start_paused = paused;
+        self
+    }
+
+    /// Record the tenant order of every dispatch for
+    /// [`EngineService::dispatch_log`] (fairness tests; off by default).
+    pub fn record_dispatch(mut self, on: bool) -> Self {
+        self.record_dispatch = on;
+        self
+    }
+
+    /// Start the service over an engine: spawns the dispatcher thread
+    /// and takes ownership of the engine (all access now flows through
+    /// the service; [`EngineService::engine`] lends it back out).
+    pub fn build(self, engine: Engine) -> EngineService {
+        let engine = Arc::new(engine);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(ServiceState {
+                queues: DrrQueues::new(self.queue_depth, self.tenant_depth),
+                tenants: Vec::new(),
+                inflight: 0,
+                peak_inflight: 0,
+                paused: self.start_paused,
+                shutdown: false,
+                next_job_id: 0,
+                submitted: 0,
+                accepted: 0,
+                shed: 0,
+                dispatched: 0,
+                completed: 0,
+                failed: 0,
+                dispatch_log: self.record_dispatch.then(Vec::new),
+            }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+            max_inflight: self.max_inflight,
+        });
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            let engine = Arc::clone(&engine);
+            thread::Builder::new()
+                .name("svc-dispatch".into())
+                .spawn(move || dispatch_loop(shared, engine))
+                .expect("spawn service dispatcher")
+        };
+        EngineService { shared, engine, dispatcher: Mutex::new(Some(dispatcher)) }
+    }
+}
+
+/// The running service: bounded admission + DRR dispatch over one
+/// shared [`Engine`].  See the [module docs](self) for the full
+/// contract; construct via [`ServiceBuilder`].
+pub struct EngineService {
+    shared: Arc<Shared>,
+    engine: Arc<Engine>,
+    dispatcher: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl EngineService {
+    /// Service with default bounds over an engine
+    /// (`ServiceBuilder::new().build(engine)`).
+    pub fn over(engine: Engine) -> Self {
+        ServiceBuilder::new().build(engine)
+    }
+
+    /// Register a tenant with a DRR weight (≥ 1): its long-run service
+    /// share under saturation is `weight / Σ weights`.  Names must be
+    /// unique per service.
+    pub fn register_tenant(&self, name: impl Into<String>, weight: u64) -> Result<TenantId> {
+        let name = name.into();
+        if weight == 0 {
+            return Err(Error::Config(format!("tenant '{name}': weight must be >= 1")));
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            return Err(Error::Submission(Rejection::ShuttingDown));
+        }
+        if st.tenants.iter().any(|t| t.name == name) {
+            return Err(Error::Config(format!("tenant '{name}' already registered")));
+        }
+        let idx = st.queues.add_tenant(weight);
+        st.tenants.push(TenantState::new(name, weight));
+        debug_assert_eq!(idx + 1, st.tenants.len());
+        Ok(TenantId(idx))
+    }
+
+    /// Submit a job under a tenant.  Never blocks and never executes on
+    /// the caller's thread: returns a [`Ticket`] on admission, or —
+    /// when the global or per-tenant bound is hit — sheds the job with
+    /// a typed [`Error::Submission`] ([`Error::is_overload`] is true
+    /// for the retryable kinds).  Invalid specs fail with
+    /// [`Error::Config`] and count as neither accepted nor shed.
+    pub fn submit(&self, tenant: TenantId, job: Job) -> Result<Ticket> {
+        job.validate()?;
+        let (tx, rx) = mpsc::channel();
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            return Err(Error::Submission(Rejection::ShuttingDown));
+        }
+        let idx = tenant.0;
+        if idx >= st.tenants.len() {
+            return Err(Error::Config(format!("unknown tenant id {idx}")));
+        }
+        st.submitted += 1;
+        st.tenants[idx].submitted += 1;
+        let qj = QueuedJob { job, enqueued: Instant::now(), reply: tx };
+        match st.queues.try_enqueue(idx, qj) {
+            Ok(()) => {
+                let id = st.next_job_id;
+                st.next_job_id += 1;
+                st.accepted += 1;
+                st.tenants[idx].accepted += 1;
+                drop(st);
+                self.shared.work_cv.notify_all();
+                Ok(Ticket { id, tenant, rx })
+            }
+            Err((overflow, _job_back)) => {
+                st.shed += 1;
+                st.tenants[idx].shed += 1;
+                let rejection = match overflow {
+                    Overflow::Global { queued, depth } => Rejection::Overloaded { queued, depth },
+                    Overflow::Tenant { queued, depth } => Rejection::TenantOverloaded {
+                        tenant: st.tenants[idx].name.clone(),
+                        queued,
+                        depth,
+                    },
+                };
+                Err(Error::Submission(rejection))
+            }
+        }
+    }
+
+    /// Stop dispatching (admission continues).  Queued work resumes on
+    /// [`resume`](Self::resume); in-flight jobs are unaffected.
+    pub fn pause(&self) {
+        self.shared.state.lock().unwrap().paused = true;
+    }
+
+    /// Restart dispatching after [`pause`](Self::pause) (or
+    /// [`ServiceBuilder::start_paused`]).
+    pub fn resume(&self) {
+        self.shared.state.lock().unwrap().paused = false;
+        self.shared.work_cv.notify_all();
+    }
+
+    /// Is the dispatcher currently paused?
+    pub fn is_paused(&self) -> bool {
+        self.shared.state.lock().unwrap().paused
+    }
+
+    /// Block until no work is queued or in flight.  A *paused* service
+    /// with backlog never goes idle — resume first.
+    pub fn wait_idle(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.queues.total_queued() > 0 || st.inflight > 0 {
+            st = self.shared.idle_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Service-wide totals at this instant.
+    pub fn snapshot(&self) -> ServiceSnapshot {
+        let st = self.shared.state.lock().unwrap();
+        ServiceSnapshot {
+            tenants: st.tenants.len(),
+            submitted: st.submitted,
+            accepted: st.accepted,
+            shed: st.shed,
+            dispatched: st.dispatched,
+            completed: st.completed,
+            failed: st.failed,
+            queued: st.queues.total_queued(),
+            peak_queued: st.queues.peak_queued(),
+            inflight: st.inflight,
+            peak_inflight: st.peak_inflight,
+        }
+    }
+
+    /// This tenant's streaming accounting at this instant (`None` for
+    /// a foreign [`TenantId`]).
+    pub fn tenant_snapshot(&self, tenant: TenantId) -> Option<TenantSnapshot> {
+        let st = self.shared.state.lock().unwrap();
+        let t = st.tenants.get(tenant.0)?;
+        Some(Self::snapshot_tenant(&st, tenant.0, t))
+    }
+
+    /// Snapshots of every tenant, in registration order.
+    pub fn tenant_snapshots(&self) -> Vec<TenantSnapshot> {
+        let st = self.shared.state.lock().unwrap();
+        st.tenants.iter().enumerate().map(|(i, t)| Self::snapshot_tenant(&st, i, t)).collect()
+    }
+
+    fn snapshot_tenant(st: &ServiceState, idx: usize, t: &TenantState) -> TenantSnapshot {
+        TenantSnapshot {
+            name: t.name.clone(),
+            weight: t.weight,
+            submitted: t.submitted,
+            accepted: t.accepted,
+            shed: t.shed,
+            completed: t.completed,
+            failed: t.failed,
+            successes: t.successes,
+            queued: st.queues.queued(idx),
+            metrics: t.metrics,
+            queue_wait: t.queue_wait.clone(),
+            service_time: t.service_time.clone(),
+        }
+    }
+
+    /// The tenant order of every dispatch so far — `Some` only when
+    /// built with [`ServiceBuilder::record_dispatch`].
+    pub fn dispatch_log(&self) -> Option<Vec<TenantId>> {
+        self.shared.state.lock().unwrap().dispatch_log.clone()
+    }
+
+    /// The engine this service dispatches onto.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Configured dispatch window.
+    pub fn max_inflight(&self) -> usize {
+        self.shared.max_inflight
+    }
+
+    /// Configured global queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.state.lock().unwrap().queues.depth()
+    }
+
+    /// Configured per-tenant queue depth.
+    pub fn tenant_depth(&self) -> usize {
+        self.shared.state.lock().unwrap().queues.tenant_depth()
+    }
+
+    /// Jobs currently waiting across all tenants.
+    pub fn queued(&self) -> usize {
+        self.shared.state.lock().unwrap().queues.total_queued()
+    }
+
+    /// Stop admitting work, drain everything already accepted (a
+    /// paused service is resumed — admission is a promise), and join
+    /// the dispatcher.  Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            st.paused = false;
+        }
+        self.shared.work_cv.notify_all();
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EngineService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The dispatcher thread: waits for dispatchable work, pops the next
+/// job in DRR order, and hands it to a pool worker.
+fn dispatch_loop(shared: Arc<Shared>, engine: Arc<Engine>) {
+    loop {
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            if st.shutdown && st.queues.total_queued() == 0 && st.inflight == 0 {
+                return;
+            }
+            let dispatchable =
+                !st.paused && st.inflight < shared.max_inflight && st.queues.total_queued() > 0;
+            if dispatchable {
+                break;
+            }
+            st = shared.work_cv.wait(st).unwrap();
+        }
+        let (tenant, qj) = st.queues.dequeue().expect("backlog checked under lock");
+        st.inflight += 1;
+        st.peak_inflight = st.peak_inflight.max(st.inflight);
+        st.dispatched += 1;
+        if let Some(log) = st.dispatch_log.as_mut() {
+            log.push(TenantId(tenant));
+        }
+        st.tenants[tenant].queue_wait.record(qj.enqueued.elapsed());
+        drop(st);
+        let shared = Arc::clone(&shared);
+        let engine_for_job = Arc::clone(&engine);
+        engine.pool().execute(move || run_job(shared, engine_for_job, tenant, qj));
+    }
+}
+
+/// Runs on a pool worker: execute the job, fold its outcome into the
+/// tenant's streaming accounting, free the inflight slot, deliver the
+/// result.
+fn run_job(shared: Arc<Shared>, engine: Arc<Engine>, tenant: usize, qj: QueuedJob) {
+    let QueuedJob { job, enqueued: _, reply } = qj;
+    let started = Instant::now();
+    let res = catch_unwind(AssertUnwindSafe(|| match job {
+        Job::Tsqr(spec) => engine.run(spec).map(JobOutcome::Tsqr),
+        Job::Caqr(spec) => engine.run_caqr(spec).map(JobOutcome::Caqr),
+    }))
+    .unwrap_or_else(|_| Err(Error::Other("service job panicked".into())));
+    let service_time = started.elapsed();
+    // Drop the engine handle BEFORE publishing completion: the moment
+    // `inflight` hits zero after shutdown, the dispatcher joins and the
+    // service releases its own engine Arc — which must then be the
+    // *last* one so `Engine::drop` (pool shutdown + join) never runs on
+    // a pool worker (a worker cannot join itself).
+    drop(engine);
+    let mut st = shared.state.lock().unwrap();
+    st.inflight -= 1;
+    match &res {
+        Ok(out) => {
+            st.completed += 1;
+            let t = &mut st.tenants[tenant];
+            t.completed += 1;
+            if out.success() {
+                t.successes += 1;
+            }
+            t.metrics.merge(&out.metrics());
+        }
+        Err(_) => {
+            st.failed += 1;
+            st.tenants[tenant].failed += 1;
+        }
+    }
+    st.tenants[tenant].service_time.record(service_time);
+    drop(st);
+    shared.work_cv.notify_all();
+    shared.idle_cv.notify_all();
+    let _ = reply.send(res);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tsqr::Algo;
+
+    fn tiny(seed: u64) -> Job {
+        Job::Tsqr(RunSpec::new(Algo::Redundant, 4, 8, 4).with_seed(seed).with_verify(false))
+    }
+
+    #[test]
+    fn builder_defaults_and_clamps() {
+        let b = ServiceBuilder::new().queue_depth(0).tenant_depth(0).max_inflight(0);
+        let svc = b.build(Engine::host());
+        assert_eq!(svc.queue_depth(), 1, "depth clamps to >= 1");
+        assert_eq!(svc.tenant_depth(), 1);
+        assert_eq!(svc.max_inflight(), 1);
+        assert!(!svc.is_paused());
+        assert!(svc.dispatch_log().is_none(), "recording off by default");
+    }
+
+    #[test]
+    fn tenant_registration_rules() {
+        let svc = EngineService::over(Engine::host());
+        let a = svc.register_tenant("alice", 2).unwrap();
+        assert_eq!(a.index(), 0);
+        assert!(matches!(svc.register_tenant("alice", 1), Err(Error::Config(_))), "dup name");
+        assert!(matches!(svc.register_tenant("zero", 0), Err(Error::Config(_))), "weight >= 1");
+        let b = svc.register_tenant("bob", 1).unwrap();
+        assert_eq!(b.index(), 1);
+        assert_eq!(svc.snapshot().tenants, 2);
+    }
+
+    #[test]
+    fn submit_validates_before_admission() {
+        let svc = EngineService::over(Engine::host());
+        let t = svc.register_tenant("t", 1).unwrap();
+        // 6 procs is not a power of two for the redundant family.
+        let bad = Job::Tsqr(RunSpec::new(Algo::Redundant, 6, 16, 4));
+        assert!(matches!(svc.submit(t, bad), Err(Error::Config(_))));
+        let snap = svc.tenant_snapshot(t).unwrap();
+        // Invalid spec counts as neither submitted, accepted nor shed.
+        assert_eq!((snap.submitted, snap.accepted, snap.shed), (0, 0, 0));
+    }
+
+    #[test]
+    fn submit_runs_and_streams_metrics() {
+        let svc = EngineService::over(Engine::host());
+        let t = svc.register_tenant("t", 1).unwrap();
+        let ticket = svc.submit(t, tiny(7)).unwrap();
+        assert_eq!(ticket.tenant(), t);
+        let out = ticket.wait().unwrap();
+        assert!(out.success());
+        assert!(out.as_tsqr().is_some() && out.as_caqr().is_none());
+        svc.wait_idle();
+        let snap = svc.tenant_snapshot(t).unwrap();
+        assert_eq!((snap.completed, snap.successes, snap.failed), (1, 1, 0));
+        assert_eq!(snap.metrics, out.metrics(), "aggregate of one run is that run");
+        assert_eq!(snap.queue_wait.count(), 1);
+        assert_eq!(snap.service_time.count(), 1);
+        assert_eq!(snap.survival().probability(), 1.0);
+        let s = svc.snapshot();
+        assert_eq!((s.submitted, s.accepted, s.shed, s.completed), (1, 1, 0, 1));
+        assert_eq!(s.inflight, 0);
+        assert!(s.peak_inflight >= 1);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_but_drains_accepted() {
+        let svc = ServiceBuilder::new().start_paused(true).build(Engine::host());
+        let t = svc.register_tenant("t", 1).unwrap();
+        let tickets: Vec<Ticket> = (0..3).map(|i| svc.submit(t, tiny(i)).unwrap()).collect();
+        // Shutdown while paused: accepted work must still drain.
+        svc.shutdown();
+        for ticket in tickets {
+            assert!(ticket.wait().unwrap().success());
+        }
+        assert!(matches!(
+            svc.submit(t, tiny(9)),
+            Err(Error::Submission(Rejection::ShuttingDown))
+        ));
+        assert!(matches!(
+            svc.register_tenant("late", 1),
+            Err(Error::Submission(Rejection::ShuttingDown))
+        ));
+        let snap = svc.tenant_snapshot(t).unwrap();
+        assert_eq!((snap.completed, snap.queued), (3, 0));
+        // Idempotent (and Drop will call it again harmlessly).
+        svc.shutdown();
+    }
+
+    #[test]
+    fn foreign_tenant_id_is_a_config_error() {
+        let svc = EngineService::over(Engine::host());
+        assert!(matches!(svc.submit(TenantId(5), tiny(0)), Err(Error::Config(_))));
+        assert!(svc.tenant_snapshot(TenantId(5)).is_none());
+    }
+}

@@ -1,0 +1,324 @@
+//! Bounded per-tenant queues with deficit-round-robin (DRR) dispatch —
+//! the pure scheduling core of the service layer, free of threads and
+//! clocks so its fairness and admission invariants unit-test directly.
+//!
+//! Every job costs one quantum unit (a campaign run), so DRR reduces to
+//! weighted round-robin with integer deficits: a visit to tenant `i`
+//! grants `weight_i` credits and serves up to that many queued jobs
+//! before moving on.  Over any dispatch prefix of length `n` during
+//! which every tenant stays backlogged, tenant `i`'s served count
+//! deviates from its weight share `n·wᵢ/W` by at most one quantum
+//! (`wᵢ` jobs) — the bound `tests/integration_service.rs` pins.
+
+use std::collections::VecDeque;
+
+/// Why an enqueue was refused — translated into
+/// [`crate::error::Rejection`] by the service front door (the queue
+/// core itself stays error-type-agnostic and returns the job).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Overflow {
+    /// Global bound hit: `queued` jobs already waiting of `depth` allowed.
+    Global { queued: usize, depth: usize },
+    /// Per-tenant bound hit for the submitting tenant.
+    Tenant { queued: usize, depth: usize },
+}
+
+struct TenantQueue<T> {
+    weight: u64,
+    deficit: u64,
+    jobs: VecDeque<T>,
+    /// True iff this tenant is in the `active` rotation or is the
+    /// tenant currently being served (i.e. it holds backlog the
+    /// scheduler knows about).
+    in_active: bool,
+}
+
+/// The DRR state machine: per-tenant FIFO queues, a rotation of
+/// backlogged tenants, and the deficit counters.
+pub(crate) struct DrrQueues<T> {
+    tenants: Vec<TenantQueue<T>>,
+    /// Backlogged tenants awaiting their next visit, in rotation order.
+    active: VecDeque<usize>,
+    /// Tenant currently being served (holds unspent deficit).
+    current: Option<usize>,
+    queued_total: usize,
+    depth: usize,
+    tenant_depth: usize,
+    peak_queued: usize,
+}
+
+impl<T> DrrQueues<T> {
+    /// New queue set with a global bound of `depth` waiting jobs and a
+    /// per-tenant bound of `tenant_depth`.
+    pub fn new(depth: usize, tenant_depth: usize) -> Self {
+        DrrQueues {
+            tenants: Vec::new(),
+            active: VecDeque::new(),
+            current: None,
+            queued_total: 0,
+            depth: depth.max(1),
+            tenant_depth: tenant_depth.max(1),
+            peak_queued: 0,
+        }
+    }
+
+    /// Register a tenant with the given DRR weight (≥ 1) and return
+    /// its index.
+    pub fn add_tenant(&mut self, weight: u64) -> usize {
+        self.tenants.push(TenantQueue {
+            weight: weight.max(1),
+            deficit: 0,
+            jobs: VecDeque::new(),
+            in_active: false,
+        });
+        self.tenants.len() - 1
+    }
+
+    /// Number of registered tenants.
+    pub fn tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// The tenant's DRR weight.
+    pub fn weight(&self, tenant: usize) -> u64 {
+        self.tenants[tenant].weight
+    }
+
+    /// Jobs currently waiting for this tenant.
+    pub fn queued(&self, tenant: usize) -> usize {
+        self.tenants[tenant].jobs.len()
+    }
+
+    /// Jobs currently waiting across all tenants.
+    pub fn total_queued(&self) -> usize {
+        self.queued_total
+    }
+
+    /// High-water mark of `total_queued`.
+    pub fn peak_queued(&self) -> usize {
+        self.peak_queued
+    }
+
+    /// The configured global depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// The configured per-tenant depth.
+    pub fn tenant_depth(&self) -> usize {
+        self.tenant_depth
+    }
+
+    /// Admit a job if both the global and the tenant bound allow it;
+    /// on refusal the job comes back untouched alongside the reason.
+    pub fn try_enqueue(&mut self, tenant: usize, job: T) -> Result<(), (Overflow, T)> {
+        if self.queued_total >= self.depth {
+            return Err((Overflow::Global { queued: self.queued_total, depth: self.depth }, job));
+        }
+        let q = &mut self.tenants[tenant];
+        if q.jobs.len() >= self.tenant_depth {
+            return Err((
+                Overflow::Tenant { queued: q.jobs.len(), depth: self.tenant_depth },
+                job,
+            ));
+        }
+        q.jobs.push_back(job);
+        self.queued_total += 1;
+        self.peak_queued = self.peak_queued.max(self.queued_total);
+        if !q.in_active {
+            q.in_active = true;
+            self.active.push_back(tenant);
+        }
+        Ok(())
+    }
+
+    /// Pop the next job under DRR order; `None` when nothing is queued.
+    pub fn dequeue(&mut self) -> Option<(usize, T)> {
+        loop {
+            if let Some(t) = self.current {
+                let q = &mut self.tenants[t];
+                if q.deficit >= 1 && !q.jobs.is_empty() {
+                    let job = q.jobs.pop_front().expect("non-empty checked");
+                    q.deficit -= 1;
+                    self.queued_total -= 1;
+                    if q.jobs.is_empty() {
+                        // Backlog drained: forfeit leftover credit so an
+                        // idle tenant cannot bank deficit for a later
+                        // burst (standard DRR reset-on-empty rule).
+                        q.deficit = 0;
+                        q.in_active = false;
+                        self.current = None;
+                    }
+                    return Some((t, job));
+                }
+                if q.jobs.is_empty() {
+                    q.deficit = 0;
+                    q.in_active = false;
+                } else {
+                    // Credit spent but backlog remains: rejoin the
+                    // rotation at the back.
+                    self.active.push_back(t);
+                }
+                self.current = None;
+                continue;
+            }
+            let t = self.active.pop_front()?;
+            let q = &mut self.tenants[t];
+            if q.jobs.is_empty() {
+                q.deficit = 0;
+                q.in_active = false;
+                continue;
+            }
+            // One quantum: `weight` job credits for this visit.
+            q.deficit += q.weight;
+            self.current = Some(t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain everything, recording the tenant order.
+    fn drain(q: &mut DrrQueues<u32>) -> Vec<usize> {
+        let mut order = Vec::new();
+        while let Some((t, _)) = q.dequeue() {
+            order.push(t);
+        }
+        order
+    }
+
+    #[test]
+    fn bounded_admission_global_and_per_tenant() {
+        let mut q = DrrQueues::new(5, 3);
+        let a = q.add_tenant(1);
+        let b = q.add_tenant(1);
+        for i in 0..3 {
+            q.try_enqueue(a, i).unwrap();
+        }
+        // Tenant bound: a's 4th job refused, job handed back.
+        match q.try_enqueue(a, 99) {
+            Err((Overflow::Tenant { queued: 3, depth: 3 }, 99)) => {}
+            other => panic!("expected tenant overflow, got {other:?}"),
+        }
+        // b still admitted (per-tenant isolation).
+        q.try_enqueue(b, 0).unwrap();
+        q.try_enqueue(b, 1).unwrap();
+        // Global bound (5) now full: even b's within-quota job is shed.
+        match q.try_enqueue(b, 99) {
+            Err((Overflow::Global { queued: 5, depth: 5 }, 99)) => {}
+            other => panic!("expected global overflow, got {other:?}"),
+        }
+        assert_eq!(q.total_queued(), 5);
+        assert_eq!(q.peak_queued(), 5);
+        assert_eq!(q.queued(a), 3);
+        assert_eq!(q.queued(b), 2);
+    }
+
+    #[test]
+    fn equal_weights_round_robin() {
+        let mut q = DrrQueues::new(64, 64);
+        let a = q.add_tenant(1);
+        let b = q.add_tenant(1);
+        for i in 0..4 {
+            q.try_enqueue(a, i).unwrap();
+            q.try_enqueue(b, i).unwrap();
+        }
+        assert_eq!(drain(&mut q), vec![a, b, a, b, a, b, a, b]);
+        assert_eq!(q.total_queued(), 0);
+    }
+
+    #[test]
+    fn weighted_service_shares() {
+        // Weights 1:3 → each full round serves 1 of a, 3 of b.
+        let mut q = DrrQueues::new(64, 64);
+        let a = q.add_tenant(1);
+        let b = q.add_tenant(3);
+        for i in 0..4 {
+            q.try_enqueue(a, i).unwrap();
+        }
+        for i in 0..12 {
+            q.try_enqueue(b, i).unwrap();
+        }
+        let order = drain(&mut q);
+        assert_eq!(order.len(), 16);
+        // Per-round structure: [a, b, b, b] × 4.
+        for round in 0..4 {
+            assert_eq!(order[round * 4], a, "round {round}");
+            assert_eq!(&order[round * 4 + 1..round * 4 + 4], &[b, b, b], "round {round}");
+        }
+    }
+
+    #[test]
+    fn drr_prefix_bound_holds_while_backlogged() {
+        // Weights 2:5:1, long backlogs: at every prefix n (all tenants
+        // still backlogged) |served_i·W − w_i·n| ≤ w_i·W.
+        let weights = [2u64, 5, 1];
+        let w_sum: u64 = weights.iter().sum();
+        let mut q = DrrQueues::new(1024, 1024);
+        let ids: Vec<usize> = weights.iter().map(|&w| q.add_tenant(w)).collect();
+        let per = 40u64;
+        for &t in &ids {
+            for i in 0..per {
+                q.try_enqueue(t, i as u32).unwrap();
+            }
+        }
+        let mut served = [0u64; 3];
+        let mut n = 0u64;
+        while let Some((t, _)) = q.dequeue() {
+            served[t] += 1;
+            n += 1;
+            let backlogged = served.iter().all(|&s| s < per);
+            if backlogged {
+                for (i, &w) in weights.iter().enumerate() {
+                    let share = (served[i] * w_sum) as i128 - (w * n) as i128;
+                    assert!(
+                        share.unsigned_abs() <= (w * w_sum) as u128,
+                        "prefix {n}: tenant {i} served {} (weights {weights:?})",
+                        served[i]
+                    );
+                }
+            }
+        }
+        assert_eq!(served, [per; 3]);
+    }
+
+    #[test]
+    fn drained_tenant_forfeits_deficit() {
+        // a drains mid-visit, goes idle, then returns: it must NOT have
+        // banked credit from the idle period.
+        let mut q = DrrQueues::new(64, 64);
+        let a = q.add_tenant(4);
+        let b = q.add_tenant(1);
+        q.try_enqueue(a, 0).unwrap();
+        q.try_enqueue(b, 0).unwrap();
+        q.try_enqueue(b, 1).unwrap();
+        // a serves its one job (visit grants 4, forfeits 3 on drain).
+        assert_eq!(q.dequeue().unwrap().0, a);
+        assert_eq!(q.dequeue().unwrap().0, b);
+        // a returns with fresh backlog while b still queued: new visit
+        // starts from zero credit (grants exactly one quantum again).
+        q.try_enqueue(a, 1).unwrap();
+        let rest = drain(&mut q);
+        assert_eq!(rest.len(), 2);
+        assert!(rest.contains(&a) && rest.contains(&b));
+        assert_eq!(q.total_queued(), 0);
+    }
+
+    #[test]
+    fn interleaved_enqueue_dequeue_keeps_rotation_consistent() {
+        let mut q = DrrQueues::new(8, 8);
+        let a = q.add_tenant(1);
+        let b = q.add_tenant(1);
+        q.try_enqueue(a, 0).unwrap();
+        assert_eq!(q.dequeue().unwrap().0, a);
+        assert!(q.dequeue().is_none());
+        // Re-enqueue after empty: tenant must re-enter the rotation.
+        q.try_enqueue(b, 0).unwrap();
+        q.try_enqueue(a, 1).unwrap();
+        let order = drain(&mut q);
+        assert_eq!(order, vec![b, a], "arrival order of backlog sets the rotation");
+        assert!(q.dequeue().is_none());
+    }
+}

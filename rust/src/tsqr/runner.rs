@@ -116,6 +116,13 @@ pub struct RunSpec {
     /// Verify the final R against the host oracle (skippable for large
     /// Monte-Carlo sweeps where only survival matters).
     pub verify: bool,
+    /// Zero-copy input override: when set, this shared matrix is
+    /// factored instead of generating one from `seed` — N queued jobs
+    /// over the same data share a single allocation (the service
+    /// layer's shared-input path).  Shape must be
+    /// `procs·rows_per_proc × cols` ([`validate`](Self::validate)
+    /// checks).
+    pub input: Option<Arc<Matrix>>,
 }
 
 impl RunSpec {
@@ -131,6 +138,7 @@ impl RunSpec {
             executor: Executor::host(),
             collect_trace: false,
             verify: true,
+            input: None,
         }
     }
 
@@ -164,6 +172,14 @@ impl RunSpec {
         self
     }
 
+    /// Share an input matrix zero-copy: the run factors `input`
+    /// directly (no per-job `Matrix::random` materialization), so many
+    /// specs can reference one allocation through the `Arc`.
+    pub fn with_input(mut self, input: impl Into<Arc<Matrix>>) -> Self {
+        self.input = Some(input.into());
+        self
+    }
+
     /// Check shape and algorithm/world-size compatibility.
     pub fn validate(&self) -> Result<()> {
         if self.procs == 0 {
@@ -189,12 +205,36 @@ impl RunSpec {
                     .into(),
             ));
         }
+        if let Some(input) = &self.input {
+            let want = (self.procs * self.rows_per_proc, self.cols);
+            if input.shape() != want {
+                return Err(Error::Config(format!(
+                    "shared input shape {:?} does not match spec shape {:?} \
+                     (procs*rows_per_proc x cols)",
+                    input.shape(),
+                    want
+                )));
+            }
+        }
         Ok(())
     }
 
     /// The full input matrix this spec factors (deterministic in seed).
+    /// Ignores any shared-input override — see
+    /// [`resolve_input`](Self::resolve_input) for what a run actually
+    /// factors.
     pub fn input_matrix(&self) -> Matrix {
         Matrix::random(self.procs * self.rows_per_proc, self.cols, self.seed)
+    }
+
+    /// The matrix a run of this spec factors: the shared zero-copy
+    /// override when present (`Arc` clone, no data copy), otherwise a
+    /// fresh seed-deterministic [`input_matrix`](Self::input_matrix).
+    pub fn resolve_input(&self) -> Arc<Matrix> {
+        match &self.input {
+            Some(m) => Arc::clone(m),
+            None => Arc::new(self.input_matrix()),
+        }
     }
 
     /// The per-process scratch high-water mark of this run (leaf vs
@@ -316,6 +356,29 @@ mod tests {
         let s = RunSpec::new(Algo::Baseline, 2, 8, 4);
         assert_eq!(s.input_matrix(), s.input_matrix());
         assert_eq!(s.input_matrix().shape(), (16, 4));
+    }
+
+    #[test]
+    fn shared_input_is_zero_copy_and_shape_checked() {
+        let spec = RunSpec::new(Algo::Redundant, 4, 16, 4);
+        let shared = Arc::new(spec.input_matrix());
+
+        // Wrong shape is a Config error at validate time, not a panic
+        // inside a worker.
+        let bad = spec.clone().with_input(Matrix::random(8, 4, 1));
+        assert!(matches!(bad.validate(), Err(Error::Config(_))));
+
+        // Right shape: resolve_input hands back the SAME allocation.
+        let good = spec.clone().with_input(Arc::clone(&shared));
+        good.validate().unwrap();
+        assert!(Arc::ptr_eq(&good.resolve_input(), &shared), "no copy on resolve");
+        // Cloning the spec clones the Arc, not the matrix.
+        let also = good.clone();
+        assert!(Arc::ptr_eq(&also.resolve_input(), &shared));
+
+        // Without an override, resolve_input falls back to the seeded
+        // generator.
+        assert_eq!(*spec.resolve_input(), spec.input_matrix());
     }
 
     #[test]

@@ -280,6 +280,67 @@ fn caqr_sweep_prints_survival_over_panel_counts() {
 }
 
 #[test]
+fn serve_subcommand_drives_weighted_tenants() {
+    let out = run_ok(&[
+        "serve",
+        "--tenants",
+        "2",
+        "--weights",
+        "3,1",
+        "--jobs",
+        "4",
+        "--procs",
+        "4",
+        "--rows-per-proc",
+        "8",
+        "--cols",
+        "4",
+        "--inflight",
+        "2",
+        "--backend",
+        "host",
+    ]);
+    assert!(out.contains("tenant0") && out.contains("tenant1"), "{out}");
+    assert!(out.contains("p99 wait"), "latency columns expected: {out}");
+    assert!(out.contains("completed=8"), "2 tenants x 4 jobs, nothing shed: {out}");
+}
+
+#[test]
+fn serve_overload_sheds_without_failing() {
+    // Two flooding clients against a depth-1 queue: shed submissions
+    // are the measurement, not an error — the exit code stays 0.
+    let out = run_ok(&[
+        "serve",
+        "--tenants",
+        "2",
+        "--jobs",
+        "8",
+        "--procs",
+        "4",
+        "--rows-per-proc",
+        "8",
+        "--cols",
+        "4",
+        "--queue-depth",
+        "1",
+        "--tenant-depth",
+        "1",
+        "--inflight",
+        "1",
+        "--backend",
+        "host",
+    ]);
+    assert!(!out.contains("shed_rate=0.000"), "a depth-1 queue must shed under flood: {out}");
+}
+
+#[test]
+fn serve_rejects_mismatched_weights() {
+    let out = repro().args(["serve", "--tenants", "3", "--weights", "1,2"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--weights lists 2"));
+}
+
+#[test]
 fn bad_flags_error_cleanly() {
     let out = repro().args(["run", "--algo", "bogus"]).output().unwrap();
     assert!(!out.status.success());

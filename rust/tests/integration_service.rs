@@ -1,0 +1,357 @@
+//! Multi-tenant service integration: the contracts the service layer
+//! guarantees under concurrency and overload.
+//!
+//! 1. **Fairness** — recorded dispatch order obeys the DRR bound: over
+//!    any prefix where every tenant stays backlogged, a tenant's served
+//!    count deviates from its weight share by at most one quantum.
+//! 2. **No starvation** — a weight-1 victim behind a saturating
+//!    adversary is still served once per DRR round, both in a
+//!    deterministic paused drain and under a live flooding thread.
+//! 3. **Overload exactness** — sheds carry typed
+//!    [`Rejection`](ft_tsqr::error::Rejection)s with exact counts, and
+//!    jobs that complete under overload are bit-identical to the same
+//!    specs run alone (shedding never corrupts).
+//! 4. **Interleaving independence** — per-tenant order-free aggregates
+//!    (counters + merged [`MetricsSnapshot`]s) are identical across
+//!    repeated live drives of the same seeded
+//!    [`TrafficSpec`](ft_tsqr::service::TrafficSpec); wall-clock
+//!    histograms are excluded by design.
+//! 5. **Zero-copy inputs** — one shared `Arc<Matrix>` feeds many jobs
+//!    and is fully released afterwards.
+//! 6. **Drain on drop** — accepted work is a promise; dropping the
+//!    service delivers every admitted result.
+
+use std::sync::Arc;
+use std::thread;
+
+use ft_tsqr::engine::Engine;
+use ft_tsqr::error::{Error, Rejection};
+use ft_tsqr::linalg::Matrix;
+use ft_tsqr::service::{Job, ServiceBuilder, TrafficReport, TrafficSpec, run_traffic};
+use ft_tsqr::tsqr::{Algo, RunSpec};
+use ft_tsqr::util::derive_seed;
+
+fn tiny_spec(seed: u64) -> RunSpec {
+    RunSpec::new(Algo::Redundant, 4, 8, 4).with_seed(seed).with_verify(false)
+}
+
+fn tiny(seed: u64) -> Job {
+    Job::Tsqr(tiny_spec(seed))
+}
+
+// ------------------------------------------------------- DRR fairness
+
+#[test]
+fn drr_fairness_bound_table_driven() {
+    // All jobs admitted while the dispatcher is paused, then drained
+    // one at a time (max_inflight 1) with the dispatch order recorded.
+    // Over every prefix n during which all tenants stay backlogged,
+    // tenant i's served count may deviate from its weight share n·wᵢ/W
+    // by at most one quantum (wᵢ jobs).
+    let scenarios: &[(&[u64], u64)] =
+        &[(&[1, 1], 12), (&[1, 2, 3], 12), (&[1, 4], 15), (&[2, 2, 2], 10)];
+    for &(weights, jobs) in scenarios {
+        let svc = ServiceBuilder::new()
+            .queue_depth(4096)
+            .tenant_depth(4096)
+            .max_inflight(1)
+            .start_paused(true)
+            .record_dispatch(true)
+            .build(Engine::host());
+        let ids: Vec<_> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| svc.register_tenant(format!("t{i}"), w).unwrap())
+            .collect();
+        let mut tickets = Vec::new();
+        for (i, id) in ids.iter().enumerate() {
+            for j in 0..jobs {
+                tickets.push(svc.submit(*id, tiny(derive_seed(i as u64, j))).unwrap());
+            }
+        }
+        svc.resume();
+        svc.wait_idle();
+
+        let log = svc.dispatch_log().expect("recording on");
+        assert_eq!(log.len(), weights.len() * jobs as usize, "{weights:?}");
+        let w_sum: u64 = weights.iter().sum();
+        let mut served = vec![0u64; weights.len()];
+        for (step, t) in log.iter().enumerate() {
+            served[t.index()] += 1;
+            let n = (step + 1) as u64;
+            if served.iter().any(|&s| s >= jobs) {
+                break; // a backlog drained: the bound no longer binds
+            }
+            for (i, &w) in weights.iter().enumerate() {
+                let dev = (served[i] * w_sum) as i128 - (w * n) as i128;
+                assert!(
+                    dev.unsigned_abs() <= (w * w_sum) as u128,
+                    "weights {weights:?} prefix {n}: tenant {i} served {}",
+                    served[i]
+                );
+            }
+        }
+        for ticket in tickets {
+            assert!(ticket.wait().unwrap().success(), "{weights:?}");
+        }
+        // Zero starvation: every tenant's whole backlog was served.
+        for (i, id) in ids.iter().enumerate() {
+            let snap = svc.tenant_snapshot(*id).unwrap();
+            assert_eq!((snap.completed, snap.shed, snap.queued), (jobs, 0, 0), "tenant {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------- starvation freedom
+
+#[test]
+fn no_starvation_under_saturating_adversary() {
+    // Deterministic leg: the weight-10 adversary fills its queue to the
+    // per-tenant bound while paused; DRR still visits the weight-1
+    // victim once per round of W = 11, so the victim's j-th job must be
+    // dispatched by position (j+1)·W in the recorded order.
+    let svc = ServiceBuilder::new()
+        .queue_depth(4096)
+        .tenant_depth(32)
+        .max_inflight(1)
+        .start_paused(true)
+        .record_dispatch(true)
+        .build(Engine::host());
+    let adversary = svc.register_tenant("adversary", 10).unwrap();
+    let victim = svc.register_tenant("victim", 1).unwrap();
+    for j in 0..32u64 {
+        svc.submit(adversary, tiny(j)).unwrap();
+    }
+    let victim_jobs = 3u64;
+    let tickets: Vec<_> =
+        (0..victim_jobs).map(|j| svc.submit(victim, tiny(1000 + j)).unwrap()).collect();
+    svc.resume();
+    svc.wait_idle();
+
+    let log = svc.dispatch_log().unwrap();
+    let w_sum = 11u64;
+    let positions: Vec<usize> =
+        log.iter().enumerate().filter(|(_, t)| **t == victim).map(|(n, _)| n + 1).collect();
+    assert_eq!(positions.len(), victim_jobs as usize, "every victim job dispatched");
+    for (j, &pos) in positions.iter().enumerate() {
+        assert!(
+            pos as u64 <= (j as u64 + 1) * w_sum,
+            "victim job {j} dispatched at position {pos}: starvation bound exceeded"
+        );
+    }
+    for t in tickets {
+        assert!(t.wait().unwrap().success());
+    }
+    drop(svc);
+
+    // Live leg: a real flooding thread keeps the queues saturated while
+    // the victim submits through the same front door — every victim
+    // ticket must still complete (a starved victim would hang here).
+    let svc = ServiceBuilder::new()
+        .queue_depth(16)
+        .tenant_depth(12)
+        .max_inflight(2)
+        .build(Engine::host());
+    let adversary = svc.register_tenant("adversary", 8).unwrap();
+    let victim = svc.register_tenant("victim", 1).unwrap();
+    thread::scope(|scope| {
+        scope.spawn(|| {
+            for j in 0..150u64 {
+                match svc.submit(adversary, tiny(j)) {
+                    // Dropping the ticket abandons the result, not the job.
+                    Ok(ticket) => drop(ticket),
+                    Err(e) => assert!(e.is_overload(), "flood saw a non-overload error: {e}"),
+                }
+            }
+        });
+        let tickets: Vec<_> = (0..4u64)
+            .map(|j| {
+                loop {
+                    match svc.submit(victim, tiny(5000 + j)) {
+                        Ok(ticket) => break ticket,
+                        Err(e) => {
+                            assert!(e.is_overload(), "victim saw a non-overload error: {e}");
+                            thread::yield_now();
+                        }
+                    }
+                }
+            })
+            .collect();
+        for t in tickets {
+            assert!(t.wait().unwrap().success(), "victim starved under live flood");
+        }
+    });
+}
+
+// ------------------------------------------------- overload exactness
+
+#[test]
+fn overload_sheds_exact_counts_with_typed_errors() {
+    // Global bound: paused service, queue depth 8 — of 13 offered jobs
+    // exactly 8 are admitted and 5 shed with Rejection::Overloaded.
+    let svc = ServiceBuilder::new()
+        .queue_depth(8)
+        .tenant_depth(8)
+        .max_inflight(1)
+        .start_paused(true)
+        .build(Engine::host());
+    let t = svc.register_tenant("t", 1).unwrap();
+    let mut tickets = Vec::new();
+    let mut sheds = 0u64;
+    for j in 0..13u64 {
+        match svc.submit(t, tiny(j)) {
+            Ok(ticket) => tickets.push((j, ticket)),
+            Err(Error::Submission(Rejection::Overloaded { queued, depth })) => {
+                assert_eq!((queued, depth), (8, 8));
+                sheds += 1;
+            }
+            Err(e) => panic!("wrong rejection kind: {e}"),
+        }
+    }
+    assert_eq!((tickets.len(), sheds), (8, 5));
+    let snap = svc.snapshot();
+    assert_eq!((snap.submitted, snap.accepted, snap.shed, snap.queued), (13, 8, 5, 8));
+    svc.resume();
+    svc.wait_idle();
+    assert_eq!(svc.snapshot().completed, 8);
+
+    // Shed-never-corrupts: every admitted job's R is bit-identical to
+    // the same spec run alone on a fresh engine.
+    let reference = Engine::host();
+    for (seed, ticket) in tickets {
+        let out = ticket.wait().unwrap();
+        let served = out.as_tsqr().unwrap().final_r.clone().unwrap();
+        let alone = reference.run(tiny_spec(seed)).unwrap().final_r.unwrap();
+        assert_eq!(served, alone, "seed {seed}: overload must not corrupt admitted work");
+    }
+
+    // Per-tenant bound: a deep global queue still sheds one tenant's
+    // overflow — with the tenant named — while others are admitted.
+    let svc = ServiceBuilder::new()
+        .queue_depth(64)
+        .tenant_depth(4)
+        .start_paused(true)
+        .build(Engine::host());
+    let greedy = svc.register_tenant("greedy", 1).unwrap();
+    let modest = svc.register_tenant("modest", 1).unwrap();
+    let mut greedy_tickets = Vec::new();
+    for j in 0..6u64 {
+        match svc.submit(greedy, tiny(j)) {
+            Ok(ticket) => greedy_tickets.push(ticket),
+            Err(Error::Submission(Rejection::TenantOverloaded { tenant, queued, depth })) => {
+                assert_eq!((tenant.as_str(), queued, depth), ("greedy", 4, 4));
+            }
+            Err(e) => panic!("wrong rejection kind: {e}"),
+        }
+    }
+    let modest_ticket = svc.submit(modest, tiny(100)).unwrap();
+    assert_eq!(svc.tenant_snapshot(greedy).unwrap().shed, 2);
+    assert_eq!(svc.tenant_snapshot(modest).unwrap().shed, 0, "per-tenant isolation");
+    svc.resume();
+    assert!(modest_ticket.wait().unwrap().success());
+    for ticket in greedy_tickets {
+        assert!(ticket.wait().unwrap().success());
+    }
+}
+
+// ------------------------------------------- interleaving independence
+
+#[test]
+fn per_tenant_accounting_is_interleaving_independent() {
+    fn drive(spec: &TrafficSpec) -> TrafficReport {
+        let svc = ServiceBuilder::new()
+            .queue_depth(4096)
+            .tenant_depth(4096)
+            .max_inflight(3)
+            .build(Engine::host());
+        run_traffic(&svc, spec).unwrap()
+    }
+    // Two live drives — real client threads, dispatch window 3 — must
+    // agree on every order-free per-tenant aggregate.  The wall-clock
+    // histograms are excluded by design: they measure the host.
+    let spec = TrafficSpec::new(4, 8, 4)
+        .tenant("a", 1, 10)
+        .tenant("b", 2, 10)
+        .tenant("c", 3, 10)
+        .tenant("d", 1, 10)
+        .with_seed(7);
+    let a = drive(&spec);
+    let b = drive(&spec);
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        let (sx, sy) = (&x.snapshot, &y.snapshot);
+        assert_eq!(sx.name, sy.name);
+        assert_eq!(
+            (sx.submitted, sx.accepted, sx.shed, sx.completed, sx.failed, sx.successes),
+            (sy.submitted, sy.accepted, sy.shed, sy.completed, sy.failed, sy.successes),
+            "tenant {}",
+            sx.name
+        );
+        // Fault-free runs have no respawn races: the full aggregated
+        // MetricsSnapshot must match bit for bit.
+        assert_eq!(sx.metrics, sy.metrics, "tenant {}", sx.name);
+        assert_eq!((x.offered, x.shed, x.ok), (y.offered, y.shed, y.ok), "tenant {}", sx.name);
+    }
+    assert_eq!(a.service.completed, b.service.completed);
+
+    // With the survivable-kill leg armed, which rank wins a respawn
+    // race is timing-dependent (message counters may wiggle), but the
+    // semantic projection — completions, survivals, respawns — is not,
+    // and Self-Healing absorbs every injected kill.
+    let faulty = spec.with_failures(true);
+    let a = drive(&faulty);
+    let b = drive(&faulty);
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(
+            (x.snapshot.completed, x.snapshot.successes, x.snapshot.metrics.respawns),
+            (y.snapshot.completed, y.snapshot.successes, y.snapshot.metrics.respawns),
+            "tenant {}",
+            x.snapshot.name
+        );
+        assert_eq!(x.snapshot.successes, x.snapshot.completed, "survivable kills only");
+        assert!(x.snapshot.metrics.respawns > 0, "the kill leg must actually exercise recovery");
+    }
+}
+
+// ------------------------------------------------- zero-copy shared input
+
+#[test]
+fn zero_copy_shared_input_serves_bit_identical_results() {
+    let svc = ServiceBuilder::new().max_inflight(2).build(Engine::host());
+    let t = svc.register_tenant("t", 1).unwrap();
+    let input = Arc::new(Matrix::random(4 * 8, 4, 99));
+    let mk = || {
+        RunSpec::new(Algo::SelfHealing, 4, 8, 4).with_verify(false).with_input(Arc::clone(&input))
+    };
+    let tickets: Vec<_> = (0..6).map(|_| svc.submit(t, Job::Tsqr(mk())).unwrap()).collect();
+    let reference_engine = Engine::host();
+    let expect = reference_engine.run(mk()).unwrap().final_r.unwrap();
+    for ticket in tickets {
+        let out = ticket.wait().unwrap();
+        assert_eq!(
+            out.as_tsqr().unwrap().final_r.as_ref().unwrap(),
+            &expect,
+            "same shared input → bit-identical R from every job"
+        );
+    }
+    svc.wait_idle();
+    drop(svc);
+    drop(reference_engine);
+    // Every submission borrowed the one buffer and released it: ours
+    // is the last handle standing.
+    assert_eq!(Arc::strong_count(&input), 1, "shared input must not be retained or copied");
+}
+
+// ------------------------------------------------------- drain on drop
+
+#[test]
+fn drop_drains_accepted_work() {
+    let tickets: Vec<_>;
+    {
+        let svc = ServiceBuilder::new().start_paused(true).build(Engine::host());
+        let t = svc.register_tenant("t", 1).unwrap();
+        tickets = (0..4u64).map(|j| svc.submit(t, tiny(j)).unwrap()).collect();
+    } // Drop → shutdown: un-pauses, drains the backlog, joins.
+    for ticket in tickets {
+        assert!(ticket.wait().unwrap().success(), "drop must drain accepted work, not drop it");
+    }
+}
