@@ -7,7 +7,16 @@
 //! Dimensions: fault-free overhead (messages/bytes/wall), robustness
 //! under identical failure schedules, and where each breaks.  The
 //! whole head-to-head runs through one engine session.
+//!
+//! The closing section races the three contenders of
+//! [`CheckpointVsRedundant`] (replication / adaptive coded / periodic
+//! checkpoint-restart) on one virtual clock and ships the crossover as
+//! `target/reports/BENCH_compare.json`; the CI perf gate tracks the
+//! coded-vs-checkpoint ratio (the coded ladder losing its high-churn
+//! advantage over checkpointing is the regression this artifact
+//! exists to catch).
 
+use ft_tsqr::analysis::CheckpointVsRedundant;
 use ft_tsqr::engine::Engine;
 use ft_tsqr::fault::KillSchedule;
 use ft_tsqr::report::bench::{bench, iters};
@@ -106,4 +115,88 @@ fn main() {
     println!("\ncheckpoint_vs_redundant: the redundant family matches checkpointing's");
     println!("robustness with no per-step checkpoint traffic; checkpointing additionally");
     println!("loses runs whenever a checkpoint holder dies with its protégé.");
+
+    // --------------------------------------- virtual-clock crossover
+    // The three contenders on one clock at scale (the engine-era
+    // comparator behind `repro compare`): where does coded ABFT pull
+    // ahead of replication, and what does checkpointing pay fault-free?
+    let quick = ft_tsqr::report::bench::quick();
+    let samples: u64 = if quick { 8 } else { 32 };
+    let cmp = CheckpointVsRedundant::new(&engine, 256, 4).with_samples(samples);
+    let rates = [0.0, 0.5, 50.0, 400.0];
+    let cells = cmp.table(&rates).expect("crossover table");
+    let mut cross = Table::new(
+        format!("TAB-P2d: crossover on 256 simulated ranks ({samples} samples/contender)"),
+        &["rate", "replication", "coded (c)", "checkpoint", "winner", "engine default"],
+    );
+    for cell in &cells {
+        cross.row(vec![
+            cell.rate.to_string(),
+            format!("{:.3}", cell.replication.survival),
+            format!("{:.3} (c={})", cell.coded.survival, cell.coded.checksums),
+            format!("{:.3}", cell.checkpoint.survival),
+            cell.winner.name().into(),
+            cell.engine_default().to_string(),
+        ]);
+    }
+    print!("{}", cross.render());
+    cross.save_csv(REPORT_DIR).expect("csv");
+
+    let ff = &cells[0];
+    let hi = cells.last().expect("cells");
+    // Fault-free, checkpointing's snapshot traffic is pure overhead on
+    // the shared clock; the ratio must stay > 1.
+    let ckpt_faultfree_overhead =
+        ff.checkpoint.time.total_ns() as f64 / ff.replication.time.total_ns().max(1) as f64;
+    // High churn: survival advantage of the coded ladder over the
+    // checkpoint baseline, damped into [0.5, 2] so a zero-survival
+    // checkpoint column cannot blow the ratio up.
+    let coded_vs_checkpoint = (1.0 + hi.coded.survival) / (1.0 + hi.checkpoint.survival);
+    println!(
+        "crossover: fault-free checkpoint overhead {ckpt_faultfree_overhead:.3}x, \
+         high-churn (rate {}) coded-vs-checkpoint ratio {coded_vs_checkpoint:.3}, \
+         winner {} -> engine default {}",
+        hi.rate,
+        hi.winner.name(),
+        hi.engine_default(),
+    );
+
+    let winners: Vec<String> =
+        cells.iter().map(|c| format!("\"{}\"", c.winner.name())).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"checkpoint_vs_redundant\",\n  \"samples\": {samples},\n  \
+         \"quick\": {quick},\n  {host},\n  \
+         \"crossover_rates\": [{rates_json}],\n  \"winners\": [{winners}],\n  \
+         \"checkpoint_faultfree_overhead_ratio\": {ckpt_faultfree_overhead:.3},\n  \
+         \"coded_vs_checkpoint_ratio\": {coded_vs_checkpoint:.3},\n  \
+         \"replication_survival_high_churn\": {:.3},\n  \
+         \"coded_survival_high_churn\": {:.3},\n  \
+         \"checkpoint_survival_high_churn\": {:.3},\n  \
+         \"engine_default_high_churn\": \"{}\"\n}}\n",
+        hi.replication.survival,
+        hi.coded.survival,
+        hi.checkpoint.survival,
+        hi.engine_default(),
+        host = ft_tsqr::report::bench::host_json_fields(),
+        rates_json =
+            rates.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(", "),
+        winners = winners.join(", "),
+    );
+    std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
+    let json_path = format!("{REPORT_DIR}/BENCH_compare.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_compare.json");
+    println!("wrote {json_path}");
+    if std::env::var("BENCH_WRITE_BASELINE").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all("benches/baselines").expect("mkdir baselines");
+        std::fs::write("benches/baselines/BENCH_compare.json", &json).expect("write baseline");
+        println!("refreshed baseline benches/baselines/BENCH_compare.json");
+    }
+    // CI perf gate (BENCH_REGRESS=1): the coded column losing its
+    // high-churn edge over the checkpoint baseline is the regression
+    // this artifact exists to catch.
+    ft_tsqr::report::bench::enforce_regress_gate(
+        "checkpoint_vs_redundant",
+        "benches/baselines/BENCH_compare.json",
+        &[("coded_vs_checkpoint_ratio", coded_vs_checkpoint)],
+    );
 }

@@ -1,0 +1,373 @@
+//! Failure-model-adaptive recovery policy: pick the checksum count `c`
+//! (and whether to arm checksums at all) from a *failure rate* instead
+//! of a CLI flag.
+//!
+//! The question the adaptive policy answers is the one arXiv:0806.3121
+//! poses for ABFT generally: given a world size, a panel plan, and a
+//! measured per-rank failure rate, how much coded redundancy does this
+//! run actually need?  PR 5's ladder made `c` a knob; this module makes
+//! it a *derived quantity*:
+//!
+//! 1. Each CAQR stage (panel factor, trailing update) has a virtual
+//!    duration from the simulator's [`CostModel`] — the same costs the
+//!    `sim::` replay charges, so the model and its validator agree on
+//!    the time axis.
+//! 2. Deaths are Poisson: a stage of `t` seconds on `P` ranks at rate
+//!    `λ_r` deaths/rank/second sees `f ~ Poisson(P·λ_r·t)` failures.
+//! 3. A stage survives `f` failures under `c` checksums with
+//!    probability [`closed_form::survival_with_checksums`] — at most
+//!    `c` replica pairs fully wiped.
+//! 4. Self-healing respawns at stage boundaries, so run survival is
+//!    the *product* of independent per-stage survivals.
+//!
+//! [`AdaptivePolicy::choose`] then returns the smallest `c` whose
+//! predicted run survival clears the target (default 99.9%):
+//! replication-only when `c = 0` already suffices, `Hybrid` with the
+//! derived `c` otherwise.  `tests/` pin the choice against an
+//! independently-coded brute-force search over the same closed form,
+//! and validate it empirically with `sim::` replay at 10⁵ ranks.
+//!
+//! Wired into the stack as [`crate::caqr::CaqrSpec::with_failure_model`]
+//! and [`crate::engine::EngineBuilder::adaptive_policy`]; setting an
+//! explicit `with_checksums(c)` alongside a failure model is a typed
+//! [`crate::error::Error::KnobConflict`].
+//!
+//! [`CostModel`]: crate::sim::CostModel
+
+use crate::abft::RecoveryPolicy;
+use crate::analysis::closed_form;
+use crate::sim::CostModel;
+
+/// What the adaptive policy decided for one `(procs, panels)` plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolicyChoice {
+    /// The ladder to run (`Replica` when replication alone clears the
+    /// target, `Hybrid` when checksums are needed).
+    pub policy: RecoveryPolicy,
+    /// Checksum blocks per stage (0 iff `policy` is `Replica`).
+    pub checksums: usize,
+    /// The closed-form run-survival probability of that choice.
+    pub predicted_survival: f64,
+}
+
+/// A failure-rate model plus a survival target: the inputs from which
+/// the recovery policy is *derived* rather than configured.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptivePolicy {
+    /// Deaths per rank per virtual second (the same unit as
+    /// `churn.fail-rate` in scenario files).
+    pub rate: f64,
+    /// Run-survival probability the chosen policy must clear.
+    pub target: f64,
+    /// Virtual stage costs (defaults to the simulator's defaults, so
+    /// predictions and `sim::` replay share a clock).
+    pub costs: CostModel,
+}
+
+impl AdaptivePolicy {
+    /// Default target: three nines of run survival.
+    pub const DEFAULT_TARGET: f64 = 0.999;
+
+    /// A policy for `rate` deaths/rank/second with the default target
+    /// and cost model.
+    pub fn new(rate: f64) -> Self {
+        Self { rate, target: Self::DEFAULT_TARGET, costs: CostModel::default() }
+    }
+
+    /// Override the survival target (must be a probability in (0, 1)).
+    pub fn with_target(mut self, target: f64) -> Self {
+        assert!(
+            target > 0.0 && target < 1.0,
+            "survival target must be in (0, 1), got {target}"
+        );
+        self.target = target;
+        self
+    }
+
+    /// Override the virtual stage costs.
+    pub fn with_costs(mut self, costs: CostModel) -> Self {
+        self.costs = costs;
+        self
+    }
+
+    /// Per-stage Poisson means for a `(procs, panels)` CAQR walk: one
+    /// factor stage per panel plus one update stage per panel with
+    /// trailing blocks, each `procs · rate · stage_seconds`.  Update
+    /// stages charge `update_ns` per pool slot exactly like the
+    /// simulator: `2·(panels−1−k)` replicated tasks over `procs` slots.
+    fn stage_lambdas(&self, procs: usize, panels: usize) -> Vec<f64> {
+        let per_ns = procs as f64 * self.rate * 1e-9;
+        let mut lambdas = Vec::with_capacity(2 * panels);
+        for k in 0..panels {
+            lambdas.push(per_ns * self.costs.factor_ns as f64);
+            let tasks = 2 * (panels - 1 - k);
+            if tasks > 0 {
+                let slots = tasks.div_ceil(procs) as u64;
+                lambdas.push(per_ns * (self.costs.update_ns * slots) as f64);
+            }
+        }
+        lambdas
+    }
+
+    /// Closed-form probability that the whole `(procs, panels)` run
+    /// survives under `c` checksum blocks: the product over stages of
+    /// the Poisson-mixed [`closed_form::survival_with_checksums`].
+    pub fn predicted_survival(&self, procs: usize, panels: usize, c: usize) -> f64 {
+        if procs < 2 || self.rate <= 0.0 {
+            return 1.0;
+        }
+        self.stage_lambdas(procs, panels)
+            .into_iter()
+            .map(|lambda| stage_survival(procs, lambda, c))
+            .product()
+    }
+
+    /// Pick the cheapest ladder clearing the target: `Replica` if
+    /// replication alone does, else `Hybrid` with the smallest
+    /// sufficient `c` (capped at `procs/2`, the most distinct holder
+    /// pairs a stage can seat).  The search stops early once extra
+    /// checksums stop buying survival — at that point the residual risk
+    /// is whole-world annihilation, which no `c` fixes.
+    pub fn choose(&self, procs: usize, panels: usize) -> PolicyChoice {
+        if procs < 2 || self.rate <= 0.0 {
+            return PolicyChoice {
+                policy: RecoveryPolicy::Replica,
+                checksums: 0,
+                predicted_survival: 1.0,
+            };
+        }
+        let replication = self.predicted_survival(procs, panels, 0);
+        if replication >= self.target {
+            return PolicyChoice {
+                policy: RecoveryPolicy::Replica,
+                checksums: 0,
+                predicted_survival: replication,
+            };
+        }
+        let cap = procs / 2;
+        let mut best = (1, replication);
+        for c in 1..=cap {
+            let s = self.predicted_survival(procs, panels, c);
+            if s >= self.target {
+                return PolicyChoice {
+                    policy: RecoveryPolicy::Hybrid,
+                    checksums: c,
+                    predicted_survival: s,
+                };
+            }
+            if s - best.1 < 1e-12 && c > 1 {
+                break; // saturated below target: more coding buys nothing
+            }
+            best = (c, s);
+        }
+        PolicyChoice {
+            policy: RecoveryPolicy::Hybrid,
+            checksums: best.0,
+            predicted_survival: best.1,
+        }
+    }
+}
+
+/// P(one stage survives | deaths ~ Poisson(λ), `c` checksum blocks):
+/// Σ_f pmf(f; λ) · survival_with_checksums(procs, f, c), with the pmf
+/// walked in log space (λ can be in the hundreds at 10⁵ ranks, where
+/// `e^{−λ}` underflows) and the tail beyond 12 nines of mass charged
+/// at its first term's survival — a pessimistic cut, since survival is
+/// non-increasing in `f`.
+fn stage_survival(procs: usize, lambda: f64, c: usize) -> f64 {
+    if lambda <= 0.0 {
+        return 1.0;
+    }
+    let ln_lambda = lambda.ln();
+    let mut ln_pmf = -lambda; // ln P(f = 0)
+    let mut acc = 0.0f64;
+    let mut mass = 0.0f64;
+    let mut f = 0usize;
+    loop {
+        let p = ln_pmf.exp();
+        acc += p * closed_form::survival_with_checksums(procs, f, c);
+        mass += p;
+        // Past the mode the pmf only shrinks; stop once the tail is
+        // negligible or every rank is already dead (survival constant
+        // beyond f = procs — the distribution clamps).
+        if (mass >= 1.0 - 1e-12 && f as f64 >= lambda) || f >= procs {
+            break;
+        }
+        f += 1;
+        ln_pmf += ln_lambda - (f as f64).ln();
+    }
+    let tail = (1.0 - mass).max(0.0);
+    (acc + tail * closed_form::survival_with_checksums(procs, f, c)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineBuilder;
+    use crate::sim::SimScenario;
+    use crate::tsqr::Algo;
+
+    /// Independent brute force over the same closed form: a plain
+    /// fixed-window Poisson sum (no log-space walk, no early exit) and
+    /// a linear scan for the smallest sufficient `c`.  Structurally
+    /// different from `choose()` on purpose — agreement pins both.
+    fn brute_force_optimum(procs: usize, panels: usize, rate: f64, target: f64) -> (usize, f64) {
+        let policy = AdaptivePolicy::new(rate); // only for stage_lambdas
+        let lambdas = policy.stage_lambdas(procs, panels);
+        let survival_at = |c: usize| -> f64 {
+            lambdas
+                .iter()
+                .map(|&lambda| {
+                    if lambda <= 0.0 {
+                        return 1.0;
+                    }
+                    let fmax = procs.min((lambda + 20.0 * lambda.sqrt()) as usize + 20);
+                    let mut s = 0.0;
+                    let mut mass = 0.0;
+                    for f in 0..=fmax {
+                        let ln_p = f as f64 * lambda.ln()
+                            - lambda
+                            - (1..=f).map(|i| (i as f64).ln()).sum::<f64>();
+                        let p = ln_p.exp();
+                        mass += p;
+                        s += p * closed_form::survival_with_checksums(procs, f, c);
+                    }
+                    s + (1.0 - mass).max(0.0)
+                        * closed_form::survival_with_checksums(procs, procs, c)
+                })
+                .product()
+        };
+        for c in 0..=procs / 2 {
+            let s = survival_at(c);
+            if s >= target {
+                return (c, s);
+            }
+        }
+        (procs / 2, survival_at(procs / 2))
+    }
+
+    #[test]
+    fn zero_or_negative_rate_keeps_plain_replication() {
+        for rate in [0.0, -1.0] {
+            let choice = AdaptivePolicy::new(rate).choose(64, 8);
+            assert_eq!(choice.policy, RecoveryPolicy::Replica);
+            assert_eq!(choice.checksums, 0);
+            assert_eq!(choice.predicted_survival, 1.0);
+        }
+    }
+
+    #[test]
+    fn tiny_rate_clears_target_without_checksums() {
+        // 1e-3 deaths/rank/s over a sub-millisecond virtual run: the
+        // expected death count is ~1e-4, replication is plenty.
+        let choice = AdaptivePolicy::new(1e-3).choose(16, 4);
+        assert_eq!(choice.policy, RecoveryPolicy::Replica);
+        assert_eq!(choice.checksums, 0);
+        assert!(choice.predicted_survival > 0.999, "{}", choice.predicted_survival);
+    }
+
+    #[test]
+    fn survival_is_monotone_in_c_and_rate() {
+        let procs = 64;
+        let panels = 6;
+        let policy = AdaptivePolicy::new(50.0);
+        let mut prev = 0.0;
+        for c in 0..=8 {
+            let s = policy.predicted_survival(procs, panels, c);
+            assert!(s >= prev - 1e-12, "c={c}: {s} < {prev}");
+            prev = s;
+        }
+        // And decreasing in rate at fixed c.
+        let lo = AdaptivePolicy::new(5.0).predicted_survival(procs, panels, 1);
+        let hi = AdaptivePolicy::new(500.0).predicted_survival(procs, panels, 1);
+        assert!(lo > hi, "{lo} vs {hi}");
+    }
+
+    /// The acceptance criterion: the adaptive choice matches the
+    /// closed-form-predicted optimum on ≥ 3 (P, rate) cells.  The
+    /// brute force is an independent implementation of the same model.
+    #[test]
+    fn chosen_c_matches_closed_form_optimum_on_cells() {
+        let cells: [(usize, f64); 4] =
+            [(16, 40.0), (64, 60.0), (256, 120.0), (1024, 200.0)];
+        let mut nontrivial = 0;
+        for (procs, rate) in cells {
+            let policy = AdaptivePolicy::new(rate);
+            let choice = policy.choose(procs, 8);
+            let (want_c, want_s) =
+                brute_force_optimum(procs, 8, rate, AdaptivePolicy::DEFAULT_TARGET);
+            assert_eq!(
+                choice.checksums, want_c,
+                "P={procs} rate={rate}: adaptive c={} vs brute-force c={want_c}",
+                choice.checksums
+            );
+            assert!(
+                (choice.predicted_survival - want_s).abs() < 1e-6,
+                "P={procs} rate={rate}: survival {} vs {want_s}",
+                choice.predicted_survival
+            );
+            if choice.checksums > 0 {
+                assert_eq!(choice.policy, RecoveryPolicy::Hybrid);
+                nontrivial += 1;
+            }
+        }
+        assert!(nontrivial >= 3, "want ≥3 cells where coding is actually needed");
+    }
+
+    #[test]
+    fn higher_rates_demand_more_checksums() {
+        let procs = 256;
+        let mut prev_c = 0;
+        for rate in [1.0, 50.0, 200.0, 800.0] {
+            let c = AdaptivePolicy::new(rate).choose(procs, 8).checksums;
+            assert!(c >= prev_c, "rate={rate}: c={c} < {prev_c}");
+            prev_c = c;
+        }
+        assert!(prev_c >= 1, "the steep end of the sweep must need coding");
+    }
+
+    /// `sim::` replay validation at 10⁵ ranks: at a rate where the
+    /// model says replication collapses, the adaptively-chosen Hybrid
+    /// ladder survives in the event-driven simulator too.  Tolerances
+    /// are generous — the analytic model bins deaths per stage while
+    /// the simulator fires them on a continuous clock.
+    #[test]
+    fn sim_replay_validates_choice_at_1e5_ranks() {
+        let procs = 100_000;
+        let panels = 3;
+        let rate = 60.0;
+        let policy = AdaptivePolicy::new(rate);
+        let choice = policy.choose(procs, panels);
+        assert_eq!(choice.policy, RecoveryPolicy::Hybrid, "this rate must need coding");
+        let replication = policy.predicted_survival(procs, panels, 0);
+        assert!(replication < 0.9, "cell must be past the replication knee: {replication}");
+        assert!(choice.predicted_survival >= AdaptivePolicy::DEFAULT_TARGET);
+
+        let engine = EngineBuilder::new().host_only().threads(2).build().unwrap();
+        let base = SimScenario {
+            name: "adaptive-validation".into(),
+            procs,
+            panels,
+            panel: 4,
+            algo: Algo::SelfHealing,
+            samples: 4,
+            seed: 1105,
+            ..SimScenario::default()
+        };
+        let mut coded = base.clone();
+        coded.policy = RecoveryPolicy::Hybrid;
+        coded.checksums = choice.checksums;
+        coded.churn.fail_rate = rate;
+        let mut plain = base;
+        plain.policy = RecoveryPolicy::Replica;
+        plain.churn.fail_rate = rate;
+
+        let coded_p = engine.simulate(&coded).unwrap().survival().probability();
+        let plain_p = engine.simulate(&plain).unwrap().survival().probability();
+        assert!(
+            coded_p >= plain_p,
+            "chosen ladder must not lose to replication: {coded_p} vs {plain_p}"
+        );
+        assert!(coded_p >= 0.5, "chosen ladder should mostly survive its own cell: {coded_p}");
+    }
+}

@@ -1,0 +1,322 @@
+//! The paper-level question (arXiv:0806.3121, ROADMAP open item 1):
+//! at which failure rate does coded ABFT beat plain replication beat
+//! checkpoint/restart?
+//!
+//! [`CheckpointVsRedundant`] races the three contenders over one
+//! `(procs, panels)` plan on **one virtual clock**:
+//!
+//! * **replication** — the `sim::` replay under
+//!   [`RecoveryPolicy::Replica`]: free redundancy, dies on the first
+//!   pair wipe;
+//! * **coded** — the `sim::` replay under [`RecoveryPolicy::Hybrid`]
+//!   with `c` picked by [`AdaptivePolicy`] for the cell's rate (floored
+//!   at 1 so the column is always actually coded);
+//! * **checkpoint** — [`CheckpointBaseline`], periodic R/reflector
+//!   snapshots with restart cost in
+//!   [`VirtualTimeBreakdown::recovery_ns`].
+//!
+//! A cell's winner is the contender with the highest survival, ties
+//! (usually everyone-survives at low rates) broken by total virtual
+//! time — which is where checkpointing loses fault-free (snapshot
+//! traffic) and replication wins (its redundancy costs nothing extra).
+//! The crossover table is what `repro compare` prints and the
+//! `checkpoint_vs_redundant` bench ships as `BENCH_compare.json`;
+//! [`CompareCell::engine_default`] maps the winner onto the recovery
+//! ladder the engine should default to (checkpointing is a baseline,
+//! not an execution path, so a checkpoint win falls back to the better
+//! redundant ladder).
+//!
+//! [`AdaptivePolicy`]: crate::analysis::AdaptivePolicy
+//! [`CheckpointBaseline`]: crate::checkpoint::CheckpointBaseline
+
+use crate::abft::RecoveryPolicy;
+use crate::analysis::adaptive::AdaptivePolicy;
+use crate::checkpoint::CheckpointBaseline;
+use crate::engine::Engine;
+use crate::error::Result;
+use crate::metrics::VirtualTimeBreakdown;
+use crate::sim::{CostModel, SimScenario};
+use crate::tsqr::Algo;
+
+/// The three fault-tolerance families under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Contender {
+    /// Pair replication only (the paper's redundancy-for-free).
+    Replication,
+    /// Replication + Vandermonde checksums, `c` from the failure model.
+    Coded,
+    /// Periodic neighbour checkpointing with rollback restart.
+    Checkpoint,
+}
+
+impl Contender {
+    /// Display name (tables and JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Contender::Replication => "replication",
+            Contender::Coded => "coded",
+            Contender::Checkpoint => "checkpoint",
+        }
+    }
+}
+
+/// One contender's result at one failure rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Outcome {
+    /// Fraction of samples that completed.
+    pub survival: f64,
+    /// Merged virtual time across samples.
+    pub time: VirtualTimeBreakdown,
+    /// Checksum blocks armed (0 for replication and checkpoint).
+    pub checksums: usize,
+}
+
+/// One row of the crossover table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompareCell {
+    /// Deaths per rank per virtual second.
+    pub rate: f64,
+    /// Replication-only ladder.
+    pub replication: Outcome,
+    /// Adaptive coded ladder.
+    pub coded: Outcome,
+    /// Checkpoint/restart baseline.
+    pub checkpoint: Outcome,
+    /// Best contender at this rate.
+    pub winner: Contender,
+}
+
+impl CompareCell {
+    /// The recovery ladder the engine should default to given this
+    /// cell's winner.  Checkpointing is a comparator baseline, not an
+    /// engine execution path, so a checkpoint win defers to whichever
+    /// redundant ladder did better.
+    pub fn engine_default(&self) -> RecoveryPolicy {
+        match self.winner {
+            Contender::Replication => RecoveryPolicy::Replica,
+            Contender::Coded => RecoveryPolicy::Hybrid,
+            Contender::Checkpoint => {
+                if better(&self.coded, &self.replication) {
+                    RecoveryPolicy::Hybrid
+                } else {
+                    RecoveryPolicy::Replica
+                }
+            }
+        }
+    }
+}
+
+/// `a` beats `b`: higher survival, ties broken by less virtual time.
+fn better(a: &Outcome, b: &Outcome) -> bool {
+    if (a.survival - b.survival).abs() > 1e-9 {
+        return a.survival > b.survival;
+    }
+    a.time.total_ns() < b.time.total_ns()
+}
+
+/// The comparator: three contenders, one plan, one clock.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckpointVsRedundant<'e> {
+    engine: &'e Engine,
+    /// World size (even, as the replica pairing requires).
+    pub procs: usize,
+    /// Panels in the plan.
+    pub panels: usize,
+    /// Block-column width.
+    pub panel: usize,
+    /// Monte-Carlo samples per contender per cell.
+    pub samples: u64,
+    /// Base seed (shared by all three contenders for fairness).
+    pub seed: u64,
+    /// Checkpoint interval in panels.
+    pub interval: usize,
+    /// Virtual stage costs, shared across contenders.
+    pub costs: CostModel,
+}
+
+impl<'e> CheckpointVsRedundant<'e> {
+    /// A comparator over `(procs, panels)` with simulator-default
+    /// costs, 32 samples per cell, checkpointing every panel.
+    pub fn new(engine: &'e Engine, procs: usize, panels: usize) -> Self {
+        Self {
+            engine,
+            procs,
+            panels,
+            panel: 8,
+            samples: 32,
+            seed: 0xc0de,
+            interval: 1,
+            costs: CostModel::default(),
+        }
+    }
+
+    /// Block-column width.
+    pub fn with_panel(mut self, panel: usize) -> Self {
+        self.panel = panel;
+        self
+    }
+
+    /// Samples per contender per cell.
+    pub fn with_samples(mut self, samples: u64) -> Self {
+        self.samples = samples;
+        self
+    }
+
+    /// Base seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Checkpoint interval in panels.
+    pub fn with_interval(mut self, interval: usize) -> Self {
+        self.interval = interval;
+        self
+    }
+
+    /// Virtual stage costs.
+    pub fn with_costs(mut self, costs: CostModel) -> Self {
+        self.costs = costs;
+        self
+    }
+
+    /// The scenario both redundant contenders replay, minus the ladder.
+    fn scenario(&self, rate: f64) -> SimScenario {
+        let mut sc = SimScenario {
+            name: "compare".into(),
+            procs: self.procs,
+            panels: self.panels,
+            panel: self.panel,
+            algo: Algo::SelfHealing,
+            samples: self.samples,
+            seed: self.seed,
+            costs: self.costs,
+            ..SimScenario::default()
+        };
+        sc.churn.fail_rate = rate;
+        sc
+    }
+
+    fn redundant_outcome(&self, rate: f64, policy: RecoveryPolicy, c: usize) -> Result<Outcome> {
+        let mut sc = self.scenario(rate);
+        sc.policy = policy;
+        sc.checksums = c;
+        let report = self.engine.simulate(&sc)?;
+        Ok(Outcome {
+            survival: report.survival().probability(),
+            time: report.time(),
+            checksums: sc.armed_checksums(),
+        })
+    }
+
+    /// Race the three contenders at one failure rate.
+    pub fn cell(&self, rate: f64) -> Result<CompareCell> {
+        let replication = self.redundant_outcome(rate, RecoveryPolicy::Replica, 0)?;
+
+        // The coded column is always genuinely coded: the adaptive
+        // policy picks c for the cell, floored at 1 (when it says
+        // "replication suffices" the replication column already shows
+        // that outcome).
+        let choice = AdaptivePolicy::new(rate).with_costs(self.costs).choose(self.procs, self.panels);
+        let c = choice.checksums.clamp(1, self.procs / 2);
+        let coded = self.redundant_outcome(rate, RecoveryPolicy::Hybrid, c)?;
+
+        let ckpt = CheckpointBaseline::new(self.procs, self.panels)
+            .with_rate(rate)
+            .with_interval(self.interval)
+            .with_costs(self.costs)
+            .with_seed(self.seed)
+            .campaign(self.samples);
+        let checkpoint =
+            Outcome { survival: ckpt.survival(), time: ckpt.time, checksums: 0 };
+
+        let mut winner = Contender::Replication;
+        let mut best = replication;
+        if better(&coded, &best) {
+            winner = Contender::Coded;
+            best = coded;
+        }
+        if better(&checkpoint, &best) {
+            winner = Contender::Checkpoint;
+        }
+        Ok(CompareCell { rate, replication, coded, checkpoint, winner })
+    }
+
+    /// The crossover table: one cell per rate.
+    pub fn table(&self, rates: &[f64]) -> Result<Vec<CompareCell>> {
+        rates.iter().map(|&r| self.cell(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineBuilder;
+
+    fn engine() -> Engine {
+        EngineBuilder::new().host_only().threads(2).build().unwrap()
+    }
+
+    #[test]
+    fn fault_free_cell_everyone_survives_and_replication_wins_on_time() {
+        let engine = engine();
+        let cmp = CheckpointVsRedundant::new(&engine, 64, 4).with_samples(4);
+        let cell = cmp.cell(0.0).unwrap();
+        assert_eq!(cell.replication.survival, 1.0);
+        assert_eq!(cell.coded.survival, 1.0);
+        assert_eq!(cell.checkpoint.survival, 1.0);
+        // Checkpointing pays snapshot traffic even fault-free; the
+        // redundant families pay nothing extra on the network axis.
+        assert!(cell.checkpoint.time.network_ns > 0);
+        // All survive, so time decides — and replication is never
+        // slower than its own superset ladder plus checksum work.
+        assert_eq!(cell.winner, Contender::Replication);
+        assert_eq!(cell.engine_default(), RecoveryPolicy::Replica);
+        // The coded column is genuinely coded even when the adaptive
+        // policy would have said "replication suffices".
+        assert!(cell.coded.checksums >= 1);
+    }
+
+    #[test]
+    fn high_churn_cell_crosses_over_to_coded() {
+        let engine = engine();
+        // A rate chosen past the replication knee at this world size
+        // (the adaptive-policy tests pin the knee's location).
+        let cmp = CheckpointVsRedundant::new(&engine, 1024, 4).with_samples(8);
+        let lo = cmp.cell(0.5).unwrap();
+        let hi = cmp.cell(400.0).unwrap();
+        assert!(
+            hi.coded.survival >= hi.replication.survival,
+            "coded must not lose survival to replication: {} vs {}",
+            hi.coded.survival,
+            hi.replication.survival
+        );
+        assert!(hi.coded.checksums >= lo.coded.checksums, "steeper cell, at least as much coding");
+        // The table orders by rate and keeps each cell's rate.
+        let table = cmp.table(&[0.5, 400.0]).unwrap();
+        assert_eq!(table.len(), 2);
+        assert_eq!(table[0].rate, 0.5);
+        assert_eq!(table[1].rate, 400.0);
+    }
+
+    #[test]
+    fn winner_maps_onto_an_engine_recovery_policy() {
+        let time = VirtualTimeBreakdown::default();
+        let o = |survival, total| Outcome {
+            survival,
+            time: VirtualTimeBreakdown { compute_ns: total, ..time },
+            checksums: 0,
+        };
+        // Checkpoint winner defers to the better redundant ladder.
+        let cell = CompareCell {
+            rate: 1.0,
+            replication: o(0.5, 100),
+            coded: o(0.9, 120),
+            checkpoint: o(1.0, 200),
+            winner: Contender::Checkpoint,
+        };
+        assert_eq!(cell.engine_default(), RecoveryPolicy::Hybrid);
+        let cell2 = CompareCell { replication: o(0.9, 80), coded: o(0.9, 120), ..cell };
+        assert_eq!(cell2.engine_default(), RecoveryPolicy::Replica, "tie broken by time");
+    }
+}

@@ -107,6 +107,57 @@ pub fn applicable(procs: usize, s: u32) -> bool {
     procs.is_power_of_two() && s < TreePlan::new(procs).rounds()
 }
 
+/// P(exactly `j` replica pairs fully wiped | exactly `f` uniform
+/// failures without replacement) on an even world of `procs` ranks
+/// paired `(2g, 2g+1)` — the CAQR ladder's group structure.  Returned
+/// as the full distribution over `j = 0..=min(procs/2, f/2)`.
+///
+/// Unlike the inclusion–exclusion of [`survival_exact_f_at_round`]
+/// this is a direct count (pairs have only two members, so "exactly
+/// `j` wiped" factors cleanly): choose the `j` dead pairs, then spread
+/// the remaining `f − 2j` failures one-per-pair over the other
+/// `G − j` pairs with a side choice each —
+///
+/// ```text
+/// P(j) = C(G,j) · C(G−j, f−2j) · 2^(f−2j) / C(2G, f),   G = procs/2
+/// ```
+///
+/// Needs only an *even* world (not power-of-two): this is the pair
+/// structure of `PanelPlan`, not the TSQR tree.  `f` is clamped to
+/// `procs` (more failures than ranks kills everyone).
+pub fn pair_wipe_distribution(procs: usize, f: usize) -> Vec<f64> {
+    assert!(procs >= 2 && procs % 2 == 0, "pair structure needs an even world");
+    let g = (procs / 2) as u64;
+    let f = f.min(procs) as u64;
+    let denom = ln_choose(2 * g, f);
+    let jmax = std::cmp::min(g, f / 2);
+    let mut dist = Vec::with_capacity(jmax as usize + 1);
+    for j in 0..=jmax {
+        let singles = f - 2 * j;
+        let p = if singles > g - j {
+            0.0 // not enough surviving pairs to absorb one failure each
+        } else {
+            (ln_choose(g, j)
+                + ln_choose(g - j, singles)
+                + singles as f64 * std::f64::consts::LN_2
+                - denom)
+                .exp()
+        };
+        dist.push(p);
+    }
+    dist
+}
+
+/// P(a CAQR stage survives `f` simultaneous uniform failures under the
+/// Hybrid ladder with `c` checksum blocks): survival iff at most `c`
+/// replica pairs are fully wiped.  `c = 0` is the replication-only
+/// ladder and agrees with [`survival_exact_f_at_round`]`(procs, 1, f)`
+/// on power-of-two worlds (the tests pin the two derivations against
+/// each other).
+pub fn survival_with_checksums(procs: usize, f: usize, c: usize) -> f64 {
+    pair_wipe_distribution(procs, f).iter().take(c + 1).sum::<f64>().clamp(0.0, 1.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +242,72 @@ mod tests {
         assert!(applicable(16, 3));
         assert!(!applicable(12, 1));
         assert!(!applicable(16, 4));
+    }
+
+    #[test]
+    fn pair_wipe_distribution_sums_to_one() {
+        for (procs, f) in [(8usize, 0usize), (8, 3), (8, 5), (16, 7), (6, 4), (100, 13)] {
+            let d = pair_wipe_distribution(procs, f);
+            let total: f64 = d.iter().sum();
+            assert!((total - 1.0).abs() < 1e-10, "P={procs} f={f}: Σ={total}");
+            assert!(d.iter().all(|&p| (0.0..=1.0 + 1e-12).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn pair_wipe_zero_failures_wipes_nothing() {
+        let d = pair_wipe_distribution(8, 0);
+        assert_eq!(d.len(), 1);
+        assert!((d[0] - 1.0).abs() < 1e-12);
+        // One failure can never complete a pair either.
+        assert!((pair_wipe_distribution(8, 1)[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pair_wipe_exact_small_case() {
+        // P=4 (pairs {0,1},{2,3}), f=2: of C(4,2)=6 kill sets, exactly
+        // 2 complete a pair.
+        let d = pair_wipe_distribution(4, 2);
+        assert!((d[0] - 4.0 / 6.0).abs() < 1e-12, "{d:?}");
+        assert!((d[1] - 2.0 / 6.0).abs() < 1e-12, "{d:?}");
+        // f = procs kills every pair with certainty.
+        let all = pair_wipe_distribution(4, 4);
+        assert!((all[2] - 1.0).abs() < 1e-12);
+        // f beyond procs clamps to "everyone dead".
+        let over = pair_wipe_distribution(4, 9);
+        assert!((over[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn survival_with_zero_checksums_matches_inclusion_exclusion() {
+        // Two independent derivations of replication-only survival:
+        // the pairs are exactly the level-1 groups of the round formula.
+        for procs in [8usize, 16, 32] {
+            for f in 0..=procs {
+                let direct = survival_with_checksums(procs, f, 0);
+                let incl_excl = survival_exact_f_at_round(procs, 1, f);
+                assert!(
+                    (direct - incl_excl).abs() < 1e-9,
+                    "P={procs} f={f}: {direct} vs {incl_excl}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn checksums_lift_survival_monotonically() {
+        let procs = 16;
+        let f = 6;
+        let mut prev = 0.0;
+        for c in 0..=procs / 2 {
+            let s = survival_with_checksums(procs, f, c);
+            assert!(s >= prev - 1e-12, "c={c}: {s} < {prev}");
+            prev = s;
+        }
+        // Enough checksums to cover every possible wipe: certainty.
+        assert!((survival_with_checksums(procs, f, f / 2) - 1.0).abs() < 1e-10);
+        // The bound is tight: c covers exactly c wipes, not c+1.
+        assert!(survival_with_checksums(4, 4, 1) < 1.0);
+        assert!((survival_with_checksums(4, 4, 2) - 1.0).abs() < 1e-12);
     }
 }

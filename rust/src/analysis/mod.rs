@@ -2,6 +2,8 @@
 //! (§III-B3, §III-C3, §III-D3) plus the combinatorial machinery the
 //! validation benches use to check them empirically.
 
+pub mod adaptive;
+pub mod checkpoint_vs_redundant;
 pub mod closed_form;
 pub mod coded;
 pub mod fullsim;
@@ -9,6 +11,8 @@ pub mod robustness;
 pub mod simsweep;
 pub mod survival;
 
+pub use adaptive::{AdaptivePolicy, PolicyChoice};
+pub use checkpoint_vs_redundant::{CheckpointVsRedundant, CompareCell, Contender};
 pub use closed_form::{survival_curve, survival_exact_f_at_round};
 pub use coded::{CodedRow, CodedSweep};
 pub use fullsim::{CaqrSweep, FullSimSweep};

@@ -94,7 +94,7 @@ use crate::abft::{Encoder, RecoveryPolicy};
 use crate::engine::{TaskGroup, WorkerPool};
 use crate::error::Result;
 use crate::fault::CaqrStage;
-use crate::linalg::view::{apply_update_f64, factor_panel_f64};
+use crate::linalg::view::{apply_q_f64, apply_update_f64, factor_panel_f64};
 use crate::linalg::wy::{self, WyFactor};
 use crate::linalg::{Matrix, PackedQr};
 use crate::runtime::KernelProfile;
@@ -171,6 +171,20 @@ struct FactorRebuild {
     exec_rank: usize,
 }
 
+/// One post-factorization Q phase (assembly or apply), pre-decided by
+/// the timeline exactly like the panel stages.
+struct QPhase {
+    /// Which Q stage this is ([`CaqrStage::QAssembly`] or
+    /// [`CaqrStage::ApplyQ`]).
+    stage: CaqrStage,
+    /// Liveness at the phase's task spawn (its kills fired).
+    alive: Vec<bool>,
+    /// Column shards that lost every replica (checksum rung).
+    lost: Vec<usize>,
+    /// Ranks respawned at the phase boundary (Self-Healing).
+    respawns: u64,
+}
+
 /// Pre-simulated liveness *and ladder decisions*: who is alive at every
 /// stage of every panel, which stages take the checksum rung, where
 /// the run fails.  Computing this up front is what lets the lookahead
@@ -198,6 +212,9 @@ struct Timeline {
     failed_at: Option<(usize, CaqrStage)>,
     /// Liveness at the end of the run (at failure or completion).
     final_alive: Vec<bool>,
+    /// Post-factorization Q phases in execution order — empty unless
+    /// the schedule strikes a Q stage or the spec arms Q protection.
+    q_phases: Vec<QPhase>,
 }
 
 /// Walk the kill schedule through the panel sequence exactly as the
@@ -224,6 +241,7 @@ fn simulate_timeline(
         died_at: Vec::new(),
         failed_at: None,
         final_alive: Vec::new(),
+        q_phases: Vec::new(),
     };
     let groups = holder_groups(procs, policy);
     let use_checksums = policy.uses_checksums() && c > 0;
@@ -300,6 +318,49 @@ fn simulate_timeline(
             }
         }
         tl.respawns.push(respawns);
+    }
+    // The post-factorization Q phases, armed only when the schedule
+    // strikes one or the spec asks for Q protection — un-armed runs
+    // (everything the parity suite pins) walk the identical timeline
+    // as before.
+    let q_armed = spec.protect_q || spec.schedule.has_q_stage();
+    if q_armed && tl.failed_at.is_none() {
+        let panels = plan.panels();
+        for (idx, stage) in [CaqrStage::QAssembly, CaqrStage::ApplyQ].into_iter().enumerate() {
+            let pk = panels + idx;
+            for r in 0..procs {
+                if alive[r] && spec.schedule.fire_stage(r, stage) {
+                    alive[r] = false;
+                    died_at[r] = Some(panels);
+                }
+            }
+            let alive_phase = alive.clone();
+            let lost: Vec<usize> = (0..panels)
+                .filter(|&j| {
+                    !update_task_ranks(plan, pk, j, policy).into_iter().any(|r| alive[r])
+                })
+                .collect();
+            if !lost.is_empty() {
+                let feasible =
+                    use_checksums && lost.len() <= live_checksums(plan, pk, c, &alive).len();
+                if !feasible {
+                    tl.failed_at = Some((panels, stage));
+                    tl.q_phases.push(QPhase { stage, alive: alive_phase, lost, respawns: 0 });
+                    break;
+                }
+            }
+            let mut respawns = 0u64;
+            if spec.algo == Algo::SelfHealing {
+                for r in 0..procs {
+                    if !alive[r] {
+                        alive[r] = true;
+                        died_at[r] = None;
+                        respawns += 1;
+                    }
+                }
+            }
+            tl.q_phases.push(QPhase { stage, alive: alive_phase, lost, respawns });
+        }
     }
     tl.died_at = died_at;
     tl.final_alive = alive;
@@ -418,9 +479,10 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
     spec.validate()?;
     let plan = spec.plan();
     let profile = spec.profile.unwrap_or_default();
-    let policy = spec.policy.unwrap_or_default();
     let parallelism = spec.parallelism.unwrap_or_default();
-    let checksums = if policy.uses_checksums() { spec.checksums } else { 0 };
+    // One resolution point for the protection knobs: an explicit
+    // policy/checksum pair, or the failure-model-adaptive choice.
+    let (policy, checksums) = spec.resolved_protection();
     let (m, n) = (spec.m, spec.n);
     let a = spec.input_matrix();
     let started = Instant::now();
@@ -776,6 +838,192 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
     // in flight.
     debug_assert!(pending.is_none(), "lookahead factor stage left unconsumed");
 
+    // ------------------------------------------ post-factorization Q
+    // The coded Q phases (assembly of the explicit thin Q, then Qᵀ·A),
+    // armed only when the schedule strikes them or the spec asks for Q
+    // protection.  Both phases run the same task shape as the update
+    // stage: one column shard per panel, replicated across the owner
+    // pair, with `c` checksum tasks riding along on the Vandermonde
+    // combinations of the input shards — the reflector chain is linear,
+    // so a checksum's output IS the combination of the shard outputs,
+    // and a pair wipe is solved back out through the encoder.
+    let mut q_out: Option<Vec<f64>> = None;
+    let mut qt_out: Option<Vec<f64>> = None;
+    if !tl.q_phases.is_empty() && failed_at.is_none() {
+        let panels_n = plan.panels();
+        // Per-panel packed reflectors + tau, extracted once from the
+        // factored state and shared (f64, bit-exact) across all tasks.
+        let mut panel_refl: Vec<Arc<(Vec<f64>, Vec<f64>)>> = Vec::with_capacity(panels_n);
+        for k in 0..panels_n {
+            let (c0, c1) = plan.col_range(k);
+            let (rows_k, cols_k) = (m - c0, c1 - c0);
+            let mut pan = vec![0.0f64; rows_k * cols_k];
+            for i in 0..rows_k {
+                for j in 0..cols_k {
+                    pan[i * cols_k + j] = w[(c0 + i) * n + (c0 + j)];
+                }
+            }
+            panel_refl.push(Arc::new((pan, tau[c0..c1].to_vec())));
+        }
+        let a64: Arc<Vec<f64>> =
+            Arc::new(a.data().iter().map(|&x| x as f64).collect::<Vec<f64>>());
+        let col_meta: Vec<(usize, usize)> = (0..panels_n).map(|j| plan.col_range(j)).collect();
+        let widths: Vec<usize> = col_meta.iter().map(|&(s, e)| e - s).collect();
+        let pad = widths.iter().copied().max().unwrap_or(0);
+
+        for ph in &tl.q_phases {
+            if tl.failed_at == Some((panels_n, ph.stage)) {
+                failed_at = tl.failed_at;
+                break;
+            }
+            let pk = panels_n + usize::from(ph.stage == CaqrStage::ApplyQ);
+            let alive_q = &ph.alive;
+            // Input shards: identity column panels (assembly) or the
+            // original input's column panels (apply).
+            let mut shards: Vec<Arc<Vec<f64>>> = Vec::with_capacity(panels_n);
+            for (j, &(s0, _)) in col_meta.iter().enumerate() {
+                let wj = widths[j];
+                let mut buf = vec![0.0f64; m * wj];
+                if ph.stage == CaqrStage::QAssembly {
+                    for c in 0..wj {
+                        buf[(s0 + c) * wj + c] = 1.0;
+                    }
+                } else {
+                    for i in 0..m {
+                        buf[i * wj..i * wj + wj]
+                            .copy_from_slice(&a64[i * n + s0..i * n + s0 + wj]);
+                    }
+                }
+                shards.push(Arc::new(buf));
+            }
+            let results: Arc<Mutex<UpdateMap>> = Arc::new(Mutex::new(BTreeMap::new()));
+            let chk_results: Arc<Mutex<ChecksumMap>> = Arc::new(Mutex::new(BTreeMap::new()));
+            let group = TaskGroup::new(pool.clone());
+            let mut spawned = 0u64;
+            let spawn_chain = |rank: usize,
+                               key_is_checksum: Option<usize>,
+                               j: usize,
+                               shard: Arc<Vec<f64>>,
+                               wj: usize| {
+                let refl = panel_refl.clone();
+                let meta = col_meta.clone();
+                let out = Arc::clone(&results);
+                let cout = Arc::clone(&chk_results);
+                let stage = ph.stage;
+                group.spawn(move || {
+                    let mut buf = (*shard).clone();
+                    if stage == CaqrStage::QAssembly {
+                        // Q·E = H_0·…·H_{p−1}·E: rightmost panel first.
+                        for (k, r) in refl.iter().enumerate().rev() {
+                            let (pan, pt) = &**r;
+                            let c0 = meta[k].0;
+                            apply_q_f64(pan, m - c0, pt.len(), pt, &mut buf[c0 * wj..], wj);
+                        }
+                    } else {
+                        // Qᵀ·A = H_{p−1}·…·H_0·A: panel 0 first.
+                        for (k, r) in refl.iter().enumerate() {
+                            let (pan, pt) = &**r;
+                            let c0 = meta[k].0;
+                            apply_update_f64(pan, m - c0, pt.len(), pt, &mut buf[c0 * wj..], wj);
+                        }
+                    }
+                    match key_is_checksum {
+                        Some(l) => cout.lock().unwrap().insert((l, rank), buf),
+                        None => out.lock().unwrap().insert((j, rank), buf),
+                    };
+                });
+            };
+            let assignee_sets: Vec<Vec<usize>> = (0..panels_n)
+                .map(|j| {
+                    update_task_ranks(&plan, pk, j, policy)
+                        .into_iter()
+                        .filter(|&r| alive_q[r])
+                        .collect()
+                })
+                .collect();
+            for (j, asg) in assignee_sets.iter().enumerate() {
+                for &rank in asg {
+                    spawned += 1;
+                    spawn_chain(rank, None, j, Arc::clone(&shards[j]), widths[j]);
+                }
+            }
+            if checksums > 0 {
+                let srefs: Vec<&[f64]> = shards.iter().map(|s| s.as_slice()).collect();
+                let csnaps = encoder.encode(m, &widths, &srefs, pad);
+                for (l, csnap) in csnaps.into_iter().enumerate() {
+                    let csnap = Arc::new(csnap);
+                    for rank in plan
+                        .checksum_assignees(pk, l)
+                        .into_iter()
+                        .filter(|&r| alive_q[r])
+                    {
+                        spawned += 1;
+                        spawn_chain(rank, Some(l), 0, Arc::clone(&csnap), pad);
+                    }
+                }
+            }
+            metrics.update_tasks += spawned;
+            group.wait_idle();
+
+            let mut recov = 0u64;
+            let mut outputs: Vec<Option<Vec<f64>>> = vec![None; panels_n];
+            {
+                let mut ur = results.lock().unwrap();
+                for (j, asg) in assignee_sets.iter().enumerate() {
+                    if ph.lost.contains(&j) {
+                        continue;
+                    }
+                    let owner = plan.update_owner(pk, j);
+                    let source = if asg.contains(&owner) {
+                        owner
+                    } else {
+                        // Owner died mid-phase: the replica's copy is
+                        // bit-identical (same shard, same chain).
+                        recov += 1;
+                        asg[0]
+                    };
+                    outputs[j] =
+                        Some(ur.remove(&(j, source)).expect("assigned q task deposited"));
+                }
+            }
+            if !ph.lost.is_empty() {
+                let cr = chk_results.lock().unwrap();
+                let avail = live_checksums(&plan, pk, checksums, alive_q);
+                let mut checks: Vec<(usize, &[f64])> = Vec::with_capacity(avail.len());
+                for &l in &avail {
+                    let rank = plan
+                        .checksum_assignees(pk, l)
+                        .into_iter()
+                        .find(|&r| alive_q[r])
+                        .expect("live_checksums guarantees a live holder");
+                    checks.push((l, cr.get(&(l, rank)).expect("holder deposited").as_slice()));
+                }
+                let opts: Vec<Option<&[f64]>> = outputs.iter().map(|o| o.as_deref()).collect();
+                let rebuilt = encoder.reconstruct(m, &widths, &opts, &checks, pad)?;
+                for (j, blk) in rebuilt {
+                    outputs[j] = Some(blk);
+                }
+                metrics.checksum_reconstructions += ph.lost.len() as u64;
+                metrics.pair_wipes_survived += 1;
+            }
+            metrics.update_recoveries += recov;
+            metrics.respawns += ph.respawns;
+            let mut full = vec![0.0f64; m * n];
+            for (j, &(s0, _)) in col_meta.iter().enumerate() {
+                let wj = widths[j];
+                let blk = outputs[j].as_ref().expect("every shard harvested or rebuilt");
+                for i in 0..m {
+                    full[i * n + s0..i * n + s0 + wj].copy_from_slice(&blk[i * wj..i * wj + wj]);
+                }
+            }
+            if ph.stage == CaqrStage::QAssembly {
+                q_out = Some(full);
+            } else {
+                qt_out = Some(full);
+            }
+        }
+    }
+
     let statuses: Vec<ProcStatus> = (0..spec.procs)
         .map(|r| {
             if tl.final_alive[r] {
@@ -802,6 +1050,14 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
     } else {
         (None, None, None)
     };
+    // The Q-phase outputs round through f32 exactly once, like the
+    // factors; a failed run yields neither.
+    let to_f32 = |v: Vec<f64>| Matrix::from_vec(m, n, v.iter().map(|&x| x as f32).collect());
+    let (q, qt_a) = if failed_at.is_none() {
+        (q_out.map(to_f32), qt_out.map(to_f32))
+    } else {
+        (None, None)
+    };
 
     Ok(CaqrResult {
         algo: spec.algo,
@@ -813,6 +1069,8 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
         failed_at,
         factors,
         final_r,
+        q,
+        qt_a,
         statuses,
         metrics,
         panel_survival,
@@ -991,6 +1249,159 @@ mod tests {
             assert_eq!(coded.metrics.checksum_reconstructions, 0);
             assert_eq!(coded.metrics.pair_wipes_survived, 0);
         }
+    }
+
+    #[test]
+    fn q_protection_assembles_a_valid_q_and_qt_a() {
+        let spec = CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4).with_q_protection(true);
+        let a = spec.input_matrix();
+        let res = run(spec);
+        assert!(res.success());
+        let q = res.q.as_ref().expect("armed run assembles Q");
+        let qt_a = res.qt_a.as_ref().expect("armed run applies Qᵀ");
+        let r = res.final_r.as_ref().unwrap();
+        assert_eq!(q.shape(), (24, 12));
+        assert_eq!(qt_a.shape(), (24, 12));
+        // Qᵀ·Q ≈ I (thin-Q orthonormality).
+        for i in 0..12 {
+            for j in 0..12 {
+                let mut dot = 0.0f64;
+                for k in 0..24 {
+                    dot += q[(k, i)] as f64 * q[(k, j)] as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "QᵀQ[{i},{j}] = {dot}");
+            }
+        }
+        // Q·R ≈ A.
+        for i in 0..24 {
+            for j in 0..12 {
+                let mut dot = 0.0f64;
+                for k in 0..12 {
+                    dot += q[(i, k)] as f64 * r[(k, j)] as f64;
+                }
+                assert!((dot - a[(i, j)] as f64).abs() < 1e-3, "QR[{i},{j}] far from A");
+            }
+        }
+        // The top block of Qᵀ·A reproduces R.
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!(
+                    (qt_a[(i, j)] - r[(i, j)]).abs() < 1e-3,
+                    "QᵀA[{i},{j}] far from R"
+                );
+            }
+        }
+        // An un-armed run pays for none of this.
+        let plain = run(CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4));
+        assert!(plain.q.is_none() && plain.qt_a.is_none());
+    }
+
+    #[test]
+    fn q_phase_single_strike_recovers_identical_bits() {
+        let clean = run(CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4).with_q_protection(true));
+        for stage in [CaqrStage::QAssembly, CaqrStage::ApplyQ] {
+            // A Q-stage kill arms the phases by itself; the dead
+            // owner's shard is harvested from its replica, bitwise.
+            let struck = run(
+                CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+                    .with_schedule(CaqrKillSchedule::at(&[(1, 0, stage)])),
+            );
+            assert!(struck.success(), "{stage:?}: replica must carry the strike");
+            assert_eq!(
+                struck.q.as_ref().unwrap().data(),
+                clean.q.as_ref().unwrap().data(),
+                "{stage:?}: recovered Q must be bit-identical"
+            );
+            assert_eq!(
+                struck.qt_a.as_ref().unwrap().data(),
+                clean.qt_a.as_ref().unwrap().data(),
+                "{stage:?}: recovered QᵀA must be bit-identical"
+            );
+            assert!(struck.metrics.update_recoveries > 0);
+            assert_eq!(struck.metrics.checksum_reconstructions, 0);
+        }
+    }
+
+    #[test]
+    fn q_phase_pair_wipe_survives_hybrid_c1_within_bound() {
+        // P=8, 3 panels: pair {6,7} owns exactly one assembly shard,
+        // pair {4,5} exactly one apply shard — a pair wipe costs one
+        // shard, reconstructed from the single armed checksum.
+        let clean = run(CaqrSpec::new(Algo::Redundant, 8, 24, 12, 4).with_q_protection(true));
+        let cases = [
+            (CaqrStage::QAssembly, [6usize, 7usize]),
+            (CaqrStage::ApplyQ, [4usize, 5usize]),
+        ];
+        for (stage, pair) in cases {
+            // Self-Healing respawns the wiped pair at the phase
+            // boundary, so each wipe costs exactly one shard.
+            let struck = run(
+                CaqrSpec::new(Algo::SelfHealing, 8, 24, 12, 4)
+                    .with_schedule(CaqrKillSchedule::at(&[
+                        (pair[0], 0, stage),
+                        (pair[1], 0, stage),
+                    ]))
+                    .with_policy(RecoveryPolicy::Hybrid)
+                    .with_checksums(1),
+            );
+            assert!(struck.success(), "{stage:?}: hybrid c=1 must ride the pair wipe");
+            assert!(struck.metrics.pair_wipes_survived >= 1);
+            assert!(struck.metrics.checksum_reconstructions >= 1);
+            assert_eq!(struck.metrics.respawns, 2, "{stage:?}: pair respawned at the boundary");
+            // Reconstruction round-trips the encoder: bounded, and at
+            // these sizes far inside the c·n·ε·‖A‖ envelope.
+            assert!(
+                struck.q.as_ref().unwrap().max_abs_diff(clean.q.as_ref().unwrap()) < 1e-3,
+                "{stage:?}: reconstructed Q must stay within the ABFT bound"
+            );
+            assert!(
+                struck
+                    .qt_a
+                    .as_ref()
+                    .unwrap()
+                    .max_abs_diff(clean.qt_a.as_ref().unwrap())
+                    < 1e-3,
+                "{stage:?}: reconstructed QᵀA must stay within the ABFT bound"
+            );
+        }
+    }
+
+    #[test]
+    fn q_phase_pair_wipe_aborts_without_the_checksum_rung() {
+        let res = run(
+            CaqrSpec::new(Algo::Redundant, 8, 24, 12, 4)
+                .with_schedule(CaqrKillSchedule::at(&[
+                    (6, 0, CaqrStage::QAssembly),
+                    (7, 0, CaqrStage::QAssembly),
+                ])),
+        );
+        assert!(!res.success(), "replication-only must abort on a Q-phase pair wipe");
+        assert_eq!(res.failed_at, Some((3, CaqrStage::QAssembly)));
+        assert!(res.q.is_none() && res.qt_a.is_none() && res.final_r.is_none());
+    }
+
+    #[test]
+    fn zero_failure_coded_q_phases_are_bitwise_bystanders() {
+        let plain = run(CaqrSpec::new(Algo::Redundant, 8, 24, 12, 4).with_q_protection(true));
+        let coded = run(
+            CaqrSpec::new(Algo::Redundant, 8, 24, 12, 4)
+                .with_q_protection(true)
+                .with_policy(RecoveryPolicy::Hybrid)
+                .with_checksums(2),
+        );
+        assert!(coded.success());
+        assert_eq!(
+            coded.q.as_ref().unwrap().data(),
+            plain.q.as_ref().unwrap().data(),
+            "checksum tasks must not perturb the assembled Q"
+        );
+        assert_eq!(
+            coded.qt_a.as_ref().unwrap().data(),
+            plain.qt_a.as_ref().unwrap().data(),
+            "checksum tasks must not perturb QᵀA"
+        );
+        assert_eq!(coded.metrics.checksum_reconstructions, 0);
     }
 
     #[test]

@@ -137,6 +137,18 @@ pub struct CaqrSpec {
     /// [`crate::linalg::gemm`]).  `None` inherits the engine's default
     /// ([`Parallelism::single`] for one-shot [`factorize`] runs).
     pub parallelism: Option<Parallelism>,
+    /// Failure-rate model (deaths per rank per virtual second).  When
+    /// set, the recovery ladder and checksum count are **derived** by
+    /// [`crate::analysis::AdaptivePolicy`] instead of configured —
+    /// setting this together with [`with_checksums`](Self::with_checksums)
+    /// is a typed [`Error::KnobConflict`].
+    pub failure_model: Option<f64>,
+    /// Run the protected Q phases after the panel walk: assemble the
+    /// explicit Q (replicated, checksum-encoded under Hybrid) and apply
+    /// `Qᵀ` to the input, so a strike — even a pair wipe — during
+    /// Q assembly or `apply_q` is recoverable.  Off by default: the
+    /// paper's R-only runs don't pay for phases they don't use.
+    pub protect_q: bool,
 }
 
 impl CaqrSpec {
@@ -155,6 +167,8 @@ impl CaqrSpec {
             policy: None,
             checksums: 0,
             parallelism: None,
+            failure_model: None,
+            protect_q: false,
         }
     }
 
@@ -204,6 +218,23 @@ impl CaqrSpec {
         self
     }
 
+    /// Derive the recovery ladder from a failure-rate model (deaths
+    /// per rank per virtual second) instead of configuring it: the
+    /// resolved policy and checksum count come from
+    /// [`crate::analysis::AdaptivePolicy`].  Conflicts with an
+    /// explicit [`with_checksums`](Self::with_checksums).
+    pub fn with_failure_model(mut self, rate: f64) -> Self {
+        self.failure_model = Some(rate);
+        self
+    }
+
+    /// Toggle the protected Q phases (Q assembly + `Qᵀ·A`) after the
+    /// panel walk.
+    pub fn with_q_protection(mut self, on: bool) -> Self {
+        self.protect_q = on;
+        self
+    }
+
     /// Validate shape and semantics.
     pub fn validate(&self) -> Result<()> {
         if self.procs == 0 {
@@ -227,6 +258,31 @@ impl CaqrSpec {
                  even (or 1), got {}",
                 self.procs
             )));
+        }
+        if let Some(rate) = self.failure_model {
+            if !rate.is_finite() || rate < 0.0 {
+                return Err(Error::Config(format!(
+                    "failure model rate must be finite and >= 0, got {rate}"
+                )));
+            }
+            if self.checksums > 0 {
+                // Both knobs own the checksum count; refusing loudly
+                // beats the old last-setter-wins silence.
+                return Err(Error::KnobConflict {
+                    knob: "with_failure_model",
+                    conflicting: "with_checksums",
+                    resolution: "the adaptive policy derives the checksum count from the \
+                                 failure rate; drop the explicit count (or the model)",
+                });
+            }
+            if self.policy.is_some() {
+                return Err(Error::KnobConflict {
+                    knob: "with_failure_model",
+                    conflicting: "with_policy",
+                    resolution: "the adaptive policy derives the recovery ladder from the \
+                                 failure rate; drop the explicit policy (or the model)",
+                });
+            }
         }
         if self.checksums > 0 {
             if self.procs < 2 {
@@ -283,6 +339,24 @@ impl CaqrSpec {
         PanelPlan::new(self.m, self.n, self.panel, self.procs)
     }
 
+    /// The recovery ladder this spec actually runs: the single
+    /// resolution point shared by the executor and the `sim::` replay
+    /// (so exec/sim parity holds by construction).
+    ///
+    /// With a failure model, [`crate::analysis::AdaptivePolicy`]
+    /// derives both the policy and the checksum count; otherwise the
+    /// explicit policy (default [`RecoveryPolicy::Replica`]) arms the
+    /// explicit count iff it uses checksums.
+    pub fn resolved_protection(&self) -> (RecoveryPolicy, usize) {
+        if let Some(rate) = self.failure_model {
+            let panels = self.n.div_ceil(self.panel);
+            let choice = crate::analysis::AdaptivePolicy::new(rate).choose(self.procs, panels);
+            return (choice.policy, choice.checksums);
+        }
+        let policy = self.policy.unwrap_or_default();
+        (policy, if policy.uses_checksums() { self.checksums } else { 0 })
+    }
+
     /// The input matrix (deterministic in the seed).
     pub fn input_matrix(&self) -> Matrix {
         Matrix::random(self.m, self.n, self.seed)
@@ -336,6 +410,14 @@ pub struct CaqrResult {
     /// The `n x n` R factor on success — **not** canonicalized, so it
     /// compares bit-for-bit against `householder_qr_reference(a).r()`.
     pub final_r: Option<Matrix>,
+    /// The explicit `m x n` Q, assembled by the protected Q-assembly
+    /// phase (only when the spec set
+    /// [`with_q_protection`](CaqrSpec::with_q_protection) and the run
+    /// succeeded).
+    pub q: Option<Matrix>,
+    /// `Qᵀ·A` from the protected apply-Q phase (same gating; equals R
+    /// up to the factorization's roundoff, which the tests bound).
+    pub qt_a: Option<Matrix>,
     /// Liveness at the end of the run (`Dead { at_round }` carries the
     /// panel index the rank died at).
     pub statuses: Vec<ProcStatus>,
@@ -513,6 +595,62 @@ mod tests {
         assert!(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4).with_checksums(2).validate().is_ok());
         assert!(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4).with_checksums(3).validate().is_err());
         assert!(CaqrSpec::new(Algo::Redundant, 1, 16, 8, 4).with_checksums(1).validate().is_err());
+    }
+
+    /// The satellite contract: an adaptive failure model and an
+    /// explicit checksum count (or policy) both claim the same
+    /// decision — the conflict is a typed error naming both knobs, not
+    /// a silent last-setter-wins.
+    #[test]
+    fn failure_model_conflicts_are_typed() {
+        let base = || CaqrSpec::new(Algo::SelfHealing, 4, 16, 8, 4);
+        assert!(base().with_failure_model(0.5).validate().is_ok());
+        let e = base().with_failure_model(0.5).with_checksums(1).validate().unwrap_err();
+        assert!(matches!(
+            e,
+            Error::KnobConflict { knob: "with_failure_model", conflicting: "with_checksums", .. }
+        ));
+        let msg = e.to_string();
+        assert!(msg.contains("with_failure_model") && msg.contains("with_checksums"), "{msg}");
+        // Order of setters doesn't matter — the conflict is on state.
+        assert!(base().with_checksums(1).with_failure_model(0.5).validate().is_err());
+        // An explicit policy conflicts the same way.
+        assert!(matches!(
+            base().with_failure_model(0.5).with_policy(RecoveryPolicy::Hybrid).validate(),
+            Err(Error::KnobConflict { conflicting: "with_policy", .. })
+        ));
+        // And the rate itself must be a sane number.
+        assert!(base().with_failure_model(-1.0).validate().is_err());
+        assert!(base().with_failure_model(f64::NAN).validate().is_err());
+    }
+
+    #[test]
+    fn resolved_protection_is_the_single_resolution_point() {
+        let base = || CaqrSpec::new(Algo::SelfHealing, 16, 64, 32, 8);
+        // No model: explicit policy arms the explicit count iff it
+        // uses checksums.
+        assert_eq!(base().resolved_protection(), (RecoveryPolicy::Replica, 0));
+        assert_eq!(
+            base().with_policy(RecoveryPolicy::Hybrid).with_checksums(2).resolved_protection(),
+            (RecoveryPolicy::Hybrid, 2)
+        );
+        assert_eq!(
+            base().with_policy(RecoveryPolicy::Replica).with_checksums(2).resolved_protection(),
+            (RecoveryPolicy::Replica, 0),
+            "replica-only never arms checksums"
+        );
+        // With a model the ladder is derived: a zero rate keeps plain
+        // replication, a steep one arms Hybrid with the adaptive c.
+        assert_eq!(
+            base().with_failure_model(0.0).resolved_protection(),
+            (RecoveryPolicy::Replica, 0)
+        );
+        let (policy, c) = base().with_failure_model(500.0).resolved_protection();
+        assert_eq!(policy, RecoveryPolicy::Hybrid);
+        assert!((1..=8).contains(&c), "adaptive c must fit the holder pairs: {c}");
+        // The derived count matches the adaptive policy exactly.
+        let choice = crate::analysis::AdaptivePolicy::new(500.0).choose(16, 4);
+        assert_eq!((policy, c), (choice.policy, choice.checksums));
     }
 
     #[test]

@@ -14,13 +14,17 @@
 //!   checkpoint *if the neighbour holding the checkpoint is alive*;
 //!   losing a process and its checkpoint partner together is fatal.
 
+use std::collections::HashSet;
 use std::sync::Arc;
 
 use crate::linalg::Matrix;
+use crate::metrics::VirtualTimeBreakdown;
+use crate::sim::CostModel;
 use crate::tsqr::algorithms::ProcOutcome;
 use crate::tsqr::context::Ctx;
 use crate::tsqr::trace::Event;
 use crate::ulfm::Rank;
+use crate::util::{Rng, derive_seed};
 
 /// Board-level namespace for checkpoint posts (kept disjoint from
 /// exchange rounds, which use plain `0..rounds`).
@@ -32,20 +36,37 @@ pub const CKPT_BIT: u32 = 1 << 30;
 /// the checkpoints in it — is still addressable during round `s`).
 pub const HB_BIT: u32 = 1 << 29;
 
-/// The checkpoint partner of `rank` at `round`: the nearest rank that
-/// is still a *participant* of the reduction tree at this round (ranks
-/// whose low `round` bits are zero stay; neighbours that already sent
-/// and exited would take the checkpoint to the grave).  At the top of
-/// the tree the only other participant is the buddy itself, in which
-/// case the *receiver* ends up holding the sender's checkpoint — which
-/// is exactly what recovery needs.
+/// The checkpoint partner of `rank` at `round`.
+///
+/// On a power-of-two world during a TSQR tree walk (`round <
+/// log₂ procs`) this is the nearest rank that is still a *participant*
+/// of the reduction tree at this round (ranks whose low `round` bits
+/// are zero stay; neighbours that already sent and exited would take
+/// the checkpoint to the grave).  At the top of the tree the only
+/// other participant is the buddy itself, in which case the *receiver*
+/// ends up holding the sender's checkpoint — which is exactly what
+/// recovery needs.
+///
+/// Outside the tree — odd or otherwise non-power-of-two worlds, or
+/// rounds past the tree depth (the engine-era baseline snapshots every
+/// few panels, indefinitely) — the XOR trick is meaningless (it can
+/// even name ranks outside the world), so the partner is a round-robin
+/// rotation: offset `1 + round mod (P−1)`, which is never `rank`
+/// itself and cycles through every peer as rounds advance, spreading
+/// the buddy load evenly.
 pub fn partner(rank: Rank, round: u32, procs: usize) -> Rank {
-    let far = rank ^ (1usize << (round + 1));
-    if far < procs {
-        far
-    } else {
-        rank ^ (1usize << round)
+    if procs < 2 {
+        return rank;
     }
+    if procs.is_power_of_two() && (round as usize) < procs.trailing_zeros() as usize {
+        let far = rank ^ (1usize << (round + 1));
+        if far < procs {
+            return far;
+        }
+        return rank ^ (1usize << round);
+    }
+    let offset = 1 + (round as usize % (procs - 1));
+    (rank + offset) % procs
 }
 
 /// Checkpointed TSQR process body (drop-in alternative to
@@ -130,6 +151,246 @@ pub fn checkpointed(ctx: Ctx, a: Matrix) -> ProcOutcome {
     ProcOutcome::FinalR(r)
 }
 
+/// Engine-era checkpoint/restart baseline on the *CAQR* panel walk —
+/// the contender `analysis::checkpoint_vs_redundant` races against the
+/// replicated and coded ladders.
+///
+/// The model mirrors the simulator's virtual clock exactly
+/// ([`CostModel`] panel costs, deaths/rank/virtual-second churn) so
+/// the three contenders are compared on one time axis:
+///
+/// * every `interval` panels, each rank snapshots its R block and
+///   reflector panel into its [`partner`]'s memory — a pure
+///   communication cost charged to
+///   [`VirtualTimeBreakdown::network_ns`];
+/// * deaths in a panel window force a **restart** from the last
+///   snapshot: the lost panels are re-executed, their cost moved from
+///   `compute_ns` to `recovery_ns` (redundant-family runs charge
+///   recovery too, so `repro compare` reads apples-to-apples);
+/// * a rank dying *together with its checkpoint partner* in one window
+///   loses state irrecoverably — the run fails, exactly the fatality
+///   rule `checkpointed()` enforces message-by-message above.
+#[derive(Debug, Clone)]
+pub struct CheckpointBaseline {
+    /// World size.
+    pub procs: usize,
+    /// Panels in the plan (same shape rules as `SimScenario`).
+    pub panels: usize,
+    /// Panels between snapshots (1 = checkpoint every panel).
+    pub interval: usize,
+    /// Deaths per rank per virtual second.
+    pub rate: f64,
+    /// Virtual cost of one snapshot barrier (R + reflector panel to
+    /// the partner's memory).
+    pub snapshot_ns: u64,
+    /// Virtual stage costs (shared with `sim::` and the adaptive
+    /// policy).
+    pub costs: CostModel,
+    /// Base seed; sample `i` replays under `derive_seed(seed, i)`.
+    pub seed: u64,
+}
+
+/// What one checkpointed replay did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointReport {
+    /// Whether the run completed (false: a rank and its partner died
+    /// in the same window, or the run thrashed past the restart cap).
+    pub success: bool,
+    /// Panel being executed when the run became unrecoverable.
+    pub failed_at: Option<usize>,
+    /// Restarts taken (each rolls back to the last snapshot).
+    pub restarts: u32,
+    /// Snapshots taken.
+    pub checkpoints: u32,
+    /// Total deaths sampled across the run.
+    pub deaths: usize,
+    /// Virtual time: useful work in `compute_ns`, snapshot traffic in
+    /// `network_ns`, re-executed panels in `recovery_ns`.
+    pub time: VirtualTimeBreakdown,
+}
+
+/// Aggregate of a checkpointed campaign ([`CheckpointBaseline::campaign`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointCampaign {
+    /// Samples replayed.
+    pub samples: u64,
+    /// Samples that completed.
+    pub survived: u64,
+    /// Restarts summed over all samples.
+    pub restarts: u32,
+    /// Merged virtual time across samples.
+    pub time: VirtualTimeBreakdown,
+}
+
+impl CheckpointCampaign {
+    /// Fraction of samples that completed.
+    pub fn survival(&self) -> f64 {
+        if self.samples == 0 { 1.0 } else { self.survived as f64 / self.samples as f64 }
+    }
+}
+
+/// A restart count past which the run is declared dead: spending three
+/// orders of magnitude more attempts than panels is thrashing, not
+/// progress (and it bounds the replay loop at absurd rates).
+const MAX_RESTARTS: u32 = 1000;
+
+impl CheckpointBaseline {
+    /// A baseline for a `(procs, panels)` walk: checkpoint every
+    /// panel, no churn, snapshot costed like one panel factor (R +
+    /// reflectors are the same order of bytes as the panel itself).
+    pub fn new(procs: usize, panels: usize) -> Self {
+        let costs = CostModel::default();
+        Self { procs, panels, interval: 1, rate: 0.0, snapshot_ns: costs.factor_ns, costs, seed: 0x5eed }
+    }
+
+    /// Panels between snapshots (must be ≥ 1).
+    pub fn with_interval(mut self, interval: usize) -> Self {
+        assert!(interval >= 1, "checkpoint interval must be >= 1");
+        self.interval = interval;
+        self
+    }
+
+    /// Deaths per rank per virtual second.
+    pub fn with_rate(mut self, rate: f64) -> Self {
+        self.rate = rate;
+        self
+    }
+
+    /// Virtual cost of one snapshot barrier.
+    pub fn with_snapshot_ns(mut self, ns: u64) -> Self {
+        self.snapshot_ns = ns;
+        self
+    }
+
+    /// Virtual stage costs.
+    pub fn with_costs(mut self, costs: CostModel) -> Self {
+        self.costs = costs;
+        self
+    }
+
+    /// Base seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Virtual cost of executing panel `k`: one factor stage plus the
+    /// trailing-update pool slots — the same charge `sim::` makes, so
+    /// the contenders share a clock.
+    fn panel_cost_ns(&self, k: usize) -> u64 {
+        let tasks = 2 * (self.panels - 1 - k);
+        let slots = if tasks == 0 { 0 } else { tasks.div_ceil(self.procs) as u64 };
+        self.costs.factor_ns + self.costs.update_ns * slots
+    }
+
+    /// Sample the dead set of one window and test the fatality rule:
+    /// any rank whose checkpoint partner died in the same window has
+    /// lost both its state and the copy.
+    fn window_fatal(&self, rng: &mut Rng, f: usize, round: u32) -> bool {
+        let mut dead = HashSet::with_capacity(f);
+        while dead.len() < f {
+            dead.insert(rng.below(self.procs));
+        }
+        dead.iter().any(|&r| dead.contains(&partner(r, round, self.procs)))
+    }
+
+    /// Replay sample `i`: walk the panels on the virtual clock,
+    /// snapshotting every `interval` panels and restarting (or dying)
+    /// on churn.  Pure function of `(self, i)`.
+    pub fn replay(&self, i: u64) -> CheckpointReport {
+        assert!(self.procs >= 1 && self.panels >= 1);
+        let mut rng = Rng::new(derive_seed(self.seed, i));
+        let mut time = VirtualTimeBreakdown::default();
+        let (mut restarts, mut checkpoints, mut deaths) = (0u32, 0u32, 0usize);
+        let mut last_snapshot = 0usize; // first panel not covered by a snapshot
+        let mut k = 0usize;
+        while k < self.panels {
+            let cost = self.panel_cost_ns(k);
+            time.compute_ns += cost;
+            let lambda = self.procs as f64 * self.rate * cost as f64 * 1e-9;
+            let f = poisson_sample(&mut rng, lambda).min(self.procs);
+            deaths += f;
+            if f >= 2 && self.procs >= 2 && self.window_fatal(&mut rng, f, checkpoints) {
+                return CheckpointReport {
+                    success: false,
+                    failed_at: Some(k),
+                    restarts,
+                    checkpoints,
+                    deaths,
+                    time,
+                };
+            }
+            if f > 0 {
+                // Survivable loss: roll back to the last snapshot.  The
+                // work since it — including this panel's attempt — was
+                // wasted; move it from `compute` to `recovery`.
+                restarts += 1;
+                if restarts > MAX_RESTARTS {
+                    return CheckpointReport {
+                        success: false,
+                        failed_at: Some(k),
+                        restarts,
+                        checkpoints,
+                        deaths,
+                        time,
+                    };
+                }
+                let lost: u64 = (last_snapshot..=k).map(|j| self.panel_cost_ns(j)).sum();
+                time.compute_ns -= lost;
+                time.recovery_ns += lost;
+                k = last_snapshot;
+                continue;
+            }
+            k += 1;
+            if k < self.panels && k % self.interval == 0 {
+                time.network_ns += self.snapshot_ns;
+                checkpoints += 1;
+                last_snapshot = k;
+            }
+        }
+        CheckpointReport { success: true, failed_at: None, restarts, checkpoints, deaths, time }
+    }
+
+    /// Replay `samples` reseeded runs and merge.
+    pub fn campaign(&self, samples: u64) -> CheckpointCampaign {
+        let mut agg = CheckpointCampaign {
+            samples,
+            survived: 0,
+            restarts: 0,
+            time: VirtualTimeBreakdown::default(),
+        };
+        for i in 0..samples {
+            let r = self.replay(i);
+            agg.survived += r.success as u64;
+            agg.restarts += r.restarts;
+            agg.time.merge(&r.time);
+        }
+        agg
+    }
+}
+
+/// One Poisson draw: Knuth's product method below λ = 30 (exact, cheap
+/// there), the normal approximation above (λ at 10⁵ ranks can be in
+/// the hundreds, where `e^{−λ}` underflows and Knuth never terminates).
+fn poisson_sample(rng: &mut Rng, lambda: f64) -> usize {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    if lambda < 30.0 {
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0f64;
+        loop {
+            p *= rng.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+    (lambda + lambda.sqrt() * rng.normal()).round().max(0.0) as usize
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,5 +419,89 @@ mod tests {
             assert_ne!(round | CKPT_BIT, round);
             assert!(round | CKPT_BIT >= CKPT_BIT);
         }
+    }
+
+    /// The satellite fix: on an odd world the XOR trick is meaningless
+    /// (it can name ranks ≥ P); the partner must instead be the
+    /// round-robin rotation `(rank + 1 + round mod (P−1)) mod P` —
+    /// never self, always in range, cycling through every peer.
+    #[test]
+    fn odd_world_partner_is_round_robin_rotation() {
+        for procs in [3usize, 5, 7, 9] {
+            for round in 0..2 * procs as u32 {
+                for rank in 0..procs {
+                    let p = partner(rank, round, procs);
+                    assert!(p < procs, "P={procs} r={rank} s={round}: partner {p} out of range");
+                    assert_ne!(p, rank, "P={procs} s={round}: self-partner loses the state");
+                    let offset = 1 + (round as usize % (procs - 1));
+                    assert_eq!(p, (rank + offset) % procs, "pinned rotation");
+                }
+            }
+            // Over P−1 consecutive rounds rank 0 is partnered with
+            // every other rank exactly once.
+            let mut seen: Vec<Rank> =
+                (0..procs as u32 - 1).map(|s| partner(0, s, procs)).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (1..procs).collect::<Vec<_>>(), "P={procs}: full coverage");
+        }
+        // Degenerate single-rank world: nobody else to hold the copy.
+        assert_eq!(partner(0, 0, 1), 0);
+        // Power-of-two worlds past the tree depth also rotate (the
+        // baseline checkpoints indefinitely; XOR would leave range).
+        for round in 4..12u32 {
+            let p = partner(5, round, 16);
+            assert!(p < 16);
+            assert_ne!(p, 5);
+        }
+    }
+
+    #[test]
+    fn fault_free_replay_charges_compute_and_snapshots_only() {
+        let base = CheckpointBaseline::new(8, 4).with_interval(2);
+        let r = base.replay(0);
+        assert!(r.success);
+        assert_eq!(r.failed_at, None);
+        assert_eq!((r.restarts, r.deaths), (0, 0));
+        // Snapshots after panels 2 (k=2 is the only interior multiple
+        // of the interval): one checkpoint, charged to network.
+        assert_eq!(r.checkpoints, 1);
+        assert_eq!(r.time.network_ns, base.snapshot_ns);
+        assert_eq!(r.time.recovery_ns, 0);
+        // Compute: Σ_k factor + update·ceil(2(panels−1−k)/procs).
+        let expect: u64 = (0..4).map(|k| base.panel_cost_ns(k)).sum();
+        assert_eq!(r.time.compute_ns, expect);
+        // Pure function of (baseline, sample).
+        assert_eq!(base.replay(0), r);
+    }
+
+    #[test]
+    fn churn_forces_restarts_and_charges_recovery() {
+        // Rate high enough that deaths are near-certain each window
+        // but the world is big enough that buddy-pair wipes are rare.
+        let base = CheckpointBaseline::new(1024, 6).with_rate(20.0).with_seed(7);
+        let c = base.campaign(32);
+        assert!(c.restarts > 0, "this rate must force restarts");
+        assert!(c.time.recovery_ns > 0, "restarts must charge recovery time");
+        assert!(c.survival() > 0.0, "single deaths are survivable by restart");
+    }
+
+    #[test]
+    fn buddy_pair_wipe_or_thrash_kills_the_run() {
+        // A 2-rank world: any window with 2+ deaths wipes rank 0 and
+        // its only possible partner together — fatal, not restartable.
+        let base = CheckpointBaseline::new(2, 4).with_rate(1e7).with_seed(3);
+        let c = base.campaign(16);
+        assert!(c.survival() < 1.0, "extreme churn must kill 2-rank runs");
+        // And the failure is typed in the per-sample report.
+        let dead = (0..16).map(|i| base.replay(i)).find(|r| !r.success).unwrap();
+        assert!(dead.failed_at.is_some());
+    }
+
+    #[test]
+    fn zero_rate_campaign_is_certain_survival() {
+        let c = CheckpointBaseline::new(16, 8).campaign(4);
+        assert_eq!(c.survival(), 1.0);
+        assert_eq!(c.restarts, 0);
+        assert_eq!(c.time.recovery_ns, 0);
     }
 }

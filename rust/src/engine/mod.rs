@@ -54,6 +54,7 @@ pub struct EngineBuilder {
     threads: usize,
     kernel_profile: KernelProfile,
     recovery_policy: RecoveryPolicy,
+    adaptive_rate: Option<f64>,
 }
 
 impl Default for EngineBuilder {
@@ -66,6 +67,7 @@ impl Default for EngineBuilder {
             threads: 0,
             kernel_profile: KernelProfile::default(),
             recovery_policy: RecoveryPolicy::default(),
+            adaptive_rate: None,
         }
     }
 }
@@ -144,6 +146,18 @@ impl EngineBuilder {
         self
     }
 
+    /// Failure-model-adaptive protection: CAQR submissions with no
+    /// explicit policy or checksum count inherit
+    /// [`CaqrSpec::with_failure_model`](crate::caqr::CaqrSpec::with_failure_model)
+    /// at this rate (deaths per rank per virtual second), so the
+    /// recovery ladder and `c` are derived per plan by
+    /// [`AdaptivePolicy`](crate::analysis::AdaptivePolicy) instead of
+    /// hand-picked.  Spec-level knobs always win.
+    pub fn adaptive_policy(mut self, rate: f64) -> Self {
+        self.adaptive_rate = Some(rate);
+        self
+    }
+
     /// Build the engine: load the backend once, start the pool, and
     /// warm the process-wide kernel caches — the GEMM autotune probe
     /// ([`crate::linalg::gemm::GemmParams::tuned`]: ISA dispatch +
@@ -171,6 +185,7 @@ impl EngineBuilder {
             Parallelism::new(self.threads),
             self.kernel_profile,
             self.recovery_policy,
+            self.adaptive_rate,
         ))
     }
 }
@@ -222,6 +237,7 @@ pub struct Engine {
     default_profile: KernelProfile,
     default_policy: RecoveryPolicy,
     default_parallelism: Parallelism,
+    default_failure_model: Option<f64>,
 }
 
 impl Engine {
@@ -245,6 +261,7 @@ impl Engine {
             Parallelism::single(),
             KernelProfile::default(),
             RecoveryPolicy::default(),
+            None,
         )
     }
 
@@ -254,6 +271,7 @@ impl Engine {
         default_parallelism: Parallelism,
         default_profile: KernelProfile,
         default_policy: RecoveryPolicy,
+        default_failure_model: Option<f64>,
     ) -> Self {
         let pool =
             if prewarm > 0 { WorkerPool::with_prewarmed(prewarm) } else { WorkerPool::new() };
@@ -264,6 +282,7 @@ impl Engine {
             default_profile,
             default_policy,
             default_parallelism,
+            default_failure_model,
         }
     }
 
@@ -282,6 +301,14 @@ impl Engine {
     /// their spec does not pin one.
     pub fn default_recovery_policy(&self) -> RecoveryPolicy {
         self.default_policy
+    }
+
+    /// The failure rate CAQR submissions inherit as an adaptive
+    /// protection model when the spec pins neither a policy nor a
+    /// checksum count (`None` when the engine was not built with
+    /// [`EngineBuilder::adaptive_policy`]).
+    pub fn default_failure_model(&self) -> Option<f64> {
+        self.default_failure_model
     }
 
     /// The default intra-task kernel [`Parallelism`] CAQR submissions
@@ -335,8 +362,20 @@ impl Engine {
         if spec.profile.is_none() {
             spec.profile = Some(self.default_profile);
         }
-        if spec.policy.is_none() {
-            spec.policy = Some(self.default_policy);
+        // Protection ladder: a spec pin (policy, checksums, or failure
+        // model) always wins.  Otherwise the engine's adaptive rate —
+        // when configured — beats the static default policy, because
+        // injecting a policy next to a failure model would trip the
+        // spec's own KnobConflict validation.
+        if spec.policy.is_none() && spec.failure_model.is_none() {
+            if spec.checksums == 0 {
+                if let Some(rate) = self.default_failure_model {
+                    spec.failure_model = Some(rate);
+                }
+            }
+            if spec.failure_model.is_none() {
+                spec.policy = Some(self.default_policy);
+            }
         }
         if spec.parallelism.is_none() {
             spec.parallelism = Some(self.default_parallelism);
@@ -613,6 +652,40 @@ mod tests {
             .unwrap();
         assert_eq!(res.policy, RecoveryPolicy::Replica);
         assert_eq!(res.checksums, 0, "replica policy never encodes");
+    }
+
+    #[test]
+    fn adaptive_policy_knob_flows_into_caqr_runs() {
+        use crate::analysis::AdaptivePolicy;
+        use crate::caqr::CaqrSpec;
+        let rate = 1e-3;
+        let engine = Engine::builder().host_only().adaptive_policy(rate).build().unwrap();
+        assert_eq!(engine.default_failure_model(), Some(rate));
+        // An unpinned spec inherits the failure model, so the run's
+        // resolved ladder is exactly what AdaptivePolicy would choose
+        // for this plan.
+        let spec = CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4);
+        let want = AdaptivePolicy::new(rate).choose(spec.procs, spec.plan().panels());
+        let res = engine.run_caqr(spec).unwrap();
+        assert!(res.success());
+        assert_eq!(res.policy, want.policy, "adaptive choice applies");
+        assert_eq!(res.checksums, want.checksums);
+        // Spec-level pins still win over the engine's adaptive rate.
+        let res = engine
+            .run_caqr(
+                CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4)
+                    .with_policy(RecoveryPolicy::Replica),
+            )
+            .unwrap();
+        assert_eq!(res.policy, RecoveryPolicy::Replica);
+        // An explicit checksum count suppresses the model: if the rate
+        // were injected next to with_checksums the spec's KnobConflict
+        // validation would reject the run outright.
+        let res = engine
+            .run_caqr(CaqrSpec::new(Algo::Redundant, 4, 16, 8, 4).with_checksums(1))
+            .unwrap();
+        assert!(res.success());
+        assert_eq!(res.policy, RecoveryPolicy::default(), "static default still applies");
     }
 
     #[test]

@@ -84,6 +84,21 @@ pub enum Error {
     /// Configuration / CLI validation.
     Config(String),
 
+    /// Two configuration knobs that own the same decision were both
+    /// set — e.g. an explicit checksum count alongside an adaptive
+    /// failure model (which exists to *pick* the checksum count).
+    /// Typed, with both knob names, so callers and tests can pin the
+    /// conflict without string matching; `resolution` says which knob
+    /// to drop.
+    KnobConflict {
+        /// The knob set first (kept).
+        knob: &'static str,
+        /// The conflicting knob (must be dropped).
+        conflicting: &'static str,
+        /// How to resolve the conflict, for the error message.
+        resolution: &'static str,
+    },
+
     /// A job was refused at submission time by the multi-tenant
     /// service's admission control ([`crate::service`]) — the job was
     /// *shed*, never executed.  Distinct from every execution-time
@@ -104,6 +119,9 @@ impl std::fmt::Display for Error {
             Error::Artifacts(s) => write!(f, "artifacts: {s}"),
             Error::Xla(s) => write!(f, "xla runtime: {s}"),
             Error::Config(s) => write!(f, "config: {s}"),
+            Error::KnobConflict { knob, conflicting, resolution } => {
+                write!(f, "config: '{knob}' conflicts with '{conflicting}': {resolution}")
+            }
             Error::Submission(r) => write!(f, "submission rejected: {r}"),
             Error::Other(s) => write!(f, "{s}"),
         }
@@ -156,6 +174,26 @@ mod tests {
     fn display_messages() {
         assert_eq!(Error::RankFailed(2).to_string(), "peer rank 2 has failed");
         assert!(Error::NoReplica(5).to_string().contains("replica"));
+    }
+
+    /// The satellite contract: a knob conflict is typed (matchable
+    /// without string parsing) and its message names BOTH knobs.
+    #[test]
+    fn knob_conflict_names_both_knobs() {
+        let e = Error::KnobConflict {
+            knob: "with_failure_model",
+            conflicting: "with_checksums",
+            resolution: "the adaptive policy owns the checksum count",
+        };
+        assert!(matches!(
+            e,
+            Error::KnobConflict { knob: "with_failure_model", conflicting: "with_checksums", .. }
+        ));
+        let msg = e.to_string();
+        assert!(msg.contains("with_failure_model"), "{msg}");
+        assert!(msg.contains("with_checksums"), "{msg}");
+        assert!(!e.is_rank_failure());
+        assert!(!e.is_overload());
     }
 
     /// The satellite fix this variant exists for: a shed job must be

@@ -23,15 +23,36 @@ pub enum CaqrStage {
     /// The replicated trailing-matrix updates — the failure mode the
     /// general-matrix paper adds over plain TSQR.
     Update,
+    /// The post-factorization Q-assembly phase: the replicated tasks
+    /// that expand the stored WY/Householder reflector chain into the
+    /// explicit `m × n` Q, one column block per replica pair.  A kill
+    /// here strikes *after* every panel completed — the reflector
+    /// state itself is what must survive (arXiv:2311.11943's coded
+    /// factorization closes exactly this gap).
+    QAssembly,
+    /// The `apply_q` phase: replicated tasks applying `Qᵀ` to a
+    /// caller-supplied operand (the least-squares / verification
+    /// workload).  Same replica-pair + checksum protection as
+    /// [`QAssembly`](Self::QAssembly).
+    ApplyQ,
 }
 
 impl CaqrStage {
-    /// Stable name (`factor` / `update`).
+    /// Stable name (`factor` / `update` / `q-assembly` / `apply-q`).
     pub fn name(&self) -> &'static str {
         match self {
             CaqrStage::Factor => "factor",
             CaqrStage::Update => "update",
+            CaqrStage::QAssembly => "q-assembly",
+            CaqrStage::ApplyQ => "apply-q",
         }
+    }
+
+    /// True for the post-factorization Q-protection phases
+    /// ([`QAssembly`](Self::QAssembly) / [`ApplyQ`](Self::ApplyQ)):
+    /// these run once after the panel loop, not once per panel.
+    pub fn is_q_phase(&self) -> bool {
+        matches!(self, CaqrStage::QAssembly | CaqrStage::ApplyQ)
     }
 }
 
@@ -104,6 +125,24 @@ impl CaqrKillSchedule {
     /// Should `rank` die at `(panel, stage)`?  Consumes the entry.
     pub fn fire(&self, rank: Rank, panel: usize, stage: CaqrStage) -> bool {
         self.pending.lock().unwrap().remove(&(rank, panel, stage))
+    }
+
+    /// Fire **every** pending entry of `stage` for `rank`, regardless
+    /// of its panel coordinate.  The Q phases run once after the panel
+    /// loop, so all their kills strike at the phase entry — the panel
+    /// field of a Q-stage entry is documentation, not a firing time.
+    /// Consumes the entries; returns true if any fired.
+    pub fn fire_stage(&self, rank: Rank, stage: CaqrStage) -> bool {
+        let mut pending = self.pending.lock().unwrap();
+        let before = pending.len();
+        pending.retain(|&(r, _, s)| !(r == rank && s == stage));
+        pending.len() != before
+    }
+
+    /// Does any pending entry strike one of the post-factorization Q
+    /// phases?  (Arms the Q phases in the executor's timeline.)
+    pub fn has_q_stage(&self) -> bool {
+        self.pending.lock().unwrap().iter().any(|&(_, _, s)| s.is_q_phase())
     }
 
     /// Remaining entries (diagnostics).
@@ -223,6 +262,44 @@ mod tests {
     fn stage_names() {
         assert_eq!(CaqrStage::Factor.name(), "factor");
         assert_eq!(CaqrStage::Update.name(), "update");
+        assert_eq!(CaqrStage::QAssembly.name(), "q-assembly");
+        assert_eq!(CaqrStage::ApplyQ.name(), "apply-q");
+        assert!(CaqrStage::QAssembly.is_q_phase());
+        assert!(CaqrStage::ApplyQ.is_q_phase());
+        assert!(!CaqrStage::Factor.is_q_phase());
+        assert!(!CaqrStage::Update.is_q_phase());
+    }
+
+    #[test]
+    fn q_stage_kills_fire_by_stage_not_panel() {
+        let s = CaqrKillSchedule::at(&[
+            (1, 0, CaqrStage::QAssembly),
+            (1, 3, CaqrStage::QAssembly),
+            (2, 0, CaqrStage::ApplyQ),
+            (1, 0, CaqrStage::Update),
+        ]);
+        assert!(s.has_q_stage());
+        // fire_stage drains every panel coordinate of that stage for the rank.
+        assert!(s.fire_stage(1, CaqrStage::QAssembly));
+        assert!(!s.fire_stage(1, CaqrStage::QAssembly), "consumed");
+        // Other stages and ranks are untouched.
+        assert!(s.fire(1, 0, CaqrStage::Update));
+        assert!(s.fire_stage(2, CaqrStage::ApplyQ));
+        assert_eq!(s.remaining(), 0);
+        assert!(!CaqrKillSchedule::none().has_q_stage());
+        // Update/Factor entries never read as Q-phase arming.
+        let plain = CaqrKillSchedule::at(&[(0, 0, CaqrStage::Update)]);
+        assert!(!plain.has_q_stage());
+    }
+
+    #[test]
+    fn pair_wipe_strikes_q_phases_too() {
+        let w = PairWipeSchedule::new(2, 0, CaqrStage::QAssembly);
+        let s = w.schedule();
+        assert!(s.has_q_stage());
+        assert!(s.fire_stage(2, CaqrStage::QAssembly));
+        assert!(s.fire_stage(3, CaqrStage::QAssembly));
+        assert_eq!(s.remaining(), 0);
     }
 
     #[test]

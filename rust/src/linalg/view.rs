@@ -673,6 +673,40 @@ pub fn apply_update_f64(
     }
 }
 
+/// Forward (Q-side) sibling of [`apply_update_f64`]: overwrite `block`
+/// with `Q·block`, reflectors in *descending* order — the inverse
+/// composition, so a forward apply after an [`apply_update_f64`]
+/// round-trips the block (up to rounding).  Same packed layout, same
+/// f64 accumulation, deterministic summation order.
+pub fn apply_q_f64(
+    panel: &[f64],
+    rows: usize,
+    cols: usize,
+    tau64: &[f64],
+    block: &mut [f64],
+    block_cols: usize,
+) {
+    assert_eq!(panel.len(), rows * cols, "apply_q_f64: panel length != rows*cols");
+    assert_eq!(tau64.len(), cols, "apply_q_f64: tau must have {cols} entries");
+    assert_eq!(block.len(), rows * block_cols, "apply_q_f64: block length != rows*block_cols");
+    for c in 0..block_cols {
+        for j in (0..cols).rev() {
+            if tau64[j] == 0.0 {
+                continue; // identity reflector (zero column)
+            }
+            let mut dot = block[j * block_cols + c];
+            for i in j + 1..rows {
+                dot += panel[i * cols + j] * block[i * block_cols + c];
+            }
+            let s = tau64[j] * dot;
+            block[j * block_cols + c] -= s;
+            for i in j + 1..rows {
+                block[i * block_cols + c] -= panel[i * cols + j] * s;
+            }
+        }
+    }
+}
+
 /// f32 trailing-update view kernel: apply the reflectors of a packed
 /// f32 factorization to `block`, writing the updated block into `out`.
 ///
@@ -779,6 +813,36 @@ pub fn apply_wy_into(
     load_f64(t64, t);
     load_f64(c, block);
     super::wy::apply_wyt_with_scratch(v, t64, m, n, c, k, scratch);
+    store_f32(out.data, c);
+}
+
+/// Forward (Q-side) compact-WY apply: `out = block − V·(T·(Vᵀ·block))`
+/// — the `Q·C` sibling of [`apply_wy_into`]'s `Qᵀ·C`, shaped for the
+/// runtime's `ApplyQWy` kernel op.  Chaining it over the panels in
+/// reverse order against identity columns materializes the explicit Q
+/// (that is the Q-assembly task body).  Same scratch discipline: f64
+/// accumulation, one terminal rounding, allocation-free when warm.
+pub fn apply_wy_forward_into(
+    packed: MatrixView<'_>,
+    t: MatrixView<'_>,
+    block: MatrixView<'_>,
+    out: &mut MatrixViewMut<'_>,
+    ws: &mut Workspace,
+) {
+    let (m, n) = packed.shape();
+    assert_eq!(t.shape(), (n, n), "apply_wy_forward_into: T must be {n}x{n}");
+    assert_eq!(block.rows(), m, "apply_wy_forward_into: block rows must match packed rows");
+    assert_eq!(out.shape(), block.shape(), "apply_wy_forward_into: out must match block shape");
+    let k = block.cols();
+    let need = m * n + n * n + m * k + super::wy::apply_wyt_scratch(n, k);
+    let buf = ws.f64_scratch(need);
+    let (v, rest) = buf.split_at_mut(m * n);
+    let (t64, rest) = rest.split_at_mut(n * n);
+    let (c, scratch) = rest.split_at_mut(m * k);
+    load_unit_lower_f64(packed, v);
+    load_f64(t64, t);
+    load_f64(c, block);
+    super::wy::apply_wy_forward_with_scratch(v, t64, m, n, c, k, scratch);
     store_f32(out.data, c);
 }
 

@@ -180,6 +180,54 @@ pub fn apply_wyt_with_scratch(
     gemm::gemm_into(rows, block_cols, cols, v, false, w2, Accum::Sub, block, gs);
 }
 
+/// `block ← Q·block = block − V·(T·(Vᵀ·block))` — the **forward**
+/// (Q-side) companion of [`apply_wyt_with_scratch`]: same three GEMMs,
+/// `T` untransposed.  This is what Q *assembly* needs: seeding `block`
+/// with identity columns and applying each panel's `Q_k` forward (in
+/// reverse panel order) materializes the explicit Q, with every
+/// arithmetic step deterministic so replicas stay bit-identical.
+/// Scratch requirement is the same [`apply_wyt_scratch`].
+pub fn apply_wy_forward_with_scratch(
+    v: &[f64],
+    t: &[f64],
+    rows: usize,
+    cols: usize,
+    block: &mut [f64],
+    block_cols: usize,
+    scratch: &mut [f64],
+) {
+    assert_eq!(v.len(), rows * cols, "apply_wy: V length != rows*cols");
+    assert_eq!(t.len(), cols * cols, "apply_wy: T must be cols x cols");
+    assert_eq!(block.len(), rows * block_cols, "apply_wy: block length != rows*block_cols");
+    assert!(
+        scratch.len() >= apply_wyt_scratch(cols, block_cols),
+        "apply_wy: scratch too small"
+    );
+    let (wbuf, rest) = scratch.split_at_mut(cols * block_cols);
+    let (w2, gs) = rest.split_at_mut(cols * block_cols);
+    // W = Vᵀ · C
+    gemm::gemm_into(cols, block_cols, rows, v, true, block, Accum::Set, wbuf, gs);
+    // W₂ = T · W  (forward: T, not Tᵀ)
+    gemm::gemm_into(cols, block_cols, cols, t, false, wbuf, Accum::Set, w2, gs);
+    // C −= V · W₂
+    gemm::gemm_into(rows, block_cols, cols, v, false, w2, Accum::Sub, block, gs);
+}
+
+/// [`apply_wy_forward_with_scratch`] over a [`WyFactor`], growing a
+/// reusable caller `Vec` for scratch — the Q-assembly task entry point.
+pub fn apply_wy_forward_into(
+    wy: &WyFactor,
+    block: &mut [f64],
+    block_cols: usize,
+    scratch: &mut Vec<f64>,
+) {
+    let need = apply_wyt_scratch(wy.cols, block_cols);
+    if scratch.len() < need {
+        scratch.resize(need, 0.0);
+    }
+    apply_wy_forward_with_scratch(&wy.v, &wy.t, wy.rows, wy.cols, block, block_cols, scratch);
+}
+
 /// [`apply_wyt_with_scratch`] over a [`WyFactor`], growing a reusable
 /// caller `Vec` for scratch — the CAQR update-task entry point (each
 /// task reuses one scratch vector across its panel's GEMM calls).
@@ -362,6 +410,55 @@ mod tests {
         }
         assert!(pool.tasks_executed() > 0, "threads>1 must really fan out");
         pool.shutdown();
+    }
+
+    /// The forward (Q-side) apply must invert the transpose apply:
+    /// `Q·(Qᵀ·C) = C` up to rounding — and must genuinely differ from
+    /// applying `Qᵀ` twice (i.e. the `T` vs `Tᵀ` distinction matters).
+    #[test]
+    fn forward_apply_inverts_transpose_apply() {
+        for (rows, cols, bk) in [(24, 6, 5), (48, 16, 16), (33, 7, 2)] {
+            let (packed, tau) = factored_panel(rows, cols, (rows + cols) as u64);
+            let wy = build_wy(&packed, rows, cols, &tau);
+            let block = Matrix::random(rows, bk, 13);
+            let b0: Vec<f64> = block.data().iter().map(|&x| x as f64).collect();
+
+            let mut b = b0.clone();
+            let mut scratch = Vec::new();
+            apply_wyt_into(&wy, &mut b, bk, &mut scratch); // Qᵀ·C
+            let qt_c = b.clone();
+            apply_wy_forward_into(&wy, &mut b, bk, &mut scratch); // Q·(Qᵀ·C)
+
+            let scale: f64 = b0.iter().fold(1.0f64, |m, x| m.max(x.abs())) * cols as f64;
+            for (g, w) in b.iter().zip(&b0) {
+                assert!(
+                    (g - w).abs() <= 1e-12 * scale.max(1.0),
+                    "{rows}x{cols}: roundtrip {g} vs {w}"
+                );
+            }
+            // Qᵀ·(Qᵀ·C) ≠ C for a generic panel: if the forward path
+            // accidentally transposed T it would fail the roundtrip.
+            let mut wrong = qt_c.clone();
+            apply_wyt_into(&wy, &mut wrong, bk, &mut scratch);
+            let drift: f64 =
+                wrong.iter().zip(&b0).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(drift > 1e-9 * scale.max(1.0), "QᵀQᵀ must not look like QQᵀ");
+        }
+    }
+
+    #[test]
+    fn forward_apply_is_run_to_run_deterministic() {
+        let (rows, cols, bk) = (40, 8, 12);
+        let (packed, tau) = factored_panel(rows, cols, 17);
+        let block = Matrix::random(rows, bk, 18);
+        let run = || {
+            let wy = build_wy(&packed, rows, cols, &tau);
+            let mut b: Vec<f64> = block.data().iter().map(|&x| x as f64).collect();
+            let mut scratch = Vec::new();
+            apply_wy_forward_into(&wy, &mut b, bk, &mut scratch);
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -16,6 +16,10 @@
 //!               survival at 10⁵–10⁶ simulated ranks with churn,
 //!               bursts, and network models (`--curve` sweeps the
 //!               failure rate)
+//! * `compare`   race coded ABFT vs plain replication vs a periodic
+//!               checkpoint/restart baseline over one virtual clock and
+//!               print the crossover table; the winning ladder is wired
+//!               back in as the engine default
 //! * `serve`     synthetic many-client drive of the multi-tenant
 //!               engine service: K weighted tenants flood one engine
 //!               through bounded DRR queues; reports per-tenant
@@ -59,6 +63,8 @@ USAGE:
                  [--sweep [--f F] [--trials T]]
   repro simulate --scenario FILE [--seed S] [--samples N] [--procs P]
                  [--threads N] [--curve [--rates R,R,...]]
+  repro compare  [--procs P] [--panels K] [--panel B] [--rates R,R,...]
+                 [--samples N] [--seed S] [--interval I] [--threads N]
   repro serve    [--tenants K] [--weights w1,w2,...] [--jobs N] [--procs P]
                  [--rows-per-proc R] [--cols C] [--queue-depth Q]
                  [--tenant-depth D] [--inflight W] [--seed S] [--threads T]
@@ -79,6 +85,10 @@ USAGE:
   threads-per-rank), so scenario files can ask for 10^5-10^6 ranks; see
   rust/scenarios/ for committed examples and --curve for survival over
   Poisson failure rates
+  compare races replication, adaptive coded checksums, and a periodic
+  checkpoint/restart baseline (--interval I panels between snapshots)
+  at each --rates cell on one virtual clock; the highest-rate cell's
+  winner becomes the recommended engine default
   serve floods the multi-tenant service with K synthetic clients:
   --weights sets DRR shares (default all 1), --think-ms throttles the
   offered load, --failures arms a survivable kill on every 4th job,
@@ -644,6 +654,103 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_compare(args: &Args) -> Result<()> {
+    use ft_tsqr::analysis::CheckpointVsRedundant;
+    let procs = args.parse_flag::<usize>("procs")?.unwrap_or(1024);
+    let panels = args.parse_flag::<usize>("panels")?.unwrap_or(4);
+    let panel = args.parse_flag::<usize>("panel")?.unwrap_or(8);
+    let samples = args.parse_flag::<u64>("samples")?.unwrap_or(16);
+    let seed = args.parse_flag::<u64>("seed")?;
+    let interval = args.parse_flag::<usize>("interval")?.unwrap_or(1);
+    let threads = args.parse_flag::<usize>("threads")?.unwrap_or(0);
+    let rates: Vec<f64> = match args.get("rates") {
+        Some(list) => list
+            .split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|e| Error::Config(format!("bad rate '{t}': {e}")))
+            })
+            .collect::<Result<_>>()?,
+        None => vec![0.0, 0.5, 5.0, 50.0, 400.0],
+    };
+    if rates.is_empty() {
+        return Err(Error::Config("--rates needs at least one rate".into()));
+    }
+
+    let engine = ft_tsqr::engine::Engine::builder().host_only().threads(threads).build()?;
+    let mut cmp = CheckpointVsRedundant::new(&engine, procs, panels)
+        .with_panel(panel)
+        .with_samples(samples)
+        .with_interval(interval);
+    if let Some(s) = seed {
+        cmp = cmp.with_seed(s);
+    }
+
+    println!(
+        "compare: procs={procs} panels={panels}x{panel} samples={samples}/contender \
+         checkpoint-interval={interval} seed={}",
+        cmp.seed,
+    );
+    let cells = cmp.table(&rates)?;
+    let dur = |ns: u64| format!("{:?}", std::time::Duration::from_nanos(ns));
+    let mut table = Table::new(
+        format!("crossover — replication vs coded vs checkpoint/restart on {procs} ranks"),
+        &[
+            "rate (deaths/rank/s)",
+            "replication",
+            "coded (c)",
+            "checkpoint",
+            "winner",
+            "engine default",
+        ],
+    );
+    for cell in &cells {
+        table.row(vec![
+            cell.rate.to_string(),
+            format!("{:.3} in {}", cell.replication.survival, dur(cell.replication.time.total_ns())),
+            format!(
+                "{:.3} in {} (c={})",
+                cell.coded.survival,
+                dur(cell.coded.time.total_ns()),
+                cell.coded.checksums
+            ),
+            format!("{:.3} in {}", cell.checkpoint.survival, dur(cell.checkpoint.time.total_ns())),
+            cell.winner.name().into(),
+            cell.engine_default().to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // Feed the verdict back: the highest-rate cell decides what a
+    // session at that churn should default to.  A coded win wires the
+    // failure-model-adaptive ladder (so c keeps tracking the rate); a
+    // replication win wires the static replica ladder.
+    let decisive = cells.last().expect("at least one rate");
+    let rec = decisive.engine_default();
+    let wired = if rec.uses_checksums() {
+        ft_tsqr::engine::Engine::builder()
+            .host_only()
+            .adaptive_policy(decisive.rate)
+            .build()?
+    } else {
+        ft_tsqr::engine::Engine::builder().host_only().recovery_policy(rec).build()?
+    };
+    match wired.default_failure_model() {
+        Some(rate) => println!(
+            "engine default at rate {rate}: adaptive (failure-model) ladder — \
+             unpinned CAQR specs resolve policy and c per plan"
+        ),
+        None => println!(
+            "engine default at rate {}: {} ladder",
+            decisive.rate,
+            wired.default_recovery_policy(),
+        ),
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let weights: Vec<u64> = match args.get("weights") {
@@ -847,6 +954,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "caqr" => cmd_caqr(&args),
         "simulate" => cmd_simulate(&args),
+        "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),

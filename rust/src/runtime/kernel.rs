@@ -106,6 +106,17 @@ pub enum KernelOp {
     ApplyWy,
     /// Materialize the thin Q of a packed factorization → `[q]`.
     BuildQ,
+    /// Compact-WY **forward** apply `Q·C` (T untransposed) → `[q_block]`
+    /// (views: `[packed, t (n×n), block]`; see
+    /// [`crate::linalg::view::apply_wy_forward_into`]).  The Q-side
+    /// sibling of [`ApplyWy`](Self::ApplyWy), used by coded Q assembly.
+    ApplyQWy,
+    /// Materialize one column shard of the explicit Q from a packed
+    /// panel → `[q_shard]` (views: `[packed, t (n×n), params
+    /// (1×width)]` where `params[0,0]` carries the shard's first global
+    /// column as an f32).  The kernel seeds the identity shard itself —
+    /// callers never allocate the `E_j` operand.
+    BuildQPanel,
     /// ABFT: encode one Vandermonde-weighted checksum block over `N`
     /// data blocks → `[checksum]` (views: `[weights (1×N), block_0,
     /// …, block_{N−1}]`; see
@@ -140,6 +151,12 @@ impl KernelOp {
                 Manifest::apply_wy_name(views[0].rows(), views[0].cols(), views[2].cols())
             }
             KernelOp::BuildQ => Manifest::build_q_name(views[0].rows(), views[0].cols()),
+            KernelOp::ApplyQWy => {
+                Manifest::apply_q_wy_name(views[0].rows(), views[0].cols(), views[2].cols())
+            }
+            KernelOp::BuildQPanel => {
+                Manifest::build_q_panel_name(views[0].rows(), views[0].cols(), views[2].cols())
+            }
             KernelOp::EncodeChecksum => Manifest::encode_checksum_name(
                 views[1].rows(),
                 views[1].cols(),
@@ -203,6 +220,8 @@ impl Kernel for HostKernel {
                 | KernelOp::ApplyUpdate
                 | KernelOp::BuildT
                 | KernelOp::ApplyWy
+                | KernelOp::ApplyQWy
+                | KernelOp::BuildQPanel
                 | KernelOp::EncodeChecksum
                 | KernelOp::ReconstructBlock
         )
@@ -277,6 +296,30 @@ impl Kernel for HostKernel {
                 let (m, n) = v[0].shape();
                 let mut out = Matrix::eye(m, n);
                 view::apply_q_in_place(v[0], v[1].data(), &mut out.as_view_mut());
+                Ok(vec![out])
+            }
+            KernelOp::ApplyQWy => {
+                // views: [packed, t (n×n), block]
+                let mut out = Matrix::zeros(v[2].rows(), v[2].cols());
+                view::apply_wy_forward_into(v[0], v[1], v[2], &mut out.as_view_mut(), ws);
+                Ok(vec![out])
+            }
+            KernelOp::BuildQPanel => {
+                // views: [packed, t (n×n), params (1×width)] — the
+                // identity shard is seeded here, not by the caller.
+                let m = v[0].rows();
+                let width = v[2].cols();
+                let offset = v[2].at(0, 0) as usize;
+                let shard =
+                    Matrix::from_fn(m, width, |i, j| if i == offset + j { 1.0 } else { 0.0 });
+                let mut out = Matrix::zeros(m, width);
+                view::apply_wy_forward_into(
+                    v[0],
+                    v[1],
+                    shard.as_view(),
+                    &mut out.as_view_mut(),
+                    ws,
+                );
                 Ok(vec![out])
             }
             KernelOp::EncodeChecksum => {
@@ -485,6 +528,15 @@ mod tests {
             KernelOp::ReconstructBlock.entry_name(&[w.as_view(), b.as_view(), b.as_view()]),
             Manifest::reconstruct_block_name(4, 4, 2)
         );
+        let p = Matrix::zeros(1, 2);
+        assert_eq!(
+            KernelOp::ApplyQWy.entry_name(&[a.as_view(), b.as_view(), Matrix::zeros(32, 3).as_view()]),
+            Manifest::apply_q_wy_name(32, 4, 3)
+        );
+        assert_eq!(
+            KernelOp::BuildQPanel.entry_name(&[a.as_view(), b.as_view(), p.as_view()]),
+            Manifest::build_q_panel_name(32, 4, 2)
+        );
     }
 
     #[test]
@@ -514,6 +566,65 @@ mod tests {
             .pop()
             .unwrap();
         assert!(fast.max_abs_diff(&slow) < 1e-4, "WY op must match the rank-1 op");
+    }
+
+    #[test]
+    fn host_kernel_q_side_ops_build_and_invert() {
+        let a = Matrix::random(24, 4, 7);
+        let f = householder_qr(&a);
+        let tau = Matrix::from_vec(4, 1, f.tau.clone());
+        let mut ws = Workspace::new();
+        let t_views = [f.packed.as_view(), tau.as_view()];
+        let t = HostKernel
+            .execute(call(KernelOp::BuildT, &t_views, &mut ws))
+            .unwrap()
+            .pop()
+            .unwrap();
+
+        // BuildQPanel's shard must match the same columns of BuildQ's
+        // thin Q (Householder reference path).
+        let q_views = [f.packed.as_view(), tau.as_view()];
+        let q = HostKernel
+            .execute(call(KernelOp::BuildQ, &q_views, &mut ws))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let params = Matrix::from_fn(1, 2, |_, j| if j == 0 { 1.0 } else { 0.0 });
+        let shard_views = [f.packed.as_view(), t.as_view(), params.as_view()];
+        let shard = HostKernel
+            .execute(call(KernelOp::BuildQPanel, &shard_views, &mut ws))
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert_eq!(shard.shape(), (24, 2));
+        for i in 0..24 {
+            for j in 0..2 {
+                assert!(
+                    (shard.as_view().at(i, j) - q.as_view().at(i, 1 + j)).abs() < 1e-4,
+                    "shard column {j} must match thin-Q column {}",
+                    1 + j
+                );
+            }
+        }
+
+        // ApplyQWy (Q·C) inverts ApplyWy (Qᵀ·C).
+        let block = Matrix::random(24, 3, 8);
+        let wy_views = [f.packed.as_view(), t.as_view(), block.as_view()];
+        let qt_block = HostKernel
+            .execute(call(KernelOp::ApplyWy, &wy_views, &mut ws))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let fwd_views = [f.packed.as_view(), t.as_view(), qt_block.as_view()];
+        let roundtrip = HostKernel
+            .execute(call(KernelOp::ApplyQWy, &fwd_views, &mut ws))
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert!(
+            roundtrip.max_abs_diff(&block) < 1e-4,
+            "forward apply must invert the transpose apply"
+        );
     }
 
     #[test]

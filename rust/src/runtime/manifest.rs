@@ -154,6 +154,16 @@ impl Manifest {
     pub fn build_q_name(m: usize, n: usize) -> String {
         format!("build_q_{m}x{n}")
     }
+    /// `apply_q_wy_{m}x{n}x{k}` — the compact-WY *forward* (Q-side)
+    /// apply kernel used by coded Q assembly.
+    pub fn apply_q_wy_name(m: usize, n: usize, k: usize) -> String {
+        format!("apply_q_wy_{m}x{n}x{k}")
+    }
+    /// `build_q_panel_{m}x{n}x{k}` — materialize a `k`-column shard of
+    /// the explicit Q from one packed panel + T factor.
+    pub fn build_q_panel_name(m: usize, n: usize, k: usize) -> String {
+        format!("build_q_panel_{m}x{n}x{k}")
+    }
     /// `encode_checksum_{m}x{k}x{b}` — the ABFT checksum-encode kernel
     /// (`m` rows, `k` padded columns, `b` data blocks).
     pub fn encode_checksum_name(m: usize, k: usize, b: usize) -> String {
@@ -219,5 +229,7 @@ mod tests {
         assert_eq!(Manifest::build_t_name(64, 8), "build_t_64x8");
         assert_eq!(Manifest::apply_wy_name(64, 8, 16), "apply_wy_64x8x16");
         assert_eq!(Manifest::build_q_name(64, 8), "build_q_64x8");
+        assert_eq!(Manifest::apply_q_wy_name(64, 8, 16), "apply_q_wy_64x8x16");
+        assert_eq!(Manifest::build_q_panel_name(64, 8, 4), "build_q_panel_64x8x4");
     }
 }

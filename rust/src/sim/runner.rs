@@ -176,8 +176,9 @@ impl SimBatchReport {
 /// network delay and no churn.
 pub fn replay(spec: &CaqrSpec) -> Result<SimReport> {
     spec.validate()?;
-    let policy = spec.policy.unwrap_or_default();
-    let armed = if policy.uses_checksums() { spec.checksums } else { 0 };
+    // One resolution point shared with the executor: explicit knobs or
+    // the failure-model-adaptive choice — parity by construction.
+    let (policy, armed) = spec.resolved_protection();
     let mut sim = Sim::new(
         spec.plan(),
         spec.algo,
@@ -517,6 +518,12 @@ impl Sim {
                     Event::StageEnd(k, CaqrStage::Update),
                 );
             }
+            // The post-factorization Q phases are an executor-side
+            // construct (they cost real matrix work); the simulator's
+            // scenarios never schedule them, so no event carries them.
+            CaqrStage::QAssembly | CaqrStage::ApplyQ => {
+                unreachable!("the simulator does not schedule Q-phase events")
+            }
         }
     }
 
@@ -524,6 +531,9 @@ impl Sim {
         match stage {
             CaqrStage::Factor => self.factor_barrier(k),
             CaqrStage::Update => self.update_barrier(k),
+            CaqrStage::QAssembly | CaqrStage::ApplyQ => {
+                unreachable!("the simulator does not schedule Q-phase events")
+            }
         }
     }
 

@@ -183,6 +183,85 @@ fn caqr_tolerates_exactly_replication_minus_one_per_panel_step() {
 }
 
 #[test]
+fn q_phase_strikes_extend_the_matrix() {
+    // The explicit-Q rows of the matrix (the coded-QR follow-up,
+    // arXiv:2311.11943): the Q-assembly and Q·C application phases obey
+    // the same per-step capacity as the panel loop.  Singles ride on
+    // replication alone; a pair wipe is fatal for replication-only and
+    // survivable under Hybrid c=1 — the abort happens exactly on the
+    // schedules where the hybrid run had to fire its checksum rung.
+    let engine = Engine::host();
+
+    // Singles: every 1-process strike at either Q phase, every rank,
+    // both ladders — survivable, and never at checksum expense.
+    let (procs, m, n, panel) = (4usize, 20usize, 12usize, 4usize);
+    for policy in [RecoveryPolicy::Replica, RecoveryPolicy::Hybrid] {
+        for rank in 0..procs {
+            for stage in [CaqrStage::QAssembly, CaqrStage::ApplyQ] {
+                let c = usize::from(policy.uses_checksums());
+                let res = engine
+                    .run_caqr(
+                        CaqrSpec::new(Algo::Redundant, procs, m, n, panel)
+                            .with_verify(false)
+                            .with_policy(policy)
+                            .with_checksums(c)
+                            .with_schedule(CaqrKillSchedule::at(&[(rank, 0, stage)])),
+                    )
+                    .unwrap();
+                assert!(
+                    res.success(),
+                    "{policy} c={c}: single kill {rank}@{} must be tolerated",
+                    stage.name()
+                );
+                assert!(res.q.is_some() && res.qt_a.is_some(), "Q outputs materialize");
+                assert_eq!(
+                    res.metrics.checksum_reconstructions, 0,
+                    "a single strike is a replica recovery, never a reconstruction"
+                );
+            }
+        }
+    }
+
+    // Pair wipes (P=8, 3 panels): {6,7} owns exactly one assembly
+    // shard, {4,5} exactly one apply shard.  Self-Healing respawns the
+    // pair at the phase boundary, so each wipe costs one shard — within
+    // c=1, beyond replication.
+    let cases: &[(CaqrStage, [usize; 2])] =
+        &[(CaqrStage::QAssembly, [6, 7]), (CaqrStage::ApplyQ, [4, 5])];
+    for &(stage, pair) in cases {
+        let kills = [(pair[0], 0usize, stage), (pair[1], 0usize, stage)];
+        let hybrid = engine
+            .run_caqr(
+                CaqrSpec::new(Algo::SelfHealing, 8, 24, 12, 4)
+                    .with_verify(false)
+                    .with_policy(RecoveryPolicy::Hybrid)
+                    .with_checksums(1)
+                    .with_schedule(CaqrKillSchedule::at(&kills)),
+            )
+            .unwrap();
+        assert!(hybrid.success(), "hybrid c=1 must ride the {} pair wipe", stage.name());
+        assert!(hybrid.metrics.checksum_reconstructions >= 1, "the rung actually fired");
+        assert!(hybrid.metrics.pair_wipes_survived >= 1);
+
+        let replica = engine
+            .run_caqr(
+                CaqrSpec::new(Algo::SelfHealing, 8, 24, 12, 4)
+                    .with_verify(false)
+                    .with_policy(RecoveryPolicy::Replica)
+                    .with_schedule(CaqrKillSchedule::at(&kills)),
+            )
+            .unwrap();
+        assert!(
+            !replica.success(),
+            "replication-only must abort exactly where hybrid reconstructed ({})",
+            stage.name()
+        );
+        assert_eq!(replica.failed_at, Some((3, stage)), "abort pinned to the struck Q phase");
+        assert!(replica.q.is_none() && replica.qt_a.is_none());
+    }
+}
+
+#[test]
 fn hybrid_checksum_ladder_extends_the_tolerated_counts() {
     // The recovery-ladder rows of the matrix: under the adversarial
     // pair-completing kill order (CodedSweep: 1, 0, 3, 2, …, all
