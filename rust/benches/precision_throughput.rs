@@ -1,0 +1,156 @@
+//! BENCH TAB-P1: the mixed-precision workload — what the f32 data
+//! path costs in accuracy (scored against the f64 oracle, checksums
+//! kept in f64 either way) and what it buys or costs in wall time,
+//! per recovery ladder.
+//!
+//!   cargo bench --bench precision_throughput
+//!
+//! Emits `target/reports/BENCH_precision.json`, stamped with the host
+//! `CpuInfo` so the perf gate only hard-compares like-for-like hosts.
+//! With `BENCH_WRITE_BASELINE=1` it refreshes the committed baseline
+//! at `benches/baselines/BENCH_precision.json`; with `BENCH_REGRESS=1`
+//! it compares against that baseline and fails on a >20% drop (the CI
+//! `bench-regress` job).  The gated metrics are machine-relative
+//! f32-vs-f64 wall ratios: the f32 path rounds its way through the
+//! same f64 kernels, so the ratio hovers near 1.0 — the gate exists to
+//! catch the rounding injection turning into a real slowdown.
+
+use ft_tsqr::abft::RecoveryPolicy;
+use ft_tsqr::analysis::PrecisionSweep;
+use ft_tsqr::caqr::CaqrSpec;
+use ft_tsqr::engine::Engine;
+use ft_tsqr::report::bench::{bench, enforce_regress_gate, host_json_fields, iters, quick};
+use ft_tsqr::report::{REPORT_DIR, Table, fmt_f};
+use ft_tsqr::runtime::{CpuInfo, Precision};
+use ft_tsqr::tsqr::Algo;
+
+const BASELINE: &str = "benches/baselines/BENCH_precision.json";
+
+fn main() {
+    let quick = quick();
+    let cpu = CpuInfo::cached();
+    println!("host: {}", cpu.summary());
+    let engine = Engine::host();
+
+    // ------------------------------------------- accuracy (TAB-P1a)
+    // The same cells `repro precision` prints: f64 rows must pin the
+    // oracle bitwise, f32 rows must sit inside the 64·n·ε_f32 bound.
+    // The bench records the worst f32 err/bound ratio so the JSON
+    // shows how much headroom the bound has on this host.
+    let sweep = PrecisionSweep::new(&engine, 4);
+    let rows = sweep.table(quick).expect("precision sweep");
+    let mut atab = Table::new(
+        "TAB-P1a: accuracy vs the f64 oracle (checksums stay f64)",
+        &["matrix", "panel", "policy", "c", "precision", "max|R-Rref|", "bound", "ok"],
+    );
+    let mut worst_err_over_bound = 0.0f64;
+    for row in &rows {
+        assert!(row.within_bound(), "cell out of bound: {row:?}");
+        if row.precision.is_f32() && row.bound > 0.0 {
+            worst_err_over_bound = worst_err_over_bound.max(row.max_err / row.bound);
+        }
+        atab.row(vec![
+            format!("{}x{}", row.m, row.n),
+            row.panel.to_string(),
+            row.policy.to_string(),
+            row.checksums.to_string(),
+            row.precision.to_string(),
+            fmt_f(row.max_err),
+            fmt_f(row.bound),
+            "yes".into(),
+        ]);
+    }
+    print!("{}", atab.render());
+    atab.save_csv(REPORT_DIR).expect("csv");
+
+    // --------------------------------------------- timing (TAB-P1b)
+    // One fault-free CAQR shape, timed under each (policy, c) ladder
+    // at both working precisions.  The speedups are machine-relative:
+    // f32 reuses the f64 kernels plus rounding injection, so ≈1.0 is
+    // the healthy reading and a collapse below the baseline means the
+    // injection grew a hot path.
+    let (m, n, panel) = if quick { (256usize, 64usize, 16usize) } else { (1024, 128, 32) };
+    let time_cell = |policy: RecoveryPolicy, c: usize, precision: Precision| {
+        let spec = || {
+            CaqrSpec::new(Algo::Redundant, 4, m, n, panel)
+                .with_verify(false)
+                .with_policy(policy)
+                .with_checksums(c)
+                .with_precision(precision)
+        };
+        engine.run_caqr(spec()).expect("warm-up run");
+        bench(1, iters(10, 3), || {
+            let res = engine.run_caqr(spec()).expect("caqr run");
+            assert!(res.success());
+            std::hint::black_box(&res);
+        })
+    };
+    let mut ttab = Table::new(
+        format!("TAB-P1b: CAQR {m}x{n}, panel {panel}, 4 procs — f32 vs f64 wall"),
+        &["policy", "c", "f64", "f32", "f32 vs f64"],
+    );
+    let mut speedups: Vec<(RecoveryPolicy, f64)> = Vec::new();
+    let mut walls: Vec<(RecoveryPolicy, f64, f64)> = Vec::new();
+    for &(policy, c) in &PrecisionSweep::policies() {
+        let s64 = time_cell(policy, c, Precision::F64);
+        let s32 = time_cell(policy, c, Precision::F32);
+        let speedup = s64.median.as_secs_f64() / s32.median.as_secs_f64();
+        speedups.push((policy, speedup));
+        walls.push((policy, s64.median.as_secs_f64(), s32.median.as_secs_f64()));
+        ttab.row(vec![
+            policy.to_string(),
+            c.to_string(),
+            s64.fmt_median(),
+            s32.fmt_median(),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    print!("{}", ttab.render());
+    ttab.save_csv(REPORT_DIR).expect("csv");
+
+    // ------------------------------------------------------------- JSON
+    let replica_speedup = speedups
+        .iter()
+        .find(|(p, _)| *p == RecoveryPolicy::Replica)
+        .map(|(_, s)| *s)
+        .unwrap_or(0.0);
+    let hybrid_speedup = speedups
+        .iter()
+        .find(|(p, _)| *p == RecoveryPolicy::Hybrid)
+        .map(|(_, s)| *s)
+        .unwrap_or(0.0);
+    let wall_json: String = walls
+        .iter()
+        .map(|(p, w64, w32)| {
+            format!("  \"{p}_f64_wall_s\": {w64:.4},\n  \"{p}_f32_wall_s\": {w32:.4},\n")
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"precision_throughput\",\n  \"quick\": {quick},\n  \
+         \"provisional\": false,\n  {host},\n  \
+         \"caqr_m\": {m},\n  \"caqr_n\": {n},\n  \"caqr_panel\": {panel},\n\
+         {wall_json}  \"f32_err_over_bound\": {worst_err_over_bound:.4},\n  \
+         \"f32_vs_f64_speedup\": {replica_speedup:.3},\n  \
+         \"hybrid_f32_vs_f64_speedup\": {hybrid_speedup:.3}\n}}\n",
+        host = host_json_fields(),
+    );
+    std::fs::create_dir_all(REPORT_DIR).expect("mkdir reports");
+    let json_path = format!("{REPORT_DIR}/BENCH_precision.json");
+    std::fs::write(&json_path, &json).expect("write BENCH_precision.json");
+    println!("wrote {json_path}");
+
+    if std::env::var("BENCH_WRITE_BASELINE").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all("benches/baselines").expect("mkdir baselines");
+        std::fs::write(BASELINE, &json).expect("write baseline");
+        println!("refreshed baseline {BASELINE}");
+    }
+
+    enforce_regress_gate(
+        "precision_throughput",
+        BASELINE,
+        &[
+            ("f32_vs_f64_speedup", replica_speedup),
+            ("hybrid_f32_vs_f64_speedup", hybrid_speedup),
+        ],
+    );
+}

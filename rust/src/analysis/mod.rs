@@ -7,6 +7,7 @@ pub mod checkpoint_vs_redundant;
 pub mod closed_form;
 pub mod coded;
 pub mod fullsim;
+pub mod precision;
 pub mod robustness;
 pub mod simsweep;
 pub mod survival;
@@ -16,6 +17,7 @@ pub use checkpoint_vs_redundant::{CheckpointVsRedundant, CompareCell, Contender}
 pub use closed_form::{survival_curve, survival_exact_f_at_round};
 pub use coded::{CodedRow, CodedSweep};
 pub use fullsim::{CaqrSweep, FullSimSweep};
+pub use precision::{PrecisionRow, PrecisionSweep};
 pub use robustness::{
     max_tolerated_by_step, redundancy_copies, self_healing_total_tolerated,
     survives_failure_set,

@@ -1,0 +1,201 @@
+//! Mixed-precision accuracy-vs-speed sweep: what does dropping the
+//! data path to f32 cost in accuracy, and what does it buy in wall
+//! time, per shape and per recovery policy?
+//!
+//! Each cell runs one CAQR factorization at a fixed `(m, n, panel)`
+//! shape under a `(policy, c)` ladder and a [`Precision`], then scores
+//! it against the f64 oracle (`householder_qr_reference`):
+//!
+//! * [`Precision::F64`] cells pin the oracle **bitwise** — their bound
+//!   is exactly `0.0`, the regression contract every existing test
+//!   relies on.  (Under a threaded backend plan the factorizations are
+//!   tolerance-contracted, so f64 cells inherit the rounding bound
+//!   instead of the bitwise pin.)
+//! * [`Precision::F32`] cells must stay within the column-wise rounding
+//!   bound `c·n·ε_f32·max(1, ‖R‖_F)` (the same shape as
+//!   [`Contract::Tolerance`](crate::runtime::Contract)) — checksums
+//!   stay f64 either way, so the coded rung keeps its algebraic
+//!   headroom over the f32 data it protects.
+//!
+//! The `repro precision` subcommand prints the table;
+//! `benches/precision_throughput.rs` times the same cells and gates the
+//! machine-relative f32-vs-f64 speedup ratio into
+//! `BENCH_precision.json`.
+
+use std::time::Duration;
+
+use crate::abft::RecoveryPolicy;
+use crate::caqr::CaqrSpec;
+use crate::engine::Engine;
+use crate::error::Result;
+use crate::runtime::Precision;
+use crate::tsqr::Algo;
+
+/// One `(shape, policy, precision)` cell of the sweep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrecisionRow {
+    /// Input rows.
+    pub m: usize,
+    /// Input columns.
+    pub n: usize,
+    /// Block-column width.
+    pub panel: usize,
+    /// Recovery ladder the run executed under.
+    pub policy: RecoveryPolicy,
+    /// Checksum blocks armed.
+    pub checksums: usize,
+    /// Working precision of the data path.
+    pub precision: Precision,
+    /// Wall clock of the factorization.
+    pub wall: Duration,
+    /// `max |R - R_oracle|` against the f64 reference (∞ when the run
+    /// produced no R).
+    pub max_err: f64,
+    /// The accuracy bound this cell must satisfy: `0.0` (bitwise) for
+    /// f64 cells on a bitwise backend plan,
+    /// `64·n·ε_f32·max(1, ‖R‖_F)` for f32 cells and for any cell run
+    /// under a threaded (tolerance-contracted) plan.
+    pub bound: f64,
+    /// Did the factorization complete?
+    pub success: bool,
+}
+
+impl PrecisionRow {
+    /// Did the cell complete *and* land within its declared accuracy
+    /// bound?  (For f64 cells this is the bitwise oracle pin.)
+    pub fn within_bound(&self) -> bool {
+        self.success && self.max_err <= self.bound
+    }
+}
+
+/// Accuracy-vs-speed sweep over shapes × recovery policies × working
+/// precisions (see the [module docs](self)).
+pub struct PrecisionSweep<'e> {
+    engine: &'e Engine,
+    /// World size (even, ≥ 2).
+    pub procs: usize,
+    /// Input-matrix seed.
+    pub seed: u64,
+}
+
+impl<'e> PrecisionSweep<'e> {
+    /// A sweep over `procs` simulated processes.
+    pub fn new(engine: &'e Engine, procs: usize) -> Self {
+        Self { engine, procs, seed: 42 }
+    }
+
+    /// Replace the input-matrix seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The `(m, n, panel)` shapes the sweep visits: one tall-skinny
+    /// shape in quick mode; square-ish panels and a wide-panel shape in
+    /// the full set.
+    pub fn shapes(quick: bool) -> Vec<(usize, usize, usize)> {
+        if quick {
+            vec![(48, 12, 4)]
+        } else {
+            vec![(48, 12, 4), (64, 8, 4), (96, 24, 8)]
+        }
+    }
+
+    /// The `(policy, c)` ladders the sweep compares: replication alone
+    /// against the hybrid coded rung.
+    pub fn policies() -> Vec<(RecoveryPolicy, usize)> {
+        vec![(RecoveryPolicy::Replica, 0), (RecoveryPolicy::Hybrid, 1)]
+    }
+
+    /// Run one cell: factor at the given shape/ladder/precision and
+    /// score R against the f64 oracle.
+    pub fn cell(
+        &self,
+        m: usize,
+        n: usize,
+        panel: usize,
+        policy: RecoveryPolicy,
+        checksums: usize,
+        precision: Precision,
+    ) -> Result<PrecisionRow> {
+        let spec = CaqrSpec::new(Algo::Redundant, self.procs, m, n, panel)
+            .with_seed(self.seed)
+            .with_verify(false)
+            .with_policy(policy)
+            .with_checksums(checksums)
+            .with_precision(precision);
+        let reference = crate::linalg::householder_qr_reference(&spec.input_matrix()).r();
+        let res = self.engine.run_caqr(spec)?;
+        let max_err = match &res.final_r {
+            Some(r) => r.max_abs_diff(&reference),
+            None => f64::INFINITY,
+        };
+        // The bitwise oracle pin only holds for f64 cells on a bitwise
+        // backend: when the engine's plan routes any op to the threaded
+        // kernel, the factorizations are tolerance-bounded (see
+        // `Contract`), so every cell inherits the rounding bound.
+        let bitwise = !precision.is_f32() && !self.engine.default_backend_plan().uses_threaded();
+        let bound = if bitwise {
+            0.0
+        } else {
+            64.0 * n as f64 * f64::from(f32::EPSILON) * reference.fro_norm().max(1.0)
+        };
+        Ok(PrecisionRow {
+            m,
+            n,
+            panel,
+            policy,
+            checksums,
+            precision,
+            wall: res.wall,
+            max_err,
+            bound,
+            success: res.success(),
+        })
+    }
+
+    /// The full table: every shape × ladder × precision cell, f64 and
+    /// f32 adjacent so accuracy-vs-speed reads off one row pair.
+    pub fn table(&self, quick: bool) -> Result<Vec<PrecisionRow>> {
+        let mut rows = Vec::new();
+        for &(m, n, panel) in &Self::shapes(quick) {
+            for &(policy, c) in &Self::policies() {
+                for precision in [Precision::F64, Precision::F32] {
+                    rows.push(self.cell(m, n, panel, policy, c, precision)?);
+                }
+            }
+        }
+        Ok(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_have_the_documented_cells() {
+        assert_eq!(PrecisionSweep::shapes(true).len(), 1);
+        assert_eq!(PrecisionSweep::shapes(false).len(), 3);
+        assert_eq!(PrecisionSweep::policies().len(), 2);
+        for (m, n, panel) in PrecisionSweep::shapes(false) {
+            assert!(m >= n && n >= panel && n % panel == 0, "({m},{n},{panel}) must tile");
+        }
+    }
+
+    #[test]
+    fn quick_table_pins_f64_bitwise_and_bounds_f32() {
+        let engine = Engine::host();
+        let rows = PrecisionSweep::new(&engine, 4).table(true).unwrap();
+        assert_eq!(rows.len(), 4, "1 shape x 2 ladders x 2 precisions");
+        for row in &rows {
+            assert!(row.success, "fault-free cell must complete: {row:?}");
+            assert!(row.within_bound(), "cell out of bound: {row:?}");
+            if !row.precision.is_f32() {
+                assert_eq!(row.max_err, 0.0, "f64 cells pin the oracle bitwise: {row:?}");
+            } else {
+                assert!(row.bound > 0.0);
+            }
+        }
+    }
+}

@@ -80,6 +80,17 @@
 //! [`KernelProfile::Blocked`], whose compact-WY updates trade the
 //! bitwise pin against the unblocked oracle for level-3 speed.
 //!
+//! Under [`Precision::F32`] (see [`CaqrSpec::with_precision`]) each
+//! *data* task additionally rounds its result through f32 at the task
+//! boundary — the mixed-precision workload — while the checksum tasks
+//! and the encoder's reconstruction algebra stay f64, so the coded
+//! rung retains higher precision than the data it protects.  Replicas
+//! round identically, so single-strike recovery stays bit-identical;
+//! pair-wipe reconstruction lands within an f32-level bound instead of
+//! exactly (the property suite pins both).  `Precision::F64` takes the
+//! byte-identical old path: every rounding site is behind an
+//! `is_f32()` branch.
+//!
 //! [`PanelPlan`]: crate::tsqr::PanelPlan
 //! [`PanelPlan::checksum_assignees`]: crate::tsqr::PanelPlan::checksum_assignees
 //! [`MetricsSnapshot::checksum_reconstructions`]: crate::ulfm::MetricsSnapshot
@@ -94,10 +105,11 @@ use crate::abft::{Encoder, RecoveryPolicy};
 use crate::engine::{TaskGroup, WorkerPool};
 use crate::error::Result;
 use crate::fault::CaqrStage;
-use crate::linalg::view::{apply_q_f64, apply_update_f64, factor_panel_f64};
+use crate::linalg::view::{apply_q_f64, apply_update_f64, factor_panel_f64, round_f32_in_place};
 use crate::linalg::wy::{self, WyFactor};
 use crate::linalg::{Matrix, PackedQr};
-use crate::runtime::KernelProfile;
+use crate::runtime::threaded::factor_panel_chunked_f64;
+use crate::runtime::{BackendChoice, KernelOp, KernelProfile, Precision};
 use crate::tsqr::{Algo, PanelPlan, verify};
 use crate::ulfm::{MetricsSnapshot, ProcStatus};
 
@@ -380,6 +392,21 @@ struct FactorStage {
     results: Arc<Mutex<FactorMap>>,
 }
 
+/// Per-run task context threaded into every factor task: the kernel
+/// profile, the working precision, and the (backend-selected) f64
+/// factor core.  One shared `Copy` value per run, so every replica of
+/// every panel runs the identical core with the identical rounding —
+/// replica bit-identity holds per backend and per precision by
+/// construction.
+#[derive(Clone, Copy)]
+struct FactorCtx {
+    profile: KernelProfile,
+    precision: Precision,
+    /// `factor_panel_f64` (host) or `factor_panel_chunked_f64`
+    /// (threaded backend plan) — both the same packed convention.
+    factor_core: fn(&mut [f64], usize, usize, &mut [f64]),
+}
+
 /// Spawn one factor task per live replica over a shared panel snapshot.
 fn spawn_factor(
     pool: &WorkerPool,
@@ -387,7 +414,7 @@ fn spawn_factor(
     snap: Arc<Vec<f64>>,
     rows: usize,
     cols: usize,
-    profile: KernelProfile,
+    ctx: FactorCtx,
 ) -> FactorStage {
     let results: Arc<Mutex<FactorMap>> = Arc::new(Mutex::new(BTreeMap::new()));
     let tasks = TaskGroup::new(pool.clone());
@@ -397,15 +424,23 @@ fn spawn_factor(
         tasks.spawn(move || {
             let mut wbuf = (*snap).clone();
             let mut t = vec![0.0f64; cols];
-            let wy = match profile {
+            let wy = match ctx.profile {
                 KernelProfile::Reference => {
-                    factor_panel_f64(&mut wbuf, rows, cols, &mut t);
+                    (ctx.factor_core)(&mut wbuf, rows, cols, &mut t);
                     None
                 }
                 KernelProfile::Blocked => {
                     Some(Arc::new(wy::factor_panel_blocked_f64(&mut wbuf, rows, cols, &mut t)))
                 }
             };
+            // Mixed precision: the task-boundary rounding.  Every
+            // replica rounds the identical bits, so the harvest's
+            // bit-identity assert is untouched; under F64 this is a
+            // no-op branch and the bytes are exactly the old path's.
+            if ctx.precision.is_f32() {
+                round_f32_in_place(&mut wbuf);
+                round_f32_in_place(&mut t);
+            }
             out.lock().unwrap().insert(rank, (wbuf, t, wy));
         });
     }
@@ -480,6 +515,18 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
     let plan = spec.plan();
     let profile = spec.profile.unwrap_or_default();
     let parallelism = spec.parallelism.unwrap_or_default();
+    let precision = spec.precision;
+    // The in-process backend plan picks the factor core every replica
+    // runs (the one op whose arithmetic differs between backends —
+    // the slab ops are bitwise, so routing them is a wall-clock-only
+    // decision made at the executor, not here).
+    let backend = spec.backend.clone().unwrap_or_default();
+    let factor_core: fn(&mut [f64], usize, usize, &mut [f64]) =
+        match backend.select(KernelOp::LeafQr) {
+            BackendChoice::Host => factor_panel_f64,
+            BackendChoice::Threaded => factor_panel_chunked_f64,
+        };
+    let fctx = FactorCtx { profile, precision, factor_core };
     // One resolution point for the protection knobs: an explicit
     // policy/checksum pair, or the failure-model-adaptive choice.
     let (policy, checksums) = spec.resolved_protection();
@@ -534,9 +581,16 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                         // rebuild the wiped shards, re-execute on the
                         // lowest-ranked survivor.
                         let avail = live_checksums(&plan, k, checksums, alive_f);
-                        let snap2 = rebuild_factor_snapshot(
+                        let mut snap2 = rebuild_factor_snapshot(
                             &snap, rows, cols, rb, checksums, &avail,
                         )?;
+                        // Mixed precision: the state is f32-representable,
+                        // so rounding the f64-reconstructed shards snaps
+                        // them back onto the exact lost values whenever
+                        // the solve's error is below half an f32 ulp.
+                        if precision.is_f32() {
+                            round_f32_in_place(&mut snap2);
+                        }
                         panel_reconstructions += rb.lost.len() as u64;
                         metrics.checksum_reconstructions += rb.lost.len() as u64;
                         metrics.pair_wipes_survived += 1;
@@ -546,7 +600,7 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                             Arc::new(snap2),
                             rows,
                             cols,
-                            profile,
+                            fctx,
                         )
                     }
                     None => {
@@ -554,7 +608,7 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                             .into_iter()
                             .filter(|&r| alive_f[r])
                             .collect();
-                        spawn_factor(pool, &replicas, Arc::new(snap), rows, cols, profile)
+                        spawn_factor(pool, &replicas, Arc::new(snap), rows, cols, fctx)
                     }
                 }
             }
@@ -644,6 +698,12 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                         let (pan, t) = &*panel_shared;
                         apply_update_f64(pan, rows, cols, t, &mut blk, bk);
                     }
+                }
+                // Mixed precision: data tasks round at the boundary;
+                // checksum tasks do NOT — the coded rung keeps its f64
+                // headroom over the f32 data it protects.
+                if precision.is_f32() && key_is_checksum.is_none() {
+                    round_f32_in_place(&mut blk);
                 }
                 match key_is_checksum {
                     Some(l) => cout.lock().unwrap().insert((l, rank), blk),
@@ -742,7 +802,7 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                         Arc::new(snap),
                         next_rows,
                         next_cols,
-                        profile,
+                        fctx,
                     ));
                 }
             }
@@ -793,7 +853,15 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                 })
                 .collect();
             let rebuilt = encoder.reconstruct(rows, &widths, &opts, &checks, pad)?;
-            for (j, blk) in rebuilt {
+            for (j, mut blk) in rebuilt {
+                // Mixed precision: a reconstructed block re-enters the
+                // f32-representable state through the same rounding a
+                // surviving task applied (within the coded rung's
+                // f32-level bound, not bit-exactly — the bound the
+                // property suite pins).
+                if precision.is_f32() {
+                    round_f32_in_place(&mut blk);
+                }
                 let (t0, t1) = plan.update_cols(k, j);
                 let bk = t1 - t0;
                 for i in 0..rows {
@@ -927,6 +995,12 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                             apply_update_f64(pan, m - c0, pt.len(), pt, &mut buf[c0 * wj..], wj);
                         }
                     }
+                    // Mixed precision: same boundary rule as the panel
+                    // updates — data shards round, checksum chains
+                    // keep their f64 headroom.
+                    if precision.is_f32() && key_is_checksum.is_none() {
+                        round_f32_in_place(&mut buf);
+                    }
                     match key_is_checksum {
                         Some(l) => cout.lock().unwrap().insert((l, rank), buf),
                         None => out.lock().unwrap().insert((j, rank), buf),
@@ -1000,7 +1074,10 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
                 }
                 let opts: Vec<Option<&[f64]>> = outputs.iter().map(|o| o.as_deref()).collect();
                 let rebuilt = encoder.reconstruct(m, &widths, &opts, &checks, pad)?;
-                for (j, blk) in rebuilt {
+                for (j, mut blk) in rebuilt {
+                    if precision.is_f32() {
+                        round_f32_in_place(&mut blk);
+                    }
                     outputs[j] = Some(blk);
                 }
                 metrics.checksum_reconstructions += ph.lost.len() as u64;
@@ -1064,6 +1141,7 @@ pub(crate) fn execute(spec: &CaqrSpec, pool: &WorkerPool) -> Result<CaqrResult> 
         profile,
         policy,
         checksums,
+        precision,
         procs: spec.procs,
         panels: plan.panels(),
         failed_at,
@@ -1402,6 +1480,131 @@ mod tests {
             "checksum tasks must not perturb QᵀA"
         );
         assert_eq!(coded.metrics.checksum_reconstructions, 0);
+    }
+
+    #[test]
+    fn f64_precision_is_the_byte_identical_default() {
+        // The precision plumbing must be invisible at F64: explicit
+        // F64 and the untouched default produce the same bytes as each
+        // other (and the bitwise oracle pins above already tie the
+        // default to the pre-plumbing behaviour).
+        let plain = run(CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4));
+        let explicit = run(
+            CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4).with_precision(Precision::F64),
+        );
+        assert_eq!(explicit.precision, Precision::F64);
+        assert_eq!(
+            explicit.final_r.as_ref().unwrap().data(),
+            plain.final_r.as_ref().unwrap().data()
+        );
+        assert_eq!(
+            explicit.factors.as_ref().unwrap().packed.data(),
+            plain.factors.as_ref().unwrap().packed.data()
+        );
+    }
+
+    #[test]
+    fn f32_precision_is_deterministic_and_close_to_the_oracle() {
+        let spec = || CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4).with_precision(Precision::F32);
+        let a = spec().input_matrix();
+        let r1 = run(spec());
+        let r2 = run(spec());
+        assert!(r1.success());
+        assert_eq!(r1.precision, Precision::F32);
+        assert_eq!(
+            r1.final_r.as_ref().unwrap().data(),
+            r2.final_r.as_ref().unwrap().data(),
+            "f32 runs must be run-to-run bit-deterministic"
+        );
+        let reference = crate::linalg::householder_qr_reference(&a).r();
+        assert!(
+            r1.final_r.as_ref().unwrap().max_abs_diff(&reference) < 1e-3,
+            "f32 data path must stay within f32-level error of the f64 oracle"
+        );
+    }
+
+    #[test]
+    fn f32_single_strike_recovers_its_own_clean_bits() {
+        // Replicas round identically, so replica harvest stays
+        // bit-exact under mixed precision — the invariant that makes
+        // f32 CAQR fault-tolerant at all.
+        let mk = |kills: &[(usize, usize, CaqrStage)]| {
+            CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+                .with_precision(Precision::F32)
+                .with_schedule(CaqrKillSchedule::at(kills))
+        };
+        let clean = run(mk(&[]));
+        for stage in [CaqrStage::Factor, CaqrStage::Update] {
+            let struck = run(mk(&[(1, 0, stage)]));
+            assert!(struck.success(), "{stage:?}: replica must carry the f32 strike");
+            assert_eq!(
+                struck.final_r.as_ref().unwrap().data(),
+                clean.final_r.as_ref().unwrap().data(),
+                "{stage:?}: f32 single-strike recovery must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_hybrid_pair_wipe_reconstructs_within_the_f32_bound() {
+        // The mixed-precision contract: f64 checksums over f32 data
+        // ride through a pair wipe with f32-level (not bit-exact)
+        // reconstruction error.
+        let clean = run(
+            CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4).with_precision(Precision::F32),
+        );
+        let wipe = PairWipeSchedule::new(2, 0, CaqrStage::Update);
+        let struck = run(
+            CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+                .with_precision(Precision::F32)
+                .with_schedule(wipe.schedule())
+                .with_policy(RecoveryPolicy::Hybrid)
+                .with_checksums(1),
+        );
+        assert!(struck.success(), "f64 checksums must carry the f32 pair wipe");
+        assert!(struck.metrics.pair_wipes_survived >= 1);
+        assert!(
+            struck
+                .final_r
+                .as_ref()
+                .unwrap()
+                .max_abs_diff(clean.final_r.as_ref().unwrap())
+                < 1e-3,
+            "f32 reconstruction must stay within the f32 column-wise bound"
+        );
+    }
+
+    #[test]
+    fn threaded_backend_caqr_is_deterministic_and_recovers_bitwise() {
+        use crate::runtime::BackendPlan;
+        // The chunked-reduction factor core replaces factor_panel_f64
+        // on every replica at once: runs are deterministic, recovery
+        // stays bit-identical against the run's own clean bits, and
+        // the result stays numerically tied to the oracle.
+        let mk = |kills: &[(usize, usize, CaqrStage)]| {
+            CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+                .with_backend(BackendPlan::threaded())
+                .with_schedule(CaqrKillSchedule::at(kills))
+        };
+        let a = mk(&[]).input_matrix();
+        let c1 = run(mk(&[]));
+        let c2 = run(mk(&[]));
+        assert!(c1.success());
+        assert_eq!(
+            c1.final_r.as_ref().unwrap().data(),
+            c2.final_r.as_ref().unwrap().data(),
+            "threaded-plan runs must be run-to-run bit-deterministic"
+        );
+        let reference = crate::linalg::householder_qr_reference(&a).r();
+        assert!(c1.final_r.as_ref().unwrap().max_abs_diff(&reference) < 1e-3);
+        let struck = run(mk(&[(1, 0, CaqrStage::Update)]));
+        assert!(struck.success());
+        assert!(struck.metrics.update_recoveries > 0);
+        assert_eq!(
+            struck.final_r.as_ref().unwrap().data(),
+            c1.final_r.as_ref().unwrap().data(),
+            "threaded-plan recovery must reproduce its own clean bits"
+        );
     }
 
     #[test]

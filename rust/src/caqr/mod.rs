@@ -90,7 +90,7 @@ use crate::abft::RecoveryPolicy;
 use crate::error::{Error, Result};
 use crate::fault::{CaqrKillSchedule, CaqrStage};
 use crate::linalg::{Matrix, PackedQr};
-use crate::runtime::{KernelProfile, Parallelism};
+use crate::runtime::{BackendPlan, KernelProfile, Parallelism, Precision};
 use crate::tsqr::verify::Verification;
 use crate::tsqr::{Algo, PanelPlan};
 use crate::ulfm::{MetricsSnapshot, ProcStatus, Rank};
@@ -149,6 +149,21 @@ pub struct CaqrSpec {
     /// Q assembly or `apply_q` is recoverable.  Off by default: the
     /// paper's R-only runs don't pay for phases they don't use.
     pub protect_q: bool,
+    /// Working precision of the data path.  [`Precision::F64`] (the
+    /// default) keeps every inter-task handoff in f64 — the bitwise
+    /// contract above.  [`Precision::F32`] rounds each task's result
+    /// through f32 at the task boundary (the mixed-precision workload),
+    /// while checksum encoding/reconstruction **stays f64** so the
+    /// coded rung keeps its algebraic headroom over the data it
+    /// protects (arXiv:0806.3121's precision-separation requirement).
+    pub precision: Precision,
+    /// In-process backend routing for this run's kernels (`None`
+    /// inherits the engine's plan; everything-on-host by default).
+    /// Factor tasks route per `plan.select(KernelOp::LeafQr)`:
+    /// `Threaded` swaps in the chunked-reduction factor core on every
+    /// replica at once, so replica bit-identity is preserved per
+    /// backend (the invariant recovery rests on).
+    pub backend: Option<BackendPlan>,
 }
 
 impl CaqrSpec {
@@ -169,6 +184,8 @@ impl CaqrSpec {
             parallelism: None,
             failure_model: None,
             protect_q: false,
+            precision: Precision::F64,
+            backend: None,
         }
     }
 
@@ -232,6 +249,21 @@ impl CaqrSpec {
     /// panel walk.
     pub fn with_q_protection(mut self, on: bool) -> Self {
         self.protect_q = on;
+        self
+    }
+
+    /// Set the working precision of the data path (default
+    /// [`Precision::F64`]; see the [`precision`](Self::precision) field
+    /// for the mixed-precision semantics).
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Pin the in-process backend plan for this spec (overrides the
+    /// engine's plan; see the [`backend`](Self::backend) field).
+    pub fn with_backend(mut self, plan: BackendPlan) -> Self {
+        self.backend = Some(plan);
         self
     }
 
@@ -398,6 +430,9 @@ pub struct CaqrResult {
     /// Checksum blocks encoded per panel stage (0 under
     /// [`RecoveryPolicy::Replica`]).
     pub checksums: usize,
+    /// Working precision the data path ran at (checksums stay f64
+    /// either way; see [`CaqrSpec::precision`]).
+    pub precision: Precision,
     /// World size.
     pub procs: usize,
     /// Panels the plan scheduled.
@@ -651,6 +686,17 @@ mod tests {
         // The derived count matches the adaptive policy exactly.
         let choice = crate::analysis::AdaptivePolicy::new(500.0).choose(16, 4);
         assert_eq!((policy, c), (choice.policy, choice.checksums));
+    }
+
+    #[test]
+    fn precision_and_backend_knobs_default_off() {
+        let spec = CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4);
+        assert_eq!(spec.precision, Precision::F64);
+        assert!(spec.backend.is_none());
+        let spec = spec.with_precision(Precision::F32).with_backend(BackendPlan::threaded());
+        assert_eq!(spec.precision, Precision::F32);
+        assert!(spec.backend.as_ref().unwrap().uses_threaded());
+        assert!(spec.validate().is_ok(), "neither knob disturbs validation");
     }
 
     #[test]

@@ -40,7 +40,9 @@ use std::sync::{Arc, Mutex, mpsc};
 use crate::abft::RecoveryPolicy;
 use crate::caqr::{CaqrCampaign, CaqrResult, CaqrSpec};
 use crate::error::{Error, Result};
-use crate::runtime::{Backend, CpuInfo, Executor, KernelProfile, Parallelism, DEFAULT_ARTIFACT_DIR};
+use crate::runtime::{
+    Backend, BackendPlan, CpuInfo, Executor, KernelProfile, Parallelism, DEFAULT_ARTIFACT_DIR,
+};
 use crate::sim::{SimBatchReport, SimScenario};
 use crate::tsqr::{RunResult, RunSpec};
 
@@ -55,6 +57,7 @@ pub struct EngineBuilder {
     kernel_profile: KernelProfile,
     recovery_policy: RecoveryPolicy,
     adaptive_rate: Option<f64>,
+    backend_plan: BackendPlan,
 }
 
 impl Default for EngineBuilder {
@@ -68,6 +71,7 @@ impl Default for EngineBuilder {
             kernel_profile: KernelProfile::default(),
             recovery_policy: RecoveryPolicy::default(),
             adaptive_rate: None,
+            backend_plan: BackendPlan::default(),
         }
     }
 }
@@ -146,6 +150,20 @@ impl EngineBuilder {
         self
     }
 
+    /// Default in-process [`BackendPlan`] for kernel dispatch: route
+    /// every op to the [`HostKernel`](crate::runtime::HostKernel)
+    /// oracle (the default), to the pool-parallel
+    /// [`ThreadedKernel`](crate::runtime::ThreadedKernel), or mix
+    /// per-op via [`BackendPlan::with_op`].  Applies to every kernel
+    /// call the executor dispatches on the host path; CAQR submissions
+    /// additionally inherit it as their factor-core routing unless the
+    /// spec pins its own plan via
+    /// [`CaqrSpec::with_backend`](crate::caqr::CaqrSpec::with_backend).
+    pub fn backend_plan(mut self, plan: BackendPlan) -> Self {
+        self.backend_plan = plan;
+        self
+    }
+
     /// Failure-model-adaptive protection: CAQR submissions with no
     /// explicit policy or checksum count inherit
     /// [`CaqrSpec::with_failure_model`](crate::caqr::CaqrSpec::with_failure_model)
@@ -179,6 +197,7 @@ impl EngineBuilder {
                 Executor::with_artifacts(&self.artifact_dir, Backend::Pjrt, self.pjrt_shards)?
             }
         };
+        let executor = executor.with_backend_plan(self.backend_plan);
         Ok(Engine::from_parts(
             executor,
             self.prewarm,
@@ -311,6 +330,13 @@ impl Engine {
         self.default_failure_model
     }
 
+    /// The default in-process [`BackendPlan`] kernel calls dispatch
+    /// under, and that CAQR submissions inherit when their spec does
+    /// not pin one (see [`EngineBuilder::backend_plan`]).
+    pub fn default_backend_plan(&self) -> &BackendPlan {
+        self.executor.backend_plan()
+    }
+
     /// The default intra-task kernel [`Parallelism`] CAQR submissions
     /// inherit when their spec does not pin one (the `--threads` knob).
     pub fn default_parallelism(&self) -> Parallelism {
@@ -379,6 +405,9 @@ impl Engine {
         }
         if spec.parallelism.is_none() {
             spec.parallelism = Some(self.default_parallelism);
+        }
+        if spec.backend.is_none() {
+            spec.backend = Some(self.executor.backend_plan().clone());
         }
         spec
     }
@@ -652,6 +681,39 @@ mod tests {
             .unwrap();
         assert_eq!(res.policy, RecoveryPolicy::Replica);
         assert_eq!(res.checksums, 0, "replica policy never encodes");
+    }
+
+    #[test]
+    fn backend_plan_knob_flows_into_caqr_runs() {
+        use crate::caqr::CaqrSpec;
+        let host = Engine::host();
+        assert!(!host.default_backend_plan().uses_threaded(), "host-only is the default plan");
+        let oracle = host.run_caqr(CaqrSpec::new(Algo::Redundant, 4, 48, 12, 4)).unwrap();
+        assert!(oracle.success());
+        let oracle_r = oracle.final_r.as_ref().unwrap();
+
+        let threaded =
+            Engine::builder().host_only().backend_plan(BackendPlan::threaded()).build().unwrap();
+        assert!(threaded.default_backend_plan().uses_threaded());
+        // An unpinned spec inherits the engine plan: the chunked factor
+        // core runs, so R agrees with the oracle to f32-level accuracy
+        // (reassociated reductions) but need not be bitwise.
+        let res = threaded.run_caqr(CaqrSpec::new(Algo::Redundant, 4, 48, 12, 4)).unwrap();
+        assert!(res.success());
+        let got = res.final_r.as_ref().unwrap();
+        assert!(got.max_abs_diff(oracle_r) < 1e-3, "threaded plan stays near the oracle");
+        // A spec-level pin overrides the engine default: routing back to
+        // host reproduces the oracle's exact bits.
+        let pinned = threaded
+            .run_caqr(
+                CaqrSpec::new(Algo::Redundant, 4, 48, 12, 4).with_backend(BackendPlan::host()),
+            )
+            .unwrap();
+        assert_eq!(
+            pinned.final_r.as_ref().unwrap(),
+            oracle_r,
+            "spec-level host pin is bitwise the oracle"
+        );
     }
 
     #[test]

@@ -299,6 +299,20 @@ impl Workspace {
     }
 }
 
+/// Round every element through f32 and back (`x as f32 as f64`): the
+/// single primitive behind the mixed-precision CAQR path.  An f32 run
+/// is the f64 schedule with this rounding applied at every task
+/// boundary, so f64 checksums keep protecting f32 data (the checksum
+/// arithmetic itself is never rounded — see `abft::kernels`).
+/// Idempotent, and the identity on data already f32-representable —
+/// which is why `Precision::F64` runs are byte-identical with the
+/// precision plumbing in place.
+pub fn round_f32_in_place(buf: &mut [f64]) {
+    for x in buf.iter_mut() {
+        *x = *x as f32 as f64;
+    }
+}
+
 // ---------------------------------------------------------------------
 // Blocked factorization core
 // ---------------------------------------------------------------------

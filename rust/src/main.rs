@@ -12,6 +12,9 @@
 //! * `caqr`      general-matrix fault-tolerant CAQR: one factorization
 //!               with (rank, panel, stage) kills or a named scenario,
 //!               or `--sweep` for survival over panel counts
+//! * `precision` mixed-precision accuracy-vs-speed table: f64 (bitwise
+//!               oracle pin) against the f32 data path (f64 checksums)
+//!               across shapes and recovery ladders
 //! * `simulate`  discrete-event fault campaign from a scenario file —
 //!               survival at 10⁵–10⁶ simulated ranks with churn,
 //!               bursts, and network models (`--curve` sweeps the
@@ -33,12 +36,14 @@
 //! value`), since the vendored crate set has no clap; see `Args` below.
 
 use ft_tsqr::abft::RecoveryPolicy;
-use ft_tsqr::analysis::{CaqrSweep, FullSimSweep, SimSweep, SurvivalSweep, max_tolerated_by_step};
+use ft_tsqr::analysis::{
+    CaqrSweep, FullSimSweep, PrecisionSweep, SimSweep, SurvivalSweep, max_tolerated_by_step,
+};
 use ft_tsqr::caqr::{CaqrScenario, CaqrSpec};
 use ft_tsqr::config::{Config, FailureConfig};
 use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage, Scenario};
 use ft_tsqr::report::{Table, fmt_f, fmt_prob};
-use ft_tsqr::runtime::{KernelProfile, Manifest};
+use ft_tsqr::runtime::{BackendPlan, KernelProfile, Manifest, Precision};
 use ft_tsqr::service::{TrafficSpec, run_traffic};
 use ft_tsqr::sim::SimScenario;
 use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan};
@@ -60,7 +65,10 @@ USAGE:
                  [--kill-update r@p,...] [--kill-factor r@p,...]
                  [--profile K] [--threads N]
                  [--policy replica|checksum|hybrid] [--checksums C]
+                 [--backend host|threaded] [--precision f32|f64]
                  [--sweep [--f F] [--trials T]]
+  repro precision [--procs P] [--seed S] [--threads N]
+                 [--backend host|threaded] [--quick]
   repro simulate --scenario FILE [--seed S] [--samples N] [--procs P]
                  [--threads N] [--curve [--rates R,R,...]]
   repro compare  [--procs P] [--panels K] [--panel B] [--rates R,R,...]
@@ -81,6 +89,16 @@ USAGE:
   --policy picks the recovery ladder (replica = papers' replication only;
   hybrid = replication + --checksums C Vandermonde checksum blocks, which
   survives pair wipes that replication alone cannot)
+  caqr/precision --backend routes kernels in-process: host (the bitwise
+  oracle, the default) or threaded (pool-parallel slabs + chunked-
+  reduction factor cores; factorizations are tolerance-bounded, every
+  other op stays bitwise); caqr --precision drops the data path to f32
+  at task boundaries while checksums stay f64
+  precision sweeps f64-vs-f32 CAQR cells (accuracy vs wall time) across
+  shapes and recovery ladders: f64 cells must pin the oracle bitwise
+  (on the host plan; under --backend threaded every cell is held to
+  the tolerance bound instead), f32 cells must stay within
+  64*n*eps_f32*||R||; --quick is the one-shape set CI validates
   simulate replays the recovery ladder event-driven (no matrices, no
   threads-per-rank), so scenario files can ask for 10^5-10^6 ranks; see
   rust/scenarios/ for committed examples and --curve for survival over
@@ -115,6 +133,7 @@ impl Args {
                 if matches!(
                     name,
                     "trace" | "help" | "full" | "sweep" | "curve" | "failures" | "no-share"
+                        | "quick"
                 ) {
                     flags.insert(name.to_string(), "true".to_string());
                 } else {
@@ -398,6 +417,8 @@ fn cmd_caqr(args: &Args) -> Result<()> {
     let threads = args.parse_flag::<usize>("threads")?.unwrap_or(0);
     let policy = args.parse_flag::<RecoveryPolicy>("policy")?.unwrap_or_default();
     let checksums = args.parse_flag::<usize>("checksums")?.unwrap_or(0);
+    let backend = args.parse_flag::<BackendPlan>("backend")?.unwrap_or_default();
+    let precision = args.parse_flag::<Precision>("precision")?.unwrap_or_default();
     // The resolved arming: a non-checksum ladder never encodes, so a
     // stray --checksums must not read as armed protection.
     let armed = if policy.uses_checksums() { checksums } else { 0 };
@@ -411,6 +432,7 @@ fn cmd_caqr(args: &Args) -> Result<()> {
         .host_only()
         .kernel_profile(profile)
         .recovery_policy(policy)
+        .backend_plan(backend.clone())
         .threads(threads)
         .build()?;
 
@@ -455,7 +477,7 @@ fn cmd_caqr(args: &Args) -> Result<()> {
             ))
         })?;
         println!("# {} — {}", sc.name, sc.description);
-        sc.spec(rows, cols, panel).with_seed(seed).with_checksums(armed)
+        sc.spec(rows, cols, panel).with_seed(seed).with_checksums(armed).with_precision(precision)
     } else {
         let mut kills: Vec<(usize, usize, CaqrStage)> = Vec::new();
         if let Some(k) = args.get("kill-update") {
@@ -471,12 +493,14 @@ fn cmd_caqr(args: &Args) -> Result<()> {
         CaqrSpec::new(algo, procs, rows, cols, panel)
             .with_seed(seed)
             .with_checksums(armed)
+            .with_precision(precision)
             .with_schedule(CaqrKillSchedule::at(&kills))
     };
 
     spec.validate()?; // before plan(): the plan asserts what validate reports
     println!(
-        "caqr: algo={} procs={} matrix={}x{} panel={} panels={} profile={} policy={} checksums={}",
+        "caqr: algo={} procs={} matrix={}x{} panel={} panels={} profile={} policy={} \
+         checksums={} backend={} precision={}",
         spec.algo.name(),
         spec.procs,
         spec.m,
@@ -486,6 +510,8 @@ fn cmd_caqr(args: &Args) -> Result<()> {
         profile,
         policy,
         armed,
+        backend,
+        precision,
     );
     let res = engine.run_caqr(spec)?;
     for ps in &res.panel_survival {
@@ -534,6 +560,54 @@ fn cmd_caqr(args: &Args) -> Result<()> {
         );
     }
     if !res.success() {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
+fn cmd_precision(args: &Args) -> Result<()> {
+    let procs = args.parse_flag::<usize>("procs")?.unwrap_or(4);
+    let seed = args.parse_flag::<u64>("seed")?.unwrap_or(42);
+    let threads = args.parse_flag::<usize>("threads")?.unwrap_or(0);
+    let backend = args.parse_flag::<BackendPlan>("backend")?.unwrap_or_default();
+    let quick = args.get("quick").is_some();
+
+    let engine = ft_tsqr::engine::Engine::builder()
+        .host_only()
+        .backend_plan(backend.clone())
+        .threads(threads)
+        .build()?;
+    let sweep = PrecisionSweep::new(&engine, procs).with_seed(seed);
+
+    println!(
+        "precision: procs={procs} seed={seed} backend={backend} {} set",
+        if quick { "quick" } else { "full" },
+    );
+    let rows = sweep.table(quick)?;
+    let mut table = Table::new(
+        "accuracy vs speed — f64 (bitwise oracle pin) vs f32 data path (f64 checksums)"
+            .to_string(),
+        &["matrix", "panel", "policy", "c", "precision", "wall", "max|R-Rref|", "bound", "ok"],
+    );
+    let mut all_ok = true;
+    for row in &rows {
+        let ok = row.within_bound();
+        all_ok &= ok;
+        table.row(vec![
+            format!("{}x{}", row.m, row.n),
+            row.panel.to_string(),
+            row.policy.to_string(),
+            row.checksums.to_string(),
+            row.precision.to_string(),
+            format!("{:?}", row.wall),
+            fmt_f(row.max_err),
+            fmt_f(row.bound),
+            if ok { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    print!("{}", table.render());
+    if !all_ok {
+        eprintln!("error: a cell violated its accuracy contract (see table)");
         std::process::exit(2);
     }
     Ok(())
@@ -953,6 +1027,7 @@ fn main() {
         "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
         "caqr" => cmd_caqr(&args),
+        "precision" => cmd_precision(&args),
         "simulate" => cmd_simulate(&args),
         "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),

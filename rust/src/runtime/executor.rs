@@ -27,6 +27,10 @@ use super::kernel::{
 };
 use super::manifest::Manifest;
 use super::service::PjrtService;
+use super::threaded::{BackendChoice, BackendPlan, ThreadedKernel};
+
+#[cfg(debug_assertions)]
+use super::kernel::Contract;
 
 /// Which compute path executes kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,7 +83,9 @@ pub struct ExecutorStats {
 pub struct Executor {
     pjrt: Option<PjrtKernel>,
     host: HostKernel,
+    threaded: ThreadedKernel,
     backend: Backend,
+    plan: BackendPlan,
     stats: Arc<ExecutorStats>,
     workspaces: Arc<WorkspacePool>,
 }
@@ -90,7 +96,9 @@ impl Executor {
         Self {
             pjrt: None,
             host: HostKernel,
+            threaded: ThreadedKernel::new(),
             backend: Backend::Host,
+            plan: BackendPlan::default(),
             stats: Arc::default(),
             workspaces: Arc::default(),
         }
@@ -107,7 +115,9 @@ impl Executor {
         Ok(Self {
             pjrt: Some(PjrtKernel::new(service)),
             host: HostKernel,
+            threaded: ThreadedKernel::new(),
             backend,
+            plan: BackendPlan::default(),
             stats: Arc::default(),
             workspaces: Arc::default(),
         })
@@ -125,6 +135,19 @@ impl Executor {
     /// The dispatch policy this executor was built with.
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// Route in-process ops per `plan` (builder style).  Orthogonal to
+    /// [`Backend`]: PJRT dispatch still wins where the manifest has the
+    /// shape; the plan picks which *in-process* kernel serves the rest.
+    pub fn with_backend_plan(mut self, plan: BackendPlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    /// The in-process backend plan (default: everything on host).
+    pub fn backend_plan(&self) -> &BackendPlan {
+        &self.plan
     }
 
     /// Dispatch counters (PJRT vs host calls).
@@ -176,6 +199,14 @@ impl Executor {
         Ok(())
     }
 
+    /// The in-process kernel the [`BackendPlan`] routes `op` to.
+    fn plan_kernel(&self, op: KernelOp) -> &dyn Kernel {
+        match self.plan.select(op) {
+            BackendChoice::Host => &self.host,
+            BackendChoice::Threaded => &self.threaded,
+        }
+    }
+
     /// Backend selection for one call.  The manifest entry name (a
     /// `format!` allocation) is only computed when there is a PJRT
     /// service to consult or a strict-mode error to phrase — the
@@ -183,7 +214,7 @@ impl Executor {
     fn select_kernel(&self, op: KernelOp, views: &[MatrixView<'_>]) -> Result<&dyn Kernel> {
         if self.pjrt.is_none() && self.backend != Backend::Pjrt {
             self.stats.host_calls.fetch_add(1, Ordering::Relaxed);
-            return Ok(&self.host);
+            return Ok(self.plan_kernel(op));
         }
         let entry = op.entry_name(views);
         match self.dispatch_pjrt(&entry) {
@@ -193,7 +224,7 @@ impl Executor {
             }
             None => {
                 self.host_guard(&entry)?;
-                Ok(&self.host)
+                Ok(self.plan_kernel(op))
             }
         }
     }
@@ -203,7 +234,7 @@ impl Executor {
     /// the call.  Both backends see the identical [`KernelCall`].
     fn call(&self, op: KernelOp, views: &[MatrixView<'_>]) -> Result<Vec<Matrix>> {
         let kernel = self.select_kernel(op, views)?;
-        if kernel.wants_workspace(op) {
+        let out = if kernel.wants_workspace(op) {
             let mut ws = self.workspaces.acquire();
             let out = kernel.execute(KernelCall { op, views, workspace: &mut ws });
             self.workspaces.release(ws);
@@ -213,6 +244,61 @@ impl Executor {
             // Vecs — stack-only, no pool traffic, no counter noise.
             let mut ws = Workspace::new();
             kernel.execute(KernelCall { op, views, workspace: &mut ws })
+        };
+        #[cfg(debug_assertions)]
+        if kernel.name() == "threaded" {
+            if let Ok(got) = &out {
+                self.enforce_contract(op, views, got);
+            }
+        }
+        out
+    }
+
+    /// Debug-build contract enforcement: every threaded dispatch is
+    /// replayed on the host oracle and held to the op's declared
+    /// [`Contract`] — `Bitwise` ops must agree to the bit, `Tolerance`
+    /// ops must land their canonicalized R within `c·n·ε·‖A‖`.
+    #[cfg(debug_assertions)]
+    fn enforce_contract(&self, op: KernelOp, views: &[MatrixView<'_>], got: &[Matrix]) {
+        let mut ws = Workspace::new();
+        let want = HostKernel
+            .execute(KernelCall { op, views, workspace: &mut ws })
+            .expect("host oracle failed while enforcing a backend contract");
+        match op.contract() {
+            Contract::Bitwise => {
+                for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.shape(),
+                        w.shape(),
+                        "contract violation: {op:?} output {idx} shape {:?} != host {:?}",
+                        g.shape(),
+                        w.shape()
+                    );
+                    for (k, (x, y)) in g.data().iter().zip(w.data()).enumerate() {
+                        assert!(
+                            x.to_bits() == y.to_bits(),
+                            "contract violation: {op:?} declared Bitwise but output {idx} \
+                             element {k} differs (threaded {x} vs host {y})"
+                        );
+                    }
+                }
+            }
+            Contract::Tolerance { .. } => {
+                let n = views[0].cols();
+                let norm = views
+                    .iter()
+                    .flat_map(|v| v.data().iter())
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum::<f64>()
+                    .sqrt();
+                let bound = op.contract().bound(n, norm);
+                let diff = got[0].canonicalize_r().max_abs_diff(&want[0].canonicalize_r());
+                assert!(
+                    diff <= bound,
+                    "contract violation: {op:?} declared Tolerance but canonical R diverges \
+                     by {diff:e} (> bound {bound:e}, n={n}, norm={norm:e})"
+                );
+            }
         }
     }
 
@@ -422,7 +508,9 @@ mod tests {
         let ex = Executor {
             pjrt: None,
             host: HostKernel,
+            threaded: ThreadedKernel::new(),
             backend: Backend::Pjrt,
+            plan: BackendPlan::default(),
             stats: Arc::default(),
             workspaces: Arc::default(),
         };
@@ -486,6 +574,62 @@ mod tests {
         }
         assert_eq!(ex.workspace_stats().created, before.created);
         assert_eq!(ex.workspace_stats().reused, before.reused + 4);
+    }
+
+    #[test]
+    fn backend_plan_defaults_to_host_and_is_builder_settable() {
+        let ex = Executor::host();
+        assert_eq!(*ex.backend_plan(), BackendPlan::host());
+        let ex = ex.with_backend_plan(BackendPlan::threaded());
+        assert!(ex.backend_plan().uses_threaded());
+    }
+
+    #[test]
+    fn threaded_plan_keeps_bitwise_ops_bitwise_through_the_executor() {
+        // Same inputs through both plans: the Bitwise-contract ops must
+        // agree to the bit (and in debug builds the dispatch itself
+        // re-checks this against the host oracle).
+        let host = Executor::host();
+        let thr = Executor::host().with_backend_plan(BackendPlan::threaded());
+        let a = Matrix::random(48, 8, 11);
+        let f = host.leaf_qr(&a).unwrap();
+        let block = Matrix::random(48, 9, 12);
+        let want = host.apply_update(&f, &block).unwrap();
+        let got = thr.apply_update(&f, &block).unwrap();
+        assert_eq!(got, want, "ApplyUpdate is Bitwise across plans");
+        let wq = host.build_q(&f).unwrap();
+        let gq = thr.build_q(&f).unwrap();
+        assert_eq!(gq, wq, "BuildQ is Bitwise across plans");
+    }
+
+    #[test]
+    fn threaded_plan_factorizations_hold_their_tolerance() {
+        let host = Executor::host();
+        let thr = Executor::host().with_backend_plan(BackendPlan::threaded());
+        let a = Matrix::random(64, 12, 13);
+        let fr_host = host.leaf_qr(&a).unwrap();
+        let fr_thr = thr.leaf_qr(&a).unwrap();
+        let bound = KernelOp::LeafQr.contract().bound(12, a.fro_norm());
+        let diff = fr_thr.r.canonicalize_r().max_abs_diff(&fr_host.r.canonicalize_r());
+        assert!(diff <= bound, "LeafQr diff {diff} > bound {bound}");
+        // The threaded factorization interoperates with the (host)
+        // apply kernels: Q·R reconstructs A.
+        let q = thr.build_q(&fr_thr).unwrap();
+        assert!(q.matmul(&fr_thr.r).rel_fro_err(&a) < 1e-5);
+    }
+
+    #[test]
+    fn per_op_override_routes_only_that_op() {
+        let plan = BackendPlan::host().with_op(KernelOp::EncodeChecksum, BackendChoice::Threaded);
+        let ex = Executor::host().with_backend_plan(plan);
+        assert_eq!(ex.backend_plan().select(KernelOp::EncodeChecksum), BackendChoice::Threaded);
+        assert_eq!(ex.backend_plan().select(KernelOp::LeafQr), BackendChoice::Host);
+        let blocks: Vec<Matrix> = (0..3).map(|s| Matrix::random(8, 4, s)).collect();
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        let weights = Matrix::from_vec(1, 3, vec![1.0, 2.0, 4.0]);
+        let got = ex.encode_checksum(&weights, &refs).unwrap();
+        let want = Executor::host().encode_checksum(&weights, &refs).unwrap();
+        assert_eq!(got, want, "EncodeChecksum is Bitwise under the override");
     }
 
     #[test]

@@ -130,7 +130,146 @@ pub enum KernelOp {
     ReconstructBlock,
 }
 
+/// The cross-backend agreement contract of one [`KernelOp`] — what a
+/// differential harness (and the debug-build dispatch check in
+/// [`super::Executor`]) may assert when two backends run the same call.
+///
+/// * [`Bitwise`](Contract::Bitwise): every output matrix is
+///   bit-identical across backends.  This is the contract replica
+///   recovery rests on — a surviving replica's bits *are* the dead
+///   owner's bits — so any op whose threaded implementation merely
+///   re-partitions independent per-column/per-element arithmetic (or
+///   delegates to the identical sequential kernel) declares it.
+/// * [`Tolerance`](Contract::Tolerance): backends may reassociate
+///   floating-point reductions (e.g. chunked partial sums inside a
+///   pool-parallel factorization), so only the mathematically unique
+///   output — the canonicalized R factor, `outputs[0]` — is compared,
+///   within `c·n·ε_f32·max(1, ‖A‖_F)`.  The packed reflectors and tau
+///   are backend-private under this contract.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Contract {
+    /// Outputs are bit-identical across backends.
+    Bitwise,
+    /// `outputs[0]`, canonicalized, agrees within `c·n·ε_f32·max(1, ‖A‖_F)`.
+    Tolerance {
+        /// The dimensionless constant `c` in the bound.
+        c: f64,
+    },
+}
+
+impl Contract {
+    /// The concrete comparison bound for a problem of column count `n`
+    /// and input magnitude `norm` (Frobenius).  [`Bitwise`](Self::Bitwise)
+    /// returns `0.0` — nothing but exact equality passes.
+    pub fn bound(&self, n: usize, norm: f64) -> f64 {
+        match self {
+            Contract::Bitwise => 0.0,
+            Contract::Tolerance { c } => c * n as f64 * f32::EPSILON as f64 * norm.max(1.0),
+        }
+    }
+}
+
+/// Element precision of the CAQR compute path.
+///
+/// [`F32`](Precision::F32) rounds every task-grid intermediate (panel
+/// factors, trailing updates, Q chains) to `f32` while the ABFT
+/// checksum arithmetic **stays f64** — the coded-reconstruction
+/// guarantee (arXiv:0806.3121) only holds when checksums carry more
+/// precision than the data they protect.  [`F64`](Precision::F64) is
+/// the historical path and is byte-identical to pre-precision builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// f32 task-grid intermediates, f64 checksums (mixed precision).
+    F32,
+    /// Full f64 task grid (the bitwise-pinned default).
+    #[default]
+    F64,
+}
+
+impl Precision {
+    /// Stable name (`f32` / `f64`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+
+    /// Is this the mixed-precision (f32 data) path?
+    pub fn is_f32(&self) -> bool {
+        matches!(self, Precision::F32)
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" | "single" | "mixed" => Ok(Precision::F32),
+            "f64" | "double" => Ok(Precision::F64),
+            other => Err(Error::Config(format!("unknown precision '{other}' (f32|f64)"))),
+        }
+    }
+}
+
 impl KernelOp {
+    /// Every operation, in declaration order — the iteration basis of
+    /// the differential conformance suite (`tests/backend_conformance.rs`)
+    /// and the exhaustive classification tests below.
+    pub const ALL: [KernelOp; 14] = [
+        KernelOp::LeafQr,
+        KernelOp::LeafR,
+        KernelOp::Combine,
+        KernelOp::CombineR,
+        KernelOp::Backsolve,
+        KernelOp::ApplyQt,
+        KernelOp::ApplyUpdate,
+        KernelOp::BuildT,
+        KernelOp::ApplyWy,
+        KernelOp::BuildQ,
+        KernelOp::ApplyQWy,
+        KernelOp::BuildQPanel,
+        KernelOp::EncodeChecksum,
+        KernelOp::ReconstructBlock,
+    ];
+
+    /// The declared Host-vs-Threaded agreement contract of this op —
+    /// the table `tests/backend_conformance.rs` pins and the executor
+    /// enforces at dispatch in debug builds.
+    ///
+    /// Factorizations are [`Contract::Tolerance`]: the threaded
+    /// backend reassociates its reduction sums (fixed-size chunked
+    /// partial sums, deterministic for any worker count, but a
+    /// different association than the sequential host kernel).  Every
+    /// other op is [`Contract::Bitwise`]: the threaded implementation
+    /// either fans out arithmetic that is independent per column /
+    /// element (slab re-partitioning cannot change any bit) or runs
+    /// the identical sequential kernel.
+    pub fn contract(&self) -> Contract {
+        match self {
+            KernelOp::LeafQr
+            | KernelOp::LeafR
+            | KernelOp::Combine
+            | KernelOp::CombineR => Contract::Tolerance { c: 64.0 },
+            KernelOp::Backsolve
+            | KernelOp::ApplyQt
+            | KernelOp::ApplyUpdate
+            | KernelOp::BuildT
+            | KernelOp::ApplyWy
+            | KernelOp::BuildQ
+            | KernelOp::ApplyQWy
+            | KernelOp::BuildQPanel
+            | KernelOp::EncodeChecksum
+            | KernelOp::ReconstructBlock => Contract::Bitwise,
+        }
+    }
+
     /// The AOT manifest entry this call maps to, derived from the input
     /// view shapes (one naming scheme for every backend).
     pub fn entry_name(&self, views: &[MatrixView<'_>]) -> String {
@@ -210,21 +349,23 @@ impl Kernel for HostKernel {
         // compact-WY), the T build, and the ABFT checksum ops run
         // through the f64 scratch arena (the WY ops additionally draw
         // their GEMM packing buffers from it); the solve/apply kernels
-        // work in place on their outputs.
-        matches!(
-            op,
+        // work in place on their outputs.  Exhaustive on purpose:
+        // adding a KernelOp without classifying its scratch behaviour
+        // must fail to compile, not silently default at runtime.
+        match op {
             KernelOp::LeafQr
-                | KernelOp::LeafR
-                | KernelOp::Combine
-                | KernelOp::CombineR
-                | KernelOp::ApplyUpdate
-                | KernelOp::BuildT
-                | KernelOp::ApplyWy
-                | KernelOp::ApplyQWy
-                | KernelOp::BuildQPanel
-                | KernelOp::EncodeChecksum
-                | KernelOp::ReconstructBlock
-        )
+            | KernelOp::LeafR
+            | KernelOp::Combine
+            | KernelOp::CombineR
+            | KernelOp::ApplyUpdate
+            | KernelOp::BuildT
+            | KernelOp::ApplyWy
+            | KernelOp::ApplyQWy
+            | KernelOp::BuildQPanel
+            | KernelOp::EncodeChecksum
+            | KernelOp::ReconstructBlock => true,
+            KernelOp::Backsolve | KernelOp::ApplyQt | KernelOp::BuildQ => false,
+        }
     }
 
     fn execute(&self, call: KernelCall<'_>) -> Result<Vec<Matrix>> {
@@ -636,6 +777,77 @@ mod tests {
         assert!("fast".parse::<KernelProfile>().is_err());
         assert_eq!(KernelProfile::default(), KernelProfile::Reference);
         assert_eq!(KernelProfile::Blocked.to_string(), "blocked");
+    }
+
+    #[test]
+    fn kernel_op_all_is_complete_and_in_declaration_order() {
+        // Exhaustiveness backstop for the const table: every variant
+        // appears exactly once.  (The compiler already forces the
+        // `contract`/`wants_workspace` matches to stay exhaustive.)
+        let mut seen = std::collections::HashSet::new();
+        for op in KernelOp::ALL {
+            assert!(seen.insert(op), "{op:?} listed twice in KernelOp::ALL");
+        }
+        assert_eq!(seen.len(), 14);
+        assert_eq!(KernelOp::ALL[0], KernelOp::LeafQr);
+        assert_eq!(KernelOp::ALL[13], KernelOp::ReconstructBlock);
+    }
+
+    #[test]
+    fn contract_table_pins_factorizations_as_tolerance_rest_bitwise() {
+        for op in KernelOp::ALL {
+            let want_tolerance = matches!(
+                op,
+                KernelOp::LeafQr | KernelOp::LeafR | KernelOp::Combine | KernelOp::CombineR
+            );
+            match op.contract() {
+                Contract::Tolerance { c } => {
+                    assert!(want_tolerance, "{op:?} must be Bitwise");
+                    assert!(c > 0.0);
+                }
+                Contract::Bitwise => assert!(!want_tolerance, "{op:?} must be Tolerance"),
+            }
+        }
+    }
+
+    #[test]
+    fn contract_bounds_scale_with_n_and_norm() {
+        assert_eq!(Contract::Bitwise.bound(64, 1e6), 0.0);
+        let t = Contract::Tolerance { c: 64.0 };
+        assert!(t.bound(8, 1.0) > 0.0);
+        assert!(t.bound(16, 1.0) > t.bound(8, 1.0));
+        assert!(t.bound(8, 100.0) > t.bound(8, 1.0));
+        // Sub-unit norms are floored at 1 so tiny inputs keep a
+        // usable absolute bound.
+        assert_eq!(t.bound(8, 0.001), t.bound(8, 1.0));
+    }
+
+    #[test]
+    fn wants_workspace_classification_is_pinned_per_op() {
+        // The in-place solve/apply kernels take no scratch; everything
+        // else draws from the pooled arena.  This is the full 14-op
+        // table — a new op must be added here AND in the (exhaustive)
+        // match above to land.
+        let scratch_free = [KernelOp::Backsolve, KernelOp::ApplyQt, KernelOp::BuildQ];
+        for op in KernelOp::ALL {
+            assert_eq!(
+                HostKernel.wants_workspace(op),
+                !scratch_free.contains(&op),
+                "wants_workspace misclassifies {op:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn precision_parses_prints_and_defaults_to_f64() {
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert_eq!("mixed".parse::<Precision>().unwrap(), Precision::F32);
+        assert_eq!("f64".parse::<Precision>().unwrap(), Precision::F64);
+        assert_eq!("double".parse::<Precision>().unwrap(), Precision::F64);
+        assert!("f16".parse::<Precision>().is_err());
+        assert_eq!(Precision::default(), Precision::F64);
+        assert!(Precision::F32.is_f32() && !Precision::F64.is_f32());
+        assert_eq!(Precision::F32.to_string(), "f32");
     }
 
     #[test]

@@ -10,12 +10,17 @@ pub mod executor;
 pub mod kernel;
 pub mod manifest;
 pub mod service;
+pub mod threaded;
 
 pub use cpu::{CpuInfo, Parallelism};
 pub use executor::{Backend, Executor, Factorization};
-pub use kernel::{Kernel, KernelCall, KernelOp, KernelProfile, WorkspacePool, WorkspaceStats};
+pub use kernel::{
+    Contract, HostKernel, Kernel, KernelCall, KernelOp, KernelProfile, Precision, WorkspacePool,
+    WorkspaceStats,
+};
 pub use manifest::Manifest;
 pub use service::PjrtService;
+pub use threaded::{BackendChoice, BackendPlan, ThreadedKernel};
 
 /// Conventional artifact directory (relative to the repo root).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,791 @@
+//! The second in-process backend: a rayon-free, pool-parallel
+//! [`Kernel`] implementation over the engine's elastic
+//! [`WorkerPool`]/[`TaskGroup`] machinery.
+//!
+//! Every [`KernelOp`] executes here, but not every op parallelizes the
+//! same way — the per-op strategy is chosen so each op can *honestly*
+//! declare its [`Contract`](super::kernel::Contract):
+//!
+//! | ops | strategy | contract |
+//! |-----|----------|----------|
+//! | `LeafQr` `LeafR` `Combine` `CombineR` | chunked-reduction Householder QR, trailing columns fanned over the pool | `Tolerance` |
+//! | `ApplyUpdate` `ApplyQt` `Backsolve` `BuildQ` | column slabs through the identical sequential view kernels | `Bitwise` |
+//! | `EncodeChecksum` `ReconstructBlock` | row slabs through the identical sequential ABFT kernels | `Bitwise` |
+//! | `BuildT` `ApplyWy` `ApplyQWy` `BuildQPanel` | delegate to [`HostKernel`] | `Bitwise` |
+//!
+//! The slab ops stay bitwise because their arithmetic is independent
+//! per output column (or per element, for the checksum ops): cutting
+//! the work into contiguous slabs re-partitions loop iterations
+//! without reassociating a single floating-point sum.  The
+//! factorizations cannot be split that way — every reflector is a
+//! reduction over rows — so the threaded implementation uses
+//! fixed-size chunked partial sums (deterministic for *any* worker
+//! count, but a different association than the host kernel) and
+//! declares `Tolerance`.  The compact-WY family delegates: its
+//! parallelism already lives in the pooled GEMM microkernel that
+//! `KernelProfile::Blocked` CAQR drives (see `linalg::gemm`), and
+//! slabbing GEMM inputs at arbitrary widths is not covered by that
+//! kernel's bitwise guarantee.
+//!
+//! [`BackendPlan`] is the per-op selector: a default backend choice
+//! plus overrides, carried by `EngineBuilder::backend_plan(..)` /
+//! `CaqrSpec::with_backend(..)` and consulted by the
+//! [`Executor`](super::Executor) at its single dispatch point (which,
+//! in debug builds, also re-runs the host kernel and enforces the
+//! declared contract).
+
+use std::sync::{Arc, Mutex};
+
+use crate::engine::{TaskGroup, WorkerPool};
+use crate::error::{Error, Result};
+use crate::linalg::{Matrix, Workspace, view};
+
+use super::cpu::{CpuInfo, Parallelism};
+use super::kernel::{HostKernel, Kernel, KernelCall, KernelOp};
+
+/// Which in-process implementation a [`BackendPlan`] routes an op to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// The sequential [`HostKernel`] (the bitwise-pinned reference).
+    #[default]
+    Host,
+    /// The pool-parallel [`ThreadedKernel`].
+    Threaded,
+}
+
+impl BackendChoice {
+    /// Stable name (`host` / `threaded`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendChoice::Host => "host",
+            BackendChoice::Threaded => "threaded",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for BackendChoice {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "host" => Ok(BackendChoice::Host),
+            "threaded" => Ok(BackendChoice::Threaded),
+            other => Err(Error::Config(format!(
+                "unknown in-process backend '{other}' (host|threaded)"
+            ))),
+        }
+    }
+}
+
+/// Per-[`KernelOp`] backend selection: one default choice plus
+/// targeted overrides.  The executor consults `select(op)` at every
+/// dispatch; `Default` routes everything to the host kernel, so the
+/// plan is a pure opt-in.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct BackendPlan {
+    default: BackendChoice,
+    overrides: Vec<(KernelOp, BackendChoice)>,
+}
+
+impl BackendPlan {
+    /// Everything on the sequential host kernel (the default).
+    pub fn host() -> Self {
+        Self { default: BackendChoice::Host, overrides: Vec::new() }
+    }
+
+    /// Everything on the pool-parallel threaded kernel.
+    pub fn threaded() -> Self {
+        Self { default: BackendChoice::Threaded, overrides: Vec::new() }
+    }
+
+    /// Route one op somewhere specific (last write wins).
+    pub fn with_op(mut self, op: KernelOp, choice: BackendChoice) -> Self {
+        self.overrides.retain(|(o, _)| *o != op);
+        self.overrides.push((op, choice));
+        self
+    }
+
+    /// The choice this plan makes for `op`.
+    pub fn select(&self, op: KernelOp) -> BackendChoice {
+        self.overrides
+            .iter()
+            .find(|(o, _)| *o == op)
+            .map(|&(_, c)| c)
+            .unwrap_or(self.default)
+    }
+
+    /// Does any op route to the threaded kernel?
+    pub fn uses_threaded(&self) -> bool {
+        self.default == BackendChoice::Threaded
+            || self.overrides.iter().any(|&(_, c)| c == BackendChoice::Threaded)
+    }
+}
+
+impl std::fmt::Display for BackendPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.overrides.is_empty() {
+            f.write_str(self.default.name())
+        } else {
+            write!(f, "{}+{}", self.default.name(), self.overrides.len())
+        }
+    }
+}
+
+impl std::str::FromStr for BackendPlan {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.parse::<BackendChoice>()? {
+            BackendChoice::Host => Ok(BackendPlan::host()),
+            BackendChoice::Threaded => Ok(BackendPlan::threaded()),
+        }
+    }
+}
+
+/// Fixed chunk size of every reassociated reduction in this module.
+/// A compile-time constant — NOT derived from the worker count — so
+/// the threaded factorizations produce identical bits whether the
+/// pool runs 1 worker or 64.
+const DOT_CHUNK: usize = 64;
+
+/// Dot product with fixed-size chunked partial sums: deterministic,
+/// but associated differently than a plain ascending accumulation —
+/// the arithmetic signature of the `Tolerance` ops.
+fn dot_chunked(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut total = 0.0;
+    let mut i = 0;
+    while i < a.len() {
+        let end = (i + DOT_CHUNK).min(a.len());
+        let mut partial = 0.0;
+        for t in i..end {
+            partial += a[t] * b[t];
+        }
+        total += partial;
+        i = end;
+    }
+    total
+}
+
+/// Sequential Householder panel factorization with chunked-reduction
+/// dot products: the same packed layout, sign convention, and tau
+/// normalization as [`view::factor_panel_f64`], but every row
+/// reduction runs through [`dot_chunked`] — the single-task core of
+/// the threaded factor ops, and the factor kernel a
+/// `BackendPlan::threaded()` CAQR run schedules on its replicas.
+///
+/// Deterministic (the chunk size is a constant), so replicas remain
+/// bit-identical to each other; only the *cross-backend* comparison
+/// against the host kernel is tolerance-class.
+pub fn factor_panel_chunked_f64(w: &mut [f64], rows: usize, cols: usize, tau64: &mut [f64]) {
+    assert!(rows >= cols, "factor_panel_chunked_f64: need tall-skinny, got {rows}x{cols}");
+    assert_eq!(w.len(), rows * cols, "factor_panel_chunked_f64: buffer length != rows*cols");
+    assert_eq!(tau64.len(), cols, "factor_panel_chunked_f64: tau must have {cols} entries");
+    let mut col_j = vec![0.0f64; rows];
+    let mut col_c = vec![0.0f64; rows];
+    for j in 0..cols {
+        for i in j..rows {
+            col_j[i - j] = w[i * cols + j];
+        }
+        let tail = &col_j[..rows - j];
+        let normx = dot_chunked(tail, tail).sqrt();
+        if normx == 0.0 {
+            tau64[j] = 0.0;
+            continue;
+        }
+        let x0 = tail[0];
+        let beta = if x0 >= 0.0 { -normx } else { normx };
+        let denom = x0 - beta;
+        tau64[j] = (beta - x0) / beta;
+        for i in j + 1..rows {
+            w[i * cols + j] /= denom;
+        }
+        w[j * cols + j] = beta;
+        for i in j + 1..rows {
+            col_j[i - j] = w[i * cols + j];
+        }
+        for c in j + 1..cols {
+            for i in j + 1..rows {
+                col_c[i - j - 1] = w[i * cols + c];
+            }
+            let dot = w[j * cols + c]
+                + dot_chunked(&col_j[1..rows - j], &col_c[..rows - j - 1]);
+            let s = tau64[j] * dot;
+            w[j * cols + c] -= s;
+            for i in j + 1..rows {
+                w[i * cols + c] -= col_j[i - j] * s;
+            }
+        }
+    }
+}
+
+/// Split `0..total` into at most `lanes` contiguous, non-empty ranges.
+fn slab_ranges(total: usize, lanes: usize) -> Vec<(usize, usize)> {
+    if total == 0 {
+        return Vec::new();
+    }
+    let lanes = lanes.clamp(1, total);
+    let base = total / lanes;
+    let extra = total % lanes;
+    let mut ranges = Vec::with_capacity(lanes);
+    let mut start = 0;
+    for lane in 0..lanes {
+        let len = base + usize::from(lane < extra);
+        ranges.push((start, start + len));
+        start += len;
+    }
+    ranges
+}
+
+/// Pool-parallel backend: every op runs through the shared
+/// [`WorkerPool`], with the per-op strategy documented in the
+/// [module docs](self).  `Clone` shares the pool (it spawns workers
+/// lazily, so an unused threaded kernel costs nothing).
+#[derive(Clone)]
+pub struct ThreadedKernel {
+    pool: WorkerPool,
+    parallelism: Parallelism,
+}
+
+impl Default for ThreadedKernel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThreadedKernel {
+    /// A threaded kernel over a fresh elastic pool, fanning out as
+    /// wide as the host has hardware threads.
+    pub fn new() -> Self {
+        Self::with_parallelism(Parallelism::new(CpuInfo::cached().threads))
+    }
+
+    /// Cap the fan-out width (the pool itself stays elastic).  Every
+    /// width produces identical bits — this knob trades wall-clock
+    /// only, exactly like the GEMM `Parallelism`.
+    pub fn with_parallelism(parallelism: Parallelism) -> Self {
+        Self { pool: WorkerPool::new(), parallelism }
+    }
+
+    fn lanes(&self, work: usize) -> usize {
+        self.parallelism.gemm_threads().clamp(1, work.max(1))
+    }
+
+    /// Fan `task(range)` over the pool, one spawn per contiguous range
+    /// of `0..total`, collecting each range's output matrix in order.
+    /// The closure must be self-contained (`'static`): callers capture
+    /// `Arc`-shared copies of the inputs.
+    fn fan_out<F>(&self, op: KernelOp, total: usize, task: F) -> Result<Vec<((usize, usize), Matrix)>>
+    where
+        F: Fn(usize, usize) -> Matrix + Send + Sync + 'static,
+    {
+        let ranges = slab_ranges(total, self.lanes(total));
+        if ranges.len() <= 1 {
+            // One lane: run inline, no pool traffic.
+            return Ok(ranges.into_iter().map(|(a, b)| ((a, b), task(a, b))).collect());
+        }
+        let task = Arc::new(task);
+        let slots: Arc<Mutex<Vec<Option<Matrix>>>> =
+            Arc::new(Mutex::new(vec![None; ranges.len()]));
+        let group = TaskGroup::new(self.pool.clone());
+        for (idx, &(a, b)) in ranges.iter().enumerate() {
+            let task = Arc::clone(&task);
+            let slots = Arc::clone(&slots);
+            group.spawn(move || {
+                let out = task(a, b);
+                slots.lock().unwrap()[idx] = Some(out);
+            });
+        }
+        group.wait_idle();
+        let mut filled = slots.lock().unwrap();
+        let mut out = Vec::with_capacity(ranges.len());
+        for (idx, &range) in ranges.iter().enumerate() {
+            match filled[idx].take() {
+                Some(m) => out.push((range, m)),
+                None => {
+                    return Err(Error::Aborted(format!(
+                        "threaded backend lost a {op:?} slab task (worker panic)"
+                    )));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Stitch column slabs back into one `rows x total_cols` matrix.
+    fn stitch_columns(
+        rows: usize,
+        total_cols: usize,
+        slabs: Vec<((usize, usize), Matrix)>,
+    ) -> Matrix {
+        let mut out = Matrix::zeros(rows, total_cols);
+        for ((c0, c1), slab) in slabs {
+            debug_assert_eq!(slab.shape(), (rows, c1 - c0));
+            for i in 0..rows {
+                for (jj, c) in (c0..c1).enumerate() {
+                    out[(i, c)] = slab[(i, jj)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Stitch row slabs back into one `total_rows x cols` matrix.
+    fn stitch_rows(total_rows: usize, cols: usize, slabs: Vec<((usize, usize), Matrix)>) -> Matrix {
+        let mut out = Matrix::zeros(total_rows, cols);
+        for ((r0, r1), slab) in slabs {
+            debug_assert_eq!(slab.shape(), (r1 - r0, cols));
+            for (ii, i) in (r0..r1).enumerate() {
+                for j in 0..cols {
+                    out[(i, j)] = slab[(ii, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy columns `[c0, c1)` of `m` into an owned slab.
+    fn column_slab(m: &Matrix, c0: usize, c1: usize) -> Matrix {
+        Matrix::from_fn(m.rows(), c1 - c0, |i, j| m[(i, c0 + j)])
+    }
+
+    /// The pool-parallel Householder factorization behind the four
+    /// `Tolerance` ops: reflector `j` is computed on the calling
+    /// thread (chunked reductions), then the trailing columns are
+    /// fanned over the pool in contiguous groups — each column's
+    /// arithmetic is self-contained, so the result is independent of
+    /// the lane count.  Works column-major so groups of columns can be
+    /// *moved* into tasks and back without aliasing.
+    fn factor_f64(&self, a_cols: &mut [Vec<f64>], rows: usize, tau: &mut [f64]) {
+        let cols = a_cols.len();
+        for j in 0..cols.min(rows) {
+            let tail = &a_cols[j][j..];
+            let normx = dot_chunked(tail, tail).sqrt();
+            if normx == 0.0 {
+                tau[j] = 0.0;
+                continue;
+            }
+            let x0 = a_cols[j][j];
+            let beta = if x0 >= 0.0 { -normx } else { normx };
+            let denom = x0 - beta;
+            let tau_j = (beta - x0) / beta;
+            tau[j] = tau_j;
+            for i in j + 1..rows {
+                a_cols[j][i] /= denom;
+            }
+            a_cols[j][j] = beta;
+            if j + 1 >= cols {
+                continue;
+            }
+            // v tail (v[j] = 1 implicit), shared read-only by every lane.
+            let v: Arc<Vec<f64>> = Arc::new(a_cols[j][j + 1..].to_vec());
+            let ranges = slab_ranges(cols - j - 1, self.lanes(cols - j - 1));
+            if ranges.len() <= 1 {
+                // One lane: update in place, no moves, no pool traffic.
+                for c in j + 1..cols {
+                    let col = &mut a_cols[c];
+                    let dot = col[j] + dot_chunked(&v, &col[j + 1..]);
+                    let s = tau_j * dot;
+                    col[j] -= s;
+                    for i in j + 1..rows {
+                        col[i] -= v[i - j - 1] * s;
+                    }
+                }
+                continue;
+            }
+            let group = TaskGroup::new(self.pool.clone());
+            let slots: Arc<Mutex<Vec<Option<Vec<(usize, Vec<f64>)>>>>> =
+                Arc::new(Mutex::new(vec![None; ranges.len()]));
+            for (idx, &(a, b)) in ranges.iter().enumerate() {
+                // Move this lane's columns out of the panel; they come
+                // back through the slot after the barrier.
+                let mut group_cols: Vec<(usize, Vec<f64>)> = (j + 1 + a..j + 1 + b)
+                    .map(|c| (c, std::mem::take(&mut a_cols[c])))
+                    .collect();
+                let v = Arc::clone(&v);
+                let slots = Arc::clone(&slots);
+                group.spawn(move || {
+                    update_group(&mut group_cols, &v, j, rows, tau_j);
+                    slots.lock().unwrap()[idx] = Some(group_cols);
+                });
+            }
+            group.wait_idle();
+            let mut filled = slots.lock().unwrap();
+            for slot in filled.iter_mut() {
+                // A lost lane would leave empty columns behind; treat
+                // it as fatal rather than factor garbage.
+                let lane = slot.take().expect("threaded factor lane lost (worker panic)");
+                for (c, col) in lane {
+                    a_cols[c] = col;
+                }
+            }
+        }
+    }
+
+    /// Factor a dense stacked input into the `[r, packed, tau]` output
+    /// convention of `LeafQr`/`Combine`.
+    fn factor_outputs(&self, rows: usize, cols: usize, data: Vec<f64>) -> Vec<Matrix> {
+        let mut a_cols: Vec<Vec<f64>> =
+            (0..cols).map(|c| (0..rows).map(|i| data[i * cols + c]).collect()).collect();
+        let mut tau = vec![0.0f64; cols];
+        self.factor_f64(&mut a_cols, rows, &mut tau);
+        let packed =
+            Matrix::from_fn(rows, cols, |i, j| a_cols[j][i] as f32);
+        let mut r = Matrix::zeros(cols, cols);
+        for i in 0..cols.min(rows) {
+            for j in i..cols {
+                r[(i, j)] = a_cols[j][i] as f32;
+            }
+        }
+        let tau32: Vec<f32> = tau.iter().map(|&t| t as f32).collect();
+        vec![r, packed, Matrix::from_vec(cols, 1, tau32)]
+    }
+}
+
+/// One factor lane: apply reflector `j` (tail `v`, `v[j] = 1`
+/// implicit) to this lane's owned trailing columns.
+fn update_group(group_cols: &mut [(usize, Vec<f64>)], v: &[f64], j: usize, rows: usize, tau_j: f64) {
+    for (_, col) in group_cols.iter_mut() {
+        let dot = col[j] + dot_chunked(v, &col[j + 1..]);
+        let s = tau_j * dot;
+        col[j] -= s;
+        for i in j + 1..rows {
+            col[i] -= v[i - j - 1] * s;
+        }
+    }
+}
+
+impl Kernel for ThreadedKernel {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn wants_workspace(&self, op: KernelOp) -> bool {
+        // Only the delegated compact-WY family consumes the caller's
+        // pooled workspace; the factor ops use their own f64 buffers
+        // and the slab ops give each lane a private scratch arena.
+        // Exhaustive for the same reason as the host table.
+        match op {
+            KernelOp::BuildT
+            | KernelOp::ApplyWy
+            | KernelOp::ApplyQWy
+            | KernelOp::BuildQPanel => true,
+            KernelOp::LeafQr
+            | KernelOp::LeafR
+            | KernelOp::Combine
+            | KernelOp::CombineR
+            | KernelOp::Backsolve
+            | KernelOp::ApplyQt
+            | KernelOp::ApplyUpdate
+            | KernelOp::BuildQ
+            | KernelOp::EncodeChecksum
+            | KernelOp::ReconstructBlock => false,
+        }
+    }
+
+    fn execute(&self, call: KernelCall<'_>) -> Result<Vec<Matrix>> {
+        let v = call.views;
+        match call.op {
+            // ---- Tolerance: chunked-reduction factorizations -------
+            KernelOp::LeafQr => {
+                let (m, n) = v[0].shape();
+                let data: Vec<f64> = v[0].data().iter().map(|&x| x as f64).collect();
+                Ok(self.factor_outputs(m, n, data))
+            }
+            KernelOp::LeafR => {
+                let (m, n) = v[0].shape();
+                let data: Vec<f64> = v[0].data().iter().map(|&x| x as f64).collect();
+                let mut out = self.factor_outputs(m, n, data);
+                out.truncate(1);
+                Ok(out)
+            }
+            KernelOp::Combine | KernelOp::CombineR => {
+                let n = v[0].cols();
+                let m = v[0].rows() + v[1].rows();
+                let mut data = Vec::with_capacity(m * n);
+                data.extend(v[0].data().iter().map(|&x| x as f64));
+                data.extend(v[1].data().iter().map(|&x| x as f64));
+                let mut out = self.factor_outputs(m, n, data);
+                if call.op == KernelOp::CombineR {
+                    out.truncate(1);
+                }
+                Ok(out)
+            }
+            // ---- Bitwise: column slabs ----------------------------
+            KernelOp::ApplyUpdate => {
+                let packed = Arc::new(v[0].to_matrix());
+                let tau = Arc::new(v[1].to_matrix());
+                let block = Arc::new(v[2].to_matrix());
+                let (rows, k) = block.shape();
+                let slabs = self.fan_out(call.op, k, move |c0, c1| {
+                    let slab = Self::column_slab(&block, c0, c1);
+                    let mut out = Matrix::zeros(slab.rows(), slab.cols());
+                    let mut ws = Workspace::new();
+                    view::apply_update_into(
+                        packed.as_view(),
+                        tau.data(),
+                        slab.as_view(),
+                        &mut out.as_view_mut(),
+                        &mut ws,
+                    );
+                    out
+                })?;
+                Ok(vec![Self::stitch_columns(rows, k, slabs)])
+            }
+            KernelOp::ApplyQt => {
+                let packed = Arc::new(v[0].to_matrix());
+                let tau = Arc::new(v[1].to_matrix());
+                let b = Arc::new(v[2].to_matrix());
+                let (rows, k) = b.shape();
+                let slabs = self.fan_out(call.op, k, move |c0, c1| {
+                    let mut slab = Self::column_slab(&b, c0, c1);
+                    view::apply_qt_in_place(packed.as_view(), tau.data(), &mut slab.as_view_mut());
+                    slab
+                })?;
+                Ok(vec![Self::stitch_columns(rows, k, slabs)])
+            }
+            KernelOp::Backsolve => {
+                let r = Arc::new(v[0].to_matrix());
+                let b = Arc::new(v[1].to_matrix());
+                let (rows, k) = (r.rows(), b.cols());
+                let slabs = self.fan_out(call.op, k, move |c0, c1| {
+                    let slab = Self::column_slab(&b, c0, c1);
+                    let mut out = Matrix::zeros(r.rows(), slab.cols());
+                    view::backsolve_into(r.as_view(), slab.as_view(), &mut out.as_view_mut());
+                    out
+                })?;
+                Ok(vec![Self::stitch_columns(rows, k, slabs)])
+            }
+            KernelOp::BuildQ => {
+                let packed = Arc::new(v[0].to_matrix());
+                let tau = Arc::new(v[1].to_matrix());
+                let (m, n) = packed.shape();
+                let slabs = self.fan_out(call.op, n, move |c0, c1| {
+                    // Each lane seeds its own identity columns of E.
+                    let mut slab = Matrix::from_fn(m, c1 - c0, |i, j| {
+                        if i == c0 + j { 1.0 } else { 0.0 }
+                    });
+                    view::apply_q_in_place(packed.as_view(), tau.data(), &mut slab.as_view_mut());
+                    slab
+                })?;
+                Ok(vec![Self::stitch_columns(m, n, slabs)])
+            }
+            // ---- Bitwise: row slabs (element-wise checksum ops) ----
+            KernelOp::EncodeChecksum => {
+                let weights = Arc::new(v[0].to_matrix());
+                let blocks: Arc<Vec<Matrix>> =
+                    Arc::new(v[1..].iter().map(|b| b.to_matrix()).collect());
+                let rows = blocks[0].rows();
+                let pad = blocks.iter().map(|b| b.cols()).max().unwrap_or(0);
+                let slabs = self.fan_out(call.op, rows, move |r0, r1| {
+                    let parts: Vec<Matrix> =
+                        blocks.iter().map(|b| b.row_block(r0, r1)).collect();
+                    let views: Vec<_> = parts.iter().map(|p| p.as_view()).collect();
+                    let mut out = Matrix::zeros(r1 - r0, pad);
+                    let mut ws = Workspace::new();
+                    crate::abft::kernels::encode_checksum_into(
+                        weights.as_view(),
+                        &views,
+                        &mut out.as_view_mut(),
+                        &mut ws,
+                    );
+                    out
+                })?;
+                Ok(vec![Self::stitch_rows(rows, pad, slabs)])
+            }
+            KernelOp::ReconstructBlock => {
+                let weights = Arc::new(v[0].to_matrix());
+                let checksum = Arc::new(v[1].to_matrix());
+                let survivors: Arc<Vec<Matrix>> =
+                    Arc::new(v[2..].iter().map(|s| s.to_matrix()).collect());
+                let (rows, pad) = checksum.shape();
+                let slabs = self.fan_out(call.op, rows, move |r0, r1| {
+                    let cs = checksum.row_block(r0, r1);
+                    let parts: Vec<Matrix> =
+                        survivors.iter().map(|s| s.row_block(r0, r1)).collect();
+                    let views: Vec<_> = parts.iter().map(|p| p.as_view()).collect();
+                    let mut out = Matrix::zeros(r1 - r0, pad);
+                    let mut ws = Workspace::new();
+                    crate::abft::kernels::reconstruct_block_into(
+                        weights.as_view(),
+                        cs.as_view(),
+                        &views,
+                        &mut out.as_view_mut(),
+                        &mut ws,
+                    );
+                    out
+                })?;
+                Ok(vec![Self::stitch_rows(rows, pad, slabs)])
+            }
+            // ---- Bitwise: delegated compact-WY family --------------
+            KernelOp::BuildT
+            | KernelOp::ApplyWy
+            | KernelOp::ApplyQWy
+            | KernelOp::BuildQPanel => HostKernel.execute(call),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::MatrixView;
+
+    fn run(kernel: &dyn Kernel, op: KernelOp, views: &[MatrixView<'_>]) -> Vec<Matrix> {
+        let mut ws = Workspace::new();
+        kernel.execute(KernelCall { op, views, workspace: &mut ws }).unwrap()
+    }
+
+    #[test]
+    fn backend_plan_selects_defaults_and_overrides() {
+        let plan = BackendPlan::default();
+        assert_eq!(plan.select(KernelOp::LeafQr), BackendChoice::Host);
+        assert!(!plan.uses_threaded());
+        let plan = BackendPlan::threaded();
+        assert!(plan.uses_threaded());
+        for op in KernelOp::ALL {
+            assert_eq!(plan.select(op), BackendChoice::Threaded);
+        }
+        let plan = BackendPlan::host().with_op(KernelOp::ApplyUpdate, BackendChoice::Threaded);
+        assert_eq!(plan.select(KernelOp::ApplyUpdate), BackendChoice::Threaded);
+        assert_eq!(plan.select(KernelOp::LeafQr), BackendChoice::Host);
+        assert!(plan.uses_threaded());
+        // Last write wins.
+        let plan = plan.with_op(KernelOp::ApplyUpdate, BackendChoice::Host);
+        assert_eq!(plan.select(KernelOp::ApplyUpdate), BackendChoice::Host);
+        assert!(!plan.uses_threaded());
+    }
+
+    #[test]
+    fn backend_plan_parses_and_prints() {
+        assert_eq!("host".parse::<BackendPlan>().unwrap(), BackendPlan::host());
+        assert_eq!("threaded".parse::<BackendPlan>().unwrap(), BackendPlan::threaded());
+        assert!("gpu".parse::<BackendPlan>().is_err());
+        assert_eq!(BackendPlan::threaded().to_string(), "threaded");
+        assert_eq!(
+            BackendPlan::host()
+                .with_op(KernelOp::LeafQr, BackendChoice::Threaded)
+                .to_string(),
+            "host+1"
+        );
+    }
+
+    #[test]
+    fn slab_ranges_cover_and_never_empty() {
+        assert_eq!(slab_ranges(0, 4), Vec::<(usize, usize)>::new());
+        for total in [1usize, 2, 7, 64, 65] {
+            for lanes in [1usize, 2, 3, 8, 100] {
+                let r = slab_ranges(total, lanes);
+                assert!(r.len() <= lanes.min(total).max(1));
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r.last().unwrap().1, total);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous");
+                }
+                assert!(r.iter().all(|&(a, b)| b > a), "non-empty");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_chunked_is_deterministic_and_close_to_plain() {
+        let a: Vec<f64> = (0..333).map(|i| (i as f64 * 0.37).sin()).collect();
+        let b: Vec<f64> = (0..333).map(|i| (i as f64 * 0.11).cos()).collect();
+        let d1 = dot_chunked(&a, &b);
+        let d2 = dot_chunked(&a, &b);
+        assert_eq!(d1.to_bits(), d2.to_bits());
+        let plain: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((d1 - plain).abs() < 1e-10 * plain.abs().max(1.0));
+    }
+
+    #[test]
+    fn chunked_factor_core_matches_reference_within_tolerance() {
+        // Same convention as factor_panel_f64 (sign, tau, packed
+        // layout), different association: R agrees to f64 rounding
+        // noise, tau/packed stay interoperable with the host apply
+        // kernels (Q from one, R from the other, reconstructs A).
+        let a = Matrix::random(48, 12, 7);
+        let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+        let mut tau = vec![0.0f64; 12];
+        factor_panel_chunked_f64(&mut w, 48, 12, &mut tau);
+        let mut w_ref: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+        let mut tau_ref = vec![0.0f64; 12];
+        view::factor_panel_f64(&mut w_ref, 48, 12, &mut tau_ref);
+        for (x, y) in w.iter().zip(&w_ref) {
+            assert!((x - y).abs() < 1e-9, "packed drifted: {x} vs {y}");
+        }
+        for (x, y) in tau.iter().zip(&tau_ref) {
+            assert!((x - y).abs() < 1e-9, "tau drifted: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn threaded_factor_ops_satisfy_their_r_tolerance() {
+        let threaded = ThreadedKernel::new();
+        for &(m, n) in &[(16usize, 4usize), (40, 33), (7, 1), (64, 32)] {
+            let a = Matrix::random(m, n, (m * 31 + n) as u64);
+            let views = [a.as_view()];
+            let got = run(&threaded, KernelOp::LeafQr, &views);
+            let want = run(&HostKernel, KernelOp::LeafQr, &views);
+            let bound = KernelOp::LeafQr.contract().bound(n, a.fro_norm());
+            let diff = got[0].canonicalize_r().max_abs_diff(&want[0].canonicalize_r());
+            assert!(diff <= bound, "LeafQr {m}x{n}: diff {diff} > bound {bound}");
+            // R-only variant returns the same leading output.
+            let r_only = run(&threaded, KernelOp::LeafR, &views);
+            assert_eq!(r_only.len(), 1);
+            assert_eq!(r_only[0], got[0]);
+        }
+    }
+
+    #[test]
+    fn threaded_slab_ops_are_bitwise_vs_host() {
+        let threaded = ThreadedKernel::new();
+        let a = Matrix::random(40, 8, 3);
+        let host_f = run(&HostKernel, KernelOp::LeafQr, &[a.as_view()]);
+        let (packed, tau) = (&host_f[1], &host_f[2]);
+        let block = Matrix::random(40, 13, 4);
+        for op in [KernelOp::ApplyUpdate, KernelOp::ApplyQt] {
+            let views = [packed.as_view(), tau.as_view(), block.as_view()];
+            let got = run(&threaded, op, &views);
+            let want = run(&HostKernel, op, &views);
+            assert_eq!(got[0], want[0], "{op:?} must be bitwise");
+        }
+        let views = [packed.as_view(), tau.as_view()];
+        let got = run(&threaded, KernelOp::BuildQ, &views);
+        let want = run(&HostKernel, KernelOp::BuildQ, &views);
+        assert_eq!(got[0], want[0], "BuildQ must be bitwise");
+
+        let r = &host_f[0];
+        let rhs = Matrix::random(8, 9, 5);
+        let views = [r.as_view(), rhs.as_view()];
+        let got = run(&threaded, KernelOp::Backsolve, &views);
+        let want = run(&HostKernel, KernelOp::Backsolve, &views);
+        assert_eq!(got[0], want[0], "Backsolve must be bitwise");
+    }
+
+    #[test]
+    fn threaded_checksum_ops_are_bitwise_vs_host() {
+        let threaded = ThreadedKernel::new();
+        let blocks: Vec<Matrix> = (0..3).map(|s| Matrix::random(17, 4, s + 9)).collect();
+        let weights = Matrix::from_vec(1, 3, vec![1.0, 2.0, 4.0]);
+        let mut views = vec![weights.as_view()];
+        views.extend(blocks.iter().map(|b| b.as_view()));
+        let got = run(&threaded, KernelOp::EncodeChecksum, &views);
+        let want = run(&HostKernel, KernelOp::EncodeChecksum, &views);
+        assert_eq!(got[0], want[0], "EncodeChecksum must be bitwise");
+
+        let rec_views = [
+            weights.as_view(),
+            want[0].as_view(),
+            blocks[1].as_view(),
+            blocks[2].as_view(),
+        ];
+        let got = run(&threaded, KernelOp::ReconstructBlock, &rec_views);
+        let want = run(&HostKernel, KernelOp::ReconstructBlock, &rec_views);
+        assert_eq!(got[0], want[0], "ReconstructBlock must be bitwise");
+    }
+}

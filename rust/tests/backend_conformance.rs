@@ -1,0 +1,268 @@
+//! Differential kernel-conformance suite: every [`KernelOp`] runs on
+//! the Host and Threaded backends over a shape grid, and each op's
+//! declared [`Contract`] is asserted.
+//!
+//! * [`Contract::Bitwise`] ops must agree bit-for-bit on every output
+//!   matrix — the invariant replica recovery rests on.
+//! * [`Contract::Tolerance`] ops (the factorizations, whose threaded
+//!   implementation reassociates reduction sums) must agree on the
+//!   canonicalized R within `c·n·ε_f32·max(1, ‖A‖_F)`.
+//!
+//! Failure messages name the op, the shape, the backend pair, and the
+//! first (bitwise) or worst (tolerance) diverging element with both
+//! values, so a contract break reads as a diagnosis, not a diff dump.
+
+use ft_tsqr::linalg::{Matrix, MatrixView, Workspace};
+use ft_tsqr::runtime::{Contract, HostKernel, Kernel, KernelCall, KernelOp, ThreadedKernel};
+
+/// The shape grid: square, tall-skinny, panel-boundary (widths that
+/// do not divide evenly into slab lanes), and the n = 1 degenerate.
+const SHAPES: [(usize, usize); 6] = [(4, 4), (8, 8), (64, 8), (40, 33), (64, 32), (7, 1)];
+
+/// Width of the trailing blocks the apply-family ops update — prime,
+/// so threaded column slabs land on uneven boundaries.
+const BLOCK_COLS: usize = 17;
+
+/// Data blocks under one checksum for the ABFT ops.
+const CHECKSUM_BLOCKS: usize = 3;
+
+fn run_backend(kernel: &dyn Kernel, op: KernelOp, views: &[MatrixView<'_>]) -> Vec<Matrix> {
+    let mut ws = Workspace::new();
+    kernel
+        .execute(KernelCall { op, views, workspace: &mut ws })
+        .unwrap_or_else(|e| panic!("{} backend failed on {op:?}: {e}", kernel.name()))
+}
+
+/// A valid `(packed, tau)` pair for an `m x n` panel, produced by the
+/// host oracle so every downstream op sees realistic reflectors.
+fn host_factor(m: usize, n: usize, seed: u64) -> (Matrix, Matrix) {
+    let a = Matrix::random(m, n, seed);
+    let mut out = run_backend(&HostKernel, KernelOp::LeafQr, &[a.as_view()]);
+    let tau = out.remove(2);
+    let packed = out.remove(1);
+    (packed, tau)
+}
+
+/// The compact-WY T factor of a packed panel, via the host oracle.
+fn host_t(packed: &Matrix, tau: &Matrix) -> Matrix {
+    run_backend(&HostKernel, KernelOp::BuildT, &[packed.as_view(), tau.as_view()]).remove(0)
+}
+
+/// Owned input matrices for one `(op, shape)` cell, in view order.
+fn inputs_for(op: KernelOp, m: usize, n: usize, seed: u64) -> Vec<Matrix> {
+    match op {
+        KernelOp::LeafQr | KernelOp::LeafR => vec![Matrix::random(m, n, seed)],
+        KernelOp::Combine | KernelOp::CombineR => {
+            // Two upper-triangular R factors, as the exchange produces.
+            let top = run_backend(
+                &HostKernel,
+                KernelOp::LeafR,
+                &[Matrix::random(m.max(n), n, seed).as_view()],
+            )
+            .remove(0);
+            let bot = run_backend(
+                &HostKernel,
+                KernelOp::LeafR,
+                &[Matrix::random(m.max(n), n, seed + 1).as_view()],
+            )
+            .remove(0);
+            vec![top, bot]
+        }
+        KernelOp::Backsolve => {
+            let r = run_backend(
+                &HostKernel,
+                KernelOp::LeafR,
+                &[Matrix::random(m.max(n), n, seed).as_view()],
+            )
+            .remove(0);
+            vec![r, Matrix::random(n, BLOCK_COLS, seed + 1)]
+        }
+        KernelOp::ApplyQt | KernelOp::ApplyUpdate => {
+            let (packed, tau) = host_factor(m, n, seed);
+            vec![packed, tau, Matrix::random(m, BLOCK_COLS, seed + 1)]
+        }
+        KernelOp::BuildT | KernelOp::BuildQ => {
+            let (packed, tau) = host_factor(m, n, seed);
+            vec![packed, tau]
+        }
+        KernelOp::ApplyWy | KernelOp::ApplyQWy => {
+            let (packed, tau) = host_factor(m, n, seed);
+            let t = host_t(&packed, &tau);
+            vec![packed, t, Matrix::random(m, BLOCK_COLS, seed + 1)]
+        }
+        KernelOp::BuildQPanel => {
+            let (packed, tau) = host_factor(m, n, seed);
+            let t = host_t(&packed, &tau);
+            // One n-wide shard starting at global column 0 (params[0,0]
+            // carries the offset; the rest of the row is ignored).
+            vec![packed, t, Matrix::zeros(1, n)]
+        }
+        KernelOp::EncodeChecksum => {
+            let mut v = vec![Matrix::from_fn(1, CHECKSUM_BLOCKS, |_, j| (j + 1) as f32)];
+            for b in 0..CHECKSUM_BLOCKS {
+                v.push(Matrix::random(m, n, seed + b as u64));
+            }
+            v
+        }
+        KernelOp::ReconstructBlock => {
+            // Encode a checksum over N equal blocks (host side), then
+            // declare block 0 lost: weights stay lost-first.
+            let weights = Matrix::from_fn(1, CHECKSUM_BLOCKS, |_, j| (j + 1) as f32);
+            let blocks: Vec<Matrix> =
+                (0..CHECKSUM_BLOCKS).map(|b| Matrix::random(m, n, seed + b as u64)).collect();
+            let mut enc = vec![weights.as_view()];
+            enc.extend(blocks.iter().map(|b| b.as_view()));
+            let checksum = run_backend(&HostKernel, KernelOp::EncodeChecksum, &enc).remove(0);
+            let mut v = vec![weights, checksum];
+            v.extend(blocks.into_iter().skip(1));
+            v
+        }
+    }
+}
+
+/// First element (row-major) whose f32 bits differ, with both values.
+fn first_divergence(a: &Matrix, b: &Matrix) -> Option<(usize, usize, f32, f32)> {
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            let (x, y) = (a[(i, j)], b[(i, j)]);
+            if x.to_bits() != y.to_bits() {
+                return Some((i, j, x, y));
+            }
+        }
+    }
+    None
+}
+
+/// Worst-diverging element, with both values and the |Δ|.
+fn worst_divergence(a: &Matrix, b: &Matrix) -> (usize, usize, f32, f32, f64) {
+    let mut worst = (0, 0, a[(0, 0)], b[(0, 0)], 0.0f64);
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            let (x, y) = (a[(i, j)], b[(i, j)]);
+            let d = (f64::from(x) - f64::from(y)).abs();
+            if d > worst.4 {
+                worst = (i, j, x, y, d);
+            }
+        }
+    }
+    worst
+}
+
+fn assert_contract(op: KernelOp, m: usize, n: usize, views: &[MatrixView<'_>]) {
+    let host_out = run_backend(&HostKernel, op, views);
+    let thr_out = run_backend(&ThreadedKernel::new(), op, views);
+    match op.contract() {
+        Contract::Bitwise => {
+            assert_eq!(
+                host_out.len(),
+                thr_out.len(),
+                "{op:?} shape {m}x{n} host-vs-threaded: output counts differ"
+            );
+            for (idx, (h, t)) in host_out.iter().zip(&thr_out).enumerate() {
+                assert_eq!(
+                    h.shape(),
+                    t.shape(),
+                    "{op:?} shape {m}x{n} host-vs-threaded: output {idx} shapes differ"
+                );
+                if let Some((i, j, hv, tv)) = first_divergence(h, t) {
+                    panic!(
+                        "{op:?} shape {m}x{n} host-vs-threaded: Bitwise contract broken — \
+                         output {idx} first diverges at ({i},{j}): host={hv:?} (bits \
+                         {:#010x}) threaded={tv:?} (bits {:#010x})",
+                        hv.to_bits(),
+                        tv.to_bits()
+                    );
+                }
+            }
+        }
+        Contract::Tolerance { .. } => {
+            let norm = views
+                .iter()
+                .flat_map(|v| v.data().iter())
+                .map(|&x| f64::from(x) * f64::from(x))
+                .sum::<f64>()
+                .sqrt();
+            let bound = op.contract().bound(views[0].cols(), norm);
+            let h = host_out[0].canonicalize_r();
+            let t = thr_out[0].canonicalize_r();
+            assert_eq!(
+                h.shape(),
+                t.shape(),
+                "{op:?} shape {m}x{n} host-vs-threaded: R shapes differ"
+            );
+            let (i, j, hv, tv, d) = worst_divergence(&h, &t);
+            assert!(
+                d <= bound,
+                "{op:?} shape {m}x{n} host-vs-threaded: Tolerance contract broken — \
+                 worst R divergence at ({i},{j}): host={hv:?} threaded={tv:?} \
+                 |Δ|={d:e} > bound {bound:e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn contract_table_is_pinned() {
+    // The per-op table the whole suite (and the debug-build dispatch
+    // check) rests on.  Changing a classification must be a conscious
+    // edit here, not drive-by.
+    for op in KernelOp::ALL {
+        let want_tolerance = matches!(
+            op,
+            KernelOp::LeafQr | KernelOp::LeafR | KernelOp::Combine | KernelOp::CombineR
+        );
+        match op.contract() {
+            Contract::Tolerance { c } => {
+                assert!(want_tolerance, "{op:?} must be Bitwise");
+                assert_eq!(c, 64.0, "{op:?} tolerance constant is pinned");
+            }
+            Contract::Bitwise => assert!(!want_tolerance, "{op:?} must be Tolerance"),
+        }
+    }
+}
+
+#[test]
+fn every_op_meets_its_contract_on_the_shape_grid() {
+    for op in KernelOp::ALL {
+        for (cell, &(m, n)) in SHAPES.iter().enumerate() {
+            let inputs = inputs_for(op, m, n, 7_000 + cell as u64 * 101);
+            let views: Vec<MatrixView<'_>> = inputs.iter().map(|mat| mat.as_view()).collect();
+            assert_contract(op, m, n, &views);
+        }
+    }
+}
+
+#[test]
+fn offset_views_agree_like_owned_views() {
+    // Inputs that start mid-buffer (rows_range of a larger allocation):
+    // the backends must treat a borrowed window exactly like an owned
+    // matrix.  Covers the factor (Tolerance) and apply (Bitwise)
+    // families, whose threaded paths do their own slab arithmetic.
+    let (m, n) = (24, 6);
+    let big = Matrix::random(m + 16, n, 4242);
+    let window = big.as_view().rows_range(8, 8 + m);
+    assert_contract(KernelOp::LeafQr, m, n, &[window]);
+    assert_contract(KernelOp::LeafR, m, n, &[window]);
+
+    let (packed, tau) = host_factor(m, n, 4243);
+    let bigger = Matrix::random(m + 10, BLOCK_COLS, 4244);
+    let block = bigger.as_view().rows_range(5, 5 + m);
+    assert_contract(KernelOp::ApplyUpdate, m, n, &[packed.as_view(), tau.as_view(), block]);
+    assert_contract(KernelOp::ApplyQt, m, n, &[packed.as_view(), tau.as_view(), block]);
+}
+
+#[test]
+fn checksum_ops_pad_ragged_blocks_identically() {
+    // EncodeChecksum pads to the widest block; the threaded row-slab
+    // fan-out must reproduce the host padding bit-for-bit even when
+    // block widths differ.
+    let weights = Matrix::from_fn(1, 3, |_, j| (j + 1) as f32);
+    let wide = Matrix::random(12, 9, 9001);
+    let narrow = Matrix::random(12, 5, 9002);
+    let mid = Matrix::random(12, 7, 9003);
+    let views = [weights.as_view(), wide.as_view(), narrow.as_view(), mid.as_view()];
+    let host_out = run_backend(&HostKernel, KernelOp::EncodeChecksum, &views);
+    let thr_out = run_backend(&ThreadedKernel::new(), KernelOp::EncodeChecksum, &views);
+    assert_eq!(host_out[0].shape(), (12, 9), "padded to the widest block");
+    assert_eq!(host_out[0], thr_out[0], "ragged encode must be bitwise across backends");
+}

@@ -11,11 +11,15 @@
 
 use std::collections::HashMap;
 
+use ft_tsqr::abft::{Encoder, RecoveryPolicy};
 use ft_tsqr::analysis::robustness::survives_failure_set;
-use ft_tsqr::fault::KillSchedule;
+use ft_tsqr::caqr::CaqrSpec;
+use ft_tsqr::engine::Engine;
+use ft_tsqr::fault::{CaqrKillSchedule, CaqrStage, KillSchedule, PairWipeSchedule};
 use ft_tsqr::linalg::{
     Matrix, Workspace, householder_qr, householder_qr_reference, qr_r, view,
 };
+use ft_tsqr::runtime::Precision;
 use ft_tsqr::tsqr::{Algo, RunSpec, TreePlan, run};
 use ft_tsqr::ulfm::Rank;
 use ft_tsqr::util::Rng;
@@ -399,6 +403,171 @@ fn kill_schedule_random_properties() {
             assert!(!sched.fire(r, s));
         }
         assert_eq!(sched.remaining(), 0);
+    }
+}
+
+/// Mixed precision, single strikes: the f32 data path recovers EVERY
+/// single `(rank, panel, stage)` kill **bitwise** against its own
+/// clean f32 run.  Replicas round identically at task boundaries, so a
+/// surviving replica's bits are still exactly the dead owner's bits —
+/// the replica-recovery invariant survives the precision drop.
+#[test]
+fn f32_caqr_recovers_every_single_strike_bitwise() {
+    let engine = Engine::host();
+    let base = || {
+        CaqrSpec::new(Algo::Redundant, 4, 24, 12, 4)
+            .with_verify(false)
+            .with_precision(Precision::F32)
+    };
+    let clean = engine.run_caqr(base()).unwrap();
+    assert!(clean.success());
+    let clean_r = clean.final_r.as_ref().unwrap().clone();
+    for rank in 0..4usize {
+        for panel in 0..3usize {
+            for stage in [CaqrStage::Factor, CaqrStage::Update] {
+                let res = engine
+                    .run_caqr(base().with_schedule(CaqrKillSchedule::at(&[(rank, panel, stage)])))
+                    .unwrap();
+                assert!(
+                    res.success(),
+                    "f32 single strike ({rank}, {panel}, {stage:?}) must survive"
+                );
+                assert_eq!(
+                    res.final_r.as_ref().unwrap().data(),
+                    clean_r.data(),
+                    "f32 strike ({rank}, {panel}, {stage:?}): recovered R must be \
+                     bit-identical to the clean f32 run"
+                );
+            }
+        }
+    }
+}
+
+/// Mixed precision, pair wipes: f32 data + **f64 checksums** under
+/// Hybrid c=1 reconstructs EVERY `(pair, panel, stage)` wipe within
+/// the f32 column-wise bound `64·n·ε_f32·max(1, ‖A‖_F)` — the
+/// checksum rung keeps enough precision headroom over the f32 data it
+/// protects that reconstruction stays at f32 accuracy, not worse.
+#[test]
+fn f32_hybrid_reconstructs_every_pair_wipe_within_the_f32_bound() {
+    let engine = Engine::host();
+    let base = || {
+        CaqrSpec::new(Algo::SelfHealing, 4, 24, 12, 4)
+            .with_verify(false)
+            .with_policy(RecoveryPolicy::Hybrid)
+            .with_checksums(1)
+            .with_precision(Precision::F32)
+    };
+    let clean = engine.run_caqr(base()).unwrap();
+    assert!(clean.success());
+    let clean_r = clean.final_r.as_ref().unwrap().clone();
+    let bound = 64.0 * 12.0 * f64::from(f32::EPSILON) * base().input_matrix().fro_norm().max(1.0);
+    for pair_member in [0usize, 2] {
+        for panel in 0..3usize {
+            for stage in [CaqrStage::Factor, CaqrStage::Update] {
+                let wipe = PairWipeSchedule::new(pair_member, panel, stage);
+                let res = engine.run_caqr(base().with_schedule(wipe.schedule())).unwrap();
+                assert!(
+                    res.success(),
+                    "f32 hybrid pair wipe {:?} at ({panel}, {stage:?}) must survive",
+                    wipe.pair()
+                );
+                let diff = res.final_r.as_ref().unwrap().max_abs_diff(&clean_r);
+                assert!(
+                    diff <= bound,
+                    "f32 hybrid pair wipe {:?} at ({panel}, {stage:?}): |ΔR| = {diff:e} \
+                     exceeds the f32 bound {bound:e}",
+                    wipe.pair()
+                );
+            }
+        }
+    }
+}
+
+/// The f64 regression pin: a spec that *explicitly* asks for
+/// [`Precision::F64`] is byte-identical to an unannotated spec AND to
+/// the `householder_qr_reference` oracle, across random shapes — the
+/// mixed-precision machinery must be invisible when it is off.
+#[test]
+fn f64_precision_spec_is_bit_unchanged_across_random_shapes() {
+    let engine = Engine::host();
+    let mut rng = Rng::new(0xF64);
+    for _ in 0..8 {
+        let procs = 4;
+        let panel = 2 + rng.below(4);
+        let panels = 1 + rng.below(3);
+        let n = panel * panels;
+        let m = procs * (n + rng.below(6));
+        let seed = rng.next_u64();
+        let spec = || {
+            CaqrSpec::new(Algo::Redundant, procs, m, n, panel).with_seed(seed).with_verify(false)
+        };
+        let plain = engine.run_caqr(spec()).unwrap();
+        let pinned = engine.run_caqr(spec().with_precision(Precision::F64)).unwrap();
+        assert!(plain.success() && pinned.success());
+        let oracle = householder_qr_reference(&spec().input_matrix()).r();
+        assert_eq!(
+            pinned.final_r.as_ref().unwrap().data(),
+            plain.final_r.as_ref().unwrap().data(),
+            "explicit F64 differs from the unannotated run at {m}x{n} panel {panel}"
+        );
+        assert_eq!(
+            pinned.final_r.as_ref().unwrap().data(),
+            oracle.data(),
+            "F64 run lost the bitwise oracle pin at {m}x{n} panel {panel}"
+        );
+    }
+}
+
+/// The precision-separation property (arXiv:0806.3121) in isolation:
+/// f64 Vandermonde checksums over f32-representable data recover the
+/// EXACT f32 bits of every lost block — across random block counts,
+/// ragged widths, and every loss pattern up to `c` blocks.
+#[test]
+fn f64_checksums_recover_f32_data_bit_exactly() {
+    let mut rng = Rng::new(0xABF7);
+    for case in 0..40 {
+        let rows = 1 + rng.below(12);
+        let nblocks = 2 + rng.below(4);
+        let c = 1 + rng.below(2);
+        let widths: Vec<usize> = (0..nblocks).map(|_| 1 + rng.below(9)).collect();
+        let pad = *widths.iter().max().unwrap();
+        // f32-representable payloads carried in f64 — exactly what the
+        // mixed-precision CAQR path hands the encoder.
+        let blocks: Vec<Vec<f64>> = widths
+            .iter()
+            .map(|&w| (0..rows * w).map(|_| f64::from((rng.f64() - 0.5) as f32)).collect())
+            .collect();
+        let enc = Encoder::new(c);
+        let refs: Vec<&[f64]> = blocks.iter().map(|b| b.as_slice()).collect();
+        let checks = enc.encode(rows, &widths, &refs, pad);
+        let mut lose = vec![rng.below(nblocks)];
+        if c == 2 {
+            let mut second = rng.below(nblocks);
+            while second == lose[0] {
+                second = rng.below(nblocks);
+            }
+            lose.push(second);
+            lose.sort_unstable();
+        }
+        let masked: Vec<Option<&[f64]>> = (0..nblocks)
+            .map(|j| if lose.contains(&j) { None } else { Some(blocks[j].as_slice()) })
+            .collect();
+        let checks_ref: Vec<(usize, &[f64])> =
+            checks.iter().enumerate().map(|(l, s)| (l, s.as_slice())).collect();
+        let rebuilt = enc.reconstruct(rows, &widths, &masked, &checks_ref, pad).unwrap();
+        assert_eq!(rebuilt.len(), lose.len(), "case {case}: one block back per loss");
+        for (j, data) in rebuilt {
+            assert!(lose.contains(&j));
+            for (idx, (&got, &want)) in data.iter().zip(&blocks[j]).enumerate() {
+                assert_eq!(
+                    (got as f32).to_bits(),
+                    (want as f32).to_bits(),
+                    "case {case}: block {j}[{idx}] not recovered to exact f32 bits: \
+                     {got} vs {want}"
+                );
+            }
+        }
     }
 }
 
